@@ -1,0 +1,20 @@
+//! Profiling driver for the divider hot path (used by the §Perf pass):
+//!
+//! ```bash
+//! cargo build --release --example profile_div
+//! perf record -F 999 ./target/release/examples/profile_div
+//! perf report --stdio | head -20
+//! ```
+
+fn main() {
+    use tsdiv::divider::{Divider, TaylorDivider};
+    let mut d = TaylorDivider::paper_exact();
+    let batch = tsdiv::harness::gen_batch(tsdiv::analysis::Workload::LogUniform, 4096, 9);
+    let mut acc = 0u32;
+    for _ in 0..3000 {
+        for i in 0..batch.len() {
+            acc ^= d.div_f32(batch.a[i], batch.b[i]).to_bits();
+        }
+    }
+    println!("{acc}");
+}

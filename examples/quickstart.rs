@@ -1,0 +1,106 @@
+//! Quickstart: divide numbers with the paper's architecture and watch
+//! the Taylor-series converge.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use tsdiv::divider::{BackendKind, Divider, TaylorDivider};
+use tsdiv::pla::SegmentTable;
+use tsdiv::taylor::TaylorConfig;
+use tsdiv::util::table::{sig, Align, Table};
+
+fn main() {
+    println!("tsdiv quickstart — {}\n", tsdiv::PAPER);
+
+    // 1. The headline configuration: Table-I segments (8), order n = 5,
+    //    60-bit datapath, exact fixed-point multiplies.
+    let mut div = TaylorDivider::paper_exact();
+    println!("divider: {}\n", div.name());
+
+    let pairs = [
+        (355.0f32, 113.0f32),
+        (1.0, 3.0),
+        (2.0, 7.0),
+        (-10.0, 4.0),
+        (6.02214e23, 1.602e-19),
+        (1.0, 0.0),
+        (0.0, 0.0),
+    ];
+    let mut t = Table::new("divisions", &["a", "b", "tsdiv a/b", "hardware a/b", "ulp Δ"])
+        .aligns(&[Align::Right; 5]);
+    for (a, b) in pairs {
+        let q = div.div_f32(a, b);
+        let hw = a / b;
+        let ulp = tsdiv::fp::ulp_diff_f32(q, hw)
+            .map(|u| u.to_string())
+            .unwrap_or_else(|| "NaN".into());
+        t.row(&[
+            format!("{a:e}"),
+            format!("{b:e}"),
+            format!("{q:e}"),
+            format!("{hw:e}"),
+            ulp,
+        ]);
+    }
+    t.print();
+
+    // 2. Convergence: reciprocal error of 1/x after n Taylor iterations
+    //    (paper §2: each added power of m sharpens the estimate).
+    println!();
+    let mut t = Table::new(
+        "reciprocal of x = 1.37 vs Taylor order (8 segments)",
+        &["order n", "reciprocal", "abs error", "error bits"],
+    );
+    for order in 0..=6 {
+        let cfg = TaylorConfig {
+            order,
+            ..TaylorConfig::paper_default(60)
+        };
+        let mut be = tsdiv::powering::ExactMul::default();
+        let mut eng = tsdiv::taylor::TaylorEngine::new(cfg, &mut be);
+        let got = eng.reciprocal_f64(1.37);
+        let err = (got - 1.0 / 1.37).abs();
+        let bits = if err > 0.0 { -err.log2() } else { 60.0 };
+        t.row(&[
+            order.to_string(),
+            format!("{got:.17}"),
+            sig(err, 3),
+            format!("{bits:.1}"),
+        ]);
+    }
+    t.print();
+
+    // 3. The same division with the ILM backend at different correction
+    //    budgets (paper §4: accuracy is programmable).
+    println!();
+    let mut t = Table::new(
+        "354.0 / 113.0 with the ILM backend",
+        &["ILM corrections", "quotient", "rel error"],
+    );
+    for iters in [0u32, 1, 2, 4, 8, 16] {
+        let mut d = TaylorDivider::paper_ilm(iters);
+        let q = d.div_f32(354.0, 113.0);
+        let rel = ((q as f64 - 354.0 / 113.0) / (354.0 / 113.0)).abs();
+        t.row(&[iters.to_string(), format!("{q:.7}"), sig(rel, 3)]);
+    }
+    t.print();
+
+    // 4. One-segment vs Table-I seed, order 17 vs 5 (paper §3).
+    println!();
+    let single = TaylorConfig {
+        order: 17,
+        frac_bits: 60,
+        table: SegmentTable::build(&[1.0, 2.0], 60),
+    };
+    let mut d17 = TaylorDivider::new(single, BackendKind::Exact);
+    let mut d5 = TaylorDivider::paper_exact();
+    let (a, b) = (1.0f32, 1.0000001f32);
+    println!(
+        "worst-case-style division {a}/{b}:\n  1 segment, n=17 → {:e}\n  8 segments, n=5 → {:e}\n  hardware        → {:e}",
+        d17.div_f32(a, b),
+        d5.div_f32(a, b),
+        a / b
+    );
+    println!("\nSee `tsdiv --help` (the CLI) and rust/benches/ for the full evaluation.");
+}

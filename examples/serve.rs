@@ -1,0 +1,137 @@
+//! Serve: drive the division service with an open-loop synthetic load
+//! and report latency/throughput — the "coordinator as a product" demo.
+//!
+//! ```bash
+//! cargo run --release --example serve -- --backend native --seconds 3
+//! cargo run --release --example serve -- --backend pjrt          # needs artifacts
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::util::cli::Command;
+use tsdiv::util::rng::Rng;
+use tsdiv::util::stats::Summary;
+use tsdiv::util::table::{sig, Align, Table};
+
+fn main() {
+    let cmd = Command::new("serve", "open-loop load against the division service")
+        .opt("backend", "native", "native | native-ilm | pjrt")
+        .opt("seconds", "3", "load duration")
+        .opt("clients", "4", "client threads")
+        .opt("request-lanes", "64", "divisions per request")
+        .opt("max-batch", "4096", "coalescing budget (lanes)")
+        .opt("workers", "2", "worker threads");
+    let args = match cmd.parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(help) => {
+            eprintln!("{help}");
+            return;
+        }
+    };
+    let backend = match args.get_or("backend", "native") {
+        "pjrt" => {
+            if !tsdiv::runtime::artifacts_available() {
+                eprintln!("artifacts/ missing — run `make artifacts` first");
+                std::process::exit(1);
+            }
+            BackendChoice::Pjrt
+        }
+        "native-ilm" => BackendChoice::Native {
+            order: 5,
+            ilm_iterations: Some(8),
+        },
+        _ => BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        },
+    };
+    let seconds: u64 = args.parse_or("seconds", 3);
+    let clients: usize = args.parse_or("clients", 4);
+    let lanes: usize = args.parse_or("request-lanes", 64);
+
+    let svc = Arc::new(
+        DivisionService::start(
+            ServiceConfig {
+                workers: args.parse_or("workers", 2),
+                max_batch: args.parse_or("max-batch", 4096),
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 1 << 14,
+            },
+            backend,
+        )
+        .expect("service start"),
+    );
+    println!(
+        "serving with backend={:?}, {clients} clients × {lanes} lanes/request, {seconds}s\n",
+        backend
+    );
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for cid in 0..clients {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(cid as u64 + 1);
+            let mut lat = Summary::keeping_samples();
+            let mut done = 0u64;
+            let mut busy = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let a: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-12, 12)).collect();
+                let b: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-12, 12)).collect();
+                let t0 = Instant::now();
+                match svc.submit(a, b) {
+                    Ok(t) => {
+                        t.wait().expect("division failed");
+                        lat.push(t0.elapsed().as_secs_f64());
+                        done += 1;
+                    }
+                    Err(SubmitError::Busy) => {
+                        busy += 1;
+                        std::thread::yield_now();
+                    }
+                    Err(e) => panic!("{e}"),
+                }
+            }
+            (lat, done, busy)
+        }));
+    }
+    std::thread::sleep(Duration::from_secs(seconds));
+    stop.store(true, Ordering::Relaxed);
+
+    let mut all = Summary::keeping_samples();
+    let mut requests = 0u64;
+    let mut busy = 0u64;
+    for h in handles {
+        let (lat, done, b) = h.join().unwrap();
+        // Per-client mean goes into the cross-client summary; the exact
+        // p50/p99 come from the service's own latency sink below.
+        requests += done;
+        busy += b;
+        if lat.count() > 0 {
+            all.push(lat.mean());
+        }
+    }
+    let m = svc.metrics();
+
+    let mut t = Table::new("serve results", &["metric", "value"]).aligns(&[Align::Left, Align::Right]);
+    t.row(&["requests completed".into(), requests.to_string()]);
+    t.row(&["lanes served".into(), m.lanes.to_string()]);
+    t.row(&["throughput".into(), format!("{} div/s", sig(m.lanes as f64 / seconds as f64, 4))]);
+    t.row(&["requests/s".into(), sig(requests as f64 / seconds as f64, 4)]);
+    t.row(&["backend batches".into(), m.batches.to_string()]);
+    t.row(&["mean lanes/batch".into(), sig(m.mean_batch_lanes(), 4)]);
+    t.row(&["service latency p50".into(), format!("{:.3} ms", m.latency_p50 * 1e3)]);
+    t.row(&["service latency p99".into(), format!("{:.3} ms", m.latency_p99 * 1e3)]);
+    t.row(&["backpressure rejections".into(), busy.to_string()]);
+    t.row(&["worker failures".into(), m.failures.to_string()]);
+    t.print();
+
+    match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(_) => {}
+    }
+}

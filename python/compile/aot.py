@@ -1,0 +1,97 @@
+"""AOT bridge: lower the L2 graphs to HLO **text** for the Rust runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``.hlo.txt`` per (entry, batch) plus ``manifest.json``
+describing shapes for the Rust loader, and ``model.hlo.txt`` as the
+canonical divide artifact the Makefile tracks.
+"""
+
+import argparse
+import json
+import os
+import shutil
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Batch sizes built by default: the coordinator pads every request
+#: batch up to the nearest entry.
+BATCHES = (256, 1024, 4096)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "entries": []}
+
+    def emit(name, fn, specs, meta):
+        text = lower_entry(fn, specs)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "path": path,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": s.dtype.name} for s in specs
+            ],
+            **meta,
+        }
+        manifest["entries"].append(entry)
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    for batch in BATCHES:
+        fn, specs = model.make_divide(batch)
+        emit(f"divide_b{batch}", fn, specs, {"kind": "divide", "batch": batch})
+    fn, specs = model.make_recip(1024)
+    emit("recip_b1024", fn, specs, {"kind": "recip", "batch": 1024})
+    fn, specs = model.make_ilm(1024)
+    emit("ilm_b1024", fn, specs, {"kind": "ilm", "batch": 1024})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Canonical artifact tracked by the Makefile.
+    shutil.copyfile(
+        os.path.join(out_dir, "divide_b1024.hlo.txt"),
+        os.path.join(out_dir, "model.hlo.txt"),
+    )
+    print(f"  wrote manifest.json ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    out = args.out
+    # `--out ../artifacts/model.hlo.txt` (old Makefile form) → directory.
+    if out.endswith(".hlo.txt"):
+        out = os.path.dirname(out)
+    print(f"AOT-lowering to {out}/")
+    build_all(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Pallas kernel: batched Iterative Logarithmic Multiplier (paper §4).
+
+TPU adaptation of the ILM (see DESIGN.md §Hardware-Adaptation): the
+priority encoder becomes a vectorized ``floor(log2)`` over int32 lanes,
+the bit-clear an XOR with the isolated leading one, and the correction
+recursion a statically unrolled loop over the whole VMEM-resident block.
+Operands are limited to 15 bits so every intermediate fits int32.
+
+Lowered with ``interpret=True`` — mandatory on the CPU PJRT backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default lane-block processed per grid step. 2048 int32 lanes = 8 KiB
+#: per operand block in VMEM — three blocks (two in, one out) stay far
+#: under the ~16 MiB VMEM budget; see EXPERIMENTS.md §Perf L1.
+DEFAULT_BLOCK = 2048
+
+
+def _leading_one(v):
+    """(k, 2^k) for each lane of v (v > 0). Smear-and-isolate bit trick:
+    OR-propagate the MSB downward; the smeared value is 2^(k+1) − 1, so
+    the LOD is (smeared+1)>>1 and the priority-encoder output is
+    popcount(smeared) − 1 (exact integer arithmetic; XLA's f32 log2 is
+    NOT exact on powers of two).
+    """
+    v = v.astype(jnp.int32)
+    s = v
+    s = s | (s >> 1)
+    s = s | (s >> 2)
+    s = s | (s >> 4)
+    s = s | (s >> 8)
+    # 15-bit operands: 8 bits of smear are enough (1+2+4+8 covers 15).
+    lod = (s + 1) >> 1  # isolated leading one (power of two)
+    k = jax.lax.population_count(s) - 1
+    return k, lod
+
+
+def _basic_block(n1, n2):
+    """One P_approx evaluation (eq 24) + residues (eq 25)."""
+    k1, lod1 = _leading_one(n1)
+    k2, lod2 = _leading_one(n2)
+    r1 = n1 ^ lod1
+    r2 = n2 ^ lod2
+    p0 = (
+        jnp.left_shift(jnp.int32(1), k1 + k2)
+        + jnp.left_shift(r1, k2)
+        + jnp.left_shift(r2, k1)
+    )
+    return p0, r1, r2
+
+
+def ilm_kernel_body(n1_ref, n2_ref, out_ref, *, iterations: int):
+    """Kernel body: ILM product of one block with `iterations` corrections."""
+    n1 = n1_ref[...]
+    n2 = n2_ref[...]
+    live = (n1 > 0) & (n2 > 0)
+    # Zero operands would break the priority encoder; substitute 1 and
+    # mask the result dead at the end.
+    n1s = jnp.where(live, n1, 1)
+    n2s = jnp.where(live, n2, 1)
+    acc, r1, r2 = _basic_block(n1s, n2s)
+    for _ in range(iterations):
+        stage_live = (r1 > 0) & (r2 > 0)
+        p, nr1, nr2 = _basic_block(
+            jnp.where(stage_live, r1, 1), jnp.where(stage_live, r2, 1)
+        )
+        acc = acc + jnp.where(stage_live, p, 0)
+        r1 = jnp.where(stage_live, nr1, 0)
+        r2 = jnp.where(stage_live, nr2, 0)
+    out_ref[...] = jnp.where(live, acc, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "block"))
+def ilm_mul(n1, n2, iterations: int = 3, block: int = DEFAULT_BLOCK):
+    """Batched ILM product of int32 operands in [0, 2^15).
+
+    ``iterations`` correction stages are unrolled statically (the paper's
+    fixed-hardware-budget mode). The batch is tiled into VMEM blocks of
+    ``block`` lanes by the Pallas grid.
+    """
+    n = n1.shape[0]
+    assert n1.shape == n2.shape and n1.ndim == 1
+    blk = min(block, n)
+    assert n % blk == 0, f"batch {n} not a multiple of block {blk}"
+    kernel = functools.partial(ilm_kernel_body, iterations=iterations)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=(n // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(n1.astype(jnp.int32), n2.astype(jnp.int32))

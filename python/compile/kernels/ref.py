@@ -1,0 +1,146 @@
+"""Pure-jnp / numpy correctness oracles for the Pallas kernels.
+
+Each kernel in this package has a reference here written in the most
+obviously-correct style available (scalar numpy loops for the bit-exact
+ILM; plain jnp float ops for the Taylor datapath), so pytest can assert
+kernel == oracle without the two sharing code.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Iterative Logarithmic Multiplier (paper §4, eq 21-27)
+# ---------------------------------------------------------------------------
+
+#: Operand limit for the int32 ILM kernel: products of two 15-bit values
+#: stay below 2^30, comfortably inside int32.
+ILM_MAX_OPERAND = (1 << 15) - 1
+
+
+def ilm_mul_scalar(n1: int, n2: int, iterations: int) -> int:
+    """Bit-exact scalar ILM (Python ints — cannot overflow)."""
+    if n1 == 0 or n2 == 0:
+        return 0
+
+    def basic(a, b):
+        k1, k2 = a.bit_length() - 1, b.bit_length() - 1
+        r1, r2 = a ^ (1 << k1), b ^ (1 << k2)
+        p0 = (1 << (k1 + k2)) + (r1 << k2) + (r2 << k1)
+        return p0, r1, r2
+
+    acc, r1, r2 = basic(n1, n2)
+    for _ in range(iterations):
+        if r1 == 0 or r2 == 0:
+            break
+        p, r1, r2 = basic(r1, r2)
+        acc += p
+    return acc
+
+
+def ilm_mul_ref(n1, n2, iterations: int):
+    """Vectorized reference over numpy arrays (element-wise scalar calls)."""
+    n1 = np.asarray(n1)
+    n2 = np.asarray(n2)
+    out = np.empty(n1.shape, dtype=np.int64)
+    for idx in np.ndindex(n1.shape):
+        out[idx] = ilm_mul_scalar(int(n1[idx]), int(n2[idx]), iterations)
+    return out
+
+
+def ilm_square_scalar(n: int, iterations: int) -> int:
+    """Bit-exact scalar squaring unit (paper §5, eq 28)."""
+    if n == 0:
+        return 0
+
+    def basic(a):
+        k = a.bit_length() - 1
+        r = a ^ (1 << k)
+        return (1 << (2 * k)) + (r << (k + 1)), r
+
+    acc, r = basic(n)
+    for _ in range(iterations):
+        if r == 0:
+            break
+        p, r = basic(r)
+        acc += p
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Piecewise-linear seed + Taylor reciprocal (paper §2-3)
+# ---------------------------------------------------------------------------
+
+def derive_segments(n: int, pr_max: int) -> list:
+    """Paper §3 boundary recurrence (eq 19/20), solved by bisection.
+
+    Mirrors the Rust ``pla::derive_segments``; the Table-I configuration
+    is ``derive_segments(5, 53)``.
+    """
+
+    def bound_log2(a, b):
+        mm = ((b - a) / (a + b)) ** 2
+        xi = (a + b) ** 2 / (4 * a * b)
+        return (n + 2) * np.log2(xi) + (n + 1) * np.log2(mm)
+
+    bounds = [1.0]
+    a = 1.0
+    while bounds[-1] < 2.0:
+        lo, hi = a * (1 + 1e-15), a * 2.0
+        while bound_log2(a, hi) < -pr_max:
+            hi *= 2.0
+        for _ in range(200):
+            mid = 0.5 * (lo + hi)
+            if bound_log2(a, mid) <= -pr_max:
+                lo = mid
+            else:
+                hi = mid
+        bounds.append(lo)
+        a = lo
+    return bounds
+
+
+def segment_tables(order: int = 5, pr_max: int = 53):
+    """(edges, slopes, intercepts) f32 arrays for the seed datapath."""
+    bounds = derive_segments(order, pr_max)
+    edges = np.array(bounds[1:], dtype=np.float32)
+    slopes = np.array(
+        [4.0 / (a + b) ** 2 for a, b in zip(bounds[:-1], bounds[1:])],
+        dtype=np.float32,
+    )
+    intercepts = np.array(
+        [4.0 / (a + b) for a, b in zip(bounds[:-1], bounds[1:])],
+        dtype=np.float32,
+    )
+    return edges, slopes, intercepts
+
+
+def seed_ref(x, order: int = 5, pr_max: int = 53):
+    """PLA seed y0(x) for x in [1,2), plain jnp (eq 15 per segment)."""
+    edges, slopes, intercepts = segment_tables(order, pr_max)
+    x = jnp.asarray(x, dtype=jnp.float32)
+    idx = jnp.sum(
+        x[..., None] >= jnp.asarray(edges)[None, :], axis=-1
+    ).astype(jnp.int32)
+    idx = jnp.clip(idx, 0, len(edges) - 1)
+    s = jnp.asarray(slopes)[idx]
+    c = jnp.asarray(intercepts)[idx]
+    return c - s * x
+
+
+def recip_ref(x, order: int = 3):
+    """Taylor reciprocal of x in [1,2): y0 · (1 + m + … + m^order)."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    y0 = seed_ref(x)
+    m = 1.0 - x * y0
+    s = jnp.ones_like(m)
+    mk = jnp.ones_like(m)
+    for _ in range(order):
+        mk = mk * m
+        s = s + mk
+    return y0 * s
+
+
+def divide_ref(a, b):
+    """Reference division: plain jnp `/` (XLA's correctly-rounded f32 path)."""
+    return jnp.asarray(a, jnp.float32) / jnp.asarray(b, jnp.float32)

@@ -1,0 +1,90 @@
+"""Pallas kernel: batched Taylor-series mantissa reciprocal (paper §2-3, 6).
+
+The f32 datapath of the paper's Fig-7 system as a vector kernel:
+
+1. PLA seed (eq 15, Table-I segments): the 8-way segment select is a sum
+   of compare masks — the vector analogue of the hardware compare tree;
+2. ``m = 1 − x·y0`` (eq 16);
+3. powers of ``m`` per the §6 "maximize squaring" schedule — even powers
+   as squares of lower powers, odd powers as ``even · m`` — statically
+   unrolled;
+4. accumulate and the final ``y0 · S`` multiply (eq 11).
+
+Order 3 already exceeds f32 precision (m ≤ 2.2e-3 ⇒ m⁴ ≈ 2e-11 ≪ 2^-24);
+the order stays configurable for the accuracy-sweep benches.
+
+Lowered with ``interpret=True`` — CPU PJRT cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK = 2048
+
+
+def _seed(x, edges, slopes, intercepts):
+    """Vectorized PLA seed: mask-sum per segment (compare tree analogue)."""
+    y0 = jnp.zeros_like(x)
+    n = len(edges)
+    lo = 1.0
+    for i in range(n):
+        hi = edges[i]
+        # Segment i covers [lo, hi); the last one also catches x ≥ last edge.
+        in_seg = (x >= lo) & (x < hi) if i + 1 < n else (x >= lo)
+        y0 = y0 + jnp.where(in_seg, intercepts[i] - slopes[i] * x, 0.0)
+        lo = hi
+    return y0
+
+
+def _powers_max_squaring(m, order):
+    """m¹..m^order per the §6 schedule: evens are squares, odds are
+    even·m with the cached base operand."""
+    powers = {1: m}
+    for p in range(2, order + 1):
+        if p % 2 == 0:
+            half = powers[p // 2]
+            powers[p] = half * half  # squaring unit
+        else:
+            powers[p] = powers[p - 1] * m  # multiplier with cached m
+    return [powers[p] for p in range(1, order + 1)]
+
+
+def recip_kernel_body(x_ref, out_ref, *, order, edges, slopes, intercepts):
+    x = x_ref[...]
+    y0 = _seed(x, edges, slopes, intercepts)
+    m = 1.0 - x * y0
+    s = jnp.ones_like(m)
+    if order >= 1:
+        for mk in _powers_max_squaring(m, order):
+            s = s + mk
+    out_ref[...] = y0 * s
+
+
+@functools.partial(jax.jit, static_argnames=("order", "block"))
+def recip(x, order: int = 3, block: int = DEFAULT_BLOCK):
+    """Batched Taylor reciprocal of f32 mantissas in [1, 2)."""
+    n = x.shape[0]
+    assert x.ndim == 1
+    blk = min(block, n)
+    assert n % blk == 0, f"batch {n} not a multiple of block {blk}"
+    edges, slopes, intercepts = ref.segment_tables()
+    kernel = functools.partial(
+        recip_kernel_body,
+        order=order,
+        edges=tuple(float(v) for v in edges),
+        slopes=tuple(float(v) for v in slopes),
+        intercepts=tuple(float(v) for v in intercepts),
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(x.astype(jnp.float32))

@@ -1,0 +1,108 @@
+"""Pallas ILM kernel vs the scalar oracle — bit-exact comparison."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ilm, ref
+
+SMALL = 256  # batch used by the hypothesis sweeps (block=SMALL → 1 grid step)
+
+
+def run_kernel(n1, n2, iterations):
+    n1 = np.asarray(n1, dtype=np.int32)
+    n2 = np.asarray(n2, dtype=np.int32)
+    return np.asarray(ilm.ilm_mul(n1, n2, iterations=iterations, block=len(n1)))
+
+
+def test_zero_operands_give_zero():
+    n1 = np.array([0, 5, 0, 123], dtype=np.int32)
+    n2 = np.array([7, 0, 0, 99], dtype=np.int32)
+    out = run_kernel(n1, n2, 3)
+    assert out.tolist() == [0, 0, 0, ref.ilm_mul_scalar(123, 99, 3)]
+
+
+def test_powers_of_two_exact_at_zero_iterations():
+    n1 = np.array([1, 2, 4, 1024, 16384], dtype=np.int32)
+    n2 = np.array([8, 8, 8, 8, 2], dtype=np.int32)
+    out = run_kernel(n1, n2, 0)
+    assert out.tolist() == (n1.astype(np.int64) * n2).tolist()
+
+
+def test_known_small_case():
+    # 3·3: Mitchell gives 8; one correction recovers 9.
+    out0 = run_kernel([3], [3], 0)
+    out1 = run_kernel([3], [3], 1)
+    assert out0[0] == 8 and out1[0] == 9
+
+
+@pytest.mark.parametrize("iterations", [0, 1, 2, 3, 6])
+def test_matches_oracle_randomized(iterations):
+    rng = np.random.default_rng(42 + iterations)
+    n1 = rng.integers(0, ref.ILM_MAX_OPERAND, size=1024, dtype=np.int32)
+    n2 = rng.integers(0, ref.ILM_MAX_OPERAND, size=1024, dtype=np.int32)
+    out = run_kernel(n1, n2, iterations)
+    want = ref.ilm_mul_ref(n1, n2, iterations)
+    np.testing.assert_array_equal(out.astype(np.int64), want)
+
+
+def test_full_iterations_equal_exact_product():
+    rng = np.random.default_rng(7)
+    n1 = rng.integers(1, ref.ILM_MAX_OPERAND, size=2048, dtype=np.int32)
+    n2 = rng.integers(1, ref.ILM_MAX_OPERAND, size=2048, dtype=np.int32)
+    out = run_kernel(n1, n2, 14)  # 15-bit operands: 14 corrections suffice
+    np.testing.assert_array_equal(
+        out.astype(np.int64), n1.astype(np.int64) * n2.astype(np.int64)
+    )
+
+
+def test_grid_tiling_matches_single_block():
+    rng = np.random.default_rng(11)
+    n1 = rng.integers(0, ref.ILM_MAX_OPERAND, size=4096, dtype=np.int32)
+    n2 = rng.integers(0, ref.ILM_MAX_OPERAND, size=4096, dtype=np.int32)
+    one_block = np.asarray(ilm.ilm_mul(n1, n2, iterations=2, block=4096))
+    tiled = np.asarray(ilm.ilm_mul(n1, n2, iterations=2, block=512))
+    np.testing.assert_array_equal(one_block, tiled)
+
+
+def test_error_monotone_in_iterations():
+    rng = np.random.default_rng(3)
+    n1 = rng.integers(1, ref.ILM_MAX_OPERAND, size=512, dtype=np.int32)
+    n2 = rng.integers(1, ref.ILM_MAX_OPERAND, size=512, dtype=np.int32)
+    exact = n1.astype(np.int64) * n2.astype(np.int64)
+    prev_err = None
+    for it in range(5):
+        out = run_kernel(n1, n2, it).astype(np.int64)
+        assert (out <= exact).all(), "ILM must never overshoot"
+        err = (exact - out).sum()
+        if prev_err is not None:
+            assert err <= prev_err
+        prev_err = err
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(
+            st.integers(0, ref.ILM_MAX_OPERAND),
+            st.integers(0, ref.ILM_MAX_OPERAND),
+        ),
+        min_size=SMALL,
+        max_size=SMALL,
+    ),
+    iterations=st.integers(0, 6),
+)
+def test_hypothesis_kernel_equals_oracle(data, iterations):
+    n1 = np.array([a for a, _ in data], dtype=np.int32)
+    n2 = np.array([b for _, b in data], dtype=np.int32)
+    out = run_kernel(n1, n2, iterations)
+    want = ref.ilm_mul_ref(n1, n2, iterations)
+    np.testing.assert_array_equal(out.astype(np.int64), want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, ref.ILM_MAX_OPERAND), it=st.integers(0, 14))
+def test_hypothesis_square_via_mul_matches_square_oracle(n, it):
+    # The squaring unit is the ILM on equal operands (paper §5).
+    out = run_kernel([n], [n], it)
+    assert int(out[0]) == ref.ilm_square_scalar(n, it)

@@ -1,0 +1,41 @@
+"""Python-side Table-I derivation consistency (mirrors Rust pla tests)."""
+
+import numpy as np
+
+from compile.kernels import ref
+
+PAPER_TABLE_I = [1.09811, 1.20835, 1.3269, 1.45709, 1.59866, 1.75616, 1.92922, 2.12392]
+
+
+def test_eight_segments_for_paper_config():
+    bounds = ref.derive_segments(5, 53)
+    assert len(bounds) == 9  # 1.0 + 8 boundaries
+
+
+def test_first_boundary_matches_paper_tightly():
+    bounds = ref.derive_segments(5, 53)
+    assert abs(bounds[1] - PAPER_TABLE_I[0]) / PAPER_TABLE_I[0] < 5e-5
+
+
+def test_all_boundaries_close_to_paper():
+    bounds = ref.derive_segments(5, 53)
+    for ours, paper in zip(bounds[1:], PAPER_TABLE_I):
+        assert abs(ours - paper) / paper < 5e-3
+
+
+def test_recurrence_is_geometric():
+    bounds = ref.derive_segments(5, 53)
+    r0 = bounds[1] / bounds[0]
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        assert abs(b / a / r0 - 1) < 1e-9
+
+
+def test_seed_tables_shapes_and_ranges():
+    edges, slopes, intercepts = ref.segment_tables()
+    assert edges.shape == slopes.shape == intercepts.shape == (8,)
+    assert (slopes > 0).all() and (intercepts > 0).all()
+    x = np.linspace(1.0, 1.999, 512, dtype=np.float32)
+    y0 = np.asarray(ref.seed_ref(x))
+    m = 1 - x * y0
+    assert m.max() < 2.3e-3  # m_max for the Table-I partition
+    assert m.min() > -1e-6

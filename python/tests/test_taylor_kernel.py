@@ -1,0 +1,90 @@
+"""Taylor-reciprocal Pallas kernel vs the jnp oracle and exact 1/x."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, taylor_div
+
+
+def run_recip(x, order=3, block=None):
+    x = np.asarray(x, dtype=np.float32)
+    return np.asarray(
+        taylor_div.recip(x, order=order, block=block or len(x))
+    )
+
+
+def test_matches_jnp_oracle_elementwise():
+    x = np.linspace(1.0, 1.9999999, 1024, dtype=np.float32)
+    out = run_recip(x)
+    want = np.asarray(ref.recip_ref(x, order=3))
+    # The kernel uses the §6 max-squaring schedule; the oracle a
+    # sequential Horner order — agreement to a couple of ulps, not bits.
+    assert_allclose(out, want, rtol=3e-7, atol=0)
+
+
+@pytest.mark.parametrize("order", [0, 1, 2, 3, 5])
+def test_accuracy_improves_with_order(order):
+    x = np.linspace(1.0, 1.9999999, 4096, dtype=np.float32)
+    out = run_recip(x, order=order)
+    err = np.abs(out.astype(np.float64) - 1.0 / x.astype(np.float64))
+    # Bound from eq (17) with Table-I segments (m_max ≈ 2.2e-3), plus f32 noise.
+    m_max = 2.2e-3
+    bound = m_max ** (order + 1) / (1 - m_max) ** (order + 2) + 2e-7
+    assert err.max() < bound, f"order {order}: {err.max():.3e} vs {bound:.3e}"
+
+
+def test_order3_reaches_f32_roundoff():
+    x = np.linspace(1.0, 1.9999999, 8192, dtype=np.float32)
+    out = run_recip(x, order=3)
+    want = (1.0 / x.astype(np.float64)).astype(np.float32)
+    ulp = np.abs(out.view(np.int32) - want.view(np.int32))
+    assert ulp.max() <= 4, f"max ulp {ulp.max()}"
+    assert (ulp <= 1).mean() > 0.95
+
+
+def test_segment_edges_continuous():
+    # Seed is continuous-ish across Table-I edges; reciprocal must not jump.
+    edges, _, _ = ref.segment_tables()
+    pts = []
+    for e in edges[:-1]:
+        pts += [np.nextafter(e, 0, dtype=np.float32), e, np.nextafter(e, 2, dtype=np.float32)]
+    # Pad to a clean batch.
+    while len(pts) % 8:
+        pts.append(np.float32(1.5))
+    x = np.array(pts, dtype=np.float32)
+    out = run_recip(x)
+    want = 1.0 / x.astype(np.float64)
+    assert_allclose(out, want, rtol=3e-7)
+
+
+def test_tiling_invariance():
+    rng = np.random.default_rng(5)
+    x = (1.0 + rng.random(4096)).astype(np.float32)
+    np.testing.assert_array_equal(
+        run_recip(x, block=4096), run_recip(x, block=256)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    xs=st.lists(
+        st.floats(
+            min_value=1.0,
+            max_value=np.float32(1.9999999),
+            allow_nan=False,
+            width=32,
+        ),
+        min_size=64,
+        max_size=64,
+    ),
+    order=st.integers(1, 5),
+)
+def test_hypothesis_error_within_eq17_bound(xs, order):
+    x = np.array(xs, dtype=np.float32)
+    out = run_recip(x, order=order)
+    err = np.abs(out.astype(np.float64) - 1.0 / x.astype(np.float64))
+    m_max = 2.2e-3
+    bound = m_max ** (order + 1) / (1 - m_max) ** (order + 2) + 5e-7
+    assert err.max() < bound

@@ -1,0 +1,205 @@
+//! E10 — coordinator/service benchmark (architecture layer): throughput
+//! and latency of the batched division service across worker counts,
+//! batch budgets, and backends (native vs PJRT when artifacts exist).
+
+use std::time::{Duration, Instant};
+
+use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::runtime::artifacts_available;
+use tsdiv::util::rng::Rng;
+use tsdiv::util::table::{sig, Align, Table};
+
+/// Closed-loop load: `clients` threads each keep one request in flight.
+fn run_load(
+    backend: BackendChoice,
+    workers: usize,
+    max_batch: usize,
+    clients: usize,
+    lanes: usize,
+    duration: Duration,
+) -> (f64, f64, f64, f64) {
+    let svc = std::sync::Arc::new(
+        DivisionService::start(
+            ServiceConfig {
+                workers,
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 1 << 14,
+            },
+            backend,
+        )
+        .expect("service"),
+    );
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for cid in 0..clients {
+        let svc = std::sync::Arc::clone(&svc);
+        let stop = std::sync::Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(cid as u64 + 100);
+            let mut lanes_done = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let a: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+                let b: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+                match svc.submit(a, b) {
+                    Ok(t) => {
+                        t.wait().expect("division");
+                        lanes_done += lanes as u64;
+                    }
+                    Err(SubmitError::Busy) => std::thread::yield_now(),
+                    Err(e) => panic!("{e}"),
+                }
+            }
+            lanes_done
+        }));
+    }
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    let out = (
+        total as f64 / dt,
+        m.latency_p50 * 1e3,
+        m.latency_p99 * 1e3,
+        m.mean_batch_lanes(),
+    );
+    match std::sync::Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(_) => {}
+    }
+    out
+}
+
+fn main() {
+    println!("\n===== E10: coordinator — batched division service =====\n");
+    let quick = std::env::var("TSDIV_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let dur = if quick {
+        Duration::from_millis(250)
+    } else {
+        Duration::from_millis(900)
+    };
+
+    let mut t = Table::new(
+        "native backend: throughput vs (workers × max_batch), 8 clients × 64 lanes",
+        &["workers", "max batch", "div/s", "p50 ms", "p99 ms", "lanes/batch"],
+    )
+    .aligns(&[Align::Right; 6]);
+    for workers in [1usize, 2, 4] {
+        for max_batch in [256usize, 1024, 4096] {
+            let (thr, p50, p99, lpb) = run_load(
+                BackendChoice::Native {
+                    order: 5,
+                    ilm_iterations: None,
+                },
+                workers,
+                max_batch,
+                8,
+                64,
+                dur,
+            );
+            t.row(&[
+                workers.to_string(),
+                max_batch.to_string(),
+                sig(thr, 4),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+                format!("{lpb:.1}"),
+            ]);
+        }
+    }
+    t.print();
+
+    if artifacts_available() {
+        let mut t = Table::new(
+            "PJRT backend (AOT JAX/Pallas artifact), 8 clients × 256 lanes",
+            &["workers", "div/s", "p50 ms", "p99 ms", "lanes/batch"],
+        )
+        .aligns(&[Align::Right; 5]);
+        for workers in [1usize, 2] {
+            let (thr, p50, p99, lpb) =
+                run_load(BackendChoice::Pjrt, workers, 4096, 8, 256, dur);
+            t.row(&[
+                workers.to_string(),
+                sig(thr, 4),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+                format!("{lpb:.1}"),
+            ]);
+        }
+        t.print();
+        println!("(PJRT p99 includes first-batch executable warmup)");
+    } else {
+        println!("PJRT backend skipped: run `make artifacts` first.");
+    }
+
+    // Coordinator overhead: service vs bare loop over IDENTICAL
+    // pre-generated operands (on a single-core machine the client
+    // threads' operand *generation* would otherwise be misattributed
+    // to the coordinator).
+    let bare = {
+        use tsdiv::divider::{Divider, TaylorDivider};
+        let mut d = TaylorDivider::paper_exact();
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..65536).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+        let b: Vec<f32> = (0..65536).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+        let t0 = Instant::now();
+        let mut acc = 0u32;
+        for i in 0..a.len() {
+            acc ^= d.div_f32(a[i], b[i]).to_bits();
+        }
+        tsdiv::util::black_box(acc);
+        a.len() as f64 / t0.elapsed().as_secs_f64()
+    };
+    let svc_thr = {
+        let svc = DivisionService::start(
+            ServiceConfig {
+                workers: 1,
+                max_batch: 4096,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 1 << 14,
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .expect("service");
+        let mut rng = Rng::new(1);
+        // Pre-generate 64 requests of 1024 lanes; clone per submission
+        // (a 4 KiB memcpy, ≪ the 65 µs of compute it buys).
+        let reqs: Vec<(Vec<f32>, Vec<f32>)> = (0..64)
+            .map(|_| {
+                (
+                    (0..1024).map(|_| rng.f32_log_uniform(-8, 8)).collect(),
+                    (0..1024).map(|_| rng.f32_log_uniform(-8, 8)).collect(),
+                )
+            })
+            .collect();
+        let t0 = Instant::now();
+        let mut lanes = 0u64;
+        while t0.elapsed() < Duration::from_millis(800) {
+            // Keep 4 requests in flight (double buffering through the
+            // batcher) without extra client threads.
+            let tickets: Vec<_> = reqs
+                .iter()
+                .take(4)
+                .map(|(a, b)| svc.submit(a.clone(), b.clone()).expect("submit"))
+                .collect();
+            for t in tickets {
+                t.wait().expect("divide");
+                lanes += 1024;
+            }
+        }
+        let thr = lanes as f64 / t0.elapsed().as_secs_f64();
+        svc.shutdown();
+        thr
+    };
+    println!(
+        "\ncoordinator overhead: bare loop {:.2} Mdiv/s vs 1-worker service {:.2} Mdiv/s ({:.1} % overhead)",
+        bare / 1e6,
+        svc_thr / 1e6,
+        (1.0 - svc_thr / bare) * 100.0
+    );
+}

@@ -1,0 +1,71 @@
+//! E2/E3 — Figures 1 & 2: the single-segment linear approximation of
+//! 1/x on [1,2] (eq 13–15) and the m(x) curve (eq 16).
+
+use tsdiv::harness::{timed_section, Report, Verdict};
+use tsdiv::pla::{m_max, m_value, optimal_p, pointwise_error, total_error, y0};
+use tsdiv::util::table::{sig, Align, Table};
+
+fn main() {
+    println!("\n===== E2: Figure 1 — 1/x vs optimal linear approximation on [1,2] =====\n");
+    let (a, b) = (1.0, 2.0);
+
+    // The Fig-1 series: x, 1/x, y0(x), pointwise error (eq 13).
+    let mut t = Table::new(
+        "Fig 1 series (16 of 256 points shown)",
+        &["x", "1/x", "y0(x)", "E(x) eq(13)"],
+    );
+    let p = optimal_p(a, b);
+    for i in (0..256).step_by(16) {
+        let x = a + (b - a) * (i as f64 + 0.5) / 256.0;
+        t.row(&[
+            format!("{x:.4}"),
+            format!("{:.6}", 1.0 / x),
+            format!("{:.6}", y0(x, a, b)),
+            sig(pointwise_error(x, p), 4),
+        ]);
+    }
+    t.print();
+
+    let mut report = Report::new("Fig 1/2 analytic checkpoints");
+    // Optimal p = (a+b)/2 (eq 14 minimization).
+    report.row_num("optimal p for [1,2]", 1.5, p, 1e-12);
+    // E_total at optimum (eq 14) is positive and smaller than neighbours.
+    let e_opt = total_error(a, b, p);
+    report.row(
+        "E_total(p=1.5) < E_total(p±0.1)",
+        "true",
+        &format!(
+            "{}",
+            e_opt < total_error(a, b, 1.4) && e_opt < total_error(a, b, 1.6)
+        ),
+        if e_opt < total_error(a, b, 1.4) && e_opt < total_error(a, b, 1.6) {
+            Verdict::Match
+        } else {
+            Verdict::Mismatch
+        },
+    );
+    // Fig 2: m(x,1,2) maximum = 1/9 at x ∈ {1, 2} (paper: eq 18 uses 9/8 & 1/9).
+    report.row_num("m_max on [1,2] (paper 1/9)", 1.0 / 9.0, m_max(a, b), 1e-12);
+    report.row_num("m(1)", 1.0 / 9.0, m_value(1.0, a, b), 1e-12);
+    report.row_num("m(2)", 1.0 / 9.0, m_value(2.0, a, b), 1e-12);
+    report.row_num("m(1.5) (midpoint zero)", 0.0, m_value(1.5, a, b), 0.0);
+    report.print();
+
+    println!("\n===== E3: Figure 2 — m(x) over [1,2] =====\n");
+    let mut t = Table::new("Fig 2 series m(x,1,2)", &["x", "m(x)"]).aligns(&[Align::Right; 2]);
+    for i in 0..=16 {
+        let x = 1.0 + i as f64 / 16.0;
+        t.row(&[format!("{x:.4}"), sig(m_value(x, a, b), 5)]);
+    }
+    t.print();
+
+    timed_section("m_value over 256-point grid", || {
+        let mut acc = 0.0;
+        for i in 0..256 {
+            let x = 1.0 + (i as f64 + 0.5) / 256.0;
+            acc += m_value(x, 1.0, 2.0);
+        }
+        tsdiv::util::black_box(acc);
+    });
+    assert_eq!(report.mismatches(), 0);
+}

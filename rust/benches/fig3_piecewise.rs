@@ -1,0 +1,81 @@
+//! E4 — Figure 3: the piecewise-linear approximation of 1/x for the
+//! Table-I partition (n = 5), including the fixed-point seed-table
+//! hardware model's error.
+
+use tsdiv::pla::{derive_segments, m_max, segment_index, y0, SegmentTable};
+use tsdiv::harness::timed_section;
+use tsdiv::util::table::{sig, Align, Table};
+
+fn main() {
+    println!("\n===== E4: Figure 3 — piecewise-linear approximation (n=5 partition) =====\n");
+    let bounds = derive_segments(5, 53);
+    let table = SegmentTable::build(&bounds, 60);
+
+    // Per-segment line parameters + worst seed quality.
+    let mut t = Table::new(
+        "piecewise lines per segment",
+        &["seg", "[a, b)", "slope", "intercept", "m_max (analytic)", "max m (fixed-point)"],
+    )
+    .aligns(&[Align::Left, Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for (i, w) in bounds.windows(2).enumerate() {
+        let (a, b) = (w[0], w[1]);
+        let (slope, intercept) = tsdiv::pla::optimal_line(a, b);
+        // Scan the fixed-point seed across the segment.
+        let mut worst_m: f64 = 0.0;
+        for j in 0..200 {
+            let x = a + (b.min(2.0) - a) * (j as f64 + 0.5) / 200.0;
+            let yq = table.seed_f64(x);
+            worst_m = worst_m.max(1.0 - x * yq);
+        }
+        t.row(&[
+            i.to_string(),
+            format!("[{:.5}, {:.5})", a, b),
+            sig(slope, 5),
+            sig(intercept, 5),
+            sig(m_max(a, b), 4),
+            sig(worst_m, 4),
+        ]);
+    }
+    t.print();
+
+    // The Fig-3 curve itself: seed vs true reciprocal (sampled rows).
+    let mut t = Table::new(
+        "Fig 3 series (sampled): piecewise y0 vs 1/x",
+        &["x", "segment", "y0 (fixed-point)", "1/x", "seed error"],
+    );
+    for i in 0..=20 {
+        let x = 1.0 + 0.9999 * i as f64 / 20.0;
+        let seg = segment_index(&bounds, x);
+        let yq = table.seed_f64(x);
+        t.row(&[
+            format!("{x:.4}"),
+            seg.to_string(),
+            format!("{yq:.8}"),
+            format!("{:.8}", 1.0 / x),
+            sig((yq - 1.0 / x).abs(), 3),
+        ]);
+    }
+    t.print();
+
+    // Fixed-point table vs analytic lines: agreement within Q2.60 slack.
+    let mut worst_dev: f64 = 0.0;
+    for i in 0..2000 {
+        let x = 1.0 + 0.999_999 * (i as f64 + 0.5) / 2000.0;
+        let seg = segment_index(&bounds, x);
+        let analytic = y0(x, bounds[seg], bounds[seg + 1]);
+        worst_dev = worst_dev.max((table.seed_f64(x) - analytic).abs());
+    }
+    println!(
+        "max |fixed-point seed − eq(15) line| over 2000 points: {} (Q2.60 ulp = {:.1e})",
+        sig(worst_dev, 3),
+        2f64.powi(-60)
+    );
+    assert!(worst_dev < 1e-15);
+
+    println!("seed ROM: {} bits for {} segments", table.rom_bits(), table.num_segments());
+
+    timed_section("fixed-point seed (table lookup + mul-sub)", || {
+        let x = tsdiv::util::black_box(5u64 << 58); // 1.25 in Q2.60
+        tsdiv::util::black_box(table.seed(x));
+    });
+}

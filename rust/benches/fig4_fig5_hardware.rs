@@ -1,0 +1,100 @@
+//! E6 — Figures 4 & 5: the hardware comparison between the ILM basic
+//! multiplier and the squaring unit, quantifying the §5 "< 50 %" claim
+//! with the NAND2-equivalent cost model.
+
+use tsdiv::harness::{Report, Verdict};
+use tsdiv::hw::units::{powering_vs_two_ilm_ratio, squaring_vs_ilm_ratio_total};
+use tsdiv::hw::{
+    divider_system, ilm_unit, newton_system, pla_unit, powering_unit, squaring_unit,
+    squaring_vs_ilm_ratio,
+};
+use tsdiv::util::table::{sig, Align, Table};
+
+fn main() {
+    println!("\n===== E6: Fig 4 vs Fig 5 — ILM vs squaring-unit hardware =====\n");
+
+    // Full bills of materials at the paper-relevant width (one f64-grade
+    // significand datapath).
+    print!("{}", ilm_unit(53).render());
+    println!();
+    print!("{}", squaring_unit(53).render());
+    println!();
+
+    // The headline ratio across widths.
+    let mut t = Table::new(
+        "squaring-unit area / ILM area",
+        &["width", "datapath ratio", "total ratio (regs+ctl)", "paper claim"],
+    )
+    .aligns(&[Align::Right, Align::Right, Align::Right, Align::Left]);
+    let mut all_under_half = true;
+    for w in [16u32, 24, 32, 53, 64] {
+        let r = squaring_vs_ilm_ratio(w);
+        let rt = squaring_vs_ilm_ratio_total(w);
+        all_under_half &= r < 0.5;
+        t.row(&[
+            w.to_string(),
+            format!("{r:.3}"),
+            format!("{rt:.3}"),
+            "< 0.5 (§5)".to_string(),
+        ]);
+    }
+    t.print();
+
+    let mut report = Report::new("paper hardware claims");
+    report.row(
+        "§5: squaring < 50 % of ILM (datapath)",
+        "< 0.5",
+        &format!("{:.3} @ w=53", squaring_vs_ilm_ratio(53)),
+        if all_under_half { Verdict::Match } else { Verdict::Mismatch },
+    );
+    let pr = powering_vs_two_ilm_ratio(53);
+    report.row(
+        "§6: powering unit ≪ two multipliers",
+        "\"little overhead\"",
+        &format!("{pr:.3} of 2×ILM"),
+        if pr < 0.85 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    // §5 structural claims.
+    let sq = squaring_unit(53);
+    report.row(
+        "§5: no decoder in squaring unit",
+        "0 decoders",
+        &format!("{}", sq.count_matching("DEC")),
+        if sq.count_matching("DEC") == 0 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    let ilm = ilm_unit(53);
+    report.row(
+        "§5: half the PE/LOD/shifter count",
+        "2 → 1 each",
+        &format!(
+            "PE {}→{}, LOD {}→{}, SHIFT {}→{}",
+            ilm.count_matching("PE"),
+            sq.count_matching("PE"),
+            ilm.count_matching("LOD"),
+            sq.count_matching("LOD"),
+            ilm.count_matching("SHIFT"),
+            sq.count_matching("SHIFT")
+        ),
+        Verdict::Match,
+    );
+    report.print();
+
+    // System-level roll-up (Fig 7 composition + baselines).
+    let mut t = Table::new(
+        "system areas at w=60, 8 segments (NAND2-eq gates)",
+        &["unit", "datapath area", "total area"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right]);
+    for (name, c) in [
+        ("PLA unit", pla_unit(8, 60)),
+        ("ILM multiplier (Fig 4)", ilm_unit(60)),
+        ("Squaring unit (Fig 5)", squaring_unit(60)),
+        ("Powering unit (Fig 6)", powering_unit(60)),
+        ("Division unit (Fig 7)", divider_system(8, 60, 11)),
+        ("Newton-Raphson system (baseline)", newton_system(8, 60, 11)),
+    ] {
+        t.row(&[name.to_string(), sig(c.datapath_area(), 6), sig(c.area(), 6)]);
+    }
+    t.print();
+    assert_eq!(report.mismatches(), 0);
+}

@@ -1,0 +1,118 @@
+//! E8 — §4 ILM accuracy: relative error of the Iterative Logarithmic
+//! Multiplier as a function of the correction-iteration budget
+//! (exhaustive at 8 bits, sampled at 16/24 bits), plus throughput.
+
+use tsdiv::harness::{timed_section, Report, Verdict};
+use tsdiv::ilm::{ilm_mul, ilm_rel_error, max_stages_for_width};
+use tsdiv::util::rng::Rng;
+use tsdiv::util::table::{sig, Align, Table};
+
+fn exhaustive_8bit(iters: u32) -> (f64, f64, f64) {
+    let mut max_e: f64 = 0.0;
+    let mut sum = 0.0;
+    let mut exact = 0u64;
+    let mut n = 0u64;
+    for a in 1u64..256 {
+        for b in 1u64..256 {
+            let e = ilm_rel_error(a, b, iters);
+            max_e = max_e.max(e);
+            sum += e;
+            exact += (e == 0.0) as u64;
+            n += 1;
+        }
+    }
+    (max_e, sum / n as f64, exact as f64 / n as f64)
+}
+
+fn sampled(width: u32, iters: u32, samples: u64, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut max_e: f64 = 0.0;
+    let mut sum = 0.0;
+    let hi = (1u64 << width) - 1;
+    for _ in 0..samples {
+        let a = rng.range_u64(1, hi);
+        let b = rng.range_u64(1, hi);
+        let e = ilm_rel_error(a, b, iters);
+        max_e = max_e.max(e);
+        sum += e;
+    }
+    (max_e, sum / samples as f64)
+}
+
+fn main() {
+    println!("\n===== E8: ILM accuracy vs correction iterations (§4) =====\n");
+
+    let mut t = Table::new(
+        "8-bit operands, exhaustive (65 025 pairs)",
+        &["iterations", "max rel err", "mean rel err", "exact %"],
+    )
+    .aligns(&[Align::Right; 4]);
+    let mut maxes = Vec::new();
+    for iters in 0..=7 {
+        let (mx, mean, exact) = exhaustive_8bit(iters);
+        maxes.push(mx);
+        t.row(&[
+            iters.to_string(),
+            sig(mx, 4),
+            sig(mean, 4),
+            format!("{:.2}", exact * 100.0),
+        ]);
+    }
+    t.print();
+
+    let mut report = Report::new("ILM invariants (§4 / ref [12])");
+    report.row(
+        "Mitchell worst case < 25 %",
+        "< 0.25",
+        &sig(maxes[0], 4),
+        if maxes[0] < 0.25 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    report.row(
+        "error shrinks ≳4× per stage",
+        "monotone /4",
+        &format!("{} → {} → {}", sig(maxes[0], 3), sig(maxes[1], 3), sig(maxes[2], 3)),
+        if maxes[1] < maxes[0] / 3.0 && maxes[2] < maxes[1] / 3.0 {
+            Verdict::Match
+        } else {
+            Verdict::Mismatch
+        },
+    );
+    report.row(
+        "exact within w−1 stages",
+        "err = 0",
+        &sig(maxes[7.min(max_stages_for_width(8) as usize)], 4),
+        if maxes[7] == 0.0 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    report.print();
+
+    let mut t = Table::new(
+        "wider operands (200k samples each)",
+        &["width", "iterations", "max rel err", "mean rel err"],
+    )
+    .aligns(&[Align::Right; 4]);
+    for width in [16u32, 24] {
+        for iters in [0u32, 1, 2, 4, 8] {
+            let (mx, mean) = sampled(width, iters, 200_000, width as u64 * 31 + iters as u64);
+            t.row(&[width.to_string(), iters.to_string(), sig(mx, 4), sig(mean, 4)]);
+        }
+    }
+    t.print();
+
+    // Throughput of the word-level model by budget.
+    println!();
+    for iters in [0u32, 2, 8] {
+        let mut rng = Rng::new(5);
+        let ops: Vec<(u64, u64)> = (0..1024)
+            .map(|_| (rng.range_u64(1, u32::MAX as u64), rng.range_u64(1, u32::MAX as u64)))
+            .collect();
+        let m = timed_section(&format!("ilm_mul x1024, {iters} corrections"), || {
+            let mut acc = 0u128;
+            for &(a, b) in &ops {
+                acc ^= ilm_mul(a, b, iters).product;
+            }
+            tsdiv::util::black_box(acc);
+        });
+        println!("    = {:.1} M mults/s", m.items_per_sec(1024) / 1e6);
+    }
+    assert_eq!(report.mismatches(), 0);
+}

@@ -1,0 +1,93 @@
+//! E5 — §3 iteration-count claims: 17 iterations for one segment,
+//! "15" for the two-segment √(ab) split (paper value — our eq-(17)
+//! solver disagrees, documented), 5 for the Table-I partition.
+
+use tsdiv::harness::{Report, Verdict};
+use tsdiv::pla::{
+    derive_segments, equal_error_split, error_bound_log2, min_iterations,
+    min_iterations_piecewise,
+};
+use tsdiv::util::table::{Align, Table};
+
+fn main() {
+    println!("\n===== E5: minimum Taylor iterations for 53-bit precision =====\n");
+
+    let one_seg = min_iterations(1.0, 2.0, 53);
+    let p = equal_error_split(1.0, 2.0);
+    let two_seg = min_iterations_piecewise(&[1.0, p, 2.0], 53);
+    let table_i = min_iterations_piecewise(&derive_segments(5, 53), 53);
+
+    let mut report = Report::new("paper §3 iteration counts (eq 17 solver)");
+    report.row(
+        "1 segment [1,2]",
+        "17",
+        &one_seg.to_string(),
+        if one_seg == 17 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    report.row(
+        "2 segments split at √2",
+        "15",
+        &two_seg.to_string(),
+        if two_seg == 15 {
+            Verdict::Match
+        } else {
+            // Documented discrepancy: eq (17) with per-segment optimal
+            // lines gives a smaller bound than the paper's 15 (DESIGN.md E5).
+            Verdict::Mismatch
+        },
+    );
+    report.row(
+        "8 segments (Table I)",
+        "5",
+        &table_i.to_string(),
+        if table_i == 5 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    report.print();
+    println!(
+        "note: the two-segment MISMATCH is a *paper-internal* inconsistency we\n\
+         document rather than hide — eq (17) evaluated at the √2 split needs only\n\
+         {two_seg} iterations. Both of the paper's other claims reproduce exactly.\n"
+    );
+
+    // The full convergence picture: bound (log2) vs iteration count.
+    let mut t = Table::new(
+        "eq-(17) error bound (log2) by iteration count",
+        &["n", "1 seg", "2 seg (worst)", "Table I (worst)"],
+    )
+    .aligns(&[Align::Right; 4]);
+    let bounds_ti = derive_segments(5, 53);
+    for n in [0u32, 2, 5, 8, 11, 14, 17, 20] {
+        let b1 = error_bound_log2(1.0, 2.0, n);
+        let b2 = error_bound_log2(1.0, p, n).max(error_bound_log2(p, 2.0, n));
+        let bt = bounds_ti
+            .windows(2)
+            .map(|w| error_bound_log2(w[0], w[1], n))
+            .fold(f64::NEG_INFINITY, f64::max);
+        t.row(&[
+            n.to_string(),
+            format!("{b1:.1}"),
+            format!("{b2:.1}"),
+            format!("{bt:.1}"),
+        ]);
+    }
+    t.print();
+
+    // Iterations vs segment count tradeoff (the design space behind Table I).
+    let mut t = Table::new(
+        "partition size ↔ iteration budget (53-bit target)",
+        &["derivation n", "segments", "min iterations"],
+    )
+    .aligns(&[Align::Right; 3]);
+    for n in [2u32, 3, 4, 5, 6, 8, 10, 12] {
+        let b = derive_segments(n, 53);
+        t.row(&[
+            n.to_string(),
+            (b.len() - 1).to_string(),
+            min_iterations_piecewise(&b, 53).to_string(),
+        ]);
+    }
+    t.print();
+
+    assert_eq!(one_seg, 17);
+    assert_eq!(table_i, 5);
+}

@@ -1,0 +1,101 @@
+//! E7 — Figure 6: the powering-unit schedule (12 powers), operand-cache
+//! effectiveness, and cycles vs a naive chained-multiply unit.
+
+use tsdiv::harness::{timed_section, Report, Verdict};
+use tsdiv::hw::powering_timing;
+use tsdiv::powering::{schedule_cycles, ExactMul, PoweringUnit};
+use tsdiv::util::table::{Align, Table};
+
+fn main() {
+    println!("\n===== E7: Fig 6 — powering-unit schedule for 12 powers =====\n");
+    const F: u32 = 40;
+    let x = (0.83 * (1u64 << F) as f64) as u64;
+    let mut be = ExactMul::default();
+    let mut pu = PoweringUnit::new(&mut be, F);
+    let r = pu.compute_powers(x, 12);
+
+    let mut t = Table::new(
+        "executed schedule (one row per cycle)",
+        &["cycle", "multiplier (odd powers)", "squaring unit (even powers)"],
+    )
+    .aligns(&[Align::Right, Align::Left, Align::Left]);
+    for c in &r.schedule {
+        t.row(&[
+            c.cycle.to_string(),
+            c.odd_power.map(|p| format!("x^{p} = x^{} · x (cached PE/LOD)", p - 1)).unwrap_or_else(|| "—".into()),
+            c.even_power.map(|p| format!("x^{p} = (x^{})²", p / 2)).unwrap_or_else(|| "—".into()),
+        ]);
+    }
+    t.print();
+
+    let mut report = Report::new("Fig 6 schedule invariants");
+    report.row(
+        "12 powers in 6 cycles (Fig 6)",
+        "6",
+        &r.cycles.to_string(),
+        if r.cycles == 6 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    report.row(
+        "squares : multiplies",
+        "6 : 5",
+        &format!("{} : {}", r.counts.squares, r.counts.muls),
+        if r.counts.squares == 6 && r.counts.muls == 5 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    report.row(
+        "PE evaluations saved by §6 cache",
+        "1 per odd power (5)",
+        &r.counts.pe_cache_hits.to_string(),
+        if r.counts.pe_cache_hits == 5 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    // Naive unit: chained multiplies x^(k+1) = x^k·x → 11 sequential
+    // multiplies, two PE per multiply, no parallel squarer.
+    report.row(
+        "cycles vs naive chained multiplies",
+        "6 vs 11",
+        &format!("{} vs 11", r.cycles),
+        if r.cycles < 11 { Verdict::Match } else { Verdict::Mismatch },
+    );
+    report.print();
+
+    // Cycles scale: schedule_cycles closed form vs executed for 2..=16.
+    let mut t = Table::new(
+        "powers ↔ cycles (closed form; naive = P−1)",
+        &["max power", "Fig-6 cycles", "naive cycles", "speedup"],
+    )
+    .aligns(&[Align::Right; 4]);
+    for p in [2u32, 4, 6, 8, 12, 16] {
+        let c = schedule_cycles(p);
+        t.row(&[
+            p.to_string(),
+            c.to_string(),
+            (p - 1).to_string(),
+            format!("{:.2}×", (p - 1) as f64 / c as f64),
+        ]);
+    }
+    t.print();
+
+    // Wall-clock timing estimate from the hw model (iterative vs pipelined).
+    let mut t = Table::new(
+        "powering-unit timing estimate (w=53, 2 ILM corrections, 15 ps gate)",
+        &["mode", "latency (cycles)", "II", "latency ns", "results/s"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for (label, pipelined) in [("iterative", false), ("pipelined (§7)", true)] {
+        let tm = powering_timing(53, 12, 2, pipelined);
+        t.row(&[
+            label.to_string(),
+            tm.latency_cycles.to_string(),
+            tm.initiation_interval.to_string(),
+            format!("{:.2}", tm.latency_ns(15.0)),
+            format!("{:.2e}", tm.throughput_per_s(15.0)),
+        ]);
+    }
+    t.print();
+
+    timed_section("compute_powers(x, 12) word-level model", || {
+        let mut be = ExactMul::default();
+        let mut pu = PoweringUnit::new(&mut be, F);
+        tsdiv::util::black_box(pu.compute_powers(tsdiv::util::black_box(x), 12));
+    });
+    assert_eq!(report.mismatches(), 0);
+}

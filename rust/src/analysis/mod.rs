@@ -1,0 +1,206 @@
+//! Accuracy analysis: ULP/relative-error sweeps over operand
+//! distributions, and the parameter sweeps behind the evaluation tables.
+
+use crate::divider::{longdiv::LongDivider, Divider};
+use crate::fp::{ulp_diff, Rounding};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Error statistics of a divider against the exactly-rounded reference.
+#[derive(Clone, Debug)]
+pub struct AccuracyReport {
+    pub divider: String,
+    pub samples: u64,
+    /// ULP distance distribution vs the correctly rounded quotient.
+    pub max_ulp: u64,
+    pub mean_ulp: f64,
+    /// Fraction of samples that exactly match the reference bits.
+    pub exact_rate: f64,
+    /// Max/mean relative error (f64 computation domain).
+    pub max_rel: f64,
+    pub mean_rel: f64,
+}
+
+/// Operand distributions for accuracy/throughput sweeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Log-uniform over a moderate exponent range (typical numerics).
+    LogUniform,
+    /// Uniform significands with equal exponents (stresses the mantissa
+    /// path only — the paper's setting).
+    SignificandOnly,
+    /// Fully random bit patterns (includes subnormals, huge/tiny ratios).
+    RandomBits,
+}
+
+impl Workload {
+    pub fn sample_f32(&self, rng: &mut Rng) -> (f32, f32) {
+        match self {
+            Workload::LogUniform => (rng.f32_log_uniform(-30, 30), rng.f32_log_uniform(-30, 30)),
+            Workload::SignificandOnly => {
+                (1.0 + rng.f32(), 1.0 + rng.f32())
+            }
+            Workload::RandomBits => {
+                let mut a = rng.f32_bits();
+                let mut b = rng.f32_bits();
+                while !a.is_finite() {
+                    a = rng.f32_bits();
+                }
+                while !b.is_finite() {
+                    b = rng.f32_bits();
+                }
+                (a, b)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::LogUniform => "log-uniform",
+            Workload::SignificandOnly => "significand-only",
+            Workload::RandomBits => "random-bits",
+        }
+    }
+}
+
+/// Measure a divider's accuracy against the digit-recurrence reference.
+pub fn measure_accuracy_f32(
+    div: &mut dyn Divider,
+    workload: Workload,
+    samples: u64,
+    seed: u64,
+) -> AccuracyReport {
+    let mut rng = Rng::new(seed);
+    let mut gold = LongDivider::new();
+    let fmt = crate::fp::F32;
+    let mut ulps = Summary::new();
+    let mut rels = Summary::new();
+    let mut max_ulp = 0u64;
+    let mut exact = 0u64;
+    for _ in 0..samples {
+        let (a, b) = workload.sample_f32(&mut rng);
+        let ours = div.div_bits(a.to_bits() as u64, b.to_bits() as u64, fmt, Rounding::NearestEven);
+        let reference =
+            gold.div_bits(a.to_bits() as u64, b.to_bits() as u64, fmt, Rounding::NearestEven);
+        if let Some(u) = ulp_diff(ours, reference, fmt) {
+            ulps.push(u as f64);
+            max_ulp = max_ulp.max(u);
+            if u == 0 {
+                exact += 1;
+            }
+        }
+        let of = f32::from_bits(ours as u32) as f64;
+        let rf = f32::from_bits(reference as u32) as f64;
+        if rf.is_finite() && rf != 0.0 {
+            rels.push(((of - rf) / rf).abs());
+        }
+    }
+    AccuracyReport {
+        divider: div.name(),
+        samples,
+        max_ulp,
+        mean_ulp: ulps.mean(),
+        exact_rate: exact as f64 / samples as f64,
+        max_rel: rels.max(),
+        mean_rel: rels.mean(),
+    }
+}
+
+/// Reciprocal-only accuracy vs `1/x` in f64 across a significand sweep:
+/// returns (x, abs_error) series — the data behind Fig 1/3-style plots.
+pub fn reciprocal_error_series(
+    cfg: &crate::taylor::TaylorConfig,
+    points: usize,
+) -> Vec<(f64, f64)> {
+    let mut backend = crate::powering::ExactMul::default();
+    let scale = (1u128 << cfg.frac_bits) as f64;
+    (0..points)
+        .map(|i| {
+            let x = 1.0 + (i as f64 + 0.5) / points as f64;
+            let xq = (x * scale) as u64;
+            let r = crate::taylor::reciprocal_fixed(cfg, &mut backend, xq);
+            let err = (r.recip as f64 / scale - 1.0 / x).abs();
+            (x, err)
+        })
+        .collect()
+}
+
+/// Worst-case reciprocal error (bits of precision) for a configuration.
+pub fn reciprocal_precision_bits(cfg: &crate::taylor::TaylorConfig, points: usize) -> f64 {
+    let worst = reciprocal_error_series(cfg, points)
+        .into_iter()
+        .map(|(_, e)| e)
+        .fold(0.0f64, f64::max);
+    if worst == 0.0 {
+        cfg.frac_bits as f64
+    } else {
+        -worst.log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::divider::TaylorDivider;
+    use crate::taylor::TaylorConfig;
+
+    #[test]
+    fn exact_divider_reports_zero_ulp() {
+        let mut gold = LongDivider::new();
+        let r = measure_accuracy_f32(&mut gold, Workload::LogUniform, 2_000, 1);
+        assert_eq!(r.max_ulp, 0);
+        assert_eq!(r.exact_rate, 1.0);
+        assert_eq!(r.mean_ulp, 0.0);
+    }
+
+    #[test]
+    fn taylor_divider_accuracy_report_sane() {
+        let mut d = TaylorDivider::paper_exact();
+        let r = measure_accuracy_f32(&mut d, Workload::LogUniform, 5_000, 2);
+        assert!(r.max_ulp <= 1, "max ulp {}", r.max_ulp);
+        assert!(r.exact_rate > 0.999);
+        assert!(r.mean_rel < 1e-7);
+    }
+
+    #[test]
+    fn workloads_produce_finite_pairs() {
+        let mut rng = Rng::new(5);
+        for w in [Workload::LogUniform, Workload::SignificandOnly, Workload::RandomBits] {
+            for _ in 0..100 {
+                let (a, b) = w.sample_f32(&mut rng);
+                assert!(a.is_finite() && b.is_finite(), "{}", w.name());
+            }
+        }
+    }
+
+    #[test]
+    fn significand_only_in_unit_binade() {
+        let mut rng = Rng::new(6);
+        for _ in 0..100 {
+            let (a, b) = Workload::SignificandOnly.sample_f32(&mut rng);
+            assert!((1.0..2.0).contains(&a) && (1.0..2.0).contains(&b));
+        }
+    }
+
+    #[test]
+    fn precision_bits_matches_paper_config() {
+        let cfg = TaylorConfig::paper_default(60);
+        let bits = reciprocal_precision_bits(&cfg, 400);
+        assert!(bits >= 53.0, "paper config delivers {bits:.1} bits");
+        // Lower order → fewer bits.
+        let cfg2 = TaylorConfig {
+            order: 2,
+            ..TaylorConfig::paper_default(60)
+        };
+        let bits2 = reciprocal_precision_bits(&cfg2, 400);
+        assert!(bits2 < bits);
+    }
+
+    #[test]
+    fn error_series_has_requested_length_and_positive_x() {
+        let cfg = TaylorConfig::paper_default(60);
+        let s = reciprocal_error_series(&cfg, 64);
+        assert_eq!(s.len(), 64);
+        assert!(s.iter().all(|&(x, e)| (1.0..2.0).contains(&x) && e >= 0.0));
+    }
+}

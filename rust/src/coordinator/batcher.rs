@@ -1,0 +1,196 @@
+//! Pure batch-assembly logic: coalesce many small requests into one
+//! backend batch and split the result back, independent of threading.
+
+/// A request's lanes plus its index for response routing.
+#[derive(Clone, Debug)]
+pub struct BatchItem {
+    pub request_id: u64,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// A coalesced batch ready for a backend.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub items: Vec<BatchItem>,
+    pub lanes: usize,
+}
+
+impl Batch {
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Flatten all items into contiguous operand vectors.
+    pub fn flatten(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut a = Vec::with_capacity(self.lanes);
+        let mut b = Vec::with_capacity(self.lanes);
+        for it in &self.items {
+            a.extend_from_slice(&it.a);
+            b.extend_from_slice(&it.b);
+        }
+        (a, b)
+    }
+
+    /// Split a flat result back into per-request chunks
+    /// `(request_id, Vec<f32>)`, in item order.
+    pub fn split(&self, flat: &[f32]) -> Vec<(u64, Vec<f32>)> {
+        assert_eq!(flat.len(), self.lanes, "result length mismatch");
+        let mut out = Vec::with_capacity(self.items.len());
+        let mut off = 0;
+        for it in &self.items {
+            out.push((it.request_id, flat[off..off + it.a.len()].to_vec()));
+            off += it.a.len();
+        }
+        out
+    }
+}
+
+/// Accumulates requests until a lane budget is met.
+#[derive(Debug)]
+pub struct BatchAssembler {
+    max_lanes: usize,
+    current: Batch,
+}
+
+impl BatchAssembler {
+    pub fn new(max_lanes: usize) -> Self {
+        assert!(max_lanes > 0);
+        Self {
+            max_lanes,
+            current: Batch::default(),
+        }
+    }
+
+    /// Add a request. Returns a completed batch when the lane budget is
+    /// reached (the new item may itself trigger the flush).
+    pub fn push(&mut self, item: BatchItem) -> Option<Batch> {
+        debug_assert_eq!(item.a.len(), item.b.len());
+        // An oversize single request: flush what we have, emit it alone.
+        if item.a.len() >= self.max_lanes {
+            let pending = self.take();
+            let lanes = item.a.len();
+            let solo = Batch {
+                items: vec![item],
+                lanes,
+            };
+            return Some(match pending {
+                Some(mut p) => {
+                    // Merge: pending first, oversize item after (order kept).
+                    p.items.extend(solo.items);
+                    p.lanes += solo.lanes;
+                    p
+                }
+                None => solo,
+            });
+        }
+        if self.current.lanes + item.a.len() > self.max_lanes {
+            let done = self.take();
+            self.current.lanes = item.a.len();
+            self.current.items.push(item);
+            return done;
+        }
+        self.current.lanes += item.a.len();
+        self.current.items.push(item);
+        if self.current.lanes == self.max_lanes {
+            return self.take();
+        }
+        None
+    }
+
+    /// Flush whatever has accumulated (deadline expiry).
+    pub fn take(&mut self) -> Option<Batch> {
+        if self.current.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.current))
+        }
+    }
+
+    pub fn pending_lanes(&self) -> usize {
+        self.current.lanes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(id: u64, n: usize) -> BatchItem {
+        BatchItem {
+            request_id: id,
+            a: vec![id as f32; n],
+            b: vec![1.0; n],
+        }
+    }
+
+    #[test]
+    fn accumulates_until_budget() {
+        let mut asm = BatchAssembler::new(10);
+        assert!(asm.push(item(1, 4)).is_none());
+        assert!(asm.push(item(2, 4)).is_none());
+        assert_eq!(asm.pending_lanes(), 8);
+        // 8 + 4 > 10 → flush the first two, start fresh with the third.
+        let b = asm.push(item(3, 4)).unwrap();
+        assert_eq!(b.lanes, 8);
+        assert_eq!(b.items.len(), 2);
+        assert_eq!(asm.pending_lanes(), 4);
+    }
+
+    #[test]
+    fn exact_fill_flushes() {
+        let mut asm = BatchAssembler::new(8);
+        assert!(asm.push(item(1, 4)).is_none());
+        let b = asm.push(item(2, 4)).unwrap();
+        assert_eq!(b.lanes, 8);
+        assert_eq!(asm.pending_lanes(), 0);
+    }
+
+    #[test]
+    fn oversize_request_emitted_with_pending() {
+        let mut asm = BatchAssembler::new(8);
+        assert!(asm.push(item(1, 3)).is_none());
+        let b = asm.push(item(2, 20)).unwrap();
+        assert_eq!(b.lanes, 23);
+        assert_eq!(b.items.len(), 2);
+        assert_eq!(b.items[0].request_id, 1, "order preserved");
+        assert_eq!(asm.pending_lanes(), 0);
+    }
+
+    #[test]
+    fn take_drains() {
+        let mut asm = BatchAssembler::new(100);
+        assert!(asm.take().is_none());
+        asm.push(item(1, 5));
+        let b = asm.take().unwrap();
+        assert_eq!(b.lanes, 5);
+        assert!(asm.take().is_none());
+    }
+
+    #[test]
+    fn flatten_split_roundtrip() {
+        let mut batch = Batch::default();
+        for (id, n) in [(10u64, 3usize), (11, 1), (12, 5)] {
+            batch.items.push(item(id, n));
+            batch.lanes += n;
+        }
+        let (a, b) = batch.flatten();
+        assert_eq!(a.len(), 9);
+        assert_eq!(b.len(), 9);
+        // Identity "result": split must route lanes back by request.
+        let parts = batch.split(&a);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], (10, vec![10.0; 3]));
+        assert_eq!(parts[1], (11, vec![11.0; 1]));
+        assert_eq!(parts[2], (12, vec![12.0; 5]));
+    }
+
+    #[test]
+    #[should_panic(expected = "result length mismatch")]
+    fn split_length_mismatch_panics() {
+        let mut batch = Batch::default();
+        batch.items.push(item(1, 2));
+        batch.lanes = 2;
+        let _ = batch.split(&[1.0]);
+    }
+}

@@ -1,0 +1,103 @@
+//! The division service: a batched request coordinator in plain threads
+//! (no async runtime is vendored — see DESIGN.md §1).
+//!
+//! Architecture (vLLM-router-like, scaled to an arithmetic service):
+//!
+//! ```text
+//!  clients ──submit(Vec<f32>,Vec<f32>)──► bounded queue
+//!                                            │ (backpressure: Busy)
+//!                                       batcher thread
+//!                                            │ coalesce ≤ max_batch,
+//!                                            │ flush on max_wait
+//!                                       work queue ──► worker pool
+//!                                                        │ backend:
+//!                                                        │  Native (bit-exact
+//!                                                        │  Taylor/ILM datapath)
+//!                                                        │  or PJRT (AOT artifact)
+//!                                       per-request response channels
+//! ```
+//!
+//! * [`batcher`] — pure batch-assembly logic (coalesce/split), testable
+//!   without threads;
+//! * [`worker`] — the backend trait and its Native/PJRT implementations;
+//! * [`service`] — the running system: threads, channels, metrics,
+//!   shutdown, fault containment (a panicking backend fails the batch,
+//!   not the service).
+
+pub mod batcher;
+pub mod service;
+pub mod worker;
+
+pub use batcher::{Batch, BatchAssembler};
+pub use service::{DivisionService, MetricsSnapshot, ServiceConfig, SubmitError, Ticket};
+pub use worker::{Backend, BackendChoice, NativeBackend};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn end_to_end_native_service() {
+        let svc = DivisionService::start(
+            ServiceConfig {
+                workers: 2,
+                max_batch: 64,
+                max_wait: Duration::from_millis(2),
+                queue_capacity: 128,
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let a: Vec<f32> = (1..=40).map(|i| i as f32).collect();
+        let b: Vec<f32> = (1..=40).map(|i| (i % 7 + 1) as f32).collect();
+        let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+        for i in 0..a.len() {
+            let want = a[i] / b[i];
+            assert!(
+                (out[i] - want).abs() <= want.abs() * 1e-6,
+                "lane {i}: {} vs {want}",
+                out[i]
+            );
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.lanes, 40);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_batch_together() {
+        let svc = DivisionService::start(
+            ServiceConfig {
+                workers: 1,
+                max_batch: 256,
+                max_wait: Duration::from_millis(5),
+                queue_capacity: 512,
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let tickets: Vec<Ticket> = (0..16)
+            .map(|i| {
+                svc.submit(vec![i as f32 + 1.0; 8], vec![2.0; 8]).unwrap()
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let out = t.wait().unwrap();
+            assert_eq!(out.len(), 8);
+            assert_eq!(out[0], (i as f32 + 1.0) / 2.0);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 16);
+        // Coalescing must have produced fewer backend batches than requests.
+        assert!(m.batches < 16, "batches = {}", m.batches);
+        svc.shutdown();
+    }
+}

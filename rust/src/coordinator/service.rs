@@ -1,0 +1,486 @@
+//! The running division service: batcher thread + worker pool + metrics.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batch, BatchAssembler, BatchItem};
+use super::worker::BackendChoice;
+use crate::util::stats::Summary;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads (each with its own backend instance).
+    pub workers: usize,
+    /// Max lanes coalesced into one backend batch.
+    pub max_batch: usize,
+    /// Max time a request waits for co-batching before flush.
+    pub max_wait: Duration,
+    /// Bounded submission queue (backpressure beyond this depth).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 1024,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 4096,
+        }
+    }
+}
+
+/// Submission failure modes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full — backpressure; retry later.
+    Busy,
+    /// Service is shutting down.
+    Closed,
+    /// Operand vectors disagree in length or are empty.
+    BadRequest(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "service closed"),
+            SubmitError::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+impl std::error::Error for SubmitError {}
+
+/// Response handle for one submitted request.
+pub struct Ticket {
+    rx: Receiver<Result<Vec<f32>, String>>,
+    submitted: Instant,
+    latency_sink: Arc<Mutex<Summary>>,
+}
+
+impl Ticket {
+    /// Block until the quotient lanes arrive.
+    pub fn wait(self) -> Result<Vec<f32>, String> {
+        let out = self
+            .rx
+            .recv()
+            .map_err(|_| "worker dropped the response channel".to_string())?;
+        let dt = self.submitted.elapsed().as_secs_f64();
+        if let Ok(mut s) = self.latency_sink.lock() {
+            s.push(dt);
+        }
+        out
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<Vec<f32>, String>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+struct Submission {
+    item: BatchItem,
+    responder: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Counters shared across threads.
+#[derive(Default)]
+struct Metrics {
+    requests: AtomicU64,
+    lanes: AtomicU64,
+    batches: AtomicU64,
+    failures: AtomicU64,
+    rejected: AtomicU64,
+    queue_depth: AtomicUsize,
+}
+
+/// A point-in-time metrics snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub lanes: u64,
+    pub batches: u64,
+    pub failures: u64,
+    pub rejected: u64,
+    pub queue_depth: usize,
+    /// End-to-end latency stats over completed `wait()`s (seconds).
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+    pub latency_mean: f64,
+    pub latency_count: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean lanes per backend batch (coalescing effectiveness).
+    pub fn mean_batch_lanes(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.lanes as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The running service.
+pub struct DivisionService {
+    tx: Option<SyncSender<Submission>>,
+    next_id: AtomicU64,
+    metrics: Arc<Metrics>,
+    latency: Arc<Mutex<Summary>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl DivisionService {
+    /// Start the batcher thread and `cfg.workers` worker threads.
+    pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> anyhow::Result<Self> {
+        assert!(cfg.workers > 0 && cfg.max_batch > 0);
+        let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
+        let (work_tx, work_rx) = mpsc::channel::<(Batch, Vec<Sender<Result<Vec<f32>, String>>>)>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let metrics = Arc::new(Metrics::default());
+        let latency = Arc::new(Mutex::new(Summary::keeping_samples()));
+
+        // Batcher thread: coalesce submissions.
+        let m = Arc::clone(&metrics);
+        let max_wait = cfg.max_wait;
+        let max_batch = cfg.max_batch;
+        let batcher = std::thread::Builder::new()
+            .name("tsdiv-batcher".into())
+            .spawn(move || {
+                let mut asm = BatchAssembler::new(max_batch);
+                let mut responders: Vec<Sender<Result<Vec<f32>, String>>> = Vec::new();
+                // Adaptive batching (§Perf): coalesce everything already
+                // queued, but flush the moment the queue runs dry instead
+                // of waiting out max_wait — a closed-loop client set would
+                // otherwise stall the pipeline for max_wait per batch.
+                // max_wait still bounds accumulation under steady trickle.
+                let flush =
+                    |asm: &mut BatchAssembler,
+                     responders: &mut Vec<Sender<Result<Vec<f32>, String>>>| {
+                        if let Some(batch) = asm.take() {
+                            let rs = std::mem::take(responders);
+                            m.batches.fetch_add(1, Ordering::Relaxed);
+                            let _ = work_tx.send((batch, rs));
+                        }
+                    };
+                'outer: loop {
+                    // Block for the first submission of a batch window.
+                    let sub = match rx.recv_timeout(Duration::from_millis(100)) {
+                        Ok(s) => s,
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    };
+                    m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    responders.push(sub.responder);
+                    if let Some(batch) = asm.push(sub.item) {
+                        let (done_rs, keep) =
+                            split_responders(std::mem::take(&mut responders), batch.items.len());
+                        responders = keep;
+                        m.batches.fetch_add(1, Ordering::Relaxed);
+                        let _ = work_tx.send((batch, done_rs));
+                    }
+                    // Drain whatever is queued right now, up to max_wait.
+                    let deadline = Instant::now() + max_wait;
+                    loop {
+                        match rx.try_recv() {
+                            Ok(sub) => {
+                                m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                                responders.push(sub.responder);
+                                if let Some(batch) = asm.push(sub.item) {
+                                    let (done_rs, keep) = split_responders(
+                                        std::mem::take(&mut responders),
+                                        batch.items.len(),
+                                    );
+                                    responders = keep;
+                                    m.batches.fetch_add(1, Ordering::Relaxed);
+                                    let _ = work_tx.send((batch, done_rs));
+                                }
+                                if Instant::now() >= deadline {
+                                    flush(&mut asm, &mut responders);
+                                    break;
+                                }
+                            }
+                            Err(std::sync::mpsc::TryRecvError::Empty) => {
+                                // Queue dry: ship what we have immediately.
+                                flush(&mut asm, &mut responders);
+                                break;
+                            }
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                flush(&mut asm, &mut responders);
+                                break 'outer;
+                            }
+                        }
+                    }
+                }
+                // Shutdown: drain any pending work.
+                flush(&mut asm, &mut responders);
+                        })?;
+
+        // Worker pool.
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers {
+            let work_rx = Arc::clone(&work_rx);
+            let m = Arc::clone(&metrics);
+            let choice = backend;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("tsdiv-worker-{wid}"))
+                    .spawn(move || {
+                        let mut backend = match choice.build() {
+                            Ok(b) => b,
+                            Err(e) => {
+                                crate::log_error!("worker {wid}: backend init failed: {e}");
+                                return;
+                            }
+                        };
+                        loop {
+                            let job = {
+                                let guard = work_rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            let (batch, responders) = match job {
+                                Ok(j) => j,
+                                Err(_) => break, // batcher gone
+                            };
+                            let (a, b) = batch.flatten();
+                            let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                backend.divide_batch(&a, &b)
+                            }));
+                            match result {
+                                Ok(Ok(flat)) => {
+                                    for ((_, lanes), r) in
+                                        batch.split(&flat).into_iter().zip(responders)
+                                    {
+                                        let _ = r.send(Ok(lanes));
+                                    }
+                                }
+                                Ok(Err(e)) => {
+                                    m.failures.fetch_add(1, Ordering::Relaxed);
+                                    for r in responders {
+                                        let _ = r.send(Err(format!("backend error: {e}")));
+                                    }
+                                }
+                                Err(_) => {
+                                    m.failures.fetch_add(1, Ordering::Relaxed);
+                                    for r in responders {
+                                        let _ =
+                                            r.send(Err("backend panicked on batch".to_string()));
+                                    }
+                                }
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        Ok(Self {
+            tx: Some(tx),
+            next_id: AtomicU64::new(0),
+            metrics,
+            latency,
+            batcher: Some(batcher),
+            workers,
+        })
+    }
+
+    /// Submit a request (vector of divisions). Non-blocking; `Busy` under
+    /// backpressure.
+    pub fn submit(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Ticket, SubmitError> {
+        if a.len() != b.len() {
+            return Err(SubmitError::BadRequest(format!(
+                "operand length mismatch: {} vs {}",
+                a.len(),
+                b.len()
+            )));
+        }
+        if a.is_empty() {
+            return Err(SubmitError::BadRequest("empty request".into()));
+        }
+        let lanes = a.len() as u64;
+        let (rtx, rrx) = mpsc::channel();
+        let sub = Submission {
+            item: BatchItem {
+                request_id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                a,
+                b,
+            },
+            responder: rtx,
+        };
+        let tx = self.tx.as_ref().ok_or(SubmitError::Closed)?;
+        match tx.try_send(sub) {
+            Ok(()) => {
+                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                self.metrics.lanes.fetch_add(lanes, Ordering::Relaxed);
+                Ok(Ticket {
+                    rx: rrx,
+                    submitted: Instant::now(),
+                    latency_sink: Arc::clone(&self.latency),
+                })
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Busy)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Submit and wait.
+    pub fn divide_blocking(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
+        let t = self.submit(a, b).map_err(|e| e.to_string())?;
+        t.wait()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let lat = self.latency.lock().unwrap();
+        let count = lat.count();
+        MetricsSnapshot {
+            requests: self.metrics.requests.load(Ordering::Relaxed),
+            lanes: self.metrics.lanes.load(Ordering::Relaxed),
+            batches: self.metrics.batches.load(Ordering::Relaxed),
+            failures: self.metrics.failures.load(Ordering::Relaxed),
+            rejected: self.metrics.rejected.load(Ordering::Relaxed),
+            queue_depth: self.metrics.queue_depth.load(Ordering::Relaxed),
+            latency_p50: if count > 0 { lat.percentile(0.5) } else { 0.0 },
+            latency_p99: if count > 0 { lat.percentile(0.99) } else { 0.0 },
+            latency_mean: if count > 0 { lat.mean() } else { 0.0 },
+            latency_count: count,
+        }
+    }
+
+    /// Graceful shutdown: close the queue, join all threads.
+    pub fn shutdown(mut self) {
+        self.tx = None; // disconnect → batcher drains and exits
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for DivisionService {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// First `n` responders for the flushed batch; the rest stay pending.
+fn split_responders(
+    mut rs: Vec<Sender<Result<Vec<f32>, String>>>,
+    n: usize,
+) -> (
+    Vec<Sender<Result<Vec<f32>, String>>>,
+    Vec<Sender<Result<Vec<f32>, String>>>,
+) {
+    let keep = rs.split_off(n.min(rs.len()));
+    (rs, keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc(workers: usize, max_batch: usize, cap: usize) -> DivisionService {
+        DivisionService::start(
+            ServiceConfig {
+                workers,
+                max_batch,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: cap,
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bad_requests_rejected() {
+        let s = svc(1, 64, 16);
+        assert!(matches!(
+            s.submit(vec![1.0], vec![1.0, 2.0]),
+            Err(SubmitError::BadRequest(_))
+        ));
+        assert!(matches!(
+            s.submit(vec![], vec![]),
+            Err(SubmitError::BadRequest(_))
+        ));
+        s.shutdown();
+    }
+
+    #[test]
+    fn latency_metrics_populate() {
+        let s = svc(1, 64, 64);
+        for _ in 0..5 {
+            let t = s.submit(vec![9.0; 4], vec![3.0; 4]).unwrap();
+            assert_eq!(t.wait().unwrap(), vec![3.0; 4]);
+        }
+        let m = s.metrics();
+        assert_eq!(m.latency_count, 5);
+        assert!(m.latency_p50 > 0.0);
+        assert!(m.latency_p99 >= m.latency_p50);
+        assert!(m.mean_batch_lanes() >= 4.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn backpressure_returns_busy() {
+        // Tiny queue + many submissions without waiting → at least one Busy
+        // (the batcher drains fast, so spam it).
+        let s = svc(1, 1 << 20, 2);
+        let mut busy = 0;
+        let mut tickets = Vec::new();
+        for _ in 0..2000 {
+            match s.submit(vec![1.0; 64], vec![2.0; 64]) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::Busy) => busy += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        // Drain what was accepted.
+        for t in tickets {
+            let _ = t.wait();
+        }
+        assert!(busy > 0, "expected backpressure");
+        assert_eq!(s.metrics().rejected, busy);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_after_inflight_work() {
+        let s = svc(4, 128, 512);
+        let tickets: Vec<_> = (0..64)
+            .map(|i| s.submit(vec![i as f32; 16], vec![4.0; 16]).unwrap())
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap()[0], i as f32 / 4.0);
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn drop_without_shutdown_joins_cleanly() {
+        let s = svc(2, 64, 64);
+        let t = s.submit(vec![8.0; 8], vec![2.0; 8]).unwrap();
+        assert_eq!(t.wait().unwrap(), vec![4.0; 8]);
+        drop(s); // must not hang or panic
+    }
+}

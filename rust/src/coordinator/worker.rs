@@ -1,0 +1,142 @@
+//! Worker backends: the computation a worker thread runs per batch.
+//!
+//! Two implementations:
+//! * [`NativeBackend`] — the bit-exact Rust Taylor/ILM datapath
+//!   ([`crate::divider::TaylorDivider`]);
+//! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifact executed via
+//!   PJRT ([`crate::runtime::DivideEngine`]).
+//!
+//! Backends are created *inside* each worker thread by a factory (PJRT
+//! handles are not `Send`), so [`BackendChoice`] is the serializable
+//! configuration and [`Backend`] the per-thread instance.
+
+use anyhow::Result;
+
+use crate::divider::{BackendKind, Divider, TaylorDivider};
+use crate::taylor::TaylorConfig;
+
+/// What a worker does with one flattened batch.
+pub trait Backend {
+    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>>;
+    fn describe(&self) -> String;
+}
+
+/// Serializable backend configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Bit-exact Rust datapath (Taylor order, optional ILM budget —
+    /// `None` = exact multiplies).
+    Native {
+        order: u32,
+        ilm_iterations: Option<u32>,
+    },
+    /// AOT artifact through PJRT (requires `make artifacts`).
+    Pjrt,
+}
+
+impl BackendChoice {
+    /// Instantiate inside the worker thread.
+    pub fn build(&self) -> Result<Box<dyn Backend>> {
+        match *self {
+            BackendChoice::Native {
+                order,
+                ilm_iterations,
+            } => Ok(Box::new(NativeBackend::new(order, ilm_iterations))),
+            BackendChoice::Pjrt => Ok(Box::new(PjrtBackend::load_default()?)),
+        }
+    }
+}
+
+/// The bit-exact Rust datapath as a service backend.
+pub struct NativeBackend {
+    divider: TaylorDivider,
+}
+
+impl NativeBackend {
+    pub fn new(order: u32, ilm_iterations: Option<u32>) -> Self {
+        let cfg = TaylorConfig {
+            order,
+            ..TaylorConfig::paper_default(60)
+        };
+        let kind = match ilm_iterations {
+            None => BackendKind::Exact,
+            Some(iterations) => BackendKind::Ilm { iterations },
+        };
+        Self {
+            divider: TaylorDivider::new(cfg, kind),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        Ok(a.iter()
+            .zip(b)
+            .map(|(&x, &y)| self.divider.div_f32(x, y))
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("native[{}]", self.divider.name())
+    }
+}
+
+/// The PJRT artifact as a service backend.
+pub struct PjrtBackend {
+    engine: crate::runtime::DivideEngine,
+}
+
+impl PjrtBackend {
+    pub fn load_default() -> Result<Self> {
+        Ok(Self {
+            engine: crate::runtime::DivideEngine::load_default()?,
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        self.engine.divide(a, b)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "pjrt[{} batches {:?}]",
+            self.engine.platform(),
+            self.engine.batch_sizes()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_divides() {
+        let mut be = NativeBackend::new(5, None);
+        let out = be
+            .divide_batch(&[6.0, 1.0, -8.0], &[2.0, 4.0, 2.0])
+            .unwrap();
+        assert_eq!(out, vec![3.0, 0.25, -4.0]);
+        assert!(be.describe().starts_with("native["));
+    }
+
+    #[test]
+    fn native_backend_with_ilm_budget() {
+        let mut be = NativeBackend::new(5, Some(8));
+        let out = be.divide_batch(&[10.0], &[5.0]).unwrap();
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn choice_builds_native() {
+        let be = BackendChoice::Native {
+            order: 3,
+            ilm_iterations: Some(4),
+        }
+        .build()
+        .unwrap();
+        assert!(be.describe().contains("ilm4"));
+    }
+}

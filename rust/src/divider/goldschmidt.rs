@@ -1,0 +1,160 @@
+//! Goldschmidt multiplicative divider (baseline).
+//!
+//! Both numerator and denominator are repeatedly multiplied by a
+//! correction factor `F_k = 2 − D_k`; `D_k → 1`, `N_k → a/b`. Unlike
+//! Newton–Raphson, the two multiplies of one iteration are *independent*
+//! (pipelinable), which is why real FPUs often prefer it — a useful
+//! contrast for the paper's parallel-squaring argument.
+
+use super::{prepare, Divider, Prepared};
+use crate::fp::{round_pack, Format, Rounding};
+use crate::pla::SegmentTable;
+use crate::powering::{ExactMul, Multiplier};
+
+/// Goldschmidt divider on the shared Q2.F datapath.
+pub struct GoldschmidtDivider {
+    pub iterations: u32,
+    pub frac_bits: u32,
+    pub table: SegmentTable,
+    backend: ExactMul,
+    /// Independent multiply pairs issued (cost model).
+    pub mul_pairs: u64,
+}
+
+impl GoldschmidtDivider {
+    pub fn new(iterations: u32, frac_bits: u32, table: SegmentTable) -> Self {
+        assert_eq!(table.frac_bits, frac_bits);
+        Self {
+            iterations,
+            frac_bits,
+            table,
+            backend: ExactMul::default(),
+            mul_pairs: 0,
+        }
+    }
+
+    /// Same seed/datapath as the other units; 3 iterations ≥ 53 bits.
+    pub fn paper_default() -> Self {
+        let bounds = crate::pla::derive_segments(5, 53);
+        Self::new(3, 60, SegmentTable::build(&bounds, 60))
+    }
+
+    /// Significand quotient `sig_a/sig_b`, both Q2.F in [1,2); returns Q2.F.
+    pub fn quotient_fixed(&mut self, sig_a: u64, sig_b: u64) -> u64 {
+        let f = self.frac_bits;
+        let two = 2u64 << f;
+        // Seed: N0 = a·y0, D0 = b·y0.
+        let (y0, _) = self.table.seed(sig_b);
+        let mut n = (self.backend.mul(sig_a, y0) >> f) as u64;
+        let mut d = (self.backend.mul(sig_b, y0) >> f) as u64;
+        for _ in 0..self.iterations {
+            let fk = two.saturating_sub(d);
+            // The two multiplies are independent — one "pair" per cycle.
+            n = (self.backend.mul(n, fk) >> f) as u64;
+            d = (self.backend.mul(d, fk) >> f) as u64;
+            self.mul_pairs += 1;
+        }
+        n
+    }
+}
+
+impl Divider for GoldschmidtDivider {
+    fn name(&self) -> String {
+        format!(
+            "goldschmidt(k={}, segs={}, F={})",
+            self.iterations,
+            self.table.num_segments(),
+            self.frac_bits
+        )
+    }
+
+    fn div_bits(&mut self, a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64 {
+        let f = self.frac_bits;
+        assert!(f >= fmt.frac_bits);
+        match prepare(a_bits, b_bits, fmt) {
+            Prepared::Done(bits) => bits,
+            Prepared::Divide {
+                sign,
+                exp,
+                sig_a,
+                sig_b,
+            } => {
+                let a = sig_a << (f - fmt.frac_bits);
+                let b = sig_b << (f - fmt.frac_bits);
+                let q = self.quotient_fixed(a, b); // in (0.5, 2) Q2.F
+                round_pack(sign, exp, q as u128, f, true, fmt, rm).0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::ulp_diff_f32;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn converges_to_quotient() {
+        let mut d = GoldschmidtDivider::paper_default();
+        let f = 60u32;
+        let scale = (1u128 << f) as f64;
+        for (a, b) in [(1.5, 1.25), (1.0, 1.9999), (1.7, 1.1), (1.0, 1.0)] {
+            let qa = (a * scale) as u64;
+            let qb = (b * scale) as u64;
+            let got = d.quotient_fixed(qa, qb) as f64 / scale;
+            assert!(
+                (got - a / b).abs() < 2f64.powi(-50),
+                "{a}/{b}: got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_division_correct_to_1ulp() {
+        let mut d = GoldschmidtDivider::paper_default();
+        let mut r = Rng::new(17);
+        for _ in 0..20_000 {
+            let a = r.f32_log_uniform(-30, 30);
+            let b = r.f32_log_uniform(-30, 30);
+            let ours = d.div_f32(a, b);
+            let ulps = ulp_diff_f32(ours, a / b).unwrap();
+            assert!(ulps <= 1, "{a:e}/{b:e}: {ulps} ulps");
+        }
+    }
+
+    #[test]
+    fn specials_handled() {
+        let mut d = GoldschmidtDivider::paper_default();
+        assert!(d.div_f32(f32::INFINITY, f32::INFINITY).is_nan());
+        assert_eq!(d.div_f32(5.0, 0.0), f32::INFINITY);
+        assert_eq!(d.div_f32(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn mul_pair_count_model() {
+        let mut d = GoldschmidtDivider::paper_default();
+        let _ = d.div_f32(1.0, 3.0);
+        assert_eq!(d.mul_pairs, 3);
+    }
+
+    #[test]
+    fn iteration_sweep_improves_error() {
+        let bounds = crate::pla::derive_segments(5, 53);
+        let scale = (1u128 << 60) as f64;
+        let mut prev = f64::INFINITY;
+        for k in 0..4 {
+            let mut d = GoldschmidtDivider::new(k, 60, SegmentTable::build(&bounds, 60));
+            let mut worst: f64 = 0.0;
+            for i in 0..500 {
+                let a = 1.0 + i as f64 / 500.0;
+                let b = 1.0 + ((i * 7) % 500) as f64 / 500.0;
+                let got = d.quotient_fixed((a * scale) as u64, (b * scale) as u64) as f64 / scale;
+                worst = worst.max((got - a / b).abs());
+            }
+            assert!(worst <= prev, "error rose at k={k}");
+            prev = worst;
+        }
+        assert!(prev < 2f64.powi(-50));
+    }
+}

@@ -1,0 +1,188 @@
+//! Restoring digit-recurrence division — the exactly-rounded gold
+//! reference (and a latency baseline: one quotient bit per cycle).
+//!
+//! The significand quotient is computed as an integer division with two
+//! extra bits (guard + round position) and an exact sticky from the
+//! remainder, so [`crate::fp::round_pack`] produces the correctly rounded
+//! result in every rounding mode. Every accuracy table in the benches is
+//! measured against this unit.
+
+use super::{prepare, Divider, Prepared};
+use crate::fp::{round_pack, Format, Rounding};
+
+/// Digit-recurrence divider (restoring; 1 bit/cycle latency model).
+#[derive(Debug, Default, Clone)]
+pub struct LongDivider {
+    /// Total significand-datapath cycles consumed (latency model).
+    pub cycles: u64,
+}
+
+impl LongDivider {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cycles one division's significand path takes: `frac_bits + 3`
+    /// quotient bits (hidden + frac + guard + round margin).
+    pub const fn cycles_per_div(fmt: Format) -> u64 {
+        (fmt.frac_bits + 3) as u64
+    }
+}
+
+impl Divider for LongDivider {
+    fn name(&self) -> String {
+        "longdiv(restoring)".to_string()
+    }
+
+    fn div_bits(&mut self, a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64 {
+        match prepare(a_bits, b_bits, fmt) {
+            Prepared::Done(bits) => bits,
+            Prepared::Divide {
+                sign,
+                exp,
+                sig_a,
+                sig_b,
+            } => {
+                self.cycles += Self::cycles_per_div(fmt);
+                // q = (sig_a << (frac_bits + 2)) / sig_b gives a quotient
+                // in (2^(frac_bits+1), 2^(frac_bits+3)): at least
+                // frac_bits + 2 significant bits — hidden + frac + guard —
+                // with the remainder providing the exact sticky.
+                let shift = fmt.frac_bits + 2;
+                let num = (sig_a as u128) << shift;
+                let den = sig_b as u128;
+                let q = num / den;
+                let rem = num % den;
+                round_pack(
+                    sign,
+                    exp - shift as i32 + fmt.frac_bits as i32,
+                    q,
+                    fmt.frac_bits,
+                    rem != 0,
+                    fmt,
+                    rm,
+                )
+                .0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{F32, F64};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exactly_matches_hardware_f32_randomized() {
+        let mut d = LongDivider::new();
+        let mut r = Rng::new(99);
+        for _ in 0..50_000 {
+            let a = f32::from_bits(r.next_u32());
+            let b = f32::from_bits(r.next_u32());
+            let ours = d.div_f32(a, b);
+            let hw = a / b;
+            if hw.is_nan() {
+                assert!(ours.is_nan(), "{a:?}/{b:?}");
+            } else {
+                assert_eq!(ours.to_bits(), hw.to_bits(), "{a:?}/{b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn exactly_matches_hardware_f64_randomized() {
+        let mut d = LongDivider::new();
+        let mut r = Rng::new(100);
+        for _ in 0..30_000 {
+            let a = f64::from_bits(r.next_u64());
+            let b = f64::from_bits(r.next_u64());
+            let ours = d.div_f64(a, b);
+            let hw = a / b;
+            if hw.is_nan() {
+                assert!(ours.is_nan());
+            } else {
+                assert_eq!(ours.to_bits(), hw.to_bits(), "{a:?}/{b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn directed_rounding_modes_match_bracketing() {
+        // RTZ result ≤ RNE result magnitude; RUP ≥ exact; RDN ≤ exact.
+        let mut d = LongDivider::new();
+        let cases = [(1.0f32, 3.0f32), (2.0, 7.0), (10.0, 9.0), (-1.0, 3.0)];
+        for (a, b) in cases {
+            let q_rtz = f32::from_bits(d.div_bits(
+                a.to_bits() as u64,
+                b.to_bits() as u64,
+                F32,
+                Rounding::TowardZero,
+            ) as u32);
+            let q_rup = f32::from_bits(d.div_bits(
+                a.to_bits() as u64,
+                b.to_bits() as u64,
+                F32,
+                Rounding::TowardPositive,
+            ) as u32);
+            let q_rdn = f32::from_bits(d.div_bits(
+                a.to_bits() as u64,
+                b.to_bits() as u64,
+                F32,
+                Rounding::TowardNegative,
+            ) as u32);
+            let exact = a as f64 / b as f64;
+            assert!(q_rtz.abs() as f64 <= exact.abs() + 1e-12, "{a}/{b} RTZ");
+            assert!((q_rup as f64) >= exact, "{a}/{b} RUP {q_rup} < {exact}");
+            assert!((q_rdn as f64) <= exact, "{a}/{b} RDN");
+            assert!(q_rdn <= q_rup);
+        }
+    }
+
+    #[test]
+    fn exact_division_inexact_flag_via_sticky() {
+        // 1/4 is exact: directed modes agree with RNE.
+        let mut d = LongDivider::new();
+        for rm in [
+            Rounding::NearestEven,
+            Rounding::TowardZero,
+            Rounding::TowardPositive,
+            Rounding::TowardNegative,
+        ] {
+            let q = d.div_bits(1.0f32.to_bits() as u64, 4.0f32.to_bits() as u64, F32, rm);
+            assert_eq!(f32::from_bits(q as u32), 0.25);
+        }
+    }
+
+    #[test]
+    fn cycle_model_accumulates() {
+        let mut d = LongDivider::new();
+        assert_eq!(d.cycles, 0);
+        let _ = d.div_f32(1.0, 3.0);
+        assert_eq!(d.cycles, LongDivider::cycles_per_div(F32));
+        let _ = d.div_f64(1.0, 3.0);
+        assert_eq!(
+            d.cycles,
+            LongDivider::cycles_per_div(F32) + LongDivider::cycles_per_div(F64)
+        );
+        // Specials don't use the significand path.
+        let _ = d.div_f32(1.0, 0.0);
+        assert_eq!(
+            d.cycles,
+            LongDivider::cycles_per_div(F32) + LongDivider::cycles_per_div(F64)
+        );
+    }
+
+    #[test]
+    fn bf16_and_f16_supported() {
+        use crate::fp::{BF16, F16};
+        let mut d = LongDivider::new();
+        // 1.5 / 0.5 = 3.0 in f16: 1.5=0x3E00, 0.5=0x3800, 3.0=0x4200.
+        let q = d.div_bits(0x3E00, 0x3800, F16, Rounding::NearestEven);
+        assert_eq!(q, 0x4200);
+        // In bf16: 1.5=0x3FC0, 0.5=0x3F00, 3.0=0x4040.
+        let q = d.div_bits(0x3FC0, 0x3F00, BF16, Rounding::NearestEven);
+        assert_eq!(q, 0x4040);
+    }
+}

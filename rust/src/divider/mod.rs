@@ -1,0 +1,471 @@
+//! The complete floating-point division unit (paper Fig 7) and the
+//! baseline dividers it is evaluated against.
+//!
+//! Division is split, as in any IEEE divider, into
+//!
+//! 1. a **special-value path** (NaN/Inf/zero/subnormal handling, sign
+//!    and exponent arithmetic) shared by every algorithm, and
+//! 2. a **significand path** `sig_a / sig_b` with both operands
+//!    normalized to `[1, 2)` — this is where the paper's contribution
+//!    (PLA seed → Taylor series → ILM powering) lives.
+//!
+//! Baselines:
+//! * [`longdiv`] — restoring digit recurrence; exactly rounded, the gold
+//!   reference for every accuracy table;
+//! * [`newton`] — Newton–Raphson reciprocal iteration (paper ref [5]);
+//! * [`goldschmidt`] — Goldschmidt multiplicative division.
+
+pub mod goldschmidt;
+pub mod longdiv;
+pub mod newton;
+
+use crate::fp::{round_pack, unpack, Class, Format, Rounding};
+use crate::powering::{ExactMul, IlmBackend, Multiplier, OpCounts};
+use crate::taylor::{reciprocal_fast, TaylorConfig};
+
+/// A divider over raw bit patterns of an arbitrary format.
+pub trait Divider {
+    fn name(&self) -> String;
+
+    /// Divide `a / b`, both given as `fmt` bit patterns (in the low bits
+    /// of `u64`), returning the quotient pattern.
+    fn div_bits(&mut self, a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64;
+
+    /// f32 convenience.
+    fn div_f32(&mut self, a: f32, b: f32) -> f32 {
+        let q = self.div_bits(
+            a.to_bits() as u64,
+            b.to_bits() as u64,
+            crate::fp::F32,
+            Rounding::NearestEven,
+        );
+        f32::from_bits(q as u32)
+    }
+
+    /// f64 convenience.
+    fn div_f64(&mut self, a: f64, b: f64) -> f64 {
+        let q = self.div_bits(a.to_bits(), b.to_bits(), crate::fp::F64, Rounding::NearestEven);
+        f64::from_bits(q)
+    }
+}
+
+/// Outcome of the shared special-value path.
+pub enum Prepared {
+    /// The result is already decided (special operands).
+    Done(u64),
+    /// Proceed to the significand datapath.
+    Divide {
+        sign: bool,
+        /// Unbiased result exponent before normalization.
+        exp: i32,
+        /// Dividend significand, normalized, hidden bit at `frac_bits`.
+        sig_a: u64,
+        /// Divisor significand, normalized, hidden bit at `frac_bits`.
+        sig_b: u64,
+    },
+}
+
+/// IEEE-754 special handling shared by all dividers:
+/// NaN propagation, `0/0` and `Inf/Inf` → NaN, `x/0` → Inf, `0/x` → 0,
+/// `Inf/x` → Inf, `x/Inf` → 0; subnormals are normalized into the
+/// extended exponent range.
+pub fn prepare(a_bits: u64, b_bits: u64, fmt: Format) -> Prepared {
+    // §Perf fast path: both operands normal (the overwhelmingly common
+    // case) — skip classification and subnormal renormalization.
+    let ea = fmt.exp_field(a_bits);
+    let eb = fmt.exp_field(b_bits);
+    let emax = fmt.exp_max();
+    if ea != 0 && ea != emax && eb != 0 && eb != emax {
+        return Prepared::Divide {
+            sign: fmt.sign_field(a_bits) ^ fmt.sign_field(b_bits),
+            exp: ea as i32 - eb as i32,
+            sig_a: fmt.frac_field(a_bits) | (1 << fmt.frac_bits),
+            sig_b: fmt.frac_field(b_bits) | (1 << fmt.frac_bits),
+        };
+    }
+    let a = unpack(a_bits, fmt);
+    let b = unpack(b_bits, fmt);
+    let sign = a.sign ^ b.sign;
+    use Class::*;
+    match (a.class, b.class) {
+        (NaN, _) | (_, NaN) => Prepared::Done(fmt.nan()),
+        (Inf, Inf) => Prepared::Done(fmt.nan()),
+        (Zero, Zero) => Prepared::Done(fmt.nan()),
+        (Inf, _) => Prepared::Done(fmt.inf(sign)),
+        (_, Inf) => Prepared::Done(fmt.zero(sign)),
+        (Zero, _) => Prepared::Done(fmt.zero(sign)),
+        (_, Zero) => Prepared::Done(fmt.inf(sign)),
+        _ => Prepared::Divide {
+            sign,
+            exp: a.exp - b.exp,
+            sig_a: a.sig,
+            sig_b: b.sig,
+        },
+    }
+}
+
+/// Which multiplier implementation drives the Taylor datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Exact fixed-point multiplies (isolates Taylor/PLA error).
+    Exact,
+    /// Iterative Logarithmic Multiplier with a correction budget.
+    Ilm { iterations: u32 },
+}
+
+enum BackendImpl {
+    Exact(ExactMul),
+    Ilm(IlmBackend),
+}
+
+/// The paper's divider: PLA seed + Taylor series + ILM/squaring powering
+/// unit, wrapped in the IEEE special/exponent path (Fig 7).
+pub struct TaylorDivider {
+    pub cfg: TaylorConfig,
+    backend: BackendImpl,
+    kind: BackendKind,
+}
+
+impl TaylorDivider {
+    /// General constructor.
+    pub fn new(cfg: TaylorConfig, backend: BackendKind) -> Self {
+        let be = match backend {
+            BackendKind::Exact => BackendImpl::Exact(ExactMul::default()),
+            BackendKind::Ilm { iterations } => BackendImpl::Ilm(IlmBackend::new(iterations)),
+        };
+        Self {
+            cfg,
+            backend: be,
+            kind: backend,
+        }
+    }
+
+    /// The paper's headline configuration (Table-I segments, n = 5) on a
+    /// 60-bit datapath with exact multiplies.
+    pub fn paper_exact() -> Self {
+        Self::new(TaylorConfig::paper_default(60), BackendKind::Exact)
+    }
+
+    /// Paper configuration with the ILM backend at a correction budget.
+    pub fn paper_ilm(iterations: u32) -> Self {
+        Self::new(
+            TaylorConfig::paper_default(60),
+            BackendKind::Ilm { iterations },
+        )
+    }
+
+    /// Multiplier op counters accumulated so far.
+    pub fn op_counts(&self) -> OpCounts {
+        match &self.backend {
+            BackendImpl::Exact(m) => m.counts(),
+            BackendImpl::Ilm(m) => m.counts(),
+        }
+    }
+
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
+    }
+}
+
+impl Divider for TaylorDivider {
+    fn name(&self) -> String {
+        let be = match self.kind {
+            BackendKind::Exact => "exact".to_string(),
+            BackendKind::Ilm { iterations } => format!("ilm{iterations}"),
+        };
+        format!(
+            "taylor(n={}, segs={}, F={}, {be})",
+            self.cfg.order,
+            self.cfg.table.num_segments(),
+            self.cfg.frac_bits
+        )
+    }
+
+    fn div_bits(&mut self, a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64 {
+        let f = self.cfg.frac_bits;
+        assert!(
+            f >= fmt.frac_bits,
+            "datapath narrower than format significand"
+        );
+        match prepare(a_bits, b_bits, fmt) {
+            Prepared::Done(bits) => bits,
+            Prepared::Divide {
+                sign,
+                exp,
+                sig_a,
+                sig_b,
+            } => {
+                // Map divisor significand into the Q2.F datapath.
+                let x = sig_b << (f - fmt.frac_bits);
+                // §Perf: monomorphized, allocation-free reciprocal.
+                let recip = match &mut self.backend {
+                    BackendImpl::Exact(m) => reciprocal_fast(&self.cfg, m, x),
+                    BackendImpl::Ilm(m) => reciprocal_fast(&self.cfg, m, x),
+                };
+                // Quotient significand: sig_a · recip, fraction width
+                // fmt.frac_bits + F. Value in (0.5, 2].
+                let q = sig_a as u128 * recip as u128;
+                // The reciprocal is itself inexact below ~2^-53; mark
+                // sticky so directed rounding never pretends exactness
+                // unless the product is *exactly* representable anyway
+                // (handled by longdiv users; the Taylor unit is inherently
+                // approximate — matching the paper).
+                round_pack(sign, exp, q, fmt.frac_bits + f, false, fmt, rm).0
+            }
+        }
+    }
+}
+
+/// Convenience: collect one divider of every kind for comparison tables.
+pub fn all_dividers() -> Vec<Box<dyn Divider>> {
+    vec![
+        Box::new(TaylorDivider::paper_exact()),
+        Box::new(TaylorDivider::paper_ilm(8)),
+        Box::new(newton::NewtonDivider::paper_default()),
+        Box::new(goldschmidt::GoldschmidtDivider::paper_default()),
+        Box::new(longdiv::LongDivider::new()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check_that;
+    use crate::fp::{ulp_diff_f32, ulp_diff_f64, F32};
+    use crate::util::check::{forall, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn specials_table() {
+        let mut d = TaylorDivider::paper_exact();
+        // NaN propagation
+        assert!(d.div_f32(f32::NAN, 1.0).is_nan());
+        assert!(d.div_f32(1.0, f32::NAN).is_nan());
+        // inf/inf, 0/0
+        assert!(d.div_f32(f32::INFINITY, f32::INFINITY).is_nan());
+        assert!(d.div_f32(0.0, 0.0).is_nan());
+        // x/0 → signed inf
+        assert_eq!(d.div_f32(1.0, 0.0), f32::INFINITY);
+        assert_eq!(d.div_f32(-1.0, 0.0), f32::NEG_INFINITY);
+        assert_eq!(d.div_f32(1.0, -0.0), f32::NEG_INFINITY);
+        // 0/x → signed zero
+        assert_eq!(d.div_f32(0.0, -2.0).to_bits(), (-0.0f32).to_bits());
+        // inf/x, x/inf
+        assert_eq!(d.div_f32(f32::INFINITY, -2.0), f32::NEG_INFINITY);
+        assert_eq!(d.div_f32(3.0, f32::NEG_INFINITY).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn exact_quotients() {
+        let mut d = TaylorDivider::paper_exact();
+        assert_eq!(d.div_f32(6.0, 2.0), 3.0);
+        assert_eq!(d.div_f32(1.0, 2.0), 0.5);
+        assert_eq!(d.div_f32(-7.5, 2.5), -3.0);
+        assert_eq!(d.div_f32(1.0, 1.0), 1.0);
+        // f64 sits at the datapath's precision edge (53-bit reciprocal):
+        // exact dyadic quotients can land one ulp low.
+        let q = d.div_f64(10.0, 4.0);
+        assert!(ulp_diff_f64(q, 2.5).unwrap() <= 1, "10/4 = {q}");
+    }
+
+    #[test]
+    fn f32_matches_hardware_division_randomized() {
+        // With the exact backend the reciprocal is good to ~2^-53, far
+        // below f32's half-ulp (2^-25 relative): results must be
+        // correctly rounded (division has no exact-tie cases).
+        let mut d = TaylorDivider::paper_exact();
+        let mut r = Rng::new(2024);
+        let mut checked = 0;
+        while checked < 30_000 {
+            let a = f32::from_bits(r.next_u32());
+            let b = f32::from_bits(r.next_u32());
+            if !a.is_finite() || !b.is_finite() {
+                continue;
+            }
+            checked += 1;
+            let ours = d.div_f32(a, b);
+            let hw = a / b;
+            if hw.is_nan() {
+                assert!(ours.is_nan(), "{a:?}/{b:?}");
+            } else {
+                let ulps = ulp_diff_f32(ours, hw).unwrap();
+                assert!(ulps <= 1, "{a:?}/{b:?}: {ours:?} vs {hw:?} ({ulps} ulps)");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_correctly_rounded_rate_is_high() {
+        let mut d = TaylorDivider::paper_exact();
+        let mut r = Rng::new(7);
+        let mut exact = 0u64;
+        let total = 20_000u64;
+        for _ in 0..total {
+            let a = r.f32_log_uniform(-20, 20);
+            let b = r.f32_log_uniform(-20, 20);
+            let ours = d.div_f32(a, b);
+            if ours.to_bits() == (a / b).to_bits() {
+                exact += 1;
+            }
+        }
+        let rate = exact as f64 / total as f64;
+        assert!(rate > 0.9999, "correctly-rounded rate {rate}");
+    }
+
+    #[test]
+    fn f64_within_2_ulp_randomized() {
+        // 53-bit reciprocal precision (the paper's target) leaves up to
+        // ~1 ulp of f64 slack; assert ≤ 2 ulps defensively.
+        let mut d = TaylorDivider::paper_exact();
+        let mut r = Rng::new(11);
+        for _ in 0..20_000 {
+            let a = r.f64_log_uniform(-300, 300);
+            let b = r.f64_log_uniform(-300, 300);
+            let ours = d.div_f64(a, b);
+            let hw = a / b;
+            let ulps = ulp_diff_f64(ours, hw).unwrap();
+            assert!(ulps <= 2, "{a:e}/{b:e}: {ulps} ulps");
+        }
+    }
+
+    #[test]
+    fn subnormal_operands_and_results() {
+        let mut d = TaylorDivider::paper_exact();
+        // Subnormal / normal. NB: subnormal-by-power-of-two quotients
+        // land exactly on rounding ties (odd significand / 2), where the
+        // reciprocal's 2^-53 defect can flip the tie — allow 1 ulp.
+        let a = f32::from_bits(0x0000_0123);
+        let ours = d.div_f32(a, 2.0);
+        assert!(ulp_diff_f32(ours, a / 2.0).unwrap() <= 1);
+        // Normal / large → subnormal result
+        let ours = d.div_f32(1.0e-38, 1.0e7);
+        let hw = 1.0e-38f32 / 1.0e7;
+        assert!(ulp_diff_f32(ours, hw).unwrap() <= 1, "{ours:e} vs {hw:e}");
+        // Subnormal / subnormal
+        let a = f32::from_bits(0x0000_7FFF);
+        let b = f32::from_bits(0x0000_0011);
+        let ours = d.div_f32(a, b);
+        assert!(ulp_diff_f32(ours, a / b).unwrap() <= 1);
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        let mut d = TaylorDivider::paper_exact();
+        assert_eq!(d.div_f32(f32::MAX, 0.5), f32::INFINITY);
+        assert_eq!(d.div_f32(f32::MAX, -0.5), f32::NEG_INFINITY);
+        let tiny = d.div_f32(f32::from_bits(1), 2.0);
+        assert_eq!(tiny, f32::from_bits(1) / 2.0); // rounds to 0 or stays subnormal
+    }
+
+    #[test]
+    fn ilm_backend_accuracy_improves_with_iterations() {
+        let mut r = Rng::new(5);
+        let mut worst_by_iter = Vec::new();
+        for iters in [2u32, 4, 8, 16] {
+            let mut d = TaylorDivider::paper_ilm(iters);
+            let mut worst = 0u64;
+            let mut rr = Rng::new(5);
+            let _ = &mut r;
+            for _ in 0..2_000 {
+                let a = rr.f32_log_uniform(-10, 10);
+                let b = rr.f32_log_uniform(-10, 10);
+                let ours = d.div_f32(a, b);
+                let ulps = ulp_diff_f32(ours, a / b).unwrap_or(u64::MAX);
+                worst = worst.max(ulps);
+            }
+            worst_by_iter.push(worst);
+        }
+        for w in worst_by_iter.windows(2) {
+            assert!(w[1] <= w[0], "worst ulp rose with ILM iterations: {worst_by_iter:?}");
+        }
+        // Plenty of corrections → f32-exactness territory.
+        assert!(*worst_by_iter.last().unwrap() <= 1);
+    }
+
+    #[test]
+    fn property_sign_and_magnitude_structure() {
+        forall(Config::named("division sign/exponent structure").cases(300), |d| {
+            let a = d.f64_range(0.5, 100.0);
+            let b = d.f64_range(0.5, 100.0);
+            let mut div = TaylorDivider::paper_exact();
+            let q_pp = div.div_f64(a, b);
+            let q_np = div.div_f64(-a, b);
+            let q_pn = div.div_f64(a, -b);
+            let q_nn = div.div_f64(-a, -b);
+            check_that!(q_pp > 0.0 && q_nn > 0.0);
+            check_that!(q_np < 0.0 && q_pn < 0.0);
+            check_that!(q_pp == -q_np && q_pp == -q_pn && q_pp == q_nn);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_scaling_by_powers_of_two_is_exact() {
+        // a / 2^k should track exponent arithmetic exactly.
+        forall(Config::named("power-of-two divisors exact").cases(300), |d| {
+            let a = f32::from_bits((d.u32() % 0x7F00_0000).max(0x0080_0000));
+            let k = d.range_i64(-10, 10) as i32;
+            let b = 2f32.powi(k);
+            let mut div = TaylorDivider::paper_exact();
+            let got = div.div_f32(a, b);
+            let want = a / b;
+            check_that!(got.to_bits() == want.to_bits(), "{a:?} / 2^{k}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prepare_classifies_all_special_pairs() {
+        let specials = [
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(1),
+        ];
+        for &a in &specials {
+            for &b in &specials {
+                let hw = a / b;
+                match prepare(a.to_bits() as u64, b.to_bits() as u64, F32) {
+                    Prepared::Done(bits) => {
+                        let got = f32::from_bits(bits as u32);
+                        if hw.is_nan() {
+                            assert!(got.is_nan(), "{a:?}/{b:?}");
+                        } else {
+                            assert_eq!(got.to_bits(), hw.to_bits(), "{a:?}/{b:?}");
+                        }
+                    }
+                    Prepared::Divide { .. } => {
+                        assert!(
+                            hw.is_finite() && hw != 0.0 || hw.is_infinite() || hw == 0.0,
+                            "datapath case must be a real division: {a:?}/{b:?}"
+                        );
+                        assert!(a.is_finite() && b.is_finite() && a != 0.0 && b != 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn op_counts_via_diagnostic_engine() {
+        // div_bits uses the non-counting hot path (§Perf step 3); op
+        // accounting lives in the diagnostic reciprocal_fixed path.
+        use crate::powering::{ExactMul, Multiplier};
+        let cfg = crate::taylor::TaylorConfig::paper_default(60);
+        let mut be = ExactMul::default();
+        let r = crate::taylor::reciprocal_fixed(&cfg, &mut be, 3u64 << 59); // 1.5
+        assert!(r.counts.muls > 0 && r.counts.squares > 0);
+        assert_eq!(be.counts().muls, r.counts.muls);
+    }
+
+    #[test]
+    fn all_dividers_agree_on_simple_case() {
+        for mut d in all_dividers() {
+            let q = d.div_f32(84.0, 2.0);
+            assert_eq!(q, 42.0, "{}", d.name());
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Newton–Raphson reciprocal divider (the paper's §1 / ref [5] baseline).
+//!
+//! `y_{k+1} = y_k · (2 − x·y_k)` converges quadratically: each iteration
+//! doubles the number of correct bits. It shares the PLA seed table and
+//! fixed-point datapath with the Taylor unit so the comparison isolates
+//! the *refinement algorithm*, not the seed quality.
+//!
+//! Hardware note (for the cost model): one NR iteration needs **two
+//! dependent full multiplies** (x·y, then y·t), whereas one Taylor
+//! "cycle" of the Fig-6 powering unit performs a multiply and a square
+//! in parallel and the squarer is half the hardware — this is exactly
+//! the tradeoff the paper argues (§5–6).
+
+use super::{prepare, Divider, Prepared};
+use crate::fp::{round_pack, Format, Rounding};
+use crate::pla::SegmentTable;
+use crate::powering::{ExactMul, Multiplier};
+
+/// Newton–Raphson divider on the shared Q2.F datapath.
+pub struct NewtonDivider {
+    /// NR iterations (each doubles precision).
+    pub iterations: u32,
+    /// Datapath fraction bits.
+    pub frac_bits: u32,
+    /// Seed table (same PLA unit as the Taylor divider).
+    pub table: SegmentTable,
+    backend: ExactMul,
+    /// Dependent multiply count (cost model).
+    pub dependent_muls: u64,
+}
+
+impl NewtonDivider {
+    pub fn new(iterations: u32, frac_bits: u32, table: SegmentTable) -> Self {
+        assert_eq!(table.frac_bits, frac_bits);
+        Self {
+            iterations,
+            frac_bits,
+            table,
+            backend: ExactMul::default(),
+            dependent_muls: 0,
+        }
+    }
+
+    /// Paper-comparable default: same Table-I seed (8 segments), 60-bit
+    /// datapath. The seed is good to ~2^-9 (m_max ≈ 2.2e-3 ⇒ relative
+    /// error < 2^-8.8), so 3 quadratic iterations exceed 53 bits.
+    pub fn paper_default() -> Self {
+        let bounds = crate::pla::derive_segments(5, 53);
+        Self::new(3, 60, SegmentTable::build(&bounds, 60))
+    }
+
+    /// Reciprocal of `x ∈ [1,2)` in Q2.F.
+    pub fn reciprocal_fixed(&mut self, x: u64) -> u64 {
+        let f = self.frac_bits;
+        let two = 2u64 << f;
+        let (mut y, _) = self.table.seed(x);
+        for _ in 0..self.iterations {
+            // t = 2 − x·y  (x·y ≤ ~1 + ε so the subtraction is safe).
+            let xy = (self.backend.mul(x, y) >> f) as u64;
+            let t = two.saturating_sub(xy);
+            y = (self.backend.mul(y, t) >> f) as u64;
+            self.dependent_muls += 2;
+        }
+        y
+    }
+}
+
+impl Divider for NewtonDivider {
+    fn name(&self) -> String {
+        format!(
+            "newton(k={}, segs={}, F={})",
+            self.iterations,
+            self.table.num_segments(),
+            self.frac_bits
+        )
+    }
+
+    fn div_bits(&mut self, a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64 {
+        let f = self.frac_bits;
+        assert!(f >= fmt.frac_bits);
+        match prepare(a_bits, b_bits, fmt) {
+            Prepared::Done(bits) => bits,
+            Prepared::Divide {
+                sign,
+                exp,
+                sig_a,
+                sig_b,
+            } => {
+                let x = sig_b << (f - fmt.frac_bits);
+                let recip = self.reciprocal_fixed(x);
+                let q = sig_a as u128 * recip as u128;
+                round_pack(sign, exp, q, fmt.frac_bits + f, false, fmt, rm).0
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::ulp_diff_f32;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quadratic_convergence_bits_double() {
+        // Measure worst-case reciprocal error across [1,2) per iteration
+        // count; correct bits must roughly double until the datapath floor.
+        let mut worst_bits = Vec::new();
+        for k in 0..4 {
+            let bounds = crate::pla::derive_segments(5, 53);
+            let mut d = NewtonDivider::new(k, 60, SegmentTable::build(&bounds, 60));
+            let mut worst: f64 = 0.0;
+            let scale = (1u128 << 60) as f64;
+            for i in 0..1000 {
+                let xf = 1.0 + (i as f64 + 0.5) / 1000.0;
+                let x = (xf * scale) as u64;
+                let got = d.reciprocal_fixed(x) as f64 / scale;
+                worst = worst.max((got - 1.0 / xf).abs());
+            }
+            worst_bits.push(-worst.log2());
+        }
+        // Seed alone ≥ 8 bits; then ~double per iteration.
+        assert!(worst_bits[0] >= 8.0, "{worst_bits:?}");
+        assert!(worst_bits[1] >= worst_bits[0] * 1.8, "{worst_bits:?}");
+        assert!(worst_bits[2] >= worst_bits[1] * 1.8, "{worst_bits:?}");
+        assert!(worst_bits[3] >= 53.0, "{worst_bits:?}");
+    }
+
+    #[test]
+    fn f32_division_correct_to_1ulp() {
+        let mut d = NewtonDivider::paper_default();
+        let mut r = Rng::new(3);
+        for _ in 0..20_000 {
+            let a = r.f32_log_uniform(-30, 30);
+            let b = r.f32_log_uniform(-30, 30);
+            let ours = d.div_f32(a, b);
+            let ulps = ulp_diff_f32(ours, a / b).unwrap();
+            assert!(ulps <= 1, "{a:e}/{b:e}: {ulps} ulps");
+        }
+    }
+
+    #[test]
+    fn specials_handled() {
+        let mut d = NewtonDivider::paper_default();
+        assert!(d.div_f32(0.0, 0.0).is_nan());
+        assert_eq!(d.div_f32(-4.0, 0.0), f32::NEG_INFINITY);
+        assert_eq!(d.div_f32(4.0, f32::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn dependent_mul_count_model() {
+        let mut d = NewtonDivider::paper_default();
+        let _ = d.div_f32(1.0, 3.0);
+        // 3 iterations × 2 dependent muls.
+        assert_eq!(d.dependent_muls, 6);
+    }
+}

@@ -1,0 +1,297 @@
+//! IEEE-754 binary format descriptors and bit-level pack/unpack.
+//!
+//! All bit patterns are carried in `u64` regardless of format width so
+//! one code path serves binary16/bfloat16/binary32/binary64.
+
+/// An IEEE-754 binary interchange format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Format {
+    /// Exponent field width in bits.
+    pub exp_bits: u32,
+    /// Fraction (trailing significand) field width in bits.
+    pub frac_bits: u32,
+}
+
+/// binary32 (f32).
+pub const F32: Format = Format {
+    exp_bits: 8,
+    frac_bits: 23,
+};
+
+/// binary64 (f64).
+pub const F64: Format = Format {
+    exp_bits: 11,
+    frac_bits: 52,
+};
+
+/// binary16 (half).
+pub const F16: Format = Format {
+    exp_bits: 5,
+    frac_bits: 10,
+};
+
+/// bfloat16.
+pub const BF16: Format = Format {
+    exp_bits: 8,
+    frac_bits: 7,
+};
+
+impl Format {
+    /// Total storage width (sign + exponent + fraction).
+    pub const fn width(&self) -> u32 {
+        1 + self.exp_bits + self.frac_bits
+    }
+
+    /// Exponent bias (2^(exp_bits-1) − 1).
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Maximum biased exponent value (all ones = Inf/NaN).
+    pub const fn exp_max(&self) -> u64 {
+        (1 << self.exp_bits) - 1
+    }
+
+    /// Largest unbiased exponent of a finite normal number.
+    pub const fn emax(&self) -> i32 {
+        self.bias()
+    }
+
+    /// Smallest unbiased exponent of a normal number.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Significand precision in bits (hidden bit + fraction).
+    pub const fn precision(&self) -> u32 {
+        self.frac_bits + 1
+    }
+
+    pub const fn sign_mask(&self) -> u64 {
+        1 << (self.width() - 1)
+    }
+
+    pub const fn frac_mask(&self) -> u64 {
+        (1 << self.frac_bits) - 1
+    }
+
+    pub const fn exp_field(&self, bits: u64) -> u64 {
+        (bits >> self.frac_bits) & self.exp_max()
+    }
+
+    pub const fn frac_field(&self, bits: u64) -> u64 {
+        bits & self.frac_mask()
+    }
+
+    pub const fn sign_field(&self, bits: u64) -> bool {
+        bits & self.sign_mask() != 0
+    }
+
+    /// Assemble raw fields into a bit pattern.
+    pub const fn assemble(&self, sign: bool, biased_exp: u64, frac: u64) -> u64 {
+        ((sign as u64) << (self.width() - 1))
+            | ((biased_exp & self.exp_max()) << self.frac_bits)
+            | (frac & self.frac_mask())
+    }
+
+    /// Positive infinity bit pattern.
+    pub const fn inf(&self, sign: bool) -> u64 {
+        self.assemble(sign, self.exp_max(), 0)
+    }
+
+    /// Canonical quiet NaN.
+    pub const fn nan(&self) -> u64 {
+        self.assemble(false, self.exp_max(), 1 << (self.frac_bits - 1))
+    }
+
+    /// Signed zero.
+    pub const fn zero(&self, sign: bool) -> u64 {
+        self.assemble(sign, 0, 0)
+    }
+
+    /// Largest finite magnitude with the given sign.
+    pub const fn max_finite(&self, sign: bool) -> u64 {
+        self.assemble(sign, self.exp_max() - 1, self.frac_mask())
+    }
+
+    /// Mask covering the whole storage width.
+    pub const fn width_mask(&self) -> u64 {
+        if self.width() == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width()) - 1
+        }
+    }
+}
+
+/// Classification of a value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    Zero,
+    Subnormal,
+    Normal,
+    Inf,
+    NaN,
+}
+
+/// A decoded value. For `Normal` and `Subnormal`, the significand is
+/// normalized so that bit `frac_bits` is the leading 1 — i.e. the real
+/// value is `(-1)^sign · (sig / 2^frac_bits) · 2^exp` with
+/// `sig / 2^frac_bits ∈ [1, 2)`. Subnormals get an `exp` below `emin`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unpacked {
+    pub sign: bool,
+    pub class: Class,
+    /// Unbiased exponent of the normalized significand (Normal/Subnormal).
+    pub exp: i32,
+    /// Normalized significand with the hidden bit explicit at position
+    /// `frac_bits` (Normal/Subnormal only; 0 otherwise).
+    pub sig: u64,
+}
+
+/// Decode a bit pattern.
+pub fn unpack(bits: u64, fmt: Format) -> Unpacked {
+    let bits = bits & fmt.width_mask();
+    let sign = fmt.sign_field(bits);
+    let e = fmt.exp_field(bits);
+    let f = fmt.frac_field(bits);
+    if e == fmt.exp_max() {
+        return Unpacked {
+            sign,
+            class: if f == 0 { Class::Inf } else { Class::NaN },
+            exp: 0,
+            sig: 0,
+        };
+    }
+    if e == 0 {
+        if f == 0 {
+            return Unpacked {
+                sign,
+                class: Class::Zero,
+                exp: 0,
+                sig: 0,
+            };
+        }
+        // Subnormal: value = f/2^frac_bits · 2^emin. Normalize.
+        let shift = fmt.frac_bits as i32 - (63 - f.leading_zeros() as i32);
+        debug_assert!(shift > 0);
+        return Unpacked {
+            sign,
+            class: Class::Subnormal,
+            exp: fmt.emin() - shift,
+            sig: f << shift,
+        };
+    }
+    Unpacked {
+        sign,
+        class: Class::Normal,
+        exp: e as i32 - fmt.bias(),
+        sig: f | (1 << fmt.frac_bits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_constants() {
+        assert_eq!(F32.width(), 32);
+        assert_eq!(F32.bias(), 127);
+        assert_eq!(F32.emin(), -126);
+        assert_eq!(F32.emax(), 127);
+        assert_eq!(F32.precision(), 24);
+        assert_eq!(F32.sign_mask(), 0x8000_0000);
+    }
+
+    #[test]
+    fn f64_constants() {
+        assert_eq!(F64.width(), 64);
+        assert_eq!(F64.bias(), 1023);
+        assert_eq!(F64.emin(), -1022);
+        assert_eq!(F64.precision(), 53);
+        assert_eq!(F64.width_mask(), u64::MAX);
+    }
+
+    #[test]
+    fn special_patterns_match_std() {
+        assert_eq!(F32.inf(false), f32::INFINITY.to_bits() as u64);
+        assert_eq!(F32.inf(true), f32::NEG_INFINITY.to_bits() as u64);
+        assert_eq!(F32.zero(true), (-0.0f32).to_bits() as u64);
+        assert_eq!(F32.max_finite(false), f32::MAX.to_bits() as u64);
+        assert_eq!(F64.inf(false), f64::INFINITY.to_bits());
+        assert_eq!(F64.max_finite(true), f64::MIN.to_bits());
+        // Our canonical NaN is *a* NaN per std
+        assert!(f32::from_bits(F32.nan() as u32).is_nan());
+    }
+
+    #[test]
+    fn unpack_one() {
+        let u = unpack(1.0f32.to_bits() as u64, F32);
+        assert_eq!(u.class, Class::Normal);
+        assert_eq!(u.exp, 0);
+        assert_eq!(u.sig, 1 << 23);
+        assert!(!u.sign);
+    }
+
+    #[test]
+    fn unpack_normals_f32() {
+        for (x, exp) in [(2.0f32, 1), (0.5, -1), (1.5, 0), (3.0, 1), (0.75, -1)] {
+            let u = unpack(x.to_bits() as u64, F32);
+            assert_eq!(u.class, Class::Normal, "{x}");
+            assert_eq!(u.exp, exp, "{x}");
+            let val = u.sig as f64 / (1u64 << 23) as f64 * 2f64.powi(u.exp);
+            assert_eq!(val as f32, x);
+        }
+    }
+
+    #[test]
+    fn unpack_negative() {
+        let u = unpack((-2.5f32).to_bits() as u64, F32);
+        assert!(u.sign);
+        assert_eq!(u.exp, 1);
+        let val = u.sig as f64 / (1u64 << 23) as f64 * 2.0;
+        assert_eq!(val, 2.5);
+    }
+
+    #[test]
+    fn unpack_specials() {
+        assert_eq!(unpack(F32.inf(false), F32).class, Class::Inf);
+        assert_eq!(unpack(F32.nan(), F32).class, Class::NaN);
+        assert_eq!(unpack(0, F32).class, Class::Zero);
+        assert_eq!(unpack(F32.sign_mask(), F32).class, Class::Zero);
+    }
+
+    #[test]
+    fn unpack_subnormal_normalizes() {
+        // Smallest positive subnormal f32: 2^-149.
+        let u = unpack(1u64, F32);
+        assert_eq!(u.class, Class::Subnormal);
+        assert_eq!(u.sig, 1 << 23); // normalized hidden-one form
+        assert_eq!(u.exp, -149);
+        // A mid-range subnormal.
+        let x = f32::from_bits(0x0040_0000); // 2^-127
+        let u = unpack(x.to_bits() as u64, F32);
+        assert_eq!(u.exp, -127);
+        assert_eq!(u.sig, 1 << 23);
+    }
+
+    #[test]
+    fn unpack_f16_and_bf16() {
+        // 1.0 in f16 = 0x3C00; in bf16 = 0x3F80.
+        let u = unpack(0x3C00, F16);
+        assert_eq!((u.class, u.exp, u.sig), (Class::Normal, 0, 1 << 10));
+        let u = unpack(0x3F80, BF16);
+        assert_eq!((u.class, u.exp, u.sig), (Class::Normal, 0, 1 << 7));
+    }
+
+    #[test]
+    fn assemble_roundtrip() {
+        for bits in [0u64, 1, 0x3F80_0000, 0x7F80_0000, 0xFF80_0001, 0x1234_5678] {
+            let s = F32.sign_field(bits);
+            let e = F32.exp_field(bits);
+            let f = F32.frac_field(bits);
+            assert_eq!(F32.assemble(s, e, f), bits);
+        }
+    }
+}

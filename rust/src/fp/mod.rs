@@ -1,0 +1,72 @@
+//! Soft IEEE-754 floating point.
+//!
+//! The divider (Fig 7 of the paper) needs full control over the
+//! sign/exponent/significand datapath, so the crate carries its own
+//! format-generic soft-float layer instead of relying on host FP:
+//!
+//! * [`format`] — format descriptors (binary16/bfloat16/binary32/binary64),
+//!   field extraction, classification, normalization of subnormals;
+//! * [`round`] — rounding of extended-precision results into a format
+//!   under the four IEEE rounding-direction attributes;
+//! * [`ops`] — correctly-rounded soft multiply, ULP metrics, neighbour
+//!   stepping.
+//!
+//! All bit patterns travel as `u64` independent of format width.
+
+pub mod format;
+pub mod ops;
+pub mod round;
+
+pub use format::{unpack, Class, Format, Unpacked, BF16, F16, F32, F64};
+pub use ops::{next_down, next_up, ordered_key, rel_err, soft_mul, ulp_diff, ulp_diff_f32, ulp_diff_f64};
+pub use round::{round_pack, Rounding};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reexports_work_together() {
+        // unpack → round_pack identity on a normal f32
+        let x = 1.75f32;
+        let u = unpack(x.to_bits() as u64, F32);
+        assert_eq!(u.class, Class::Normal);
+        let (bits, inexact) = round_pack(
+            u.sign,
+            u.exp,
+            u.sig as u128,
+            F32.frac_bits,
+            false,
+            F32,
+            Rounding::NearestEven,
+        );
+        assert!(!inexact);
+        assert_eq!(bits as u32, x.to_bits());
+    }
+
+    #[test]
+    fn unpack_pack_roundtrip_randomized_all_finite() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(31);
+        let mut done = 0;
+        while done < 50_000 {
+            let x = f32::from_bits(r.next_u32());
+            if !x.is_finite() || x == 0.0 {
+                continue;
+            }
+            done += 1;
+            let u = unpack(x.to_bits() as u64, F32);
+            let (bits, inexact) = round_pack(
+                u.sign,
+                u.exp,
+                u.sig as u128,
+                F32.frac_bits,
+                false,
+                F32,
+                Rounding::NearestEven,
+            );
+            assert!(!inexact, "roundtrip of representable value inexact: {x:?}");
+            assert_eq!(bits as u32, x.to_bits(), "roundtrip failed for {x:?}");
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Soft-float operations and ULP metrics.
+//!
+//! Only what the divider pipeline and the analysis layer need: an exact
+//! soft multiply (used for the final `a · (1/b)` stage and the
+//! Newton/Goldschmidt baselines), ULP distance, and neighbour stepping.
+
+use super::format::{unpack, Class, Format};
+use super::round::{round_pack, Rounding};
+
+/// IEEE-754 multiplication in an arbitrary format, correctly rounded.
+pub fn soft_mul(a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64 {
+    let a = unpack(a_bits, fmt);
+    let b = unpack(b_bits, fmt);
+    let sign = a.sign ^ b.sign;
+    use Class::*;
+    match (a.class, b.class) {
+        (NaN, _) | (_, NaN) => fmt.nan(),
+        (Inf, Zero) | (Zero, Inf) => fmt.nan(),
+        (Inf, _) | (_, Inf) => fmt.inf(sign),
+        (Zero, _) | (_, Zero) => fmt.zero(sign),
+        _ => {
+            // Both (sub)normal, normalized sig in [1,2) at frac_bits.
+            let prod = a.sig as u128 * b.sig as u128; // [1,4) at 2·frac_bits
+            let exp = a.exp + b.exp;
+            round_pack(sign, exp, prod, 2 * fmt.frac_bits, false, fmt, rm).0
+        }
+    }
+}
+
+/// The order-preserving integer key for a floating-point pattern:
+/// monotone in the real ordering (−Inf .. +Inf), used for ULP distances.
+/// NaN has no key.
+pub fn ordered_key(bits: u64, fmt: Format) -> Option<i128> {
+    let u = unpack(bits, fmt);
+    if u.class == Class::NaN {
+        return None;
+    }
+    let bits = bits & fmt.width_mask();
+    let mag = (bits & !fmt.sign_mask()) as i128;
+    Some(if fmt.sign_field(bits) { -mag } else { mag })
+}
+
+/// Distance in ULPs between two same-format patterns (absolute value of
+/// the difference of their ordered keys). `None` if either is NaN.
+/// Note ±0 are 0 ULPs apart.
+pub fn ulp_diff(a_bits: u64, b_bits: u64, fmt: Format) -> Option<u64> {
+    let ka = ordered_key(a_bits, fmt)?;
+    let kb = ordered_key(b_bits, fmt)?;
+    Some((ka - kb).unsigned_abs() as u64)
+}
+
+/// ULP distance for f32 values (convenience).
+pub fn ulp_diff_f32(a: f32, b: f32) -> Option<u64> {
+    ulp_diff(a.to_bits() as u64, b.to_bits() as u64, super::format::F32)
+}
+
+/// ULP distance for f64 values (convenience).
+pub fn ulp_diff_f64(a: f64, b: f64) -> Option<u64> {
+    ulp_diff(a.to_bits(), b.to_bits(), super::format::F64)
+}
+
+/// The next representable value toward +Inf (finite inputs; saturates at Inf).
+pub fn next_up(bits: u64, fmt: Format) -> u64 {
+    let u = unpack(bits, fmt);
+    match u.class {
+        Class::NaN => fmt.nan(),
+        Class::Inf => {
+            if u.sign {
+                fmt.max_finite(true)
+            } else {
+                bits
+            }
+        }
+        _ => {
+            let bits = bits & fmt.width_mask();
+            if bits == fmt.zero(true) {
+                // -0 → +smallest subnormal? IEEE nextUp(-0) = +min_subnormal
+                fmt.assemble(false, 0, 1)
+            } else if fmt.sign_field(bits) {
+                (bits - 1) & fmt.width_mask()
+            } else {
+                bits + 1
+            }
+        }
+    }
+}
+
+/// The next representable value toward −Inf.
+pub fn next_down(bits: u64, fmt: Format) -> u64 {
+    let u = unpack(bits, fmt);
+    match u.class {
+        Class::NaN => fmt.nan(),
+        Class::Inf => {
+            if u.sign {
+                bits
+            } else {
+                fmt.max_finite(false)
+            }
+        }
+        _ => {
+            let bits = bits & fmt.width_mask();
+            if bits == fmt.zero(false) {
+                fmt.assemble(true, 0, 1)
+            } else if fmt.sign_field(bits) {
+                bits + 1
+            } else {
+                bits - 1
+            }
+        }
+    }
+}
+
+/// Relative error |x − reference| / |reference| computed in f64,
+/// tolerant of zero references (returns absolute error then).
+pub fn rel_err(x: f64, reference: f64) -> f64 {
+    if reference == 0.0 {
+        x.abs()
+    } else {
+        ((x - reference) / reference).abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::format::{F32, F64};
+    use crate::util::rng::Rng;
+
+    fn mul32(a: f32, b: f32) -> f32 {
+        f32::from_bits(soft_mul(
+            a.to_bits() as u64,
+            b.to_bits() as u64,
+            F32,
+            Rounding::NearestEven,
+        ) as u32)
+    }
+
+    #[test]
+    fn mul_exact_cases() {
+        assert_eq!(mul32(2.0, 3.0), 6.0);
+        assert_eq!(mul32(-2.0, 3.0), -6.0);
+        assert_eq!(mul32(0.5, 0.5), 0.25);
+        assert_eq!(mul32(1.5, 1.5), 2.25);
+    }
+
+    #[test]
+    fn mul_specials() {
+        assert!(mul32(f32::NAN, 1.0).is_nan());
+        assert!(mul32(f32::INFINITY, 0.0).is_nan());
+        assert_eq!(mul32(f32::INFINITY, -2.0), f32::NEG_INFINITY);
+        assert_eq!(mul32(0.0, -3.0), -0.0);
+        assert!(mul32(0.0, -3.0).is_sign_negative());
+        assert_eq!(mul32(f32::MAX, 2.0), f32::INFINITY);
+    }
+
+    #[test]
+    fn mul_matches_hardware_randomized() {
+        let mut r = Rng::new(42);
+        for _ in 0..20_000 {
+            let a = f32::from_bits(r.next_u32());
+            let b = f32::from_bits(r.next_u32());
+            let ours = mul32(a, b);
+            let hw = a * b;
+            if hw.is_nan() {
+                assert!(ours.is_nan(), "{a:?} * {b:?}: expected NaN, got {ours:?}");
+            } else {
+                assert_eq!(
+                    ours.to_bits(),
+                    hw.to_bits(),
+                    "{a:?} * {b:?}: got {ours:?}, want {hw:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mul_subnormal_results_match_hardware() {
+        let mut r = Rng::new(7);
+        for _ in 0..20_000 {
+            // Small operands likely to underflow.
+            let a = f32::from_bits(r.next_u32() & 0x0FFF_FFFF);
+            let b = f32::from_bits(r.next_u32() & 0x0FFF_FFFF);
+            let ours = mul32(a, b);
+            let hw = a * b;
+            assert_eq!(ours.to_bits(), hw.to_bits(), "{a:e} * {b:e}");
+        }
+    }
+
+    #[test]
+    fn mul_f64_matches_hardware_randomized() {
+        let mut r = Rng::new(43);
+        for _ in 0..10_000 {
+            let a = f64::from_bits(r.next_u64());
+            let b = f64::from_bits(r.next_u64());
+            let ours = f64::from_bits(soft_mul(
+                a.to_bits(),
+                b.to_bits(),
+                F64,
+                Rounding::NearestEven,
+            ));
+            let hw = a * b;
+            if hw.is_nan() {
+                assert!(ours.is_nan());
+            } else {
+                assert_eq!(ours.to_bits(), hw.to_bits(), "{a:?} * {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ulp_diff_basics() {
+        assert_eq!(ulp_diff_f32(1.0, 1.0), Some(0));
+        assert_eq!(ulp_diff_f32(1.0, f32::from_bits(1.0f32.to_bits() + 1)), Some(1));
+        assert_eq!(ulp_diff_f32(0.0, -0.0), Some(0));
+        assert_eq!(ulp_diff_f32(f32::NAN, 1.0), None);
+        // Across zero: ±min_subnormal are 2 ulps apart.
+        let tiny = f32::from_bits(1);
+        assert_eq!(ulp_diff_f32(tiny, -tiny), Some(2));
+    }
+
+    #[test]
+    fn next_up_down_roundtrip() {
+        for x in [1.0f32, -1.0, 0.0, f32::MAX, f32::MIN_POSITIVE, -2.5e-40] {
+            let bits = x.to_bits() as u64;
+            let up = next_up(bits, F32);
+            assert_eq!(next_down(up, F32), bits, "x={x}");
+            let ux = f32::from_bits(up as u32);
+            assert!(ux > x, "next_up({x}) = {ux} not greater");
+        }
+    }
+
+    #[test]
+    fn next_up_saturates_at_inf() {
+        let inf = F32.inf(false);
+        assert_eq!(next_up(inf, F32), inf);
+        assert_eq!(next_up(F32.max_finite(false), F32), inf);
+    }
+
+    #[test]
+    fn ordered_key_monotone_randomized() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let a = f32::from_bits(r.next_u32());
+            let b = f32::from_bits(r.next_u32());
+            if a.is_nan() || b.is_nan() {
+                continue;
+            }
+            let ka = ordered_key(a.to_bits() as u64, F32).unwrap();
+            let kb = ordered_key(b.to_bits() as u64, F32).unwrap();
+            match a.partial_cmp(&b).unwrap() {
+                std::cmp::Ordering::Less => assert!(ka < kb || (a == b)),
+                std::cmp::Ordering::Greater => assert!(ka > kb || (a == b)),
+                std::cmp::Ordering::Equal => {
+                    // ±0 compare equal but keys both 0
+                    assert_eq!(ka, kb)
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rel_err_zero_reference() {
+        assert_eq!(rel_err(0.25, 0.0), 0.25);
+        assert_eq!(rel_err(1.01, 1.0), 0.010000000000000009);
+    }
+}

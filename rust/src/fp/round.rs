@@ -1,0 +1,329 @@
+//! Rounding of an extended-precision result into a storage format.
+//!
+//! The divider and multipliers produce a sign, an unbiased exponent and a
+//! significand carried in `u128` at some precision `q_frac_bits` (value =
+//! sig / 2^q_frac_bits · 2^exp). [`round_pack`] normalizes, rounds under
+//! the selected mode, and handles overflow to Inf and gradual underflow
+//! to subnormals/zero.
+
+use super::format::Format;
+
+/// IEEE-754 rounding-direction attributes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// roundTiesToEven (the default).
+    NearestEven,
+    /// roundTowardZero.
+    TowardZero,
+    /// roundTowardPositive.
+    TowardPositive,
+    /// roundTowardNegative.
+    TowardNegative,
+}
+
+impl Rounding {
+    /// Should a magnitude with the given (guard, sticky) round up?
+    /// `lsb_odd` is the parity of the kept LSB (for ties-to-even).
+    #[inline]
+    fn round_up(self, sign: bool, guard: bool, sticky: bool, lsb_odd: bool) -> bool {
+        match self {
+            Rounding::NearestEven => guard && (sticky || lsb_odd),
+            Rounding::TowardZero => false,
+            Rounding::TowardPositive => !sign && (guard || sticky),
+            Rounding::TowardNegative => sign && (guard || sticky),
+        }
+    }
+}
+
+/// Round and pack a finite non-zero magnitude.
+///
+/// * `sign` — sign of the result;
+/// * `exp` — unbiased exponent such that value = sig/2^q_frac_bits · 2^exp;
+/// * `sig` — extended significand, **must be non-zero**;
+/// * `q_frac_bits` — fractional bits in `sig`;
+/// * `sticky_in` — true if already-discarded lower bits were non-zero.
+///
+/// Returns the format's bit pattern (Inf on overflow, ±0/subnormal on
+/// underflow). The "inexact" status is returned alongside for tests.
+pub fn round_pack(
+    sign: bool,
+    exp: i32,
+    sig: u128,
+    q_frac_bits: u32,
+    sticky_in: bool,
+    fmt: Format,
+    rm: Rounding,
+) -> (u64, bool) {
+    assert!(sig != 0, "round_pack requires non-zero significand");
+    // Normalize: shift so the MSB of sig sits at position q_frac_bits
+    // (i.e. sig/2^q ∈ [1,2)).
+    let msb = 127 - sig.leading_zeros() as i32;
+    let mut exp = exp + (msb - q_frac_bits as i32);
+    // We want the significand normalized with its hidden bit at position
+    // `fmt.frac_bits`; the first dropped bit is the guard, everything
+    // lower ORs into sticky.
+    let shift = msb - fmt.frac_bits as i32; // bits to drop (may be ≤ 0)
+    let (mut kept, guard, mut sticky) = if shift > 0 {
+        let kept = (sig >> shift) as u64;
+        // All dropped bits at the top of one word: guard is its MSB,
+        // sticky any remaining bit (§Perf: one shift instead of building
+        // a mask).
+        let dropped = sig << (128 - shift as u32);
+        let guard = (dropped >> 127) == 1;
+        let sticky = sticky_in || (dropped << 1) != 0;
+        (kept, guard, sticky)
+    } else {
+        ((sig as u64) << (-shift) as u32, false, sticky_in)
+    };
+    debug_assert!(kept >> fmt.frac_bits == 1, "normalization failed");
+
+    // Gradual underflow: if exp < emin, shift right further into a
+    // subnormal representation before rounding.
+    if exp < fmt.emin() {
+        let deficit = (fmt.emin() - exp) as u32;
+        if deficit > fmt.frac_bits + 2 {
+            // Entire value below half the smallest subnormal (or equal —
+            // sticky decides). Round the tiny residue.
+            let up = match rm {
+                Rounding::NearestEven => false, // magnitude < 2^(emin-frac-1) tie impossible here
+                Rounding::TowardZero => false,
+                Rounding::TowardPositive => !sign,
+                Rounding::TowardNegative => sign,
+            };
+            let bits = if up {
+                fmt.assemble(sign, 0, 1)
+            } else {
+                fmt.zero(sign)
+            };
+            return (bits, true);
+        }
+        // Re-derive guard/sticky at the subnormal precision.
+        let g2 = (kept >> (deficit - 1)) & 1 == 1;
+        let below = kept & ((1u64 << (deficit - 1)) - 1);
+        sticky = sticky || guard || below != 0;
+        kept >>= deficit;
+        let lsb_odd = kept & 1 == 1;
+        let mut frac = kept;
+        if rm.round_up(sign, g2, sticky, lsb_odd) {
+            frac += 1;
+        }
+        let inexact = g2 || sticky;
+        if frac >> fmt.frac_bits == 1 {
+            // Rounded up into the smallest normal.
+            return (fmt.assemble(sign, 1, 0), inexact);
+        }
+        return (fmt.assemble(sign, 0, frac), inexact);
+    }
+
+    // Normal-range rounding.
+    let lsb_odd = kept & 1 == 1;
+    let mut sig_rounded = kept;
+    if rm.round_up(sign, guard, sticky, lsb_odd) {
+        sig_rounded += 1;
+        if sig_rounded >> (fmt.frac_bits + 1) == 1 {
+            // Carry out of the significand: renormalize.
+            sig_rounded >>= 1;
+            exp += 1;
+        }
+    }
+    let inexact = guard || sticky;
+
+    if exp > fmt.emax() {
+        // Overflow: Inf or max-finite depending on direction.
+        let bits = match rm {
+            Rounding::NearestEven => fmt.inf(sign),
+            Rounding::TowardZero => fmt.max_finite(sign),
+            Rounding::TowardPositive => {
+                if sign {
+                    fmt.max_finite(true)
+                } else {
+                    fmt.inf(false)
+                }
+            }
+            Rounding::TowardNegative => {
+                if sign {
+                    fmt.inf(true)
+                } else {
+                    fmt.max_finite(false)
+                }
+            }
+        };
+        return (bits, true);
+    }
+
+    let biased = (exp + fmt.bias()) as u64;
+    let frac = sig_rounded & fmt.frac_mask();
+    (fmt.assemble(sign, biased, frac), inexact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::format::{F32, F64};
+
+    fn pack_f32(sign: bool, exp: i32, sig: u128, q: u32, rm: Rounding) -> f32 {
+        let (bits, _) = round_pack(sign, exp, sig, q, false, F32, rm);
+        f32::from_bits(bits as u32)
+    }
+
+    #[test]
+    fn exact_one() {
+        assert_eq!(pack_f32(false, 0, 1 << 60, 60, Rounding::NearestEven), 1.0);
+    }
+
+    #[test]
+    fn exact_unnormalized_input() {
+        // 3.0 presented as 0b11 with q=1 (value 3.0 · 2^0? no: 3/2 · 2^1)
+        assert_eq!(pack_f32(false, 1, 3, 1, Rounding::NearestEven), 3.0);
+        // 0.5 presented denormalized high
+        assert_eq!(pack_f32(false, -1, 1 << 40, 40, Rounding::NearestEven), 0.5);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // 1 + 2^-24 exactly between 1.0 and 1+2^-23 → rounds to even (1.0).
+        let q = 40u32;
+        let sig = (1u128 << q) + (1u128 << (q - 24));
+        assert_eq!(pack_f32(false, 0, sig, q, Rounding::NearestEven), 1.0);
+        // 1 + 3·2^-24 between 1+2^-23 and 1+2^-22 → rounds up to even.
+        let sig = (1u128 << q) + 3 * (1u128 << (q - 24));
+        assert_eq!(
+            pack_f32(false, 0, sig, q, Rounding::NearestEven),
+            1.0 + 2.0 * 2f32.powi(-23)
+        );
+    }
+
+    #[test]
+    fn sticky_breaks_tie_upward() {
+        let q = 40u32;
+        // 1 + 2^-24 + 2^-40: just above the tie → rounds up.
+        let sig = (1u128 << q) + (1u128 << (q - 24)) + 1;
+        assert_eq!(
+            pack_f32(false, 0, sig, q, Rounding::NearestEven),
+            1.0 + 2f32.powi(-23)
+        );
+    }
+
+    #[test]
+    fn directed_modes() {
+        let q = 40u32;
+        let just_above_one = (1u128 << q) + 1;
+        assert_eq!(
+            pack_f32(false, 0, just_above_one, q, Rounding::TowardZero),
+            1.0
+        );
+        assert_eq!(
+            pack_f32(false, 0, just_above_one, q, Rounding::TowardPositive),
+            1.0 + 2f32.powi(-23)
+        );
+        assert_eq!(
+            pack_f32(false, 0, just_above_one, q, Rounding::TowardNegative),
+            1.0
+        );
+        // Negative value: toward-negative rounds away from zero.
+        assert_eq!(
+            pack_f32(true, 0, just_above_one, q, Rounding::TowardNegative),
+            -(1.0 + 2f32.powi(-23))
+        );
+        assert_eq!(
+            pack_f32(true, 0, just_above_one, q, Rounding::TowardPositive),
+            -1.0
+        );
+    }
+
+    #[test]
+    fn overflow_behaviour() {
+        assert_eq!(
+            pack_f32(false, 128, 1 << 30, 30, Rounding::NearestEven),
+            f32::INFINITY
+        );
+        assert_eq!(
+            pack_f32(false, 128, 1 << 30, 30, Rounding::TowardZero),
+            f32::MAX
+        );
+        assert_eq!(
+            pack_f32(true, 128, 1 << 30, 30, Rounding::TowardPositive),
+            f32::MIN
+        );
+        assert_eq!(
+            pack_f32(true, 128, 1 << 30, 30, Rounding::NearestEven),
+            f32::NEG_INFINITY
+        );
+    }
+
+    #[test]
+    fn carry_propagation_renormalizes() {
+        // 1.111...1 (24 ones) + guard=1 → rounds to 2.0.
+        let q = 24u32;
+        let sig = ((1u128 << 25) - 1) << (q - 24); // 25 bits of ones at q=24
+        let v = pack_f32(false, 0, sig, q, Rounding::NearestEven);
+        assert_eq!(v, 2.0);
+    }
+
+    #[test]
+    fn subnormal_rounding() {
+        // 2^-149 (smallest subnormal), exactly representable.
+        let v = pack_f32(false, -149, 1 << 30, 30, Rounding::NearestEven);
+        assert_eq!(v, f32::from_bits(1));
+        // 2^-150 = half the smallest subnormal: ties to even → 0.
+        let v = pack_f32(false, -150, 1 << 30, 30, Rounding::NearestEven);
+        assert_eq!(v, 0.0);
+        // 2^-150 + ulp-ish → rounds to smallest subnormal.
+        let v = pack_f32(false, -150, (1 << 30) + 1, 30, Rounding::NearestEven);
+        assert_eq!(v, f32::from_bits(1));
+        // Toward-positive rounds any positive residue up.
+        let v = pack_f32(false, -160, 1 << 30, 30, Rounding::TowardPositive);
+        assert_eq!(v, f32::from_bits(1));
+    }
+
+    #[test]
+    fn subnormal_mid_range() {
+        // 0.75 · 2^-126 = 0x00600000
+        let v = pack_f32(false, -127, 3 << 29, 30, Rounding::NearestEven);
+        assert_eq!(v.to_bits(), 0x0060_0000);
+    }
+
+    #[test]
+    fn rounds_up_into_smallest_normal() {
+        // Value (2^25 − 1)·2^-151 = (1 − 2^-25)·2^-126 sits between the
+        // largest subnormal and 2^-126, closer to the latter → rounds up
+        // into the smallest normal.
+        let sig = (1u128 << 25) - 1;
+        let (bits, inexact) =
+            round_pack(false, -151 + 24, sig, 24, false, F32, Rounding::NearestEven);
+        assert_eq!(f32::from_bits(bits as u32), f32::MIN_POSITIVE);
+        assert!(inexact);
+    }
+
+    #[test]
+    fn f64_exact_roundtrip_various() {
+        for x in [1.0f64, 1.5, 0.1, 3.141592653589793, 1e300, 1e-300] {
+            let bits = x.to_bits();
+            let exp = ((bits >> 52) & 0x7FF) as i32 - 1023;
+            let sig = ((bits & ((1u64 << 52) - 1)) | (1u64 << 52)) as u128;
+            let (packed, inexact) =
+                round_pack(false, exp, sig, 52, false, F64, Rounding::NearestEven);
+            assert_eq!(packed, bits);
+            assert!(!inexact);
+        }
+    }
+
+    #[test]
+    fn inexact_flag() {
+        let q = 40u32;
+        let (_, inexact) = round_pack(
+            false,
+            0,
+            (1u128 << q) + 1,
+            q,
+            false,
+            F32,
+            Rounding::NearestEven,
+        );
+        assert!(inexact);
+        let (_, inexact) = round_pack(false, 0, 1u128 << q, q, false, F32, Rounding::NearestEven);
+        assert!(!inexact);
+        let (_, inexact) = round_pack(false, 0, 1u128 << q, q, true, F32, Rounding::NearestEven);
+        assert!(inexact, "sticky_in must propagate");
+    }
+}

@@ -1,0 +1,208 @@
+//! Bench harness: workload generators and the paper-vs-measured report
+//! runner shared by every `rust/benches/*.rs` target.
+
+use crate::util::rng::Rng;
+use crate::util::table::{sig, Align, Table};
+use crate::util::timing::{bench, BenchConfig, Measurement};
+
+/// A batch of f32 division operands.
+#[derive(Clone, Debug)]
+pub struct DivBatch {
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl DivBatch {
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+}
+
+/// Generate a division workload of `n` pairs from a named distribution.
+pub fn gen_batch(workload: crate::analysis::Workload, n: usize, seed: u64) -> DivBatch {
+    let mut rng = Rng::new(seed);
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (x, y) = workload.sample_f32(&mut rng);
+        a.push(x);
+        b.push(y);
+    }
+    DivBatch { a, b }
+}
+
+/// An adversarial batch: corner values and near-boundary significands
+/// (segment edges of the Table-I partition, power-of-two neighbourhoods).
+pub fn gen_adversarial_batch(n: usize, seed: u64) -> DivBatch {
+    let mut rng = Rng::new(seed);
+    let bounds = crate::pla::derive_segments(5, 53);
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    for i in 0..n {
+        let x = match i % 4 {
+            0 => {
+                // Just inside a segment edge.
+                let e = *rng.choose(&bounds);
+                (e as f32 + f32::EPSILON).min(1.9999999)
+            }
+            1 => 1.0 + f32::EPSILON * (rng.below(16) as f32),
+            2 => 2.0 - f32::EPSILON * (1.0 + rng.below(16) as f32),
+            _ => 1.0 + rng.f32(),
+        };
+        let scale = 2f32.powi(rng.range_i64(-8, 8) as i32);
+        a.push((1.0 + rng.f32()) * scale);
+        b.push(x * scale);
+    }
+    DivBatch { a, b }
+}
+
+/// One row of a paper-vs-measured table.
+#[derive(Clone, Debug)]
+pub struct PaperRow {
+    pub id: String,
+    pub paper: String,
+    pub measured: String,
+    pub verdict: Verdict,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Match,
+    /// Shape/direction holds; absolute value differs (expected on a
+    /// different substrate).
+    Consistent,
+    /// Contradicts the paper (documented discrepancies).
+    Mismatch,
+    /// No paper value to compare against (new measurement).
+    New,
+}
+
+impl Verdict {
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            Verdict::Match => "MATCH",
+            Verdict::Consistent => "consistent",
+            Verdict::Mismatch => "MISMATCH",
+            Verdict::New => "(new)",
+        }
+    }
+}
+
+/// Collects rows and renders the standard report table for a bench.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub title: String,
+    rows: Vec<PaperRow>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, id: &str, paper: &str, measured: &str, verdict: Verdict) -> &mut Self {
+        self.rows.push(PaperRow {
+            id: id.to_string(),
+            paper: paper.to_string(),
+            measured: measured.to_string(),
+            verdict,
+        });
+        self
+    }
+
+    /// Numeric convenience with automatic match verdict by tolerance.
+    pub fn row_num(&mut self, id: &str, paper: f64, measured: f64, rel_tol: f64) -> &mut Self {
+        let verdict = if paper == 0.0 && measured == 0.0 {
+            Verdict::Match
+        } else if ((measured - paper) / paper).abs() <= rel_tol {
+            Verdict::Match
+        } else {
+            Verdict::Mismatch
+        };
+        self.row(id, &sig(paper, 6), &sig(measured, 6), verdict)
+    }
+
+    pub fn mismatches(&self) -> usize {
+        self.rows
+            .iter()
+            .filter(|r| r.verdict == Verdict::Mismatch)
+            .count()
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &self.title,
+            &["experiment", "paper", "measured", "verdict"],
+        )
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Left]);
+        for r in &self.rows {
+            t.row(&[
+                r.id.clone(),
+                r.paper.clone(),
+                r.measured.clone(),
+                r.verdict.symbol().to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Time a closure with the environment-selected bench budget and print a
+/// one-line summary; returns the measurement for further reporting.
+pub fn timed_section<F: FnMut()>(label: &str, f: F) -> Measurement {
+    let cfg = BenchConfig::from_env();
+    let m = bench(&cfg, f);
+    println!("  {label}: {}", m.human());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Workload;
+
+    #[test]
+    fn gen_batch_is_deterministic_and_sized() {
+        let b1 = gen_batch(Workload::LogUniform, 128, 9);
+        let b2 = gen_batch(Workload::LogUniform, 128, 9);
+        assert_eq!(b1.len(), 128);
+        assert_eq!(b1.a, b2.a);
+        assert_eq!(b1.b, b2.b);
+        let b3 = gen_batch(Workload::LogUniform, 128, 10);
+        assert_ne!(b1.a, b3.a);
+    }
+
+    #[test]
+    fn adversarial_batch_finite_and_divisor_nonzero() {
+        let b = gen_adversarial_batch(256, 3);
+        assert_eq!(b.len(), 256);
+        for (&x, &y) in b.a.iter().zip(&b.b) {
+            assert!(x.is_finite() && y.is_finite());
+            assert!(y != 0.0);
+        }
+    }
+
+    #[test]
+    fn report_verdicts() {
+        let mut r = Report::new("demo");
+        r.row_num("b0", 1.09811, 1.09812, 1e-4);
+        r.row_num("b1", 1.20835, 1.5, 1e-4);
+        r.row("note", "-", "42", Verdict::New);
+        assert_eq!(r.mismatches(), 1);
+        let text = r.render();
+        assert!(text.contains("MATCH"));
+        assert!(text.contains("MISMATCH"));
+        assert!(text.contains("(new)"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Component census: the bill of materials of a hardware unit, with
+//! area/delay/power roll-ups.
+
+use super::components::Component;
+use crate::util::table::{sig, Align, Table};
+
+/// A unit's bill of materials.
+#[derive(Clone, Debug, Default)]
+pub struct Census {
+    pub name: String,
+    items: Vec<(Component, u32)>,
+}
+
+impl Census {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            items: Vec::new(),
+        }
+    }
+
+    /// Add `count` instances of a component.
+    pub fn add(&mut self, c: Component, count: u32) -> &mut Self {
+        if count > 0 {
+            if let Some(it) = self.items.iter_mut().find(|(k, _)| *k == c) {
+                it.1 += count;
+            } else {
+                self.items.push((c, count));
+            }
+        }
+        self
+    }
+
+    /// Merge another census (e.g. a sub-unit) into this one.
+    pub fn merge(&mut self, other: &Census) -> &mut Self {
+        for &(c, n) in &other.items {
+            self.add(c, n);
+        }
+        self
+    }
+
+    pub fn items(&self) -> &[(Component, u32)] {
+        &self.items
+    }
+
+    /// Total area in NAND2-equivalent gates.
+    pub fn area(&self) -> f64 {
+        self.items
+            .iter()
+            .map(|(c, n)| c.area() * *n as f64)
+            .sum()
+    }
+
+    /// First-order dynamic-power proxy: proportional to gate area
+    /// (uniform activity). Reported in the same NAND2-eq units.
+    pub fn power_proxy(&self) -> f64 {
+        self.area()
+    }
+
+    /// Datapath area: combinational compute blocks only (registers and
+    /// control excluded). This is the quantity the paper's §5 claim is
+    /// about — it compares "the most hardware intensive components"
+    /// (priority encoders, LODs, shifters, adders, decoder).
+    pub fn datapath_area(&self) -> f64 {
+        self.items
+            .iter()
+            .filter(|(c, _)| {
+                !matches!(
+                    c,
+                    super::components::Component::Register { .. }
+                        | super::components::Component::Control { .. }
+                )
+            })
+            .map(|(c, n)| c.area() * *n as f64)
+            .sum()
+    }
+
+    /// Count instances of a specific component kind (by label prefix).
+    pub fn count_matching(&self, label_prefix: &str) -> u32 {
+        self.items
+            .iter()
+            .filter(|(c, _)| c.label().starts_with(label_prefix))
+            .map(|(_, n)| *n)
+            .sum()
+    }
+
+    /// Render a BOM table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!("{} — bill of materials", self.name),
+            &["component", "count", "area(NAND2)", "delay(gates)"],
+        )
+        .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+        let mut items = self.items.clone();
+        items.sort_by(|a, b| {
+            (b.0.area() * b.1 as f64)
+                .partial_cmp(&(a.0.area() * a.1 as f64))
+                .unwrap()
+        });
+        for (c, n) in &items {
+            t.row(&[
+                c.label(),
+                n.to_string(),
+                sig(c.area() * *n as f64, 5),
+                sig(c.delay(), 3),
+            ]);
+        }
+        t.row(&[
+            "TOTAL".to_string(),
+            String::new(),
+            sig(self.area(), 6),
+            String::new(),
+        ]);
+        t.render()
+    }
+}
+
+/// A named critical path: an ordered chain of components whose delays sum.
+#[derive(Clone, Debug)]
+pub struct CriticalPath {
+    pub name: String,
+    pub stages: Vec<Component>,
+}
+
+impl CriticalPath {
+    pub fn new(name: &str, stages: Vec<Component>) -> Self {
+        Self {
+            name: name.to_string(),
+            stages,
+        }
+    }
+
+    /// Total delay in gate units.
+    pub fn delay(&self) -> f64 {
+        self.stages.iter().map(|c| c.delay()).sum()
+    }
+
+    /// Convert gate units to nanoseconds for a given gate delay in ps
+    /// (e.g. ~15 ps FO4 in a mature 28 nm process).
+    pub fn delay_ns(&self, gate_ps: f64) -> f64 {
+        self.delay() * gate_ps / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::components::Component as C;
+
+    #[test]
+    fn add_and_merge_accumulate() {
+        let mut a = Census::new("a");
+        a.add(C::PriorityEncoder { bits: 16 }, 1);
+        a.add(C::PriorityEncoder { bits: 16 }, 1);
+        let mut b = Census::new("b");
+        b.add(C::PriorityEncoder { bits: 16 }, 3);
+        b.add(C::Lod { bits: 16 }, 1);
+        a.merge(&b);
+        assert_eq!(a.count_matching("PE16"), 5);
+        assert_eq!(a.count_matching("LOD"), 1);
+        assert_eq!(a.items().len(), 2);
+    }
+
+    #[test]
+    fn zero_count_is_noop() {
+        let mut a = Census::new("a");
+        a.add(C::Lod { bits: 8 }, 0);
+        assert!(a.items().is_empty());
+        assert_eq!(a.area(), 0.0);
+    }
+
+    #[test]
+    fn area_is_weighted_sum() {
+        let mut a = Census::new("a");
+        a.add(C::Register { bits: 10 }, 2);
+        assert_eq!(a.area(), 2.0 * 6.0 * 10.0);
+        assert_eq!(a.power_proxy(), a.area());
+    }
+
+    #[test]
+    fn critical_path_sums_delays() {
+        let p = CriticalPath::new(
+            "pe→shift→add",
+            vec![
+                C::PriorityEncoder { bits: 32 },
+                C::BarrelShifter { bits: 32 },
+                C::AdderCla { bits: 32 },
+            ],
+        );
+        let want = C::PriorityEncoder { bits: 32 }.delay()
+            + C::BarrelShifter { bits: 32 }.delay()
+            + C::AdderCla { bits: 32 }.delay();
+        assert_eq!(p.delay(), want);
+        assert!((p.delay_ns(15.0) - want * 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_totals() {
+        let mut a = Census::new("demo unit");
+        a.add(C::AdderRca { bits: 8 }, 1);
+        let r = a.render();
+        assert!(r.contains("demo unit"));
+        assert!(r.contains("TOTAL"));
+        assert!(r.contains("RCA8"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Gate-level component catalog.
+//!
+//! The paper argues hardware cost structurally (Fig 4 vs Fig 5: the
+//! squaring unit needs one of everything where the ILM needs two) but
+//! never synthesizes. To quantify the claim we use a standard
+//! NAND2-equivalent area catalog and FO4-style delay estimates, the same
+//! first-order numbers used in architecture textbooks (e.g. Weste &
+//! Harris, CMOS VLSI Design; Ercegovac & Lang, Digital Arithmetic):
+//!
+//! | primitive | area (NAND2-eq) | delay (gate units) |
+//! |-----------|-----------------|--------------------|
+//! | INV       | 0.5             | 0.5                |
+//! | NAND2     | 1               | 1                  |
+//! | XOR2      | 3               | 1.5                |
+//! | MUX2      | 3               | 1.5                |
+//! | full adder| 9               | 2 (carry path)     |
+//! | DFF bit   | 6               | — (sequencing)     |
+//!
+//! Absolute numbers are nominal; every paper claim we reproduce is a
+//! **ratio** between units built from the same catalog, which is robust
+//! to the choice of constants (DESIGN.md §2, substitution (a)).
+
+/// A hardware component instance with a parametric size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Component {
+    /// n-bit priority encoder (returns ⌊log2 N⌋).
+    PriorityEncoder { bits: u32 },
+    /// n-bit leading-one detector (isolates the top set bit).
+    Lod { bits: u32 },
+    /// n-bit bit-clear stage (residue N − 2^k: mask generated from k).
+    BitClear { bits: u32 },
+    /// n-bit logarithmic barrel shifter (shift distance up to n).
+    BarrelShifter { bits: u32 },
+    /// n-bit ripple-carry adder.
+    AdderRca { bits: u32 },
+    /// n-bit carry-lookahead adder (4-bit groups).
+    AdderCla { bits: u32 },
+    /// k-input to 2^k-output decoder (ILM's 2^(k1+k2) term).
+    Decoder { out_bits: u32 },
+    /// n-bit register (DFF row).
+    Register { bits: u32 },
+    /// n-bit 2:1 multiplexer row.
+    Mux2 { bits: u32 },
+    /// n-bit magnitude comparator (PLA segment select).
+    Comparator { bits: u32 },
+    /// ROM storage (segment tables), counted in bits.
+    RomBits { bits: u32 },
+    /// Control FSM overhead (states).
+    Control { states: u32 },
+}
+
+impl Component {
+    /// Area in NAND2-equivalent gates.
+    pub fn area(&self) -> f64 {
+        match *self {
+            // A priority encoder is a chain of scan cells ≈ 3 gates/bit
+            // plus ⌈log2 n⌉·n/4 encode gates.
+            Component::PriorityEncoder { bits } => {
+                3.0 * bits as f64 + log2c(bits) as f64 * bits as f64 / 4.0
+            }
+            // LOD: scan chain (2 gates/bit) + isolate AND row.
+            Component::Lod { bits } => 3.0 * bits as f64,
+            // Bit clear: decoder-free mask via LOD output + n NAND.
+            Component::BitClear { bits } => bits as f64,
+            // log2(n) stages of n MUX2 (3 gates each).
+            Component::BarrelShifter { bits } => 3.0 * bits as f64 * log2c(bits) as f64,
+            // 9 NAND2-eq per full adder.
+            Component::AdderRca { bits } => 9.0 * bits as f64,
+            // CLA: FA row + lookahead tree ≈ 14 gates/bit.
+            Component::AdderCla { bits } => 14.0 * bits as f64,
+            // One gate per output plus predecode.
+            Component::Decoder { out_bits } => 1.25 * out_bits as f64 + 2.0 * log2c(out_bits) as f64,
+            Component::Register { bits } => 6.0 * bits as f64,
+            Component::Mux2 { bits } => 3.0 * bits as f64,
+            // Comparator: XOR row + borrow chain ≈ 4.5/bit.
+            Component::Comparator { bits } => 4.5 * bits as f64,
+            // ~0.25 NAND2-eq per ROM bit (dense array).
+            Component::RomBits { bits } => 0.25 * bits as f64,
+            // ~30 gates per FSM state (one-hot + next-state logic).
+            Component::Control { states } => 30.0 * states as f64,
+        }
+    }
+
+    /// Worst-case combinational delay in normalized gate units
+    /// (≈ FO4-equivalents; registers contribute sequencing, not delay).
+    pub fn delay(&self) -> f64 {
+        match *self {
+            Component::PriorityEncoder { bits } => 2.0 * log2c(bits) as f64,
+            Component::Lod { bits } => 2.0 * log2c(bits) as f64,
+            Component::BitClear { .. } => 1.0,
+            Component::BarrelShifter { bits } => 1.5 * log2c(bits) as f64,
+            Component::AdderRca { bits } => 2.0 * bits as f64,
+            Component::AdderCla { bits } => 4.0 + 2.0 * log4c(bits) as f64,
+            Component::Decoder { out_bits } => 1.0 + log2c(out_bits) as f64 / 2.0,
+            Component::Register { .. } => 0.0,
+            Component::Mux2 { .. } => 1.5,
+            Component::Comparator { bits } => 2.0 + log2c(bits) as f64,
+            Component::RomBits { .. } => 2.0,
+            Component::Control { .. } => 2.0,
+        }
+    }
+
+    /// Short display name.
+    pub fn label(&self) -> String {
+        match *self {
+            Component::PriorityEncoder { bits } => format!("PE{bits}"),
+            Component::Lod { bits } => format!("LOD{bits}"),
+            Component::BitClear { bits } => format!("CLR{bits}"),
+            Component::BarrelShifter { bits } => format!("SHIFT{bits}"),
+            Component::AdderRca { bits } => format!("RCA{bits}"),
+            Component::AdderCla { bits } => format!("CLA{bits}"),
+            Component::Decoder { out_bits } => format!("DEC{out_bits}"),
+            Component::Register { bits } => format!("REG{bits}"),
+            Component::Mux2 { bits } => format!("MUX{bits}"),
+            Component::Comparator { bits } => format!("CMP{bits}"),
+            Component::RomBits { bits } => format!("ROM{bits}b"),
+            Component::Control { states } => format!("CTL{states}"),
+        }
+    }
+}
+
+/// ⌈log2 n⌉ with log2c(0/1) = 1 (degenerate sizes still cost one stage).
+pub fn log2c(n: u32) -> u32 {
+    if n <= 2 {
+        1
+    } else {
+        32 - (n - 1).leading_zeros()
+    }
+}
+
+/// ⌈log4 n⌉, minimum 1.
+pub fn log4c(n: u32) -> u32 {
+    log2c(n).div_ceil(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_helpers() {
+        assert_eq!(log2c(2), 1);
+        assert_eq!(log2c(3), 2);
+        assert_eq!(log2c(16), 4);
+        assert_eq!(log2c(17), 5);
+        assert_eq!(log4c(16), 2);
+        assert_eq!(log4c(64), 3);
+    }
+
+    #[test]
+    fn areas_scale_with_width() {
+        for make in [
+            |b| Component::PriorityEncoder { bits: b },
+            |b| Component::BarrelShifter { bits: b },
+            |b| Component::AdderRca { bits: b },
+            |b| Component::Register { bits: b },
+        ] {
+            let a16 = make(16).area();
+            let a32 = make(32).area();
+            assert!(a32 > a16 * 1.5, "{:?}", make(32));
+        }
+    }
+
+    #[test]
+    fn rca_slower_but_smaller_than_cla() {
+        let rca = Component::AdderRca { bits: 32 };
+        let cla = Component::AdderCla { bits: 32 };
+        assert!(rca.area() < cla.area());
+        assert!(rca.delay() > cla.delay());
+    }
+
+    #[test]
+    fn register_has_no_combinational_delay() {
+        assert_eq!(Component::Register { bits: 64 }.delay(), 0.0);
+        assert!(Component::Register { bits: 64 }.area() > 0.0);
+    }
+
+    #[test]
+    fn labels_unique_enough() {
+        assert_eq!(Component::PriorityEncoder { bits: 24 }.label(), "PE24");
+        assert_eq!(Component::RomBits { bits: 1008 }.label(), "ROM1008b");
+    }
+}

@@ -1,0 +1,25 @@
+//! Gate-level hardware cost model.
+//!
+//! The paper's hardware claims (Fig 4 vs Fig 5, "< 50 % hardware" §5;
+//! "little hardware overhead" §6; the pipelining remark in §7) are
+//! quantified here:
+//!
+//! * [`components`] — NAND2-equivalent area / gate-delay catalog;
+//! * [`census`] — per-unit bill of materials with area/power roll-ups
+//!   and critical paths;
+//! * [`units`] — the BOM of each block diagram (ILM, squaring unit,
+//!   powering unit, PLA unit, full divider, Newton baseline);
+//! * [`cycles`] — latency/II models including the pipelined variants.
+
+pub mod census;
+pub mod components;
+pub mod cycles;
+pub mod units;
+
+pub use census::{Census, CriticalPath};
+pub use components::Component;
+pub use cycles::{divider_timing, ilm_timing, longdiv_timing, powering_timing, squaring_timing, Timing};
+pub use units::{
+    divider_system, ilm_unit, newton_system, pla_unit, powering_unit, squaring_unit,
+    squaring_vs_ilm_ratio,
+};

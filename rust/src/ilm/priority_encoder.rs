@@ -1,0 +1,81 @@
+//! Word-level models of the ILM's front-end blocks.
+//!
+//! * **Priority encoder** — returns the position `k` of the most
+//!   significant set bit (`k = ⌊log2 N⌋`, the "characteristic" of eq 21).
+//! * **Leading-one detector (LOD)** — isolates the leading one
+//!   (`2^k`); the residue `N − 2^k` of eq (25) is the operand with that
+//!   bit cleared.
+//!
+//! These functions correspond one-to-one with the PE/LOD boxes of Fig 4;
+//! their gate costs are modelled in [`crate::hw::components`].
+
+/// Position of the most significant set bit: `⌊log2 n⌋`. Panics on 0 in
+/// debug builds (hardware would never be fed a zero here; the unit's
+/// control logic short-circuits zero operands).
+#[inline]
+pub fn leading_one_pos(n: u64) -> u32 {
+    debug_assert!(n != 0, "priority encoder fed zero");
+    63 - n.leading_zeros()
+}
+
+/// Priority encoder output: `(k, N − 2^k)` — characteristic and residue.
+#[inline]
+pub fn priority_encode(n: u64) -> (u32, u64) {
+    let k = leading_one_pos(n);
+    (k, n ^ (1 << k))
+}
+
+/// Leading-one detector: the isolated leading one, `2^k` (0 for 0 input —
+/// LOD hardware is combinational and well defined on zero).
+#[inline]
+pub fn lod(n: u64) -> u64 {
+    if n == 0 {
+        0
+    } else {
+        1 << leading_one_pos(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check_eq;
+    use crate::util::check::{forall, Config};
+
+    #[test]
+    fn known_positions() {
+        assert_eq!(leading_one_pos(1), 0);
+        assert_eq!(leading_one_pos(2), 1);
+        assert_eq!(leading_one_pos(3), 1);
+        assert_eq!(leading_one_pos(255), 7);
+        assert_eq!(leading_one_pos(256), 8);
+        assert_eq!(leading_one_pos(u64::MAX), 63);
+    }
+
+    #[test]
+    fn lod_isolates_top_bit() {
+        assert_eq!(lod(0), 0);
+        assert_eq!(lod(1), 1);
+        assert_eq!(lod(0b1011), 0b1000);
+        assert_eq!(lod(u64::MAX), 1 << 63);
+    }
+
+    #[test]
+    fn encode_decomposition_reconstructs() {
+        forall(Config::named("N = 2^k + residue").cases(1000), |d| {
+            let n = d.range_u64(1, u64::MAX);
+            let (k, r) = priority_encode(n);
+            check_eq!((1u64 << k) + r, n);
+            // Residue is strictly below the leading one.
+            crate::check_that!(r < (1 << k) || k == 0 && r == 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_float_log2_floor() {
+        for n in 1u64..(1 << 16) {
+            assert_eq!(leading_one_pos(n), (n as f64).log2().floor() as u32, "{n}");
+        }
+    }
+}

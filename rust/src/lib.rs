@@ -1,0 +1,48 @@
+//! # tsdiv — Taylor-series / ILM floating-point division unit
+//!
+//! Full-system reproduction of *"A floating point division unit based on
+//! Taylor-Series expansion algorithm and Iterative Logarithmic Multiplier"*
+//! (Karani, Rana, Reshamwala, Saldanha — CS.AR 2017).
+//!
+//! The crate is organised as the paper's hardware is:
+//!
+//! * [`fp`] — soft IEEE-754 formats (pack/unpack/round/classify/mul/ULP);
+//! * [`ilm`] — the Iterative Logarithmic Multiplier (§4, eq 21–27, Fig 4);
+//! * [`squaring`] — the reduced squaring unit (§5, eq 28, Fig 5);
+//! * [`powering`] — the powering unit with operand caching (§6, Fig 6);
+//! * [`pla`] — piecewise-linear initial reciprocal approximation
+//!   (§3, eq 13–20, Figs 1–3, Table I);
+//! * [`taylor`] — the Taylor-series reciprocal engine (§2, eq 9–12);
+//! * [`divider`] — the complete FP divider (Fig 7) plus Newton–Raphson,
+//!   Goldschmidt and digit-recurrence baselines;
+//! * [`hw`] — gate-level cost model reproducing the hardware claims
+//!   (Fig 4 vs Fig 5, "< 50 % hardware");
+//! * [`analysis`] — ULP/relative-error sweeps used by the benches;
+//! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts;
+//! * [`coordinator`] — the batched division service (dynamic batcher,
+//!   worker pool, metrics);
+//! * [`harness`] — workload generators and the bench runner;
+//! * [`util`] — in-tree substrates (PRNG, JSON, CLI, stats, property
+//!   testing, tables) — the image vendors no general-purpose crates.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod divider;
+pub mod fp;
+pub mod harness;
+pub mod hw;
+pub mod ilm;
+pub mod pla;
+pub mod powering;
+pub mod runtime;
+pub mod squaring;
+pub mod taylor;
+pub mod util;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Paper reference used in reports.
+pub const PAPER: &str = "Karani, Rana, Reshamwala, Saldanha — \
+ A floating point division unit based on Taylor-Series expansion algorithm \
+ and Iterative Logarithmic Multiplier (CS.AR 2017)";

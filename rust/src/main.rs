@@ -1,0 +1,338 @@
+//! `tsdiv` — command-line front end of the Taylor/ILM division unit.
+//!
+//! Subcommands map one-to-one onto the evaluation experiments
+//! (DESIGN.md §4) plus operational helpers:
+//!
+//! * `divide`    — divide two numbers, showing the datapath diagnostics;
+//! * `table1`    — regenerate paper Table I (E1);
+//! * `bounds`    — §3 iteration-count claims (E5);
+//! * `hw`        — hardware cost tables, Fig 4 vs 5 (E6);
+//! * `accuracy`  — divider accuracy report vs gold (E9);
+//! * `serve`     — run the batched division service under load (E10);
+//! * `selftest`  — quick end-to-end health check of all layers.
+
+use tsdiv::analysis::{measure_accuracy_f32, Workload};
+use tsdiv::divider::{BackendKind, Divider, TaylorDivider};
+use tsdiv::taylor::TaylorConfig;
+use tsdiv::util::cli::Command;
+use tsdiv::util::table::{sig, Align, Table};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        return;
+    }
+    let sub = args.remove(0);
+    let code = match sub.as_str() {
+        "divide" => cmd_divide(args),
+        "table1" => cmd_table1(),
+        "bounds" => cmd_bounds(),
+        "hw" => cmd_hw(args),
+        "accuracy" => cmd_accuracy(args),
+        "serve" => cmd_serve(args),
+        "selftest" => cmd_selftest(),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "tsdiv {} — {}\n\n\
+         USAGE: tsdiv <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 divide <a> <b>   divide via the Taylor/ILM unit (add --order N, --ilm K)\n\
+         \x20 table1           regenerate paper Table I (segment boundaries)\n\
+         \x20 bounds           §3 iteration-count analysis (17/15/5)\n\
+         \x20 hw               hardware cost model (Fig 4 vs Fig 5, system)\n\
+         \x20 accuracy         divider-vs-gold accuracy report (add --samples N)\n\
+         \x20 serve            run the division service under synthetic load\n\
+         \x20 selftest         quick health check across all layers\n",
+        tsdiv::VERSION,
+        tsdiv::PAPER
+    );
+}
+
+fn cmd_divide(args: Vec<String>) -> i32 {
+    let cmd = Command::new("divide", "divide a by b through the paper's datapath")
+        .opt("order", "5", "Taylor order n")
+        .opt("ilm", "", "ILM correction budget (empty = exact multiplier)")
+        .opt("frac-bits", "60", "datapath fraction bits");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(help) => {
+            eprintln!("{help}");
+            return 2;
+        }
+    };
+    let pos = parsed.positionals();
+    if pos.len() != 2 {
+        eprintln!("usage: tsdiv divide <a> <b> [--order N] [--ilm K]");
+        return 2;
+    }
+    let (a, b): (f64, f64) = match (pos[0].parse(), pos[1].parse()) {
+        (Ok(a), Ok(b)) => (a, b),
+        _ => {
+            eprintln!("operands must be numbers");
+            return 2;
+        }
+    };
+    let order: u32 = parsed.parse_or("order", 5);
+    let frac: u32 = parsed.parse_or("frac-bits", 60);
+    let kind = match parsed.get("ilm") {
+        Some("") | None => BackendKind::Exact,
+        Some(s) => BackendKind::Ilm {
+            iterations: s.parse().unwrap_or(8),
+        },
+    };
+    let cfg = TaylorConfig {
+        order,
+        ..TaylorConfig::paper_default(frac)
+    };
+    let mut d = TaylorDivider::new(cfg, kind);
+    let q32 = d.div_f32(a as f32, b as f32);
+    let q64 = d.div_f64(a, b);
+    println!("divider : {}", d.name());
+    println!("f32     : {q32:e}   (hardware {:e})", a as f32 / b as f32);
+    println!("f64     : {q64:e}   (hardware {:e})", a / b);
+    if let Some(u) = tsdiv::fp::ulp_diff_f64(q64, a / b) {
+        println!("f64 Δ   : {u} ulp");
+    }
+    let c = d.op_counts();
+    println!(
+        "ops     : {} multiplies, {} squares, {} PE evals ({} saved by §6 cache)",
+        c.muls, c.squares, c.pe_ops, c.pe_cache_hits
+    );
+    0
+}
+
+fn cmd_table1() -> i32 {
+    let bounds = tsdiv::pla::derive_segments(5, 53);
+    let mut t = Table::new(
+        "Table I — segment boundaries (n=5, 53-bit)",
+        &["boundary", "derived", "paper"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right]);
+    for (i, (&ours, paper)) in bounds[1..].iter().zip(tsdiv::pla::PAPER_TABLE_I).enumerate() {
+        t.row(&[format!("b{i}"), sig(ours, 6), format!("{paper}")]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_bounds() -> i32 {
+    use tsdiv::pla::{derive_segments, equal_error_split, min_iterations, min_iterations_piecewise};
+    let p = equal_error_split(1.0, 2.0);
+    let mut t = Table::new(
+        "minimum iterations for 53-bit precision (eq 17)",
+        &["partition", "paper", "derived"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right]);
+    t.row(&[
+        "1 segment [1,2]".into(),
+        "17".into(),
+        min_iterations(1.0, 2.0, 53).to_string(),
+    ]);
+    t.row(&[
+        "2 segments at √2".into(),
+        "15".into(),
+        min_iterations_piecewise(&[1.0, p, 2.0], 53).to_string(),
+    ]);
+    t.row(&[
+        "Table I (8 segments)".into(),
+        "5".into(),
+        min_iterations_piecewise(&derive_segments(5, 53), 53).to_string(),
+    ]);
+    t.print();
+    println!("(the 2-segment row is a documented paper discrepancy — see EXPERIMENTS.md E5)");
+    0
+}
+
+fn cmd_hw(args: Vec<String>) -> i32 {
+    let cmd = Command::new("hw", "hardware cost model").opt("width", "53", "operand width in bits");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(help) => {
+            eprintln!("{help}");
+            return 2;
+        }
+    };
+    let w: u32 = parsed.parse_or("width", 53);
+    print!("{}", tsdiv::hw::ilm_unit(w).render());
+    println!();
+    print!("{}", tsdiv::hw::squaring_unit(w).render());
+    println!(
+        "\nsquaring/ILM ratio @ w={w}: datapath {:.3}, total {:.3}  (paper §5: < 0.5)",
+        tsdiv::hw::squaring_vs_ilm_ratio(w),
+        tsdiv::hw::units::squaring_vs_ilm_ratio_total(w)
+    );
+    0
+}
+
+fn cmd_accuracy(args: Vec<String>) -> i32 {
+    let cmd = Command::new("accuracy", "divider accuracy vs exactly-rounded gold")
+        .opt("samples", "20000", "sample count per row");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(help) => {
+            eprintln!("{help}");
+            return 2;
+        }
+    };
+    let samples: u64 = parsed.parse_or("samples", 20_000);
+    let mut t = Table::new(
+        "accuracy vs gold",
+        &["divider", "workload", "max ulp", "mean ulp", "exact %"],
+    )
+    .aligns(&[Align::Left, Align::Left, Align::Right, Align::Right, Align::Right]);
+    for ilm in [None, Some(8u32), Some(2)] {
+        for wl in [Workload::LogUniform, Workload::RandomBits] {
+            let mut d = match ilm {
+                None => TaylorDivider::paper_exact(),
+                Some(k) => TaylorDivider::paper_ilm(k),
+            };
+            let r = measure_accuracy_f32(&mut d, wl, samples, 11);
+            t.row(&[
+                r.divider.clone(),
+                wl.name().into(),
+                r.max_ulp.to_string(),
+                format!("{:.4}", r.mean_ulp),
+                format!("{:.2}", r.exact_rate * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    0
+}
+
+fn cmd_serve(args: Vec<String>) -> i32 {
+    use std::time::Duration;
+    use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig};
+    let cmd = Command::new("serve", "run the division service under load")
+        .opt("backend", "native", "native | pjrt")
+        .opt("seconds", "2", "duration")
+        .opt("workers", "2", "worker threads")
+        .opt("max-batch", "4096", "coalescing budget");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(help) => {
+            eprintln!("{help}");
+            return 2;
+        }
+    };
+    let backend = if parsed.get_or("backend", "native") == "pjrt" {
+        if !tsdiv::runtime::artifacts_available() {
+            eprintln!("artifacts/ missing — run `make artifacts`");
+            return 1;
+        }
+        BackendChoice::Pjrt
+    } else {
+        BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        }
+    };
+    let svc = DivisionService::start(
+        ServiceConfig {
+            workers: parsed.parse_or("workers", 2),
+            max_batch: parsed.parse_or("max-batch", 4096),
+            max_wait: Duration::from_micros(200),
+            queue_capacity: 1 << 14,
+        },
+        backend,
+    )
+    .expect("service");
+    let seconds: u64 = parsed.parse_or("seconds", 2);
+    let deadline = std::time::Instant::now() + Duration::from_secs(seconds);
+    let mut rng = tsdiv::util::rng::Rng::new(0);
+    let mut lanes = 0u64;
+    while std::time::Instant::now() < deadline {
+        let a: Vec<f32> = (0..256).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+        let b: Vec<f32> = (0..256).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+        if svc.divide_blocking(a, b).is_ok() {
+            lanes += 256;
+        }
+    }
+    let m = svc.metrics();
+    println!(
+        "served {lanes} divisions in {seconds}s ({} div/s), {} batches, p50 {:.3} ms, p99 {:.3} ms",
+        sig(lanes as f64 / seconds as f64, 4),
+        m.batches,
+        m.latency_p50 * 1e3,
+        m.latency_p99 * 1e3
+    );
+    svc.shutdown();
+    0
+}
+
+fn cmd_selftest() -> i32 {
+    let mut failures = 0;
+    let mut check = |label: &str, ok: bool| {
+        println!("  [{}] {label}", if ok { "ok" } else { "FAIL" });
+        if !ok {
+            failures += 1;
+        }
+    };
+    println!("tsdiv selftest:");
+    // L3 datapath
+    let mut d = TaylorDivider::paper_exact();
+    check("taylor divider 355/113", {
+        let q = d.div_f32(355.0, 113.0);
+        q == 355.0f32 / 113.0
+    });
+    check("table I derivation (8 segments)", tsdiv::pla::derive_segments(5, 53).len() == 9);
+    check(
+        "17-iteration bound on [1,2]",
+        tsdiv::pla::min_iterations(1.0, 2.0, 53) == 17,
+    );
+    check(
+        "squaring < half ILM datapath",
+        tsdiv::hw::squaring_vs_ilm_ratio(53) < 0.5,
+    );
+    check("ILM exactness (8-bit, full budget)", {
+        (1u64..256).all(|a| tsdiv::ilm::ilm_mul(a, 171, 8).product == (a as u128) * 171)
+    });
+    // Runtime (optional)
+    if tsdiv::runtime::artifacts_available() {
+        match tsdiv::runtime::DivideEngine::load_default() {
+            Ok(engine) => {
+                let q = engine.divide(&[84.0], &[2.0]).unwrap();
+                check("PJRT artifact round-trip 84/2", q[0] == 42.0);
+            }
+            Err(e) => check(&format!("PJRT load ({e})"), false),
+        }
+    } else {
+        println!("  [--] PJRT skipped (no artifacts; run `make artifacts`)");
+    }
+    // Coordinator
+    {
+        use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig};
+        let svc = DivisionService::start(
+            ServiceConfig::default(),
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let out = svc.divide_blocking(vec![9.0], vec![3.0]);
+        check("coordinator round-trip 9/3", out == Ok(vec![3.0]));
+        svc.shutdown();
+    }
+    if failures == 0 {
+        println!("all checks passed");
+        0
+    } else {
+        println!("{failures} check(s) FAILED");
+        1
+    }
+}

@@ -1,0 +1,359 @@
+//! Piecewise-linear initial approximation of `1/x` (paper §3).
+//!
+//! The Taylor-series engine needs a seed `y0 ≈ 1/x`; the paper derives it
+//! from a piecewise-linear fit over the IEEE significand range `[1, 2)`:
+//!
+//! * eq (13): pointwise error of the tangent-at-`p` line,
+//!   `E(x) = 1/x + x/p² − 2/p`;
+//! * eq (14): total error over `[a,b]`,
+//!   `E_total = ln(b/a) + (b²−a²)/(2p²) − 2(b−a)/p`, minimized at
+//!   `p = (a+b)/2`;
+//! * eq (15): the optimal line `y0 = −4x/(a+b)² + 4/(a+b)`;
+//! * eq (16): `m(x) = 1 − x·y0` — algebraically `(1 − 2x/(a+b))²`,
+//!   so `m ∈ [0, ((b−a)/(a+b))²]` with the maximum at both endpoints;
+//! * eq (17): Taylor error bound
+//!   `E_n ≤ ((a+b)²/(4ab))^(n+2) · m_max^(n+1)`;
+//! * eq (19)/(20): the segment-boundary recurrence solved (here by
+//!   bisection in the log domain) to regenerate **Table I**.
+//!
+//! [`table`] holds the fixed-point seed-table hardware model.
+
+pub mod table;
+
+pub use table::SegmentTable;
+
+/// Paper Table I: the published segment boundaries for n = 5 and 53-bit
+/// precision, used by benches to compare derived vs published values.
+pub const PAPER_TABLE_I: [f64; 8] = [
+    1.09811, 1.20835, 1.3269, 1.45709, 1.59866, 1.75616, 1.92922, 2.12392,
+];
+
+/// Pointwise error of the tangent-at-`p` linear approximation (eq 13).
+pub fn pointwise_error(x: f64, p: f64) -> f64 {
+    1.0 / x + x / (p * p) - 2.0 / p
+}
+
+/// Total (integrated) error over `[a,b]` for slope parameter `p` (eq 14).
+pub fn total_error(a: f64, b: f64, p: f64) -> f64 {
+    (b / a).ln() + (b * b - a * a) / (2.0 * p * p) - 2.0 * (b - a) / p
+}
+
+/// The `p` minimizing eq (14): `p = (a+b)/2`.
+pub fn optimal_p(a: f64, b: f64) -> f64 {
+    (a + b) / 2.0
+}
+
+/// The optimal linear approximation of `1/x` on `[a,b]` (eq 15),
+/// returned as `(slope, intercept)` with `y0 = slope·x + intercept`
+/// (slope is negative).
+pub fn optimal_line(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    (-4.0 / (s * s), 4.0 / s)
+}
+
+/// `y0(x)` for the optimal line on `[a,b]`.
+pub fn y0(x: f64, a: f64, b: f64) -> f64 {
+    let (slope, intercept) = optimal_line(a, b);
+    slope * x + intercept
+}
+
+/// `m(x, a, b) = 1 − x·y0(x)` (eq 16). Algebraically `(1 − 2x/(a+b))²`.
+pub fn m_value(x: f64, a: f64, b: f64) -> f64 {
+    let t = 1.0 - 2.0 * x / (a + b);
+    t * t
+}
+
+/// Maximum of `m` over the segment: attained at both endpoints,
+/// `m_max = ((b−a)/(a+b))²`.
+pub fn m_max(a: f64, b: f64) -> f64 {
+    let t = (b - a) / (a + b);
+    t * t
+}
+
+/// The eq-(17) Taylor-error bound after `n` iterations on segment `[a,b]`
+/// with the optimal line, in log2 (the quantities underflow f64 quickly):
+/// `log2 E_n ≤ (n+2)·log2((a+b)²/(4ab)) + (n+1)·log2(m_max)`.
+pub fn error_bound_log2(a: f64, b: f64, n: u32) -> f64 {
+    let xi_factor = (a + b) * (a + b) / (4.0 * a * b);
+    let mm = m_max(a, b);
+    if mm == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    (n as f64 + 2.0) * xi_factor.log2() + (n as f64 + 1.0) * mm.log2()
+}
+
+/// Left-hand side of the boundary recurrence (eq 19/20) in log2:
+/// `log2[(a+b)²·(b−a)^(2n+2) / (4ab)^(n+2)]`. Identical to
+/// [`error_bound_log2`] — eq (19) is eq (17) with `m_max` substituted.
+pub fn segment_bound_log2(a: f64, b: f64, n: u32) -> f64 {
+    error_bound_log2(a, b, n)
+}
+
+/// Solve eq (20) for the next boundary: the largest `b > a` with
+/// `segment_bound(a, b, n) ≤ 2^(−pr_max)`. Bisection in the log domain;
+/// the bound is strictly increasing in `b` on `(a, ∞)`.
+pub fn solve_next_boundary(a: f64, n: u32, pr_max: u32) -> f64 {
+    let target = -(pr_max as f64);
+    // Bracket: bound → −∞ as b→a⁺; grows without limit as b→∞.
+    let mut lo = a * (1.0 + 1e-15);
+    let mut hi = a * 2.0;
+    while segment_bound_log2(a, hi, n) < target {
+        hi *= 2.0;
+        assert!(hi < a * 1e6, "boundary solve failed to bracket");
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if segment_bound_log2(a, mid, n) <= target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // Return the inner point: the bound is guaranteed ≤ target there.
+    lo
+}
+
+/// Derive the full segment partition of `[1, 2]` for a given iteration
+/// budget `n` and precision target (paper §3 procedure; Table I is
+/// `derive_segments(5, 53)`). Returns the boundaries
+/// `[1, b0, b1, …, b_k]` with the last `≥ 2`.
+pub fn derive_segments(n: u32, pr_max: u32) -> Vec<f64> {
+    let mut bounds = vec![1.0];
+    let mut a = 1.0;
+    loop {
+        let b = solve_next_boundary(a, n, pr_max);
+        bounds.push(b);
+        if b >= 2.0 {
+            return bounds;
+        }
+        assert!(bounds.len() < 1024, "segment derivation diverged");
+        a = b;
+    }
+}
+
+/// Minimum Taylor iterations `n` so that the eq-(17) bound on `[a,b]`
+/// is at most `2^(−pr_max)` (paper §3: 17 for `[1,2]`, 5 for Table I).
+pub fn min_iterations(a: f64, b: f64, pr_max: u32) -> u32 {
+    let target = -(pr_max as f64);
+    for n in 0..=1_000 {
+        if error_bound_log2(a, b, n) <= target {
+            return n;
+        }
+    }
+    panic!("min_iterations did not converge for [{a}, {b}]");
+}
+
+/// Minimum iterations for a piecewise partition: the worst segment rules
+/// (paper §3, "account for the maximum error").
+pub fn min_iterations_piecewise(bounds: &[f64], pr_max: u32) -> u32 {
+    assert!(bounds.len() >= 2);
+    bounds
+        .windows(2)
+        .map(|w| min_iterations(w[0], w[1], pr_max))
+        .max()
+        .unwrap()
+}
+
+/// The two-segment split with equal per-segment total error: `p = √(ab)`
+/// (paper §3). For `[1,2]` this is `√2`.
+pub fn equal_error_split(a: f64, b: f64) -> f64 {
+    (a * b).sqrt()
+}
+
+/// Find the segment index for `x` in a boundary list (first segment whose
+/// right edge is ≥ x). Mirrors the hardware compare tree.
+pub fn segment_index(bounds: &[f64], x: f64) -> usize {
+    debug_assert!(bounds.len() >= 2);
+    for (i, w) in bounds.windows(2).enumerate() {
+        if x < w[1] {
+            return i;
+        }
+    }
+    bounds.len() - 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check_that;
+    use crate::util::check::{forall, Config};
+
+    #[test]
+    fn optimal_p_minimizes_total_error() {
+        let (a, b) = (1.0, 2.0);
+        let p_opt = optimal_p(a, b);
+        let e_opt = total_error(a, b, p_opt);
+        for p in [1.2, 1.4, 1.45, 1.55, 1.6, 1.8] {
+            assert!(
+                total_error(a, b, p) >= e_opt - 1e-12,
+                "p={p} beats the optimum"
+            );
+        }
+    }
+
+    #[test]
+    fn pointwise_error_zero_at_tangent_touch() {
+        // The tangent-at-p line touches 1/x at x=p.
+        let p = 1.5;
+        assert!(pointwise_error(p, p).abs() < 1e-15);
+        assert!(pointwise_error(1.0, p) > 0.0);
+        assert!(pointwise_error(2.0, p) > 0.0);
+    }
+
+    #[test]
+    fn m_closed_form_matches_definition() {
+        forall(Config::named("m = 1 − x·y0").cases(300), |d| {
+            let a = d.f64_range(1.0, 1.9);
+            let b = a + d.f64_range(0.01, 0.5);
+            let x = d.f64_range(a, b);
+            let m1 = 1.0 - x * y0(x, a, b);
+            let m2 = m_value(x, a, b);
+            check_that!((m1 - m2).abs() < 1e-12, "mismatch {m1} vs {m2}");
+            check_that!(m2 >= 0.0, "m negative");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn m_max_at_endpoints() {
+        let (a, b) = (1.0, 2.0);
+        let mm = m_max(a, b);
+        assert!((m_value(a, a, b) - mm).abs() < 1e-15);
+        assert!((m_value(b, a, b) - mm).abs() < 1e-15);
+        // Paper: for [1,2], m_max = 1/9 and ξ factor = 9/8.
+        assert!((mm - 1.0 / 9.0).abs() < 1e-15);
+        // Interior is strictly smaller; zero at the midpoint.
+        assert!(m_value(1.5, a, b) < 1e-30);
+        assert!(m_value(1.2, a, b) < mm);
+    }
+
+    #[test]
+    fn paper_17_iterations_single_segment() {
+        // §3: one linear segment on [1,2] needs a maximum of 17 iterations
+        // for 53 bits.
+        assert_eq!(min_iterations(1.0, 2.0, 53), 17);
+    }
+
+    #[test]
+    fn paper_5_iterations_with_table_i_segments() {
+        let bounds = derive_segments(5, 53);
+        assert_eq!(min_iterations_piecewise(&bounds, 53), 5);
+    }
+
+    #[test]
+    fn table_i_reproduced() {
+        // §3 / Table I: n = 5, 53-bit target, 8 segments.
+        let bounds = derive_segments(5, 53);
+        assert_eq!(bounds.len(), 9, "1 start + 8 boundaries");
+        // b0 solves eq (19) exactly and matches to all published digits.
+        let rel0 = ((bounds[1] - PAPER_TABLE_I[0]) / PAPER_TABLE_I[0]).abs();
+        assert!(rel0 < 5e-5, "b0: derived {:.6} vs paper (rel {rel0:.2e})", bounds[1]);
+        // Eq (20) is scale-invariant (bound depends only on b/a), so the
+        // exact recurrence is geometric with ratio b0. The paper's later
+        // entries drift from their own recurrence by up to ~0.4 % — we
+        // compare loosely and flag the drift in the E1 bench (DESIGN.md).
+        for (i, (&ours, paper)) in bounds[1..].iter().zip(PAPER_TABLE_I).enumerate() {
+            let rel = ((ours - paper) / paper).abs();
+            assert!(
+                rel < 5e-3,
+                "b{i}: derived {ours:.6} vs paper {paper} (rel {rel:.2e})"
+            );
+        }
+        // And our derivation IS self-consistent: constant ratio b0.
+        let r0 = bounds[1] / bounds[0];
+        for w in bounds.windows(2) {
+            assert!(((w[1] / w[0]) / r0 - 1.0).abs() < 1e-9, "not geometric");
+        }
+    }
+
+    #[test]
+    fn two_segment_split_point() {
+        assert!((equal_error_split(1.0, 2.0) - 2f64.sqrt()).abs() < 1e-15);
+        // E_total is NOT exactly equal at p=√(ab) for the optimal
+        // per-segment lines (the paper's equal-error argument is about the
+        // shared-endpoint construction); just sanity-check both positive.
+        let p = equal_error_split(1.0, 2.0);
+        let e1 = total_error(1.0, p, optimal_p(1.0, p));
+        let e2 = total_error(p, 2.0, optimal_p(p, 2.0));
+        assert!(e1 > 0.0 && e2 > 0.0);
+    }
+
+    #[test]
+    fn two_segment_iteration_count_documented_discrepancy() {
+        // The paper claims 15 iterations for the two-segment √(ab) split.
+        // Our eq-(17) solver gives a *smaller* bound; record the actual
+        // value so the bench can flag the mismatch (see DESIGN.md E5).
+        let p = equal_error_split(1.0, 2.0);
+        let n = min_iterations(1.0, p, 53).max(min_iterations(p, 2.0, 53));
+        assert!(n < 15, "expected < 15 by eq (17), got {n}");
+        assert!(n >= 9, "sanity: still ≥ 9, got {n}");
+    }
+
+    #[test]
+    fn segments_shrink_monotonically() {
+        // E_total is larger on the left of the range (paper §3), so
+        // derived segments get *wider* to the right but their bound stays
+        // equal; widths must increase.
+        let bounds = derive_segments(5, 53);
+        let widths: Vec<f64> = bounds.windows(2).map(|w| w[1] - w[0]).collect();
+        for w in widths.windows(2) {
+            assert!(w[1] > w[0], "segment widths should increase: {widths:?}");
+        }
+    }
+
+    #[test]
+    fn more_iterations_need_fewer_segments() {
+        let s3 = derive_segments(3, 53).len();
+        let s5 = derive_segments(5, 53).len();
+        let s8 = derive_segments(8, 53).len();
+        assert!(s3 > s5 && s5 > s8, "{s3} {s5} {s8}");
+    }
+
+    #[test]
+    fn bound_monotone_in_b() {
+        forall(Config::named("eq 19 bound increases with b").cases(200), |d| {
+            let a = d.f64_range(1.0, 1.8);
+            let b1 = a + d.f64_range(1e-4, 0.2);
+            let b2 = b1 + d.f64_range(1e-4, 0.2);
+            let n = d.range_u64(1, 10) as u32;
+            check_that!(
+                segment_bound_log2(a, b1, n) < segment_bound_log2(a, b2, n),
+                "bound not monotone"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solver_hits_target_bound() {
+        for n in [3u32, 5, 7] {
+            let b = solve_next_boundary(1.0, n, 53);
+            let lhs = segment_bound_log2(1.0, b, n);
+            assert!(
+                (lhs - (-53.0)).abs() < 1e-6,
+                "n={n}: bound at solution {lhs} ≠ −53"
+            );
+        }
+    }
+
+    #[test]
+    fn segment_index_lookup() {
+        let bounds = [1.0, 1.25, 1.5, 2.0];
+        assert_eq!(segment_index(&bounds, 1.0), 0);
+        assert_eq!(segment_index(&bounds, 1.1), 0);
+        assert_eq!(segment_index(&bounds, 1.25), 1);
+        assert_eq!(segment_index(&bounds, 1.49), 1);
+        assert_eq!(segment_index(&bounds, 1.75), 2);
+        assert_eq!(segment_index(&bounds, 1.9999), 2);
+        // Values at/above the last edge clamp to the last segment.
+        assert_eq!(segment_index(&bounds, 2.5), 2);
+    }
+
+    #[test]
+    fn error_bound_log2_matches_linear_domain_for_moderate_n() {
+        let (a, b, n) = (1.0f64, 1.2f64, 3u32);
+        let xi = (a + b) * (a + b) / (4.0 * a * b);
+        let lin = xi.powi(n as i32 + 2) * m_max(a, b).powi(n as i32 + 1);
+        assert!((error_bound_log2(a, b, n) - lin.log2()).abs() < 1e-9);
+    }
+}

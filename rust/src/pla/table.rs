@@ -1,0 +1,248 @@
+//! Fixed-point seed table — the hardware model of the PLA unit (Fig 7,
+//! "Piecewise Linear Approximation unit").
+//!
+//! Per segment `[bᵢ₋₁, bᵢ]` the unit stores the optimal line of eq (15)
+//! as a positive slope magnitude `sᵢ = 4/(a+b)²` and intercept
+//! `cᵢ = 4/(a+b)` in Q2.F fixed point. A compare tree selects the
+//! segment; one multiply and one subtract produce the seed:
+//! `y0 = cᵢ − sᵢ·x` (truncating fixed-point arithmetic, like the
+//! datapath).
+
+use super::optimal_line;
+
+/// Fixed-point piecewise-linear seed table.
+#[derive(Clone, Debug)]
+pub struct SegmentTable {
+    /// Fraction bits of every entry (Q2.F).
+    pub frac_bits: u32,
+    /// Segment right edges in fixed point (left edge of segment 0 is 1.0).
+    /// Length = number of segments; the last edge covers up to 2.0+.
+    pub edges: Vec<u64>,
+    /// Per-segment slope magnitudes `4/(a+b)²` in Q2.F.
+    pub slopes: Vec<u64>,
+    /// Per-segment intercepts `4/(a+b)` in Q2.F.
+    pub intercepts: Vec<u64>,
+    /// The float boundaries the table was built from (for reports).
+    pub boundaries: Vec<f64>,
+}
+
+impl SegmentTable {
+    /// Build from boundary list `[1, b0, …, bk]` (see
+    /// [`super::derive_segments`]) at `frac_bits` of fraction.
+    pub fn build(boundaries: &[f64], frac_bits: u32) -> Self {
+        assert!(boundaries.len() >= 2, "need at least one segment");
+        assert!(frac_bits <= 61, "Q2.F must fit in u64");
+        assert!((boundaries[0] - 1.0).abs() < 1e-12, "range starts at 1.0");
+        let scale = (1u128 << frac_bits) as f64;
+        let mut edges = Vec::new();
+        let mut slopes = Vec::new();
+        let mut intercepts = Vec::new();
+        for w in boundaries.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (slope, intercept) = optimal_line(a, b);
+            edges.push((b * scale) as u64);
+            // Slope is negative in eq (15); store |slope|.
+            slopes.push((-slope * scale).round() as u64);
+            intercepts.push((intercept * scale).round() as u64);
+        }
+        Self {
+            frac_bits,
+            edges,
+            slopes,
+            intercepts,
+            boundaries: boundaries.to_vec(),
+        }
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Segment select: the compare tree of the hardware. `x` in Q2.F.
+    #[inline]
+    pub fn select(&self, x: u64) -> usize {
+        // Linear scan mirrors a priority chain; the hot path uses a
+        // branch-free binary search (see `select_fast`).
+        for (i, &e) in self.edges.iter().enumerate() {
+            if x < e {
+                return i;
+            }
+        }
+        self.edges.len() - 1
+    }
+
+    /// Branch-reduced binary-search select (hot-path variant; identical
+    /// result to [`Self::select`]).
+    #[inline]
+    pub fn select_fast(&self, x: u64) -> usize {
+        let mut lo = 0usize;
+        let mut len = self.edges.len();
+        while len > 1 {
+            let half = len / 2;
+            let mid = lo + half;
+            // Move lo past the first half when x is at/above its edge.
+            if x >= self.edges[mid - 1] {
+                lo = mid;
+            }
+            len -= half;
+        }
+        lo
+    }
+
+    /// The seed `y0 = c − s·x` in Q2.F with truncating arithmetic.
+    /// Returns `(y0, segment_index)`.
+    #[inline]
+    pub fn seed(&self, x: u64) -> (u64, usize) {
+        let i = self.select_fast(x);
+        let prod = (self.slopes[i] as u128 * x as u128) >> self.frac_bits;
+        let y0 = self.intercepts[i].saturating_sub(prod as u64);
+        (y0, i)
+    }
+
+    /// Float view of the seed for analysis.
+    pub fn seed_f64(&self, x: f64) -> f64 {
+        let scale = (1u128 << self.frac_bits) as f64;
+        let xf = (x * scale) as u64;
+        let (y0, _) = self.seed(xf);
+        y0 as f64 / scale
+    }
+
+    /// ROM size of the table in bits (edges + slopes + intercepts), for
+    /// the hardware cost model.
+    pub fn rom_bits(&self) -> u64 {
+        let w = (self.frac_bits + 2) as u64; // Q2.F words
+        3 * w * self.num_segments() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{derive_segments, m_value, y0};
+    use super::*;
+    use crate::check_that;
+    use crate::util::check::{forall, Config};
+
+    const F: u32 = 40;
+
+    fn fx(x: f64) -> u64 {
+        (x * (1u64 << F) as f64).round() as u64
+    }
+
+    fn table() -> SegmentTable {
+        SegmentTable::build(&derive_segments(5, 53), F)
+    }
+
+    #[test]
+    fn build_has_one_entry_per_segment() {
+        let t = table();
+        assert_eq!(t.num_segments(), 8);
+        assert_eq!(t.slopes.len(), 8);
+        assert_eq!(t.intercepts.len(), 8);
+        assert_eq!(t.rom_bits(), 3 * 42 * 8);
+    }
+
+    #[test]
+    fn select_matches_float_boundaries() {
+        let t = table();
+        for (i, w) in t.boundaries.windows(2).enumerate() {
+            let mid = 0.5 * (w[0] + w[1]);
+            assert_eq!(t.select(fx(mid)), i, "midpoint of segment {i}");
+        }
+        // x = 1.0 is in segment 0; x just below the last edge in the last.
+        assert_eq!(t.select(fx(1.0)), 0);
+        assert_eq!(t.select(fx(1.9999)), t.num_segments() - 1);
+    }
+
+    #[test]
+    fn select_fast_equals_select_everywhere() {
+        let t = table();
+        forall(Config::named("select_fast == select").cases(2000), |d| {
+            let x = d.range_u64(fx(1.0), fx(2.0) - 1);
+            check_that!(
+                t.select_fast(x) == t.select(x),
+                "mismatch at x={x}: fast {} vs ref {}",
+                t.select_fast(x),
+                t.select(x)
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seed_close_to_analytic_line() {
+        let t = table();
+        forall(Config::named("fixed-point seed ≈ eq 15").cases(500), |d| {
+            let x = d.f64_range(1.0, 1.999_999);
+            let i = crate::pla::segment_index(&t.boundaries, x);
+            let (a, b) = (t.boundaries[i], t.boundaries[i + 1]);
+            let want = y0(x, a, b);
+            let got = t.seed_f64(x);
+            // Two truncations of F-bit values → error ≤ ~3 ulp of Q2.F.
+            let tol = 4.0 / (1u64 << F) as f64;
+            check_that!((got - want).abs() <= tol, "x={x}: {got} vs {want}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seed_error_within_segment_bound() {
+        // The seed's m = 1 − x·y0 never exceeds the analytic m_max by more
+        // than the fixed-point tolerance.
+        let t = table();
+        forall(Config::named("seed m within m_max").cases(500), |d| {
+            let x = d.f64_range(1.0, 1.999_999);
+            let i = crate::pla::segment_index(&t.boundaries, x);
+            let (a, b) = (t.boundaries[i], t.boundaries[i + 1]);
+            let y = t.seed_f64(x);
+            let m = 1.0 - x * y;
+            let tol = 8.0 / (1u64 << F) as f64;
+            check_that!(
+                m <= crate::pla::m_max(a, b) + tol,
+                "x={x}: m={m} exceeds bound"
+            );
+            // m may dip below 0 by at most the truncation tolerance.
+            check_that!(m >= -tol, "x={x}: m={m} < −tol");
+            let _ = m_value(x, a, b);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seed_is_monotone_nonincreasing_within_segment() {
+        // y0 is a falling line per segment; fixed-point evaluation must
+        // preserve that (truncation is monotone).
+        let t = table();
+        let bounds = t.boundaries.clone();
+        for w in bounds.windows(2) {
+            let lo = fx(w[0]);
+            let hi = fx(w[1].min(2.0)) - 1;
+            let mut last = u64::MAX;
+            let step = ((hi - lo) / 97).max(1);
+            let mut x = lo;
+            while x <= hi {
+                let (y, _) = t.seed(x);
+                assert!(y <= last, "seed rose within a segment at x={x}");
+                last = y;
+                x += step;
+            }
+        }
+    }
+
+    #[test]
+    fn single_segment_table_matches_eq15_line() {
+        let t = SegmentTable::build(&[1.0, 2.0], F);
+        assert_eq!(t.num_segments(), 1);
+        // slope 4/9, intercept 4/3 for [1,2]
+        let scale = (1u64 << F) as f64;
+        assert!((t.slopes[0] as f64 / scale - 4.0 / 9.0).abs() < 1e-9);
+        assert!((t.intercepts[0] as f64 / scale - 4.0 / 3.0).abs() < 1e-9);
+        // Seed at x=1: y0 = 8/9.
+        assert!((t.seed_f64(1.0) - 8.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "need at least one segment")]
+    fn build_rejects_empty() {
+        let _ = SegmentTable::build(&[1.0], F);
+    }
+}

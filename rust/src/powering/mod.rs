@@ -1,0 +1,455 @@
+//! The powering unit (paper §6, Fig 6).
+//!
+//! Computes `x², x³, …, x^P` under the paper's "maximize squaring"
+//! heuristic:
+//!
+//! * every **even** power `x^(2m)` is the square of `x^m` → squaring unit
+//!   (half the hardware of the ILM, see [`crate::squaring`]);
+//! * every **odd** power `x^(2m+1)` is `x^(2m) · x` → ILM, with the
+//!   priority-encoder and LOD values of `x` **cached** after the first
+//!   squaring so the multiplier needs only one PE and one LOD;
+//! * one odd and one even power are produced **simultaneously per cycle**
+//!   ("two iterations worth of correction" per cycle, paper step 6).
+//!
+//! The unit is generic over the multiplier backend so the Taylor engine
+//! can sweep exact-vs-ILM arithmetic without code changes.
+
+use crate::ilm::{ilm_mul, priority_encode};
+use crate::squaring::ilm_square;
+
+/// Operation counters shared by all backends.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub muls: u64,
+    pub squares: u64,
+    /// Priority-encoder evaluations actually performed.
+    pub pe_ops: u64,
+    /// PE evaluations avoided by the §6 operand cache.
+    pub pe_cache_hits: u64,
+}
+
+impl OpCounts {
+    pub fn add(&mut self, other: OpCounts) {
+        self.muls += other.muls;
+        self.squares += other.squares;
+        self.pe_ops += other.pe_ops;
+        self.pe_cache_hits += other.pe_cache_hits;
+    }
+}
+
+/// A multiplier backend: produces full-width (2·frac) products.
+pub trait Multiplier {
+    /// Full product of two fixed-point operands (2f fraction bits out).
+    fn mul(&mut self, a: u64, b: u64) -> u128;
+    /// Full square (2f fraction bits out).
+    fn square(&mut self, a: u64) -> u128;
+    fn counts(&self) -> OpCounts;
+    fn reset_counts(&mut self);
+    fn describe(&self) -> String;
+
+    /// Hot-path product without op-count bookkeeping (§Perf step 3).
+    /// Same numerics as [`Multiplier::mul`]; backends override to skip
+    /// their counters.
+    #[inline]
+    fn mul_hot(&mut self, a: u64, b: u64) -> u128 {
+        self.mul(a, b)
+    }
+
+    /// Hot-path square without op-count bookkeeping.
+    #[inline]
+    fn square_hot(&mut self, a: u64) -> u128 {
+        self.square(a)
+    }
+}
+
+/// Exact integer multiplier (infinite-precision reference backend).
+#[derive(Debug, Default, Clone)]
+pub struct ExactMul {
+    counts: OpCounts,
+}
+
+impl Multiplier for ExactMul {
+    fn mul(&mut self, a: u64, b: u64) -> u128 {
+        self.counts.muls += 1;
+        self.counts.pe_ops += 2;
+        a as u128 * b as u128
+    }
+
+    fn square(&mut self, a: u64) -> u128 {
+        self.counts.squares += 1;
+        self.counts.pe_ops += 1;
+        a as u128 * a as u128
+    }
+
+    #[inline]
+    fn mul_hot(&mut self, a: u64, b: u64) -> u128 {
+        a as u128 * b as u128
+    }
+
+    #[inline]
+    fn square_hot(&mut self, a: u64) -> u128 {
+        a as u128 * a as u128
+    }
+
+    fn counts(&self) -> OpCounts {
+        self.counts
+    }
+
+    fn reset_counts(&mut self) {
+        self.counts = OpCounts::default();
+    }
+
+    fn describe(&self) -> String {
+        "exact".to_string()
+    }
+}
+
+/// ILM backend with a fixed correction-iteration budget (paper §4–5).
+#[derive(Debug, Clone)]
+pub struct IlmBackend {
+    pub iterations: u32,
+    counts: OpCounts,
+}
+
+impl IlmBackend {
+    pub fn new(iterations: u32) -> Self {
+        Self {
+            iterations,
+            counts: OpCounts::default(),
+        }
+    }
+}
+
+impl Multiplier for IlmBackend {
+    fn mul(&mut self, a: u64, b: u64) -> u128 {
+        self.counts.muls += 1;
+        self.counts.pe_ops += 2;
+        ilm_mul(a, b, self.iterations).product
+    }
+
+    fn square(&mut self, a: u64) -> u128 {
+        self.counts.squares += 1;
+        self.counts.pe_ops += 1;
+        ilm_square(a, self.iterations).square
+    }
+
+    #[inline]
+    fn mul_hot(&mut self, a: u64, b: u64) -> u128 {
+        ilm_mul(a, b, self.iterations).product
+    }
+
+    #[inline]
+    fn square_hot(&mut self, a: u64) -> u128 {
+        ilm_square(a, self.iterations).square
+    }
+
+    fn counts(&self) -> OpCounts {
+        self.counts
+    }
+
+    fn reset_counts(&mut self) {
+        self.counts = OpCounts::default();
+    }
+
+    fn describe(&self) -> String {
+        format!("ilm({} iter)", self.iterations)
+    }
+}
+
+/// What a cycle of the Fig-6 schedule produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CycleTrace {
+    pub cycle: u32,
+    /// Power index computed on the multiplier this cycle (odd), if any.
+    pub odd_power: Option<u32>,
+    /// Power index computed on the squaring unit this cycle (even), if any.
+    pub even_power: Option<u32>,
+}
+
+/// Result of a powering-unit run.
+#[derive(Clone, Debug)]
+pub struct PowersResult {
+    /// `powers[i]` = x^(i+1) as Q(frac_bits) — `powers[0]` is x itself.
+    pub powers: Vec<u64>,
+    /// Fig-6 schedule actually executed.
+    pub schedule: Vec<CycleTrace>,
+    /// Total cycles (= schedule length).
+    pub cycles: u32,
+    /// Backend op counters accumulated during this run.
+    pub counts: OpCounts,
+}
+
+/// The powering unit.
+///
+/// `frac_bits` is the fixed-point fraction width of `x` (< 64); products
+/// are truncated back to `frac_bits` after every stage, matching the
+/// hardware datapath width.
+pub struct PoweringUnit<'m, M: Multiplier + ?Sized> {
+    backend: &'m mut M,
+    frac_bits: u32,
+}
+
+impl<'m, M: Multiplier + ?Sized> PoweringUnit<'m, M> {
+    pub fn new(backend: &'m mut M, frac_bits: u32) -> Self {
+        assert!(frac_bits < 64);
+        Self { backend, frac_bits }
+    }
+
+    /// Compute `x^1 … x^max_power` per the Fig-6 schedule.
+    ///
+    /// Cycle 1 computes x² and caches the PE/LOD of x (paper step 1);
+    /// every later cycle computes the next odd power on the multiplier
+    /// (using the cached x, saving one PE evaluation — step 3) and the
+    /// next even power on the squaring unit (step 4), in parallel.
+    pub fn compute_powers(&mut self, x: u64, max_power: u32) -> PowersResult {
+        assert!(max_power >= 1, "need at least x^1");
+        let before = self.backend.counts();
+        let f = self.frac_bits;
+        let mut powers: Vec<u64> = Vec::with_capacity(max_power as usize);
+        powers.push(x); // x^1
+        let mut schedule = Vec::new();
+        let mut counts_extra = OpCounts::default();
+
+        if max_power >= 2 {
+            // Cycle 1: x² on the squaring unit; PE/LOD of x cached.
+            let sq = self.backend.square(x) >> f;
+            // Model the §6 cache: the PE of x is evaluated once here and
+            // reused for every later odd-power multiply.
+            let _ = priority_encode(x.max(1));
+            powers.push(sq as u64);
+            schedule.push(CycleTrace {
+                cycle: 1,
+                odd_power: None,
+                even_power: Some(2),
+            });
+
+            let mut cycle = 2;
+            let mut next_odd = 3u32;
+            let mut next_even = 4u32;
+            while next_odd <= max_power || next_even <= max_power {
+                let mut trace = CycleTrace {
+                    cycle,
+                    odd_power: None,
+                    even_power: None,
+                };
+                if next_odd <= max_power {
+                    // x^(2m+1) = x^(2m) · x, with x's PE cached → count a hit.
+                    let even_operand = powers[(next_odd - 2) as usize]; // x^(2m)
+                    let p = self.backend.mul(even_operand, x) >> f;
+                    counts_extra.pe_cache_hits += 1;
+                    ensure_len(&mut powers, next_odd as usize);
+                    powers[(next_odd - 1) as usize] = p as u64;
+                    trace.odd_power = Some(next_odd);
+                    next_odd += 2;
+                }
+                if next_even <= max_power {
+                    // x^(2m) = (x^m)², operand available from earlier cycles.
+                    let half = powers[(next_even / 2 - 1) as usize];
+                    let p = self.backend.square(half) >> f;
+                    ensure_len(&mut powers, next_even as usize);
+                    powers[(next_even - 1) as usize] = p as u64;
+                    trace.even_power = Some(next_even);
+                    next_even += 2;
+                }
+                schedule.push(trace);
+                cycle += 1;
+            }
+        }
+
+        let mut counts = self.backend.counts();
+        counts.muls -= before.muls;
+        counts.squares -= before.squares;
+        counts.pe_ops -= before.pe_ops;
+        // Cache hits: the backend charged 2 PE per mul, but one operand
+        // (x) was cached — refund it.
+        counts.pe_ops -= counts_extra.pe_cache_hits;
+        counts.pe_cache_hits += counts_extra.pe_cache_hits;
+
+        PowersResult {
+            cycles: schedule.len() as u32,
+            powers,
+            schedule,
+            counts,
+        }
+    }
+}
+
+fn ensure_len(v: &mut Vec<u64>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0);
+    }
+}
+
+/// Cycles the Fig-6 schedule needs for `max_power` powers: one cycle for
+/// x², then one cycle per (odd, even) pair.
+pub const fn schedule_cycles(max_power: u32) -> u32 {
+    if max_power < 2 {
+        0
+    } else if max_power == 2 {
+        1
+    } else {
+        // Powers 3..=max_power arrive two per cycle.
+        1 + (max_power - 1) / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check_that;
+    use crate::util::check::{forall, Config};
+
+    const F: u32 = 24;
+
+    fn fx(x: f64) -> u64 {
+        (x * (1u64 << F) as f64).round() as u64
+    }
+
+    fn to_f(x: u64) -> f64 {
+        x as f64 / (1u64 << F) as f64
+    }
+
+    #[test]
+    fn exact_backend_computes_true_powers() {
+        let mut be = ExactMul::default();
+        let mut pu = PoweringUnit::new(&mut be, F);
+        let x = fx(0.5);
+        let r = pu.compute_powers(x, 8);
+        assert_eq!(r.powers.len(), 8);
+        for (i, &p) in r.powers.iter().enumerate() {
+            let want = 0.5f64.powi(i as i32 + 1);
+            let got = to_f(p);
+            assert!(
+                (got - want).abs() < 1e-5,
+                "x^{}: got {got}, want {want}",
+                i + 1
+            );
+        }
+    }
+
+    #[test]
+    fn schedule_matches_fig6_for_12_powers() {
+        // Fig 6 computes up to 12 powers: cycle 1 → x²; cycles 2..6 →
+        // (x³,x⁴), (x⁵,x⁶), (x⁷,x⁸), (x⁹,x¹⁰), (x¹¹,x¹²).
+        let mut be = ExactMul::default();
+        let mut pu = PoweringUnit::new(&mut be, F);
+        let r = pu.compute_powers(fx(0.9), 12);
+        assert_eq!(r.cycles, 6);
+        assert_eq!(r.cycles, schedule_cycles(12));
+        assert_eq!(
+            r.schedule[0],
+            CycleTrace { cycle: 1, odd_power: None, even_power: Some(2) }
+        );
+        assert_eq!(
+            r.schedule[1],
+            CycleTrace { cycle: 2, odd_power: Some(3), even_power: Some(4) }
+        );
+        assert_eq!(
+            r.schedule[5],
+            CycleTrace { cycle: 6, odd_power: Some(11), even_power: Some(12) }
+        );
+    }
+
+    #[test]
+    fn schedule_cycles_closed_form() {
+        assert_eq!(schedule_cycles(1), 0);
+        assert_eq!(schedule_cycles(2), 1);
+        assert_eq!(schedule_cycles(3), 2);
+        assert_eq!(schedule_cycles(4), 2);
+        assert_eq!(schedule_cycles(5), 3);
+        assert_eq!(schedule_cycles(12), 6);
+        // And the executed schedule agrees for every count.
+        for p in 2..20 {
+            let mut be = ExactMul::default();
+            let mut pu = PoweringUnit::new(&mut be, F);
+            let r = pu.compute_powers(fx(0.7), p);
+            assert_eq!(r.cycles, schedule_cycles(p), "max_power={p}");
+        }
+    }
+
+    #[test]
+    fn even_powers_use_squares_odd_use_muls() {
+        let mut be = ExactMul::default();
+        let mut pu = PoweringUnit::new(&mut be, F);
+        let r = pu.compute_powers(fx(0.8), 12);
+        // 12 powers: squares for 2,4,6,8,10,12 (6), muls for 3,5,7,9,11 (5).
+        assert_eq!(r.counts.squares, 6);
+        assert_eq!(r.counts.muls, 5);
+        // One PE per square (6) + one PE per mul (5, second operand cached).
+        assert_eq!(r.counts.pe_ops, 11);
+        assert_eq!(r.counts.pe_cache_hits, 5);
+    }
+
+    #[test]
+    fn max_power_one_is_trivial() {
+        let mut be = ExactMul::default();
+        let mut pu = PoweringUnit::new(&mut be, F);
+        let x = fx(0.3);
+        let r = pu.compute_powers(x, 1);
+        assert_eq!(r.powers, vec![x]);
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.counts.muls + r.counts.squares, 0);
+    }
+
+    #[test]
+    fn ilm_backend_with_full_iterations_matches_exact() {
+        let x = fx(0.437);
+        let mut exact = ExactMul::default();
+        let r_exact = PoweringUnit::new(&mut exact, F).compute_powers(x, 10);
+        let mut ilm = IlmBackend::new(64);
+        let r_ilm = PoweringUnit::new(&mut ilm, F).compute_powers(x, 10);
+        assert_eq!(r_exact.powers, r_ilm.powers);
+    }
+
+    #[test]
+    fn ilm_backend_underestimates_with_few_iterations() {
+        forall(Config::named("ilm powers ≤ exact powers").cases(100), |d| {
+            let x = d.range_u64(1, (1 << F) - 1); // x < 1.0
+            let iters = d.range_u64(0, 3) as u32;
+            let mut exact = ExactMul::default();
+            let re = PoweringUnit::new(&mut exact, F).compute_powers(x, 6);
+            let mut ilm = IlmBackend::new(iters);
+            let ri = PoweringUnit::new(&mut ilm, F).compute_powers(x, 6);
+            for (i, (&pi, &pe)) in ri.powers.iter().zip(re.powers.iter()).enumerate() {
+                check_that!(pi <= pe, "x^{} ilm {} > exact {}", i + 1, pi, pe);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn powers_of_value_below_one_decrease() {
+        forall(Config::named("powers decrease for x<1").cases(200), |d| {
+            let x = d.range_u64(1, (1 << F) - 1);
+            let mut be = ExactMul::default();
+            let r = PoweringUnit::new(&mut be, F).compute_powers(x, 8);
+            for w in r.powers.windows(2) {
+                check_that!(w[1] <= w[0], "powers increased: {:?}", w);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_error_bounded_per_stage() {
+        // Each truncation drops < 1 ulp; x^k accumulated error is < k ulps
+        // (powers of x < 1 only shrink the absolute error).
+        forall(Config::named("truncation error bound").cases(100), |d| {
+            let xf = d.f64_range(0.01, 0.999);
+            let x = fx(xf);
+            let mut be = ExactMul::default();
+            let r = PoweringUnit::new(&mut be, F).compute_powers(x, 10);
+            for (i, &p) in r.powers.iter().enumerate() {
+                let k = i as i32 + 1;
+                let want = to_f(x).powi(k);
+                let err = (to_f(p) - want).abs();
+                let bound = (k as f64) / (1u64 << F) as f64;
+                check_that!(
+                    err <= bound,
+                    "x^{k}: err {err} > bound {bound} (x={xf})"
+                );
+            }
+            Ok(())
+        });
+    }
+}

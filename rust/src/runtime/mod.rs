@@ -1,0 +1,236 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! The interchange format is **HLO text** (see `python/compile/aot.py`
+//! and /opt/xla-example/README.md): jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; text
+//! round-trips cleanly through `HloModuleProto::from_text_file`.
+//!
+//! A [`DivideEngine`] owns one compiled executable per batch size from
+//! `artifacts/manifest.json` and pads incoming batches up to the nearest
+//! entry — Python is never on this path.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    pub batch: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut entries = Vec::new();
+        for e in root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+        {
+            entries.push(ManifestEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                path: dir.join(
+                    e.get("path")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("entry missing path"))?,
+                ),
+                kind: e
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                batch: e
+                    .get("batch")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("entry missing batch"))? as usize,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Default artifact location (repo-root `artifacts/`, overridable via
+    /// `TSDIV_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TSDIV_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// A compiled divide executable of fixed batch size.
+pub struct DivideExecutable {
+    pub batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl DivideExecutable {
+    /// Execute on exactly `batch` lanes.
+    pub fn run_exact(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(a.len(), self.batch);
+        assert_eq!(b.len(), self.batch);
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let result = self.exe.execute::<xla::Literal>(&[la, lb])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The division engine: PJRT client + one executable per batch size.
+pub struct DivideEngine {
+    client: xla::PjRtClient,
+    /// Sorted ascending by batch size.
+    executables: Vec<DivideExecutable>,
+}
+
+impl DivideEngine {
+    /// Compile every `divide` entry in the manifest on the CPU client.
+    pub fn load(manifest: &Manifest) -> Result<DivideEngine> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = Vec::new();
+        for e in manifest.entries.iter().filter(|e| e.kind == "divide") {
+            let proto = xla::HloModuleProto::from_text_file(
+                e.path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", e.path))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.push(DivideExecutable { batch: e.batch, exe });
+        }
+        if executables.is_empty() {
+            bail!("manifest has no divide entries");
+        }
+        executables.sort_by_key(|e| e.batch);
+        Ok(DivideEngine {
+            client,
+            executables,
+        })
+    }
+
+    /// Convenience: load from the default artifacts directory.
+    pub fn load_default() -> Result<DivideEngine> {
+        let manifest = Manifest::load(&Manifest::default_dir())?;
+        Self::load(&manifest)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Available executable batch sizes (ascending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.executables.iter().map(|e| e.batch).collect()
+    }
+
+    /// Smallest executable batch ≥ n (or the largest available).
+    fn pick(&self, n: usize) -> &DivideExecutable {
+        self.executables
+            .iter()
+            .find(|e| e.batch >= n)
+            .unwrap_or_else(|| self.executables.last().unwrap())
+    }
+
+    /// Divide arbitrary-length slices: chunks through the largest
+    /// executable, pads the tail with 1.0/1.0 lanes.
+    pub fn divide(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(a.len(), b.len());
+        let mut out = Vec::with_capacity(a.len());
+        let largest = self.executables.last().unwrap().batch;
+        let mut off = 0;
+        while off < a.len() {
+            let n = (a.len() - off).min(largest);
+            let exe = self.pick(n);
+            if n == exe.batch {
+                out.extend(exe.run_exact(&a[off..off + n], &b[off..off + n])?);
+            } else {
+                // Pad the tail: 1/1 lanes are harmless.
+                let mut pa = vec![1.0f32; exe.batch];
+                let mut pb = vec![1.0f32; exe.batch];
+                pa[..n].copy_from_slice(&a[off..off + n]);
+                pb[..n].copy_from_slice(&b[off..off + n]);
+                let full = exe.run_exact(&pa, &pb)?;
+                out.extend_from_slice(&full[..n]);
+            }
+            off += n;
+        }
+        Ok(out)
+    }
+}
+
+/// True when the artifacts directory exists with a manifest — used by
+/// tests/benches to skip gracefully before `make artifacts` has run.
+pub fn artifacts_available() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trip tests live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts`). Here: manifest parsing on fixtures.
+
+    #[test]
+    fn manifest_parses_fixture() {
+        let dir = std::env::temp_dir().join("tsdiv_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": 1, "entries": [
+                {"name": "divide_b8", "path": "divide_b8.hlo.txt",
+                 "kind": "divide", "batch": 8,
+                 "inputs": [{"shape": [8], "dtype": "float32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].name, "divide_b8");
+        assert_eq!(m.entries[0].batch, 8);
+        assert_eq!(m.entries[0].kind, "divide");
+        assert!(m.entries[0].path.ends_with("divide_b8.hlo.txt"));
+    }
+
+    #[test]
+    fn manifest_missing_file_errors() {
+        let dir = std::env::temp_dir().join("tsdiv_no_such_dir_xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn manifest_bad_json_errors() {
+        let dir = std::env::temp_dir().join("tsdiv_bad_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), r#"{"entries": [{}]}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

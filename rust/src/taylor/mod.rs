@@ -1,0 +1,468 @@
+//! The Taylor-series reciprocal engine (paper §2, eq 9–12; system Fig 7).
+//!
+//! Given a significand `x ∈ [1, 2)` and a seed `y0 ≈ 1/x` from the PLA
+//! unit, eq (11) refines the reciprocal:
+//!
+//! `1/x ≈ y0 · (1 + m + m² + … + m^n)` with `m = 1 − x·y0` (eq 16).
+//!
+//! The powers of `m` come from the powering unit (§6) — even powers on
+//! the squaring unit, odd powers on the ILM with cached operand — and an
+//! accumulator sums them (Fig 7). Everything below is fixed-point Q2.F
+//! with truncating multiplies, mirroring the datapath; the multiplier
+//! backend is pluggable (exact vs ILM with a correction budget) so the
+//! benches can sweep the accuracy/hardware tradeoff.
+
+use crate::pla::SegmentTable;
+use crate::powering::{Multiplier, OpCounts, PoweringUnit};
+
+/// Configuration of the reciprocal datapath.
+#[derive(Clone, Debug)]
+pub struct TaylorConfig {
+    /// Highest Taylor power `n` (the paper's "number of iterations").
+    pub order: u32,
+    /// Fixed-point fraction bits of the datapath (Q2.F).
+    pub frac_bits: u32,
+    /// PLA seed table (shares the same `frac_bits`).
+    pub table: SegmentTable,
+}
+
+impl TaylorConfig {
+    /// The paper's headline configuration: Table-I segments (n = 5,
+    /// 53-bit target) at a given datapath width.
+    pub fn paper_default(frac_bits: u32) -> Self {
+        let bounds = crate::pla::derive_segments(5, 53);
+        Self {
+            order: 5,
+            frac_bits,
+            table: SegmentTable::build(&bounds, frac_bits),
+        }
+    }
+
+    /// Arbitrary (order, segments) configuration at `frac_bits`.
+    pub fn with_segments(order: u32, pr_max: u32, frac_bits: u32) -> Self {
+        let bounds = crate::pla::derive_segments(order, pr_max);
+        Self {
+            order,
+            frac_bits,
+            table: SegmentTable::build(&bounds, frac_bits),
+        }
+    }
+}
+
+/// Diagnostics-bearing result of a reciprocal computation.
+#[derive(Clone, Debug)]
+pub struct RecipResult {
+    /// `1/x` in Q2.F.
+    pub recip: u64,
+    /// PLA segment used.
+    pub segment: usize,
+    /// `m = 1 − x·y0` in Q2.F.
+    pub m: u64,
+    /// Powering-unit cycles consumed (Fig 6 schedule).
+    pub powering_cycles: u32,
+    /// Multiplier/squarer op counts for this reciprocal.
+    pub counts: OpCounts,
+}
+
+/// The reciprocal engine: PLA seed → powering unit → accumulator →
+/// final multiply (Fig 7 datapath).
+pub struct TaylorEngine<'m, M: Multiplier + ?Sized> {
+    pub cfg: TaylorConfig,
+    backend: &'m mut M,
+}
+
+impl<'m, M: Multiplier + ?Sized> TaylorEngine<'m, M> {
+    pub fn new(cfg: TaylorConfig, backend: &'m mut M) -> Self {
+        assert_eq!(
+            cfg.frac_bits, cfg.table.frac_bits,
+            "table and datapath widths must agree"
+        );
+        Self { cfg, backend }
+    }
+
+    /// Compute `1/x` for `x ∈ [1, 2)` in Q2.F.
+    pub fn reciprocal(&mut self, x: u64) -> RecipResult {
+        reciprocal_fixed(&self.cfg, self.backend, x)
+    }
+
+    /// Float-domain convenience wrapper for analysis code: `x ∈ [1,2)`.
+    pub fn reciprocal_f64(&mut self, x: f64) -> f64 {
+        let f = self.cfg.frac_bits;
+        let scale = (1u128 << f) as f64;
+        let xq = (x * scale) as u64;
+        let r = self.reciprocal(xq.max(1 << f));
+        r.recip as f64 / scale
+    }
+}
+
+/// Free-function core of the reciprocal datapath — the divider hot path
+/// calls this directly to avoid rebuilding an engine per operation.
+///
+/// Steps (Fig 7): PLA seed → `m = 1 − x·y0` → powering unit → accumulator
+/// → final multiply.
+pub fn reciprocal_fixed<M: Multiplier + ?Sized>(
+    cfg: &TaylorConfig,
+    backend: &mut M,
+    x: u64,
+) -> RecipResult {
+    let f = cfg.frac_bits;
+    let one = 1u64 << f;
+    debug_assert!(x >= one && x < (one << 1), "x must be in [1,2) Q2.F");
+    let before = backend.counts();
+
+    // 1. Seed from the PLA unit (compare tree + one multiply).
+    let (y0, segment) = cfg.table.seed(x);
+
+    // 2. m = 1 − x·y0, saturating at 0: the analytic m is ≥ 0
+    //    (m(x) = (1 − 2x/(a+b))²); truncation may push the fixed-point
+    //    value a hair negative, which hardware clamps.
+    let t = (backend.mul(x, y0) >> f) as u64;
+    let m = one.saturating_sub(t);
+
+    // 3. Powers m² … m^n from the powering unit (Fig 6 schedule).
+    let (sum, cycles) = if cfg.order == 0 || m == 0 {
+        (one, 0)
+    } else if cfg.order == 1 {
+        (one + m, 0)
+    } else {
+        let mut pu = PoweringUnit::new(backend, f);
+        let powers = pu.compute_powers(m, cfg.order);
+        // 4. Accumulator: S = 1 + Σ m^k.
+        let mut s = one as u128;
+        for &p in &powers.powers {
+            s += p as u128;
+        }
+        (s as u64, powers.cycles)
+    };
+
+    // 5. recip = y0 · S (final multiply of Fig 7).
+    let recip = (backend.mul(y0, sum) >> f) as u64;
+
+    let mut counts = backend.counts();
+    counts.muls -= before.muls;
+    counts.squares -= before.squares;
+    counts.pe_ops -= before.pe_ops;
+    counts.pe_cache_hits -= before.pe_cache_hits;
+
+    RecipResult {
+        recip,
+        segment,
+        m,
+        powering_cycles: cycles,
+        counts,
+    }
+}
+
+/// Maximum Taylor order served by the allocation-free fast path.
+pub const MAX_FAST_ORDER: u32 = 24;
+
+/// Allocation-free reciprocal — the divider's hot path (§Perf step 1).
+///
+/// Numerically identical to [`reciprocal_fixed`] (same §6 power schedule:
+/// even powers squared from the half power, odd powers multiplied by the
+/// cached base), but with a fixed-size power buffer, no schedule trace
+/// and no op-count bookkeeping. Call through a concrete `M` so the
+/// multiplies monomorphize (§Perf step 2).
+#[inline]
+pub fn reciprocal_fast<M: Multiplier>(cfg: &TaylorConfig, backend: &mut M, x: u64) -> u64 {
+    let f = cfg.frac_bits;
+    let one = 1u64 << f;
+    debug_assert!(x >= one && x < (one << 1));
+    debug_assert!(cfg.order <= MAX_FAST_ORDER);
+
+    let (y0, _) = cfg.table.seed(x);
+    let t = (backend.mul_hot(x, y0) >> f) as u64;
+    let m = one.saturating_sub(t);
+
+    let mut sum = one as u128;
+    if m != 0 && cfg.order >= 1 {
+        if cfg.order == 5 {
+            // Straight-line §6 schedule for the paper's headline order
+            // (§Perf step 4: no loop-carried parity branch).
+            let m2 = (backend.square_hot(m) >> f) as u64;
+            let m3 = (backend.mul_hot(m2, m) >> f) as u64;
+            let m4 = (backend.square_hot(m2) >> f) as u64;
+            let m5 = (backend.mul_hot(m4, m) >> f) as u64;
+            sum += m as u128 + m2 as u128 + m3 as u128 + m4 as u128 + m5 as u128;
+        } else {
+            let mut powers = [0u64; MAX_FAST_ORDER as usize];
+            powers[0] = m;
+            sum += m as u128;
+            for p in 2..=cfg.order {
+                let v = if p % 2 == 0 {
+                    // Even power: squaring unit on x^(p/2).
+                    (backend.square_hot(powers[(p / 2 - 1) as usize]) >> f) as u64
+                } else {
+                    // Odd power: multiplier with the cached base operand.
+                    (backend.mul_hot(powers[(p - 2) as usize], m) >> f) as u64
+                };
+                powers[(p - 1) as usize] = v;
+                sum += v as u128;
+            }
+        }
+    }
+    (backend.mul_hot(y0, sum as u64) >> f) as u64
+}
+
+/// The analytic error term of eq (12): `E_n = m^(n+1) / (1 − ξ)^(n+2)`
+/// evaluated at the worst admissible `ξ = m` (upper bound).
+pub fn analytic_error_bound(m: f64, n: u32) -> f64 {
+    m.powi(n as i32 + 1) / (1.0 - m).powi(n as i32 + 2)
+}
+
+/// The truncated geometric sum `y0·Σ_{k≤n} m^k` in exact f64 arithmetic —
+/// the infinite-precision reference of eq (11), used to separate
+/// *method* error (Taylor truncation) from *datapath* error (fixed point,
+/// ILM) in the analysis layer.
+pub fn taylor_reference(x: f64, y0: f64, n: u32) -> f64 {
+    let m = 1.0 - x * y0;
+    let mut sum = 1.0;
+    let mut mk = 1.0;
+    for _ in 0..n {
+        mk *= m;
+        sum += mk;
+    }
+    y0 * sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check_that;
+    use crate::powering::{ExactMul, IlmBackend};
+    use crate::util::check::{forall, Config};
+
+    const F: u32 = 60;
+
+    fn engine_exact(order: u32) -> (TaylorConfig, ExactMul) {
+        (
+            TaylorConfig::with_segments(order, 53, F),
+            ExactMul::default(),
+        )
+    }
+
+    #[test]
+    fn reciprocal_of_one_is_one() {
+        let (cfg, mut be) = engine_exact(5);
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        let one = 1u64 << F;
+        let r = eng.reciprocal(one);
+        // x = 1 is the worst point of segment 0: the eq-(17) method error
+        // there is ≈ 2^-53 = 128 ulps of Q2.60 (the paper's bound is
+        // *at most* 2^-53, attained at segment edges).
+        let err = (r.recip as i128 - one as i128).unsigned_abs();
+        assert!(err <= 160, "1/1 off by {err} ulps of Q2.{F}");
+    }
+
+    #[test]
+    fn reaches_53_bit_precision_with_paper_config() {
+        // Paper §3: 8 segments + n=5 ⇒ ≥53-bit reciprocal. With the exact
+        // multiplier backend the only other error is fixed-point
+        // truncation; allow a small multiple of 2^-60 for that.
+        let (cfg, mut be) = engine_exact(5);
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        for xf in [1.0, 1.001, 1.098, 1.1, 1.33, 1.5, 1.75, 1.9, 1.999999] {
+            let got = eng.reciprocal_f64(xf);
+            let want = 1.0 / xf;
+            let err = (got - want).abs();
+            // The eq-(17) bound is ≤ 2^-53 inclusive (attained at segment
+            // edges); allow 25 % headroom for fixed-point truncation.
+            let bound = 2f64.powi(-53) * 1.25;
+            assert!(
+                err < bound,
+                "x={xf}: err {err:.3e} ≥ 1.25·2^-53 (got {got}, want {want})"
+            );
+        }
+    }
+
+    #[test]
+    fn property_53_bit_precision_random_x() {
+        let (cfg, mut be) = engine_exact(5);
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        forall(Config::named("paper config reaches 2^-53").cases(400), |d| {
+            let xf = d.f64_range(1.0, 1.999_999_9);
+            let got = eng.reciprocal_f64(xf);
+            let err = (got - 1.0 / xf).abs();
+            check_that!(err < 2f64.powi(-53) * 1.25, "x={xf}: err {err:.3e}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn order_improves_error_until_floor() {
+        let mut prev = f64::INFINITY;
+        let x = 1.0941; // near a segment's left edge → m near max
+        for order in 0..5 {
+            let cfg = TaylorConfig::with_segments(5, 53, F);
+            let cfg = TaylorConfig { order, ..cfg };
+            let mut be = ExactMul::default();
+            let mut eng = TaylorEngine::new(cfg, &mut be);
+            let err = (eng.reciprocal_f64(x) - 1.0 / x).abs();
+            assert!(
+                err <= prev * 1.05 + 1e-18,
+                "order {order}: err {err} worse than previous {prev}"
+            );
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn single_segment_17_iterations_reaches_53_bits() {
+        // Paper §3: one segment on [1,2] needs 17 iterations. Verify the
+        // datapath achieves it at the worst point x = 1.
+        let cfg = TaylorConfig {
+            order: 17,
+            frac_bits: F,
+            table: SegmentTable::build(&[1.0, 2.0], F),
+        };
+        let mut be = ExactMul::default();
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        for xf in [1.0, 1.0001, 1.5, 1.99999] {
+            let err = (eng.reciprocal_f64(xf) - 1.0 / xf).abs();
+            assert!(err < 2f64.powi(-53) * 1.25, "x={xf}: err {err:.3e}");
+        }
+    }
+
+    #[test]
+    fn single_segment_fewer_iterations_fails_worst_case() {
+        // With only 8 iterations on one segment the worst-case x=1 must
+        // NOT reach 53 bits (bound says ~26 bits) — guards against the
+        // test above passing vacuously.
+        let cfg = TaylorConfig {
+            order: 8,
+            frac_bits: F,
+            table: SegmentTable::build(&[1.0, 2.0], F),
+        };
+        let mut be = ExactMul::default();
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        let err = (eng.reciprocal_f64(1.0) - 1.0).abs();
+        assert!(err > 2f64.powi(-53), "8 iterations should not suffice at x=1");
+    }
+
+    #[test]
+    fn ilm_backend_with_full_budget_matches_exact() {
+        let (cfg, mut be) = engine_exact(5);
+        let mut eng = TaylorEngine::new(cfg.clone(), &mut be);
+        let mut ilm = IlmBackend::new(64);
+        let mut eng_ilm = TaylorEngine::new(cfg, &mut ilm);
+        for xf in [1.01, 1.2, 1.55, 1.83] {
+            let scale = (1u128 << F) as f64;
+            let xq = (xf * scale) as u64;
+            assert_eq!(
+                eng.reciprocal(xq).recip,
+                eng_ilm.reciprocal(xq).recip,
+                "x={xf}"
+            );
+        }
+    }
+
+    #[test]
+    fn ilm_iterations_sweep_degrades_gracefully() {
+        // Fewer ILM corrections → more error, but still a valid
+        // approximation (error < 2^-8 even with 4 corrections).
+        let x = 1.37;
+        let mut errs = Vec::new();
+        for iters in [4u32, 8, 16, 64] {
+            let cfg = TaylorConfig::with_segments(5, 53, F);
+            let mut be = IlmBackend::new(iters);
+            let mut eng = TaylorEngine::new(cfg, &mut be);
+            errs.push((eng.reciprocal_f64(x) - 1.0 / x).abs());
+        }
+        assert!(errs[0] < 2f64.powi(-8));
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] * 1.01 + 1e-18, "error rose with more ILM iters: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn counts_and_cycles_reported() {
+        let (cfg, mut be) = engine_exact(5);
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        let r = eng.reciprocal((1.4 * (1u64 << F) as f64) as u64);
+        // order 5 → powering computes m^2..m^5: 2 squares (2,4), 2 muls
+        // (3,5); plus the m multiply and the final multiply (the seed
+        // multiply lives inside the PLA table, not the shared backend).
+        assert_eq!(r.counts.squares, 2);
+        assert_eq!(r.counts.muls, 2 + 2);
+        assert_eq!(r.powering_cycles, 3); // x²; (x³,x⁴); (x⁵,—)
+        assert!(r.m < 1 << F);
+        assert!(r.segment < eng.cfg.table.num_segments());
+    }
+
+    #[test]
+    fn analytic_error_bound_basics() {
+        // Matches eq (12) shape: decreasing in n, increasing in m.
+        assert!(analytic_error_bound(0.1, 3) < analytic_error_bound(0.1, 2));
+        assert!(analytic_error_bound(0.2, 3) > analytic_error_bound(0.1, 3));
+        // For [1,2] worst case m=1/9, n=17: below 2^-53… times ξ slack.
+        let e = analytic_error_bound(1.0 / 9.0, 17);
+        assert!(e < 2f64.powi(-49));
+    }
+
+    #[test]
+    fn taylor_reference_converges_to_true_reciprocal() {
+        let x = 1.618;
+        let y0 = crate::pla::y0(x, 1.0, 2.0);
+        let mut prev = f64::INFINITY;
+        for n in [1u32, 3, 6, 12, 24] {
+            let err = (taylor_reference(x, y0, n) - 1.0 / x).abs();
+            // Allow f64 noise wobble once converged below ~1e-15.
+            assert!(err <= prev + 1e-15, "error rose at n={n}");
+            prev = err;
+        }
+        assert!(prev < 1e-12);
+    }
+
+    #[test]
+    fn datapath_error_splits_into_method_plus_truncation() {
+        // With the exact backend, |datapath − reference| ≤ a few dozen
+        // Q2.60 ulps (truncation only).
+        let (cfg, mut be) = engine_exact(5);
+        let table = cfg.table.clone();
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        forall(Config::named("datapath ≈ reference").cases(200), |d| {
+            let x = d.f64_range(1.0, 1.999_999);
+            let y0q = table.seed_f64(x);
+            let reference = taylor_reference(x, y0q, 5);
+            let got = eng.reciprocal_f64(x);
+            // The f64 reference itself carries ~2^-53 arithmetic noise on
+            // values near 1, which dominates the Q2.60 truncation.
+            let tol = 100.0 / (1u128 << F) as f64 + 4.0 * 2f64.powi(-53);
+            check_that!(
+                (got - reference).abs() < tol,
+                "x={x}: datapath {got} vs reference {reference}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_path_bit_identical_to_diagnostic_path() {
+        let cfg = TaylorConfig::paper_default(60);
+        for be_iters in [None, Some(2u32), Some(8)] {
+            for i in 0..500u64 {
+                let x = (1u64 << 60) + i * ((1u64 << 60) / 500) + 12345;
+                let x = x.min((1u64 << 61) - 1);
+                let (slow, fast) = match be_iters {
+                    None => {
+                        let mut b1 = ExactMul::default();
+                        let mut b2 = ExactMul::default();
+                        (
+                            reciprocal_fixed(&cfg, &mut b1, x).recip,
+                            reciprocal_fast(&cfg, &mut b2, x),
+                        )
+                    }
+                    Some(k) => {
+                        let mut b1 = IlmBackend::new(k);
+                        let mut b2 = IlmBackend::new(k);
+                        (
+                            reciprocal_fixed(&cfg, &mut b1, x).recip,
+                            reciprocal_fast(&cfg, &mut b2, x),
+                        )
+                    }
+                };
+                assert_eq!(slow, fast, "x={x} backend={be_iters:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! A small seeded property-testing framework (proptest is not vendored).
+//!
+//! Usage pattern:
+//!
+//! ```no_run
+//! use tsdiv::util::check::{Config, forall};
+//! use tsdiv::check_eq;
+//! forall(Config::named("mul commutes"), |r| {
+//!     let a = r.range_u64(0, 1 << 20);
+//!     let b = r.range_u64(0, 1 << 20);
+//!     check_eq!(a.wrapping_mul(b), b.wrapping_mul(a));
+//!     Ok(())
+//! });
+//! ```
+//!
+//! A failing case is re-run with a shrinking pass over the recorded draw
+//! tape: the framework retries the property with each draw clamped toward
+//! its minimum, and reports the smallest failing tape it found, plus the
+//! seed to reproduce.
+
+use super::rng::Rng;
+
+/// Property test configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub name: &'static str,
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn named(name: &'static str) -> Self {
+        Self {
+            name,
+            cases: 256,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// A deterministic draw source handed to properties. Records every draw
+/// so failures can be shrunk and replayed.
+pub struct Draw {
+    rng: Rng,
+    tape: Vec<u64>,
+    /// When replaying a shrunk tape, draws come from here instead.
+    replay: Option<(Vec<u64>, usize)>,
+}
+
+impl Draw {
+    fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            tape: Vec::new(),
+            replay: None,
+        }
+    }
+
+    fn replaying(tape: Vec<u64>) -> Self {
+        Self {
+            rng: Rng::new(0),
+            tape: Vec::new(),
+            replay: Some((tape, 0)),
+        }
+    }
+
+    #[inline]
+    fn raw(&mut self) -> u64 {
+        if let Some((tape, idx)) = &mut self.replay {
+            let v = tape.get(*idx).copied().unwrap_or(0);
+            *idx += 1;
+            self.tape.push(v);
+            v
+        } else {
+            let v = self.rng.next_u64();
+            self.tape.push(v);
+            v
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.raw()
+    }
+
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        let span = hi - lo;
+        if span == u64::MAX {
+            return self.raw();
+        }
+        lo + self.raw() % (span + 1)
+    }
+
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128) as u64;
+        (lo as i128 + (self.raw() % (span.wrapping_add(1)).max(1)) as i128) as i64
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.raw() as u32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.raw() & 1 == 1
+    }
+
+    /// f64 in [0,1).
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.raw() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.unit_f64() * (hi - lo)
+    }
+
+    /// Arbitrary f32 bit pattern.
+    pub fn f32_bits(&mut self) -> f32 {
+        f32::from_bits(self.u32())
+    }
+
+    /// A *finite* f32 (resamples NaN/Inf patterns).
+    pub fn f32_finite(&mut self) -> f32 {
+        loop {
+            let x = self.f32_bits();
+            if x.is_finite() {
+                return x;
+            }
+        }
+    }
+
+    pub fn choose_idx(&mut self, len: usize) -> usize {
+        assert!(len > 0);
+        (self.raw() % len as u64) as usize
+    }
+}
+
+/// Property outcome: `Err(reason)` fails the case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `config.cases` random cases. Panics (test failure) with
+/// the seed, case index and a shrunk counterexample description if the
+/// property fails.
+pub fn forall<F>(config: Config, mut prop: F)
+where
+    F: FnMut(&mut Draw) -> PropResult,
+{
+    for case in 0..config.cases {
+        let case_seed = config
+            .seed
+            .wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut draw = Draw::new(case_seed);
+        if let Err(msg) = prop(&mut draw) {
+            let tape = draw.tape.clone();
+            let (shrunk_tape, shrunk_msg) = shrink(&tape, &mut prop).unwrap_or((tape, msg));
+            panic!(
+                "property '{}' failed (case {}, seed {:#x}):\n  {}\n  shrunk tape: {:?}",
+                config.name, case, case_seed, shrunk_msg, truncated(&shrunk_tape)
+            );
+        }
+    }
+}
+
+fn truncated(tape: &[u64]) -> Vec<u64> {
+    tape.iter().copied().take(16).collect()
+}
+
+/// Greedy tape shrinking: try zeroing and halving each draw; keep any
+/// change that still fails. Bounded passes so shrinking always halts.
+fn shrink<F>(tape: &[u64], prop: &mut F) -> Option<(Vec<u64>, String)>
+where
+    F: FnMut(&mut Draw) -> PropResult,
+{
+    let mut best: Option<(Vec<u64>, String)> = None;
+    let mut current = tape.to_vec();
+    for _pass in 0..8 {
+        let mut improved = false;
+        for i in 0..current.len() {
+            if current[i] == 0 {
+                continue;
+            }
+            for candidate_val in [0u64, current[i] >> 1, current[i] >> 8] {
+                if candidate_val == current[i] {
+                    continue;
+                }
+                let mut cand = current.clone();
+                cand[i] = candidate_val;
+                let mut d = Draw::replaying(cand.clone());
+                if let Err(msg) = prop(&mut d) {
+                    current = cand;
+                    best = Some((current.clone(), msg));
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    best
+}
+
+/// Assert equality inside a property, producing a useful message.
+#[macro_export]
+macro_rules! check_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}  ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+/// Assert a predicate inside a property.
+#[macro_export]
+macro_rules! check_that {
+    ($cond:expr) => {{
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    }};
+    ($cond:expr, $($fmt:tt)*) => {{
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(Config::named("add commutes").cases(64), |d| {
+            count += 1;
+            let a = d.range_u64(0, 1000);
+            let b = d.range_u64(0, 1000);
+            check_eq!(a + b, b + a);
+            Ok(())
+        });
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        forall(Config::named("always fails").cases(4), |_d| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk tape")]
+    fn failure_reports_shrunk_tape() {
+        forall(Config::named("large values fail").cases(64), |d| {
+            let x = d.u64();
+            check_that!(x < (1 << 20), "x too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_reaches_small_counterexample() {
+        // Drive shrink() directly: property fails whenever draw >= 100.
+        let mut prop = |d: &mut Draw| -> PropResult {
+            let x = d.u64();
+            if x >= 100 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        };
+        let tape = vec![u64::MAX];
+        let (shrunk, _msg) = shrink(&tape, &mut prop).unwrap();
+        assert!(shrunk[0] < u64::MAX, "shrink made no progress");
+    }
+
+    #[test]
+    fn draw_ranges_respect_bounds() {
+        forall(Config::named("draw bounds").cases(128), |d| {
+            let v = d.range_u64(5, 10);
+            check_that!((5..=10).contains(&v));
+            let w = d.range_i64(-4, 4);
+            check_that!((-4..=4).contains(&w));
+            let f = d.f64_range(1.0, 2.0);
+            check_that!((1.0..2.0).contains(&f));
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finite_f32_is_finite() {
+        forall(Config::named("finite f32").cases(256), |d| {
+            check_that!(d.f32_finite().is_finite());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,238 @@
+//! Minimal declarative command-line parsing (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands and generated `--help` text. Only what `tsdiv`'s CLI and
+//! the bench binaries need.
+
+use std::collections::BTreeMap;
+
+/// Specification of a single option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            Some(s) => s.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Like `parse_or` but errors on malformed values instead of hiding them.
+    pub fn parse_required<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let s = self
+            .get(name)
+            .ok_or_else(|| format!("missing required option --{name}"))?;
+        s.parse()
+            .map_err(|_| format!("option --{name}: cannot parse '{s}'"))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+/// A command with options; `parse` consumes an iterator of raw args.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn opt_required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("  --{} <value>", o.name)
+            } else {
+                format!("  --{}", o.name)
+            };
+            let def = match o.default {
+                Some(d) if o.takes_value => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{head:<28} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                       show this help\n");
+        s
+    }
+
+    /// Parse raw arguments. Returns Err(message) on unknown options or
+    /// missing values; the caller decides how to report.
+    pub fn parse<I: IntoIterator<Item = String>>(&self, raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Apply defaults first.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    args.values.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test command")
+            .opt("n", "5", "iterations")
+            .opt_required("path", "input path")
+            .flag("verbose", "log more")
+    }
+
+    fn parse(raw: &[&str]) -> Result<Args, String> {
+        cmd().parse(raw.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get("n"), Some("5"));
+        assert_eq!(a.get("path"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&["--n", "9", "--path=/tmp/x"]).unwrap();
+        assert_eq!(a.parse_or::<u32>("n", 0), 9);
+        assert_eq!(a.get("path"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["--verbose", "one", "two"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals(), &["one".to_string(), "two".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--bogus"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--n"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_text() {
+        let e = parse(&["--help"]).unwrap_err();
+        assert!(e.contains("test command"));
+        assert!(e.contains("--path"));
+    }
+
+    #[test]
+    fn parse_required_works() {
+        let a = parse(&["--path", "p", "--n", "bad"]).unwrap();
+        assert_eq!(a.parse_required::<String>("path").unwrap(), "p");
+        assert!(a.parse_required::<u32>("n").is_err());
+        assert_eq!(a.parse_or::<u32>("n", 7), 7);
+    }
+}

@@ -1,0 +1,52 @@
+//! In-tree utility substrates.
+//!
+//! The build image vendors no general-purpose crates (no rand, serde,
+//! clap, criterion or proptest), so the small pieces of infrastructure the
+//! rest of the crate needs are implemented here from scratch:
+//!
+//! * [`rng`] — SplitMix64 / xoshiro256** PRNG plus floating-point and
+//!   special-value distributions for workload generation;
+//! * [`stats`] — streaming summary statistics, percentiles, histograms;
+//! * [`json`] — a minimal JSON value/writer for metrics and reports;
+//! * [`cli`] — a small declarative command-line parser;
+//! * [`check`] — a seeded property-testing framework with shrinking;
+//! * [`table`] — fixed-width ASCII table rendering for bench reports;
+//! * [`timing`] — robust measurement loops used by the bench harness;
+//! * [`logging`] — a leveled stderr logger.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timing;
+
+/// Prevent the optimizer from deleting a benchmarked computation.
+///
+/// Same contract as `criterion::black_box`: the value is forced to exist
+/// in memory via a volatile read.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // SAFETY: `x` is a valid initialized value; a volatile read of it is
+    // defined behaviour and the original is forgotten (moved out).
+    unsafe {
+        let ret = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        ret
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::black_box;
+
+    #[test]
+    fn black_box_is_identity() {
+        assert_eq!(black_box(42u64), 42);
+        assert_eq!(black_box("s"), "s");
+        let v = vec![1, 2, 3];
+        assert_eq!(black_box(v.clone()), v);
+    }
+}

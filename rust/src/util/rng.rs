@@ -1,0 +1,321 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `SplitMix64` seeds `Xoshiro256StarStar` (the standard public-domain
+//! constructions); on top of the raw generator sit the distributions the
+//! workload generators need: uniform integers without modulo bias,
+//! uniform floats in `[0,1)`, log-uniform positive floats spanning the
+//! full exponent range, and IEEE-754 special values.
+
+/// SplitMix64 — used for seeding and as a cheap standalone generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — the crate's main PRNG. Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Construct from a 64-bit seed (expanded through SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for w in s.iter_mut() {
+            *w = sm.next_u64();
+        }
+        // All-zero state is the one invalid state; SplitMix64 cannot
+        // produce four consecutive zeros from any seed, but keep the
+        // guard for clarity.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x1;
+        }
+        Self { s }
+    }
+
+    #[inline]
+    fn rotl(x: u64, k: u32) -> u64 {
+        x.rotate_left(k)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = Self::rotl(self.s[1].wrapping_mul(5), 7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = Self::rotl(self.s[3], 45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "below(0) is meaningless");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        if lo == 0 && hi == u64::MAX {
+            return self.next_u64();
+        }
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]` for i64.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128) as u64;
+        if span == u64::MAX {
+            return self.next_u64() as i64;
+        }
+        (lo as i128 + self.below(span + 1) as i128) as i64
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 random bits.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)` with 24 random bits.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Log-uniform positive f64 over `[2^emin, 2^emax)` — every binade
+    /// equally likely, mantissa uniform. This is the right operand
+    /// distribution for divider accuracy sweeps.
+    pub fn f64_log_uniform(&mut self, emin: i32, emax: i32) -> f64 {
+        let e = self.range_i64(emin as i64, emax as i64 - 1) as i32;
+        let mant = 1.0 + self.f64(); // [1, 2)
+        mant * pow2(e)
+    }
+
+    /// Log-uniform positive f32.
+    pub fn f32_log_uniform(&mut self, emin: i32, emax: i32) -> f32 {
+        self.f64_log_uniform(emin, emax) as f32
+    }
+
+    /// Random boolean with probability `p` of `true`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a random element of a slice.
+    #[inline]
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// An f32 drawn from a menu of IEEE-754 special/corner values, used
+    /// by the failure-injection and specials tests.
+    pub fn f32_special(&mut self) -> f32 {
+        const SPECIALS: [f32; 12] = [
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::MIN_POSITIVE,          // smallest normal
+            1.0e-45,                    // smallest subnormal
+            f32::MAX,
+            f32::MIN,
+            1.0,
+            -1.0,
+            2.0,
+        ];
+        *self.choose(&SPECIALS)
+    }
+
+    /// Fully random f32 bit pattern (covers NaNs, subnormals, everything).
+    #[inline]
+    pub fn f32_bits(&mut self) -> f32 {
+        f32::from_bits(self.next_u32())
+    }
+
+    /// Fully random f64 bit pattern.
+    #[inline]
+    pub fn f64_bits(&mut self) -> f64 {
+        f64::from_bits(self.next_u64())
+    }
+}
+
+/// Exact power of two as f64 (no powi rounding concerns for |e| < 1023).
+#[inline]
+pub fn pow2(e: i32) -> f64 {
+    assert!((-1022..=1023).contains(&e), "pow2 exponent out of normal range");
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the public-domain splitmix64.c with seed 0.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(sm.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn below_is_in_range_and_not_constant() {
+        let mut r = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen.insert(v);
+        }
+        assert_eq!(seen.len(), 10, "all residues should appear in 1000 draws");
+    }
+
+    #[test]
+    fn below_one_is_zero() {
+        let mut r = Rng::new(3);
+        for _ in 0..10 {
+            assert_eq!(r.below(1), 0);
+        }
+    }
+
+    #[test]
+    fn range_endpoints_inclusive() {
+        let mut r = Rng::new(5);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..2000 {
+            let v = r.range_u64(10, 13);
+            assert!((10..=13).contains(&v));
+            lo_seen |= v == 10;
+            hi_seen |= v == 13;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn range_i64_negative() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let v = r.range_i64(-126, 127);
+            assert!((-126..=127).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(11);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn log_uniform_exponent_span() {
+        let mut r = Rng::new(13);
+        for _ in 0..1000 {
+            let v = r.f64_log_uniform(-10, 10);
+            assert!(v > 0.0);
+            assert!(v >= pow2(-10) && v < pow2(10));
+        }
+    }
+
+    #[test]
+    fn pow2_exact() {
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(10), 1024.0);
+        assert_eq!(pow2(-1), 0.5);
+        assert_eq!(pow2(-1022), f64::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle left input in order");
+    }
+}

@@ -1,0 +1,278 @@
+//! Summary statistics, percentiles and histograms for the analysis and
+//! bench layers.
+
+/// Streaming summary (Welford) over f64 samples, plus retained samples
+/// for exact percentiles when `keep_samples` is on.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Option<Vec<f64>>,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Summary {
+    /// Streaming-only summary (no percentile support).
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: None,
+        }
+    }
+
+    /// Summary that also retains samples so percentiles are exact.
+    pub fn keeping_samples() -> Self {
+        Self {
+            samples: Some(Vec::new()),
+            ..Self::new()
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if let Some(s) = &mut self.samples {
+            s.push(x);
+        }
+    }
+
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, it: I) {
+        for x in it {
+            self.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact percentile (nearest-rank with linear interpolation); requires
+    /// `keeping_samples()`. `q` in [0,1].
+    pub fn percentile(&self, q: f64) -> f64 {
+        let s = self
+            .samples
+            .as_ref()
+            .expect("percentile() requires Summary::keeping_samples()");
+        percentile_of(s, q)
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+}
+
+/// Percentile of an unsorted slice (copies + sorts; linear interpolation
+/// between the two nearest order statistics). `q` in [0,1].
+pub fn percentile_of(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "q must be in [0,1]");
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in percentile input"));
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+/// Fixed-bin histogram over a closed range, with saturating edge bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        if x >= self.hi {
+            self.overflow += 1;
+            return;
+        }
+        let idx = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+        let idx = idx.min(self.bins.len() - 1);
+        self.bins[idx] += 1;
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Render as sparkline-ish rows: `lo..hi count bar`.
+    pub fn render(&self, width: usize) -> String {
+        let maxc = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let step = (self.hi - self.lo) / self.bins.len() as f64;
+        let mut out = String::new();
+        for (i, &c) in self.bins.iter().enumerate() {
+            let l = self.lo + step * i as f64;
+            let r = l + step;
+            let bar = "#".repeat(((c as f64 / maxc as f64) * width as f64).round() as usize);
+            out.push_str(&format!("[{l:>12.4e}, {r:>12.4e})  {c:>8}  {bar}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic_moments() {
+        let mut s = Summary::new();
+        s.extend([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.min().is_nan());
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_of(&xs, 0.0), 1.0);
+        assert_eq!(percentile_of(&xs, 1.0), 100.0);
+        assert!((percentile_of(&xs, 0.5) - 50.5).abs() < 1e-12);
+        // p99 of 1..=100 (interpolated at index 98.01)
+        assert!((percentile_of(&xs, 0.99) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_percentile_matches_free_fn() {
+        let mut s = Summary::keeping_samples();
+        let xs = [5.0, 1.0, 9.0, 3.0, 7.0];
+        s.extend(xs);
+        assert_eq!(s.median(), percentile_of(&xs, 0.5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_without_samples_panics() {
+        let s = Summary::new();
+        let _ = s.percentile(0.5);
+    }
+
+    #[test]
+    fn histogram_bins_and_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.push(i as f64 + 0.5);
+        }
+        h.push(-1.0);
+        h.push(10.0); // hi edge counts as overflow
+        assert_eq!(h.bins(), &[1; 10]);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn histogram_render_nonempty() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.push(0.1);
+        h.push(0.9);
+        let r = h.render(20);
+        assert_eq!(r.lines().count(), 4);
+        assert!(r.contains('#'));
+    }
+}

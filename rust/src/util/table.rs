@@ -1,0 +1,184 @@
+//! Fixed-width ASCII table rendering for bench/report output.
+//!
+//! Every bench target prints its results through this module so the
+//! paper-vs-measured tables in `bench_output.txt` and EXPERIMENTS.md look
+//! uniform.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Right; headers.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set alignment per column (defaults to right).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for building a row from display values.
+    pub fn row_disp(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                match self.aligns[i] {
+                    Align::Left => s.push_str(&format!(" {}{} |", cell, " ".repeat(pad))),
+                    Align::Right => s.push_str(&format!(" {}{} |", " ".repeat(pad), cell)),
+                }
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with a sensible number of significant digits for tables.
+pub fn sig(x: f64, digits: usize) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    if (-3..6).contains(&mag) {
+        let decimals = (digits as i32 - 1 - mag).max(0) as usize;
+        format!("{x:.decimals$}")
+    } else {
+        format!("{x:.prec$e}", prec = digits.saturating_sub(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_headers_rows_and_borders() {
+        let mut t = Table::new("demo", &["k", "value"]);
+        t.row(&["b0".into(), "1.09811".into()]);
+        t.row(&["b1".into(), "1.20835".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| 1.09811 |"));
+        assert_eq!(r.matches('+').count() % 3, 0, "borders well-formed");
+        // All data lines same length
+        let widths: Vec<usize> = r
+            .lines()
+            .skip(1)
+            .map(|l| l.chars().count())
+            .collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn alignment_left_vs_right() {
+        let mut t = Table::new("", &["name", "n"]).aligns(&[Align::Left, Align::Right]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "100".into()]);
+        let r = t.render();
+        assert!(r.contains("| a      |"));
+        assert!(r.contains("|   1 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn sig_formatting() {
+        assert_eq!(sig(0.0, 4), "0");
+        assert_eq!(sig(1.23456789, 6), "1.23457"); // rounds
+        assert_eq!(sig(123456.0, 4), "123456");
+        assert!(sig(1.0e-9, 3).contains('e'));
+        assert!(sig(f64::INFINITY, 3) == "inf");
+    }
+
+    #[test]
+    fn row_disp_accepts_mixed_types() {
+        let mut t = Table::new("", &["a", "b", "c"]);
+        t.row_disp(&[&1u32, &2.5f64, &"s"]);
+        assert!(t.render().contains("| 2.5 |"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Measurement loops for the bench harness (criterion is not vendored).
+//!
+//! The model is criterion-like but simpler: warm up, then run batches of
+//! iterations until a wall-clock budget is spent, and report robust
+//! statistics (median of per-iteration times across batches).
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile_of;
+
+/// Result of a measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Median per-iteration time, seconds.
+    pub median_s: f64,
+    /// Mean per-iteration time, seconds.
+    pub mean_s: f64,
+    /// 5th / 95th percentile per-iteration time, seconds.
+    pub p05_s: f64,
+    pub p95_s: f64,
+    /// Total iterations executed (excluding warmup).
+    pub iterations: u64,
+    /// Number of timed batches.
+    pub batches: u32,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Per-iteration time scaled to "items per second" given items/iter.
+    pub fn items_per_sec(&self, items_per_iter: u64) -> f64 {
+        self.throughput() * items_per_iter as f64
+    }
+
+    pub fn human(&self) -> String {
+        format!(
+            "median {} (p05 {}, p95 {}, n={})",
+            human_time(self.median_s),
+            human_time(self.p05_s),
+            human_time(self.p95_s),
+            self.iterations
+        )
+    }
+}
+
+/// Render seconds human-readably.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_batches: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_millis(900),
+            min_batches: 8,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick mode for CI/tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(120),
+            min_batches: 4,
+        }
+    }
+
+    /// Honour `TSDIV_BENCH_QUICK=1` so the full suite stays fast in CI.
+    pub fn from_env() -> Self {
+        match std::env::var("TSDIV_BENCH_QUICK") {
+            Ok(v) if v == "1" || v.eq_ignore_ascii_case("true") => Self::quick(),
+            _ => Self::default(),
+        }
+    }
+}
+
+/// Measure `f`, which performs ONE logical iteration per call.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Measurement {
+    // Warmup + calibration: find an iteration count per batch that takes
+    // roughly budget / (2 * min_batches).
+    let warm_start = Instant::now();
+    let mut calib_iters: u64 = 0;
+    while warm_start.elapsed() < cfg.warmup {
+        f();
+        calib_iters += 1;
+    }
+    let per_iter = if calib_iters > 0 {
+        cfg.warmup.as_secs_f64() / calib_iters as f64
+    } else {
+        cfg.warmup.as_secs_f64()
+    };
+    let target_batch_time = cfg.budget.as_secs_f64() / (2.0 * cfg.min_batches as f64);
+    let batch_iters = ((target_batch_time / per_iter.max(1e-12)) as u64).clamp(1, 1 << 24);
+
+    let mut per_iter_times: Vec<f64> = Vec::new();
+    let mut total_iters = 0u64;
+    let start = Instant::now();
+    while start.elapsed() < cfg.budget || per_iter_times.len() < cfg.min_batches as usize {
+        let t0 = Instant::now();
+        for _ in 0..batch_iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        per_iter_times.push(dt / batch_iters as f64);
+        total_iters += batch_iters;
+        if per_iter_times.len() > 10_000 {
+            break; // pathologically fast function; enough data
+        }
+    }
+
+    let mean = per_iter_times.iter().sum::<f64>() / per_iter_times.len() as f64;
+    Measurement {
+        median_s: percentile_of(&per_iter_times, 0.5),
+        mean_s: mean,
+        p05_s: percentile_of(&per_iter_times, 0.05),
+        p95_s: percentile_of(&per_iter_times, 0.95),
+        iterations: total_iters,
+        batches: per_iter_times.len() as u32,
+    }
+}
+
+/// Measure a function once (for coarse, long-running operations).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::black_box;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let cfg = BenchConfig::quick();
+        let m = bench(&cfg, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i) * 3);
+            }
+            black_box(acc);
+        });
+        assert!(m.median_s > 0.0);
+        assert!(m.iterations > 0);
+        assert!(m.batches >= cfg.min_batches);
+        assert!(m.p05_s <= m.median_s && m.median_s <= m.p95_s * 1.0001);
+        assert!(m.throughput().is_finite());
+    }
+
+    #[test]
+    fn time_once_returns_value_and_duration() {
+        let (v, dt) = time_once(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(dt >= 0.004);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.0), "2.000 s");
+        assert_eq!(human_time(0.002), "2.000 ms");
+        assert_eq!(human_time(2e-6), "2.000 µs");
+        assert_eq!(human_time(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn items_per_sec_scales() {
+        let m = Measurement {
+            median_s: 0.001,
+            mean_s: 0.001,
+            p05_s: 0.001,
+            p95_s: 0.001,
+            iterations: 10,
+            batches: 1,
+        };
+        assert!((m.items_per_sec(100) - 100_000.0).abs() < 1e-6);
+    }
+}

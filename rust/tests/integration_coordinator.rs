@@ -1,0 +1,173 @@
+//! Integration: the division service end to end — native and PJRT
+//! backends, fault injection, backpressure under load.
+
+use std::time::Duration;
+
+use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::runtime::artifacts_available;
+use tsdiv::util::rng::Rng;
+
+fn cfg(workers: usize, max_batch: usize) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        max_batch,
+        max_wait: Duration::from_millis(2),
+        queue_capacity: 1024,
+    }
+}
+
+#[test]
+fn native_service_under_concurrent_load() {
+    let svc = DivisionService::start(
+        cfg(4, 512),
+        BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        },
+    )
+    .unwrap();
+    let svc = std::sync::Arc::new(svc);
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let svc = std::sync::Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            for _ in 0..50 {
+                let n = (rng.below(63) + 1) as usize;
+                let a: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+                let b: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+                let out = loop {
+                    match svc.submit(a.clone(), b.clone()) {
+                        Ok(ticket) => break ticket.wait().unwrap(),
+                        Err(SubmitError::Busy) => std::thread::yield_now(),
+                        Err(e) => panic!("{e}"),
+                    }
+                };
+                for i in 0..n {
+                    let want = a[i] / b[i];
+                    assert!(
+                        (out[i] - want).abs() <= want.abs() * 1e-6,
+                        "lane {i}: {} vs {want}",
+                        out[i]
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.requests, 8 * 50);
+    assert!(m.failures == 0);
+    assert!(m.latency_count == 8 * 50);
+    assert!(m.mean_batch_lanes() > 1.0, "no coalescing happened");
+}
+
+#[test]
+fn pjrt_backend_service_roundtrip() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let svc = DivisionService::start(cfg(1, 1024), BackendChoice::Pjrt).unwrap();
+    let a: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+    let b: Vec<f32> = (1..=100).map(|i| ((i % 5) + 1) as f32).collect();
+    let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+    for i in 0..100 {
+        let want = a[i] / b[i];
+        let ulp = (out[i].to_bits() as i64 - want.to_bits() as i64).unsigned_abs();
+        assert!(ulp <= 1, "lane {i}: {} vs {want}", out[i]);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn worker_survives_nan_heavy_batches() {
+    // Specials must flow through without faulting workers.
+    let svc = DivisionService::start(
+        cfg(2, 128),
+        BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        },
+    )
+    .unwrap();
+    let a = vec![f32::NAN, 1.0, 0.0, f32::INFINITY, -1.0, 5.5];
+    let b = vec![1.0, 0.0, 0.0, f32::INFINITY, f32::NAN, -0.0];
+    let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+    for i in 0..a.len() {
+        let want = a[i] / b[i];
+        if want.is_nan() {
+            assert!(out[i].is_nan(), "lane {i}");
+        } else {
+            assert_eq!(out[i].to_bits(), want.to_bits(), "lane {i}");
+        }
+    }
+    // Service still healthy afterwards.
+    assert_eq!(svc.divide_blocking(vec![8.0], vec![2.0]).unwrap(), vec![4.0]);
+    assert_eq!(svc.metrics().failures, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn ilm_backend_service_accuracy_band() {
+    let svc = DivisionService::start(
+        cfg(2, 256),
+        BackendChoice::Native {
+            order: 5,
+            ilm_iterations: Some(8),
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(12);
+    let a: Vec<f32> = (0..500).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+    let b: Vec<f32> = (0..500).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+    let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+    for i in 0..a.len() {
+        let want = a[i] / b[i];
+        let rel = ((out[i] - want) / want).abs();
+        assert!(rel < 1e-5, "lane {i}: rel err {rel}");
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn throughput_scales_with_workers() {
+    // Not a strict benchmark — just require that 4 workers are no slower
+    // than 1 on a saturated load (catching accidental serialization).
+    let run = |workers: usize| -> f64 {
+        let svc = DivisionService::start(
+            cfg(workers, 4096),
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let a = vec![3.0f32; 4096];
+        let b = vec![7.0f32; 4096];
+        let t0 = std::time::Instant::now();
+        let tickets: Vec<_> = (0..32)
+            .map(|_| loop {
+                match svc.submit(a.clone(), b.clone()) {
+                    Ok(t) => break t,
+                    Err(SubmitError::Busy) => std::thread::yield_now(),
+                    Err(e) => panic!("{e}"),
+                }
+            })
+            .collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        svc.shutdown();
+        32.0 * 4096.0 / dt
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert!(
+        t4 > t1 * 0.8,
+        "4 workers ({t4:.0}/s) slower than 1 ({t1:.0}/s)"
+    );
+}

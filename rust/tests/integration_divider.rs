@@ -1,0 +1,131 @@
+//! Integration: all dividers cross-checked against each other and the
+//! digit-recurrence gold reference across formats and workloads.
+
+use tsdiv::analysis::{measure_accuracy_f32, Workload};
+use tsdiv::divider::{
+    all_dividers, goldschmidt::GoldschmidtDivider, longdiv::LongDivider, newton::NewtonDivider,
+    Divider, TaylorDivider,
+};
+use tsdiv::fp::{Rounding, BF16, F16, F32};
+use tsdiv::util::rng::Rng;
+
+#[test]
+fn all_dividers_within_1ulp_of_gold_on_log_uniform() {
+    for mut d in all_dividers() {
+        let name = d.name();
+        if name.starts_with("taylor") && name.contains("ilm") {
+            continue; // approximate backend measured separately below
+        }
+        let r = measure_accuracy_f32(d.as_mut(), Workload::LogUniform, 5_000, 42);
+        assert!(r.max_ulp <= 1, "{name}: max {} ulp", r.max_ulp);
+        assert!(r.exact_rate > 0.99, "{name}: exact rate {}", r.exact_rate);
+    }
+}
+
+#[test]
+fn ilm_divider_accuracy_by_iteration_budget() {
+    // The paper's programmability claim: accuracy is a monotone function
+    // of the ILM correction budget.
+    let mut last_max_rel = f64::INFINITY;
+    for iters in [2u32, 4, 8, 16, 32] {
+        let mut d = TaylorDivider::paper_ilm(iters);
+        let r = measure_accuracy_f32(&mut d, Workload::SignificandOnly, 3_000, 7);
+        assert!(
+            r.max_rel <= last_max_rel * 1.5 + 1e-12,
+            "iters={iters}: {} vs prev {}",
+            r.max_rel,
+            last_max_rel
+        );
+        last_max_rel = r.max_rel;
+    }
+    assert!(last_max_rel < 1e-6, "32 corrections should be ≈ exact");
+}
+
+#[test]
+fn dividers_consistent_across_formats() {
+    let mut taylor = TaylorDivider::paper_exact();
+    let mut gold = LongDivider::new();
+    // f16 / bf16 quotients via the same datapath.
+    for (a16, b16) in [(0x3C00u64, 0x4000u64), (0x4500, 0x3E00), (0x7BFF, 0x3C00)] {
+        let t = taylor.div_bits(a16, b16, F16, Rounding::NearestEven);
+        let g = gold.div_bits(a16, b16, F16, Rounding::NearestEven);
+        let diff = (t as i64 - g as i64).unsigned_abs();
+        assert!(diff <= 1, "f16 {a16:#x}/{b16:#x}: {t:#x} vs {g:#x}");
+    }
+    for (a, b) in [(0x3F80u64, 0x4000u64), (0x4049, 0x3FC0)] {
+        let t = taylor.div_bits(a, b, BF16, Rounding::NearestEven);
+        let g = gold.div_bits(a, b, BF16, Rounding::NearestEven);
+        assert!((t as i64 - g as i64).unsigned_abs() <= 1, "bf16 {a:#x}/{b:#x}");
+    }
+}
+
+#[test]
+fn rounding_mode_bracketing_all_dividers() {
+    // For every divider: RDN ≤ RNE ≤ RUP results (monotone modes).
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        let a = rng.f32_log_uniform(-6, 6);
+        let b = rng.f32_log_uniform(-6, 6);
+        for mut d in [
+            Box::new(TaylorDivider::paper_exact()) as Box<dyn Divider>,
+            Box::new(NewtonDivider::paper_default()),
+            Box::new(GoldschmidtDivider::paper_default()),
+            Box::new(LongDivider::new()),
+        ] {
+            let mut q = |rm| {
+                f32::from_bits(
+                    d.div_bits(a.to_bits() as u64, b.to_bits() as u64, F32, rm) as u32
+                )
+            };
+            let dn = q(Rounding::TowardNegative);
+            let ne = q(Rounding::NearestEven);
+            let up = q(Rounding::TowardPositive);
+            assert!(dn <= ne && ne <= up, "{}: {a}/{b}: {dn} {ne} {up}", d.name());
+        }
+    }
+}
+
+#[test]
+fn f64_path_agrees_with_hardware_to_2ulp() {
+    let mut taylor = TaylorDivider::paper_exact();
+    let mut newton = NewtonDivider::paper_default();
+    let mut rng = Rng::new(9);
+    for _ in 0..5_000 {
+        let a = rng.f64_log_uniform(-200, 200);
+        let b = rng.f64_log_uniform(-200, 200);
+        let hw = a / b;
+        for (q, name) in [(taylor.div_f64(a, b), "taylor"), (newton.div_f64(a, b), "newton")] {
+            let ulp = tsdiv::fp::ulp_diff_f64(q, hw).unwrap();
+            assert!(ulp <= 2, "{name} {a:e}/{b:e}: {ulp} ulp");
+        }
+    }
+}
+
+#[test]
+fn adversarial_segment_edge_operands() {
+    // Operands whose significands sit exactly on Table-I segment edges.
+    let mut taylor = TaylorDivider::paper_exact();
+    let mut gold = LongDivider::new();
+    let bounds = tsdiv::pla::derive_segments(5, 53);
+    for &edge in &bounds {
+        for delta in [-2i64, -1, 0, 1, 2] {
+            let base = (edge.min(1.9999999) as f32).to_bits() as i64;
+            let b = f32::from_bits((base + delta).clamp(0x3F80_0000, 0x3FFF_FFFF) as u32);
+            for a in [1.0f32, 1.5, 1.9999999] {
+                let t = taylor.div_f32(a, b);
+                let g = gold.div_f32(a, b);
+                let ulp = (t.to_bits() as i64 - g.to_bits() as i64).unsigned_abs();
+                assert!(ulp <= 1, "{a}/{b} (edge {edge}): {ulp} ulp");
+            }
+        }
+    }
+}
+
+#[test]
+fn latency_model_sanity_taylor_vs_longdiv() {
+    // Cycle-model claim from the benches, kept honest in CI: the Fig-7
+    // datapath needs fewer cycles than digit recurrence at f64 precision.
+    let taylor = tsdiv::hw::divider_timing(60, 5, 2, false);
+    let longdiv = tsdiv::hw::longdiv_timing(52);
+    assert!(taylor.latency_cycles < longdiv.latency_cycles);
+}

@@ -1,0 +1,102 @@
+//! Integration: AOT artifacts → PJRT → numerics, end to end.
+//!
+//! Requires `make artifacts`; every test skips with a notice otherwise
+//! so `cargo test` stays green on a fresh checkout.
+
+use tsdiv::runtime::{artifacts_available, DivideEngine, Manifest};
+use tsdiv::util::rng::Rng;
+
+fn engine_or_skip() -> Option<DivideEngine> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(DivideEngine::load_default().expect("artifacts present but engine failed to load"))
+}
+
+#[test]
+fn manifest_lists_divide_entries() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts/ not built");
+        return;
+    }
+    let m = Manifest::load(&Manifest::default_dir()).unwrap();
+    let divides: Vec<_> = m.entries.iter().filter(|e| e.kind == "divide").collect();
+    assert!(divides.len() >= 3, "expected ≥3 divide batch sizes");
+    for e in &m.entries {
+        assert!(e.path.exists(), "missing artifact {}", e.path.display());
+    }
+}
+
+#[test]
+fn engine_divides_exact_batch() {
+    let Some(engine) = engine_or_skip() else { return };
+    let sizes = engine.batch_sizes();
+    assert!(sizes.contains(&1024));
+    let n = sizes[0];
+    let a: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
+    let b: Vec<f32> = (0..n).map(|i| ((i % 9) + 1) as f32).collect();
+    let q = engine.divide(&a, &b).unwrap();
+    assert_eq!(q.len(), n);
+    for i in 0..n {
+        let want = a[i] / b[i];
+        let ulp = (q[i].to_bits() as i64 - want.to_bits() as i64).unsigned_abs();
+        assert!(ulp <= 1, "lane {i}: {} vs {want} ({ulp} ulps)", q[i]);
+    }
+}
+
+#[test]
+fn engine_pads_ragged_batches() {
+    let Some(engine) = engine_or_skip() else { return };
+    for n in [1usize, 7, 255, 257, 1000, 1025, 5000] {
+        let mut rng = Rng::new(n as u64);
+        let a: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-10, 10)).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-10, 10)).collect();
+        let q = engine.divide(&a, &b).unwrap();
+        assert_eq!(q.len(), n, "n={n}");
+        for i in 0..n {
+            let want = a[i] / b[i];
+            let ulp = (q[i].to_bits() as i64 - want.to_bits() as i64).unsigned_abs();
+            assert!(ulp <= 1, "n={n} lane {i}: {} vs {want}", q[i]);
+        }
+    }
+}
+
+#[test]
+fn engine_handles_specials_like_ieee() {
+    let Some(engine) = engine_or_skip() else { return };
+    let a = vec![1.0f32, -1.0, 0.0, f32::INFINITY, f32::NAN, 0.0, 3.0, f32::INFINITY];
+    let b = vec![0.0f32, 0.0, 0.0, f32::INFINITY, 1.0, 5.0, f32::INFINITY, 2.0];
+    let mut pa = a.clone();
+    let mut pb = b.clone();
+    pa.resize(256, 1.0);
+    pb.resize(256, 1.0);
+    let q = engine.divide(&pa, &pb).unwrap();
+    let want: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x / y).collect();
+    for i in 0..a.len() {
+        if want[i].is_nan() {
+            assert!(q[i].is_nan(), "lane {i}: {} want NaN", q[i]);
+        } else {
+            assert_eq!(q[i].to_bits(), want[i].to_bits(), "lane {i}");
+        }
+    }
+}
+
+#[test]
+fn engine_agrees_with_native_datapath() {
+    // The two implementations of the same paper architecture (bit-exact
+    // Rust vs f32 JAX/Pallas) must agree to ≤1 ulp on normals.
+    let Some(engine) = engine_or_skip() else { return };
+    use tsdiv::divider::{Divider, TaylorDivider};
+    let mut native = TaylorDivider::paper_exact();
+    let mut rng = Rng::new(77);
+    let n = 1024;
+    let a: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-6, 6)).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-6, 6)).collect();
+    let q = engine.divide(&a, &b).unwrap();
+    for i in 0..n {
+        let nq = native.div_f32(a[i], b[i]);
+        let ulp = (q[i].to_bits() as i64 - nq.to_bits() as i64).unsigned_abs();
+        assert!(ulp <= 2, "lane {i}: pjrt {} vs native {nq}", q[i]);
+    }
+}

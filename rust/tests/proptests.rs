@@ -1,0 +1,196 @@
+//! Cross-module property tests (the in-tree `util::check` framework):
+//! system-level invariants spanning several modules at once.
+
+use tsdiv::check_that;
+use tsdiv::divider::{longdiv::LongDivider, Divider, TaylorDivider};
+use tsdiv::fp::{next_down, next_up, round_pack, unpack, Class, Rounding, F32};
+use tsdiv::ilm::{ilm_mul, ilm_mul_exact};
+use tsdiv::pla::{derive_segments, m_max, SegmentTable};
+use tsdiv::powering::{ExactMul, IlmBackend, PoweringUnit};
+use tsdiv::squaring::ilm_square;
+use tsdiv::taylor::{reciprocal_fixed, TaylorConfig};
+use tsdiv::util::check::{forall, Config};
+
+#[test]
+fn prop_ilm_equals_squaring_on_equal_operands() {
+    forall(
+        Config::named("ILM(n,n) == square(n) at any budget").cases(500),
+        |d| {
+            let n = d.range_u64(1, u32::MAX as u64);
+            let iters = d.range_u64(0, 8) as u32;
+            check_that!(ilm_mul(n, n, iters).product == ilm_square(n, iters).square);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ilm_exact_matches_widening_multiply() {
+    forall(Config::named("ILM full budget == u128 product").cases(500), |d| {
+        let a = d.range_u64(0, u32::MAX as u64);
+        let b = d.range_u64(0, u32::MAX as u64);
+        check_that!(ilm_mul_exact(a, b) == a as u128 * b as u128);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_powering_unit_powers_match_exact_powi() {
+    forall(Config::named("powering unit == powi (exact backend)").cases(100), |d| {
+        const F: u32 = 40;
+        let xf = d.f64_range(0.05, 0.95);
+        let x = (xf * (1u64 << F) as f64) as u64;
+        let p = d.range_u64(2, 12) as u32;
+        let mut be = ExactMul::default();
+        let r = PoweringUnit::new(&mut be, F).compute_powers(x, p);
+        for (i, &got) in r.powers.iter().enumerate() {
+            let want = (x as f64 / (1u64 << F) as f64).powi(i as i32 + 1);
+            let err = (got as f64 / (1u64 << F) as f64 - want).abs();
+            // ≤ k truncations of 1 ulp each.
+            check_that!(
+                err <= (i as f64 + 1.0) / (1u64 << F) as f64,
+                "x^{}: err {err}",
+                i + 1
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_seed_error_within_eq17_m_max() {
+    let bounds = derive_segments(5, 53);
+    let table = SegmentTable::build(&bounds, 60);
+    forall(Config::named("PLA seed m ≤ m_max(segment)").cases(400), |d| {
+        let x = d.f64_range(1.0, 1.999_999_9);
+        let i = tsdiv::pla::segment_index(&bounds, x);
+        let y0 = table.seed_f64(x);
+        let m = 1.0 - x * y0;
+        let tol = 16.0 / (1u64 << 60) as f64 * (1u64 << 8) as f64; // fixed-point slack
+        check_that!(
+            m <= m_max(bounds[i], bounds[i + 1]) + tol,
+            "x={x}: m={m:e}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_taylor_recip_independent_of_backend_at_full_budget() {
+    let cfg = TaylorConfig::paper_default(60);
+    forall(Config::named("ILM(64) backend == exact backend").cases(150), |d| {
+        let x = d.range_u64(1u64 << 60, (1u64 << 61) - 1);
+        let mut exact = ExactMul::default();
+        let mut ilm = IlmBackend::new(64);
+        let a = reciprocal_fixed(&cfg, &mut exact, x).recip;
+        let b = reciprocal_fixed(&cfg, &mut ilm, x).recip;
+        check_that!(a == b, "x={x}: {a} vs {b}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_divider_vs_gold_all_rounding_modes() {
+    forall(Config::named("taylor ≤1 ulp of longdiv, any mode").cases(400), |d| {
+        let a = d.f32_finite();
+        let b = d.f32_finite();
+        let rm = *[
+            Rounding::NearestEven,
+            Rounding::TowardZero,
+            Rounding::TowardPositive,
+            Rounding::TowardNegative,
+        ]
+        .get(d.choose_idx(4))
+        .unwrap();
+        let mut taylor = TaylorDivider::paper_exact();
+        let mut gold = LongDivider::new();
+        let t = taylor.div_bits(a.to_bits() as u64, b.to_bits() as u64, F32, rm);
+        let g = gold.div_bits(a.to_bits() as u64, b.to_bits() as u64, F32, rm);
+        match tsdiv::fp::ulp_diff(t, g, F32) {
+            Some(u) => check_that!(u <= 1, "{a:?}/{b:?} {rm:?}: {u} ulp"),
+            None => {
+                check_that!(
+                    unpack(t, F32).class == Class::NaN && unpack(g, F32).class == Class::NaN,
+                    "NaN mismatch for {a:?}/{b:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_pack_monotone_in_significand() {
+    forall(Config::named("round_pack monotone").cases(500), |d| {
+        let q = 50u32;
+        let sig = d.range_u64(1 << q, (1 << (q + 1)) - 2) as u128;
+        let exp = d.range_i64(-40, 40) as i32;
+        let (lo, _) = round_pack(false, exp, sig, q, false, F32, Rounding::NearestEven);
+        let (hi, _) = round_pack(false, exp, sig + 1, q, false, F32, Rounding::NearestEven);
+        check_that!(
+            f32::from_bits(lo as u32) <= f32::from_bits(hi as u32),
+            "sig {sig}: {lo:#x} > {hi:#x}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_next_up_down_bracket_round_pack() {
+    forall(Config::named("rounded value within one step of truth").cases(400), |d| {
+        // Keep xf in a range where (xf · 2^100) as u128 retains ≥ 60
+        // significant bits, so the fixture itself is not the error source.
+        let xf = d.f64_range(1e-3, 1e3);
+        let bits = round_pack(
+            false,
+            0,
+            (xf * 2f64.powi(100)) as u128,
+            100,
+            false,
+            F32,
+            Rounding::NearestEven,
+        )
+        .0;
+        let v = f32::from_bits(bits as u32) as f64;
+        let up = f32::from_bits(next_up(bits, F32) as u32) as f64;
+        let down = f32::from_bits(next_down(bits, F32) as u32) as f64;
+        check_that!(down <= xf && xf <= up, "x={xf}: [{down}, {v}, {up}]");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_service_roundtrip_preserves_lane_order() {
+    use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig};
+    let svc = DivisionService::start(
+        ServiceConfig {
+            workers: 3,
+            max_batch: 97, // deliberately odd to force splits
+            max_wait: std::time::Duration::from_micros(200),
+            queue_capacity: 256,
+        },
+        BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        },
+    )
+    .unwrap();
+    forall(Config::named("service preserves order").cases(40), |d| {
+        let n = d.range_u64(1, 300) as usize;
+        let a: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
+        let b: Vec<f32> = (0..n).map(|_| d.f64_range(0.5, 4.0) as f32).collect();
+        let out = svc
+            .divide_blocking(a.clone(), b.clone())
+            .map_err(|e| e.to_string())?;
+        check_that!(out.len() == n);
+        for i in 0..n {
+            let want = a[i] / b[i];
+            check_that!(
+                (out[i] - want).abs() <= want.abs() * 1e-6,
+                "lane {i} out of order or wrong"
+            );
+        }
+        Ok(())
+    });
+    svc.shutdown();
+}
