@@ -6,6 +6,7 @@ use std::time::{Duration, Instant};
 
 use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig, SubmitError};
 use tsdiv::runtime::artifacts_available;
+use tsdiv::util::json::Json;
 use tsdiv::util::rng::Rng;
 use tsdiv::util::table::{sig, Align, Table};
 
@@ -133,6 +134,56 @@ fn main() {
     } else {
         println!("PJRT backend skipped: run `make artifacts` first.");
     }
+
+    // Batched vs scalar worker datapath through the full service stack:
+    // identical coordinator, identical load, only the worker's division
+    // loop differs (div_bits_batch vs per-lane div_bits).
+    let mut t = Table::new(
+        "worker datapath: div_bits_batch vs scalar loop (2 workers, 8 clients × 256 lanes)",
+        &["datapath", "div/s", "p50 ms", "p99 ms", "lanes/batch"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    let mut pair: Vec<(&str, f64)> = Vec::new();
+    for (label, backend) in [
+        (
+            "batched",
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        ),
+        (
+            "scalar",
+            BackendChoice::NativeScalar {
+                order: 5,
+                ilm_iterations: None,
+            },
+        ),
+    ] {
+        let (thr, p50, p99, lpb) = run_load(backend, 2, 4096, 8, 256, dur);
+        pair.push((label, thr));
+        t.row(&[
+            label.to_string(),
+            sig(thr, 4),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+            format!("{lpb:.1}"),
+        ]);
+    }
+    t.print();
+    let speedup = pair[0].1 / pair[1].1;
+    println!("batched/scalar service throughput: {speedup:.2}x\n");
+
+    // Record the comparison for the bench trajectory.
+    let mut j = Json::obj();
+    j.set("bench", "coordinator_serve".into());
+    j.set("workers", 2u64.into());
+    j.set("clients", 8u64.into());
+    j.set("request_lanes", 256u64.into());
+    j.set("batched_div_per_s", pair[0].1.into());
+    j.set("scalar_div_per_s", pair[1].1.into());
+    j.set("batched_over_scalar", speedup.into());
+    tsdiv::harness::write_bench_json("coordinator_serve", &j);
 
     // Coordinator overhead: service vs bare loop over IDENTICAL
     // pre-generated operands (on a single-core machine the client

@@ -8,9 +8,11 @@ use tsdiv::divider::{
     goldschmidt::GoldschmidtDivider, longdiv::LongDivider, newton::NewtonDivider, BackendKind,
     Divider, TaylorDivider,
 };
-use tsdiv::harness::{gen_batch, timed_section};
+use tsdiv::fp::{F32, Rounding};
+use tsdiv::harness::{gen_batch, gen_repeated_divisor_batch, timed_section};
 use tsdiv::hw::{divider_timing, longdiv_timing};
 use tsdiv::taylor::TaylorConfig;
+use tsdiv::util::json::Json;
 use tsdiv::util::table::{sig, Align, Table};
 
 fn main() {
@@ -95,6 +97,94 @@ fn main() {
         t.row(&[label.to_string(), format!("{:.2}", thr / 1e6)]);
     }
     t.print();
+
+    // Scalar vs batch datapath on identical operands: the batch path
+    // hoists per-op setup, monomorphizes the backend once per batch and
+    // caches repeated divisor reciprocals (bit-identical by property
+    // test; re-asserted below).
+    println!();
+    let (a_bits, b_bits) = batch.bits_f32();
+    let lanes = a_bits.len() as u64;
+    let mut out = vec![0u64; a_bits.len()];
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let mut runs: Vec<(&str, Vec<u64>, Vec<u64>, Box<dyn Fn() -> TaylorDivider>)> = vec![
+        (
+            "taylor exact",
+            a_bits.clone(),
+            b_bits.clone(),
+            Box::new(TaylorDivider::paper_exact),
+        ),
+        (
+            "taylor ilm8",
+            a_bits.clone(),
+            b_bits.clone(),
+            Box::new(|| TaylorDivider::paper_ilm(8)),
+        ),
+    ];
+    let rep = gen_repeated_divisor_batch(4096, 16, 5);
+    let (rep_a, rep_b) = rep.bits_f32();
+    runs.push((
+        "taylor exact, repeated divisors",
+        rep_a,
+        rep_b,
+        Box::new(TaylorDivider::paper_exact),
+    ));
+    for (label, aa, bb, make) in &runs {
+        let mut d = make();
+        let m_scalar = timed_section(&format!("{label}: scalar div_bits × {lanes}"), || {
+            let mut acc = 0u64;
+            for i in 0..aa.len() {
+                acc ^= d.div_bits(aa[i], bb[i], F32, Rounding::NearestEven);
+            }
+            tsdiv::util::black_box(acc);
+        });
+        let m_batch = timed_section(&format!("{label}: div_bits_batch × {lanes}"), || {
+            d.div_bits_batch(aa, bb, F32, Rounding::NearestEven, &mut out);
+            tsdiv::util::black_box(out[0]);
+        });
+        // Bit-identity guard: `out` still holds the timed batch results
+        // for these operands; they must agree with the scalar path on
+        // every lane of the benchmarked workload.
+        for i in 0..aa.len() {
+            let want = d.div_bits(aa[i], bb[i], F32, Rounding::NearestEven);
+            assert_eq!(out[i], want, "{label}: batch != scalar at lane {i}");
+        }
+        rows.push((
+            label.to_string(),
+            m_scalar.items_per_sec(lanes),
+            m_batch.items_per_sec(lanes),
+        ));
+    }
+    let mut t = Table::new(
+        "scalar vs batch datapath (4096 lanes)",
+        &["divider", "scalar Mdiv/s", "batch Mdiv/s", "speedup"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for (label, s, bthr) in &rows {
+        t.row(&[
+            label.clone(),
+            format!("{:.2}", s / 1e6),
+            format!("{:.2}", bthr / 1e6),
+            format!("{:.2}x", bthr / s),
+        ]);
+    }
+    t.print();
+
+    // Record the comparison for the bench trajectory.
+    let mut j = Json::obj();
+    j.set("bench", "divider_throughput".into());
+    j.set("lanes", lanes.into());
+    let mut arr = Vec::new();
+    for (label, s, bthr) in &rows {
+        let mut o = Json::obj();
+        o.set("divider", label.as_str().into());
+        o.set("scalar_div_per_s", (*s).into());
+        o.set("batch_div_per_s", (*bthr).into());
+        o.set("batch_over_scalar", (bthr / s).into());
+        arr.push(o);
+    }
+    j.set("batch_vs_scalar", Json::Arr(arr));
+    tsdiv::harness::write_bench_json("divider_throughput", &j);
 
     // Cycle-model comparison — the architectural claim the paper makes.
     let mut t = Table::new(

@@ -113,12 +113,14 @@ pub fn reciprocal_error_series(
     points: usize,
 ) -> Vec<(f64, f64)> {
     let mut backend = crate::powering::ExactMul::default();
+    // One scratch for the whole sweep — no per-point allocation.
+    let mut scratch = crate::powering::PowersScratch::new();
     let scale = (1u128 << cfg.frac_bits) as f64;
     (0..points)
         .map(|i| {
             let x = 1.0 + (i as f64 + 0.5) / points as f64;
             let xq = (x * scale) as u64;
-            let r = crate::taylor::reciprocal_fixed(cfg, &mut backend, xq);
+            let r = crate::taylor::reciprocal_fixed_with(cfg, &mut backend, xq, &mut scratch);
             let err = (r.recip as f64 / scale - 1.0 / x).abs();
             (x, err)
         })

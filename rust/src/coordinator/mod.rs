@@ -30,7 +30,7 @@ pub mod worker;
 
 pub use batcher::{Batch, BatchAssembler};
 pub use service::{DivisionService, MetricsSnapshot, ServiceConfig, SubmitError, Ticket};
-pub use worker::{Backend, BackendChoice, NativeBackend};
+pub use worker::{Backend, BackendChoice, NativeBackend, ScalarNativeBackend};
 
 #[cfg(test)]
 mod tests {

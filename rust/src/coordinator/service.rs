@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, BatchAssembler, BatchItem};
 use super::worker::BackendChoice;
+use crate::util::error::Result;
 use crate::util::stats::Summary;
 
 /// Service configuration.
@@ -139,7 +140,7 @@ pub struct DivisionService {
 
 impl DivisionService {
     /// Start the batcher thread and `cfg.workers` worker threads.
-    pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> anyhow::Result<Self> {
+    pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> Result<Self> {
         assert!(cfg.workers > 0 && cfg.max_batch > 0);
         let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
         let (work_tx, work_rx) = mpsc::channel::<(Batch, Vec<Sender<Result<Vec<f32>, String>>>)>();
@@ -221,7 +222,7 @@ impl DivisionService {
                 }
                 // Shutdown: drain any pending work.
                 flush(&mut asm, &mut responders);
-                        })?;
+            })?;
 
         // Worker pool.
         let mut workers = Vec::new();

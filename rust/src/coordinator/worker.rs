@@ -1,19 +1,25 @@
 //! Worker backends: the computation a worker thread runs per batch.
 //!
-//! Two implementations:
-//! * [`NativeBackend`] — the bit-exact Rust Taylor/ILM datapath
-//!   ([`crate::divider::TaylorDivider`]);
+//! Three implementations:
+//! * [`NativeBackend`] — the bit-exact Rust Taylor/ILM datapath driven
+//!   through the **batched** entry point
+//!   ([`crate::divider::Divider::div_bits_batch`]): one backend borrow,
+//!   hoisted per-op checks and a divisor-reciprocal cache per batch,
+//!   with packing buffers reused across batches;
+//! * [`ScalarNativeBackend`] — the same datapath one lane at a time (the
+//!   pre-batching worker loop), kept as the baseline the coordinator
+//!   bench compares against;
 //! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifact executed via
-//!   PJRT ([`crate::runtime::DivideEngine`]).
+//!   PJRT ([`crate::runtime::DivideEngine`], `pjrt` feature).
 //!
 //! Backends are created *inside* each worker thread by a factory (PJRT
 //! handles are not `Send`), so [`BackendChoice`] is the serializable
 //! configuration and [`Backend`] the per-thread instance.
 
-use anyhow::Result;
-
 use crate::divider::{BackendKind, Divider, TaylorDivider};
+use crate::fp::{F32, Rounding};
 use crate::taylor::TaylorConfig;
+use crate::util::error::Result;
 
 /// What a worker does with one flattened batch.
 pub trait Backend {
@@ -24,13 +30,20 @@ pub trait Backend {
 /// Serializable backend configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendChoice {
-    /// Bit-exact Rust datapath (Taylor order, optional ILM budget —
-    /// `None` = exact multiplies).
+    /// Bit-exact Rust datapath through `div_bits_batch` (Taylor order,
+    /// optional ILM budget — `None` = exact multiplies).
     Native {
         order: u32,
         ilm_iterations: Option<u32>,
     },
-    /// AOT artifact through PJRT (requires `make artifacts`).
+    /// The same datapath through the scalar `div_bits` loop — the
+    /// pre-batching baseline, kept for batch-vs-scalar comparisons.
+    NativeScalar {
+        order: u32,
+        ilm_iterations: Option<u32>,
+    },
+    /// AOT artifact through PJRT (requires `make artifacts` and the
+    /// `pjrt` feature).
     Pjrt,
 }
 
@@ -42,33 +55,87 @@ impl BackendChoice {
                 order,
                 ilm_iterations,
             } => Ok(Box::new(NativeBackend::new(order, ilm_iterations))),
+            BackendChoice::NativeScalar {
+                order,
+                ilm_iterations,
+            } => Ok(Box::new(ScalarNativeBackend::new(order, ilm_iterations))),
             BackendChoice::Pjrt => Ok(Box::new(PjrtBackend::load_default()?)),
         }
     }
 }
 
-/// The bit-exact Rust datapath as a service backend.
+fn native_divider(order: u32, ilm_iterations: Option<u32>) -> TaylorDivider {
+    let cfg = TaylorConfig {
+        order,
+        ..TaylorConfig::paper_default(60)
+    };
+    let kind = match ilm_iterations {
+        None => BackendKind::Exact,
+        Some(iterations) => BackendKind::Ilm { iterations },
+    };
+    TaylorDivider::new(cfg, kind)
+}
+
+/// The bit-exact Rust datapath as a service backend, dividing each
+/// assembled batch with one `div_bits_batch` call.
 pub struct NativeBackend {
     divider: TaylorDivider,
+    // Packing buffers reused across batches (capacity warms up to the
+    // service's max_batch and stays there — no steady-state allocation
+    // beyond the response vector the Backend contract requires).
+    a_bits: Vec<u64>,
+    b_bits: Vec<u64>,
+    q_bits: Vec<u64>,
 }
 
 impl NativeBackend {
     pub fn new(order: u32, ilm_iterations: Option<u32>) -> Self {
-        let cfg = TaylorConfig {
-            order,
-            ..TaylorConfig::paper_default(60)
-        };
-        let kind = match ilm_iterations {
-            None => BackendKind::Exact,
-            Some(iterations) => BackendKind::Ilm { iterations },
-        };
         Self {
-            divider: TaylorDivider::new(cfg, kind),
+            divider: native_divider(order, ilm_iterations),
+            a_bits: Vec::new(),
+            b_bits: Vec::new(),
+            q_bits: Vec::new(),
         }
     }
 }
 
 impl Backend for NativeBackend {
+    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        self.a_bits.clear();
+        self.a_bits.extend(a.iter().map(|&x| x.to_bits() as u64));
+        self.b_bits.clear();
+        self.b_bits.extend(b.iter().map(|&x| x.to_bits() as u64));
+        self.q_bits.clear();
+        self.q_bits.resize(a.len(), 0);
+        self.divider.div_bits_batch(
+            &self.a_bits,
+            &self.b_bits,
+            F32,
+            Rounding::NearestEven,
+            &mut self.q_bits,
+        );
+        Ok(self.q_bits.iter().map(|&q| f32::from_bits(q as u32)).collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("native[{}]", self.divider.name())
+    }
+}
+
+/// The pre-batching worker loop: one scalar `div_bits` call per lane.
+pub struct ScalarNativeBackend {
+    divider: TaylorDivider,
+}
+
+impl ScalarNativeBackend {
+    pub fn new(order: u32, ilm_iterations: Option<u32>) -> Self {
+        Self {
+            divider: native_divider(order, ilm_iterations),
+        }
+    }
+}
+
+impl Backend for ScalarNativeBackend {
     fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
         Ok(a.iter()
             .zip(b)
@@ -77,7 +144,7 @@ impl Backend for NativeBackend {
     }
 
     fn describe(&self) -> String {
-        format!("native[{}]", self.divider.name())
+        format!("native-scalar[{}]", self.divider.name())
     }
 }
 
@@ -138,5 +205,43 @@ mod tests {
         .build()
         .unwrap();
         assert!(be.describe().contains("ilm4"));
+    }
+
+    #[test]
+    fn choice_builds_native_scalar() {
+        let mut be = BackendChoice::NativeScalar {
+            order: 5,
+            ilm_iterations: None,
+        }
+        .build()
+        .unwrap();
+        assert!(be.describe().starts_with("native-scalar["));
+        assert_eq!(be.divide_batch(&[9.0], &[3.0]).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn batched_backend_bit_identical_to_scalar_backend() {
+        let mut batched = NativeBackend::new(5, None);
+        let mut scalar = ScalarNativeBackend::new(5, None);
+        let a = vec![
+            6.0f32,
+            -1.5,
+            f32::NAN,
+            0.0,
+            f32::INFINITY,
+            1.0e-40,
+            355.0,
+            -0.0,
+        ];
+        let b = vec![2.0f32, 3.0, 1.0, 0.0, 2.0, 2.0, 113.0, 5.0];
+        let qb = batched.divide_batch(&a, &b).unwrap();
+        let qs = scalar.divide_batch(&a, &b).unwrap();
+        assert_eq!(qb.len(), qs.len());
+        for i in 0..qb.len() {
+            assert_eq!(qb[i].to_bits(), qs[i].to_bits(), "lane {i}");
+        }
+        // Buffers are reused: a second, differently-sized batch works too.
+        let q = batched.divide_batch(&[8.0, 4.0], &[2.0, 2.0]).unwrap();
+        assert_eq!(q, vec![4.0, 2.0]);
     }
 }

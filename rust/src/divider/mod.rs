@@ -31,6 +31,19 @@ pub trait Divider {
     /// of `u64`), returning the quotient pattern.
     fn div_bits(&mut self, a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64;
 
+    /// Divide many lanes at once: `out[i] = a[i] / b[i]`, all slices the
+    /// same length. Bit-identical to calling [`Divider::div_bits`] per
+    /// lane — the default implementation *is* that loop, so every
+    /// divider gets the API; implementations with per-op setup worth
+    /// amortizing (see [`TaylorDivider`]) override it.
+    fn div_bits_batch(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding, out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        assert_eq!(a.len(), out.len(), "output length mismatch");
+        for ((&ab, &bb), q) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+            *q = self.div_bits(ab, bb, fmt, rm);
+        }
+    }
+
     /// f32 convenience.
     fn div_f32(&mut self, a: f32, b: f32) -> f32 {
         let q = self.div_bits(
@@ -213,6 +226,64 @@ impl Divider for TaylorDivider {
                 round_pack(sign, exp, q, fmt.frac_bits + f, false, fmt, rm).0
             }
         }
+    }
+
+    /// Specialized batch path (§Perf): the format check, the backend
+    /// `match` and the config borrow are hoisted out of the lane loop so
+    /// the whole batch runs monomorphized against one multiplier
+    /// backend, with a one-entry divisor-reciprocal cache on top.
+    fn div_bits_batch(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding, out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        assert_eq!(a.len(), out.len(), "output length mismatch");
+        assert!(
+            self.cfg.frac_bits >= fmt.frac_bits,
+            "datapath narrower than format significand"
+        );
+        match &mut self.backend {
+            BackendImpl::Exact(m) => div_bits_batch_with(&self.cfg, m, a, b, fmt, rm, out),
+            BackendImpl::Ilm(m) => div_bits_batch_with(&self.cfg, m, a, b, fmt, rm, out),
+        }
+    }
+}
+
+/// Monomorphized batch datapath behind [`TaylorDivider`]'s
+/// `div_bits_batch`: one shared special/exponent path per lane, a single
+/// backend borrow for the whole batch, and a one-entry reciprocal cache —
+/// service workloads repeat divisors within a batch (k-means centroid
+/// counts, normalization constants), and the reciprocal is a pure
+/// function of the divisor significand, so reuse is bit-exact.
+fn div_bits_batch_with<M: Multiplier>(
+    cfg: &TaylorConfig,
+    backend: &mut M,
+    a: &[u64],
+    b: &[u64],
+    fmt: Format,
+    rm: Rounding,
+    out: &mut [u64],
+) {
+    let f = cfg.frac_bits;
+    let shift = f - fmt.frac_bits;
+    // x is always ≥ 1.0 in Q2.F, so 0 can never collide with a real key.
+    let mut cached_x = 0u64;
+    let mut cached_recip = 0u64;
+    for ((&ab, &bb), q) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
+        *q = match prepare(ab, bb, fmt) {
+            Prepared::Done(bits) => bits,
+            Prepared::Divide {
+                sign,
+                exp,
+                sig_a,
+                sig_b,
+            } => {
+                let x = sig_b << shift;
+                if x != cached_x {
+                    cached_x = x;
+                    cached_recip = reciprocal_fast(cfg, backend, x);
+                }
+                let prod = sig_a as u128 * cached_recip as u128;
+                round_pack(sign, exp, prod, fmt.frac_bits + f, false, fmt, rm).0
+            }
+        };
     }
 }
 
@@ -467,5 +538,107 @@ mod tests {
             let q = d.div_f32(84.0, 2.0);
             assert_eq!(q, 42.0, "{}", d.name());
         }
+    }
+
+    #[test]
+    fn batch_matches_scalar_for_all_dividers_including_specials() {
+        // Covers the TaylorDivider specialization AND the default loop
+        // (Newton/Goldschmidt/longdiv) on one mixed operand set.
+        let a: Vec<u64> = [
+            6.0f32,
+            1.0,
+            -7.5,
+            f32::NAN,
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1.0e-40,
+            f32::MAX,
+            355.0,
+            1.5,
+        ]
+        .iter()
+        .map(|x| x.to_bits() as u64)
+        .collect();
+        let b: Vec<u64> = [
+            2.0f32,
+            3.0,
+            2.5,
+            1.0,
+            0.0,
+            5.0,
+            f32::INFINITY,
+            2.0,
+            2.0,
+            0.5,
+            113.0,
+            1.5,
+        ]
+        .iter()
+        .map(|x| x.to_bits() as u64)
+        .collect();
+        for rm in [
+            Rounding::NearestEven,
+            Rounding::TowardZero,
+            Rounding::TowardPositive,
+            Rounding::TowardNegative,
+        ] {
+            for mut d in all_dividers() {
+                let name = d.name();
+                let scalar: Vec<u64> = a
+                    .iter()
+                    .zip(&b)
+                    .map(|(&x, &y)| d.div_bits(x, y, F32, rm))
+                    .collect();
+                let mut batch = vec![0u64; a.len()];
+                d.div_bits_batch(&a, &b, F32, rm, &mut batch);
+                assert_eq!(scalar, batch, "{name} {rm:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_reciprocal_cache_repeated_divisors_bit_identical() {
+        // Constant divisor: every lane after the first hits the cache;
+        // results must still equal the scalar path bit for bit.
+        let mut d = TaylorDivider::paper_ilm(4);
+        let a: Vec<u64> = (0..64)
+            .map(|i| (1.5f32 + i as f32).to_bits() as u64)
+            .collect();
+        let b: Vec<u64> = vec![3.0f32.to_bits() as u64; 64];
+        let mut out = vec![0u64; 64];
+        d.div_bits_batch(&a, &b, F32, Rounding::NearestEven, &mut out);
+        for i in 0..64 {
+            let want = d.div_bits(a[i], b[i], F32, Rounding::NearestEven);
+            assert_eq!(out[i], want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn batch_f64_matches_scalar() {
+        let mut d = TaylorDivider::paper_exact();
+        let a: Vec<u64> = [1.0f64, 10.0, -3.25, 1e300, 5e-324, f64::NAN]
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        let b: Vec<u64> = [3.0f64, 4.0, 1.5, 1e-300, 2.0, 1.0]
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        let mut out = vec![0u64; a.len()];
+        d.div_bits_batch(&a, &b, crate::fp::F64, Rounding::NearestEven, &mut out);
+        for i in 0..a.len() {
+            let want = d.div_bits(a[i], b[i], crate::fp::F64, Rounding::NearestEven);
+            assert_eq!(out[i], want, "lane {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "output length mismatch")]
+    fn batch_rejects_mismatched_output() {
+        let mut d = TaylorDivider::paper_exact();
+        let mut out = vec![0u64; 1];
+        d.div_bits_batch(&[0, 0], &[0, 0], F32, Rounding::NearestEven, &mut out);
     }
 }

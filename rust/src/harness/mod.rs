@@ -20,6 +20,15 @@ impl DivBatch {
     pub fn is_empty(&self) -> bool {
         self.a.is_empty()
     }
+
+    /// Operands packed as raw bit patterns for
+    /// [`crate::divider::Divider::div_bits_batch`].
+    pub fn bits_f32(&self) -> (Vec<u64>, Vec<u64>) {
+        (
+            self.a.iter().map(|&x| x.to_bits() as u64).collect(),
+            self.b.iter().map(|&x| x.to_bits() as u64).collect(),
+        )
+    }
 }
 
 /// Generate a division workload of `n` pairs from a named distribution.
@@ -56,6 +65,48 @@ pub fn gen_adversarial_batch(n: usize, seed: u64) -> DivBatch {
         let scale = 2f32.powi(rng.range_i64(-8, 8) as i32);
         a.push((1.0 + rng.f32()) * scale);
         b.push(x * scale);
+    }
+    DivBatch { a, b }
+}
+
+/// A special-value-heavy batch: NaN/±Inf/±0/subnormal lanes cycled
+/// deterministically through random bit patterns, exercising the shared
+/// special path of the batch datapath.
+pub fn gen_special_batch(n: usize, seed: u64) -> DivBatch {
+    let menu = &crate::util::rng::F32_SPECIALS;
+    let mut rng = Rng::new(seed);
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    for i in 0..n {
+        a.push(if i % 3 == 0 {
+            menu[(i / 3) % menu.len()]
+        } else {
+            rng.f32_bits()
+        });
+        b.push(if i % 5 == 0 {
+            menu[(i / 5) % menu.len()]
+        } else {
+            rng.f32_bits()
+        });
+    }
+    DivBatch { a, b }
+}
+
+/// A batch whose divisors form contiguous runs of at most `distinct`
+/// values — the shape service traffic actually has (k-means centroid
+/// updates divide whole rows by one count; normalization divides many
+/// lanes by one constant). Exercises the batch path's divisor-reciprocal
+/// cache.
+pub fn gen_repeated_divisor_batch(n: usize, distinct: usize, seed: u64) -> DivBatch {
+    let distinct = distinct.max(1);
+    let mut rng = Rng::new(seed);
+    let divisors: Vec<f32> = (0..distinct).map(|_| rng.f32_log_uniform(-4, 4)).collect();
+    let run = n.div_ceil(distinct).max(1);
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    for i in 0..n {
+        a.push(rng.f32_log_uniform(-8, 8));
+        b.push(divisors[(i / run).min(distinct - 1)]);
     }
     DivBatch { a, b }
 }
@@ -167,6 +218,18 @@ pub fn timed_section<F: FnMut()>(label: &str, f: F) -> Measurement {
     m
 }
 
+/// Write a bench-trajectory record to `<repo root>/BENCH_<name>.json`
+/// (repo root = the crate manifest's parent, independent of the cwd the
+/// bench was invoked from). Failures are reported, not fatal — a bench
+/// run on a read-only checkout still prints its tables.
+pub fn write_bench_json(name: &str, json: &crate::util::json::Json) {
+    let path = format!("{}/../BENCH_{}.json", env!("CARGO_MANIFEST_DIR"), name);
+    match std::fs::write(&path, json.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +254,47 @@ mod tests {
             assert!(x.is_finite() && y.is_finite());
             assert!(y != 0.0);
         }
+    }
+
+    #[test]
+    fn bits_f32_packs_patterns() {
+        let batch = gen_batch(Workload::LogUniform, 32, 4);
+        let (ab, bb) = batch.bits_f32();
+        assert_eq!(ab.len(), 32);
+        assert_eq!(bb.len(), 32);
+        assert_eq!(f32::from_bits(ab[0] as u32), batch.a[0]);
+        assert_eq!(f32::from_bits(bb[31] as u32), batch.b[31]);
+    }
+
+    #[test]
+    fn special_batch_contains_specials_deterministically() {
+        let b1 = gen_special_batch(300, 1);
+        let b2 = gen_special_batch(300, 1);
+        assert_eq!(b1.len(), 300);
+        assert_eq!(
+            b1.a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b2.a.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // The deterministic menu cycle guarantees NaN and Inf lanes.
+        assert!(b1.a.iter().any(|x| x.is_nan()));
+        assert!(b1.a.iter().any(|x| x.is_infinite()));
+        assert!(b1.b.iter().any(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn repeated_divisor_batch_has_contiguous_runs() {
+        let b = gen_repeated_divisor_batch(256, 8, 2);
+        assert_eq!(b.len(), 256);
+        let distinct: std::collections::HashSet<u32> =
+            b.b.iter().map(|x| x.to_bits()).collect();
+        assert!(distinct.len() <= 8, "{} distinct divisors", distinct.len());
+        let transitions = b
+            .b
+            .windows(2)
+            .filter(|w| w[0].to_bits() != w[1].to_bits())
+            .count();
+        assert!(transitions < 8, "{transitions} transitions — not contiguous runs");
+        assert!(b.b.iter().all(|x| x.is_finite() && *x != 0.0));
     }
 
     #[test]

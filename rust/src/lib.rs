@@ -23,7 +23,8 @@
 //!   worker pool, metrics);
 //! * [`harness`] — workload generators and the bench runner;
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, stats, property
-//!   testing, tables) — the image vendors no general-purpose crates.
+//!   testing, tables, errors) — the image vendors no general-purpose
+//!   crates.
 
 pub mod analysis;
 pub mod coordinator;

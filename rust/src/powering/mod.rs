@@ -179,6 +179,23 @@ pub struct PowersResult {
     pub counts: OpCounts,
 }
 
+/// Reusable buffers for [`PoweringUnit::compute_powers_into`], so
+/// repeated diagnostic reciprocals (the Taylor engine, analysis sweeps)
+/// allocate only once and reuse capacity afterwards.
+#[derive(Clone, Debug, Default)]
+pub struct PowersScratch {
+    /// `powers[i]` = x^(i+1), as in [`PowersResult::powers`].
+    pub powers: Vec<u64>,
+    /// Executed Fig-6 schedule, as in [`PowersResult::schedule`].
+    pub schedule: Vec<CycleTrace>,
+}
+
+impl PowersScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// The powering unit.
 ///
 /// `frac_bits` is the fixed-point fraction width of `x` (< 64); products
@@ -197,17 +214,41 @@ impl<'m, M: Multiplier + ?Sized> PoweringUnit<'m, M> {
 
     /// Compute `x^1 … x^max_power` per the Fig-6 schedule.
     ///
+    /// Allocating convenience over [`Self::compute_powers_into`].
+    pub fn compute_powers(&mut self, x: u64, max_power: u32) -> PowersResult {
+        let mut scratch = PowersScratch::new();
+        let (cycles, counts) = self.compute_powers_into(x, max_power, &mut scratch);
+        PowersResult {
+            powers: scratch.powers,
+            schedule: scratch.schedule,
+            cycles,
+            counts,
+        }
+    }
+
+    /// Compute `x^1 … x^max_power` per the Fig-6 schedule into reusable
+    /// buffers; returns `(cycles, op counts)` with the powers and the
+    /// executed schedule left in `scratch`.
+    ///
     /// Cycle 1 computes x² and caches the PE/LOD of x (paper step 1);
     /// every later cycle computes the next odd power on the multiplier
     /// (using the cached x, saving one PE evaluation — step 3) and the
     /// next even power on the squaring unit (step 4), in parallel.
-    pub fn compute_powers(&mut self, x: u64, max_power: u32) -> PowersResult {
+    pub fn compute_powers_into(
+        &mut self,
+        x: u64,
+        max_power: u32,
+        scratch: &mut PowersScratch,
+    ) -> (u32, OpCounts) {
         assert!(max_power >= 1, "need at least x^1");
         let before = self.backend.counts();
         let f = self.frac_bits;
-        let mut powers: Vec<u64> = Vec::with_capacity(max_power as usize);
+        let powers = &mut scratch.powers;
+        let schedule = &mut scratch.schedule;
+        powers.clear();
+        powers.reserve(max_power as usize);
+        schedule.clear();
         powers.push(x); // x^1
-        let mut schedule = Vec::new();
         let mut counts_extra = OpCounts::default();
 
         if max_power >= 2 {
@@ -237,7 +278,7 @@ impl<'m, M: Multiplier + ?Sized> PoweringUnit<'m, M> {
                     let even_operand = powers[(next_odd - 2) as usize]; // x^(2m)
                     let p = self.backend.mul(even_operand, x) >> f;
                     counts_extra.pe_cache_hits += 1;
-                    ensure_len(&mut powers, next_odd as usize);
+                    ensure_len(powers, next_odd as usize);
                     powers[(next_odd - 1) as usize] = p as u64;
                     trace.odd_power = Some(next_odd);
                     next_odd += 2;
@@ -246,7 +287,7 @@ impl<'m, M: Multiplier + ?Sized> PoweringUnit<'m, M> {
                     // x^(2m) = (x^m)², operand available from earlier cycles.
                     let half = powers[(next_even / 2 - 1) as usize];
                     let p = self.backend.square(half) >> f;
-                    ensure_len(&mut powers, next_even as usize);
+                    ensure_len(powers, next_even as usize);
                     powers[(next_even - 1) as usize] = p as u64;
                     trace.even_power = Some(next_even);
                     next_even += 2;
@@ -265,12 +306,7 @@ impl<'m, M: Multiplier + ?Sized> PoweringUnit<'m, M> {
         counts.pe_ops -= counts_extra.pe_cache_hits;
         counts.pe_cache_hits += counts_extra.pe_cache_hits;
 
-        PowersResult {
-            cycles: schedule.len() as u32,
-            powers,
-            schedule,
-            counts,
-        }
+        (schedule.len() as u32, counts)
     }
 }
 
@@ -378,6 +414,22 @@ mod tests {
         // One PE per square (6) + one PE per mul (5, second operand cached).
         assert_eq!(r.counts.pe_ops, 11);
         assert_eq!(r.counts.pe_cache_hits, 5);
+    }
+
+    #[test]
+    fn compute_powers_into_reuses_scratch_and_matches_allocating_path() {
+        let mut be = ExactMul::default();
+        let mut pu = PoweringUnit::new(&mut be, F);
+        let mut scratch = PowersScratch::new();
+        for (x, p) in [(fx(0.9), 12u32), (fx(0.5), 5), (fx(0.73), 8)] {
+            let (cycles, counts) = pu.compute_powers_into(x, p, &mut scratch);
+            let mut be2 = ExactMul::default();
+            let r = PoweringUnit::new(&mut be2, F).compute_powers(x, p);
+            assert_eq!(scratch.powers, r.powers, "x={x} p={p}");
+            assert_eq!(scratch.schedule, r.schedule);
+            assert_eq!(cycles, r.cycles);
+            assert_eq!(counts, r.counts);
+        }
     }
 
     #[test]

@@ -8,11 +8,23 @@
 //! A [`DivideEngine`] owns one compiled executable per batch size from
 //! `artifacts/manifest.json` and pads incoming batches up to the nearest
 //! entry — Python is never on this path.
+//!
+//! The PJRT bindings live behind the **`pjrt` cargo feature**: the build
+//! image vendors no `xla` crate, so the default build compiles a stub
+//! engine whose loaders fail with a clear message and
+//! [`artifacts_available`] reports `false`, letting every caller skip
+//! the PJRT path gracefully. Manifest parsing is always available.
+//! NB: *enabling* `pjrt` without first vendoring an `xla` crate (via a
+//! `[patch]`/path dependency) fails at compile time with unresolved
+//! `xla` imports — the feature is an opt-in for environments that ship
+//! the bindings, not a runtime toggle; avoid `--all-features` in CI.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::bail;
+#[cfg(feature = "pjrt")]
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
 
 /// One entry of `artifacts/manifest.json`.
@@ -37,23 +49,23 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let root = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let root = json::parse(&text)?;
         let mut entries = Vec::new();
         for e in root
             .get("entries")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+            .context("manifest missing 'entries'")?
         {
             entries.push(ManifestEntry {
                 name: e
                     .get("name")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .context("entry missing name")?
                     .to_string(),
                 path: dir.join(
                     e.get("path")
                         .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("entry missing path"))?,
+                        .context("entry missing path")?,
                 ),
                 kind: e
                     .get("kind")
@@ -63,7 +75,7 @@ impl Manifest {
                 batch: e
                     .get("batch")
                     .and_then(Json::as_f64)
-                    .ok_or_else(|| anyhow!("entry missing batch"))? as usize,
+                    .context("entry missing batch")? as usize,
             });
         }
         Ok(Manifest {
@@ -82,11 +94,13 @@ impl Manifest {
 }
 
 /// A compiled divide executable of fixed batch size.
+#[cfg(feature = "pjrt")]
 pub struct DivideExecutable {
     pub batch: usize,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl DivideExecutable {
     /// Execute on exactly `batch` lanes.
     pub fn run_exact(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
@@ -94,34 +108,43 @@ impl DivideExecutable {
         assert_eq!(b.len(), self.batch);
         let la = xla::Literal::vec1(a);
         let lb = xla::Literal::vec1(b);
-        let result = self.exe.execute::<xla::Literal>(&[la, lb])?[0][0]
-            .to_literal_sync()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| err!("pjrt execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("pjrt transfer: {e}"))?;
         // aot.py lowers with return_tuple=True → 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        let out = result.to_tuple1().map_err(|e| err!("pjrt tuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| err!("pjrt to_vec: {e}"))
     }
 }
 
 /// The division engine: PJRT client + one executable per batch size.
+#[cfg(feature = "pjrt")]
 pub struct DivideEngine {
     client: xla::PjRtClient,
     /// Sorted ascending by batch size.
     executables: Vec<DivideExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl DivideEngine {
     /// Compile every `divide` entry in the manifest on the CPU client.
     pub fn load(manifest: &Manifest) -> Result<DivideEngine> {
-        let client = xla::PjRtClient::cpu()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt client: {e}"))?;
         let mut executables = Vec::new();
         for e in manifest.entries.iter().filter(|e| e.kind == "divide") {
             let proto = xla::HloModuleProto::from_text_file(
                 e.path
                     .to_str()
-                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", e.path))?,
-            )?;
+                    .with_context(|| format!("non-utf8 path {:?}", e.path))?,
+            )
+            .map_err(|e| err!("hlo parse: {e}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| err!("pjrt compile: {e}"))?;
             executables.push(DivideExecutable { batch: e.batch, exe });
         }
         if executables.is_empty() {
@@ -184,10 +207,49 @@ impl DivideEngine {
     }
 }
 
-/// True when the artifacts directory exists with a manifest — used by
-/// tests/benches to skip gracefully before `make artifacts` has run.
+/// Stub engine when the `pjrt` feature is off: loading always fails with
+/// a clear message, and [`artifacts_available`] reports `false` so every
+/// caller (tests, benches, examples, the serve CLI) skips this path.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct DivideEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl DivideEngine {
+    pub fn load(_manifest: &Manifest) -> Result<DivideEngine> {
+        bail!(
+            "tsdiv was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` and a vendored `xla` crate to run AOT artifacts"
+        )
+    }
+
+    pub fn load_default() -> Result<DivideEngine> {
+        Self::load(&Manifest {
+            dir: PathBuf::new(),
+            entries: Vec::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the pjrt feature)".to_string()
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn divide(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+        bail!("pjrt feature disabled")
+    }
+}
+
+/// True when the PJRT path is compiled in AND the artifacts directory
+/// exists with a manifest — used by tests/benches to skip gracefully
+/// before `make artifacts` has run (or on default builds).
 pub fn artifacts_available() -> bool {
-    Manifest::default_dir().join("manifest.json").exists()
+    cfg!(feature = "pjrt") && Manifest::default_dir().join("manifest.json").exists()
 }
 
 #[cfg(test)]
@@ -195,7 +257,8 @@ mod tests {
     use super::*;
 
     // Full PJRT round-trip tests live in rust/tests/integration_runtime.rs
-    // (they need `make artifacts`). Here: manifest parsing on fixtures.
+    // (they need `make artifacts` and the pjrt feature). Here: manifest
+    // parsing on fixtures, which works on every build.
 
     #[test]
     fn manifest_parses_fixture() {
@@ -232,5 +295,13 @@ mod tests {
         assert!(Manifest::load(&dir).is_err());
         std::fs::write(dir.join("manifest.json"), r#"{"entries": [{}]}"#).unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_fails_with_clear_message() {
+        let e = DivideEngine::load_default().unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+        assert!(!artifacts_available());
     }
 }

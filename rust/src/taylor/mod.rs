@@ -13,7 +13,7 @@
 //! benches can sweep the accuracy/hardware tradeoff.
 
 use crate::pla::SegmentTable;
-use crate::powering::{Multiplier, OpCounts, PoweringUnit};
+use crate::powering::{Multiplier, OpCounts, PoweringUnit, PowersScratch};
 
 /// Configuration of the reciprocal datapath.
 #[derive(Clone, Debug)]
@@ -69,6 +69,9 @@ pub struct RecipResult {
 pub struct TaylorEngine<'m, M: Multiplier + ?Sized> {
     pub cfg: TaylorConfig,
     backend: &'m mut M,
+    /// Powering-unit buffers reused across reciprocals (§Perf: the
+    /// diagnostic path allocates once per engine, not once per op).
+    scratch: PowersScratch,
 }
 
 impl<'m, M: Multiplier + ?Sized> TaylorEngine<'m, M> {
@@ -77,33 +80,55 @@ impl<'m, M: Multiplier + ?Sized> TaylorEngine<'m, M> {
             cfg.frac_bits, cfg.table.frac_bits,
             "table and datapath widths must agree"
         );
-        Self { cfg, backend }
+        Self {
+            cfg,
+            backend,
+            scratch: PowersScratch::new(),
+        }
     }
 
     /// Compute `1/x` for `x ∈ [1, 2)` in Q2.F.
     pub fn reciprocal(&mut self, x: u64) -> RecipResult {
-        reciprocal_fixed(&self.cfg, self.backend, x)
+        reciprocal_fixed_with(&self.cfg, self.backend, x, &mut self.scratch)
     }
 
     /// Float-domain convenience wrapper for analysis code: `x ∈ [1,2)`.
     pub fn reciprocal_f64(&mut self, x: f64) -> f64 {
         let f = self.cfg.frac_bits;
+        let one = 1u64 << f;
         let scale = (1u128 << f) as f64;
-        let xq = (x * scale) as u64;
-        let r = self.reciprocal(xq.max(1 << f));
+        // Clamp both ends of the Q2.F domain: rounding `x * scale` can
+        // land exactly on 2.0 (e.g. x = 1.999…9), which the datapath's
+        // [1, 2) interval excludes.
+        let xq = ((x * scale) as u64).clamp(one, (one << 1) - 1);
+        let r = self.reciprocal(xq);
         r.recip as f64 / scale
     }
 }
 
-/// Free-function core of the reciprocal datapath — the divider hot path
-/// calls this directly to avoid rebuilding an engine per operation.
-///
-/// Steps (Fig 7): PLA seed → `m = 1 − x·y0` → powering unit → accumulator
-/// → final multiply.
+/// Free-function core of the reciprocal datapath — allocating
+/// convenience over [`reciprocal_fixed_with`] for one-off calls.
 pub fn reciprocal_fixed<M: Multiplier + ?Sized>(
     cfg: &TaylorConfig,
     backend: &mut M,
     x: u64,
+) -> RecipResult {
+    let mut scratch = PowersScratch::new();
+    reciprocal_fixed_with(cfg, backend, x, &mut scratch)
+}
+
+/// The diagnostic reciprocal datapath with caller-owned powering buffers
+/// — no per-op allocation once `scratch` has warmed up. The divider hot
+/// path uses [`reciprocal_fast`] instead; this path additionally reports
+/// segment/m/cycle/op-count diagnostics.
+///
+/// Steps (Fig 7): PLA seed → `m = 1 − x·y0` → powering unit → accumulator
+/// → final multiply.
+pub fn reciprocal_fixed_with<M: Multiplier + ?Sized>(
+    cfg: &TaylorConfig,
+    backend: &mut M,
+    x: u64,
+    scratch: &mut PowersScratch,
 ) -> RecipResult {
     let f = cfg.frac_bits;
     let one = 1u64 << f;
@@ -126,13 +151,13 @@ pub fn reciprocal_fixed<M: Multiplier + ?Sized>(
         (one + m, 0)
     } else {
         let mut pu = PoweringUnit::new(backend, f);
-        let powers = pu.compute_powers(m, cfg.order);
+        let (cycles, _counts) = pu.compute_powers_into(m, cfg.order, scratch);
         // 4. Accumulator: S = 1 + Σ m^k.
         let mut s = one as u128;
-        for &p in &powers.powers {
+        for &p in &scratch.powers {
             s += p as u128;
         }
-        (s as u64, powers.cycles)
+        (s as u64, cycles)
     };
 
     // 5. recip = y0 · S (final multiply of Fig 7).
@@ -286,6 +311,45 @@ mod tests {
             check_that!(err < 2f64.powi(-53) * 1.25, "x={xf}: err {err:.3e}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn reciprocal_f64_clamps_both_domain_ends() {
+        // x values that round to exactly 2.0 (or above/below the domain)
+        // in Q2.F must clamp instead of tripping the [1,2) assertion.
+        let (cfg, mut be) = engine_exact(5);
+        let mut eng = TaylorEngine::new(cfg, &mut be);
+        for x in [2.0, 1.999_999_999_999_999_9, 2.5, 1.0, 0.5] {
+            let got = eng.reciprocal_f64(x);
+            assert!(got.is_finite());
+            // Clamped values still approximate the reciprocal of the
+            // nearest in-domain point.
+            let clamped = x.clamp(1.0, 2.0 - 2f64.powi(-(F as i32)));
+            assert!(
+                (got - 1.0 / clamped).abs() < 1e-9,
+                "x={x}: got {got}, want ~{}",
+                1.0 / clamped
+            );
+        }
+    }
+
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        let cfg = TaylorConfig::paper_default(60);
+        let mut scratch = crate::powering::PowersScratch::new();
+        for i in 0..200u64 {
+            let x = (1u64 << 60) + i * ((1u64 << 60) / 200) + 999;
+            let x = x.min((1u64 << 61) - 1);
+            let mut b1 = ExactMul::default();
+            let mut b2 = ExactMul::default();
+            let alloc = reciprocal_fixed(&cfg, &mut b1, x);
+            let reused = reciprocal_fixed_with(&cfg, &mut b2, x, &mut scratch);
+            assert_eq!(alloc.recip, reused.recip, "x={x}");
+            assert_eq!(alloc.segment, reused.segment);
+            assert_eq!(alloc.m, reused.m);
+            assert_eq!(alloc.powering_cycles, reused.powering_cycles);
+            assert_eq!(alloc.counts, reused.counts);
+        }
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Minimal in-tree error handling.
+//!
+//! The build image vendors no general-purpose crates, so the fallible
+//! layers (runtime manifest loading, service startup, worker backends)
+//! use this message-carrying error instead of `anyhow`. The surface is a
+//! deliberately small subset of the same idioms: [`Result`], a
+//! [`Context`] extension trait for `Result`/`Option`, and the
+//! [`crate::err!`]/[`crate::bail!`] macros.
+
+use std::fmt;
+
+/// A message-carrying error; context layers prepend `context: cause`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+
+    /// Prepend a context layer, like `anyhow::Error::context`.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Error::new(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Error::new(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+impl From<crate::util::json::ParseError> for Error {
+    fn from(e: crate::util::json::ParseError) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+/// Crate-wide result type defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on results and options.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke with code {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke with code 7");
+    }
+
+    #[test]
+    fn context_layers_prepend() {
+        let r: Result<u32> = fails().context("loading manifest");
+        assert_eq!(r.unwrap_err().to_string(), "loading manifest: broke with code 7");
+        let e = err!("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, String> = Ok(5);
+        let r = ok.with_context(|| -> String { panic!("must not be called") });
+        assert_eq!(r.unwrap(), 5);
+        let bad: std::result::Result<u32, String> = Err("nope".into());
+        let r = bad.with_context(|| format!("step {}", 3));
+        assert_eq!(r.unwrap_err().to_string(), "step 3: nope");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing key").unwrap_err().to_string(), "missing key");
+        assert_eq!(Some(2u32).context("unused").unwrap(), 2);
+    }
+
+    #[test]
+    fn conversions() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        let e: Error = "plain".into();
+        assert_eq!(e.to_string(), "plain");
+        let e: Error = String::from("owned").into();
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn io_fail() -> Result<()> {
+            std::fs::read_to_string("/definitely/not/a/path/xyz")?;
+            Ok(())
+        }
+        assert!(io_fail().is_err());
+    }
+}

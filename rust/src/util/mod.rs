@@ -6,6 +6,8 @@
 //!
 //! * [`rng`] — SplitMix64 / xoshiro256** PRNG plus floating-point and
 //!   special-value distributions for workload generation;
+//! * [`error`] — message-carrying error type with context layers (the
+//!   crate's `anyhow` replacement);
 //! * [`stats`] — streaming summary statistics, percentiles, histograms;
 //! * [`json`] — a minimal JSON value/writer for metrics and reports;
 //! * [`cli`] — a small declarative command-line parser;
@@ -16,6 +18,7 @@
 
 pub mod check;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod rng;

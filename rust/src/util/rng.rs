@@ -164,24 +164,10 @@ impl Rng {
         }
     }
 
-    /// An f32 drawn from a menu of IEEE-754 special/corner values, used
-    /// by the failure-injection and specials tests.
+    /// An f32 drawn from [`F32_SPECIALS`], used by the failure-injection
+    /// and specials tests.
     pub fn f32_special(&mut self) -> f32 {
-        const SPECIALS: [f32; 12] = [
-            0.0,
-            -0.0,
-            f32::INFINITY,
-            f32::NEG_INFINITY,
-            f32::NAN,
-            f32::MIN_POSITIVE,          // smallest normal
-            1.0e-45,                    // smallest subnormal
-            f32::MAX,
-            f32::MIN,
-            1.0,
-            -1.0,
-            2.0,
-        ];
-        *self.choose(&SPECIALS)
+        *self.choose(&F32_SPECIALS)
     }
 
     /// Fully random f32 bit pattern (covers NaNs, subnormals, everything).
@@ -196,6 +182,23 @@ impl Rng {
         f64::from_bits(self.next_u64())
     }
 }
+
+/// The menu of IEEE-754 f32 special/corner values shared by
+/// [`Rng::f32_special`] and the special-value batch generators.
+pub const F32_SPECIALS: [f32; 12] = [
+    0.0,
+    -0.0,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    f32::NAN,
+    f32::MIN_POSITIVE, // smallest normal
+    1.0e-45,           // smallest subnormal
+    f32::MAX,
+    f32::MIN,
+    1.0,
+    -1.0,
+    2.0,
+];
 
 /// Exact power of two as f64 (no powi rounding concerns for |e| < 1023).
 #[inline]

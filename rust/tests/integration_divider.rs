@@ -6,7 +6,8 @@ use tsdiv::divider::{
     all_dividers, goldschmidt::GoldschmidtDivider, longdiv::LongDivider, newton::NewtonDivider,
     Divider, TaylorDivider,
 };
-use tsdiv::fp::{Rounding, BF16, F16, F32};
+use tsdiv::fp::{ulp_diff, Rounding, BF16, F16, F32};
+use tsdiv::harness::gen_special_batch;
 use tsdiv::util::rng::Rng;
 
 #[test]
@@ -116,6 +117,33 @@ fn adversarial_segment_edge_operands() {
                 let g = gold.div_f32(a, b);
                 let ulp = (t.to_bits() as i64 - g.to_bits() as i64).unsigned_abs();
                 assert!(ulp <= 1, "{a}/{b} (edge {edge}): {ulp} ulp");
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_path_survives_special_heavy_workload() {
+    // The harness's special-value batch (NaN/±Inf/±0/subnormal lanes
+    // mixed with random bit patterns) through the batched datapath,
+    // checked lane-by-lane against the exactly-rounded gold reference.
+    let batch = gen_special_batch(512, 9);
+    let (a, b) = batch.bits_f32();
+    let mut taylor = TaylorDivider::paper_exact();
+    let mut out = vec![0u64; a.len()];
+    taylor.div_bits_batch(&a, &b, F32, Rounding::NearestEven, &mut out);
+    let mut gold = LongDivider::new();
+    for i in 0..a.len() {
+        let g = gold.div_bits(a[i], b[i], F32, Rounding::NearestEven);
+        match ulp_diff(out[i], g, F32) {
+            Some(u) => assert!(u <= 1, "lane {i}: {u} ulp vs gold"),
+            None => {
+                // NaN result: both paths must agree it is NaN.
+                assert!(
+                    f32::from_bits(out[i] as u32).is_nan()
+                        && f32::from_bits(g as u32).is_nan(),
+                    "lane {i}: NaN mismatch"
+                );
             }
         }
     }

@@ -3,7 +3,7 @@
 
 use tsdiv::check_that;
 use tsdiv::divider::{longdiv::LongDivider, Divider, TaylorDivider};
-use tsdiv::fp::{next_down, next_up, round_pack, unpack, Class, Rounding, F32};
+use tsdiv::fp::{next_down, next_up, round_pack, unpack, Class, F32, F64, Rounding};
 use tsdiv::ilm::{ilm_mul, ilm_mul_exact};
 use tsdiv::pla::{derive_segments, m_max, SegmentTable};
 use tsdiv::powering::{ExactMul, IlmBackend, PoweringUnit};
@@ -155,6 +155,92 @@ fn prop_next_up_down_bracket_round_pack() {
         let up = f32::from_bits(next_up(bits, F32) as u32) as f64;
         let down = f32::from_bits(next_down(bits, F32) as u32) as f64;
         check_that!(down <= xf && xf <= up, "x={xf}: [{down}, {v}, {up}]");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_div_bits_batch_bit_identical_to_scalar_f32_and_f64() {
+    // NaN, ±Inf, ±0, smallest/largest subnormal, 1.0, largest finite.
+    // Deliberately independent of `rng::F32_SPECIALS`: this is a test
+    // fixture pinning exact bit patterns (incl. ones the runtime menu
+    // lacks), so runtime-menu edits can't silently narrow coverage.
+    const SPECIALS_F32: [u64; 9] = [
+        0x7FC0_0000,
+        0x7F80_0000,
+        0xFF80_0000,
+        0x0000_0000,
+        0x8000_0000,
+        0x0000_0001,
+        0x007F_FFFF,
+        0x3F80_0000,
+        0x7F7F_FFFF,
+    ];
+    const SPECIALS_F64: [u64; 9] = [
+        0x7FF8_0000_0000_0000,
+        0x7FF0_0000_0000_0000,
+        0xFFF0_0000_0000_0000,
+        0x0000_0000_0000_0000,
+        0x8000_0000_0000_0000,
+        0x0000_0000_0000_0001,
+        0x000F_FFFF_FFFF_FFFF,
+        0x3FF0_0000_0000_0000,
+        0x7FEF_FFFF_FFFF_FFFF,
+    ];
+    forall(Config::named("div_bits_batch == scalar div_bits").cases(40), |d| {
+        let n = d.range_u64(1, 80) as usize;
+        let rm = *[
+            Rounding::NearestEven,
+            Rounding::TowardZero,
+            Rounding::TowardPositive,
+            Rounding::TowardNegative,
+        ]
+        .get(d.choose_idx(4))
+        .unwrap();
+        for fmt_is_f64 in [false, true] {
+            let (fmt, specials): (tsdiv::fp::Format, &[u64]) = if fmt_is_f64 {
+                (F64, &SPECIALS_F64)
+            } else {
+                (F32, &SPECIALS_F32)
+            };
+            let mut a: Vec<u64> = Vec::with_capacity(n);
+            let mut b: Vec<u64> = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut ab = if fmt_is_f64 { d.u64() } else { d.u32() as u64 };
+                let mut bb = if fmt_is_f64 { d.u64() } else { d.u32() as u64 };
+                match i % 5 {
+                    0 => ab = specials[d.choose_idx(specials.len())],
+                    1 => bb = specials[d.choose_idx(specials.len())],
+                    2 => {
+                        // Repeated divisor → exercises the batch path's
+                        // one-entry reciprocal cache.
+                        if let Some(&prev) = b.last() {
+                            bb = prev;
+                        }
+                    }
+                    _ => {}
+                }
+                a.push(ab);
+                b.push(bb);
+            }
+            for ilm in [None, Some(3u32)] {
+                let mut div = match ilm {
+                    None => TaylorDivider::paper_exact(),
+                    Some(k) => TaylorDivider::paper_ilm(k),
+                };
+                let scalar: Vec<u64> = a
+                    .iter()
+                    .zip(&b)
+                    .map(|(&x, &y)| div.div_bits(x, y, fmt, rm))
+                    .collect();
+                let mut batch = vec![0u64; n];
+                div.div_bits_batch(&a, &b, fmt, rm, &mut batch);
+                check_that!(
+                    scalar == batch,
+                    "batch != scalar (f64={fmt_is_f64}, ilm={ilm:?}, rm={rm:?}, n={n})"
+                );
+            }
+        }
         Ok(())
     });
 }
