@@ -13,7 +13,7 @@
 
 use std::time::{Duration, Instant};
 
-use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig};
+use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
 use tsdiv::runtime::artifacts_available;
 use tsdiv::util::rng::Rng;
 use tsdiv::util::table::{sig, Align, Table};
@@ -117,8 +117,10 @@ fn main() {
         }
         divisions_served += num.len() as u64;
         let q = svc
-            .divide_blocking(num, den)
-            .expect("centroid division batch");
+            .divide_request_blocking(DivRequest::from_f32(&num, &den))
+            .expect("centroid division batch")
+            .to_f32()
+            .expect("binary32 response");
         for ci in 0..K {
             for j in 0..DIM {
                 est[ci][j] = q[ci * DIM + j];

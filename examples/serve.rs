@@ -1,8 +1,13 @@
 //! Serve: drive the division service with an open-loop synthetic load
 //! and report latency/throughput — the "coordinator as a product" demo.
 //!
+//! Requests go through the typed API (`DivRequest` bit-pattern lanes +
+//! format + rounding); `--format mixed` interleaves all four formats to
+//! exercise per-`(Format, Rounding)` batch keying.
+//!
 //! ```bash
 //! cargo run --release --example serve -- --backend native --seconds 3
+//! cargo run --release --example serve -- --format mixed --rounding up
 //! cargo run --release --example serve -- --backend pjrt          # needs artifacts
 //! ```
 
@@ -10,15 +15,33 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::fp::{Format, Rounding, ALL_FORMATS};
+use tsdiv::harness::gen_bits_batch;
 use tsdiv::util::cli::Command;
-use tsdiv::util::rng::Rng;
 use tsdiv::util::stats::Summary;
 use tsdiv::util::table::{sig, Align, Table};
 
 fn main() {
     let cmd = Command::new("serve", "open-loop load against the division service")
-        .opt("backend", "native", "native | native-ilm | pjrt")
+        .opt_choice(
+            "backend",
+            "native",
+            &["native", "native-ilm", "pjrt"],
+            "worker backend",
+        )
+        .opt_choice(
+            "format",
+            "f32",
+            &["f16", "bf16", "f32", "f64", "mixed"],
+            "request operand format",
+        )
+        .opt_choice(
+            "rounding",
+            "nearest",
+            &["nearest", "zero", "up", "down"],
+            "rounding mode",
+        )
         .opt("seconds", "3", "load duration")
         .opt("clients", "4", "client threads")
         .opt("request-lanes", "64", "divisions per request")
@@ -51,6 +74,16 @@ fn main() {
     let seconds: u64 = args.parse_or("seconds", 3);
     let clients: usize = args.parse_or("clients", 4);
     let lanes: usize = args.parse_or("request-lanes", 64);
+    let rm = Rounding::from_name(args.get_or("rounding", "nearest")).unwrap();
+    let fmt_name = args.get_or("format", "f32").to_string();
+    let formats: Arc<Vec<Format>> = Arc::new(match fmt_name.as_str() {
+        "mixed" => ALL_FORMATS.to_vec(),
+        name => vec![Format::from_name(name).unwrap()],
+    });
+    if backend == BackendChoice::Pjrt && (fmt_name != "f32" || rm != Rounding::NearestEven) {
+        eprintln!("the pjrt backend serves f32 at nearest-even only");
+        std::process::exit(1);
+    }
 
     let svc = Arc::new(
         DivisionService::start(
@@ -65,8 +98,9 @@ fn main() {
         .expect("service start"),
     );
     println!(
-        "serving with backend={:?}, {clients} clients × {lanes} lanes/request, {seconds}s\n",
-        backend
+        "serving with backend={backend:?}, format={fmt_name}, rounding={}, \
+         {clients} clients × {lanes} lanes/request, {seconds}s\n",
+        rm.name()
     );
 
     let stop = Arc::new(AtomicBool::new(false));
@@ -74,16 +108,18 @@ fn main() {
     for cid in 0..clients {
         let svc = Arc::clone(&svc);
         let stop = Arc::clone(&stop);
+        let formats = Arc::clone(&formats);
         handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(cid as u64 + 1);
             let mut lat = Summary::keeping_samples();
             let mut done = 0u64;
             let mut busy = 0u64;
+            let mut req_no = 0u64;
             while !stop.load(Ordering::Relaxed) {
-                let a: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-12, 12)).collect();
-                let b: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-12, 12)).collect();
+                let fmt = formats[(req_no % formats.len() as u64) as usize];
+                let (a, b) = gen_bits_batch(fmt, lanes, 12, cid as u64 * 1_000_000 + req_no);
+                req_no += 1;
                 let t0 = Instant::now();
-                match svc.submit(a, b) {
+                match svc.submit_request(DivRequest::new(fmt, rm, a, b)) {
                     Ok(t) => {
                         t.wait().expect("division failed");
                         lat.push(t0.elapsed().as_secs_f64());

@@ -4,19 +4,23 @@
 
 use std::time::{Duration, Instant};
 
-use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::fp::{Format, ALL_FORMATS, F32};
+use tsdiv::harness::gen_bits_batch;
 use tsdiv::runtime::artifacts_available;
 use tsdiv::util::json::Json;
 use tsdiv::util::rng::Rng;
 use tsdiv::util::table::{sig, Align, Table};
 
-/// Closed-loop load: `clients` threads each keep one request in flight.
-fn run_load(
+/// Closed-loop load: `clients` threads each keep one request in flight,
+/// cycling through `formats` (one entry = homogeneous traffic).
+fn run_load_formats(
     backend: BackendChoice,
     workers: usize,
     max_batch: usize,
     clients: usize,
     lanes: usize,
+    formats: &'static [Format],
     duration: Duration,
 ) -> (f64, f64, f64, f64) {
     let svc = std::sync::Arc::new(
@@ -37,12 +41,18 @@ fn run_load(
         let svc = std::sync::Arc::clone(&svc);
         let stop = std::sync::Arc::clone(&stop);
         handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(cid as u64 + 100);
             let mut lanes_done = 0u64;
+            let mut req_no = 0u64;
             while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                let a: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-8, 8)).collect();
-                let b: Vec<f32> = (0..lanes).map(|_| rng.f32_log_uniform(-8, 8)).collect();
-                match svc.submit(a, b) {
+                let fmt = formats[(req_no % formats.len() as u64) as usize];
+                let (a, b) = gen_bits_batch(fmt, lanes, 8, cid as u64 * 1000 + req_no);
+                req_no += 1;
+                match svc.submit_request(DivRequest::new(
+                    fmt,
+                    tsdiv::fp::Rounding::NearestEven,
+                    a,
+                    b,
+                )) {
                     Ok(t) => {
                         t.wait().expect("division");
                         lanes_done += lanes as u64;
@@ -71,6 +81,19 @@ fn run_load(
         Err(_) => {}
     }
     out
+}
+
+/// f32-only closed-loop load (the original shape of this bench).
+fn run_load(
+    backend: BackendChoice,
+    workers: usize,
+    max_batch: usize,
+    clients: usize,
+    lanes: usize,
+    duration: Duration,
+) -> (f64, f64, f64, f64) {
+    static F32_ONLY: [Format; 1] = [F32];
+    run_load_formats(backend, workers, max_batch, clients, lanes, &F32_ONLY, duration)
 }
 
 fn main() {
@@ -174,6 +197,47 @@ fn main() {
     let speedup = pair[0].1 / pair[1].1;
     println!("batched/scalar service throughput: {speedup:.2}x\n");
 
+    // Multi-format traffic through the typed request API: homogeneous
+    // loads per format, then the interleaved mix (which the batcher must
+    // keep coalescing by (Format, Rounding) key).
+    let mut t = Table::new(
+        "typed requests: throughput by format (2 workers, 8 clients × 256 lanes)",
+        &["traffic", "div/s", "p50 ms", "p99 ms", "lanes/batch"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    let native = BackendChoice::Native {
+        order: 5,
+        ilm_iterations: None,
+    };
+    let mut mixed_thr = 0.0;
+    static SINGLE: [[Format; 1]; 4] = [
+        [tsdiv::fp::F16],
+        [tsdiv::fp::BF16],
+        [tsdiv::fp::F32],
+        [tsdiv::fp::F64],
+    ];
+    static MIXED: [Format; 4] = ALL_FORMATS;
+    for (label, formats) in [
+        ("f16", &SINGLE[0][..]),
+        ("bf16", &SINGLE[1][..]),
+        ("f32", &SINGLE[2][..]),
+        ("f64", &SINGLE[3][..]),
+        ("mixed (all four)", &MIXED[..]),
+    ] {
+        let (thr, p50, p99, lpb) = run_load_formats(native, 2, 4096, 8, 256, formats, dur);
+        if label.starts_with("mixed") {
+            mixed_thr = thr;
+        }
+        t.row(&[
+            label.to_string(),
+            sig(thr, 4),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+            format!("{lpb:.1}"),
+        ]);
+    }
+    t.print();
+
     // Record the comparison for the bench trajectory.
     let mut j = Json::obj();
     j.set("bench", "coordinator_serve".into());
@@ -183,6 +247,7 @@ fn main() {
     j.set("batched_div_per_s", pair[0].1.into());
     j.set("scalar_div_per_s", pair[1].1.into());
     j.set("batched_over_scalar", speedup.into());
+    j.set("mixed_format_div_per_s", mixed_thr.into());
     tsdiv::harness::write_bench_json("coordinator_serve", &j);
 
     // Coordinator overhead: service vs bare loop over IDENTICAL
@@ -219,13 +284,12 @@ fn main() {
         .expect("service");
         let mut rng = Rng::new(1);
         // Pre-generate 64 requests of 1024 lanes; clone per submission
-        // (a 4 KiB memcpy, ≪ the 65 µs of compute it buys).
-        let reqs: Vec<(Vec<f32>, Vec<f32>)> = (0..64)
+        // (an 8 KiB memcpy, ≪ the 65 µs of compute it buys).
+        let reqs: Vec<DivRequest> = (0..64)
             .map(|_| {
-                (
-                    (0..1024).map(|_| rng.f32_log_uniform(-8, 8)).collect(),
-                    (0..1024).map(|_| rng.f32_log_uniform(-8, 8)).collect(),
-                )
+                let a: Vec<f32> = (0..1024).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+                let b: Vec<f32> = (0..1024).map(|_| rng.f32_log_uniform(-8, 8)).collect();
+                DivRequest::from_f32(&a, &b)
             })
             .collect();
         let t0 = Instant::now();
@@ -236,7 +300,7 @@ fn main() {
             let tickets: Vec<_> = reqs
                 .iter()
                 .take(4)
-                .map(|(a, b)| svc.submit(a.clone(), b.clone()).expect("submit"))
+                .map(|req| svc.submit_request(req.clone()).expect("submit"))
                 .collect();
             for t in tickets {
                 t.wait().expect("divide");

@@ -124,9 +124,23 @@ fn main() {
     let rep = gen_repeated_divisor_batch(4096, 16, 5);
     let (rep_a, rep_b) = rep.bits_f32();
     runs.push((
-        "taylor exact, repeated divisors",
+        "taylor exact, repeated divisors (16 distinct)",
         rep_a,
         rep_b,
+        Box::new(TaylorDivider::paper_exact),
+    ));
+    // Interleaved (not contiguous) repeats: only the widened N-way
+    // reciprocal cache can hit here — a one-entry cache thrashes.
+    let few = gen_repeated_divisor_batch(4096, 6, 7);
+    let (few_a0, few_b0) = few.bits_f32();
+    let stride = 4096 / 6;
+    let interleave = |v: &[u64]| -> Vec<u64> {
+        (0..v.len()).map(|i| v[(i * stride + i / 6) % v.len()]).collect()
+    };
+    runs.push((
+        "taylor exact, interleaved divisors (6 distinct)",
+        interleave(&few_a0),
+        interleave(&few_b0),
         Box::new(TaylorDivider::paper_exact),
     ));
     for (label, aa, bb, make) in &runs {
@@ -170,10 +184,38 @@ fn main() {
     }
     t.print();
 
+    // The same datapath across every format the service offers — the
+    // format-parametric claim behind the typed DivRequest API: one
+    // monomorphized batch loop serves f16/bf16/f32/f64.
+    println!();
+    let mut t = Table::new(
+        "div_bits_batch by format (4096 lanes, taylor exact)",
+        &["format", "batch Mdiv/s"],
+    )
+    .aligns(&[Align::Left, Align::Right]);
+    let mut fmt_rows: Vec<(String, f64)> = Vec::new();
+    for fmt in tsdiv::fp::ALL_FORMATS {
+        let (fa, fb) = tsdiv::harness::gen_bits_batch(fmt, 4096, 8, 21);
+        let mut d = TaylorDivider::paper_exact();
+        let mut fout = vec![0u64; fa.len()];
+        let m = timed_section(&format!("{}: div_bits_batch × 4096", fmt.name()), || {
+            d.div_bits_batch(&fa, &fb, fmt, Rounding::NearestEven, &mut fout);
+            tsdiv::util::black_box(fout[0]);
+        });
+        fmt_rows.push((fmt.name().to_string(), m.items_per_sec(4096)));
+    }
+    for (name, thr) in &fmt_rows {
+        t.row(&[name.clone(), format!("{:.2}", thr / 1e6)]);
+    }
+    t.print();
+
     // Record the comparison for the bench trajectory.
     let mut j = Json::obj();
     j.set("bench", "divider_throughput".into());
     j.set("lanes", lanes.into());
+    for (name, thr) in &fmt_rows {
+        j.set(&format!("batch_div_per_s_{name}"), (*thr).into());
+    }
     let mut arr = Vec::new();
     for (label, s, bthr) in &rows {
         let mut o = Json::obj();

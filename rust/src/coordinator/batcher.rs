@@ -1,28 +1,47 @@
-//! Pure batch-assembly logic: coalesce many small requests into one
-//! backend batch and split the result back, independent of threading.
+//! Pure batch-assembly logic: coalesce many small requests into
+//! homogeneous backend batches and split results back, independent of
+//! threading.
+//!
+//! Heterogeneous traffic (any mix of f16/bf16/f32/f64 at any rounding
+//! mode) is bucketed by [`BatchKey`] so every emitted [`Batch`] carries
+//! one `(Format, Rounding)` pair and can run through a single
+//! `div_bits_batch` call. Each bucket accumulates to the lane budget
+//! independently; lane order within a request is always preserved.
 
-/// A request's lanes plus its index for response routing.
+use super::request::BatchKey;
+
+/// A request's lanes plus its index for response routing. Operands are
+/// raw bit patterns of the owning batch's format.
 #[derive(Clone, Debug)]
 pub struct BatchItem {
     pub request_id: u64,
-    pub a: Vec<f32>,
-    pub b: Vec<f32>,
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
 }
 
-/// A coalesced batch ready for a backend.
-#[derive(Clone, Debug, Default)]
+/// A coalesced, format-homogeneous batch ready for a backend.
+#[derive(Clone, Debug)]
 pub struct Batch {
+    pub key: BatchKey,
     pub items: Vec<BatchItem>,
     pub lanes: usize,
 }
 
 impl Batch {
+    pub fn new(key: BatchKey) -> Self {
+        Self {
+            key,
+            items: Vec::new(),
+            lanes: 0,
+        }
+    }
+
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
     /// Flatten all items into contiguous operand vectors.
-    pub fn flatten(&self) -> (Vec<f32>, Vec<f32>) {
+    pub fn flatten(&self) -> (Vec<u64>, Vec<u64>) {
         let mut a = Vec::with_capacity(self.lanes);
         let mut b = Vec::with_capacity(self.lanes);
         for it in &self.items {
@@ -33,8 +52,8 @@ impl Batch {
     }
 
     /// Split a flat result back into per-request chunks
-    /// `(request_id, Vec<f32>)`, in item order.
-    pub fn split(&self, flat: &[f32]) -> Vec<(u64, Vec<f32>)> {
+    /// `(request_id, Vec<u64>)`, in item order.
+    pub fn split(&self, flat: &[u64]) -> Vec<(u64, Vec<u64>)> {
         assert_eq!(flat.len(), self.lanes, "result length mismatch");
         let mut out = Vec::with_capacity(self.items.len());
         let mut off = 0;
@@ -46,11 +65,14 @@ impl Batch {
     }
 }
 
-/// Accumulates requests until a lane budget is met.
+/// Accumulates requests into per-`BatchKey` buckets until a lane budget
+/// is met. The key population is tiny (4 formats × 4 rounding modes),
+/// so buckets live in a linearly-scanned `Vec`.
 #[derive(Debug)]
 pub struct BatchAssembler {
     max_lanes: usize,
-    current: Batch,
+    buckets: Vec<Batch>,
+    pending: usize,
 }
 
 impl BatchAssembler {
@@ -58,90 +80,127 @@ impl BatchAssembler {
         assert!(max_lanes > 0);
         Self {
             max_lanes,
-            current: Batch::default(),
+            buckets: Vec::new(),
+            pending: 0,
         }
     }
 
-    /// Add a request. Returns a completed batch when the lane budget is
-    /// reached (the new item may itself trigger the flush).
-    pub fn push(&mut self, item: BatchItem) -> Option<Batch> {
+    /// Current lane budget per emitted batch.
+    pub fn max_lanes(&self) -> usize {
+        self.max_lanes
+    }
+
+    /// Retune the lane budget (adaptive batching). Takes effect for the
+    /// next `push`; an already-accumulated bucket above the new budget
+    /// flushes on its next push.
+    pub fn set_max_lanes(&mut self, max_lanes: usize) {
+        self.max_lanes = max_lanes.max(1);
+    }
+
+    fn bucket_mut(&mut self, key: BatchKey) -> &mut Batch {
+        // No Entry API over a Vec: find the index first to appease the
+        // borrow checker.
+        if let Some(i) = self.buckets.iter().position(|b| b.key == key) {
+            return &mut self.buckets[i];
+        }
+        self.buckets.push(Batch::new(key));
+        self.buckets.last_mut().unwrap()
+    }
+
+    /// Add a request to its key's bucket. Returns that bucket as a
+    /// completed batch when the lane budget is reached (the new item may
+    /// itself trigger the flush). Other keys' buckets are unaffected.
+    pub fn push(&mut self, key: BatchKey, item: BatchItem) -> Option<Batch> {
         debug_assert_eq!(item.a.len(), item.b.len());
-        // An oversize single request: flush what we have, emit it alone.
-        if item.a.len() >= self.max_lanes {
-            let pending = self.take();
-            let lanes = item.a.len();
-            let solo = Batch {
-                items: vec![item],
-                lanes,
-            };
-            return Some(match pending {
-                Some(mut p) => {
-                    // Merge: pending first, oversize item after (order kept).
-                    p.items.extend(solo.items);
-                    p.lanes += solo.lanes;
-                    p
-                }
-                None => solo,
-            });
-        }
-        if self.current.lanes + item.a.len() > self.max_lanes {
-            let done = self.take();
-            self.current.lanes = item.a.len();
-            self.current.items.push(item);
-            return done;
-        }
-        self.current.lanes += item.a.len();
-        self.current.items.push(item);
-        if self.current.lanes == self.max_lanes {
-            return self.take();
-        }
-        None
-    }
-
-    /// Flush whatever has accumulated (deadline expiry).
-    pub fn take(&mut self) -> Option<Batch> {
-        if self.current.is_empty() {
-            None
+        let max_lanes = self.max_lanes;
+        let lanes = item.a.len();
+        let bucket = self.bucket_mut(key);
+        let flushed = if lanes >= max_lanes {
+            // An oversize single request: emit the bucket with the
+            // oversize item appended (order kept) rather than splitting
+            // the request.
+            bucket.lanes += lanes;
+            bucket.items.push(item);
+            Some(std::mem::replace(bucket, Batch::new(key)))
+        } else if bucket.lanes + lanes > max_lanes {
+            // Would overflow: ship what accumulated, start fresh.
+            let done = std::mem::replace(bucket, Batch::new(key));
+            bucket.lanes = lanes;
+            bucket.items.push(item);
+            Some(done)
         } else {
-            Some(std::mem::take(&mut self.current))
+            bucket.lanes += lanes;
+            bucket.items.push(item);
+            if bucket.lanes == max_lanes {
+                Some(std::mem::replace(bucket, Batch::new(key)))
+            } else {
+                None
+            }
+        };
+        // Uniform accounting: the new item's lanes enter the pending
+        // pool, whatever just flushed leaves it.
+        self.pending += lanes;
+        if let Some(done) = &flushed {
+            self.pending -= done.lanes;
         }
+        flushed
     }
 
+    /// Flush every non-empty bucket (deadline expiry / shutdown).
+    pub fn take_all(&mut self) -> Vec<Batch> {
+        self.pending = 0;
+        self.buckets
+            .iter_mut()
+            .filter(|b| !b.is_empty())
+            .map(|b| {
+                let key = b.key;
+                std::mem::replace(b, Batch::new(key))
+            })
+            .collect()
+    }
+
+    /// Total lanes accumulated across all buckets.
     pub fn pending_lanes(&self) -> usize {
-        self.current.lanes
+        self.pending
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::{Rounding, F16, F32, F64};
+
+    fn key32() -> BatchKey {
+        BatchKey::new(F32, Rounding::NearestEven)
+    }
 
     fn item(id: u64, n: usize) -> BatchItem {
         BatchItem {
             request_id: id,
-            a: vec![id as f32; n],
-            b: vec![1.0; n],
+            a: vec![id; n],
+            b: vec![1; n],
         }
     }
 
     #[test]
     fn accumulates_until_budget() {
         let mut asm = BatchAssembler::new(10);
-        assert!(asm.push(item(1, 4)).is_none());
-        assert!(asm.push(item(2, 4)).is_none());
+        assert!(asm.push(key32(), item(1, 4)).is_none());
+        assert!(asm.push(key32(), item(2, 4)).is_none());
         assert_eq!(asm.pending_lanes(), 8);
         // 8 + 4 > 10 → flush the first two, start fresh with the third.
-        let b = asm.push(item(3, 4)).unwrap();
+        let b = asm.push(key32(), item(3, 4)).unwrap();
         assert_eq!(b.lanes, 8);
         assert_eq!(b.items.len(), 2);
+        assert_eq!(b.key, key32());
         assert_eq!(asm.pending_lanes(), 4);
     }
 
     #[test]
     fn exact_fill_flushes() {
         let mut asm = BatchAssembler::new(8);
-        assert!(asm.push(item(1, 4)).is_none());
-        let b = asm.push(item(2, 4)).unwrap();
+        assert!(asm.push(key32(), item(1, 4)).is_none());
+        let b = asm.push(key32(), item(2, 4)).unwrap();
         assert_eq!(b.lanes, 8);
         assert_eq!(asm.pending_lanes(), 0);
     }
@@ -149,8 +208,8 @@ mod tests {
     #[test]
     fn oversize_request_emitted_with_pending() {
         let mut asm = BatchAssembler::new(8);
-        assert!(asm.push(item(1, 3)).is_none());
-        let b = asm.push(item(2, 20)).unwrap();
+        assert!(asm.push(key32(), item(1, 3)).is_none());
+        let b = asm.push(key32(), item(2, 20)).unwrap();
         assert_eq!(b.lanes, 23);
         assert_eq!(b.items.len(), 2);
         assert_eq!(b.items[0].request_id, 1, "order preserved");
@@ -158,18 +217,72 @@ mod tests {
     }
 
     #[test]
-    fn take_drains() {
+    fn keys_accumulate_independently() {
+        let k64 = BatchKey::new(F64, Rounding::NearestEven);
+        let k32z = BatchKey::new(F32, Rounding::TowardZero);
+        let mut asm = BatchAssembler::new(8);
+        assert!(asm.push(key32(), item(1, 5)).is_none());
+        assert!(asm.push(k64, item(2, 5)).is_none());
+        assert!(asm.push(k32z, item(3, 5)).is_none());
+        assert_eq!(asm.pending_lanes(), 15);
+        // Filling the f64 bucket flushes ONLY the f64 bucket.
+        let b = asm.push(k64, item(4, 3)).unwrap();
+        assert_eq!(b.key, k64);
+        assert_eq!(b.lanes, 8);
+        assert_eq!(
+            b.items.iter().map(|i| i.request_id).collect::<Vec<_>>(),
+            vec![2, 4]
+        );
+        assert_eq!(asm.pending_lanes(), 10);
+        // The rest drains by key.
+        let rest = asm.take_all();
+        assert_eq!(rest.len(), 2);
+        assert!(rest.iter().any(|b| b.key == key32() && b.lanes == 5));
+        assert!(rest.iter().any(|b| b.key == k32z && b.lanes == 5));
+        assert_eq!(asm.pending_lanes(), 0);
+    }
+
+    #[test]
+    fn same_format_different_rounding_never_coalesce() {
+        let up = BatchKey::new(F32, Rounding::TowardPositive);
+        let down = BatchKey::new(F32, Rounding::TowardNegative);
         let mut asm = BatchAssembler::new(100);
-        assert!(asm.take().is_none());
-        asm.push(item(1, 5));
-        let b = asm.take().unwrap();
-        assert_eq!(b.lanes, 5);
-        assert!(asm.take().is_none());
+        asm.push(up, item(1, 4));
+        asm.push(down, item(2, 4));
+        let batches = asm.take_all();
+        assert_eq!(batches.len(), 2);
+        for b in &batches {
+            assert_eq!(b.items.len(), 1, "rounding modes must not mix");
+        }
+    }
+
+    #[test]
+    fn take_all_drains() {
+        let mut asm = BatchAssembler::new(100);
+        assert!(asm.take_all().is_empty());
+        asm.push(key32(), item(1, 5));
+        let bs = asm.take_all();
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].lanes, 5);
+        assert!(asm.take_all().is_empty());
+    }
+
+    #[test]
+    fn budget_retune_applies_to_next_push() {
+        let mut asm = BatchAssembler::new(100);
+        asm.push(key32(), item(1, 30));
+        asm.set_max_lanes(16);
+        // 30 already-pending lanes exceed the shrunk budget: the next
+        // push flushes them and starts fresh.
+        let b = asm.push(key32(), item(2, 4)).unwrap();
+        assert_eq!(b.lanes, 30);
+        assert_eq!(asm.pending_lanes(), 4);
+        assert_eq!(asm.max_lanes(), 16);
     }
 
     #[test]
     fn flatten_split_roundtrip() {
-        let mut batch = Batch::default();
+        let mut batch = Batch::new(BatchKey::new(F16, Rounding::NearestEven));
         for (id, n) in [(10u64, 3usize), (11, 1), (12, 5)] {
             batch.items.push(item(id, n));
             batch.lanes += n;
@@ -180,17 +293,17 @@ mod tests {
         // Identity "result": split must route lanes back by request.
         let parts = batch.split(&a);
         assert_eq!(parts.len(), 3);
-        assert_eq!(parts[0], (10, vec![10.0; 3]));
-        assert_eq!(parts[1], (11, vec![11.0; 1]));
-        assert_eq!(parts[2], (12, vec![12.0; 5]));
+        assert_eq!(parts[0], (10, vec![10u64; 3]));
+        assert_eq!(parts[1], (11, vec![11u64; 1]));
+        assert_eq!(parts[2], (12, vec![12u64; 5]));
     }
 
     #[test]
     #[should_panic(expected = "result length mismatch")]
     fn split_length_mismatch_panics() {
-        let mut batch = Batch::default();
+        let mut batch = Batch::new(key32());
         batch.items.push(item(1, 2));
         batch.lanes = 2;
-        let _ = batch.split(&[1.0]);
+        let _ = batch.split(&[1]);
     }
 }

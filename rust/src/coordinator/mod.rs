@@ -4,37 +4,53 @@
 //! Architecture (vLLM-router-like, scaled to an arithmetic service):
 //!
 //! ```text
-//!  clients ──submit(Vec<f32>,Vec<f32>)──► bounded queue
-//!                                            │ (backpressure: Busy)
-//!                                       batcher thread
-//!                                            │ coalesce ≤ max_batch,
-//!                                            │ flush on max_wait
-//!                                       work queue ──► worker pool
-//!                                                        │ backend:
-//!                                                        │  Native (bit-exact
-//!                                                        │  Taylor/ILM datapath)
-//!                                                        │  or PJRT (AOT artifact)
-//!                                       per-request response channels
+//!  clients ──submit_request(DivRequest{fmt,rm,a,b})──► bounded queue
+//!     │ typed constructors:                                │ (backpressure: Busy)
+//!     │ from_f32/from_f64/                            batcher thread
+//!     │ from_f16_bits/from_bf16_bits                       │ bucket by (Format, Rounding),
+//!     │ (legacy submit(Vec<f32>,..)                        │ coalesce ≤ max_batch per key,
+//!     │  = deprecated wrapper)                             │ adaptive flush: ship on full
+//!     │                                                    │ bucket / idle worker / max_wait
+//!     │                                     work queue ──► worker pool
+//!     │                                       homogeneous  │ Backend::divide(bits, fmt, rm):
+//!     │                                       batches      │  Native (bit-exact Taylor/ILM
+//!     │                                                    │  `div_bits_batch`, lanes grouped
+//!     │                                                    │  by divisor), Gold (longdiv),
+//!     │                                                    │  or PJRT (AOT artifact, f32)
+//!     └──◄── DivTicket::wait() → DivResponse{fmt,rm,bits} ─┘
 //! ```
 //!
-//! * [`batcher`] — pure batch-assembly logic (coalesce/split), testable
-//!   without threads;
-//! * [`worker`] — the backend trait and its Native/PJRT implementations;
+//! Heterogeneous traffic — any interleaving of binary16/bfloat16/
+//! binary32/binary64 requests under any rounding mode — rides the same
+//! `div_bits_batch` lanes: the batcher never mixes keys inside a batch,
+//! so each backend call is monomorphic over one `(Format, Rounding)`.
+//!
+//! * [`request`] — the typed request/response surface ([`DivRequest`],
+//!   [`DivResponse`], [`BatchKey`]);
+//! * [`batcher`] — pure batch-assembly logic (per-key coalesce/split),
+//!   testable without threads;
+//! * [`worker`] — the backend trait and its Native/Gold/PJRT
+//!   implementations;
 //! * [`service`] — the running system: threads, channels, metrics,
 //!   shutdown, fault containment (a panicking backend fails the batch,
 //!   not the service).
 
 pub mod batcher;
+pub mod request;
 pub mod service;
 pub mod worker;
 
-pub use batcher::{Batch, BatchAssembler};
-pub use service::{DivisionService, MetricsSnapshot, ServiceConfig, SubmitError, Ticket};
-pub use worker::{Backend, BackendChoice, NativeBackend, ScalarNativeBackend};
+pub use batcher::{Batch, BatchAssembler, BatchItem};
+pub use request::{BatchKey, DivRequest, DivResponse};
+pub use service::{
+    DivTicket, DivisionService, MetricsSnapshot, ServiceConfig, SubmitError, Ticket,
+};
+pub use worker::{Backend, BackendChoice, GoldBackend, NativeBackend, ScalarNativeBackend};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::{Rounding, F64};
     use std::time::Duration;
 
     #[test]
@@ -54,7 +70,11 @@ mod tests {
         .unwrap();
         let a: Vec<f32> = (1..=40).map(|i| i as f32).collect();
         let b: Vec<f32> = (1..=40).map(|i| (i % 7 + 1) as f32).collect();
-        let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+        let out = svc
+            .divide_request_blocking(DivRequest::from_f32(&a, &b))
+            .unwrap()
+            .to_f32()
+            .unwrap();
         for i in 0..a.len() {
             let want = a[i] / b[i];
             assert!(
@@ -84,13 +104,14 @@ mod tests {
             },
         )
         .unwrap();
-        let tickets: Vec<Ticket> = (0..16)
+        let tickets: Vec<DivTicket> = (0..16)
             .map(|i| {
-                svc.submit(vec![i as f32 + 1.0; 8], vec![2.0; 8]).unwrap()
+                svc.submit_request(DivRequest::from_f32(&[i as f32 + 1.0; 8], &[2.0; 8]))
+                    .unwrap()
             })
             .collect();
         for (i, t) in tickets.into_iter().enumerate() {
-            let out = t.wait().unwrap();
+            let out = t.wait().unwrap().to_f32().unwrap();
             assert_eq!(out.len(), 8);
             assert_eq!(out[0], (i as f32 + 1.0) / 2.0);
         }
@@ -98,6 +119,30 @@ mod tests {
         assert_eq!(m.requests, 16);
         // Coalescing must have produced fewer backend batches than requests.
         assert!(m.batches < 16, "batches = {}", m.batches);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rounding_modes_thread_through_the_service() {
+        let svc = DivisionService::start(
+            ServiceConfig::default(),
+            BackendChoice::Gold,
+        )
+        .unwrap();
+        // 1/3 in f64: toward-positive and toward-negative must bracket,
+        // differing in the last bit.
+        let up = svc
+            .divide_request_blocking(
+                DivRequest::from_f64(&[1.0], &[3.0]).with_rounding(Rounding::TowardPositive),
+            )
+            .unwrap();
+        let down = svc
+            .divide_request_blocking(
+                DivRequest::from_f64(&[1.0], &[3.0]).with_rounding(Rounding::TowardNegative),
+            )
+            .unwrap();
+        assert_eq!(up.fmt, F64);
+        assert_eq!(up.bits[0], down.bits[0] + 1, "directed modes must bracket 1/3");
         svc.shutdown();
     }
 }

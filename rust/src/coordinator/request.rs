@@ -1,0 +1,228 @@
+//! Typed requests and responses for the division service.
+//!
+//! The datapath is format-parametric by construction (every bit pattern
+//! travels in the low bits of a `u64`, see [`crate::fp::format`]), so the
+//! service speaks the same language: a [`DivRequest`] carries raw
+//! bit-pattern lanes plus the [`Format`] that interprets them and the
+//! [`Rounding`] attribute to apply. Convenience constructors cover the
+//! four interchange formats; [`DivResponse`] converts back.
+
+use crate::fp::{Format, Rounding, BF16, F16, F32, F64};
+
+/// The batching key: requests coalesce only with requests of the same
+/// format and rounding mode, so every backend batch is homogeneous.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchKey {
+    pub fmt: Format,
+    pub rm: Rounding,
+}
+
+impl BatchKey {
+    pub fn new(fmt: Format, rm: Rounding) -> Self {
+        Self { fmt, rm }
+    }
+}
+
+impl std::fmt::Display for BatchKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.fmt.name(), self.rm.name())
+    }
+}
+
+/// One division request: `out[i] = a[i] / b[i]` over `fmt` bit patterns
+/// under rounding mode `rm`.
+#[derive(Clone, Debug)]
+pub struct DivRequest {
+    pub fmt: Format,
+    pub rm: Rounding,
+    /// Dividend bit patterns (low `fmt.width()` bits of each `u64`).
+    pub a: Vec<u64>,
+    /// Divisor bit patterns, same length as `a`.
+    pub b: Vec<u64>,
+}
+
+impl DivRequest {
+    /// Raw constructor over bit patterns of an arbitrary format.
+    pub fn new(fmt: Format, rm: Rounding, a: Vec<u64>, b: Vec<u64>) -> Self {
+        Self { fmt, rm, a, b }
+    }
+
+    /// binary32 lanes at round-to-nearest-even.
+    pub fn from_f32(a: &[f32], b: &[f32]) -> Self {
+        Self {
+            fmt: F32,
+            rm: Rounding::NearestEven,
+            a: a.iter().map(|&x| x.to_bits() as u64).collect(),
+            b: b.iter().map(|&x| x.to_bits() as u64).collect(),
+        }
+    }
+
+    /// binary64 lanes at round-to-nearest-even.
+    pub fn from_f64(a: &[f64], b: &[f64]) -> Self {
+        Self {
+            fmt: F64,
+            rm: Rounding::NearestEven,
+            a: a.iter().map(|&x| x.to_bits()).collect(),
+            b: b.iter().map(|&x| x.to_bits()).collect(),
+        }
+    }
+
+    /// binary16 lanes given as raw `u16` bit patterns.
+    pub fn from_f16_bits(a: &[u16], b: &[u16]) -> Self {
+        Self {
+            fmt: F16,
+            rm: Rounding::NearestEven,
+            a: a.iter().map(|&x| x as u64).collect(),
+            b: b.iter().map(|&x| x as u64).collect(),
+        }
+    }
+
+    /// bfloat16 lanes given as raw `u16` bit patterns.
+    pub fn from_bf16_bits(a: &[u16], b: &[u16]) -> Self {
+        Self {
+            fmt: BF16,
+            rm: Rounding::NearestEven,
+            a: a.iter().map(|&x| x as u64).collect(),
+            b: b.iter().map(|&x| x as u64).collect(),
+        }
+    }
+
+    /// Override the rounding mode (builder style).
+    pub fn with_rounding(mut self, rm: Rounding) -> Self {
+        self.rm = rm;
+        self
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn key(&self) -> BatchKey {
+        BatchKey::new(self.fmt, self.rm)
+    }
+
+    /// Structural validation: matched non-empty lanes whose bit patterns
+    /// fit the format's storage width. Returns a human-readable defect.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.a.len() != self.b.len() {
+            return Err(format!(
+                "operand length mismatch: {} vs {}",
+                self.a.len(),
+                self.b.len()
+            ));
+        }
+        if self.a.is_empty() {
+            return Err("empty request".into());
+        }
+        let mask = self.fmt.width_mask();
+        if mask != u64::MAX {
+            let stray = |bits: &[u64]| bits.iter().any(|&x| x & !mask != 0);
+            if stray(&self.a) || stray(&self.b) {
+                return Err(format!(
+                    "operand bits exceed {} storage width",
+                    self.fmt.name()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Quotient lanes for one request, in the request's format.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DivResponse {
+    pub fmt: Format,
+    pub rm: Rounding,
+    /// Quotient bit patterns, one per request lane, in lane order.
+    pub bits: Vec<u64>,
+}
+
+impl DivResponse {
+    pub fn lanes(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Decode as f32 values (`None` unless the request was binary32).
+    pub fn to_f32(&self) -> Option<Vec<f32>> {
+        (self.fmt == F32).then(|| self.bits.iter().map(|&q| f32::from_bits(q as u32)).collect())
+    }
+
+    /// Decode as f64 values (`None` unless the request was binary64).
+    pub fn to_f64(&self) -> Option<Vec<f64>> {
+        (self.fmt == F64).then(|| self.bits.iter().map(f64::from_bits).collect())
+    }
+
+    /// Raw 16-bit patterns (`None` unless the request was f16/bf16).
+    pub fn to_u16_bits(&self) -> Option<Vec<u16>> {
+        (self.fmt == F16 || self.fmt == BF16)
+            .then(|| self.bits.iter().map(|&q| q as u16).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_and_key() {
+        let r = DivRequest::from_f32(&[6.0, -1.5], &[2.0, 3.0]);
+        assert_eq!(r.fmt, F32);
+        assert_eq!(r.rm, Rounding::NearestEven);
+        assert_eq!(r.lanes(), 2);
+        assert_eq!(r.key(), BatchKey::new(F32, Rounding::NearestEven));
+        assert!(r.validate().is_ok());
+        let resp = DivResponse {
+            fmt: F32,
+            rm: r.rm,
+            bits: r.a.clone(),
+        };
+        assert_eq!(resp.to_f32().unwrap(), vec![6.0, -1.5]);
+        assert!(resp.to_f64().is_none());
+        assert!(resp.to_u16_bits().is_none());
+    }
+
+    #[test]
+    fn half_formats_carry_u16_patterns() {
+        // 1.0 in f16 = 0x3C00; in bf16 = 0x3F80.
+        let r = DivRequest::from_f16_bits(&[0x3C00], &[0x3C00]);
+        assert_eq!(r.fmt, F16);
+        assert_eq!(r.a, vec![0x3C00]);
+        let r = DivRequest::from_bf16_bits(&[0x3F80], &[0x3F80]).with_rounding(Rounding::TowardZero);
+        assert_eq!(r.fmt, BF16);
+        assert_eq!(r.rm, Rounding::TowardZero);
+        let resp = DivResponse {
+            fmt: BF16,
+            rm: r.rm,
+            bits: vec![0x3F80],
+        };
+        assert_eq!(resp.to_u16_bits().unwrap(), vec![0x3F80]);
+    }
+
+    #[test]
+    fn validate_rejects_defects() {
+        assert!(DivRequest::new(F32, Rounding::NearestEven, vec![0], vec![])
+            .validate()
+            .is_err());
+        assert!(DivRequest::new(F32, Rounding::NearestEven, vec![], vec![])
+            .validate()
+            .is_err());
+        // A pattern wider than f16's 16 storage bits.
+        assert!(
+            DivRequest::new(F16, Rounding::NearestEven, vec![0x1_0000], vec![0x3C00])
+                .validate()
+                .is_err()
+        );
+        // f64 uses the whole carrier; any u64 is in range.
+        assert!(
+            DivRequest::new(F64, Rounding::NearestEven, vec![u64::MAX], vec![1])
+                .validate()
+                .is_ok()
+        );
+    }
+
+    #[test]
+    fn key_display_names() {
+        let k = BatchKey::new(F16, Rounding::TowardNegative);
+        assert_eq!(k.to_string(), "f16/down");
+    }
+}

@@ -1,5 +1,6 @@
 //! The running division service: batcher thread + worker pool + metrics.
 
+use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
@@ -8,7 +9,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batch, BatchAssembler, BatchItem};
+use super::request::{BatchKey, DivRequest, DivResponse};
 use super::worker::BackendChoice;
+use crate::bail;
+use crate::fp::{Format, Rounding};
 use crate::util::error::Result;
 use crate::util::stats::Summary;
 
@@ -36,6 +40,23 @@ impl Default for ServiceConfig {
     }
 }
 
+impl ServiceConfig {
+    /// Reject configurations that could only fail later, deep inside
+    /// thread spawn or the assembler, with a useless panic.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("service config: workers must be > 0");
+        }
+        if self.max_batch == 0 {
+            bail!("service config: max_batch must be > 0 lanes");
+        }
+        if self.queue_capacity == 0 {
+            bail!("service config: queue_capacity must be > 0");
+        }
+        Ok(())
+    }
+}
+
 /// Submission failure modes.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
@@ -43,7 +64,8 @@ pub enum SubmitError {
     Busy,
     /// Service is shutting down.
     Closed,
-    /// Operand vectors disagree in length or are empty.
+    /// Operand vectors disagree in length, are empty, or carry bits
+    /// outside the format's storage width.
     BadRequest(String),
 }
 
@@ -58,36 +80,87 @@ impl std::fmt::Display for SubmitError {
 }
 impl std::error::Error for SubmitError {}
 
-/// Response handle for one submitted request.
-pub struct Ticket {
-    rx: Receiver<Result<Vec<f32>, String>>,
+/// Response handle for one submitted [`DivRequest`].
+pub struct DivTicket {
+    rx: Receiver<Result<Vec<u64>, String>>,
+    fmt: Format,
+    rm: Rounding,
+    request_id: u64,
     submitted: Instant,
     latency_sink: Arc<Mutex<Summary>>,
 }
 
-impl Ticket {
+impl DivTicket {
+    /// The id the service assigned this request (response routing).
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    pub fn format(&self) -> Format {
+        self.fmt
+    }
+
+    pub fn rounding(&self) -> Rounding {
+        self.rm
+    }
+
     /// Block until the quotient lanes arrive.
-    pub fn wait(self) -> Result<Vec<f32>, String> {
-        let out = self
+    pub fn wait(self) -> Result<DivResponse, String> {
+        let bits = self
             .rx
             .recv()
-            .map_err(|_| "worker dropped the response channel".to_string())?;
+            .map_err(|_| "worker dropped the response channel".to_string())??;
         let dt = self.submitted.elapsed().as_secs_f64();
         if let Ok(mut s) = self.latency_sink.lock() {
             s.push(dt);
         }
-        out
+        Ok(DivResponse {
+            fmt: self.fmt,
+            rm: self.rm,
+            bits,
+        })
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<DivResponse, String>> {
+        match self.rx.try_recv() {
+            Ok(Ok(bits)) => Some(Ok(DivResponse {
+                fmt: self.fmt,
+                rm: self.rm,
+                bits,
+            })),
+            Ok(Err(e)) => Some(Err(e)),
+            Err(_) => None,
+        }
+    }
+}
+
+/// Legacy f32 response handle (see [`DivisionService::submit`]).
+pub struct Ticket(DivTicket);
+
+impl Ticket {
+    /// Block until the quotient lanes arrive.
+    pub fn wait(self) -> Result<Vec<f32>, String> {
+        let resp = self.0.wait()?;
+        resp.to_f32()
+            .ok_or_else(|| "response was not binary32".to_string())
     }
 
     /// Non-blocking poll.
     pub fn try_wait(&self) -> Option<Result<Vec<f32>, String>> {
-        self.rx.try_recv().ok()
+        self.0.try_wait().map(|r| {
+            r.and_then(|resp| {
+                resp.to_f32()
+                    .ok_or_else(|| "response was not binary32".to_string())
+            })
+        })
     }
 }
 
 struct Submission {
+    key: BatchKey,
     item: BatchItem,
-    responder: Sender<Result<Vec<f32>, String>>,
+    responder: Sender<Result<Vec<u64>, String>>,
 }
 
 /// Counters shared across threads.
@@ -99,6 +172,7 @@ struct Metrics {
     failures: AtomicU64,
     rejected: AtomicU64,
     queue_depth: AtomicUsize,
+    idle_workers: AtomicUsize,
 }
 
 /// A point-in-time metrics snapshot.
@@ -110,6 +184,8 @@ pub struct MetricsSnapshot {
     pub failures: u64,
     pub rejected: u64,
     pub queue_depth: usize,
+    /// Workers currently waiting for a batch (adaptive-flush signal).
+    pub workers_idle: usize,
     /// End-to-end latency stats over completed `wait()`s (seconds).
     pub latency_p50: f64,
     pub latency_p99: f64,
@@ -138,39 +214,56 @@ pub struct DivisionService {
     workers: Vec<JoinHandle<()>>,
 }
 
+type WorkItem = (Batch, Vec<Sender<Result<Vec<u64>, String>>>);
+
 impl DivisionService {
     /// Start the batcher thread and `cfg.workers` worker threads.
     pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> Result<Self> {
-        assert!(cfg.workers > 0 && cfg.max_batch > 0);
+        cfg.validate()?;
         let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
-        let (work_tx, work_rx) = mpsc::channel::<(Batch, Vec<Sender<Result<Vec<f32>, String>>>)>();
+        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
         let metrics = Arc::new(Metrics::default());
         let latency = Arc::new(Mutex::new(Summary::keeping_samples()));
 
-        // Batcher thread: coalesce submissions.
+        // Batcher thread: coalesce submissions into per-(Format,Rounding)
+        // batches, with an adaptive flush policy (§Perf):
+        //
+        // * a bucket reaching the lane budget ships immediately;
+        // * when the queue runs dry, pending work ships only if a worker
+        //   is idle to take it (otherwise flushing buys no latency — the
+        //   window stays open, bounded by max_wait, so deeper batches
+        //   form while every worker is busy);
+        // * the lane budget itself adapts to load: spare capacity (all
+        //   workers idle, shallow queue) quarters the budget so bursts
+        //   split across idle workers instead of serializing into one.
         let m = Arc::clone(&metrics);
         let max_wait = cfg.max_wait;
         let max_batch = cfg.max_batch;
+        let worker_count = cfg.workers;
         let batcher = std::thread::Builder::new()
             .name("tsdiv-batcher".into())
             .spawn(move || {
                 let mut asm = BatchAssembler::new(max_batch);
-                let mut responders: Vec<Sender<Result<Vec<f32>, String>>> = Vec::new();
-                // Adaptive batching (§Perf): coalesce everything already
-                // queued, but flush the moment the queue runs dry instead
-                // of waiting out max_wait — a closed-loop client set would
-                // otherwise stall the pipeline for max_wait per batch.
-                // max_wait still bounds accumulation under steady trickle.
-                let flush =
-                    |asm: &mut BatchAssembler,
-                     responders: &mut Vec<Sender<Result<Vec<f32>, String>>>| {
-                        if let Some(batch) = asm.take() {
-                            let rs = std::mem::take(responders);
-                            m.batches.fetch_add(1, Ordering::Relaxed);
-                            let _ = work_tx.send((batch, rs));
-                        }
-                    };
+                let mut responders: HashMap<u64, Sender<Result<Vec<u64>, String>>> =
+                    HashMap::new();
+                let dispatch = |batch: Batch,
+                                responders: &mut HashMap<u64, Sender<Result<Vec<u64>, String>>>| {
+                    let rs: Vec<_> = batch
+                        .items
+                        .iter()
+                        .filter_map(|it| responders.remove(&it.request_id))
+                        .collect();
+                    debug_assert_eq!(rs.len(), batch.items.len(), "responder lost");
+                    m.batches.fetch_add(1, Ordering::Relaxed);
+                    let _ = work_tx.send((batch, rs));
+                };
+                let flush = |asm: &mut BatchAssembler,
+                             responders: &mut HashMap<u64, Sender<Result<Vec<u64>, String>>>| {
+                    for batch in asm.take_all() {
+                        dispatch(batch, responders);
+                    }
+                };
                 'outer: loop {
                     // Block for the first submission of a batch window.
                     let sub = match rx.recv_timeout(Duration::from_millis(100)) {
@@ -178,14 +271,18 @@ impl DivisionService {
                         Err(RecvTimeoutError::Timeout) => continue,
                         Err(RecvTimeoutError::Disconnected) => break,
                     };
+                    // Retune the lane budget from load at window start.
+                    let spare_capacity = m.idle_workers.load(Ordering::Relaxed) >= worker_count
+                        && m.queue_depth.load(Ordering::Relaxed) <= worker_count;
+                    asm.set_max_lanes(if spare_capacity {
+                        (max_batch / 4).max(1)
+                    } else {
+                        max_batch
+                    });
                     m.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                    responders.push(sub.responder);
-                    if let Some(batch) = asm.push(sub.item) {
-                        let (done_rs, keep) =
-                            split_responders(std::mem::take(&mut responders), batch.items.len());
-                        responders = keep;
-                        m.batches.fetch_add(1, Ordering::Relaxed);
-                        let _ = work_tx.send((batch, done_rs));
+                    responders.insert(sub.item.request_id, sub.responder);
+                    if let Some(batch) = asm.push(sub.key, sub.item) {
+                        dispatch(batch, &mut responders);
                     }
                     // Drain whatever is queued right now, up to max_wait.
                     let deadline = Instant::now() + max_wait;
@@ -193,15 +290,9 @@ impl DivisionService {
                         match rx.try_recv() {
                             Ok(sub) => {
                                 m.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                                responders.push(sub.responder);
-                                if let Some(batch) = asm.push(sub.item) {
-                                    let (done_rs, keep) = split_responders(
-                                        std::mem::take(&mut responders),
-                                        batch.items.len(),
-                                    );
-                                    responders = keep;
-                                    m.batches.fetch_add(1, Ordering::Relaxed);
-                                    let _ = work_tx.send((batch, done_rs));
+                                responders.insert(sub.item.request_id, sub.responder);
+                                if let Some(batch) = asm.push(sub.key, sub.item) {
+                                    dispatch(batch, &mut responders);
                                 }
                                 if Instant::now() >= deadline {
                                     flush(&mut asm, &mut responders);
@@ -209,9 +300,21 @@ impl DivisionService {
                                 }
                             }
                             Err(std::sync::mpsc::TryRecvError::Empty) => {
-                                // Queue dry: ship what we have immediately.
-                                flush(&mut asm, &mut responders);
-                                break;
+                                if asm.pending_lanes() == 0 {
+                                    break;
+                                }
+                                // Queue dry. Ship if a worker can start
+                                // on it right now or the window expired;
+                                // otherwise hold the window open so more
+                                // lanes coalesce while all workers are
+                                // busy anyway.
+                                if m.idle_workers.load(Ordering::Relaxed) > 0
+                                    || Instant::now() >= deadline
+                                {
+                                    flush(&mut asm, &mut responders);
+                                    break;
+                                }
+                                std::thread::sleep(Duration::from_micros(10));
                             }
                             Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                                 flush(&mut asm, &mut responders);
@@ -242,17 +345,23 @@ impl DivisionService {
                             }
                         };
                         loop {
+                            // Waiting for the job queue (including the
+                            // receiver lock) counts as idle: the batcher
+                            // flushes eagerly while anyone is ready.
+                            m.idle_workers.fetch_add(1, Ordering::Relaxed);
                             let job = {
                                 let guard = work_rx.lock().unwrap();
                                 guard.recv()
                             };
+                            m.idle_workers.fetch_sub(1, Ordering::Relaxed);
                             let (batch, responders) = match job {
                                 Ok(j) => j,
                                 Err(_) => break, // batcher gone
                             };
                             let (a, b) = batch.flatten();
+                            let key = batch.key;
                             let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                                backend.divide_batch(&a, &b)
+                                backend.divide(&a, &b, key.fmt, key.rm)
                             }));
                             match result {
                                 Ok(Ok(flat)) => {
@@ -291,53 +400,76 @@ impl DivisionService {
         })
     }
 
-    /// Submit a request (vector of divisions). Non-blocking; `Busy` under
-    /// backpressure.
-    pub fn submit(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Ticket, SubmitError> {
-        if a.len() != b.len() {
-            return Err(SubmitError::BadRequest(format!(
-                "operand length mismatch: {} vs {}",
-                a.len(),
-                b.len()
-            )));
+    /// Submit a typed request. Non-blocking; `Busy` under backpressure.
+    /// Requests of any `(Format, Rounding)` mix coalesce into
+    /// homogeneous backend batches keyed by that pair.
+    pub fn submit_request(&self, req: DivRequest) -> Result<DivTicket, SubmitError> {
+        if let Err(defect) = req.validate() {
+            return Err(SubmitError::BadRequest(defect));
         }
-        if a.is_empty() {
-            return Err(SubmitError::BadRequest("empty request".into()));
-        }
-        let lanes = a.len() as u64;
+        let lanes = req.lanes() as u64;
+        let (fmt, rm) = (req.fmt, req.rm);
+        let request_id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
         let sub = Submission {
+            key: req.key(),
             item: BatchItem {
-                request_id: self.next_id.fetch_add(1, Ordering::Relaxed),
-                a,
-                b,
+                request_id,
+                a: req.a,
+                b: req.b,
             },
             responder: rtx,
         };
         let tx = self.tx.as_ref().ok_or(SubmitError::Closed)?;
+        // Count the submission BEFORE it becomes visible to the batcher:
+        // incrementing after a successful try_send races the batcher's
+        // decrement and can wrap the gauge below zero (the adaptive
+        // flush policy reads it). Over-counting an in-flight rejected
+        // submission for a moment is harmless; undo on failure.
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
         match tx.try_send(sub) {
             Ok(()) => {
-                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
                 self.metrics.requests.fetch_add(1, Ordering::Relaxed);
                 self.metrics.lanes.fetch_add(lanes, Ordering::Relaxed);
-                Ok(Ticket {
+                Ok(DivTicket {
                     rx: rrx,
+                    fmt,
+                    rm,
+                    request_id,
                     submitted: Instant::now(),
                     latency_sink: Arc::clone(&self.latency),
                 })
             }
             Err(TrySendError::Full(_)) => {
+                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
             }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
         }
     }
 
-    /// Submit and wait.
-    pub fn divide_blocking(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
-        let t = self.submit(a, b).map_err(|e| e.to_string())?;
+    /// Submit a typed request and wait for its response.
+    pub fn divide_request_blocking(&self, req: DivRequest) -> Result<DivResponse, String> {
+        let t = self.submit_request(req).map_err(|e| e.to_string())?;
         t.wait()
+    }
+
+    /// Submit an f32 request at round-to-nearest-even.
+    #[deprecated(note = "use submit_request(DivRequest::from_f32(..))")]
+    pub fn submit(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Ticket, SubmitError> {
+        Ok(Ticket(self.submit_request(DivRequest::from_f32(&a, &b))?))
+    }
+
+    /// Submit f32 lanes and wait.
+    #[deprecated(note = "use divide_request_blocking(DivRequest::from_f32(..))")]
+    pub fn divide_blocking(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
+        self.divide_request_blocking(DivRequest::from_f32(&a, &b))?
+            .to_f32()
+            .ok_or_else(|| "response was not binary32".to_string())
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -350,6 +482,7 @@ impl DivisionService {
             failures: self.metrics.failures.load(Ordering::Relaxed),
             rejected: self.metrics.rejected.load(Ordering::Relaxed),
             queue_depth: self.metrics.queue_depth.load(Ordering::Relaxed),
+            workers_idle: self.metrics.idle_workers.load(Ordering::Relaxed),
             latency_p50: if count > 0 { lat.percentile(0.5) } else { 0.0 },
             latency_p99: if count > 0 { lat.percentile(0.99) } else { 0.0 },
             latency_mean: if count > 0 { lat.mean() } else { 0.0 },
@@ -381,21 +514,10 @@ impl Drop for DivisionService {
     }
 }
 
-/// First `n` responders for the flushed batch; the rest stay pending.
-fn split_responders(
-    mut rs: Vec<Sender<Result<Vec<f32>, String>>>,
-    n: usize,
-) -> (
-    Vec<Sender<Result<Vec<f32>, String>>>,
-    Vec<Sender<Result<Vec<f32>, String>>>,
-) {
-    let keep = rs.split_off(n.min(rs.len()));
-    (rs, keep)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::{F16, F32, F64};
 
     fn svc(workers: usize, max_batch: usize, cap: usize) -> DivisionService {
         DivisionService::start(
@@ -413,17 +535,96 @@ mod tests {
         .unwrap()
     }
 
+    fn f32_req(a: &[f32], b: &[f32]) -> DivRequest {
+        DivRequest::from_f32(a, b)
+    }
+
+    #[test]
+    fn zero_sized_configs_rejected_up_front() {
+        for cfg in [
+            ServiceConfig {
+                workers: 0,
+                ..Default::default()
+            },
+            ServiceConfig {
+                max_batch: 0,
+                ..Default::default()
+            },
+            ServiceConfig {
+                queue_capacity: 0,
+                ..Default::default()
+            },
+        ] {
+            let r = DivisionService::start(
+                cfg.clone(),
+                BackendChoice::Native {
+                    order: 5,
+                    ilm_iterations: None,
+                },
+            );
+            let e = match r {
+                Err(e) => e,
+                Ok(_) => panic!("config {cfg:?} must be rejected"),
+            };
+            assert!(e.to_string().contains("service config"), "{e}");
+        }
+    }
+
     #[test]
     fn bad_requests_rejected() {
         let s = svc(1, 64, 16);
         assert!(matches!(
-            s.submit(vec![1.0], vec![1.0, 2.0]),
+            s.submit_request(f32_req(&[1.0], &[1.0, 2.0])),
             Err(SubmitError::BadRequest(_))
         ));
         assert!(matches!(
-            s.submit(vec![], vec![]),
+            s.submit_request(f32_req(&[], &[])),
             Err(SubmitError::BadRequest(_))
         ));
+        // Bits beyond f16's storage width.
+        assert!(matches!(
+            s.submit_request(DivRequest::new(
+                F16,
+                Rounding::NearestEven,
+                vec![0x3C00],
+                vec![0x12_3456],
+            )),
+            Err(SubmitError::BadRequest(_))
+        ));
+        s.shutdown();
+    }
+
+    #[test]
+    fn typed_roundtrip_f64_and_f16() {
+        let s = svc(1, 64, 64);
+        let resp = s
+            .divide_request_blocking(DivRequest::from_f64(&[10.0, -3.0], &[4.0, 2.0]))
+            .unwrap();
+        assert_eq!(resp.fmt, F64);
+        assert_eq!(resp.to_f64().unwrap(), vec![2.5, -1.5]);
+        // f16: 6.0/2.0 = 3.0 (0x4600 / 0x4000 = 0x4200).
+        let resp = s
+            .divide_request_blocking(DivRequest::from_f16_bits(&[0x4600], &[0x4000]))
+            .unwrap();
+        assert_eq!(resp.to_u16_bits().unwrap(), vec![0x4200]);
+        s.shutdown();
+    }
+
+    #[test]
+    fn ticket_reports_request_metadata() {
+        let s = svc(1, 64, 64);
+        let t1 = s.submit_request(f32_req(&[1.0], &[2.0])).unwrap();
+        let t2 = s
+            .submit_request(DivRequest::from_f64(&[1.0], &[2.0]).with_rounding(Rounding::TowardZero))
+            .unwrap();
+        assert!(t2.request_id() > t1.request_id());
+        assert_eq!(t1.format(), F32);
+        assert_eq!(t2.format(), F64);
+        assert_eq!(t2.rounding(), Rounding::TowardZero);
+        let r1 = t1.wait().unwrap();
+        let r2 = t2.wait().unwrap();
+        assert_eq!(r1.to_f32().unwrap(), vec![0.5]);
+        assert_eq!(r2.to_f64().unwrap(), vec![0.5]);
         s.shutdown();
     }
 
@@ -431,8 +632,8 @@ mod tests {
     fn latency_metrics_populate() {
         let s = svc(1, 64, 64);
         for _ in 0..5 {
-            let t = s.submit(vec![9.0; 4], vec![3.0; 4]).unwrap();
-            assert_eq!(t.wait().unwrap(), vec![3.0; 4]);
+            let t = s.submit_request(f32_req(&[9.0; 4], &[3.0; 4])).unwrap();
+            assert_eq!(t.wait().unwrap().to_f32().unwrap(), vec![3.0; 4]);
         }
         let m = s.metrics();
         assert_eq!(m.latency_count, 5);
@@ -450,7 +651,7 @@ mod tests {
         let mut busy = 0;
         let mut tickets = Vec::new();
         for _ in 0..2000 {
-            match s.submit(vec![1.0; 64], vec![2.0; 64]) {
+            match s.submit_request(f32_req(&[1.0; 64], &[2.0; 64])) {
                 Ok(t) => tickets.push(t),
                 Err(SubmitError::Busy) => busy += 1,
                 Err(e) => panic!("unexpected {e}"),
@@ -469,10 +670,10 @@ mod tests {
     fn shutdown_after_inflight_work() {
         let s = svc(4, 128, 512);
         let tickets: Vec<_> = (0..64)
-            .map(|i| s.submit(vec![i as f32; 16], vec![4.0; 16]).unwrap())
+            .map(|i| s.submit_request(f32_req(&[i as f32; 16], &[4.0; 16])).unwrap())
             .collect();
         for (i, t) in tickets.into_iter().enumerate() {
-            assert_eq!(t.wait().unwrap()[0], i as f32 / 4.0);
+            assert_eq!(t.wait().unwrap().to_f32().unwrap()[0], i as f32 / 4.0);
         }
         s.shutdown();
     }
@@ -480,8 +681,53 @@ mod tests {
     #[test]
     fn drop_without_shutdown_joins_cleanly() {
         let s = svc(2, 64, 64);
-        let t = s.submit(vec![8.0; 8], vec![2.0; 8]).unwrap();
-        assert_eq!(t.wait().unwrap(), vec![4.0; 8]);
+        let t = s.submit_request(f32_req(&[8.0; 8], &[2.0; 8])).unwrap();
+        assert_eq!(t.wait().unwrap().to_f32().unwrap(), vec![4.0; 8]);
         drop(s); // must not hang or panic
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_f32_wrappers_still_work() {
+        let s = svc(1, 64, 64);
+        let t = s.submit(vec![9.0; 4], vec![3.0; 4]).unwrap();
+        assert_eq!(t.wait().unwrap(), vec![3.0; 4]);
+        assert_eq!(
+            s.divide_blocking(vec![8.0], vec![2.0]).unwrap(),
+            vec![4.0]
+        );
+        assert!(matches!(
+            s.submit(vec![1.0], vec![]),
+            Err(SubmitError::BadRequest(_))
+        ));
+        s.shutdown();
+    }
+
+    #[test]
+    fn mixed_format_requests_coalesce_homogeneously() {
+        // One service, interleaved f32/f64 submissions: responses must
+        // come back typed and correct even when batches interleave.
+        let s = svc(2, 256, 256);
+        let mut tickets = Vec::new();
+        for i in 1..=24u32 {
+            if i % 2 == 0 {
+                tickets.push((i, s.submit_request(f32_req(&[i as f32], &[2.0])).unwrap()));
+            } else {
+                tickets.push((
+                    i,
+                    s.submit_request(DivRequest::from_f64(&[i as f64], &[2.0])).unwrap(),
+                ));
+            }
+        }
+        for (i, t) in tickets {
+            let resp = t.wait().unwrap();
+            if i % 2 == 0 {
+                assert_eq!(resp.to_f32().unwrap(), vec![i as f32 / 2.0]);
+            } else {
+                assert_eq!(resp.to_f64().unwrap(), vec![i as f64 / 2.0]);
+            }
+        }
+        assert_eq!(s.metrics().failures, 0);
+        s.shutdown();
     }
 }

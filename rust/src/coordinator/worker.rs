@@ -1,30 +1,51 @@
 //! Worker backends: the computation a worker thread runs per batch.
 //!
-//! Three implementations:
+//! A [`Backend`] consumes one flattened, format-homogeneous batch of
+//! bit-pattern lanes (see [`super::batcher::Batch`]) plus its
+//! `(Format, Rounding)` key. Implementations:
+//!
 //! * [`NativeBackend`] — the bit-exact Rust Taylor/ILM datapath driven
 //!   through the **batched** entry point
 //!   ([`crate::divider::Divider::div_bits_batch`]): one backend borrow,
-//!   hoisted per-op checks and a divisor-reciprocal cache per batch,
-//!   with packing buffers reused across batches;
+//!   hoisted per-op checks, lanes grouped by divisor so the divider's
+//!   reciprocal cache hits on repeated-divisor traffic, packing buffers
+//!   reused across batches;
 //! * [`ScalarNativeBackend`] — the same datapath one lane at a time (the
 //!   pre-batching worker loop), kept as the baseline the coordinator
 //!   bench compares against;
+//! * [`GoldBackend`] — exactly-rounded digit recurrence
+//!   ([`crate::divider::longdiv::LongDivider`]); slow, but the service's
+//!   routing and format threading can be property-tested bit-for-bit
+//!   against per-lane gold results;
 //! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifact executed via
-//!   PJRT ([`crate::runtime::DivideEngine`], `pjrt` feature).
+//!   PJRT ([`crate::runtime::DivideEngine`], `pjrt` feature); serves
+//!   binary32 at round-to-nearest only.
 //!
 //! Backends are created *inside* each worker thread by a factory (PJRT
 //! handles are not `Send`), so [`BackendChoice`] is the serializable
 //! configuration and [`Backend`] the per-thread instance.
 
+use crate::divider::longdiv::LongDivider;
 use crate::divider::{BackendKind, Divider, TaylorDivider};
-use crate::fp::{F32, Rounding};
+use crate::fp::{Format, Rounding, F32};
 use crate::taylor::TaylorConfig;
 use crate::util::error::Result;
 
-/// What a worker does with one flattened batch.
+/// What a worker does with one flattened batch: divide `fmt` bit-pattern
+/// lanes under rounding mode `rm`.
 pub trait Backend {
-    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>>;
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>>;
+
     fn describe(&self) -> String;
+
+    /// Legacy f32 entry point, kept as a wrapper over [`Backend::divide`].
+    #[deprecated(note = "use divide() with bit-pattern lanes + Format + Rounding")]
+    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let ab: Vec<u64> = a.iter().map(|&x| x.to_bits() as u64).collect();
+        let bb: Vec<u64> = b.iter().map(|&x| x.to_bits() as u64).collect();
+        let q = self.divide(&ab, &bb, F32, Rounding::NearestEven)?;
+        Ok(q.iter().map(|&x| f32::from_bits(x as u32)).collect())
+    }
 }
 
 /// Serializable backend configuration.
@@ -42,8 +63,11 @@ pub enum BackendChoice {
         order: u32,
         ilm_iterations: Option<u32>,
     },
+    /// Exactly-rounded digit recurrence (the gold reference) as a
+    /// service backend — for routing/bit-identity tests.
+    Gold,
     /// AOT artifact through PJRT (requires `make artifacts` and the
-    /// `pjrt` feature).
+    /// `pjrt` feature). binary32 / NearestEven only.
     Pjrt,
 }
 
@@ -59,6 +83,7 @@ impl BackendChoice {
                 order,
                 ilm_iterations,
             } => Ok(Box::new(ScalarNativeBackend::new(order, ilm_iterations))),
+            BackendChoice::Gold => Ok(Box::new(GoldBackend::new())),
             BackendChoice::Pjrt => Ok(Box::new(PjrtBackend::load_default()?)),
         }
     }
@@ -77,44 +102,94 @@ fn native_divider(order: u32, ilm_iterations: Option<u32>) -> TaylorDivider {
 }
 
 /// The bit-exact Rust datapath as a service backend, dividing each
-/// assembled batch with one `div_bits_batch` call.
+/// assembled batch with one `div_bits_batch` call over lanes grouped by
+/// divisor.
 pub struct NativeBackend {
     divider: TaylorDivider,
-    // Packing buffers reused across batches (capacity warms up to the
-    // service's max_batch and stays there — no steady-state allocation
-    // beyond the response vector the Backend contract requires).
-    a_bits: Vec<u64>,
-    b_bits: Vec<u64>,
-    q_bits: Vec<u64>,
+    // Scratch reused across batches (capacity warms up to the service's
+    // max_batch and stays there — no steady-state allocation beyond the
+    // response vector the Backend contract requires).
+    perm: Vec<u32>,
+    a_grouped: Vec<u64>,
+    b_grouped: Vec<u64>,
+    q_grouped: Vec<u64>,
 }
 
 impl NativeBackend {
     pub fn new(order: u32, ilm_iterations: Option<u32>) -> Self {
         Self {
             divider: native_divider(order, ilm_iterations),
-            a_bits: Vec::new(),
-            b_bits: Vec::new(),
-            q_bits: Vec::new(),
+            perm: Vec::new(),
+            a_grouped: Vec::new(),
+            b_grouped: Vec::new(),
+            q_grouped: Vec::new(),
         }
     }
 }
 
+/// Cheap repeat probe: pairwise-compare up to 32 evenly spaced divisors.
+/// Repeated-divisor traffic (k-means counts, normalization constants)
+/// has few distinct values, so a spaced sample finds a duplicate with
+/// high probability; all-distinct traffic returns false and skips the
+/// grouping sort. A false negative only costs cache hits, never
+/// correctness.
+fn probably_has_repeats(b: &[u64]) -> bool {
+    let n = b.len();
+    if n < 4 {
+        return false;
+    }
+    let samples = n.min(32);
+    let step = n / samples;
+    let mut seen = [0u64; 32];
+    let mut count = 0;
+    for k in 0..samples {
+        let x = b[k * step];
+        if seen[..count].contains(&x) {
+            return true;
+        }
+        seen[count] = x;
+        count += 1;
+    }
+    false
+}
+
 impl Backend for NativeBackend {
-    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        self.a_bits.clear();
-        self.a_bits.extend(a.iter().map(|&x| x.to_bits() as u64));
-        self.b_bits.clear();
-        self.b_bits.extend(b.iter().map(|&x| x.to_bits() as u64));
-        self.q_bits.clear();
-        self.q_bits.resize(a.len(), 0);
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+        let n = a.len();
+        // Group lanes by divisor bit pattern before dispatch so equal
+        // divisors land adjacent and the divider's reciprocal cache hits
+        // on every repeat (service traffic repeats divisors: k-means
+        // centroid counts, normalization constants). Each lane's result
+        // depends only on its own operands, so permuting and scattering
+        // back is bit-identical to dividing in arrival order; the sort
+        // costs one u64 key sort vs ~7 wide multiplies per cache miss.
+        // All-distinct traffic (per the sampled probe) skips the sort.
+        if !probably_has_repeats(b) {
+            let mut out = vec![0u64; n];
+            self.divider.div_bits_batch(a, b, fmt, rm, &mut out);
+            return Ok(out);
+        }
+        self.perm.clear();
+        self.perm.extend(0..n as u32);
+        self.perm.sort_unstable_by_key(|&i| b[i as usize]);
+        self.a_grouped.clear();
+        self.a_grouped.extend(self.perm.iter().map(|&i| a[i as usize]));
+        self.b_grouped.clear();
+        self.b_grouped.extend(self.perm.iter().map(|&i| b[i as usize]));
+        self.q_grouped.clear();
+        self.q_grouped.resize(n, 0);
         self.divider.div_bits_batch(
-            &self.a_bits,
-            &self.b_bits,
-            F32,
-            Rounding::NearestEven,
-            &mut self.q_bits,
+            &self.a_grouped,
+            &self.b_grouped,
+            fmt,
+            rm,
+            &mut self.q_grouped,
         );
-        Ok(self.q_bits.iter().map(|&q| f32::from_bits(q as u32)).collect())
+        let mut out = vec![0u64; n];
+        for (k, &i) in self.perm.iter().enumerate() {
+            out[i as usize] = self.q_grouped[k];
+        }
+        Ok(out)
     }
 
     fn describe(&self) -> String {
@@ -136,15 +211,46 @@ impl ScalarNativeBackend {
 }
 
 impl Backend for ScalarNativeBackend {
-    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
         Ok(a.iter()
             .zip(b)
-            .map(|(&x, &y)| self.divider.div_f32(x, y))
+            .map(|(&x, &y)| self.divider.div_bits(x, y, fmt, rm))
             .collect())
     }
 
     fn describe(&self) -> String {
         format!("native-scalar[{}]", self.divider.name())
+    }
+}
+
+/// The exactly-rounded digit-recurrence reference as a backend.
+pub struct GoldBackend {
+    divider: LongDivider,
+}
+
+impl GoldBackend {
+    pub fn new() -> Self {
+        Self {
+            divider: LongDivider::new(),
+        }
+    }
+}
+
+impl Default for GoldBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for GoldBackend {
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; a.len()];
+        self.divider.div_bits_batch(a, b, fmt, rm, &mut out);
+        Ok(out)
+    }
+
+    fn describe(&self) -> String {
+        format!("gold[{}]", self.divider.name())
     }
 }
 
@@ -162,8 +268,18 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
-    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        self.engine.divide(a, b)
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+        if fmt != F32 || rm != Rounding::NearestEven {
+            crate::bail!(
+                "pjrt backend serves f32/nearest only (got {}/{})",
+                fmt.name(),
+                rm.name()
+            );
+        }
+        let af: Vec<f32> = a.iter().map(|&x| f32::from_bits(x as u32)).collect();
+        let bf: Vec<f32> = b.iter().map(|&x| f32::from_bits(x as u32)).collect();
+        let q = self.engine.divide(&af, &bf)?;
+        Ok(q.iter().map(|&x| x.to_bits() as u64).collect())
     }
 
     fn describe(&self) -> String {
@@ -178,22 +294,49 @@ impl Backend for PjrtBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp::{BF16, F16, F64};
+
+    fn bits32(xs: &[f32]) -> Vec<u64> {
+        xs.iter().map(|&x| x.to_bits() as u64).collect()
+    }
 
     #[test]
     fn native_backend_divides() {
         let mut be = NativeBackend::new(5, None);
         let out = be
-            .divide_batch(&[6.0, 1.0, -8.0], &[2.0, 4.0, 2.0])
+            .divide(
+                &bits32(&[6.0, 1.0, -8.0]),
+                &bits32(&[2.0, 4.0, 2.0]),
+                F32,
+                Rounding::NearestEven,
+            )
             .unwrap();
-        assert_eq!(out, vec![3.0, 0.25, -4.0]);
+        assert_eq!(out, bits32(&[3.0, 0.25, -4.0]));
         assert!(be.describe().starts_with("native["));
     }
 
     #[test]
     fn native_backend_with_ilm_budget() {
         let mut be = NativeBackend::new(5, Some(8));
-        let out = be.divide_batch(&[10.0], &[5.0]).unwrap();
-        assert!((out[0] - 2.0).abs() < 1e-6);
+        let out = be
+            .divide(&bits32(&[10.0]), &bits32(&[5.0]), F32, Rounding::NearestEven)
+            .unwrap();
+        assert!((f32::from_bits(out[0] as u32) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn native_backend_serves_all_four_formats() {
+        let mut be = NativeBackend::new(5, None);
+        // 6.0 / 2.0 = 3.0 in each format's own encoding.
+        for (fmt, a, b, want) in [
+            (F16, 0x4600u64, 0x4000, 0x4200),
+            (BF16, 0x40C0, 0x4000, 0x4040),
+            (F32, 0x40C0_0000, 0x4000_0000, 0x4040_0000),
+            (F64, 0x4018_0000_0000_0000, 0x4000_0000_0000_0000, 0x4008_0000_0000_0000),
+        ] {
+            let q = be.divide(&[a], &[b], fmt, Rounding::NearestEven).unwrap();
+            assert_eq!(q, vec![want], "{}", fmt.name());
+        }
     }
 
     #[test]
@@ -208,7 +351,7 @@ mod tests {
     }
 
     #[test]
-    fn choice_builds_native_scalar() {
+    fn choice_builds_native_scalar_and_gold() {
         let mut be = BackendChoice::NativeScalar {
             order: 5,
             ilm_iterations: None,
@@ -216,32 +359,54 @@ mod tests {
         .build()
         .unwrap();
         assert!(be.describe().starts_with("native-scalar["));
-        assert_eq!(be.divide_batch(&[9.0], &[3.0]).unwrap(), vec![3.0]);
+        assert_eq!(
+            be.divide(&bits32(&[9.0]), &bits32(&[3.0]), F32, Rounding::NearestEven)
+                .unwrap(),
+            bits32(&[3.0])
+        );
+        let mut gold = BackendChoice::Gold.build().unwrap();
+        assert!(gold.describe().starts_with("gold["));
+        assert_eq!(
+            gold.divide(&bits32(&[9.0]), &bits32(&[3.0]), F32, Rounding::NearestEven)
+                .unwrap(),
+            bits32(&[3.0])
+        );
     }
 
     #[test]
-    fn batched_backend_bit_identical_to_scalar_backend() {
+    fn divisor_grouping_bit_identical_to_scalar_backend() {
         let mut batched = NativeBackend::new(5, None);
         let mut scalar = ScalarNativeBackend::new(5, None);
-        let a = vec![
-            6.0f32,
-            -1.5,
-            f32::NAN,
-            0.0,
-            f32::INFINITY,
-            1.0e-40,
-            355.0,
-            -0.0,
-        ];
-        let b = vec![2.0f32, 3.0, 1.0, 0.0, 2.0, 2.0, 113.0, 5.0];
-        let qb = batched.divide_batch(&a, &b).unwrap();
-        let qs = scalar.divide_batch(&a, &b).unwrap();
-        assert_eq!(qb.len(), qs.len());
-        for i in 0..qb.len() {
-            assert_eq!(qb[i].to_bits(), qs[i].to_bits(), "lane {i}");
+        // Interleaved repeated divisors: grouping reorders internally,
+        // results must still come back in lane order, bit for bit.
+        let a = bits32(&[6.0, -1.5, f32::NAN, 0.0, f32::INFINITY, 1.0e-40, 355.0, -0.0]);
+        let b = bits32(&[2.0, 3.0, 2.0, 3.0, 2.0, 3.0, 113.0, 2.0]);
+        for rm in Rounding::ALL {
+            let qb = batched.divide(&a, &b, F32, rm).unwrap();
+            let qs = scalar.divide(&a, &b, F32, rm).unwrap();
+            assert_eq!(qb, qs, "{rm:?}");
         }
         // Buffers are reused: a second, differently-sized batch works too.
-        let q = batched.divide_batch(&[8.0, 4.0], &[2.0, 2.0]).unwrap();
-        assert_eq!(q, vec![4.0, 2.0]);
+        let q = batched
+            .divide(&bits32(&[8.0, 4.0]), &bits32(&[2.0, 2.0]), F32, Rounding::NearestEven)
+            .unwrap();
+        assert_eq!(q, bits32(&[4.0, 2.0]));
+    }
+
+    #[test]
+    fn repeat_probe_finds_repeats_and_clears_distinct() {
+        assert!(!probably_has_repeats(&[1, 1])); // below probe threshold
+        let distinct: Vec<u64> = (0..4096).map(|i| i * 7 + 3).collect();
+        assert!(!probably_has_repeats(&distinct));
+        let repeated: Vec<u64> = (0..4096u64).map(|i| i % 6).collect();
+        assert!(probably_has_repeats(&repeated));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_divide_batch_wrapper_still_works() {
+        let mut be = NativeBackend::new(5, None);
+        let out = be.divide_batch(&[6.0, 1.0], &[2.0, 4.0]).unwrap();
+        assert_eq!(out, vec![3.0, 0.25]);
     }
 }

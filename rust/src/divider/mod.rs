@@ -246,12 +246,25 @@ impl Divider for TaylorDivider {
     }
 }
 
+/// Ways in the batch path's divisor-reciprocal cache. Direct-mapped by
+/// a multiplicative hash of the divisor significand: service batches
+/// carry a handful of distinct divisors (k-means centroid counts, a few
+/// normalization constants), and 8 ways hold them all simultaneously —
+/// the batcher additionally groups lanes by divisor so even colliding
+/// divisors arrive in runs and thrash at most once per run.
+const RECIP_CACHE_WAYS: usize = 8;
+
+/// Take the top `log2(ways)` bits of the mixed key as the way index.
+const RECIP_CACHE_SHIFT: u32 = 64 - RECIP_CACHE_WAYS.trailing_zeros();
+// ≥ 2 also keeps RECIP_CACHE_SHIFT < 64 (a 64-bit shift would panic).
+const _: () = assert!(RECIP_CACHE_WAYS.is_power_of_two() && RECIP_CACHE_WAYS >= 2);
+
 /// Monomorphized batch datapath behind [`TaylorDivider`]'s
 /// `div_bits_batch`: one shared special/exponent path per lane, a single
-/// backend borrow for the whole batch, and a one-entry reciprocal cache —
-/// service workloads repeat divisors within a batch (k-means centroid
-/// counts, normalization constants), and the reciprocal is a pure
-/// function of the divisor significand, so reuse is bit-exact.
+/// backend borrow for the whole batch, and an
+/// [`RECIP_CACHE_WAYS`]-way divisor-reciprocal cache keyed by the
+/// divisor significand bits — the reciprocal is a pure function of the
+/// divisor significand, so reuse is bit-exact.
 fn div_bits_batch_with<M: Multiplier>(
     cfg: &TaylorConfig,
     backend: &mut M,
@@ -264,8 +277,8 @@ fn div_bits_batch_with<M: Multiplier>(
     let f = cfg.frac_bits;
     let shift = f - fmt.frac_bits;
     // x is always ≥ 1.0 in Q2.F, so 0 can never collide with a real key.
-    let mut cached_x = 0u64;
-    let mut cached_recip = 0u64;
+    let mut cached_x = [0u64; RECIP_CACHE_WAYS];
+    let mut cached_recip = [0u64; RECIP_CACHE_WAYS];
     for ((&ab, &bb), q) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
         *q = match prepare(ab, bb, fmt) {
             Prepared::Done(bits) => bits,
@@ -276,11 +289,15 @@ fn div_bits_batch_with<M: Multiplier>(
                 sig_b,
             } => {
                 let x = sig_b << shift;
-                if x != cached_x {
-                    cached_x = x;
-                    cached_recip = reciprocal_fast(cfg, backend, x);
+                // Fibonacci-hash the significand into a way index (the
+                // low bits of x are the least-varying across a format's
+                // divisors once shifted, so mix the whole word).
+                let way = (x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> RECIP_CACHE_SHIFT) as usize;
+                if x != cached_x[way] {
+                    cached_x[way] = x;
+                    cached_recip[way] = reciprocal_fast(cfg, backend, x);
                 }
-                let prod = sig_a as u128 * cached_recip as u128;
+                let prod = sig_a as u128 * cached_recip[way] as u128;
                 round_pack(sign, exp, prod, fmt.frac_bits + f, false, fmt, rm).0
             }
         };
@@ -612,6 +629,39 @@ mod tests {
         for i in 0..64 {
             let want = d.div_bits(a[i], b[i], F32, Rounding::NearestEven);
             assert_eq!(out[i], want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn batch_recip_cache_many_divisors_all_formats_bit_identical() {
+        // More distinct divisors than cache ways, interleaved so ways
+        // collide and evict mid-batch — results must stay bit-identical
+        // to the scalar path in every format the service offers.
+        use crate::fp::ALL_FORMATS;
+        let mut rng = crate::util::rng::Rng::new(77);
+        for fmt in ALL_FORMATS {
+            let divisors: Vec<u64> = (0..3 * RECIP_CACHE_WAYS as u64)
+                .map(|_| {
+                    let e = fmt.bias() as u64 + rng.below(5);
+                    fmt.assemble(false, e, rng.next_u64() & fmt.frac_mask())
+                })
+                .collect();
+            let a: Vec<u64> = (0..256)
+                .map(|_| {
+                    let e = fmt.bias() as u64 - rng.below(5);
+                    fmt.assemble(rng.bool(0.5), e, rng.next_u64() & fmt.frac_mask())
+                })
+                .collect();
+            let b: Vec<u64> = (0..256)
+                .map(|i| divisors[i % divisors.len()])
+                .collect();
+            let mut d = TaylorDivider::paper_exact();
+            let mut out = vec![0u64; a.len()];
+            d.div_bits_batch(&a, &b, fmt, Rounding::NearestEven, &mut out);
+            for i in 0..a.len() {
+                let want = d.div_bits(a[i], b[i], fmt, Rounding::NearestEven);
+                assert_eq!(out[i], want, "{} lane {i}", fmt.name());
+            }
         }
     }
 

@@ -122,7 +122,34 @@ impl Format {
             (1u64 << self.width()) - 1
         }
     }
+
+    /// Short name of the interchange formats ("f16", "bf16", "f32",
+    /// "f64"); "custom" for any other field layout.
+    pub const fn name(&self) -> &'static str {
+        match (self.exp_bits, self.frac_bits) {
+            (5, 10) => "f16",
+            (8, 7) => "bf16",
+            (8, 23) => "f32",
+            (11, 52) => "f64",
+            _ => "custom",
+        }
+    }
+
+    /// Parse a format name as accepted by the CLI and the service
+    /// request constructors.
+    pub fn from_name(s: &str) -> Option<Format> {
+        match s {
+            "f16" | "half" | "binary16" => Some(F16),
+            "bf16" | "bfloat16" => Some(BF16),
+            "f32" | "single" | "binary32" => Some(F32),
+            "f64" | "double" | "binary64" => Some(F64),
+            _ => None,
+        }
+    }
 }
+
+/// The four interchange formats the service accepts, smallest first.
+pub const ALL_FORMATS: [Format; 4] = [F16, BF16, F32, F64];
 
 /// Classification of a value.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

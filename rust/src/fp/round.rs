@@ -22,6 +22,35 @@ pub enum Rounding {
 }
 
 impl Rounding {
+    /// All four rounding-direction attributes (test/bench sweeps).
+    pub const ALL: [Rounding; 4] = [
+        Rounding::NearestEven,
+        Rounding::TowardZero,
+        Rounding::TowardPositive,
+        Rounding::TowardNegative,
+    ];
+
+    /// Short name as accepted by [`Rounding::from_name`].
+    pub const fn name(self) -> &'static str {
+        match self {
+            Rounding::NearestEven => "nearest",
+            Rounding::TowardZero => "zero",
+            Rounding::TowardPositive => "up",
+            Rounding::TowardNegative => "down",
+        }
+    }
+
+    /// Parse a rounding-mode name (CLI and service requests).
+    pub fn from_name(s: &str) -> Option<Rounding> {
+        match s {
+            "nearest" | "ne" | "rne" | "nearest-even" => Some(Rounding::NearestEven),
+            "zero" | "rtz" | "toward-zero" => Some(Rounding::TowardZero),
+            "up" | "rtp" | "toward-positive" => Some(Rounding::TowardPositive),
+            "down" | "rtn" | "toward-negative" => Some(Rounding::TowardNegative),
+            _ => None,
+        }
+    }
+
     /// Should a magnitude with the given (guard, sticky) round up?
     /// `lsb_odd` is the parity of the kept LSB (for ties-to-even).
     #[inline]

@@ -111,6 +111,51 @@ pub fn gen_repeated_divisor_batch(n: usize, distinct: usize, seed: u64) -> DivBa
     DivBatch { a, b }
 }
 
+/// Generate `n` operand-pair lanes as bit patterns of an arbitrary
+/// format: finite normal values with exponents within ±`espread` of the
+/// format's bias (log-uniform-ish), random significands, random signs.
+/// The multi-format analogue of [`gen_batch`] for
+/// [`crate::divider::Divider::div_bits_batch`] and the typed service
+/// API.
+pub fn gen_bits_batch(
+    fmt: crate::fp::Format,
+    n: usize,
+    espread: u32,
+    seed: u64,
+) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = Rng::new(seed);
+    let spread = espread.min(fmt.bias() as u32 - 1) as u64;
+    let mut lane = |rng: &mut Rng| {
+        let e = fmt.bias() as u64 - spread + rng.below(2 * spread + 1);
+        fmt.assemble(rng.bool(0.5), e, rng.next_u64() & fmt.frac_mask())
+    };
+    let mut a = Vec::with_capacity(n);
+    let mut b = Vec::with_capacity(n);
+    for _ in 0..n {
+        a.push(lane(&mut rng));
+        b.push(lane(&mut rng));
+    }
+    (a, b)
+}
+
+/// The format's special-value menu as bit patterns: NaN, ±Inf, ±0, the
+/// smallest and largest subnormal, 1.0, and the largest finite value.
+/// Format-generic counterpart of `rng::F32_SPECIALS` for mixed-format
+/// service tests.
+pub fn special_patterns(fmt: crate::fp::Format) -> [u64; 9] {
+    [
+        fmt.nan(),
+        fmt.inf(false),
+        fmt.inf(true),
+        fmt.zero(false),
+        fmt.zero(true),
+        1,               // smallest positive subnormal
+        fmt.frac_mask(), // largest subnormal
+        fmt.assemble(false, fmt.bias() as u64, 0), // 1.0
+        fmt.max_finite(false),
+    ]
+}
+
 /// One row of a paper-vs-measured table.
 #[derive(Clone, Debug)]
 pub struct PaperRow {
@@ -220,13 +265,28 @@ pub fn timed_section<F: FnMut()>(label: &str, f: F) -> Measurement {
 
 /// Write a bench-trajectory record to `<repo root>/BENCH_<name>.json`
 /// (repo root = the crate manifest's parent, independent of the cwd the
-/// bench was invoked from). Failures are reported, not fatal — a bench
-/// run on a read-only checkout still prints its tables.
+/// bench was invoked from), and append the same record as one compact
+/// line to the tracked `BENCH_HISTORY.jsonl` so successive runs build a
+/// trajectory instead of overwriting each other. Failures are reported,
+/// not fatal — a bench run on a read-only checkout still prints its
+/// tables.
 pub fn write_bench_json(name: &str, json: &crate::util::json::Json) {
-    let path = format!("{}/../BENCH_{}.json", env!("CARGO_MANIFEST_DIR"), name);
+    let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+    let path = format!("{root}/BENCH_{name}.json");
     match std::fs::write(&path, json.to_string_pretty()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    let history = format!("{root}/BENCH_HISTORY.jsonl");
+    let line = format!("{}\n", json.to_string_compact());
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&history)
+        .and_then(|mut f| std::io::Write::write_all(&mut f, line.as_bytes()));
+    match appended {
+        Ok(()) => println!("appended to {history}"),
+        Err(e) => eprintln!("could not append {history}: {e}"),
     }
 }
 
@@ -295,6 +355,35 @@ mod tests {
             .count();
         assert!(transitions < 8, "{transitions} transitions — not contiguous runs");
         assert!(b.b.iter().all(|x| x.is_finite() && *x != 0.0));
+    }
+
+    #[test]
+    fn bits_batch_generates_finite_normals_in_any_format() {
+        use crate::fp::{unpack, Class, ALL_FORMATS};
+        for fmt in ALL_FORMATS {
+            let (a, b) = gen_bits_batch(fmt, 200, 8, 3);
+            let (a2, _) = gen_bits_batch(fmt, 200, 8, 3);
+            assert_eq!(a, a2, "deterministic for a given seed");
+            assert_eq!(a.len(), 200);
+            for &bits in a.iter().chain(&b) {
+                assert_eq!(bits & !fmt.width_mask(), 0, "{}", fmt.name());
+                assert_eq!(unpack(bits, fmt).class, Class::Normal, "{}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn special_patterns_cover_every_class() {
+        use crate::fp::{unpack, Class, ALL_FORMATS};
+        for fmt in ALL_FORMATS {
+            let classes: Vec<Class> = special_patterns(fmt)
+                .iter()
+                .map(|&p| unpack(p, fmt).class)
+                .collect();
+            for want in [Class::NaN, Class::Inf, Class::Zero, Class::Subnormal, Class::Normal] {
+                assert!(classes.contains(&want), "{}: missing {want:?}", fmt.name());
+            }
+        }
     }
 
     #[test]

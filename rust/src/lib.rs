@@ -19,7 +19,8 @@
 //!   (Fig 4 vs Fig 5, "< 50 % hardware");
 //! * [`analysis`] — ULP/relative-error sweeps used by the benches;
 //! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts;
-//! * [`coordinator`] — the batched division service (dynamic batcher,
+//! * [`coordinator`] — the typed multi-format division service
+//!   (DivRequest/DivResponse, per-(Format, Rounding) dynamic batcher,
 //!   worker pool, metrics);
 //! * [`harness`] — workload generators and the bench runner;
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, stats, property

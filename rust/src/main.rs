@@ -216,9 +216,22 @@ fn cmd_accuracy(args: Vec<String>) -> i32 {
 
 fn cmd_serve(args: Vec<String>) -> i32 {
     use std::time::Duration;
-    use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig};
+    use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
+    use tsdiv::fp::{Format, Rounding};
     let cmd = Command::new("serve", "run the division service under load")
-        .opt("backend", "native", "native | pjrt")
+        .opt_choice("backend", "native", &["native", "pjrt"], "worker backend")
+        .opt_choice(
+            "format",
+            "f32",
+            &["f16", "bf16", "f32", "f64", "mixed"],
+            "request operand format",
+        )
+        .opt_choice(
+            "rounding",
+            "nearest",
+            &["nearest", "zero", "up", "down"],
+            "rounding mode",
+        )
         .opt("seconds", "2", "duration")
         .opt("workers", "2", "worker threads")
         .opt("max-batch", "4096", "coalescing budget");
@@ -241,6 +254,19 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             ilm_iterations: None,
         }
     };
+    let rm = Rounding::from_name(parsed.get_or("rounding", "nearest")).unwrap();
+    // "mixed" cycles through all four formats, exercising per-key
+    // batching; otherwise every request carries the one format.
+    let formats: Vec<Format> = match parsed.get_or("format", "f32") {
+        "mixed" => tsdiv::fp::ALL_FORMATS.to_vec(),
+        name => vec![Format::from_name(name).unwrap()],
+    };
+    if backend == BackendChoice::Pjrt
+        && (parsed.get_or("format", "f32") != "f32" || rm != Rounding::NearestEven)
+    {
+        eprintln!("the pjrt backend serves f32 at nearest-even only");
+        return 2;
+    }
     let svc = DivisionService::start(
         ServiceConfig {
             workers: parsed.parse_or("workers", 2),
@@ -253,19 +279,23 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     .expect("service");
     let seconds: u64 = parsed.parse_or("seconds", 2);
     let deadline = std::time::Instant::now() + Duration::from_secs(seconds);
-    let mut rng = tsdiv::util::rng::Rng::new(0);
     let mut lanes = 0u64;
+    let mut req_no = 0usize;
     while std::time::Instant::now() < deadline {
-        let a: Vec<f32> = (0..256).map(|_| rng.f32_log_uniform(-8, 8)).collect();
-        let b: Vec<f32> = (0..256).map(|_| rng.f32_log_uniform(-8, 8)).collect();
-        if svc.divide_blocking(a, b).is_ok() {
+        let fmt = formats[req_no % formats.len()];
+        req_no += 1;
+        let (a, b) = tsdiv::harness::gen_bits_batch(fmt, 256, 8, req_no as u64);
+        let req = DivRequest::new(fmt, rm, a, b);
+        if svc.divide_request_blocking(req).is_ok() {
             lanes += 256;
         }
     }
     let m = svc.metrics();
     println!(
-        "served {lanes} divisions in {seconds}s ({} div/s), {} batches, p50 {:.3} ms, p99 {:.3} ms",
+        "served {lanes} divisions in {seconds}s ({} div/s, {} rm={}), {} batches, p50 {:.3} ms, p99 {:.3} ms",
         sig(lanes as f64 / seconds as f64, 4),
+        parsed.get_or("format", "f32"),
+        rm.name(),
         m.batches,
         m.latency_p50 * 1e3,
         m.latency_p99 * 1e3
@@ -315,7 +345,7 @@ fn cmd_selftest() -> i32 {
     }
     // Coordinator
     {
-        use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig};
+        use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
         let svc = DivisionService::start(
             ServiceConfig::default(),
             BackendChoice::Native {
@@ -324,8 +354,14 @@ fn cmd_selftest() -> i32 {
             },
         )
         .unwrap();
-        let out = svc.divide_blocking(vec![9.0], vec![3.0]);
-        check("coordinator round-trip 9/3", out == Ok(vec![3.0]));
+        let out = svc
+            .divide_request_blocking(DivRequest::from_f32(&[9.0], &[3.0]))
+            .map(|r| r.to_f32());
+        check("coordinator round-trip 9/3", out == Ok(Some(vec![3.0])));
+        let out = svc
+            .divide_request_blocking(DivRequest::from_f16_bits(&[0x4600], &[0x4000]))
+            .map(|r| r.to_u16_bits());
+        check("coordinator f16 round-trip 6/2", out == Ok(Some(vec![0x4200])));
         svc.shutdown();
     }
     if failures == 0 {

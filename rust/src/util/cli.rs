@@ -13,6 +13,8 @@ pub struct OptSpec {
     pub help: &'static str,
     pub takes_value: bool,
     pub default: Option<&'static str>,
+    /// Closed value set; `parse` rejects anything else (None = free-form).
+    pub choices: Option<&'static [&'static str]>,
 }
 
 /// Parsed arguments.
@@ -80,6 +82,7 @@ impl Command {
             help,
             takes_value: false,
             default: None,
+            choices: None,
         });
         self
     }
@@ -90,6 +93,28 @@ impl Command {
             help,
             takes_value: true,
             default: Some(default),
+            choices: None,
+        });
+        self
+    }
+
+    /// An option restricted to a closed value set; anything outside the
+    /// set is a parse error (listing the choices). The default must be
+    /// one of the choices.
+    pub fn opt_choice(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        choices: &'static [&'static str],
+        help: &'static str,
+    ) -> Self {
+        debug_assert!(choices.contains(&default));
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+            choices: Some(choices),
         });
         self
     }
@@ -100,6 +125,7 @@ impl Command {
             help,
             takes_value: true,
             default: None,
+            choices: None,
         });
         self
     }
@@ -116,7 +142,11 @@ impl Command {
                 Some(d) if o.takes_value => format!(" [default: {d}]"),
                 _ => String::new(),
             };
-            s.push_str(&format!("{head:<28} {}{def}\n", o.help));
+            let choices = match o.choices {
+                Some(cs) => format!(" ({})", cs.join("|")),
+                None => String::new(),
+            };
+            s.push_str(&format!("{head:<28} {}{choices}{def}\n", o.help));
         }
         s.push_str("  --help                       show this help\n");
         s
@@ -154,6 +184,14 @@ impl Command {
                             .next()
                             .ok_or_else(|| format!("option --{name} requires a value"))?,
                     };
+                    if let Some(choices) = spec.choices {
+                        if !choices.contains(&val.as_str()) {
+                            return Err(format!(
+                                "option --{name}: '{val}' is not one of {}",
+                                choices.join("|")
+                            ));
+                        }
+                    }
                     args.values.insert(name, val);
                 } else {
                     if inline_val.is_some() {
@@ -177,6 +215,7 @@ mod tests {
         Command::new("t", "test command")
             .opt("n", "5", "iterations")
             .opt_required("path", "input path")
+            .opt_choice("mode", "fast", &["fast", "slow"], "speed mode")
             .flag("verbose", "log more")
     }
 
@@ -226,6 +265,17 @@ mod tests {
         let e = parse(&["--help"]).unwrap_err();
         assert!(e.contains("test command"));
         assert!(e.contains("--path"));
+    }
+
+    #[test]
+    fn choice_options_validated() {
+        let a = parse(&["--mode", "slow"]).unwrap();
+        assert_eq!(a.get("mode"), Some("slow"));
+        assert_eq!(parse(&[]).unwrap().get("mode"), Some("fast"));
+        let e = parse(&["--mode", "warp"]).unwrap_err();
+        assert!(e.contains("fast|slow"), "{e}");
+        let help = cmd().help_text();
+        assert!(help.contains("(fast|slow)"), "{help}");
     }
 
     #[test]

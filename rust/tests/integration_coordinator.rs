@@ -1,9 +1,15 @@
-//! Integration: the division service end to end — native and PJRT
-//! backends, fault injection, backpressure under load.
+//! Integration: the division service end to end — typed multi-format
+//! requests, native and PJRT backends, fault injection, backpressure
+//! under load.
 
 use std::time::Duration;
 
-use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig, SubmitError};
+use tsdiv::coordinator::{
+    BackendChoice, DivRequest, DivisionService, ServiceConfig, SubmitError,
+};
+use tsdiv::divider::{longdiv::LongDivider, Divider};
+use tsdiv::fp::{unpack, Class, Rounding, ALL_FORMATS};
+use tsdiv::harness::{gen_bits_batch, special_patterns};
 use tsdiv::runtime::artifacts_available;
 use tsdiv::util::rng::Rng;
 
@@ -37,8 +43,8 @@ fn native_service_under_concurrent_load() {
                 let a: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-8, 8)).collect();
                 let b: Vec<f32> = (0..n).map(|_| rng.f32_log_uniform(-8, 8)).collect();
                 let out = loop {
-                    match svc.submit(a.clone(), b.clone()) {
-                        Ok(ticket) => break ticket.wait().unwrap(),
+                    match svc.submit_request(DivRequest::from_f32(&a, &b)) {
+                        Ok(ticket) => break ticket.wait().unwrap().to_f32().unwrap(),
                         Err(SubmitError::Busy) => std::thread::yield_now(),
                         Err(e) => panic!("{e}"),
                     }
@@ -64,6 +70,59 @@ fn native_service_under_concurrent_load() {
     assert!(m.mean_batch_lanes() > 1.0, "no coalescing happened");
 }
 
+/// Every format rides the same service and the same `div_bits_batch`
+/// lanes; the Native backend must stay within the datapath's ulp band
+/// of the exactly-rounded gold reference in all of them, and specials
+/// must agree in class.
+#[test]
+fn native_backend_serves_mixed_formats_within_ulp_band() {
+    let svc = DivisionService::start(
+        cfg(2, 128),
+        BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        },
+    )
+    .unwrap();
+    let mut gold = LongDivider::new();
+    for (fi, fmt) in ALL_FORMATS.into_iter().enumerate() {
+        for rm in Rounding::ALL {
+            let (mut a, mut b) = gen_bits_batch(fmt, 96, 8, (fi as u64) << 3 | 1);
+            // Sprinkle specials on top of the finite lanes.
+            for (i, &s) in special_patterns(fmt).iter().enumerate() {
+                a[i * 2] = s;
+                b[i * 2 + 1] = s;
+            }
+            let resp = svc
+                .divide_request_blocking(DivRequest::new(fmt, rm, a.clone(), b.clone()))
+                .unwrap();
+            assert_eq!(resp.fmt, fmt);
+            assert_eq!(resp.rm, rm);
+            for i in 0..a.len() {
+                let want = gold.div_bits(a[i], b[i], fmt, rm);
+                let got = resp.bits[i];
+                match tsdiv::fp::ulp_diff(got, want, fmt) {
+                    // 53-bit reciprocal precision: exact for the ≤24-bit
+                    // significands, ≤2 ulp at f64's precision edge.
+                    Some(u) => assert!(
+                        u <= 2,
+                        "{}/{rm:?} lane {i}: {got:#x} vs {want:#x} ({u} ulp)",
+                        fmt.name()
+                    ),
+                    None => assert!(
+                        unpack(got, fmt).class == Class::NaN
+                            && unpack(want, fmt).class == Class::NaN,
+                        "{}/{rm:?} lane {i}: NaN mismatch",
+                        fmt.name()
+                    ),
+                }
+            }
+        }
+    }
+    assert_eq!(svc.metrics().failures, 0);
+    svc.shutdown();
+}
+
 #[test]
 fn pjrt_backend_service_roundtrip() {
     if !artifacts_available() {
@@ -73,12 +132,23 @@ fn pjrt_backend_service_roundtrip() {
     let svc = DivisionService::start(cfg(1, 1024), BackendChoice::Pjrt).unwrap();
     let a: Vec<f32> = (1..=100).map(|i| i as f32).collect();
     let b: Vec<f32> = (1..=100).map(|i| ((i % 5) + 1) as f32).collect();
-    let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+    let out = svc
+        .divide_request_blocking(DivRequest::from_f32(&a, &b))
+        .unwrap()
+        .to_f32()
+        .unwrap();
     for i in 0..100 {
         let want = a[i] / b[i];
         let ulp = (out[i].to_bits() as i64 - want.to_bits() as i64).unsigned_abs();
         assert!(ulp <= 1, "lane {i}: {} vs {want}", out[i]);
     }
+    // The PJRT artifact only serves f32/nearest: other keys must fail
+    // the batch cleanly (backend error, not a wedged service).
+    let err = svc
+        .divide_request_blocking(DivRequest::from_f64(&[1.0], &[3.0]))
+        .unwrap_err();
+    assert!(err.contains("f32"), "{err}");
+    assert!(svc.metrics().failures > 0);
     svc.shutdown();
 }
 
@@ -95,7 +165,11 @@ fn worker_survives_nan_heavy_batches() {
     .unwrap();
     let a = vec![f32::NAN, 1.0, 0.0, f32::INFINITY, -1.0, 5.5];
     let b = vec![1.0, 0.0, 0.0, f32::INFINITY, f32::NAN, -0.0];
-    let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+    let out = svc
+        .divide_request_blocking(DivRequest::from_f32(&a, &b))
+        .unwrap()
+        .to_f32()
+        .unwrap();
     for i in 0..a.len() {
         let want = a[i] / b[i];
         if want.is_nan() {
@@ -105,7 +179,13 @@ fn worker_survives_nan_heavy_batches() {
         }
     }
     // Service still healthy afterwards.
-    assert_eq!(svc.divide_blocking(vec![8.0], vec![2.0]).unwrap(), vec![4.0]);
+    assert_eq!(
+        svc.divide_request_blocking(DivRequest::from_f32(&[8.0], &[2.0]))
+            .unwrap()
+            .to_f32()
+            .unwrap(),
+        vec![4.0]
+    );
     assert_eq!(svc.metrics().failures, 0);
     svc.shutdown();
 }
@@ -123,7 +203,11 @@ fn ilm_backend_service_accuracy_band() {
     let mut rng = Rng::new(12);
     let a: Vec<f32> = (0..500).map(|_| rng.f32_log_uniform(-8, 8)).collect();
     let b: Vec<f32> = (0..500).map(|_| rng.f32_log_uniform(-8, 8)).collect();
-    let out = svc.divide_blocking(a.clone(), b.clone()).unwrap();
+    let out = svc
+        .divide_request_blocking(DivRequest::from_f32(&a, &b))
+        .unwrap()
+        .to_f32()
+        .unwrap();
     for i in 0..a.len() {
         let want = a[i] / b[i];
         let rel = ((out[i] - want) / want).abs();
@@ -150,7 +234,7 @@ fn throughput_scales_with_workers() {
         let t0 = std::time::Instant::now();
         let tickets: Vec<_> = (0..32)
             .map(|_| loop {
-                match svc.submit(a.clone(), b.clone()) {
+                match svc.submit_request(DivRequest::from_f32(&a, &b)) {
                     Ok(t) => break t,
                     Err(SubmitError::Busy) => std::thread::yield_now(),
                     Err(e) => panic!("{e}"),

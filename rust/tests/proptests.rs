@@ -213,7 +213,7 @@ fn prop_div_bits_batch_bit_identical_to_scalar_f32_and_f64() {
                     1 => bb = specials[d.choose_idx(specials.len())],
                     2 => {
                         // Repeated divisor → exercises the batch path's
-                        // one-entry reciprocal cache.
+                        // N-way reciprocal cache.
                         if let Some(&prev) = b.last() {
                             bb = prev;
                         }
@@ -247,7 +247,7 @@ fn prop_div_bits_batch_bit_identical_to_scalar_f32_and_f64() {
 
 #[test]
 fn prop_service_roundtrip_preserves_lane_order() {
-    use tsdiv::coordinator::{BackendChoice, DivisionService, ServiceConfig};
+    use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
     let svc = DivisionService::start(
         ServiceConfig {
             workers: 3,
@@ -266,8 +266,10 @@ fn prop_service_roundtrip_preserves_lane_order() {
         let a: Vec<f32> = (0..n).map(|i| i as f32 + 1.0).collect();
         let b: Vec<f32> = (0..n).map(|_| d.f64_range(0.5, 4.0) as f32).collect();
         let out = svc
-            .divide_blocking(a.clone(), b.clone())
-            .map_err(|e| e.to_string())?;
+            .divide_request_blocking(DivRequest::from_f32(&a, &b))
+            .map_err(|e| e.to_string())?
+            .to_f32()
+            .expect("binary32 response");
         check_that!(out.len() == n);
         for i in 0..n {
             let want = a[i] / b[i];
@@ -275,6 +277,80 @@ fn prop_service_roundtrip_preserves_lane_order() {
                 (out[i] - want).abs() <= want.abs() * 1e-6,
                 "lane {i} out of order or wrong"
             );
+        }
+        Ok(())
+    });
+    svc.shutdown();
+}
+
+/// The tentpole invariant of the typed service: a mixed-format,
+/// mixed-rounding request stream (specials included) served by the
+/// exactly-rounded gold backend is **bit-identical** to running
+/// `longdiv` per lane, and every response routes back to the ticket of
+/// the request that produced it, with the request's format and rounding
+/// echoed.
+#[test]
+fn prop_mixed_format_stream_bit_identical_to_longdiv_gold() {
+    use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
+    use tsdiv::fp::ALL_FORMATS;
+    use tsdiv::harness::special_patterns;
+    let svc = DivisionService::start(
+        ServiceConfig {
+            workers: 3,
+            max_batch: 61, // odd budget → batches split mid-stream
+            max_wait: std::time::Duration::from_micros(200),
+            queue_capacity: 512,
+        },
+        BackendChoice::Gold,
+    )
+    .unwrap();
+    forall(Config::named("mixed-format stream == longdiv per lane").cases(25), |d| {
+        // A burst of interleaved requests across formats and modes.
+        let nreq = d.range_u64(2, 12) as usize;
+        let mut inflight = Vec::new();
+        for _ in 0..nreq {
+            let fmt = ALL_FORMATS[d.choose_idx(4)];
+            let rm = Rounding::ALL[d.choose_idx(4)];
+            let specials = special_patterns(fmt);
+            let n = d.range_u64(1, 50) as usize;
+            let mut a = Vec::with_capacity(n);
+            let mut b = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut ab = d.u64() & fmt.width_mask();
+                let mut bb = d.u64() & fmt.width_mask();
+                match i % 4 {
+                    0 => ab = specials[d.choose_idx(specials.len())],
+                    1 => bb = specials[d.choose_idx(specials.len())],
+                    _ => {}
+                }
+                a.push(ab);
+                b.push(bb);
+            }
+            let ticket = svc
+                .submit_request(DivRequest::new(fmt, rm, a.clone(), b.clone()))
+                .expect("queue sized for the burst");
+            inflight.push((ticket, fmt, rm, a, b));
+        }
+        // Ticket ids must be distinct (response routing is per id).
+        let mut ids: Vec<u64> = inflight.iter().map(|(t, ..)| t.request_id()).collect();
+        ids.dedup();
+        check_that!(ids.len() == nreq);
+        let mut gold = LongDivider::new();
+        for (ticket, fmt, rm, a, b) in inflight {
+            let resp = ticket.wait().map_err(|e| e.to_string())?;
+            check_that!(resp.fmt == fmt && resp.rm == rm, "typed echo");
+            check_that!(resp.lanes() == a.len());
+            for i in 0..a.len() {
+                let want = gold.div_bits(a[i], b[i], fmt, rm);
+                check_that!(
+                    resp.bits[i] == want,
+                    "{}/{:?} lane {i}: {:#x} vs {:#x}",
+                    fmt.name(),
+                    rm,
+                    resp.bits[i],
+                    want
+                );
+            }
         }
         Ok(())
     });
