@@ -2,10 +2,13 @@
 //!
 //! The paper's introduction motivates hardware FP division with exactly
 //! this workload ("K-Means Clustering and QR Decomposition"). Here the
-//! centroid-update divisions (sum / count) and the distance-normalization
-//! divisions run through the **coordinator service** — batched, on the
-//! PJRT AOT artifact when `artifacts/` is built, otherwise on the native
-//! bit-exact datapath — proving all three layers compose.
+//! centroid-update divisions (sum / count) run through the
+//! **coordinator service** — batched, on the PJRT AOT artifact when
+//! `artifacts/` is built, otherwise on the native staged-kernel datapath
+//! as **bfloat16 requests** (centroids tolerate bf16's 8-bit
+//! significand easily, and ML-shaped traffic is exactly where bf16
+//! division shows up) — proving all layers, and the multi-format path,
+//! compose end to end.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example kmeans
@@ -14,6 +17,7 @@
 use std::time::{Duration, Instant};
 
 use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
+use tsdiv::fp::{decode_f32, encode_f32, BF16};
 use tsdiv::runtime::artifacts_available;
 use tsdiv::util::rng::Rng;
 use tsdiv::util::table::{sig, Align, Table};
@@ -24,15 +28,24 @@ const POINTS: usize = 20_000;
 const MAX_ITERS: usize = 25;
 
 fn main() {
-    let backend = if artifacts_available() {
-        println!("backend: PJRT (AOT JAX/Pallas artifact — L1+L2+L3 composed)");
-        BackendChoice::Pjrt
+    // The PJRT artifact serves f32/nearest only; the native path takes
+    // the centroid divisions as bf16 requests to exercise the typed
+    // multi-format pipeline end to end.
+    let (backend, use_bf16) = if artifacts_available() {
+        println!("backend: PJRT (AOT JAX/Pallas artifact — L1+L2+L3 composed), f32 requests");
+        (BackendChoice::Pjrt, false)
     } else {
-        println!("backend: native bit-exact datapath (run `make artifacts` for PJRT)");
-        BackendChoice::Native {
-            order: 5,
-            ilm_iterations: None,
-        }
+        println!(
+            "backend: native staged-kernel datapath, bf16 centroid divisions \
+             (run `make artifacts` for PJRT)"
+        );
+        (
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+            true,
+        )
     };
     let svc = DivisionService::start(
         ServiceConfig {
@@ -116,11 +129,27 @@ fn main() {
             }
         }
         divisions_served += num.len() as u64;
-        let q = svc
-            .divide_request_blocking(DivRequest::from_f32(&num, &den))
-            .expect("centroid division batch")
-            .to_f32()
-            .expect("binary32 response");
+        // bf16 path: pack the f32 sums/counts into bfloat16 lanes, divide
+        // in bf16, decode the quotients back (exact — every bf16 value is
+        // an f32). Centroids only steer the assignment step, so bf16's
+        // ~3 significant decimal digits cost nothing against blob spacing.
+        let q: Vec<f32> = if use_bf16 {
+            let nb: Vec<u16> = num.iter().map(|&x| encode_f32(x, BF16) as u16).collect();
+            let db: Vec<u16> = den.iter().map(|&x| encode_f32(x, BF16) as u16).collect();
+            let resp = svc
+                .divide_request_blocking(DivRequest::from_bf16_bits(&nb, &db))
+                .expect("bf16 centroid division batch");
+            resp.to_u16_bits()
+                .expect("bfloat16 response")
+                .iter()
+                .map(|&b| decode_f32(b as u64, BF16))
+                .collect()
+        } else {
+            svc.divide_request_blocking(DivRequest::from_f32(&num, &den))
+                .expect("centroid division batch")
+                .to_f32()
+                .expect("binary32 response")
+        };
         for ci in 0..K {
             for j in 0..DIM {
                 est[ci][j] = q[ci * DIM + j];
@@ -160,6 +189,8 @@ fn main() {
         .aligns(&[Align::Left, Align::Right]);
     t.row(&["points × dims".into(), format!("{POINTS} × {DIM}")]);
     t.row(&["clusters".into(), K.to_string()]);
+    let fmt_label = if use_bf16 { "bf16 (typed requests)" } else { "f32" };
+    t.row(&["division format".into(), fmt_label.into()]);
     t.row(&["iterations run".into(), inertia_log.len().to_string()]);
     t.row(&["final inertia".into(), sig(*inertia_log.last().unwrap(), 6)]);
     t.row(&["cluster accuracy (majority map)".into(), format!("{:.2}%", accuracy * 100.0)]);

@@ -158,18 +158,20 @@ fn main() {
         println!("PJRT backend skipped: run `make artifacts` first.");
     }
 
-    // Batched vs scalar worker datapath through the full service stack:
-    // identical coordinator, identical load, only the worker's division
-    // loop differs (div_bits_batch vs per-lane div_bits).
+    // Worker datapaths through the full service stack: identical
+    // coordinator, identical load, only the worker's division loop
+    // differs — the staged SoA kernel driven directly (Kernel), the
+    // same kernel behind divisor grouping (Native), and the per-lane
+    // scalar loop (NativeScalar).
     let mut t = Table::new(
-        "worker datapath: div_bits_batch vs scalar loop (2 workers, 8 clients × 256 lanes)",
+        "worker datapath: kernel vs batched vs scalar (2 workers, 8 clients × 256 lanes)",
         &["datapath", "div/s", "p50 ms", "p99 ms", "lanes/batch"],
     )
     .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
     let mut pair: Vec<(&str, f64)> = Vec::new();
     for (label, backend) in [
         (
-            "batched",
+            "batched (native)",
             BackendChoice::Native {
                 order: 5,
                 ilm_iterations: None,
@@ -180,6 +182,13 @@ fn main() {
             BackendChoice::NativeScalar {
                 order: 5,
                 ilm_iterations: None,
+            },
+        ),
+        (
+            "kernel (staged SoA)",
+            BackendChoice::Kernel {
+                order: 5,
+                kernel: tsdiv::kernel::KernelConfig::default(),
             },
         ),
     ] {
@@ -195,7 +204,9 @@ fn main() {
     }
     t.print();
     let speedup = pair[0].1 / pair[1].1;
-    println!("batched/scalar service throughput: {speedup:.2}x\n");
+    let kernel_speedup = pair[2].1 / pair[1].1;
+    println!("batched/scalar service throughput: {speedup:.2}x");
+    println!("kernel/scalar  service throughput: {kernel_speedup:.2}x\n");
 
     // Multi-format traffic through the typed request API: homogeneous
     // loads per format, then the interleaved mix (which the batcher must
@@ -246,7 +257,9 @@ fn main() {
     j.set("request_lanes", 256u64.into());
     j.set("batched_div_per_s", pair[0].1.into());
     j.set("scalar_div_per_s", pair[1].1.into());
+    j.set("kernel_div_per_s", pair[2].1.into());
     j.set("batched_over_scalar", speedup.into());
+    j.set("kernel_over_scalar", kernel_speedup.into());
     j.set("mixed_format_div_per_s", mixed_thr.into());
     tsdiv::harness::write_bench_json("coordinator_serve", &j);
 

@@ -186,26 +186,51 @@ fn main() {
 
     // The same datapath across every format the service offers — the
     // format-parametric claim behind the typed DivRequest API: one
-    // monomorphized batch loop serves f16/bf16/f32/f64.
+    // staged kernel serves f16/bf16/f32/f64. Per format, the
+    // lane-parallel Kernel backend (staged SoA pipeline) against the
+    // NativeScalar baseline (per-lane div_bits loop) — the
+    // worker-datapath comparison the kernel refactor is about.
     println!();
     let mut t = Table::new(
-        "div_bits_batch by format (4096 lanes, taylor exact)",
-        &["format", "batch Mdiv/s"],
+        "Kernel vs NativeScalar worker datapath by format (4096 lanes, taylor exact)",
+        &["format", "scalar Mdiv/s", "kernel Mdiv/s", "speedup"],
     )
-    .aligns(&[Align::Left, Align::Right]);
-    let mut fmt_rows: Vec<(String, f64)> = Vec::new();
+    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    use tsdiv::coordinator::{Backend, KernelBackend, ScalarNativeBackend};
+    let mut fmt_rows: Vec<(String, f64, f64)> = Vec::new();
     for fmt in tsdiv::fp::ALL_FORMATS {
         let (fa, fb) = tsdiv::harness::gen_bits_batch(fmt, 4096, 8, 21);
-        let mut d = TaylorDivider::paper_exact();
-        let mut fout = vec![0u64; fa.len()];
-        let m = timed_section(&format!("{}: div_bits_batch × 4096", fmt.name()), || {
-            d.div_bits_batch(&fa, &fb, fmt, Rounding::NearestEven, &mut fout);
-            tsdiv::util::black_box(fout[0]);
+        let mut scalar = ScalarNativeBackend::new(5, None);
+        let mut kern = KernelBackend::new(5, tsdiv::kernel::KernelConfig::default());
+        let m_scalar = timed_section(&format!("{}: NativeScalar × 4096", fmt.name()), || {
+            let q = scalar
+                .divide(&fa, &fb, fmt, Rounding::NearestEven)
+                .expect("scalar backend");
+            tsdiv::util::black_box(q[0]);
         });
-        fmt_rows.push((fmt.name().to_string(), m.items_per_sec(4096)));
+        let m_kernel = timed_section(&format!("{}: Kernel × 4096", fmt.name()), || {
+            let q = kern
+                .divide(&fa, &fb, fmt, Rounding::NearestEven)
+                .expect("kernel backend");
+            tsdiv::util::black_box(q[0]);
+        });
+        // Bit-identity guard on the benchmarked operands.
+        let qs = scalar.divide(&fa, &fb, fmt, Rounding::NearestEven).unwrap();
+        let qk = kern.divide(&fa, &fb, fmt, Rounding::NearestEven).unwrap();
+        assert_eq!(qs, qk, "{}: kernel != scalar on bench workload", fmt.name());
+        fmt_rows.push((
+            fmt.name().to_string(),
+            m_scalar.items_per_sec(4096),
+            m_kernel.items_per_sec(4096),
+        ));
     }
-    for (name, thr) in &fmt_rows {
-        t.row(&[name.clone(), format!("{:.2}", thr / 1e6)]);
+    for (name, s, k) in &fmt_rows {
+        t.row(&[
+            name.clone(),
+            format!("{:.2}", s / 1e6),
+            format!("{:.2}", k / 1e6),
+            format!("{:.2}x", k / s),
+        ]);
     }
     t.print();
 
@@ -213,8 +238,10 @@ fn main() {
     let mut j = Json::obj();
     j.set("bench", "divider_throughput".into());
     j.set("lanes", lanes.into());
-    for (name, thr) in &fmt_rows {
-        j.set(&format!("batch_div_per_s_{name}"), (*thr).into());
+    for (name, s, k) in &fmt_rows {
+        j.set(&format!("scalar_div_per_s_{name}"), (*s).into());
+        j.set(&format!("kernel_div_per_s_{name}"), (*k).into());
+        j.set(&format!("kernel_over_scalar_{name}"), (k / s).into());
     }
     let mut arr = Vec::new();
     for (label, s, bthr) in &rows {

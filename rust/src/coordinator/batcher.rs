@@ -8,6 +8,8 @@
 //! `div_bits_batch` call. Each bucket accumulates to the lane budget
 //! independently; lane order within a request is always preserved.
 
+use std::time::{Duration, Instant};
+
 use super::request::BatchKey;
 
 /// A request's lanes plus its index for response routing. Operands are
@@ -25,6 +27,10 @@ pub struct Batch {
     pub key: BatchKey,
     pub items: Vec<BatchItem>,
     pub lanes: usize,
+    /// When the oldest (first) item entered this batch — the per-key
+    /// clock behind [`BatchAssembler::take_expired`]. `None` while
+    /// empty.
+    pub opened_at: Option<Instant>,
 }
 
 impl Batch {
@@ -33,7 +39,14 @@ impl Batch {
             key,
             items: Vec::new(),
             lanes: 0,
+            opened_at: None,
         }
+    }
+
+    /// Age of the oldest lane in this batch (zero when empty).
+    pub fn age(&self, now: Instant) -> Duration {
+        self.opened_at
+            .map_or(Duration::ZERO, |t| now.saturating_duration_since(t))
     }
 
     pub fn is_empty(&self) -> bool {
@@ -114,7 +127,12 @@ impl BatchAssembler {
         debug_assert_eq!(item.a.len(), item.b.len());
         let max_lanes = self.max_lanes;
         let lanes = item.a.len();
+        let now = Instant::now();
         let bucket = self.bucket_mut(key);
+        if bucket.items.is_empty() {
+            // First lane of this key's window: start its per-key clock.
+            bucket.opened_at = Some(now);
+        }
         let flushed = if lanes >= max_lanes {
             // An oversize single request: emit the bucket with the
             // oversize item appended (order kept) rather than splitting
@@ -123,10 +141,12 @@ impl BatchAssembler {
             bucket.items.push(item);
             Some(std::mem::replace(bucket, Batch::new(key)))
         } else if bucket.lanes + lanes > max_lanes {
-            // Would overflow: ship what accumulated, start fresh.
+            // Would overflow: ship what accumulated, start fresh (the
+            // fresh bucket's clock starts with this item).
             let done = std::mem::replace(bucket, Batch::new(key));
             bucket.lanes = lanes;
             bucket.items.push(item);
+            bucket.opened_at = Some(now);
             Some(done)
         } else {
             bucket.lanes += lanes;
@@ -146,7 +166,25 @@ impl BatchAssembler {
         flushed
     }
 
-    /// Flush every non-empty bucket (deadline expiry / shutdown).
+    /// Flush only the buckets whose **oldest lane** has waited at least
+    /// `max_age` — the per-key `max_wait`: a rare `(Format, Rounding)`
+    /// bucket ships when *its* clock expires instead of riding the whole
+    /// coalescing window opened by busier keys, and fresh buckets keep
+    /// coalescing instead of being force-flushed alongside it.
+    pub fn take_expired(&mut self, max_age: Duration) -> Vec<Batch> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        for b in self.buckets.iter_mut() {
+            if !b.is_empty() && b.age(now) >= max_age {
+                self.pending -= b.lanes;
+                let key = b.key;
+                out.push(std::mem::replace(b, Batch::new(key)));
+            }
+        }
+        out
+    }
+
+    /// Flush every non-empty bucket (idle-worker flush / shutdown).
     pub fn take_all(&mut self) -> Vec<Batch> {
         self.pending = 0;
         self.buckets
@@ -265,6 +303,50 @@ mod tests {
         assert_eq!(bs.len(), 1);
         assert_eq!(bs[0].lanes, 5);
         assert!(asm.take_all().is_empty());
+    }
+
+    #[test]
+    fn stale_bf16_lane_expires_alone_among_f32_traffic() {
+        // One bf16 lane arrives, then steady f32 traffic keeps the
+        // window busy. Per-key expiry must ship the bf16 bucket once its
+        // own clock runs out — and ONLY that bucket, leaving the fresher
+        // f32 lanes to keep coalescing.
+        let kbf16 = BatchKey::new(crate::fp::BF16, Rounding::NearestEven);
+        let mut asm = BatchAssembler::new(1 << 20);
+        asm.push(kbf16, item(1, 1));
+        std::thread::sleep(Duration::from_millis(60));
+        // Fresh f32 traffic after the stale lane aged. The expiry
+        // threshold sits halfway between the bf16 lane's age (≥ 60 ms)
+        // and the f32 lanes' (µs) so scheduler jitter cannot flip it.
+        asm.push(key32(), item(2, 4));
+        asm.push(key32(), item(3, 4));
+        assert!(asm.take_expired(Duration::from_secs(60)).is_empty());
+        let expired = asm.take_expired(Duration::from_millis(30));
+        assert_eq!(expired.len(), 1, "only the stale bucket ships");
+        assert_eq!(expired[0].key, kbf16);
+        assert_eq!(expired[0].lanes, 1);
+        // The f32 bucket stayed behind, still coalescing.
+        assert_eq!(asm.pending_lanes(), 8);
+        let rest = asm.take_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].key, key32());
+    }
+
+    #[test]
+    fn per_key_clock_restarts_after_flush() {
+        let mut asm = BatchAssembler::new(8);
+        assert!(asm.push(key32(), item(1, 4)).is_none());
+        // Exact fill flushes; the replacement bucket is empty and has no
+        // clock until the next push.
+        let full = asm.push(key32(), item(2, 4)).unwrap();
+        assert!(full.opened_at.is_some());
+        assert!(asm.take_expired(Duration::ZERO).is_empty(), "empty buckets never expire");
+        asm.push(key32(), item(3, 2));
+        // A zero max_age expires anything with at least one lane.
+        let b = asm.take_expired(Duration::ZERO);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].lanes, 2);
+        assert_eq!(asm.pending_lanes(), 0);
     }
 
     #[test]

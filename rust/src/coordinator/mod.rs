@@ -10,13 +10,19 @@
 //!     │ from_f16_bits/from_bf16_bits                       │ bucket by (Format, Rounding),
 //!     │ (legacy submit(Vec<f32>,..)                        │ coalesce ≤ max_batch per key,
 //!     │  = deprecated wrapper)                             │ adaptive flush: ship on full
-//!     │                                                    │ bucket / idle worker / max_wait
+//!     │                                                    │ bucket / idle worker / per-key
+//!     │                                                    │ max_wait (each bucket's own clock)
 //!     │                                     work queue ──► worker pool
-//!     │                                       homogeneous  │ Backend::divide(bits, fmt, rm):
-//!     │                                       batches      │  Native (bit-exact Taylor/ILM
-//!     │                                                    │  `div_bits_batch`, lanes grouped
-//!     │                                                    │  by divisor), Gold (longdiv),
-//!     │                                                    │  or PJRT (AOT artifact, f32)
+//!     │                                       homogeneous  │ Backend::divide(bits, fmt, rm)
+//!     │                                       batches      │
+//!     │        ┌─ staged SoA kernel (crate::kernel) ─┐     │ backends:
+//!     │        │ plan ─► seed ─► power ─► mul_round  │     │  Kernel  = the staged kernel, tiles
+//!     │        │ unpack,  PLA     Taylor    final ·, │     │            of KernelConfig::tile lanes
+//!     │        │ specials seg     powers    round    │     │  Native  = same kernel + divisor
+//!     │        │ aside    lookup  (odd/even) pack    │     │            grouping permutation
+//!     │        └─ 8-lane tiles, 8-way recip cache ───┘     │  NativeScalar = per-lane div_bits
+//!     │                                                    │  Gold    = longdiv (exactly rounded)
+//!     │                                                    │  Pjrt    = AOT artifact (f32/nearest)
 //!     └──◄── DivTicket::wait() → DivResponse{fmt,rm,bits} ─┘
 //! ```
 //!
@@ -24,6 +30,15 @@
 //! binary32/binary64 requests under any rounding mode — rides the same
 //! `div_bits_batch` lanes: the batcher never mixes keys inside a batch,
 //! so each backend call is monomorphic over one `(Format, Rounding)`.
+//!
+//! The `Kernel`, `Native` and `NativeScalar` backends are the **same
+//! datapath** at three loop shapes: `Kernel` drives the staged
+//! structure-of-arrays pipeline directly, `Native` wraps the identical
+//! pipeline in a divisor-grouping permutation (repeats arrive in runs,
+//! so the kernel's reciprocal cache hits every repeat), and
+//! `NativeScalar` is the pre-batching per-lane loop kept as the serving
+//! benches' baseline. All three are bit-identical by property test;
+//! `Gold` is the exactly-rounded reference they are measured against.
 //!
 //! * [`request`] — the typed request/response surface ([`DivRequest`],
 //!   [`DivResponse`], [`BatchKey`]);
@@ -45,7 +60,9 @@ pub use request::{BatchKey, DivRequest, DivResponse};
 pub use service::{
     DivTicket, DivisionService, MetricsSnapshot, ServiceConfig, SubmitError, Ticket,
 };
-pub use worker::{Backend, BackendChoice, GoldBackend, NativeBackend, ScalarNativeBackend};
+pub use worker::{
+    Backend, BackendChoice, GoldBackend, KernelBackend, NativeBackend, ScalarNativeBackend,
+};
 
 #[cfg(test)]
 mod tests {

@@ -220,6 +220,7 @@ impl DivisionService {
     /// Start the batcher thread and `cfg.workers` worker threads.
     pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> Result<Self> {
         cfg.validate()?;
+        backend.validate()?;
         let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
         let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
         let work_rx = Arc::new(Mutex::new(work_rx));
@@ -230,10 +231,15 @@ impl DivisionService {
         // batches, with an adaptive flush policy (§Perf):
         //
         // * a bucket reaching the lane budget ships immediately;
+        // * every bucket carries its own clock: once its **oldest** lane
+        //   has waited `max_wait`, that bucket ships alone (per-key
+        //   max_wait) — a rare-(Format,Rounding) lane no longer rides a
+        //   window kept open by busier keys, and fresh buckets keep
+        //   coalescing instead of being force-flushed alongside it;
         // * when the queue runs dry, pending work ships only if a worker
         //   is idle to take it (otherwise flushing buys no latency — the
-        //   window stays open, bounded by max_wait, so deeper batches
-        //   form while every worker is busy);
+        //   buckets stay open, each bounded by its own max_wait, so
+        //   deeper batches form while every worker is busy);
         // * the lane budget itself adapts to load: spare capacity (all
         //   workers idle, shallow queue) quarters the budget so bursts
         //   split across idle workers instead of serializing into one.
@@ -264,14 +270,13 @@ impl DivisionService {
                         dispatch(batch, responders);
                     }
                 };
-                'outer: loop {
-                    // Block for the first submission of a batch window.
-                    let sub = match rx.recv_timeout(Duration::from_millis(100)) {
-                        Ok(s) => s,
-                        Err(RecvTimeoutError::Timeout) => continue,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    };
-                    // Retune the lane budget from load at window start.
+                // Retune the lane budget from load: spare capacity (all
+                // workers idle, shallow queue) quarters the budget so
+                // bursts split across idle workers; saturation restores
+                // the full budget. Called at window start AND on every
+                // drain pass — sustained load must not pin a budget
+                // picked during an idle burst-start.
+                let retune = |asm: &mut BatchAssembler| {
                     let spare_capacity = m.idle_workers.load(Ordering::Relaxed) >= worker_count
                         && m.queue_depth.load(Ordering::Relaxed) <= worker_count;
                     asm.set_max_lanes(if spare_capacity {
@@ -279,13 +284,24 @@ impl DivisionService {
                     } else {
                         max_batch
                     });
+                };
+                'outer: loop {
+                    // Block for the first submission of a batch window.
+                    let sub = match rx.recv_timeout(Duration::from_millis(100)) {
+                        Ok(s) => s,
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    };
+                    retune(&mut asm);
                     m.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     responders.insert(sub.item.request_id, sub.responder);
                     if let Some(batch) = asm.push(sub.key, sub.item) {
                         dispatch(batch, &mut responders);
                     }
-                    // Drain whatever is queued right now, up to max_wait.
-                    let deadline = Instant::now() + max_wait;
+                    // Drain the queue while work is pending. Each
+                    // bucket's own clock (started at its first lane)
+                    // bounds its latency: take_expired ships exactly
+                    // the buckets whose oldest lane waited max_wait.
                     loop {
                         match rx.try_recv() {
                             Ok(sub) => {
@@ -294,23 +310,18 @@ impl DivisionService {
                                 if let Some(batch) = asm.push(sub.key, sub.item) {
                                     dispatch(batch, &mut responders);
                                 }
-                                if Instant::now() >= deadline {
-                                    flush(&mut asm, &mut responders);
-                                    break;
-                                }
                             }
                             Err(std::sync::mpsc::TryRecvError::Empty) => {
                                 if asm.pending_lanes() == 0 {
                                     break;
                                 }
-                                // Queue dry. Ship if a worker can start
-                                // on it right now or the window expired;
-                                // otherwise hold the window open so more
-                                // lanes coalesce while all workers are
-                                // busy anyway.
-                                if m.idle_workers.load(Ordering::Relaxed) > 0
-                                    || Instant::now() >= deadline
-                                {
+                                // Queue dry. Ship everything if a worker
+                                // can start on it right now; otherwise
+                                // hold the buckets open so more lanes
+                                // coalesce while all workers are busy —
+                                // per-key expiry below still bounds
+                                // every bucket's wait.
+                                if m.idle_workers.load(Ordering::Relaxed) > 0 {
                                     flush(&mut asm, &mut responders);
                                     break;
                                 }
@@ -320,6 +331,10 @@ impl DivisionService {
                                 flush(&mut asm, &mut responders);
                                 break 'outer;
                             }
+                        }
+                        retune(&mut asm);
+                        for batch in asm.take_expired(max_wait) {
+                            dispatch(batch, &mut responders);
                         }
                     }
                 }
@@ -568,6 +583,39 @@ mod tests {
             };
             assert!(e.to_string().contains("service config"), "{e}");
         }
+    }
+
+    #[test]
+    fn kernel_backend_serves_and_bad_kernel_config_rejected_up_front() {
+        use crate::kernel::KernelConfig;
+        let s = DivisionService::start(
+            ServiceConfig::default(),
+            BackendChoice::Kernel {
+                order: 5,
+                kernel: KernelConfig::default(),
+            },
+        )
+        .unwrap();
+        let resp = s
+            .divide_request_blocking(DivRequest::from_f32(&[9.0, 6.0, 1.0], &[3.0, 2.0, 4.0]))
+            .unwrap();
+        assert_eq!(resp.to_f32().unwrap(), vec![3.0, 3.0, 0.25]);
+        s.shutdown();
+        let r = DivisionService::start(
+            ServiceConfig::default(),
+            BackendChoice::Kernel {
+                order: 5,
+                kernel: KernelConfig {
+                    tile: 0,
+                    ilm_iterations: None,
+                },
+            },
+        );
+        let e = match r {
+            Err(e) => e,
+            Ok(_) => panic!("zero-tile kernel config must be rejected"),
+        };
+        assert!(e.to_string().contains("kernel config"), "{e}");
     }
 
     #[test]

@@ -4,15 +4,16 @@
 //! bit-pattern lanes (see [`super::batcher::Batch`]) plus its
 //! `(Format, Rounding)` key. Implementations:
 //!
-//! * [`NativeBackend`] — the bit-exact Rust Taylor/ILM datapath driven
-//!   through the **batched** entry point
-//!   ([`crate::divider::Divider::div_bits_batch`]): one backend borrow,
-//!   hoisted per-op checks, lanes grouped by divisor so the divider's
-//!   reciprocal cache hits on repeated-divisor traffic, packing buffers
-//!   reused across batches;
+//! * [`KernelBackend`] — the staged SoA kernel ([`crate::kernel`])
+//!   driven directly: plan → seed → power → mul_round over lane tiles,
+//!   tile width and ILM budget from [`crate::kernel::KernelConfig`];
+//! * [`NativeBackend`] — the same staged kernel behind
+//!   [`crate::divider::Divider::div_bits_batch`], plus a
+//!   divisor-grouping permutation so repeated divisors arrive in runs
+//!   and the kernel's reciprocal cache hits on every repeat;
 //! * [`ScalarNativeBackend`] — the same datapath one lane at a time (the
-//!   pre-batching worker loop), kept as the baseline the coordinator
-//!   bench compares against;
+//!   pre-batching worker loop), kept as the baseline the serving benches
+//!   compare against;
 //! * [`GoldBackend`] — exactly-rounded digit recurrence
 //!   ([`crate::divider::longdiv::LongDivider`]); slow, but the service's
 //!   routing and format threading can be property-tested bit-for-bit
@@ -28,6 +29,7 @@
 use crate::divider::longdiv::LongDivider;
 use crate::divider::{BackendKind, Divider, TaylorDivider};
 use crate::fp::{Format, Rounding, F32};
+use crate::kernel::KernelConfig;
 use crate::taylor::TaylorConfig;
 use crate::util::error::Result;
 
@@ -63,6 +65,10 @@ pub enum BackendChoice {
         order: u32,
         ilm_iterations: Option<u32>,
     },
+    /// The staged SoA kernel driven directly (no divisor-grouping
+    /// permutation): lane-parallel plan → seed → power → mul_round
+    /// tiles, configured by [`KernelConfig`].
+    Kernel { order: u32, kernel: KernelConfig },
     /// Exactly-rounded digit recurrence (the gold reference) as a
     /// service backend — for routing/bit-identity tests.
     Gold,
@@ -72,6 +78,16 @@ pub enum BackendChoice {
 }
 
 impl BackendChoice {
+    /// Reject configurations that could only fail later inside a worker
+    /// thread; called by `DivisionService::start` alongside
+    /// `ServiceConfig::validate`.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            BackendChoice::Kernel { kernel, .. } => kernel.validate(),
+            _ => Ok(()),
+        }
+    }
+
     /// Instantiate inside the worker thread.
     pub fn build(&self) -> Result<Box<dyn Backend>> {
         match *self {
@@ -83,6 +99,10 @@ impl BackendChoice {
                 order,
                 ilm_iterations,
             } => Ok(Box::new(ScalarNativeBackend::new(order, ilm_iterations))),
+            BackendChoice::Kernel { order, kernel } => {
+                kernel.validate()?;
+                Ok(Box::new(KernelBackend::new(order, kernel)))
+            }
             BackendChoice::Gold => Ok(Box::new(GoldBackend::new())),
             BackendChoice::Pjrt => Ok(Box::new(PjrtBackend::load_default()?)),
         }
@@ -194,6 +214,42 @@ impl Backend for NativeBackend {
 
     fn describe(&self) -> String {
         format!("native[{}]", self.divider.name())
+    }
+}
+
+/// The staged SoA kernel as a service backend: each assembled batch
+/// runs one `kernel::divide_batch` pipeline (plan → seed → power →
+/// mul_round in `KernelConfig::tile`-lane tiles). Unlike
+/// [`NativeBackend`] there is no divisor-grouping permutation — the
+/// kernel's own 8-way reciprocal cache captures repeated divisors, and
+/// lanes stay in arrival order throughout.
+pub struct KernelBackend {
+    divider: TaylorDivider,
+    cfg: KernelConfig,
+}
+
+impl KernelBackend {
+    pub fn new(order: u32, cfg: KernelConfig) -> Self {
+        let mut divider = native_divider(order, cfg.ilm_iterations);
+        divider.set_batch_tile(cfg.tile);
+        Self { divider, cfg }
+    }
+
+    /// The kernel configuration this backend was built with.
+    pub fn config(&self) -> KernelConfig {
+        self.cfg
+    }
+}
+
+impl Backend for KernelBackend {
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; a.len()];
+        self.divider.div_bits_batch(a, b, fmt, rm, &mut out);
+        Ok(out)
+    }
+
+    fn describe(&self) -> String {
+        format!("kernel[tile={}, {}]", self.cfg.tile, self.divider.name())
     }
 }
 
@@ -371,6 +427,72 @@ mod tests {
                 .unwrap(),
             bits32(&[3.0])
         );
+    }
+
+    #[test]
+    fn kernel_backend_divides_and_describes() {
+        let mut be = KernelBackend::new(5, KernelConfig::default());
+        let out = be
+            .divide(
+                &bits32(&[6.0, 1.0, -8.0]),
+                &bits32(&[2.0, 4.0, 2.0]),
+                F32,
+                Rounding::NearestEven,
+            )
+            .unwrap();
+        assert_eq!(out, bits32(&[3.0, 0.25, -4.0]));
+        assert!(be.describe().starts_with("kernel[tile=8"));
+        assert_eq!(be.config().tile, 8);
+    }
+
+    #[test]
+    fn kernel_choice_builds_and_validates() {
+        let good = BackendChoice::Kernel {
+            order: 5,
+            kernel: KernelConfig {
+                tile: 4,
+                ilm_iterations: Some(6),
+            },
+        };
+        assert!(good.validate().is_ok());
+        let be = good.build().unwrap();
+        assert!(be.describe().contains("tile=4"));
+        assert!(be.describe().contains("ilm6"));
+        let bad = BackendChoice::Kernel {
+            order: 5,
+            kernel: KernelConfig {
+                tile: 0,
+                ilm_iterations: None,
+            },
+        };
+        assert!(bad.validate().is_err());
+        assert!(bad.build().is_err());
+    }
+
+    #[test]
+    fn kernel_backend_bit_identical_to_native_and_scalar_backends() {
+        // Same operands through all three native datapaths — arrival
+        // order, grouping order and tile width must not change a bit.
+        let a = bits32(&[6.0, -1.5, f32::NAN, 0.0, f32::INFINITY, 1.0e-40, 355.0, -0.0, 9.0]);
+        let b = bits32(&[2.0, 3.0, 2.0, 3.0, 2.0, 3.0, 113.0, 2.0, 3.0]);
+        for tile in [1usize, 3, 8] {
+            let mut kern = KernelBackend::new(
+                5,
+                KernelConfig {
+                    tile,
+                    ilm_iterations: None,
+                },
+            );
+            let mut native = NativeBackend::new(5, None);
+            let mut scalar = ScalarNativeBackend::new(5, None);
+            for rm in Rounding::ALL {
+                let qk = kern.divide(&a, &b, F32, rm).unwrap();
+                let qn = native.divide(&a, &b, F32, rm).unwrap();
+                let qs = scalar.divide(&a, &b, F32, rm).unwrap();
+                assert_eq!(qk, qs, "kernel vs scalar, tile={tile} {rm:?}");
+                assert_eq!(qn, qs, "native vs scalar, tile={tile} {rm:?}");
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,8 @@ pub mod longdiv;
 pub mod newton;
 
 use crate::fp::{round_pack, unpack, Class, Format, Rounding};
-use crate::powering::{ExactMul, IlmBackend, Multiplier, OpCounts};
+use crate::kernel::{self, KernelScratch};
+use crate::powering::{ExactMul, IlmBackend, OpCounts};
 use crate::taylor::{reciprocal_fast, TaylorConfig};
 
 /// A divider over raw bit patterns of an arbitrary format.
@@ -137,6 +138,10 @@ pub struct TaylorDivider {
     pub cfg: TaylorConfig,
     backend: BackendImpl,
     kind: BackendKind,
+    /// Staged-kernel buffers reused across `div_bits_batch` calls.
+    batch_scratch: KernelScratch,
+    /// Lane-tile width of the staged kernel (see [`crate::kernel`]).
+    batch_tile: usize,
 }
 
 impl TaylorDivider {
@@ -150,7 +155,21 @@ impl TaylorDivider {
             cfg,
             backend: be,
             kind: backend,
+            batch_scratch: KernelScratch::new(),
+            batch_tile: kernel::DEFAULT_TILE,
         }
+    }
+
+    /// Override the staged kernel's lane-tile width (the service threads
+    /// `KernelConfig::tile` through here).
+    pub fn set_batch_tile(&mut self, tile: usize) {
+        assert!(tile >= 1, "kernel tile must be ≥ 1 lane");
+        self.batch_tile = tile;
+    }
+
+    /// Current lane-tile width of the batch path.
+    pub fn batch_tile(&self) -> usize {
+        self.batch_tile
     }
 
     /// The paper's headline configuration (Table-I segments, n = 5) on a
@@ -228,79 +247,37 @@ impl Divider for TaylorDivider {
         }
     }
 
-    /// Specialized batch path (§Perf): the format check, the backend
-    /// `match` and the config borrow are hoisted out of the lane loop so
-    /// the whole batch runs monomorphized against one multiplier
-    /// backend, with a one-entry divisor-reciprocal cache on top.
+    /// Staged batch path: delegate to the structure-of-arrays kernel
+    /// ([`crate::kernel::divide_batch`]) — the same stages the
+    /// `BackendChoice::Kernel` service backend runs, so there is exactly
+    /// one batch division loop in the crate. The backend `match`
+    /// monomorphizes the whole batch against one multiplier.
     fn div_bits_batch(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding, out: &mut [u64]) {
-        assert_eq!(a.len(), b.len(), "operand length mismatch");
-        assert_eq!(a.len(), out.len(), "output length mismatch");
-        assert!(
-            self.cfg.frac_bits >= fmt.frac_bits,
-            "datapath narrower than format significand"
-        );
+        let tile = self.batch_tile;
         match &mut self.backend {
-            BackendImpl::Exact(m) => div_bits_batch_with(&self.cfg, m, a, b, fmt, rm, out),
-            BackendImpl::Ilm(m) => div_bits_batch_with(&self.cfg, m, a, b, fmt, rm, out),
+            BackendImpl::Exact(m) => kernel::divide_batch(
+                &self.cfg,
+                m,
+                &mut self.batch_scratch,
+                tile,
+                a,
+                b,
+                fmt,
+                rm,
+                out,
+            ),
+            BackendImpl::Ilm(m) => kernel::divide_batch(
+                &self.cfg,
+                m,
+                &mut self.batch_scratch,
+                tile,
+                a,
+                b,
+                fmt,
+                rm,
+                out,
+            ),
         }
-    }
-}
-
-/// Ways in the batch path's divisor-reciprocal cache. Direct-mapped by
-/// a multiplicative hash of the divisor significand: service batches
-/// carry a handful of distinct divisors (k-means centroid counts, a few
-/// normalization constants), and 8 ways hold them all simultaneously —
-/// the batcher additionally groups lanes by divisor so even colliding
-/// divisors arrive in runs and thrash at most once per run.
-const RECIP_CACHE_WAYS: usize = 8;
-
-/// Take the top `log2(ways)` bits of the mixed key as the way index.
-const RECIP_CACHE_SHIFT: u32 = 64 - RECIP_CACHE_WAYS.trailing_zeros();
-// ≥ 2 also keeps RECIP_CACHE_SHIFT < 64 (a 64-bit shift would panic).
-const _: () = assert!(RECIP_CACHE_WAYS.is_power_of_two() && RECIP_CACHE_WAYS >= 2);
-
-/// Monomorphized batch datapath behind [`TaylorDivider`]'s
-/// `div_bits_batch`: one shared special/exponent path per lane, a single
-/// backend borrow for the whole batch, and an
-/// [`RECIP_CACHE_WAYS`]-way divisor-reciprocal cache keyed by the
-/// divisor significand bits — the reciprocal is a pure function of the
-/// divisor significand, so reuse is bit-exact.
-fn div_bits_batch_with<M: Multiplier>(
-    cfg: &TaylorConfig,
-    backend: &mut M,
-    a: &[u64],
-    b: &[u64],
-    fmt: Format,
-    rm: Rounding,
-    out: &mut [u64],
-) {
-    let f = cfg.frac_bits;
-    let shift = f - fmt.frac_bits;
-    // x is always ≥ 1.0 in Q2.F, so 0 can never collide with a real key.
-    let mut cached_x = [0u64; RECIP_CACHE_WAYS];
-    let mut cached_recip = [0u64; RECIP_CACHE_WAYS];
-    for ((&ab, &bb), q) in a.iter().zip(b.iter()).zip(out.iter_mut()) {
-        *q = match prepare(ab, bb, fmt) {
-            Prepared::Done(bits) => bits,
-            Prepared::Divide {
-                sign,
-                exp,
-                sig_a,
-                sig_b,
-            } => {
-                let x = sig_b << shift;
-                // Fibonacci-hash the significand into a way index (the
-                // low bits of x are the least-varying across a format's
-                // divisors once shifted, so mix the whole word).
-                let way = (x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> RECIP_CACHE_SHIFT) as usize;
-                if x != cached_x[way] {
-                    cached_x[way] = x;
-                    cached_recip[way] = reciprocal_fast(cfg, backend, x);
-                }
-                let prod = sig_a as u128 * cached_recip[way] as u128;
-                round_pack(sign, exp, prod, fmt.frac_bits + f, false, fmt, rm).0
-            }
-        };
     }
 }
 
@@ -638,6 +615,7 @@ mod tests {
         // collide and evict mid-batch — results must stay bit-identical
         // to the scalar path in every format the service offers.
         use crate::fp::ALL_FORMATS;
+        use crate::kernel::RECIP_CACHE_WAYS;
         let mut rng = crate::util::rng::Rng::new(77);
         for fmt in ALL_FORMATS {
             let divisors: Vec<u64> = (0..3 * RECIP_CACHE_WAYS as u64)

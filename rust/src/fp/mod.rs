@@ -18,7 +18,10 @@ pub mod ops;
 pub mod round;
 
 pub use format::{unpack, Class, Format, Unpacked, ALL_FORMATS, BF16, F16, F32, F64};
-pub use ops::{next_down, next_up, ordered_key, rel_err, soft_mul, ulp_diff, ulp_diff_f32, ulp_diff_f64};
+pub use ops::{
+    decode_f32, encode_f32, next_down, next_up, ordered_key, rel_err, soft_mul, ulp_diff,
+    ulp_diff_f32, ulp_diff_f64,
+};
 pub use round::{round_pack, Rounding};
 
 #[cfg(test)]

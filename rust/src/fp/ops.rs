@@ -4,7 +4,7 @@
 //! soft multiply (used for the final `a · (1/b)` stage and the
 //! Newton/Goldschmidt baselines), ULP distance, and neighbour stepping.
 
-use super::format::{unpack, Class, Format};
+use super::format::{unpack, Class, Format, F32};
 use super::round::{round_pack, Rounding};
 
 /// IEEE-754 multiplication in an arbitrary format, correctly rounded.
@@ -23,6 +23,64 @@ pub fn soft_mul(a_bits: u64, b_bits: u64, fmt: Format, rm: Rounding) -> u64 {
             let prod = a.sig as u128 * b.sig as u128; // [1,4) at 2·frac_bits
             let exp = a.exp + b.exp;
             round_pack(sign, exp, prod, 2 * fmt.frac_bits, false, fmt, rm).0
+        }
+    }
+}
+
+/// Convert an f32 value into `fmt`'s bit pattern, correctly rounded to
+/// nearest-even (with gradual underflow and overflow-to-Inf) — the
+/// client-side encoder for mixed-precision [`crate::coordinator`]
+/// requests (e.g. packing f32 model values into bf16/f16 lanes).
+pub fn encode_f32(x: f32, fmt: Format) -> u64 {
+    let u = unpack(x.to_bits() as u64, F32);
+    match u.class {
+        Class::NaN => fmt.nan(),
+        Class::Inf => fmt.inf(u.sign),
+        Class::Zero => fmt.zero(u.sign),
+        _ => round_pack(
+            u.sign,
+            u.exp,
+            u.sig as u128,
+            F32.frac_bits,
+            false,
+            fmt,
+            Rounding::NearestEven,
+        )
+        .0,
+    }
+}
+
+/// Decode `fmt` bits into an f32. Exact for f16/bf16 (every value is
+/// representable in binary32); f64 values round to the nearest f32 and
+/// may overflow to ±Inf.
+pub fn decode_f32(bits: u64, fmt: Format) -> f32 {
+    let u = unpack(bits, fmt);
+    match u.class {
+        Class::NaN => f32::NAN,
+        Class::Inf => {
+            if u.sign {
+                f32::NEG_INFINITY
+            } else {
+                f32::INFINITY
+            }
+        }
+        Class::Zero => {
+            if u.sign {
+                -0.0
+            } else {
+                0.0
+            }
+        }
+        _ => {
+            // sig is ≤ 53 bits → exact as f64; the scale stays finite
+            // for every interchange format.
+            let mag = u.sig as f64 * 2f64.powi(u.exp - fmt.frac_bits as i32);
+            let v = mag as f32;
+            if u.sign {
+                -v
+            } else {
+                v
+            }
         }
     }
 }
@@ -205,6 +263,58 @@ mod tests {
                 assert_eq!(ours.to_bits(), hw.to_bits(), "{a:?} * {b:?}");
             }
         }
+    }
+
+    #[test]
+    fn encode_decode_f32_roundtrip_known_patterns() {
+        use crate::fp::format::{BF16, F16};
+        // 1.0 / 1.5 / 6.0 / 3.0 in each 16-bit format's own encoding.
+        assert_eq!(encode_f32(1.0, F16), 0x3C00);
+        assert_eq!(encode_f32(6.0, F16), 0x4600);
+        assert_eq!(encode_f32(1.0, BF16), 0x3F80);
+        assert_eq!(encode_f32(-1.5, BF16), 0xBFC0);
+        assert_eq!(decode_f32(0x4200, F16), 3.0);
+        assert_eq!(decode_f32(0x4040, BF16), 3.0);
+        // Specials survive both directions.
+        assert!(decode_f32(encode_f32(f32::NAN, F16), F16).is_nan());
+        assert_eq!(decode_f32(encode_f32(f32::INFINITY, BF16), BF16), f32::INFINITY);
+        assert_eq!(
+            decode_f32(encode_f32(-0.0, F16), F16).to_bits(),
+            (-0.0f32).to_bits()
+        );
+        // f32::MAX overflows bf16's finite range at nearest → Inf.
+        assert_eq!(encode_f32(f32::MAX, BF16), BF16.inf(false));
+        // f16 subnormal decodes exactly.
+        assert_eq!(decode_f32(1, F16), 2f32.powi(-24));
+    }
+
+    #[test]
+    fn encode_decode_f32_roundtrip_randomized_16bit() {
+        use crate::fp::format::{BF16, F16};
+        // decode(encode(decode(p))) must be the identity on every 16-bit
+        // pattern (16-bit values are exact in f32), modulo NaN payloads.
+        for fmt in [F16, BF16] {
+            for p in 0u64..=0xFFFF {
+                let v = decode_f32(p, fmt);
+                if v.is_nan() {
+                    assert!(decode_f32(encode_f32(v, fmt), fmt).is_nan());
+                    continue;
+                }
+                let back = encode_f32(v, fmt);
+                assert_eq!(back, p, "{} pattern {p:#06x} → {v:?} → {back:#06x}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_f32_rounds_to_nearest_in_bf16() {
+        use crate::fp::format::BF16;
+        // 1 + 2^-8 is exactly between bf16(1.0) and bf16(1 + 2^-7):
+        // ties-to-even keeps 1.0; anything above the tie rounds up.
+        let tie = 1.0 + 2f32.powi(-8);
+        assert_eq!(encode_f32(tie, BF16), 0x3F80);
+        let above = f32::from_bits(tie.to_bits() + 1);
+        assert_eq!(encode_f32(above, BF16), 0x3F81);
     }
 
     #[test]

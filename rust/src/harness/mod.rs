@@ -277,7 +277,7 @@ pub fn write_bench_json(name: &str, json: &crate::util::json::Json) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
-    let history = format!("{root}/BENCH_HISTORY.jsonl");
+    let history = bench_history_path();
     let line = format!("{}\n", json.to_string_compact());
     let appended = std::fs::OpenOptions::new()
         .create(true)
@@ -288,6 +288,35 @@ pub fn write_bench_json(name: &str, json: &crate::util::json::Json) {
         Ok(()) => println!("appended to {history}"),
         Err(e) => eprintln!("could not append {history}: {e}"),
     }
+}
+
+/// The tracked bench-trajectory file every [`write_bench_json`] call
+/// appends to (repo root, resolved from the crate manifest).
+pub fn bench_history_path() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_HISTORY.jsonl").to_string()
+}
+
+/// Read a bench-history file (one JSON record per line, as written by
+/// [`write_bench_json`]) — the reading counterpart used by
+/// `tsdiv bench-trend`. Blank lines are skipped; a malformed line is an
+/// error naming its line number, so a corrupted history is loud rather
+/// than silently truncated.
+pub fn read_bench_history(path: &str) -> crate::util::error::Result<Vec<crate::util::json::Json>> {
+    use crate::util::error::Context as _;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading bench history {path}"))?;
+    let mut records = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match crate::util::json::parse(line) {
+            Ok(j) => records.push(j),
+            Err(e) => crate::bail!("{path}:{}: {e}", lineno + 1),
+        }
+    }
+    Ok(records)
 }
 
 #[cfg(test)]
@@ -384,6 +413,28 @@ mod tests {
                 assert!(classes.contains(&want), "{}: missing {want:?}", fmt.name());
             }
         }
+    }
+
+    #[test]
+    fn read_bench_history_roundtrip_and_errors() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("tsdiv_test_history.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(
+            &path,
+            "{\"bench\":\"a\",\"x\":1}\n\n{\"bench\":\"a\",\"x\":2.5}\n",
+        )
+        .unwrap();
+        let records = read_bench_history(&path).unwrap();
+        assert_eq!(records.len(), 2, "blank lines skipped");
+        assert_eq!(records[0].get("bench").and_then(|j| j.as_str()), Some("a"));
+        assert_eq!(records[1].get("x").and_then(|j| j.as_f64()), Some(2.5));
+        std::fs::write(&path, "{\"bench\":\"a\"}\nnot json\n").unwrap();
+        let e = read_bench_history(&path).unwrap_err();
+        assert!(e.to_string().contains(":2:"), "line number in {e}");
+        let _ = std::fs::remove_file(&path);
+        assert!(read_bench_history("/definitely/missing/history.jsonl").is_err());
+        assert!(bench_history_path().ends_with("BENCH_HISTORY.jsonl"));
     }
 
     #[test]

@@ -1,0 +1,457 @@
+//! The staged structure-of-arrays division kernel — one datapath for
+//! every batch entry point.
+//!
+//! The paper's divider is a staged hardware pipeline (Fig 7): operand
+//! unpack, piecewise-linear reciprocal seed, Taylor powering on the
+//! ILM/squaring units, final multiply, round. Before this module the
+//! software model executed that pipeline one lane at a time inside
+//! `TaylorDivider::div_bits_batch`; here each stage instead runs over
+//! whole lane arrays in fixed-width tiles, so the stage loops are
+//! branch-light, monomorphized, and autovectorizable:
+//!
+//! ```text
+//!   a[], b[] ──► plan ──► seed ──► power ──► mul_round ──► out[]
+//!               │ unpack per     │ PLA       │ m = 1−x·y0, │ q = sig_a·recip,
+//!               │ Format,        │ segment   │ m²…m^n via  │ Rounding-aware
+//!               │ specials to    │ lookup    │ odd/even    │ round_pack
+//!               │ a sidechannel  │ → y0      │ schedule,   │
+//!               │ (resolved      │ per tile  │ recip=y0·S  │
+//!               │  immediately)  │           │ per tile    │
+//! ```
+//!
+//! The same staged implementation serves
+//!
+//! * the batch API — [`crate::divider::TaylorDivider`]'s
+//!   `div_bits_batch` delegates here;
+//! * the service backend — `BackendChoice::Kernel`
+//!   ([`crate::coordinator::KernelBackend`]) drives it directly with a
+//!   configurable tile width;
+//! * and, transitively, `BackendChoice::Native`, whose divisor-grouping
+//!   wrapper feeds the same `div_bits_batch`.
+//!
+//! Numerics are **bit-identical** to the scalar `div_bits` path
+//! ([`crate::taylor::reciprocal_fast`] + `round_pack`): every per-lane
+//! operation and its order are preserved, only the loop nesting changes
+//! (per-stage over lanes instead of per-lane over stages). A property
+//! test pins this across all formats, rounding modes, specials and
+//! subnormals.
+
+pub mod stages;
+
+use crate::bail;
+use crate::fp::{Format, Rounding};
+use crate::powering::Multiplier;
+use crate::taylor::TaylorConfig;
+use crate::util::error::Result;
+
+/// Default lane-tile width of the staged pipeline. Eight lanes keeps the
+/// whole working set (x, y0, m, powers, sum) inside L1 while giving the
+/// stage loops enough width to vectorize.
+pub const DEFAULT_TILE: usize = 8;
+
+/// Ways in the kernel's divisor-reciprocal cache. Direct-mapped by a
+/// multiplicative hash of the divisor significand: service batches carry
+/// a handful of distinct divisors (k-means centroid counts, a few
+/// normalization constants), and 8 ways hold them all simultaneously —
+/// the coordinator's `NativeBackend` additionally groups lanes by
+/// divisor so even colliding divisors arrive in runs and thrash at most
+/// once per run.
+pub const RECIP_CACHE_WAYS: usize = 8;
+
+/// Take the top `log2(ways)` bits of the mixed key as the way index.
+const RECIP_CACHE_SHIFT: u32 = 64 - RECIP_CACHE_WAYS.trailing_zeros();
+// ≥ 2 also keeps RECIP_CACHE_SHIFT < 64 (a 64-bit shift would panic).
+const _: () = assert!(RECIP_CACHE_WAYS.is_power_of_two() && RECIP_CACHE_WAYS >= 2);
+
+/// Fibonacci-hash a divisor significand into a cache way (the low bits
+/// of x are the least-varying across a format's divisors once shifted,
+/// so mix the whole word).
+#[inline]
+pub(crate) fn cache_way(x: u64) -> usize {
+    (x.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> RECIP_CACHE_SHIFT) as usize
+}
+
+/// Configuration of the staged kernel, threaded from the CLI through the
+/// service into each worker's backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Lanes per pipeline tile (≥ 1). [`DEFAULT_TILE`] unless tuned.
+    pub tile: usize,
+    /// ILM correction budget of the multiplier backend
+    /// (`None` = exact multiplies).
+    pub ilm_iterations: Option<u32>,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        Self {
+            tile: DEFAULT_TILE,
+            ilm_iterations: None,
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Reject configurations that could only fail later inside a worker
+    /// thread (mirrors `ServiceConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.tile == 0 {
+            bail!("kernel config: tile must be ≥ 1 lane");
+        }
+        if self.tile > 1 << 20 {
+            bail!("kernel config: tile of {} lanes exceeds any batch", self.tile);
+        }
+        Ok(())
+    }
+}
+
+/// Dense structure-of-arrays view of a batch's real-division lanes,
+/// produced by the plan stage. Special lanes (NaN/Inf/zero rules) never
+/// enter these arrays — they are resolved into the output during
+/// planning, which is what keeps every later stage loop branch-light.
+#[derive(Clone, Debug, Default)]
+pub struct LanePlan {
+    /// Original batch position of each dense lane (scatter index).
+    pub idx: Vec<u32>,
+    /// Result sign per lane.
+    pub sign: Vec<bool>,
+    /// Unbiased result exponent before normalization.
+    pub exp: Vec<i32>,
+    /// Dividend significand, hidden bit at `fmt.frac_bits`.
+    pub sig_a: Vec<u64>,
+    /// Divisor significand mapped into the Q2.F datapath, `[1, 2)`.
+    pub x: Vec<u64>,
+    /// Reciprocal of `x` in Q2.F, filled by the seed/power stages (or
+    /// the divisor cache).
+    pub recip: Vec<u64>,
+}
+
+impl LanePlan {
+    fn clear(&mut self) {
+        self.idx.clear();
+        self.sign.clear();
+        self.exp.clear();
+        self.sig_a.clear();
+        self.x.clear();
+        self.recip.clear();
+    }
+
+    /// Dense (non-special) lane count.
+    pub fn lanes(&self) -> usize {
+        self.idx.len()
+    }
+}
+
+/// Reusable buffers of the staged pipeline: the dense lane plan, the
+/// per-tile compute staging (cache misses compacted), and the divisor
+/// reciprocal cache. Capacity warms up to the largest batch and tile
+/// seen and stays there — no steady-state allocation.
+#[derive(Clone, Debug, Default)]
+pub struct KernelScratch {
+    /// Plan-stage output (dense SoA lanes).
+    pub plan: LanePlan,
+    // Tile staging: positions (into `plan`) and operands of the lanes
+    // whose reciprocal missed the cache this tile.
+    miss_pos: Vec<u32>,
+    miss_x: Vec<u64>,
+    // Seed / powering staging over the miss lanes.
+    y0: Vec<u64>,
+    m: Vec<u64>,
+    pow: Vec<u64>,
+    sum: Vec<u128>,
+    recip: Vec<u64>,
+    // The divisor-reciprocal cache. x ≥ 1.0 in Q2.F, so the zero reset
+    // keys can never collide with a real divisor. Reset at the start of
+    // every `divide_batch` call: the reciprocal depends on the Taylor
+    // config and multiplier backend as well as the significand, and the
+    // same scratch may legally serve different (cfg, backend) pairs —
+    // within one call both are fixed, so within-batch reuse is bit-exact.
+    cache_x: [u64; RECIP_CACHE_WAYS],
+    cache_r: [u64; RECIP_CACHE_WAYS],
+}
+
+impl KernelScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Run the staged pipeline over one batch: `out[i] = a[i] / b[i]`, all
+/// slices the same length, bit patterns of `fmt`, rounded under `rm`.
+///
+/// Bit-identical to calling `TaylorDivider::div_bits` per lane with the
+/// same `cfg` and multiplier backend.
+#[allow(clippy::too_many_arguments)]
+pub fn divide_batch<M: Multiplier>(
+    cfg: &TaylorConfig,
+    backend: &mut M,
+    scratch: &mut KernelScratch,
+    tile: usize,
+    a: &[u64],
+    b: &[u64],
+    fmt: Format,
+    rm: Rounding,
+    out: &mut [u64],
+) {
+    assert_eq!(a.len(), b.len(), "operand length mismatch");
+    assert_eq!(a.len(), out.len(), "output length mismatch");
+    assert!(
+        cfg.frac_bits >= fmt.frac_bits,
+        "datapath narrower than format significand"
+    );
+    assert!(tile >= 1, "kernel tile must be ≥ 1 lane");
+    assert!(
+        cfg.order <= crate::taylor::MAX_FAST_ORDER,
+        "Taylor order beyond the fast-path schedule"
+    );
+    let f = cfg.frac_bits;
+    let shift = f - fmt.frac_bits;
+
+    let KernelScratch {
+        plan,
+        miss_pos,
+        miss_x,
+        y0,
+        m,
+        pow,
+        sum,
+        recip,
+        cache_x,
+        cache_r,
+    } = scratch;
+
+    // Fresh divisor cache per call: reciprocals are only reusable under
+    // the (cfg, backend) pair of THIS call (see the field comment).
+    cache_x.fill(0);
+    cache_r.fill(0);
+
+    // Stage 1 — plan: unpack, classify specials into the output
+    // sidechannel, pack real divisions into the dense SoA arrays.
+    stages::plan(a, b, fmt, shift, plan, out);
+    let n = plan.lanes();
+    plan.recip.resize(n, 0);
+
+    // Stages 2–3 — seed + power, tile by tile over the dense lanes.
+    let mut t0 = 0;
+    while t0 < n {
+        let t1 = (t0 + tile).min(n);
+        // Cache probe: lanes whose divisor reciprocal is already known
+        // skip straight to mul_round; misses are compacted so the
+        // compute stages run dense. Duplicate divisors within one tile
+        // compute more than once — bit-identical (pure function), and a
+        // tile is at most `tile` lanes wide.
+        miss_pos.clear();
+        miss_x.clear();
+        for j in t0..t1 {
+            let x = plan.x[j];
+            let way = cache_way(x);
+            if cache_x[way] == x {
+                plan.recip[j] = cache_r[way];
+            } else {
+                miss_pos.push(j as u32);
+                miss_x.push(x);
+            }
+        }
+        if !miss_pos.is_empty() {
+            stages::seed(&cfg.table, miss_x, y0);
+            stages::power(backend, f, cfg.order, miss_x, y0, m, pow, sum, recip);
+            for (k, &pos) in miss_pos.iter().enumerate() {
+                let x = miss_x[k];
+                let way = cache_way(x);
+                cache_x[way] = x;
+                cache_r[way] = recip[k];
+                plan.recip[pos as usize] = recip[k];
+            }
+        }
+        t0 = t1;
+    }
+
+    // Stage 4 — mul_round: final multiply + rounding-aware pack, with
+    // results scattered back to their original batch positions.
+    stages::mul_round(plan, fmt, rm, f, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::divider::{Divider, TaylorDivider};
+    use crate::fp::{ALL_FORMATS, F32};
+    use crate::powering::{ExactMul, IlmBackend};
+    use crate::util::rng::Rng;
+
+    fn bits32(xs: &[f32]) -> Vec<u64> {
+        xs.iter().map(|&x| x.to_bits() as u64).collect()
+    }
+
+    /// Drive the kernel directly (fresh scratch) with a given tile.
+    fn kernel_divide(
+        cfg: &TaylorConfig,
+        ilm: Option<u32>,
+        tile: usize,
+        a: &[u64],
+        b: &[u64],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Vec<u64> {
+        let mut out = vec![0u64; a.len()];
+        let mut scratch = KernelScratch::new();
+        match ilm {
+            None => {
+                let mut be = ExactMul::default();
+                divide_batch(cfg, &mut be, &mut scratch, tile, a, b, fmt, rm, &mut out);
+            }
+            Some(k) => {
+                let mut be = IlmBackend::new(k);
+                divide_batch(cfg, &mut be, &mut scratch, tile, a, b, fmt, rm, &mut out);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn config_default_and_validate() {
+        let cfg = KernelConfig::default();
+        assert_eq!(cfg.tile, DEFAULT_TILE);
+        assert_eq!(cfg.ilm_iterations, None);
+        assert!(cfg.validate().is_ok());
+        assert!(KernelConfig { tile: 0, ..cfg }.validate().is_err());
+        assert!(KernelConfig { tile: 1, ..cfg }.validate().is_ok());
+        assert!(KernelConfig {
+            tile: (1 << 20) + 1,
+            ..cfg
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn matches_scalar_divider_simple() {
+        let cfg = TaylorConfig::paper_default(60);
+        let a = bits32(&[6.0, 1.0, -7.5, 84.0, 355.0]);
+        let b = bits32(&[2.0, 4.0, 2.5, 2.0, 113.0]);
+        let got = kernel_divide(&cfg, None, DEFAULT_TILE, &a, &b, F32, Rounding::NearestEven);
+        let mut d = TaylorDivider::paper_exact();
+        for i in 0..a.len() {
+            assert_eq!(got[i], d.div_bits(a[i], b[i], F32, Rounding::NearestEven), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn specials_resolved_in_plan_stage() {
+        let cfg = TaylorConfig::paper_default(60);
+        let a = bits32(&[f32::NAN, 1.0, 0.0, f32::INFINITY, -1.0, 0.0]);
+        let b = bits32(&[1.0, 0.0, 0.0, 2.0, f32::INFINITY, 5.0]);
+        let got = kernel_divide(&cfg, None, DEFAULT_TILE, &a, &b, F32, Rounding::NearestEven);
+        let mut d = TaylorDivider::paper_exact();
+        for i in 0..a.len() {
+            assert_eq!(got[i], d.div_bits(a[i], b[i], F32, Rounding::NearestEven), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn tile_remainders_and_tiny_tiles_bit_identical() {
+        // Batch lengths deliberately not divisible by the tile width —
+        // the last partial tile must behave exactly like a full one.
+        let cfg = TaylorConfig::paper_default(60);
+        let mut rng = Rng::new(99);
+        for fmt in ALL_FORMATS {
+            let (a, b) = crate::harness::gen_bits_batch(fmt, 61, 6, rng.next_u64());
+            let mut d = TaylorDivider::paper_exact();
+            let want: Vec<u64> = (0..a.len())
+                .map(|i| d.div_bits(a[i], b[i], fmt, Rounding::NearestEven))
+                .collect();
+            for tile in [1usize, 3, 7, 8, 13, 61, 200] {
+                for len in [1usize, 7, 8, 9, 17, 61] {
+                    let got = kernel_divide(
+                        &cfg,
+                        None,
+                        tile,
+                        &a[..len],
+                        &b[..len],
+                        fmt,
+                        Rounding::NearestEven,
+                    );
+                    assert_eq!(got, want[..len], "{} tile={tile} len={len}", fmt.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ilm_backend_matches_scalar_across_tiles() {
+        let cfg = TaylorConfig::paper_default(60);
+        let mut rng = Rng::new(5);
+        let (a, b) = crate::harness::gen_bits_batch(F32, 37, 8, rng.next_u64());
+        let mut d = TaylorDivider::paper_ilm(3);
+        let want: Vec<u64> = (0..a.len())
+            .map(|i| d.div_bits(a[i], b[i], F32, Rounding::TowardZero))
+            .collect();
+        for tile in [1usize, 4, 8, 37] {
+            let got = kernel_divide(&cfg, Some(3), tile, &a, &b, F32, Rounding::TowardZero);
+            assert_eq!(got, want, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn recip_cache_scratch_reuse_across_calls_bit_exact() {
+        // Two consecutive batches through one scratch with the same
+        // divisor: the cache resets between calls (it is only valid
+        // under one (cfg, backend) pair), and both batches must match
+        // the scalar path bit for bit.
+        let cfg = TaylorConfig::paper_default(60);
+        let mut be = ExactMul::default();
+        let mut scratch = KernelScratch::new();
+        let a1 = bits32(&[6.0, 9.0, 12.0]);
+        let a2 = bits32(&[15.0, 18.0, 21.0]);
+        let b = bits32(&[3.0, 3.0, 3.0]);
+        let mut out1 = vec![0u64; 3];
+        let mut out2 = vec![0u64; 3];
+        divide_batch(&cfg, &mut be, &mut scratch, 8, &a1, &b, F32, Rounding::NearestEven, &mut out1);
+        divide_batch(&cfg, &mut be, &mut scratch, 8, &a2, &b, F32, Rounding::NearestEven, &mut out2);
+        let mut d = TaylorDivider::paper_exact();
+        for i in 0..3 {
+            assert_eq!(out1[i], d.div_bits(a1[i], b[i], F32, Rounding::NearestEven));
+            assert_eq!(out2[i], d.div_bits(a2[i], b[i], F32, Rounding::NearestEven));
+        }
+    }
+
+    #[test]
+    fn low_order_configs_match_scalar() {
+        // order 0 (seed only), 1 (one Taylor term) and a tall order all
+        // ride the same stage loops.
+        for order in [0u32, 1, 2, 7, 12] {
+            let cfg = TaylorConfig {
+                order,
+                ..TaylorConfig::paper_default(60)
+            };
+            let mut d = TaylorDivider::new(cfg.clone(), crate::divider::BackendKind::Exact);
+            let a = bits32(&[7.0, 1.0, 100.0, 0.3]);
+            let b = bits32(&[1.3, 3.0, 7.0, 0.9]);
+            let want: Vec<u64> = (0..a.len())
+                .map(|i| d.div_bits(a[i], b[i], F32, Rounding::NearestEven))
+                .collect();
+            let got = kernel_divide(&cfg, None, 2, &a, &b, F32, Rounding::NearestEven);
+            assert_eq!(got, want, "order={order}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "output length mismatch")]
+    fn rejects_mismatched_output() {
+        let cfg = TaylorConfig::paper_default(60);
+        let mut be = ExactMul::default();
+        let mut scratch = KernelScratch::new();
+        let mut out = vec![0u64; 1];
+        divide_batch(
+            &cfg,
+            &mut be,
+            &mut scratch,
+            8,
+            &[0, 0],
+            &[0, 0],
+            F32,
+            Rounding::NearestEven,
+            &mut out,
+        );
+    }
+}

@@ -1,0 +1,219 @@
+//! The four pipeline stages of the staged SoA division kernel.
+//!
+//! Each stage is a free function over plain slices so the loop bodies
+//! stay branch-light and monomorphize against one multiplier backend —
+//! the whole point of the kernel layout (see the module docs of
+//! [`super`]). The per-lane arithmetic is copied operation-for-operation
+//! from the scalar datapath ([`crate::taylor::reciprocal_fast`] and
+//! `TaylorDivider::div_bits`), so results are bit-identical; only the
+//! loop nesting differs.
+
+use super::LanePlan;
+use crate::divider::{prepare, Prepared};
+use crate::fp::{round_pack, Format, Rounding};
+use crate::pla::SegmentTable;
+use crate::powering::Multiplier;
+
+/// Stage 1 — plan: unpack both operands per `fmt`, resolve the IEEE
+/// special cases (NaN/Inf/zero rules) straight into `out` (the
+/// sidechannel), and pack every real division into the dense SoA arrays
+/// of `lanes`. Subnormal operands are normalized into the extended
+/// exponent range here, so later stages never see them.
+pub fn plan(a: &[u64], b: &[u64], fmt: Format, shift: u32, lanes: &mut LanePlan, out: &mut [u64]) {
+    lanes.clear();
+    for (i, ((&ab, &bb), q)) in a.iter().zip(b).zip(out.iter_mut()).enumerate() {
+        match prepare(ab, bb, fmt) {
+            Prepared::Done(bits) => *q = bits,
+            Prepared::Divide {
+                sign,
+                exp,
+                sig_a,
+                sig_b,
+            } => {
+                lanes.idx.push(i as u32);
+                lanes.sign.push(sign);
+                lanes.exp.push(exp);
+                lanes.sig_a.push(sig_a);
+                // Map the divisor significand into the Q2.F datapath.
+                lanes.x.push(sig_b << shift);
+            }
+        }
+    }
+}
+
+/// Stage 2 — seed: PLA segment lookup (compare tree + one multiply) for
+/// a tile of divisor significands, `y0[i] ≈ 1/x[i]`.
+pub fn seed(table: &SegmentTable, x: &[u64], y0: &mut Vec<u64>) {
+    y0.clear();
+    y0.resize(x.len(), 0);
+    table.seed_batch(x, y0);
+}
+
+/// Stage 3 — power: Taylor powering over a tile.
+///
+/// Per lane: `m = 1 − x·y0` (saturating at 0, as the hardware clamps),
+/// then the §6 odd/even simultaneous-powers schedule — every even power
+/// is the square of its half power (squaring unit), every odd power the
+/// previous odd power times the cached base `m` (ILM) — accumulated into
+/// `S = 1 + Σ m^k`, and finally the Fig-7 reciprocal multiply
+/// `recip = y0·S`. Each step runs as one loop across the tile's lanes.
+///
+/// `m = 0` lanes need no special-casing: both multiplier backends map
+/// zero operands to zero products, so the power rows contribute nothing
+/// and `S` collapses to `1 + m = 1`, exactly as the scalar path's
+/// early-out computes it.
+#[allow(clippy::too_many_arguments)]
+pub fn power<M: Multiplier>(
+    backend: &mut M,
+    f: u32,
+    order: u32,
+    x: &[u64],
+    y0: &[u64],
+    m: &mut Vec<u64>,
+    pow: &mut Vec<u64>,
+    sum: &mut Vec<u128>,
+    recip: &mut Vec<u64>,
+) {
+    let k = x.len();
+    let one = 1u64 << f;
+    debug_assert_eq!(y0.len(), k);
+
+    // m = 1 − x·y0, saturating: truncation may push the fixed-point
+    // value a hair negative, which hardware clamps (the analytic m is
+    // ≥ 0: m(x) = (1 − 2x/(a+b))²).
+    m.clear();
+    m.resize(k, 0);
+    backend.mul_fixed_hot_batch(x, y0, f, m);
+    for v in m.iter_mut() {
+        *v = one.saturating_sub(*v);
+    }
+
+    // Accumulator S = 1 + Σ_{p≤order} m^p, in u128 like the scalar path
+    // (the final cast to u64 truncates identically).
+    sum.clear();
+    if order == 0 {
+        sum.resize(k, one as u128);
+    } else {
+        sum.extend(m.iter().map(|&mm| one as u128 + mm as u128));
+        if order >= 2 {
+            // pow rows: pow[(p−1)·k .. p·k] = m^p; row 0 is m itself.
+            pow.clear();
+            pow.resize(order as usize * k, 0);
+            pow[..k].copy_from_slice(m);
+            for p in 2..=order {
+                let (lower, upper) = pow.split_at_mut((p as usize - 1) * k);
+                let dst = &mut upper[..k];
+                if p % 2 == 0 {
+                    // Even power: squaring unit on m^(p/2).
+                    let half = &lower[(p as usize / 2 - 1) * k..][..k];
+                    backend.square_fixed_hot_batch(half, f, dst);
+                } else {
+                    // Odd power: multiplier with the cached base operand.
+                    let prev = &lower[(p as usize - 2) * k..][..k];
+                    backend.mul_fixed_hot_batch(prev, m, f, dst);
+                }
+                for (s, &v) in sum.iter_mut().zip(dst.iter()) {
+                    *s += v as u128;
+                }
+            }
+        }
+    }
+
+    // recip = y0 · S — the final multiply of the Fig-7 reciprocal
+    // datapath. Reuse `m` as the u64 staging of S.
+    for (mm, &s) in m.iter_mut().zip(sum.iter()) {
+        *mm = s as u64;
+    }
+    recip.clear();
+    recip.resize(k, 0);
+    backend.mul_fixed_hot_batch(y0, m, f, recip);
+}
+
+/// Stage 4 — mul_round: the quotient significand `sig_a · recip`
+/// (fraction width `fmt.frac_bits + f`, value in (0.5, 2]) rounded and
+/// packed under `rm`, scattered back to each lane's original batch
+/// position. The reciprocal is itself inexact below ~2^-53, so sticky
+/// stays clear — matching the paper's inherently approximate unit (and
+/// the scalar path, bit for bit).
+pub fn mul_round(lanes: &LanePlan, fmt: Format, rm: Rounding, f: u32, out: &mut [u64]) {
+    let q_frac = fmt.frac_bits + f;
+    for j in 0..lanes.lanes() {
+        let q = lanes.sig_a[j] as u128 * lanes.recip[j] as u128;
+        out[lanes.idx[j] as usize] =
+            round_pack(lanes.sign[j], lanes.exp[j], q, q_frac, false, fmt, rm).0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::F32;
+    use crate::powering::ExactMul;
+    use crate::taylor::{reciprocal_fast, TaylorConfig};
+
+    #[test]
+    fn plan_splits_specials_from_divisions() {
+        let mut lanes = LanePlan::default();
+        let a: Vec<u64> = [1.0f32, f32::NAN, 6.0, 0.0]
+            .iter()
+            .map(|x| x.to_bits() as u64)
+            .collect();
+        let b: Vec<u64> = [2.0f32, 1.0, 2.0, 3.0]
+            .iter()
+            .map(|x| x.to_bits() as u64)
+            .collect();
+        let mut out = vec![0u64; 4];
+        plan(&a, &b, F32, 60 - F32.frac_bits, &mut lanes, &mut out);
+        // Lanes 1 (NaN) and 3 (0/x) are specials; 0 and 2 are divisions.
+        assert_eq!(lanes.idx, vec![0, 2]);
+        assert!(f32::from_bits(out[1] as u32).is_nan());
+        assert_eq!(out[3] as u32, 0.0f32.to_bits());
+        // x is the divisor significand in Q2.60: both divisors are 2.0 →
+        // significand 1.0.
+        assert_eq!(lanes.x, vec![1u64 << 60; 2]);
+    }
+
+    #[test]
+    fn seed_power_match_reciprocal_fast_per_lane() {
+        let cfg = TaylorConfig::paper_default(60);
+        let f = cfg.frac_bits;
+        let xs: Vec<u64> = (0..17)
+            .map(|i| (1u64 << 60) + i * ((1u64 << 60) / 17) + 4321)
+            .map(|x| x.min((1u64 << 61) - 1))
+            .collect();
+        let mut y0 = Vec::new();
+        let mut m = Vec::new();
+        let mut pow = Vec::new();
+        let mut sum = Vec::new();
+        let mut recip = Vec::new();
+        let mut be = ExactMul::default();
+        seed(&cfg.table, &xs, &mut y0);
+        power(&mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
+        for (i, &x) in xs.iter().enumerate() {
+            let mut be2 = ExactMul::default();
+            assert_eq!(recip[i], reciprocal_fast(&cfg, &mut be2, x), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn power_handles_m_zero_lane_like_scalar() {
+        // x exactly at a segment midpoint-ish value can give m = 0; the
+        // branch-light stage must still produce the scalar result.
+        let cfg = TaylorConfig::paper_default(60);
+        let f = cfg.frac_bits;
+        // Probe many x and keep whichever produce m = 0 alongside
+        // ordinary lanes; even if none hit exactly 0, identity holds.
+        let xs: Vec<u64> = (0..64)
+            .map(|i| (1u64 << 60) + i * ((1u64 << 54) + 7))
+            .collect();
+        let mut y0 = Vec::new();
+        let (mut m, mut pow, mut sum, mut recip) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let mut be = ExactMul::default();
+        seed(&cfg.table, &xs, &mut y0);
+        power(&mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
+        for (i, &x) in xs.iter().enumerate() {
+            let mut be2 = ExactMul::default();
+            assert_eq!(recip[i], reciprocal_fast(&cfg, &mut be2, x), "lane {i}");
+        }
+    }
+}

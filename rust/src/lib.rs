@@ -15,6 +15,9 @@
 //! * [`taylor`] — the Taylor-series reciprocal engine (§2, eq 9–12);
 //! * [`divider`] — the complete FP divider (Fig 7) plus Newton–Raphson,
 //!   Goldschmidt and digit-recurrence baselines;
+//! * [`kernel`] — the staged structure-of-arrays batch pipeline
+//!   (plan → seed → power → mul_round in fixed-width lane tiles) shared
+//!   by the batch API and the service backends;
 //! * [`hw`] — gate-level cost model reproducing the hardware claims
 //!   (Fig 4 vs Fig 5, "< 50 % hardware");
 //! * [`analysis`] — ULP/relative-error sweeps used by the benches;
@@ -34,6 +37,7 @@ pub mod fp;
 pub mod harness;
 pub mod hw;
 pub mod ilm;
+pub mod kernel;
 pub mod pla;
 pub mod powering;
 pub mod runtime;

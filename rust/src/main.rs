@@ -7,9 +7,11 @@
 //! * `table1`    — regenerate paper Table I (E1);
 //! * `bounds`    — §3 iteration-count claims (E5);
 //! * `hw`        — hardware cost tables, Fig 4 vs 5 (E6);
-//! * `accuracy`  — divider accuracy report vs gold (E9);
-//! * `serve`     — run the batched division service under load (E10);
-//! * `selftest`  — quick end-to-end health check of all layers.
+//! * `accuracy`    — divider accuracy report vs gold (E9);
+//! * `serve`       — run the batched division service under load (E10);
+//! * `bench-trend` — per-bench deltas vs the previous run, from the
+//!   accumulated `BENCH_HISTORY.jsonl` trajectory;
+//! * `selftest`    — quick end-to-end health check of all layers.
 
 use tsdiv::analysis::{measure_accuracy_f32, Workload};
 use tsdiv::divider::{BackendKind, Divider, TaylorDivider};
@@ -31,6 +33,7 @@ fn main() {
         "hw" => cmd_hw(args),
         "accuracy" => cmd_accuracy(args),
         "serve" => cmd_serve(args),
+        "bench-trend" => cmd_bench_trend(args),
         "selftest" => cmd_selftest(),
         "--help" | "-h" | "help" => {
             print_usage();
@@ -56,6 +59,9 @@ fn print_usage() {
          \x20 hw               hardware cost model (Fig 4 vs Fig 5, system)\n\
          \x20 accuracy         divider-vs-gold accuracy report (add --samples N)\n\
          \x20 serve            run the division service under synthetic load\n\
+         \x20                  (--backend native|kernel|native-scalar|gold|pjrt,\n\
+         \x20                   --tile N and --ilm K configure the kernel backend)\n\
+         \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run\n\
          \x20 selftest         quick health check across all layers\n",
         tsdiv::VERSION,
         tsdiv::PAPER
@@ -219,7 +225,14 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
     use tsdiv::fp::{Format, Rounding};
     let cmd = Command::new("serve", "run the division service under load")
-        .opt_choice("backend", "native", &["native", "pjrt"], "worker backend")
+        .opt_choice(
+            "backend",
+            "native",
+            &["native", "kernel", "native-scalar", "gold", "pjrt"],
+            "worker backend",
+        )
+        .opt("tile", "8", "kernel backend: lanes per SoA pipeline tile")
+        .opt("ilm", "", "kernel backend: ILM correction budget (empty = exact)")
         .opt_choice(
             "format",
             "f32",
@@ -242,17 +255,51 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             return 2;
         }
     };
-    let backend = if parsed.get_or("backend", "native") == "pjrt" {
-        if !tsdiv::runtime::artifacts_available() {
-            eprintln!("artifacts/ missing — run `make artifacts`");
-            return 1;
+    let backend = match parsed.get_or("backend", "native") {
+        "pjrt" => {
+            if !tsdiv::runtime::artifacts_available() {
+                eprintln!("artifacts/ missing — run `make artifacts`");
+                return 1;
+            }
+            BackendChoice::Pjrt
         }
-        BackendChoice::Pjrt
-    } else {
-        BackendChoice::Native {
+        "kernel" => {
+            let ilm_iterations = match parsed.get("ilm") {
+                Some("") | None => None,
+                Some(s) => match s.parse() {
+                    Ok(k) => Some(k),
+                    Err(_) => {
+                        eprintln!("option --ilm: cannot parse '{s}'");
+                        return 2;
+                    }
+                },
+            };
+            let tile = match parsed.parse_required::<usize>("tile") {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            let kernel = tsdiv::kernel::KernelConfig {
+                tile,
+                ilm_iterations,
+            };
+            if let Err(e) = kernel.validate() {
+                eprintln!("{e}");
+                return 2;
+            }
+            BackendChoice::Kernel { order: 5, kernel }
+        }
+        "native-scalar" => BackendChoice::NativeScalar {
             order: 5,
             ilm_iterations: None,
-        }
+        },
+        "gold" => BackendChoice::Gold,
+        _ => BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        },
     };
     let rm = Rounding::from_name(parsed.get_or("rounding", "nearest")).unwrap();
     // "mixed" cycles through all four formats, exercising per-key
@@ -304,6 +351,100 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     0
 }
 
+fn cmd_bench_trend(args: Vec<String>) -> i32 {
+    use tsdiv::util::json::Json;
+    let cmd = Command::new(
+        "bench-trend",
+        "per-bench metric deltas vs the previous recorded run",
+    )
+    .opt(
+        "history",
+        "",
+        "history file (default: the tracked BENCH_HISTORY.jsonl)",
+    );
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(help) => {
+            eprintln!("{help}");
+            return 2;
+        }
+    };
+    let path = match parsed.get("history") {
+        Some("") | None => tsdiv::harness::bench_history_path(),
+        Some(p) => p.to_string(),
+    };
+    let records = match tsdiv::harness::read_bench_history(&path) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!("(benches append to the history: `cargo bench --bench divider_throughput`)");
+            return 1;
+        }
+    };
+    if records.is_empty() {
+        println!(
+            "no records in {path} — run a serving bench first \
+             (e.g. `cargo bench --bench divider_throughput`)"
+        );
+        return 0;
+    }
+    // Group runs by bench name, preserving first-seen order.
+    let mut names: Vec<String> = Vec::new();
+    let mut groups: std::collections::HashMap<String, Vec<&Json>> = std::collections::HashMap::new();
+    for r in &records {
+        let name = r
+            .get("bench")
+            .and_then(|j| j.as_str())
+            .unwrap_or("(unnamed)")
+            .to_string();
+        if !groups.contains_key(&name) {
+            names.push(name.clone());
+        }
+        groups.entry(name).or_default().push(r);
+    }
+    let mut t = Table::new(
+        &format!("bench trend — {} record(s) in {path}", records.len()),
+        &["bench", "metric", "previous", "latest", "Δ%"],
+    )
+    .aligns(&[Align::Left, Align::Left, Align::Right, Align::Right, Align::Right]);
+    for name in &names {
+        let runs = &groups[name];
+        if runs.len() < 2 {
+            t.row(&[
+                name.clone(),
+                "(needs ≥ 2 recorded runs)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+            continue;
+        }
+        let prev = runs[runs.len() - 2];
+        let last = runs[runs.len() - 1];
+        // Compare every top-level numeric metric present in both runs.
+        if let Json::Obj(pairs) = last {
+            for (k, v) in pairs {
+                if k == "bench" {
+                    continue;
+                }
+                let Some(latest) = v.as_f64() else { continue };
+                let Some(previous) = prev.get(k).and_then(|j| j.as_f64()) else {
+                    continue;
+                };
+                let delta = if previous == 0.0 {
+                    "n/a".to_string()
+                } else {
+                    format!("{:+.1}", (latest - previous) / previous * 100.0)
+                };
+                t.row(&[name.clone(), k.clone(), sig(previous, 4), sig(latest, 4), delta]);
+            }
+        }
+    }
+    t.print();
+    println!("(each bench run appends one record; deltas compare the last two per bench)");
+    0
+}
+
 fn cmd_selftest() -> i32 {
     let mut failures = 0;
     let mut check = |label: &str, ok: bool| {
@@ -318,6 +459,15 @@ fn cmd_selftest() -> i32 {
     check("taylor divider 355/113", {
         let q = d.div_f32(355.0, 113.0);
         q == 355.0f32 / 113.0
+    });
+    check("staged kernel == scalar datapath (f32 batch)", {
+        let a: Vec<u64> = (1..=20u32).map(|i| (i as f32 * 1.7).to_bits() as u64).collect();
+        let b: Vec<u64> = (1..=20u32).map(|i| ((i % 5 + 1) as f32).to_bits() as u64).collect();
+        let mut out = vec![0u64; a.len()];
+        d.div_bits_batch(&a, &b, tsdiv::fp::F32, tsdiv::fp::Rounding::NearestEven, &mut out);
+        (0..a.len()).all(|i| {
+            out[i] == d.div_bits(a[i], b[i], tsdiv::fp::F32, tsdiv::fp::Rounding::NearestEven)
+        })
     });
     check("table I derivation (8 segments)", tsdiv::pla::derive_segments(5, 53).len() == 9);
     check(

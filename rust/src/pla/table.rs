@@ -99,6 +99,17 @@ impl SegmentTable {
         (y0, i)
     }
 
+    /// Seed stage over a lane array: `y0_out[i] = seed(xs[i]).0` — the
+    /// staged kernel's SoA entry point ([`crate::kernel`]). The loop
+    /// body is a branch-reduced select plus one multiply and one
+    /// subtract per lane, so it vectorizes over short tiles.
+    pub fn seed_batch(&self, xs: &[u64], y0_out: &mut [u64]) {
+        debug_assert_eq!(xs.len(), y0_out.len());
+        for (&x, y) in xs.iter().zip(y0_out.iter_mut()) {
+            *y = self.seed(x).0;
+        }
+    }
+
     /// Float view of the seed for analysis.
     pub fn seed_f64(&self, x: f64) -> f64 {
         let scale = (1u128 << self.frac_bits) as f64;
@@ -225,6 +236,19 @@ mod tests {
                 last = y;
                 x += step;
             }
+        }
+    }
+
+    #[test]
+    fn seed_batch_matches_scalar_seed() {
+        let t = table();
+        let xs: Vec<u64> = (0..257)
+            .map(|i| fx(1.0) + i * ((fx(2.0) - fx(1.0)) / 257))
+            .collect();
+        let mut ys = vec![0u64; xs.len()];
+        t.seed_batch(&xs, &mut ys);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(ys[i], t.seed(x).0, "lane {i}");
         }
     }
 

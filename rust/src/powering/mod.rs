@@ -60,6 +60,28 @@ pub trait Multiplier {
     fn square_hot(&mut self, a: u64) -> u128 {
         self.square(a)
     }
+
+    /// Batched fixed-point hot-path products:
+    /// `out[i] = (mul_hot(a[i], b[i]) >> frac_bits) as u64` — one stage
+    /// loop of the SoA kernel ([`crate::kernel`]); the monomorphized
+    /// body is free of counters and branches so it autovectorizes.
+    #[inline]
+    fn mul_fixed_hot_batch(&mut self, a: &[u64], b: &[u64], frac_bits: u32, out: &mut [u64]) {
+        debug_assert!(a.len() == b.len() && a.len() == out.len());
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = (self.mul_hot(x, y) >> frac_bits) as u64;
+        }
+    }
+
+    /// Batched fixed-point hot-path squares:
+    /// `out[i] = (square_hot(a[i]) >> frac_bits) as u64`.
+    #[inline]
+    fn square_fixed_hot_batch(&mut self, a: &[u64], frac_bits: u32, out: &mut [u64]) {
+        debug_assert_eq!(a.len(), out.len());
+        for (&x, o) in a.iter().zip(out.iter_mut()) {
+            *o = (self.square_hot(x) >> frac_bits) as u64;
+        }
+    }
 }
 
 /// Exact integer multiplier (infinite-precision reference backend).
@@ -141,6 +163,13 @@ impl Multiplier for IlmBackend {
     #[inline]
     fn square_hot(&mut self, a: u64) -> u128 {
         ilm_square(a, self.iterations).square
+    }
+
+    /// Route the batched square stage through the squaring unit's own
+    /// lane loop (numerically identical to the default implementation).
+    #[inline]
+    fn square_fixed_hot_batch(&mut self, a: &[u64], frac_bits: u32, out: &mut [u64]) {
+        crate::squaring::ilm_square_fixed_batch(a, frac_bits, self.iterations, out);
     }
 
     fn counts(&self) -> OpCounts {
@@ -429,6 +458,36 @@ mod tests {
             assert_eq!(scratch.schedule, r.schedule);
             assert_eq!(cycles, r.cycles);
             assert_eq!(counts, r.counts);
+        }
+    }
+
+    #[test]
+    fn batched_hot_ops_match_scalar_hot_ops_both_backends() {
+        // The SoA kernel's stage loops must be numerically identical to
+        // the scalar hot path, including the IlmBackend's squaring-unit
+        // override and zero operands (m = 0 lanes).
+        let a: Vec<u64> = vec![0, 1, 3 << (F - 1), (1 << F) - 1, 12345, 1 << F];
+        let b: Vec<u64> = vec![5, 0, 1 << F, 99, (1 << F) + 7, 3];
+        let mut out = vec![0u64; a.len()];
+        let mut exact = ExactMul::default();
+        exact.mul_fixed_hot_batch(&a, &b, F, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], (exact.mul_hot(a[i], b[i]) >> F) as u64, "exact mul {i}");
+        }
+        exact.square_fixed_hot_batch(&a, F, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], (exact.square_hot(a[i]) >> F) as u64, "exact sq {i}");
+        }
+        for iters in [0u32, 2, 8] {
+            let mut ilm = IlmBackend::new(iters);
+            ilm.mul_fixed_hot_batch(&a, &b, F, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i], (ilm.mul_hot(a[i], b[i]) >> F) as u64, "ilm{iters} mul {i}");
+            }
+            ilm.square_fixed_hot_batch(&a, F, &mut out);
+            for i in 0..a.len() {
+                assert_eq!(out[i], (ilm.square_hot(a[i]) >> F) as u64, "ilm{iters} sq {i}");
+            }
         }
     }
 

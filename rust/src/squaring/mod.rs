@@ -79,6 +79,19 @@ pub fn ilm_square_fixed(a: u64, frac_bits: u32, iterations: u32) -> u64 {
     (ilm_square(a, iterations).square >> frac_bits) as u64
 }
 
+/// Lane-array fixed-point squares:
+/// `out[i] = ilm_square_fixed(a[i], frac_bits, iterations)` — the
+/// squaring unit driven across a whole kernel tile at once (the even
+/// powers of the [`crate::kernel`] power stage; one branch-light loop
+/// per stage instead of one unit evaluation per lane).
+#[inline]
+pub fn ilm_square_fixed_batch(a: &[u64], frac_bits: u32, iterations: u32, out: &mut [u64]) {
+    debug_assert_eq!(a.len(), out.len());
+    for (&x, o) in a.iter().zip(out.iter_mut()) {
+        *o = ilm_square_fixed(x, frac_bits, iterations);
+    }
+}
+
 /// Relative error of an `iterations`-stage square vs exact.
 pub fn square_rel_error(n: u64, iterations: u32) -> f64 {
     if n == 0 {
@@ -172,6 +185,18 @@ mod tests {
         // 1.5² = 2.25 in Q.16
         let a = 3u64 << 15;
         assert_eq!(ilm_square_fixed(a, 16, 64), 9u64 << 14);
+    }
+
+    #[test]
+    fn fixed_point_square_batch_matches_scalar() {
+        let xs: Vec<u64> = vec![0, 1, 3 << 15, (1 << 16) - 1, 77777, 1 << 20];
+        let mut out = vec![0u64; xs.len()];
+        for iters in [0u32, 1, 4, 64] {
+            ilm_square_fixed_batch(&xs, 16, iters, &mut out);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(out[i], ilm_square_fixed(x, 16, iters), "x={x} iters={iters}");
+            }
+        }
     }
 
     #[test]

@@ -181,13 +181,19 @@ pub fn reciprocal_fixed_with<M: Multiplier + ?Sized>(
 /// Maximum Taylor order served by the allocation-free fast path.
 pub const MAX_FAST_ORDER: u32 = 24;
 
-/// Allocation-free reciprocal — the divider's hot path (§Perf step 1).
+/// Allocation-free reciprocal — the divider's scalar hot path (§Perf
+/// step 1).
 ///
 /// Numerically identical to [`reciprocal_fixed`] (same §6 power schedule:
 /// even powers squared from the half power, odd powers multiplied by the
 /// cached base), but with a fixed-size power buffer, no schedule trace
 /// and no op-count bookkeeping. Call through a concrete `M` so the
 /// multiplies monomorphize (§Perf step 2).
+///
+/// The batch counterpart is the staged SoA kernel
+/// ([`crate::kernel::stages::power`]), which runs this exact operation
+/// sequence per lane with the loops transposed (per stage over a lane
+/// tile) — a property test pins the two bit-identical.
 #[inline]
 pub fn reciprocal_fast<M: Multiplier>(cfg: &TaylorConfig, backend: &mut M, x: u64) -> u64 {
     let f = cfg.frac_bits;
