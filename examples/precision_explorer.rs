@@ -24,7 +24,7 @@ fn main() {
     )
     .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
     for derive_n in [2u32, 3, 5, 8] {
-        let bounds = derive_segments(derive_n, 53);
+        let bounds = derive_segments(derive_n, 53).expect("segment derivation");
         let mut row = vec![format!("{} (n={derive_n})", bounds.len() - 1)];
         for order in [2u32, 3, 5, 8] {
             let cfg = TaylorConfig {
@@ -48,14 +48,14 @@ fn main() {
     for (label, bounds) in [
         ("single segment [1,2]", vec![1.0, 2.0]),
         ("two segments at √2", vec![1.0, 2f64.sqrt(), 2.0]),
-        ("Table I (n=5)", derive_segments(5, 53)),
-        ("n=3 partition", derive_segments(3, 53)),
-        ("n=8 partition", derive_segments(8, 53)),
+        ("Table I (n=5)", derive_segments(5, 53).expect("derivation")),
+        ("n=3 partition", derive_segments(3, 53).expect("derivation")),
+        ("n=8 partition", derive_segments(8, 53).expect("derivation")),
     ] {
         t.row(&[
             label.to_string(),
             (bounds.len() - 1).to_string(),
-            min_iterations_piecewise(&bounds, 53).to_string(),
+            min_iterations_piecewise(&bounds, 53).expect("iteration bound").to_string(),
         ]);
     }
     t.print();

@@ -160,11 +160,28 @@ fn main() {
 
     // Worker datapaths through the full service stack: identical
     // coordinator, identical load, only the worker's division loop
-    // differs — the staged SoA kernel driven directly (Kernel), the
-    // same kernel behind divisor grouping (Native), and the per-lane
-    // scalar loop (NativeScalar).
+    // differs — the staged SoA kernel driven directly (Kernel, on the
+    // auto-resolved lane engine), the same kernel pinned to the scalar
+    // lane engine ("autovec" — what the compiler makes of the stage
+    // loops), the kernel behind divisor grouping (Native), and the
+    // per-lane scalar loop (NativeScalar).
+    // Force the vector engine when available so the simd row can never
+    // silently measure the scalar fallback; without AVX2 the row pins
+    // (and labels) the scalar engine and the simd/autovec ratio is not
+    // recorded.
+    let simd_on = tsdiv::simd::simd_available();
+    let kernel_simd = if simd_on {
+        tsdiv::simd::SimdChoice::Forced
+    } else {
+        tsdiv::simd::SimdChoice::Scalar
+    };
+    let simd_engine = kernel_simd.resolve_lenient();
     let mut t = Table::new(
-        "worker datapath: kernel vs batched vs scalar (2 workers, 8 clients × 256 lanes)",
+        &format!(
+            "worker datapath: kernel(simd={}) vs kernel(autovec) vs batched vs scalar \
+             (2 workers, 8 clients × 256 lanes)",
+            simd_engine.name()
+        ),
         &["datapath", "div/s", "p50 ms", "p99 ms", "lanes/batch"],
     )
     .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
@@ -185,10 +202,23 @@ fn main() {
             },
         ),
         (
-            "kernel (staged SoA)",
+            "kernel (staged SoA, simd)",
             BackendChoice::Kernel {
                 order: 5,
-                kernel: tsdiv::kernel::KernelConfig::default(),
+                kernel: tsdiv::kernel::KernelConfig {
+                    simd: kernel_simd,
+                    ..tsdiv::kernel::KernelConfig::default()
+                },
+            },
+        ),
+        (
+            "kernel (staged SoA, autovec)",
+            BackendChoice::Kernel {
+                order: 5,
+                kernel: tsdiv::kernel::KernelConfig {
+                    simd: tsdiv::simd::SimdChoice::Scalar,
+                    ..tsdiv::kernel::KernelConfig::default()
+                },
             },
         ),
     ] {
@@ -205,8 +235,14 @@ fn main() {
     t.print();
     let speedup = pair[0].1 / pair[1].1;
     let kernel_speedup = pair[2].1 / pair[1].1;
+    let simd_over_autovec = pair[2].1 / pair[3].1;
     println!("batched/scalar service throughput: {speedup:.2}x");
-    println!("kernel/scalar  service throughput: {kernel_speedup:.2}x\n");
+    println!("kernel/scalar  service throughput: {kernel_speedup:.2}x");
+    if simd_on {
+        println!("kernel simd/autovec  throughput:   {simd_over_autovec:.2}x\n");
+    } else {
+        println!("kernel simd/autovec  throughput:   n/a (no AVX2 on this host)\n");
+    }
 
     // Multi-format traffic through the typed request API: homogeneous
     // loads per format, then the interleaved mix (which the batcher must
@@ -258,8 +294,14 @@ fn main() {
     j.set("batched_div_per_s", pair[0].1.into());
     j.set("scalar_div_per_s", pair[1].1.into());
     j.set("kernel_div_per_s", pair[2].1.into());
+    j.set("kernel_autovec_div_per_s", pair[3].1.into());
     j.set("batched_over_scalar", speedup.into());
     j.set("kernel_over_scalar", kernel_speedup.into());
+    // Only meaningful when the vector engine actually ran.
+    if simd_on {
+        j.set("kernel_simd_over_autovec", simd_over_autovec.into());
+    }
+    j.set("simd_engine", simd_engine.name().into());
     j.set("mixed_format_div_per_s", mixed_thr.into());
     tsdiv::harness::write_bench_json("coordinator_serve", &j);
 

@@ -8,7 +8,7 @@ use tsdiv::util::table::{sig, Align, Table};
 
 fn main() {
     println!("\n===== E4: Figure 3 — piecewise-linear approximation (n=5 partition) =====\n");
-    let bounds = derive_segments(5, 53);
+    let bounds = derive_segments(5, 53).expect("Table-I derivation");
     let table = SegmentTable::build(&bounds, 60);
 
     // Per-segment line parameters + worst seed quality.

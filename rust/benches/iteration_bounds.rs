@@ -12,10 +12,12 @@ use tsdiv::util::table::{Align, Table};
 fn main() {
     println!("\n===== E5: minimum Taylor iterations for 53-bit precision =====\n");
 
-    let one_seg = min_iterations(1.0, 2.0, 53);
+    let one_seg = min_iterations(1.0, 2.0, 53).expect("eq-17 converges on [1,2]");
     let p = equal_error_split(1.0, 2.0);
-    let two_seg = min_iterations_piecewise(&[1.0, p, 2.0], 53);
-    let table_i = min_iterations_piecewise(&derive_segments(5, 53), 53);
+    let two_seg =
+        min_iterations_piecewise(&[1.0, p, 2.0], 53).expect("eq-17 converges at the split");
+    let bounds_ti = derive_segments(5, 53).expect("Table-I derivation");
+    let table_i = min_iterations_piecewise(&bounds_ti, 53).expect("eq-17 converges on Table I");
 
     let mut report = Report::new("paper §3 iteration counts (eq 17 solver)");
     report.row(
@@ -55,7 +57,6 @@ fn main() {
         &["n", "1 seg", "2 seg (worst)", "Table I (worst)"],
     )
     .aligns(&[Align::Right; 4]);
-    let bounds_ti = derive_segments(5, 53);
     for n in [0u32, 2, 5, 8, 11, 14, 17, 20] {
         let b1 = error_bound_log2(1.0, 2.0, n);
         let b2 = error_bound_log2(1.0, p, n).max(error_bound_log2(p, 2.0, n));
@@ -79,11 +80,11 @@ fn main() {
     )
     .aligns(&[Align::Right; 3]);
     for n in [2u32, 3, 4, 5, 6, 8, 10, 12] {
-        let b = derive_segments(n, 53);
+        let b = derive_segments(n, 53).expect("segment derivation");
         t.row(&[
             n.to_string(),
             (b.len() - 1).to_string(),
-            min_iterations_piecewise(&b, 53).to_string(),
+            min_iterations_piecewise(&b, 53).expect("iteration bound").to_string(),
         ]);
     }
     t.print();

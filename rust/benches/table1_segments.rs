@@ -8,7 +8,7 @@ use tsdiv::util::table::{sig, Align, Table};
 
 fn main() {
     println!("\n===== E1: Table I — segment boundaries (n=5, 53-bit) =====\n");
-    let bounds = derive_segments(5, 53);
+    let bounds = derive_segments(5, 53).expect("Table-I derivation");
     assert_eq!(bounds.len(), 9);
 
     let mut report = Report::new("Table I: derived vs paper");
@@ -54,7 +54,7 @@ fn main() {
     );
 
     let m = timed_section("derive_segments(5, 53)", || {
-        let b = derive_segments(5, 53);
+        let b = derive_segments(5, 53).expect("Table-I derivation");
         tsdiv::util::black_box(b);
     });
     println!(

@@ -17,12 +17,14 @@
 //!     │                                       batches      │
 //!     │        ┌─ staged SoA kernel (crate::kernel) ─┐     │ backends:
 //!     │        │ plan ─► seed ─► power ─► mul_round  │     │  Kernel  = the staged kernel, tiles
-//!     │        │ unpack,  PLA     Taylor    final ·, │     │            of KernelConfig::tile lanes
-//!     │        │ specials seg     powers    round    │     │  Native  = same kernel + divisor
-//!     │        │ aside    lookup  (odd/even) pack    │     │            grouping permutation
-//!     │        └─ 8-lane tiles, 8-way recip cache ───┘     │  NativeScalar = per-lane div_bits
-//!     │                                                    │  Gold    = longdiv (exactly rounded)
-//!     │                                                    │  Pjrt    = AOT artifact (f32/nearest)
+//!     │        │ unpack,  PLA     Taylor    final ·, │     │            of KernelConfig::tile lanes,
+//!     │        │ specials seg     powers    round    │     │            lane engine per
+//!     │        │ aside    lookup  (odd/even) pack    │     │            KernelConfig::simd
+//!     │        ├─ 8-lane tiles, 8-way recip cache ───┤     │  Native  = same kernel + divisor
+//!     │        │ stage loops on the crate::simd lane │     │            grouping permutation
+//!     │        │ engine: SimdChoice auto|forced|     │     │  NativeScalar = per-lane div_bits
+//!     │        │ scalar → AVX2 or scalar-unrolled    │     │  Gold    = longdiv (exactly rounded)
+//!     │        └─────────────────────────────────────┘     │  Pjrt    = AOT artifact (f32/nearest)
 //!     └──◄── DivTicket::wait() → DivResponse{fmt,rm,bits} ─┘
 //! ```
 //!

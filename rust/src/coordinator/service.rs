@@ -214,7 +214,14 @@ pub struct DivisionService {
     workers: Vec<JoinHandle<()>>,
 }
 
-type WorkItem = (Batch, Vec<Sender<Result<Vec<u64>, String>>>);
+/// One job for the worker pool: the batch plus one responder **slot per
+/// item**, positionally aligned with `batch.items`. The alignment is
+/// load-bearing: a missing responder must leave a `None` hole, never
+/// shorten the list — a shorter list zipped against the items would
+/// cross-wire every later item's reply onto the wrong waiter (and hang
+/// the tail waiters forever in release builds).
+type Responders = Vec<Option<Sender<Result<Vec<u64>, String>>>>;
+type WorkItem = (Batch, Responders);
 
 impl DivisionService {
     /// Start the batcher thread and `cfg.workers` worker threads.
@@ -255,12 +262,30 @@ impl DivisionService {
                     HashMap::new();
                 let dispatch = |batch: Batch,
                                 responders: &mut HashMap<u64, Sender<Result<Vec<u64>, String>>>| {
-                    let rs: Vec<_> = batch
+                    // One positional slot per item (see [`Responders`]).
+                    // A lost responder — a routing bug, not a load
+                    // condition — is counted as a failure and logged; its
+                    // waiter's channel sender is gone, so that `wait()`
+                    // returns an explicit channel-closed error instead of
+                    // hanging, and every other item still routes to the
+                    // waiter that submitted it.
+                    let rs: Responders = batch
                         .items
                         .iter()
-                        .filter_map(|it| responders.remove(&it.request_id))
+                        .map(|it| responders.remove(&it.request_id))
                         .collect();
-                    debug_assert_eq!(rs.len(), batch.items.len(), "responder lost");
+                    let lost = rs.iter().filter(|r| r.is_none()).count();
+                    if lost > 0 {
+                        // One count per affected batch, matching the
+                        // backend-error/panic paths' unit (the log line
+                        // carries the per-item count).
+                        m.failures.fetch_add(1, Ordering::Relaxed);
+                        crate::log_error!(
+                            "batcher: {lost} responder(s) missing for a batch of {} item(s); \
+                             affected waiters receive a closed-channel error",
+                            batch.items.len()
+                        );
+                    }
                     m.batches.fetch_add(1, Ordering::Relaxed);
                     let _ = work_tx.send((batch, rs));
                 };
@@ -380,21 +405,27 @@ impl DivisionService {
                             }));
                             match result {
                                 Ok(Ok(flat)) => {
+                                    // Positional zip: responders is one
+                                    // slot per item by construction, so
+                                    // lanes can never shift onto another
+                                    // item's waiter.
                                     for ((_, lanes), r) in
                                         batch.split(&flat).into_iter().zip(responders)
                                     {
-                                        let _ = r.send(Ok(lanes));
+                                        if let Some(r) = r {
+                                            let _ = r.send(Ok(lanes));
+                                        }
                                     }
                                 }
                                 Ok(Err(e)) => {
                                     m.failures.fetch_add(1, Ordering::Relaxed);
-                                    for r in responders {
+                                    for r in responders.into_iter().flatten() {
                                         let _ = r.send(Err(format!("backend error: {e}")));
                                     }
                                 }
                                 Err(_) => {
                                     m.failures.fetch_add(1, Ordering::Relaxed);
-                                    for r in responders {
+                                    for r in responders.into_iter().flatten() {
                                         let _ =
                                             r.send(Err("backend panicked on batch".to_string()));
                                     }
@@ -608,6 +639,7 @@ mod tests {
                 kernel: KernelConfig {
                     tile: 0,
                     ilm_iterations: None,
+                    ..KernelConfig::default()
                 },
             },
         );

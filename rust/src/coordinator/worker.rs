@@ -6,7 +6,9 @@
 //!
 //! * [`KernelBackend`] — the staged SoA kernel ([`crate::kernel`])
 //!   driven directly: plan → seed → power → mul_round over lane tiles,
-//!   tile width and ILM budget from [`crate::kernel::KernelConfig`];
+//!   tile width, ILM budget and lane-engine choice (auto/forced/scalar
+//!   SIMD, [`crate::simd::SimdChoice`]) from
+//!   [`crate::kernel::KernelConfig`];
 //! * [`NativeBackend`] — the same staged kernel behind
 //!   [`crate::divider::Divider::div_bits_batch`], plus a
 //!   divisor-grouping permutation so repeated divisors arrive in runs
@@ -80,28 +82,58 @@ pub enum BackendChoice {
 impl BackendChoice {
     /// Reject configurations that could only fail later inside a worker
     /// thread; called by `DivisionService::start` alongside
-    /// `ServiceConfig::validate`.
+    /// `ServiceConfig::validate`. Covers the kernel tile/SIMD choice and
+    /// the Taylor order (beyond [`crate::taylor::MAX_FAST_ORDER`] the
+    /// hot path would assert inside the worker).
     pub fn validate(&self) -> Result<()> {
         match self {
-            BackendChoice::Kernel { kernel, .. } => kernel.validate(),
-            _ => Ok(()),
+            BackendChoice::Native { order, .. } | BackendChoice::NativeScalar { order, .. } => {
+                // These backends resolve their lane engine as `Auto`,
+                // which honors the TSDIV_SIMD process override —
+                // pre-flight it here so `forced` on a host without AVX2
+                // rejects the service start instead of killing every
+                // worker at build time (waiters would hang on a service
+                // with zero workers).
+                crate::simd::SimdChoice::Auto.validate()?;
+                validate_order(*order)
+            }
+            BackendChoice::Kernel { order, kernel } => {
+                kernel.validate()?;
+                validate_order(*order)
+            }
+            BackendChoice::Gold => Ok(()),
+            BackendChoice::Pjrt => {
+                // Same zero-worker-hang prevention as the SIMD
+                // pre-flight: without artifacts every worker would die
+                // at build time while the service reports a clean start.
+                if !crate::runtime::artifacts_available() {
+                    crate::bail!(
+                        "backend config: pjrt requires built artifacts \
+                         (run `make artifacts` and build with the `pjrt` feature)"
+                    );
+                }
+                Ok(())
+            }
         }
     }
 
-    /// Instantiate inside the worker thread.
+    /// Instantiate inside the worker thread. The constructors themselves
+    /// run every check [`BackendChoice::validate`] performs (validate is
+    /// the cheap pre-flight for `DivisionService::start`; the
+    /// constructors are authoritative), so a bad configuration errors on
+    /// any path.
     pub fn build(&self) -> Result<Box<dyn Backend>> {
         match *self {
             BackendChoice::Native {
                 order,
                 ilm_iterations,
-            } => Ok(Box::new(NativeBackend::new(order, ilm_iterations))),
+            } => Ok(Box::new(NativeBackend::new(order, ilm_iterations)?)),
             BackendChoice::NativeScalar {
                 order,
                 ilm_iterations,
-            } => Ok(Box::new(ScalarNativeBackend::new(order, ilm_iterations))),
+            } => Ok(Box::new(ScalarNativeBackend::new(order, ilm_iterations)?)),
             BackendChoice::Kernel { order, kernel } => {
-                kernel.validate()?;
-                Ok(Box::new(KernelBackend::new(order, kernel)))
+                Ok(Box::new(KernelBackend::new(order, kernel)?))
             }
             BackendChoice::Gold => Ok(Box::new(GoldBackend::new())),
             BackendChoice::Pjrt => Ok(Box::new(PjrtBackend::load_default()?)),
@@ -109,16 +141,50 @@ impl BackendChoice {
     }
 }
 
-fn native_divider(order: u32, ilm_iterations: Option<u32>) -> TaylorDivider {
+/// The single authoritative Taylor-order bound for every native-family
+/// backend: beyond [`crate::taylor::MAX_FAST_ORDER`] the hot path would
+/// assert inside the worker. Shared by [`BackendChoice::validate`]
+/// (cheap pre-flight, no table construction) and [`native_divider`]
+/// (constructors are also reachable directly, bypassing the choice).
+fn validate_order(order: u32) -> Result<()> {
+    if order > crate::taylor::MAX_FAST_ORDER {
+        crate::bail!(
+            "backend config: Taylor order {order} exceeds the fast-path maximum {}",
+            crate::taylor::MAX_FAST_ORDER
+        );
+    }
+    Ok(())
+}
+
+/// Build the Taylor datapath for a worker backend through the fallible
+/// construction chain (segment derivation → table build → lane-engine
+/// selection), so a bad configuration is an error the service start
+/// rejects, not a panic in a worker thread.
+///
+/// `simd` is the backend's engine choice: the Kernel backend passes its
+/// explicit `KernelConfig::simd` (which ignores the env), the
+/// Native/NativeScalar backends pass `Auto`, which honors the
+/// process-wide `TSDIV_SIMD` override with its hard-error contract —
+/// `forced` on a host without AVX2 fails construction (and, via
+/// `BackendChoice::validate`, the service start) instead of silently
+/// measuring the scalar engine.
+fn native_divider(
+    order: u32,
+    ilm_iterations: Option<u32>,
+    simd: crate::simd::SimdChoice,
+) -> Result<TaylorDivider> {
+    validate_order(order)?;
     let cfg = TaylorConfig {
         order,
-        ..TaylorConfig::paper_default(60)
+        ..TaylorConfig::try_paper_default(60)?
     };
     let kind = match ilm_iterations {
         None => BackendKind::Exact,
         Some(iterations) => BackendKind::Ilm { iterations },
     };
-    TaylorDivider::new(cfg, kind)
+    let mut divider = TaylorDivider::new(cfg, kind);
+    divider.set_batch_simd(simd)?;
+    Ok(divider)
 }
 
 /// The bit-exact Rust datapath as a service backend, dividing each
@@ -136,14 +202,14 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    pub fn new(order: u32, ilm_iterations: Option<u32>) -> Self {
-        Self {
-            divider: native_divider(order, ilm_iterations),
+    pub fn new(order: u32, ilm_iterations: Option<u32>) -> Result<Self> {
+        Ok(Self {
+            divider: native_divider(order, ilm_iterations, crate::simd::SimdChoice::Auto)?,
             perm: Vec::new(),
             a_grouped: Vec::new(),
             b_grouped: Vec::new(),
             q_grouped: Vec::new(),
-        }
+        })
     }
 }
 
@@ -229,10 +295,14 @@ pub struct KernelBackend {
 }
 
 impl KernelBackend {
-    pub fn new(order: u32, cfg: KernelConfig) -> Self {
-        let mut divider = native_divider(order, cfg.ilm_iterations);
+    pub fn new(order: u32, cfg: KernelConfig) -> Result<Self> {
+        cfg.validate()?;
+        // The explicit config choice goes straight into the divider —
+        // a pinned `Scalar` kernel stays scalar even under
+        // TSDIV_SIMD=forced (only `Auto` defers to the env).
+        let mut divider = native_divider(order, cfg.ilm_iterations, cfg.simd)?;
         divider.set_batch_tile(cfg.tile);
-        Self { divider, cfg }
+        Ok(Self { divider, cfg })
     }
 
     /// The kernel configuration this backend was built with.
@@ -249,7 +319,12 @@ impl Backend for KernelBackend {
     }
 
     fn describe(&self) -> String {
-        format!("kernel[tile={}, {}]", self.cfg.tile, self.divider.name())
+        format!(
+            "kernel[tile={}, simd={}, {}]",
+            self.cfg.tile,
+            self.divider.batch_engine().name(),
+            self.divider.name()
+        )
     }
 }
 
@@ -259,10 +334,10 @@ pub struct ScalarNativeBackend {
 }
 
 impl ScalarNativeBackend {
-    pub fn new(order: u32, ilm_iterations: Option<u32>) -> Self {
-        Self {
-            divider: native_divider(order, ilm_iterations),
-        }
+    pub fn new(order: u32, ilm_iterations: Option<u32>) -> Result<Self> {
+        Ok(Self {
+            divider: native_divider(order, ilm_iterations, crate::simd::SimdChoice::Auto)?,
+        })
     }
 }
 
@@ -358,7 +433,7 @@ mod tests {
 
     #[test]
     fn native_backend_divides() {
-        let mut be = NativeBackend::new(5, None);
+        let mut be = NativeBackend::new(5, None).unwrap();
         let out = be
             .divide(
                 &bits32(&[6.0, 1.0, -8.0]),
@@ -373,7 +448,7 @@ mod tests {
 
     #[test]
     fn native_backend_with_ilm_budget() {
-        let mut be = NativeBackend::new(5, Some(8));
+        let mut be = NativeBackend::new(5, Some(8)).unwrap();
         let out = be
             .divide(&bits32(&[10.0]), &bits32(&[5.0]), F32, Rounding::NearestEven)
             .unwrap();
@@ -382,7 +457,7 @@ mod tests {
 
     #[test]
     fn native_backend_serves_all_four_formats() {
-        let mut be = NativeBackend::new(5, None);
+        let mut be = NativeBackend::new(5, None).unwrap();
         // 6.0 / 2.0 = 3.0 in each format's own encoding.
         for (fmt, a, b, want) in [
             (F16, 0x4600u64, 0x4000, 0x4200),
@@ -431,7 +506,7 @@ mod tests {
 
     #[test]
     fn kernel_backend_divides_and_describes() {
-        let mut be = KernelBackend::new(5, KernelConfig::default());
+        let mut be = KernelBackend::new(5, KernelConfig::default()).unwrap();
         let out = be
             .divide(
                 &bits32(&[6.0, 1.0, -8.0]),
@@ -452,21 +527,73 @@ mod tests {
             kernel: KernelConfig {
                 tile: 4,
                 ilm_iterations: Some(6),
+                ..KernelConfig::default()
             },
         };
         assert!(good.validate().is_ok());
         let be = good.build().unwrap();
         assert!(be.describe().contains("tile=4"));
         assert!(be.describe().contains("ilm6"));
+        assert!(be.describe().contains("simd="));
         let bad = BackendChoice::Kernel {
             order: 5,
             kernel: KernelConfig {
                 tile: 0,
                 ilm_iterations: None,
+                ..KernelConfig::default()
             },
         };
         assert!(bad.validate().is_err());
         assert!(bad.build().is_err());
+    }
+
+    #[test]
+    fn oversized_taylor_order_rejected_not_panicking() {
+        // Orders beyond the fast-path schedule used to assert inside the
+        // worker thread; now every native-family choice rejects them at
+        // validate/build time.
+        let order = crate::taylor::MAX_FAST_ORDER + 1;
+        for choice in [
+            BackendChoice::Native {
+                order,
+                ilm_iterations: None,
+            },
+            BackendChoice::NativeScalar {
+                order,
+                ilm_iterations: None,
+            },
+            BackendChoice::Kernel {
+                order,
+                kernel: KernelConfig::default(),
+            },
+        ] {
+            assert!(choice.validate().is_err(), "{choice:?}");
+            assert!(choice.build().is_err(), "{choice:?}");
+        }
+    }
+
+    #[test]
+    fn forced_simd_kernel_choice_follows_host_capability() {
+        use crate::simd::{simd_available, SimdChoice};
+        let forced = BackendChoice::Kernel {
+            order: 5,
+            kernel: KernelConfig {
+                simd: SimdChoice::Forced,
+                ..KernelConfig::default()
+            },
+        };
+        assert_eq!(forced.validate().is_ok(), simd_available());
+        assert_eq!(forced.build().is_ok(), simd_available());
+        // The pinned-scalar engine builds everywhere and says so.
+        let scalar = KernelBackend::new(
+            5,
+            KernelConfig {
+                simd: SimdChoice::Scalar,
+                ..KernelConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(scalar.describe().contains("simd=scalar"), "{}", scalar.describe());
     }
 
     #[test]
@@ -481,10 +608,12 @@ mod tests {
                 KernelConfig {
                     tile,
                     ilm_iterations: None,
+                    ..KernelConfig::default()
                 },
-            );
-            let mut native = NativeBackend::new(5, None);
-            let mut scalar = ScalarNativeBackend::new(5, None);
+            )
+            .unwrap();
+            let mut native = NativeBackend::new(5, None).unwrap();
+            let mut scalar = ScalarNativeBackend::new(5, None).unwrap();
             for rm in Rounding::ALL {
                 let qk = kern.divide(&a, &b, F32, rm).unwrap();
                 let qn = native.divide(&a, &b, F32, rm).unwrap();
@@ -497,8 +626,8 @@ mod tests {
 
     #[test]
     fn divisor_grouping_bit_identical_to_scalar_backend() {
-        let mut batched = NativeBackend::new(5, None);
-        let mut scalar = ScalarNativeBackend::new(5, None);
+        let mut batched = NativeBackend::new(5, None).unwrap();
+        let mut scalar = ScalarNativeBackend::new(5, None).unwrap();
         // Interleaved repeated divisors: grouping reorders internally,
         // results must still come back in lane order, bit for bit.
         let a = bits32(&[6.0, -1.5, f32::NAN, 0.0, f32::INFINITY, 1.0e-40, 355.0, -0.0]);
@@ -527,7 +656,7 @@ mod tests {
     #[test]
     #[allow(deprecated)]
     fn legacy_divide_batch_wrapper_still_works() {
-        let mut be = NativeBackend::new(5, None);
+        let mut be = NativeBackend::new(5, None).unwrap();
         let out = be.divide_batch(&[6.0, 1.0], &[2.0, 4.0]).unwrap();
         assert_eq!(out, vec![3.0, 0.25]);
     }

@@ -35,7 +35,7 @@ impl GoldschmidtDivider {
 
     /// Same seed/datapath as the other units; 3 iterations ≥ 53 bits.
     pub fn paper_default() -> Self {
-        let bounds = crate::pla::derive_segments(5, 53);
+        let bounds = crate::pla::derive_segments(5, 53).expect("Table-I derivation");
         Self::new(3, 60, SegmentTable::build(&bounds, 60))
     }
 
@@ -140,7 +140,7 @@ mod tests {
 
     #[test]
     fn iteration_sweep_improves_error() {
-        let bounds = crate::pla::derive_segments(5, 53);
+        let bounds = crate::pla::derive_segments(5, 53).expect("Table-I derivation");
         let scale = (1u128 << 60) as f64;
         let mut prev = f64::INFINITY;
         for k in 0..4 {

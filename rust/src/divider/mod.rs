@@ -22,6 +22,7 @@ pub mod newton;
 use crate::fp::{round_pack, unpack, Class, Format, Rounding};
 use crate::kernel::{self, KernelScratch};
 use crate::powering::{ExactMul, IlmBackend, OpCounts};
+use crate::simd::{Engine, SimdChoice};
 use crate::taylor::{reciprocal_fast, TaylorConfig};
 
 /// A divider over raw bit patterns of an arbitrary format.
@@ -142,6 +143,9 @@ pub struct TaylorDivider {
     batch_scratch: KernelScratch,
     /// Lane-tile width of the staged kernel (see [`crate::kernel`]).
     batch_tile: usize,
+    /// Resolved lane engine under the kernel's stage loops (see
+    /// [`crate::simd`]); defaults to the `TSDIV_SIMD`-aware auto choice.
+    batch_engine: Engine,
 }
 
 impl TaylorDivider {
@@ -157,6 +161,11 @@ impl TaylorDivider {
             kind: backend,
             batch_scratch: KernelScratch::new(),
             batch_tile: kernel::DEFAULT_TILE,
+            // Auto already defers to the TSDIV_SIMD override inside
+            // resolve(); lenient because a library constructor cannot
+            // fail (service backends re-select through the fallible
+            // set_batch_simd with their configured choice).
+            batch_engine: SimdChoice::Auto.resolve_lenient(),
         }
     }
 
@@ -170,6 +179,19 @@ impl TaylorDivider {
     /// Current lane-tile width of the batch path.
     pub fn batch_tile(&self) -> usize {
         self.batch_tile
+    }
+
+    /// Select the lane engine under the staged kernel (the service
+    /// threads `KernelConfig::simd` through here). Errors when `Forced`
+    /// asks for a vector engine the host lacks.
+    pub fn set_batch_simd(&mut self, choice: SimdChoice) -> crate::util::error::Result<()> {
+        self.batch_engine = choice.resolve()?;
+        Ok(())
+    }
+
+    /// The resolved lane engine of the batch path.
+    pub fn batch_engine(&self) -> Engine {
+        self.batch_engine
     }
 
     /// The paper's headline configuration (Table-I segments, n = 5) on a
@@ -254,12 +276,14 @@ impl Divider for TaylorDivider {
     /// monomorphizes the whole batch against one multiplier.
     fn div_bits_batch(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding, out: &mut [u64]) {
         let tile = self.batch_tile;
+        let eng = self.batch_engine;
         match &mut self.backend {
             BackendImpl::Exact(m) => kernel::divide_batch(
                 &self.cfg,
                 m,
                 &mut self.batch_scratch,
                 tile,
+                eng,
                 a,
                 b,
                 fmt,
@@ -271,6 +295,7 @@ impl Divider for TaylorDivider {
                 m,
                 &mut self.batch_scratch,
                 tile,
+                eng,
                 a,
                 b,
                 fmt,
@@ -639,6 +664,38 @@ mod tests {
             for i in 0..a.len() {
                 let want = d.div_bits(a[i], b[i], fmt, Rounding::NearestEven);
                 assert_eq!(out[i], want, "{} lane {i}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_simd_choice_bit_identical_and_forced_follows_host() {
+        // Forced-scalar and (when the host supports it) forced-SIMD
+        // through the divider's own setter must agree bit for bit with
+        // the per-lane scalar path on a specials-heavy batch.
+        let a: Vec<u64> = [6.0f32, -1.5, f32::NAN, 0.0, 1.0e-40, 355.0, 9.0, 0.1, 2.5]
+            .iter()
+            .map(|x| x.to_bits() as u64)
+            .collect();
+        let b: Vec<u64> = [2.0f32, 3.0, 2.0, 3.0, 3.0, 113.0, 3.0, 0.7, 2.5]
+            .iter()
+            .map(|x| x.to_bits() as u64)
+            .collect();
+        let mut choices = vec![SimdChoice::Scalar, SimdChoice::Auto];
+        if crate::simd::simd_available() {
+            choices.push(SimdChoice::Forced);
+        } else {
+            let mut d = TaylorDivider::paper_exact();
+            assert!(d.set_batch_simd(SimdChoice::Forced).is_err());
+        }
+        for choice in choices {
+            let mut d = TaylorDivider::paper_exact();
+            d.set_batch_simd(choice).unwrap();
+            let mut out = vec![0u64; a.len()];
+            d.div_bits_batch(&a, &b, F32, Rounding::NearestEven, &mut out);
+            for i in 0..a.len() {
+                let want = d.div_bits(a[i], b[i], F32, Rounding::NearestEven);
+                assert_eq!(out[i], want, "{choice:?} lane {i}");
             }
         }
     }

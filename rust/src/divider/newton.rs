@@ -45,7 +45,7 @@ impl NewtonDivider {
     /// datapath. The seed is good to ~2^-9 (m_max ≈ 2.2e-3 ⇒ relative
     /// error < 2^-8.8), so 3 quadratic iterations exceed 53 bits.
     pub fn paper_default() -> Self {
-        let bounds = crate::pla::derive_segments(5, 53);
+        let bounds = crate::pla::derive_segments(5, 53).expect("Table-I derivation");
         Self::new(3, 60, SegmentTable::build(&bounds, 60))
     }
 
@@ -107,7 +107,7 @@ mod tests {
         // count; correct bits must roughly double until the datapath floor.
         let mut worst_bits = Vec::new();
         for k in 0..4 {
-            let bounds = crate::pla::derive_segments(5, 53);
+            let bounds = crate::pla::derive_segments(5, 53).expect("Table-I derivation");
             let mut d = NewtonDivider::new(k, 60, SegmentTable::build(&bounds, 60));
             let mut worst: f64 = 0.0;
             let scale = (1u128 << 60) as f64;

@@ -188,7 +188,7 @@ pub fn round_pack(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fp::format::{F32, F64};
+    use crate::fp::format::{BF16, F16, F32, F64};
 
     fn pack_f32(sign: bool, exp: i32, sig: u128, q: u32, rm: Rounding) -> f32 {
         let (bits, _) = round_pack(sign, exp, sig, q, false, F32, rm);
@@ -335,6 +335,152 @@ mod tests {
             assert_eq!(packed, bits);
             assert!(!inexact);
         }
+    }
+
+    #[test]
+    fn f16_subnormal_flush_directed_edges() {
+        // f16: frac_bits = 10, emin = −14, smallest subnormal 2^−24.
+        // A deficit beyond frac_bits + 2 (value 2^−27, deficit 13) takes
+        // the total-flush path: only the away-from-zero directed mode
+        // may produce the smallest subnormal.
+        let q = 30u32;
+        for (rm, want) in [
+            (Rounding::NearestEven, F16.zero(false)),
+            (Rounding::TowardZero, F16.zero(false)),
+            (Rounding::TowardNegative, F16.zero(false)),
+            (Rounding::TowardPositive, F16.assemble(false, 0, 1)),
+        ] {
+            let (bits, inexact) = round_pack(false, -27, 1 << q, q, false, F16, rm);
+            assert_eq!(bits, want, "{rm:?}");
+            assert!(inexact, "{rm:?}");
+        }
+        // Mirrored for the negative sign.
+        let (bits, _) = round_pack(true, -27, 1 << q, q, false, F16, Rounding::TowardNegative);
+        assert_eq!(bits, F16.assemble(true, 0, 1));
+        let (bits, _) = round_pack(true, -27, 1 << q, q, false, F16, Rounding::TowardPositive);
+        assert_eq!(bits, F16.zero(true));
+        let (bits, _) = round_pack(true, -27, 1 << q, q, false, F16, Rounding::TowardZero);
+        assert_eq!(bits, F16.zero(true));
+    }
+
+    #[test]
+    fn f16_subnormal_deficit_boundary_and_tie() {
+        let q = 30u32;
+        // Deficit exactly frac_bits + 2 = 12 (value 2^−26 < half the
+        // smallest subnormal): the re-derive path, sticky set, guard
+        // clear — nearest flushes to zero, toward-positive rounds to
+        // the smallest subnormal.
+        let (bits, inexact) =
+            round_pack(false, -26, 1 << q, q, false, F16, Rounding::NearestEven);
+        assert_eq!(bits, F16.zero(false));
+        assert!(inexact);
+        let (bits, _) = round_pack(false, -26, 1 << q, q, false, F16, Rounding::TowardPositive);
+        assert_eq!(bits, F16.assemble(false, 0, 1));
+        // Exactly half the smallest subnormal (2^−25): a true tie —
+        // nearest-even picks zero (even), directed modes split by sign.
+        let (bits, _) = round_pack(false, -25, 1 << q, q, false, F16, Rounding::NearestEven);
+        assert_eq!(bits, F16.zero(false), "tie must go to even (zero)");
+        let (bits, _) = round_pack(false, -25, 1 << q, q, false, F16, Rounding::TowardPositive);
+        assert_eq!(bits, F16.assemble(false, 0, 1));
+        let (bits, _) = round_pack(false, -25, 1 << q, q, false, F16, Rounding::TowardZero);
+        assert_eq!(bits, F16.zero(false));
+        // Just above the tie: sticky breaks it upward under nearest.
+        let (bits, _) =
+            round_pack(false, -25, (1u128 << q) + 1, q, false, F16, Rounding::NearestEven);
+        assert_eq!(bits, F16.assemble(false, 0, 1));
+    }
+
+    #[test]
+    fn f16_rounds_up_across_subnormal_normal_boundary() {
+        // (2 − 2^−24)·2^−15 = (1 − 2^−25)·2^−14, just below the smallest
+        // normal: nearest rounds up into it, toward-zero stays at the
+        // largest subnormal.
+        let sig = (1u128 << 25) - 1; // 25 ones, msb 24 → value ≈ 2·(1−2^−25)
+        let (bits, inexact) = round_pack(false, -15, sig, 24, false, F16, Rounding::NearestEven);
+        assert_eq!(bits, F16.assemble(false, 1, 0), "smallest normal");
+        assert!(inexact);
+        let (bits, _) = round_pack(false, -15, sig, 24, false, F16, Rounding::TowardZero);
+        assert_eq!(bits, F16.assemble(false, 0, F16.frac_mask()), "largest subnormal");
+        let (bits, _) = round_pack(true, -15, sig, 24, false, F16, Rounding::TowardNegative);
+        assert_eq!(bits, F16.assemble(true, 1, 0), "−smallest normal (away from zero)");
+    }
+
+    #[test]
+    fn f16_overflow_directed_edges() {
+        // Above emax = 15: nearest → Inf, toward-zero → max finite
+        // (65504), and the directed modes saturate toward their side.
+        let q = 30u32;
+        let (bits, inexact) = round_pack(false, 16, 1 << q, q, false, F16, Rounding::NearestEven);
+        assert_eq!(bits, F16.inf(false));
+        assert!(inexact);
+        let (bits, _) = round_pack(false, 16, 1 << q, q, false, F16, Rounding::TowardZero);
+        assert_eq!(bits, F16.max_finite(false));
+        let (bits, _) = round_pack(false, 16, 1 << q, q, false, F16, Rounding::TowardNegative);
+        assert_eq!(bits, F16.max_finite(false));
+        let (bits, _) = round_pack(false, 16, 1 << q, q, false, F16, Rounding::TowardPositive);
+        assert_eq!(bits, F16.inf(false));
+        let (bits, _) = round_pack(true, 16, 1 << q, q, false, F16, Rounding::TowardPositive);
+        assert_eq!(bits, F16.max_finite(true));
+        let (bits, _) = round_pack(true, 16, 1 << q, q, false, F16, Rounding::TowardNegative);
+        assert_eq!(bits, F16.inf(true));
+        // Sanity: f16 max finite is 65504.
+        assert_eq!(F16.max_finite(false), 0x7BFF);
+    }
+
+    #[test]
+    fn bf16_subnormal_flush_and_deficit_boundary() {
+        // bf16: frac_bits = 7, emin = −126, smallest subnormal 2^−133.
+        let q = 40u32;
+        // Deficit 10 > frac_bits + 2 = 9 (value 2^−136): total flush.
+        for (rm, want) in [
+            (Rounding::NearestEven, BF16.zero(false)),
+            (Rounding::TowardZero, BF16.zero(false)),
+            (Rounding::TowardPositive, BF16.assemble(false, 0, 1)),
+        ] {
+            let (bits, inexact) = round_pack(false, -136, 1 << q, q, false, BF16, rm);
+            assert_eq!(bits, want, "{rm:?}");
+            assert!(inexact);
+        }
+        let (bits, _) = round_pack(true, -136, 1 << q, q, false, BF16, Rounding::TowardNegative);
+        assert_eq!(bits, BF16.assemble(true, 0, 1));
+        // Half the smallest subnormal (2^−134): tie → even (zero) under
+        // nearest; away-from-zero directed mode rounds up.
+        let (bits, _) = round_pack(false, -134, 1 << q, q, false, BF16, Rounding::NearestEven);
+        assert_eq!(bits, BF16.zero(false));
+        let (bits, _) = round_pack(false, -134, 1 << q, q, false, BF16, Rounding::TowardPositive);
+        assert_eq!(bits, BF16.assemble(false, 0, 1));
+        // Smallest subnormal itself survives exactly.
+        let (bits, inexact) =
+            round_pack(false, -133, 1 << q, q, false, BF16, Rounding::NearestEven);
+        assert_eq!(bits, BF16.assemble(false, 0, 1));
+        assert!(!inexact);
+        // Just below the smallest normal rounds up into it (nearest) or
+        // stays at the largest subnormal (toward zero).
+        let sig = (1u128 << 22) - 1; // 22 ones, msb 21 → ≈ 2·(1−2^−22)
+        let (bits, _) = round_pack(false, -127, sig, 21, false, BF16, Rounding::NearestEven);
+        assert_eq!(bits, BF16.assemble(false, 1, 0));
+        let (bits, _) = round_pack(false, -127, sig, 21, false, BF16, Rounding::TowardZero);
+        assert_eq!(bits, BF16.assemble(false, 0, BF16.frac_mask()));
+    }
+
+    #[test]
+    fn bf16_overflow_directed_edges() {
+        let q = 40u32;
+        let (bits, _) = round_pack(false, 128, 1 << q, q, false, BF16, Rounding::NearestEven);
+        assert_eq!(bits, BF16.inf(false));
+        let (bits, _) = round_pack(false, 128, 1 << q, q, false, BF16, Rounding::TowardZero);
+        assert_eq!(bits, BF16.max_finite(false));
+        let (bits, _) = round_pack(true, 128, 1 << q, q, false, BF16, Rounding::TowardPositive);
+        assert_eq!(bits, BF16.max_finite(true));
+        let (bits, _) = round_pack(true, 128, 1 << q, q, false, BF16, Rounding::TowardNegative);
+        assert_eq!(bits, BF16.inf(true));
+        // Carry-out of an all-ones significand overflows to Inf under
+        // nearest even at the very top of the range.
+        let sig = (1u128 << 9) - 1; // 1.11111111₂ at q = 8 (9 ones)
+        let (bits, _) = round_pack(false, 127, sig, 8, false, BF16, Rounding::NearestEven);
+        assert_eq!(bits, BF16.inf(false));
+        let (bits, _) = round_pack(false, 127, sig, 8, false, BF16, Rounding::TowardZero);
+        assert_eq!(bits, BF16.max_finite(false));
     }
 
     #[test]

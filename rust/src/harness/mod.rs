@@ -48,7 +48,7 @@ pub fn gen_batch(workload: crate::analysis::Workload, n: usize, seed: u64) -> Di
 /// (segment edges of the Table-I partition, power-of-two neighbourhoods).
 pub fn gen_adversarial_batch(n: usize, seed: u64) -> DivBatch {
     let mut rng = Rng::new(seed);
-    let bounds = crate::pla::derive_segments(5, 53);
+    let bounds = crate::pla::derive_segments(5, 53).expect("Table-I derivation (n=5, 53-bit)");
     let mut a = Vec::with_capacity(n);
     let mut b = Vec::with_capacity(n);
     for i in 0..n {
@@ -298,21 +298,32 @@ pub fn bench_history_path() -> String {
 
 /// Read a bench-history file (one JSON record per line, as written by
 /// [`write_bench_json`]) — the reading counterpart used by
-/// `tsdiv bench-trend`. Blank lines are skipped; a malformed line is an
-/// error naming its line number, so a corrupted history is loud rather
-/// than silently truncated.
+/// `tsdiv bench-trend`. Blank lines are skipped; a malformed line in the
+/// **middle** of the file is an error naming its line number (a
+/// corrupted history is loud rather than silently truncated), but a
+/// malformed **final** record is skipped with a warning: the appender
+/// can be interrupted mid-write (CI cancellation, full disk), and one
+/// torn trailing line must not kill every future trend report.
 pub fn read_bench_history(path: &str) -> crate::util::error::Result<Vec<crate::util::json::Json>> {
     use crate::util::error::Context as _;
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading bench history {path}"))?;
+    let lines: Vec<&str> = text.lines().collect();
+    let last_nonblank = lines.iter().rposition(|l| !l.trim().is_empty());
     let mut records = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
+    for (lineno, line) in lines.iter().enumerate() {
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
         match crate::util::json::parse(line) {
             Ok(j) => records.push(j),
+            Err(e) if Some(lineno) == last_nonblank => {
+                crate::log_warn!(
+                    "{path}:{}: skipping malformed trailing record (likely a torn append): {e}",
+                    lineno + 1
+                );
+            }
             Err(e) => crate::bail!("{path}:{}: {e}", lineno + 1),
         }
     }
@@ -429,7 +440,17 @@ mod tests {
         assert_eq!(records.len(), 2, "blank lines skipped");
         assert_eq!(records[0].get("bench").and_then(|j| j.as_str()), Some("a"));
         assert_eq!(records[1].get("x").and_then(|j| j.as_f64()), Some(2.5));
-        std::fs::write(&path, "{\"bench\":\"a\"}\nnot json\n").unwrap();
+        // A torn trailing line (interrupted appender) is skipped with a
+        // warning — the intact prefix still loads…
+        std::fs::write(&path, "{\"bench\":\"a\"}\n{\"bench\":\"b\",\"x\"").unwrap();
+        let records = read_bench_history(&path).unwrap();
+        assert_eq!(records.len(), 1, "torn trailing record skipped");
+        // …including when blank lines follow the torn record.
+        std::fs::write(&path, "{\"bench\":\"a\"}\nnot json\n\n").unwrap();
+        assert_eq!(read_bench_history(&path).unwrap().len(), 1);
+        // …but corruption in the middle of the file is still an error
+        // naming its line.
+        std::fs::write(&path, "{\"bench\":\"a\"}\nnot json\n{\"bench\":\"c\"}\n").unwrap();
         let e = read_bench_history(&path).unwrap_err();
         assert!(e.to_string().contains(":2:"), "line number in {e}");
         let _ = std::fs::remove_file(&path);

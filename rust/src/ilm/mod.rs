@@ -18,6 +18,8 @@ pub mod priority_encoder;
 
 pub use priority_encoder::{leading_one_pos, lod, priority_encode};
 
+use crate::simd::Engine;
+
 /// Outcome of an ILM multiplication.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct IlmResult {
@@ -131,6 +133,83 @@ pub fn ilm_rel_error(n1: u64, n2: u64, iterations: u32) -> f64 {
 #[inline]
 pub fn ilm_mul_fixed(a: u64, b: u64, frac_bits: u32, iterations: u32) -> u64 {
     (ilm_mul(a, b, iterations).product >> frac_bits) as u64
+}
+
+/// Lane-array fixed-point ILM multiplies:
+/// `out[i] = ilm_mul_fixed(a[i], b[i], frac_bits, iterations)` — the
+/// odd-power stage of the [`crate::kernel`] pipeline, restructured for
+/// the explicit lane engine ([`crate::simd`]). Each correction **stage**
+/// runs over the whole tile: the priority-encoder inner loop is one
+/// [`Engine::priority_encode_batch`] pass per operand array
+/// (branch-light, lane-parallel), followed by the eq-24 assembly. Per
+/// lane the executed operation sequence is exactly [`ilm_mul`]'s —
+/// settled lanes (a residue hit zero) skip their remaining stages like
+/// the scalar early-out — so results are bit-identical per lane; the
+/// unit test pins this per engine.
+pub fn ilm_mul_fixed_batch(
+    eng: Engine,
+    a: &[u64],
+    b: &[u64],
+    frac_bits: u32,
+    iterations: u32,
+    out: &mut [u64],
+) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    const W: usize = 16;
+    let mut k1 = [0u32; W];
+    let mut k2 = [0u32; W];
+    let mut r1 = [0u64; W];
+    let mut r2 = [0u64; W];
+    let mut acc = [0u128; W];
+    let mut done = 0;
+    while done < a.len() {
+        let n = (a.len() - done).min(W);
+        let ac = &a[done..done + n];
+        let bc = &b[done..done + n];
+        // Stage 0 — eq (24) over the tile: one PE pass per operand
+        // array, then the basic-block assembly. Zero operands settle
+        // immediately (product 0), mirroring the scalar short-circuit.
+        eng.priority_encode_batch(ac, &mut k1[..n], &mut r1[..n]);
+        eng.priority_encode_batch(bc, &mut k2[..n], &mut r2[..n]);
+        for j in 0..n {
+            if ac[j] == 0 || bc[j] == 0 {
+                acc[j] = 0;
+                r1[j] = 0;
+                r2[j] = 0;
+            } else {
+                acc[j] = (1u128 << (k1[j] + k2[j]))
+                    + ((r1[j] as u128) << k2[j])
+                    + ((r2[j] as u128) << k1[j]);
+            }
+        }
+        // Correction stages (eq 26–27): the error term is itself a
+        // product of the residues, so the same block iterates. A lane
+        // whose residue reached zero is exact and contributes nothing
+        // further, exactly like the scalar loop's early return.
+        for _stage in 0..iterations {
+            if (0..n).all(|j| r1[j] == 0 || r2[j] == 0) {
+                break;
+            }
+            let p1 = r1;
+            let p2 = r2;
+            eng.priority_encode_batch(&p1[..n], &mut k1[..n], &mut r1[..n]);
+            eng.priority_encode_batch(&p2[..n], &mut k2[..n], &mut r2[..n]);
+            for j in 0..n {
+                if p1[j] == 0 || p2[j] == 0 {
+                    r1[j] = 0;
+                    r2[j] = 0;
+                } else {
+                    acc[j] += (1u128 << (k1[j] + k2[j]))
+                        + ((r1[j] as u128) << k2[j])
+                        + ((r2[j] as u128) << k1[j]);
+                }
+            }
+        }
+        for (o, &p) in out[done..done + n].iter_mut().zip(acc[..n].iter()) {
+            *o = (p >> frac_bits) as u64;
+        }
+        done += n;
+    }
 }
 
 #[cfg(test)]
@@ -294,6 +373,36 @@ mod tests {
         let b = 257u64; // ~1.00390625
         let exact = (257u128 * 257) >> 8; // truncated exact
         assert_eq!(ilm_mul_fixed(b, b, 8, 8) as u128, exact);
+    }
+
+    #[test]
+    fn fixed_point_batch_matches_scalar_ilm_every_engine_and_budget() {
+        // 41 lanes (not a tile multiple): zeros, powers of two (settle at
+        // stage 0), dense mantissas (use the whole budget), random. The
+        // staged tile recursion must equal per-lane ilm_mul bit for bit.
+        let mut a: Vec<u64> = vec![0, 1, 3, 1 << 20, (1 << 24) - 1, 0xFFFF, 7, 0];
+        let mut b: Vec<u64> = vec![5, 0, 3, 1 << 10, (1 << 24) - 1, 0xF0F0, 7, 0];
+        let mut rng = crate::util::rng::Rng::new(29);
+        while a.len() < 41 {
+            a.push(rng.next_u64() >> rng.below(40));
+            b.push(rng.next_u64() >> rng.below(40));
+        }
+        let mut out = vec![0u64; a.len()];
+        for eng in crate::simd::engines_available() {
+            for iters in [0u32, 1, 3, 8, 64] {
+                ilm_mul_fixed_batch(eng, &a, &b, 16, iters, &mut out);
+                for i in 0..a.len() {
+                    assert_eq!(
+                        out[i],
+                        ilm_mul_fixed(a[i], b[i], 16, iters),
+                        "{} lane {i} ({} × {}) iters={iters}",
+                        eng.name(),
+                        a[i],
+                        b[i]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

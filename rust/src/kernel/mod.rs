@@ -6,8 +6,10 @@
 //! ILM/squaring units, final multiply, round. Before this module the
 //! software model executed that pipeline one lane at a time inside
 //! `TaylorDivider::div_bits_batch`; here each stage instead runs over
-//! whole lane arrays in fixed-width tiles, so the stage loops are
-//! branch-light, monomorphized, and autovectorizable:
+//! whole lane arrays in fixed-width tiles, and the stage loops execute
+//! on an **explicit lane engine** ([`crate::simd`]: AVX2 when selected,
+//! a scalar-unrolled fallback otherwise — `KernelConfig::simd` picks),
+//! so the lane parallelism is guaranteed, not an autovectorization hope:
 //!
 //! ```text
 //!   a[], b[] ──► plan ──► seed ──► power ──► mul_round ──► out[]
@@ -41,8 +43,9 @@ pub mod stages;
 use crate::bail;
 use crate::fp::{Format, Rounding};
 use crate::powering::Multiplier;
+use crate::simd::{Engine, SimdChoice};
 use crate::taylor::TaylorConfig;
-use crate::util::error::Result;
+use crate::util::error::{Context as _, Result};
 
 /// Default lane-tile width of the staged pipeline. Eight lanes keeps the
 /// whole working set (x, y0, m, powers, sum) inside L1 while giving the
@@ -80,6 +83,10 @@ pub struct KernelConfig {
     /// ILM correction budget of the multiplier backend
     /// (`None` = exact multiplies).
     pub ilm_iterations: Option<u32>,
+    /// Lane engine under the stage loops ([`crate::simd`]): auto-detect,
+    /// force the vector engine (error on unsupported hosts), or pin the
+    /// scalar fallback (the autovectorization baseline).
+    pub simd: SimdChoice,
 }
 
 impl Default for KernelConfig {
@@ -87,13 +94,16 @@ impl Default for KernelConfig {
         Self {
             tile: DEFAULT_TILE,
             ilm_iterations: None,
+            simd: SimdChoice::Auto,
         }
     }
 }
 
 impl KernelConfig {
     /// Reject configurations that could only fail later inside a worker
-    /// thread (mirrors `ServiceConfig::validate`).
+    /// thread (mirrors `ServiceConfig::validate`). A `Forced` SIMD
+    /// choice on a host without AVX2 is rejected here, so a misdeployed
+    /// service fails its start call instead of its first batch.
     pub fn validate(&self) -> Result<()> {
         if self.tile == 0 {
             bail!("kernel config: tile must be ≥ 1 lane");
@@ -101,7 +111,7 @@ impl KernelConfig {
         if self.tile > 1 << 20 {
             bail!("kernel config: tile of {} lanes exceeds any batch", self.tile);
         }
-        Ok(())
+        self.simd.validate().context("kernel config")
     }
 }
 
@@ -154,11 +164,13 @@ pub struct KernelScratch {
     // whose reciprocal missed the cache this tile.
     miss_pos: Vec<u32>,
     miss_x: Vec<u64>,
-    // Seed / powering staging over the miss lanes.
+    // Seed / powering staging over the miss lanes. The accumulator is
+    // u64 with wrapping lane adds — bit-identical to the scalar path's
+    // u128-then-truncate (see [`stages::power`]).
     y0: Vec<u64>,
     m: Vec<u64>,
     pow: Vec<u64>,
-    sum: Vec<u128>,
+    sum: Vec<u64>,
     recip: Vec<u64>,
     // The divisor-reciprocal cache. x ≥ 1.0 in Q2.F, so the zero reset
     // keys can never collide with a real divisor. Reset at the start of
@@ -177,16 +189,20 @@ impl KernelScratch {
 }
 
 /// Run the staged pipeline over one batch: `out[i] = a[i] / b[i]`, all
-/// slices the same length, bit patterns of `fmt`, rounded under `rm`.
+/// slices the same length, bit patterns of `fmt`, rounded under `rm`,
+/// with the seed/power stage loops driven by the lane engine `eng`.
 ///
 /// Bit-identical to calling `TaylorDivider::div_bits` per lane with the
-/// same `cfg` and multiplier backend.
+/// same `cfg` and multiplier backend — for **every** engine (the engines
+/// are bit-identical to each other by construction; property tests pin
+/// forced-SIMD against forced-scalar against the scalar datapath).
 #[allow(clippy::too_many_arguments)]
 pub fn divide_batch<M: Multiplier>(
     cfg: &TaylorConfig,
     backend: &mut M,
     scratch: &mut KernelScratch,
     tile: usize,
+    eng: Engine,
     a: &[u64],
     b: &[u64],
     fmt: Format,
@@ -253,8 +269,8 @@ pub fn divide_batch<M: Multiplier>(
             }
         }
         if !miss_pos.is_empty() {
-            stages::seed(&cfg.table, miss_x, y0);
-            stages::power(backend, f, cfg.order, miss_x, y0, m, pow, sum, recip);
+            stages::seed(eng, &cfg.table, miss_x, y0);
+            stages::power(eng, backend, f, cfg.order, miss_x, y0, m, pow, sum, recip);
             for (k, &pos) in miss_pos.iter().enumerate() {
                 let x = miss_x[k];
                 let way = cache_way(x);
@@ -283,11 +299,14 @@ mod tests {
         xs.iter().map(|&x| x.to_bits() as u64).collect()
     }
 
-    /// Drive the kernel directly (fresh scratch) with a given tile.
-    fn kernel_divide(
+    /// Drive the kernel directly (fresh scratch) with a given tile and
+    /// engine.
+    #[allow(clippy::too_many_arguments)]
+    fn kernel_divide_on(
         cfg: &TaylorConfig,
         ilm: Option<u32>,
         tile: usize,
+        eng: Engine,
         a: &[u64],
         b: &[u64],
         fmt: Format,
@@ -298,14 +317,27 @@ mod tests {
         match ilm {
             None => {
                 let mut be = ExactMul::default();
-                divide_batch(cfg, &mut be, &mut scratch, tile, a, b, fmt, rm, &mut out);
+                divide_batch(cfg, &mut be, &mut scratch, tile, eng, a, b, fmt, rm, &mut out);
             }
             Some(k) => {
                 let mut be = IlmBackend::new(k);
-                divide_batch(cfg, &mut be, &mut scratch, tile, a, b, fmt, rm, &mut out);
+                divide_batch(cfg, &mut be, &mut scratch, tile, eng, a, b, fmt, rm, &mut out);
             }
         }
         out
+    }
+
+    /// Scalar-engine shorthand for tests whose point is not the engine.
+    fn kernel_divide(
+        cfg: &TaylorConfig,
+        ilm: Option<u32>,
+        tile: usize,
+        a: &[u64],
+        b: &[u64],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Vec<u64> {
+        kernel_divide_on(cfg, ilm, tile, Engine::Scalar, a, b, fmt, rm)
     }
 
     #[test]
@@ -313,6 +345,7 @@ mod tests {
         let cfg = KernelConfig::default();
         assert_eq!(cfg.tile, DEFAULT_TILE);
         assert_eq!(cfg.ilm_iterations, None);
+        assert_eq!(cfg.simd, SimdChoice::Auto);
         assert!(cfg.validate().is_ok());
         assert!(KernelConfig { tile: 0, ..cfg }.validate().is_err());
         assert!(KernelConfig { tile: 1, ..cfg }.validate().is_ok());
@@ -322,6 +355,46 @@ mod tests {
         }
         .validate()
         .is_err());
+        // The scalar engine always validates; Forced follows the host.
+        assert!(KernelConfig {
+            simd: SimdChoice::Scalar,
+            ..cfg
+        }
+        .validate()
+        .is_ok());
+        let forced = KernelConfig {
+            simd: SimdChoice::Forced,
+            ..cfg
+        };
+        assert_eq!(forced.validate().is_ok(), crate::simd::simd_available());
+    }
+
+    #[test]
+    fn every_engine_matches_the_scalar_datapath() {
+        // The same batch through each available engine: identical to the
+        // scalar div_bits per lane, and identical across engines.
+        let cfg = TaylorConfig::paper_default(60);
+        let mut rng = Rng::new(4242);
+        for fmt in ALL_FORMATS {
+            let (a, b) = crate::harness::gen_bits_batch(fmt, 73, 7, rng.next_u64());
+            let mut d = TaylorDivider::paper_exact();
+            let want: Vec<u64> = (0..a.len())
+                .map(|i| d.div_bits(a[i], b[i], fmt, Rounding::TowardNegative))
+                .collect();
+            for eng in crate::simd::engines_available() {
+                let got = kernel_divide_on(
+                    &cfg,
+                    None,
+                    DEFAULT_TILE,
+                    eng,
+                    &a,
+                    &b,
+                    fmt,
+                    Rounding::TowardNegative,
+                );
+                assert_eq!(got, want, "{} {}", eng.name(), fmt.name());
+            }
+        }
     }
 
     #[test]
@@ -406,8 +479,10 @@ mod tests {
         let b = bits32(&[3.0, 3.0, 3.0]);
         let mut out1 = vec![0u64; 3];
         let mut out2 = vec![0u64; 3];
-        divide_batch(&cfg, &mut be, &mut scratch, 8, &a1, &b, F32, Rounding::NearestEven, &mut out1);
-        divide_batch(&cfg, &mut be, &mut scratch, 8, &a2, &b, F32, Rounding::NearestEven, &mut out2);
+        let eng = Engine::Scalar;
+        let rm = Rounding::NearestEven;
+        divide_batch(&cfg, &mut be, &mut scratch, 8, eng, &a1, &b, F32, rm, &mut out1);
+        divide_batch(&cfg, &mut be, &mut scratch, 8, eng, &a2, &b, F32, rm, &mut out2);
         let mut d = TaylorDivider::paper_exact();
         for i in 0..3 {
             assert_eq!(out1[i], d.div_bits(a1[i], b[i], F32, Rounding::NearestEven));
@@ -447,6 +522,7 @@ mod tests {
             &mut be,
             &mut scratch,
             8,
+            Engine::Scalar,
             &[0, 0],
             &[0, 0],
             F32,

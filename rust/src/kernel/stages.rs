@@ -3,16 +3,20 @@
 //! Each stage is a free function over plain slices so the loop bodies
 //! stay branch-light and monomorphize against one multiplier backend —
 //! the whole point of the kernel layout (see the module docs of
-//! [`super`]). The per-lane arithmetic is copied operation-for-operation
-//! from the scalar datapath ([`crate::taylor::reciprocal_fast`] and
-//! `TaylorDivider::div_bits`), so results are bit-identical; only the
-//! loop nesting differs.
+//! [`super`]). The seed and power stages additionally run on an explicit
+//! lane engine ([`crate::simd::Engine`]): the per-op lane loops are
+//! vector ops (AVX2 when selected, scalar-unrolled otherwise) instead of
+//! autovectorization hopes. The per-lane arithmetic is copied
+//! operation-for-operation from the scalar datapath
+//! ([`crate::taylor::reciprocal_fast`] and `TaylorDivider::div_bits`),
+//! so results are bit-identical; only the loop nesting differs.
 
 use super::LanePlan;
 use crate::divider::{prepare, Prepared};
 use crate::fp::{round_pack, Format, Rounding};
 use crate::pla::SegmentTable;
 use crate::powering::Multiplier;
+use crate::simd::Engine;
 
 /// Stage 1 — plan: unpack both operands per `fmt`, resolve the IEEE
 /// special cases (NaN/Inf/zero rules) straight into `out` (the
@@ -42,11 +46,13 @@ pub fn plan(a: &[u64], b: &[u64], fmt: Format, shift: u32, lanes: &mut LanePlan,
 }
 
 /// Stage 2 — seed: PLA segment lookup (compare tree + one multiply) for
-/// a tile of divisor significands, `y0[i] ≈ 1/x[i]`.
-pub fn seed(table: &SegmentTable, x: &[u64], y0: &mut Vec<u64>) {
+/// a tile of divisor significands, `y0[i] ≈ 1/x[i]`, on the explicit
+/// lane engine (the compare tree runs as an edge-count pass, see
+/// [`SegmentTable::seed_batch`]).
+pub fn seed(eng: Engine, table: &SegmentTable, x: &[u64], y0: &mut Vec<u64>) {
     y0.clear();
     y0.resize(x.len(), 0);
-    table.seed_batch(x, y0);
+    table.seed_batch(eng, x, y0);
 }
 
 /// Stage 3 — power: Taylor powering over a tile.
@@ -62,8 +68,15 @@ pub fn seed(table: &SegmentTable, x: &[u64], y0: &mut Vec<u64>) {
 /// zero operands to zero products, so the power rows contribute nothing
 /// and `S` collapses to `1 + m = 1`, exactly as the scalar path's
 /// early-out computes it.
+///
+/// The accumulator runs in **wrapping u64** lane adds on the engine: the
+/// scalar datapath sums in `u128` and truncates exactly once (`s as
+/// u64`) before the final multiply, and addition commutes with
+/// truncation mod 2^64, so the low 64 bits — the only ones that ever
+/// reach the datapath — are bit-identical.
 #[allow(clippy::too_many_arguments)]
 pub fn power<M: Multiplier>(
+    eng: Engine,
     backend: &mut M,
     f: u32,
     order: u32,
@@ -71,7 +84,7 @@ pub fn power<M: Multiplier>(
     y0: &[u64],
     m: &mut Vec<u64>,
     pow: &mut Vec<u64>,
-    sum: &mut Vec<u128>,
+    sum: &mut Vec<u64>,
     recip: &mut Vec<u64>,
 ) {
     let k = x.len();
@@ -83,18 +96,17 @@ pub fn power<M: Multiplier>(
     // ≥ 0: m(x) = (1 − 2x/(a+b))²).
     m.clear();
     m.resize(k, 0);
-    backend.mul_fixed_hot_batch(x, y0, f, m);
-    for v in m.iter_mut() {
-        *v = one.saturating_sub(*v);
-    }
+    backend.mul_fixed_hot_batch(eng, x, y0, f, m);
+    eng.rsub_sat(one, m);
 
-    // Accumulator S = 1 + Σ_{p≤order} m^p, in u128 like the scalar path
-    // (the final cast to u64 truncates identically).
+    // Accumulator S = 1 + Σ_{p≤order} m^p (wrapping lane adds, see the
+    // function docs).
     sum.clear();
+    sum.resize(k, 0);
     if order == 0 {
-        sum.resize(k, one as u128);
+        sum.fill(one);
     } else {
-        sum.extend(m.iter().map(|&mm| one as u128 + mm as u128));
+        eng.fill_add(one, m, sum);
         if order >= 2 {
             // pow rows: pow[(p−1)·k .. p·k] = m^p; row 0 is m itself.
             pow.clear();
@@ -106,27 +118,22 @@ pub fn power<M: Multiplier>(
                 if p % 2 == 0 {
                     // Even power: squaring unit on m^(p/2).
                     let half = &lower[(p as usize / 2 - 1) * k..][..k];
-                    backend.square_fixed_hot_batch(half, f, dst);
+                    backend.square_fixed_hot_batch(eng, half, f, dst);
                 } else {
                     // Odd power: multiplier with the cached base operand.
                     let prev = &lower[(p as usize - 2) * k..][..k];
-                    backend.mul_fixed_hot_batch(prev, m, f, dst);
+                    backend.mul_fixed_hot_batch(eng, prev, m, f, dst);
                 }
-                for (s, &v) in sum.iter_mut().zip(dst.iter()) {
-                    *s += v as u128;
-                }
+                eng.add_wrapping(sum, dst);
             }
         }
     }
 
     // recip = y0 · S — the final multiply of the Fig-7 reciprocal
-    // datapath. Reuse `m` as the u64 staging of S.
-    for (mm, &s) in m.iter_mut().zip(sum.iter()) {
-        *mm = s as u64;
-    }
+    // datapath.
     recip.clear();
     recip.resize(k, 0);
-    backend.mul_fixed_hot_batch(y0, m, f, recip);
+    backend.mul_fixed_hot_batch(eng, y0, sum, f, recip);
 }
 
 /// Stage 4 — mul_round: the quotient significand `sig_a · recip`
@@ -181,17 +188,24 @@ mod tests {
             .map(|i| (1u64 << 60) + i * ((1u64 << 60) / 17) + 4321)
             .map(|x| x.min((1u64 << 61) - 1))
             .collect();
-        let mut y0 = Vec::new();
-        let mut m = Vec::new();
-        let mut pow = Vec::new();
-        let mut sum = Vec::new();
-        let mut recip = Vec::new();
-        let mut be = ExactMul::default();
-        seed(&cfg.table, &xs, &mut y0);
-        power(&mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
-        for (i, &x) in xs.iter().enumerate() {
-            let mut be2 = ExactMul::default();
-            assert_eq!(recip[i], reciprocal_fast(&cfg, &mut be2, x), "lane {i}");
+        for eng in crate::simd::engines_available() {
+            let mut y0 = Vec::new();
+            let mut m = Vec::new();
+            let mut pow = Vec::new();
+            let mut sum = Vec::new();
+            let mut recip = Vec::new();
+            let mut be = ExactMul::default();
+            seed(eng, &cfg.table, &xs, &mut y0);
+            power(eng, &mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
+            for (i, &x) in xs.iter().enumerate() {
+                let mut be2 = ExactMul::default();
+                assert_eq!(
+                    recip[i],
+                    reciprocal_fast(&cfg, &mut be2, x),
+                    "{} lane {i}",
+                    eng.name()
+                );
+            }
         }
     }
 
@@ -206,14 +220,22 @@ mod tests {
         let xs: Vec<u64> = (0..64)
             .map(|i| (1u64 << 60) + i * ((1u64 << 54) + 7))
             .collect();
-        let mut y0 = Vec::new();
-        let (mut m, mut pow, mut sum, mut recip) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        let mut be = ExactMul::default();
-        seed(&cfg.table, &xs, &mut y0);
-        power(&mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
-        for (i, &x) in xs.iter().enumerate() {
-            let mut be2 = ExactMul::default();
-            assert_eq!(recip[i], reciprocal_fast(&cfg, &mut be2, x), "lane {i}");
+        for eng in crate::simd::engines_available() {
+            let mut y0 = Vec::new();
+            let (mut m, mut pow, mut sum, mut recip) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            let mut be = ExactMul::default();
+            seed(eng, &cfg.table, &xs, &mut y0);
+            power(eng, &mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
+            for (i, &x) in xs.iter().enumerate() {
+                let mut be2 = ExactMul::default();
+                assert_eq!(
+                    recip[i],
+                    reciprocal_fast(&cfg, &mut be2, x),
+                    "{} lane {i}",
+                    eng.name()
+                );
+            }
         }
     }
 }

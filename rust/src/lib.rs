@@ -18,6 +18,9 @@
 //! * [`kernel`] — the staged structure-of-arrays batch pipeline
 //!   (plan → seed → power → mul_round in fixed-width lane tiles) shared
 //!   by the batch API and the service backends;
+//! * [`simd`] — the explicit lane engine under the kernel's stage loops
+//!   (`SimdChoice`: auto/forced/scalar; scalar-unrolled fallback + AVX2
+//!   behind runtime detection, bit-identical by construction);
 //! * [`hw`] — gate-level cost model reproducing the hardware claims
 //!   (Fig 4 vs Fig 5, "< 50 % hardware");
 //! * [`analysis`] — ULP/relative-error sweeps used by the benches;
@@ -41,6 +44,7 @@ pub mod kernel;
 pub mod pla;
 pub mod powering;
 pub mod runtime;
+pub mod simd;
 pub mod squaring;
 pub mod taylor;
 pub mod util;

@@ -59,8 +59,9 @@ fn print_usage() {
          \x20 hw               hardware cost model (Fig 4 vs Fig 5, system)\n\
          \x20 accuracy         divider-vs-gold accuracy report (add --samples N)\n\
          \x20 serve            run the division service under synthetic load\n\
-         \x20                  (--backend native|kernel|native-scalar|gold|pjrt,\n\
-         \x20                   --tile N and --ilm K configure the kernel backend)\n\
+         \x20                  (--backend native|kernel|native-scalar|gold|pjrt;\n\
+         \x20                   --tile N, --ilm K and --simd auto|forced|scalar\n\
+         \x20                   configure the kernel backend's lane engine)\n\
          \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run\n\
          \x20 selftest         quick health check across all layers\n",
         tsdiv::VERSION,
@@ -94,15 +95,34 @@ fn cmd_divide(args: Vec<String>) -> i32 {
     };
     let order: u32 = parsed.parse_or("order", 5);
     let frac: u32 = parsed.parse_or("frac-bits", 60);
+    // Reject configurations the datapath cannot serve — as errors, not
+    // panics (the same bounds the service's BackendChoice::validate
+    // enforces): the fast path's power buffer is MAX_FAST_ORDER wide,
+    // and this command divides in binary64, so the Q2.F datapath must
+    // cover 52..=61 fraction bits.
+    if order > tsdiv::taylor::MAX_FAST_ORDER {
+        eprintln!(
+            "--order {order} exceeds the fast-path maximum {}",
+            tsdiv::taylor::MAX_FAST_ORDER
+        );
+        return 2;
+    }
+    if !(52..=61).contains(&frac) {
+        eprintln!("--frac-bits must be 52..=61 (binary64 significand .. Q2.F-in-u64 limit)");
+        return 2;
+    }
     let kind = match parsed.get("ilm") {
         Some("") | None => BackendKind::Exact,
         Some(s) => BackendKind::Ilm {
             iterations: s.parse().unwrap_or(8),
         },
     };
-    let cfg = TaylorConfig {
-        order,
-        ..TaylorConfig::paper_default(frac)
+    let cfg = match TaylorConfig::try_paper_default(frac) {
+        Ok(base) => TaylorConfig { order, ..base },
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
     };
     let mut d = TaylorDivider::new(cfg, kind);
     let q32 = d.div_f32(a as f32, b as f32);
@@ -122,7 +142,13 @@ fn cmd_divide(args: Vec<String>) -> i32 {
 }
 
 fn cmd_table1() -> i32 {
-    let bounds = tsdiv::pla::derive_segments(5, 53);
+    let bounds = match tsdiv::pla::derive_segments(5, 53) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
     let mut t = Table::new(
         "Table I — segment boundaries (n=5, 53-bit)",
         &["boundary", "derived", "paper"],
@@ -138,6 +164,12 @@ fn cmd_table1() -> i32 {
 fn cmd_bounds() -> i32 {
     use tsdiv::pla::{derive_segments, equal_error_split, min_iterations, min_iterations_piecewise};
     let p = equal_error_split(1.0, 2.0);
+    // The solvers are fallible (a pathological precision target may
+    // never converge); the CLI shows the error in place of a value.
+    let show = |r: tsdiv::util::error::Result<u32>| match r {
+        Ok(n) => n.to_string(),
+        Err(e) => format!("error: {e}"),
+    };
     let mut t = Table::new(
         "minimum iterations for 53-bit precision (eq 17)",
         &["partition", "paper", "derived"],
@@ -146,17 +178,17 @@ fn cmd_bounds() -> i32 {
     t.row(&[
         "1 segment [1,2]".into(),
         "17".into(),
-        min_iterations(1.0, 2.0, 53).to_string(),
+        show(min_iterations(1.0, 2.0, 53)),
     ]);
     t.row(&[
         "2 segments at √2".into(),
         "15".into(),
-        min_iterations_piecewise(&[1.0, p, 2.0], 53).to_string(),
+        show(min_iterations_piecewise(&[1.0, p, 2.0], 53)),
     ]);
     t.row(&[
         "Table I (8 segments)".into(),
         "5".into(),
-        min_iterations_piecewise(&derive_segments(5, 53), 53).to_string(),
+        show(derive_segments(5, 53).and_then(|b| min_iterations_piecewise(&b, 53))),
     ]);
     t.print();
     println!("(the 2-segment row is a documented paper discrepancy — see EXPERIMENTS.md E5)");
@@ -234,6 +266,12 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         .opt("tile", "8", "kernel backend: lanes per SoA pipeline tile")
         .opt("ilm", "", "kernel backend: ILM correction budget (empty = exact)")
         .opt_choice(
+            "simd",
+            "auto",
+            &["auto", "forced", "scalar"],
+            "kernel backend: lane engine under the stage loops",
+        )
+        .opt_choice(
             "format",
             "f32",
             &["f16", "bf16", "f32", "f64", "mixed"],
@@ -281,9 +319,12 @@ fn cmd_serve(args: Vec<String>) -> i32 {
                     return 2;
                 }
             };
+            let simd = tsdiv::simd::SimdChoice::from_name(parsed.get_or("simd", "auto"))
+                .expect("opt_choice guarantees a valid simd name");
             let kernel = tsdiv::kernel::KernelConfig {
                 tile,
                 ilm_iterations,
+                simd,
             };
             if let Err(e) = kernel.validate() {
                 eprintln!("{e}");
@@ -301,6 +342,18 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             ilm_iterations: None,
         },
     };
+    // A pinned engine must never be silently ignored: only the kernel
+    // backend takes --simd (the others resolve the lane engine as
+    // 'auto', overridable process-wide via TSDIV_SIMD).
+    let simd_flag = parsed.get_or("simd", "auto");
+    if simd_flag != "auto" && !matches!(backend, BackendChoice::Kernel { .. }) {
+        eprintln!(
+            "--simd {simd_flag} only applies to --backend kernel; \
+             other backends resolve the lane engine as 'auto' \
+             (set TSDIV_SIMD to override process-wide)"
+        );
+        return 2;
+    }
     let rm = Rounding::from_name(parsed.get_or("rounding", "nearest")).unwrap();
     // "mixed" cycles through all four formats, exercising per-key
     // batching; otherwise every request carries the one format.
@@ -421,22 +474,28 @@ fn cmd_bench_trend(args: Vec<String>) -> i32 {
         }
         let prev = runs[runs.len() - 2];
         let last = runs[runs.len() - 1];
-        // Compare every top-level numeric metric present in both runs.
+        // Compare every top-level numeric metric of the latest run. A
+        // metric absent from (or non-numeric in) the previous run is NEW
+        // — shown with an n/a delta rather than dropped, so freshly
+        // added bench rows surface on their first recorded run; a
+        // zero/non-finite baseline also prints n/a instead of a
+        // division-by-zero artifact.
         if let Json::Obj(pairs) = last {
             for (k, v) in pairs {
                 if k == "bench" {
                     continue;
                 }
                 let Some(latest) = v.as_f64() else { continue };
-                let Some(previous) = prev.get(k).and_then(|j| j.as_f64()) else {
-                    continue;
+                let previous = prev.get(k).and_then(|j| j.as_f64());
+                let (prev_str, delta) = match previous {
+                    None => ("(new)".to_string(), "n/a".to_string()),
+                    Some(p) if p == 0.0 || !p.is_finite() => (sig(p, 4), "n/a".to_string()),
+                    Some(p) => (
+                        sig(p, 4),
+                        format!("{:+.1}", (latest - p) / p * 100.0),
+                    ),
                 };
-                let delta = if previous == 0.0 {
-                    "n/a".to_string()
-                } else {
-                    format!("{:+.1}", (latest - previous) / previous * 100.0)
-                };
-                t.row(&[name.clone(), k.clone(), sig(previous, 4), sig(latest, 4), delta]);
+                t.row(&[name.clone(), k.clone(), prev_str, sig(latest, 4), delta]);
             }
         }
     }
@@ -469,11 +528,39 @@ fn cmd_selftest() -> i32 {
             out[i] == d.div_bits(a[i], b[i], tsdiv::fp::F32, tsdiv::fp::Rounding::NearestEven)
         })
     });
-    check("table I derivation (8 segments)", tsdiv::pla::derive_segments(5, 53).len() == 9);
+    check(
+        "table I derivation (8 segments)",
+        tsdiv::pla::derive_segments(5, 53).map(|b| b.len()) == Ok(9),
+    );
     check(
         "17-iteration bound on [1,2]",
-        tsdiv::pla::min_iterations(1.0, 2.0, 53) == 17,
+        tsdiv::pla::min_iterations(1.0, 2.0, 53) == Ok(17),
     );
+    check("kernel lane engines bit-identical (f32 batch)", {
+        use tsdiv::simd::SimdChoice;
+        let a: Vec<u64> = (1..=33u32).map(|i| (i as f32 * 0.37).to_bits() as u64).collect();
+        let b: Vec<u64> = (1..=33u32)
+            .map(|i| ((i % 9 + 1) as f32 * 1.3).to_bits() as u64)
+            .collect();
+        let mut scalar_eng = TaylorDivider::paper_exact();
+        let mut auto_eng = TaylorDivider::paper_exact();
+        // A rejected engine selection (TSDIV_SIMD=forced without AVX2)
+        // fails this check; a health check never aborts the report.
+        match (
+            scalar_eng.set_batch_simd(SimdChoice::Scalar),
+            auto_eng.set_batch_simd(SimdChoice::Auto),
+        ) {
+            (Ok(()), Ok(())) => {
+                let mut q1 = vec![0u64; a.len()];
+                let mut q2 = vec![0u64; a.len()];
+                let (fmt, rm) = (tsdiv::fp::F32, tsdiv::fp::Rounding::NearestEven);
+                scalar_eng.div_bits_batch(&a, &b, fmt, rm, &mut q1);
+                auto_eng.div_bits_batch(&a, &b, fmt, rm, &mut q2);
+                q1 == q2
+            }
+            _ => false,
+        }
+    });
     check(
         "squaring < half ILM datapath",
         tsdiv::hw::squaring_vs_ilm_ratio(53) < 0.5,

@@ -22,6 +22,9 @@ pub mod table;
 
 pub use table::SegmentTable;
 
+use crate::bail;
+use crate::util::error::Result;
+
 /// Paper Table I: the published segment boundaries for n = 5 and 53-bit
 /// precision, used by benches to compare derived vs published values.
 pub const PAPER_TABLE_I: [f64; 8] = [
@@ -92,14 +95,24 @@ pub fn segment_bound_log2(a: f64, b: f64, n: u32) -> f64 {
 /// Solve eq (20) for the next boundary: the largest `b > a` with
 /// `segment_bound(a, b, n) ≤ 2^(−pr_max)`. Bisection in the log domain;
 /// the bound is strictly increasing in `b` on `(a, ∞)`.
-pub fn solve_next_boundary(a: f64, n: u32, pr_max: u32) -> f64 {
+///
+/// A bracket failure (pathological `a`/`n`/`pr_max` combination) is an
+/// error, not a panic: this runs during table construction, which the
+/// division service performs at start-up — a bad configuration must be
+/// a rejected request, not a process abort.
+pub fn solve_next_boundary(a: f64, n: u32, pr_max: u32) -> Result<f64> {
     let target = -(pr_max as f64);
     // Bracket: bound → −∞ as b→a⁺; grows without limit as b→∞.
     let mut lo = a * (1.0 + 1e-15);
     let mut hi = a * 2.0;
     while segment_bound_log2(a, hi, n) < target {
         hi *= 2.0;
-        assert!(hi < a * 1e6, "boundary solve failed to bracket");
+        if hi >= a * 1e6 {
+            bail!(
+                "segment boundary solve failed to bracket from a={a} \
+                 (n={n}, pr_max={pr_max})"
+            );
+        }
     }
     for _ in 0..200 {
         let mid = 0.5 * (lo + hi);
@@ -110,48 +123,61 @@ pub fn solve_next_boundary(a: f64, n: u32, pr_max: u32) -> f64 {
         }
     }
     // Return the inner point: the bound is guaranteed ≤ target there.
-    lo
+    Ok(lo)
 }
 
 /// Derive the full segment partition of `[1, 2]` for a given iteration
 /// budget `n` and precision target (paper §3 procedure; Table I is
 /// `derive_segments(5, 53)`). Returns the boundaries
-/// `[1, b0, b1, …, b_k]` with the last `≥ 2`.
-pub fn derive_segments(n: u32, pr_max: u32) -> Vec<f64> {
+/// `[1, b0, b1, …, b_k]` with the last `≥ 2`, or an error when the
+/// recurrence fails to cover the range (see [`solve_next_boundary`]).
+pub fn derive_segments(n: u32, pr_max: u32) -> Result<Vec<f64>> {
     let mut bounds = vec![1.0];
     let mut a = 1.0;
     loop {
-        let b = solve_next_boundary(a, n, pr_max);
+        let b = solve_next_boundary(a, n, pr_max)?;
         bounds.push(b);
         if b >= 2.0 {
-            return bounds;
+            return Ok(bounds);
         }
-        assert!(bounds.len() < 1024, "segment derivation diverged");
+        if bounds.len() >= 1024 {
+            bail!(
+                "segment derivation diverged: 1024 boundaries without covering [1,2] \
+                 (n={n}, pr_max={pr_max})"
+            );
+        }
         a = b;
     }
 }
 
 /// Minimum Taylor iterations `n` so that the eq-(17) bound on `[a,b]`
 /// is at most `2^(−pr_max)` (paper §3: 17 for `[1,2]`, 5 for Table I).
-pub fn min_iterations(a: f64, b: f64, pr_max: u32) -> u32 {
+///
+/// Non-convergence within 1 000 iterations (an unsatisfiable precision
+/// target, e.g. a degenerate segment) is an error the caller can
+/// surface — this is reachable from `TaylorConfig`/table construction at
+/// service start, where it used to abort the process.
+pub fn min_iterations(a: f64, b: f64, pr_max: u32) -> Result<u32> {
     let target = -(pr_max as f64);
     for n in 0..=1_000 {
         if error_bound_log2(a, b, n) <= target {
-            return n;
+            return Ok(n);
         }
     }
-    panic!("min_iterations did not converge for [{a}, {b}]");
+    bail!("min_iterations did not converge for [{a}, {b}] at 2^-{pr_max}")
 }
 
 /// Minimum iterations for a piecewise partition: the worst segment rules
 /// (paper §3, "account for the maximum error").
-pub fn min_iterations_piecewise(bounds: &[f64], pr_max: u32) -> u32 {
-    assert!(bounds.len() >= 2);
-    bounds
-        .windows(2)
-        .map(|w| min_iterations(w[0], w[1], pr_max))
-        .max()
-        .unwrap()
+pub fn min_iterations_piecewise(bounds: &[f64], pr_max: u32) -> Result<u32> {
+    if bounds.len() < 2 {
+        bail!("piecewise partition needs at least two boundaries");
+    }
+    let mut worst = 0;
+    for w in bounds.windows(2) {
+        worst = worst.max(min_iterations(w[0], w[1], pr_max)?);
+    }
+    Ok(worst)
 }
 
 /// The two-segment split with equal per-segment total error: `p = √(ab)`
@@ -228,22 +254,33 @@ mod tests {
     }
 
     #[test]
+    fn unsatisfiable_precision_targets_error_instead_of_panicking() {
+        // A precision target the iteration bound can never reach within
+        // the solver budget must come back as an Err (the service
+        // surfaces it as a rejected configuration), not a panic.
+        let e = min_iterations(1.0, 2.0, 10_000).unwrap_err();
+        assert!(e.to_string().contains("did not converge"), "{e}");
+        assert!(min_iterations_piecewise(&[1.0, 1.5, 2.0], 10_000).is_err());
+        assert!(min_iterations_piecewise(&[1.0], 53).is_err());
+    }
+
+    #[test]
     fn paper_17_iterations_single_segment() {
         // §3: one linear segment on [1,2] needs a maximum of 17 iterations
         // for 53 bits.
-        assert_eq!(min_iterations(1.0, 2.0, 53), 17);
+        assert_eq!(min_iterations(1.0, 2.0, 53).unwrap(), 17);
     }
 
     #[test]
     fn paper_5_iterations_with_table_i_segments() {
-        let bounds = derive_segments(5, 53);
-        assert_eq!(min_iterations_piecewise(&bounds, 53), 5);
+        let bounds = derive_segments(5, 53).unwrap();
+        assert_eq!(min_iterations_piecewise(&bounds, 53).unwrap(), 5);
     }
 
     #[test]
     fn table_i_reproduced() {
         // §3 / Table I: n = 5, 53-bit target, 8 segments.
-        let bounds = derive_segments(5, 53);
+        let bounds = derive_segments(5, 53).unwrap();
         assert_eq!(bounds.len(), 9, "1 start + 8 boundaries");
         // b0 solves eq (19) exactly and matches to all published digits.
         let rel0 = ((bounds[1] - PAPER_TABLE_I[0]) / PAPER_TABLE_I[0]).abs();
@@ -284,7 +321,7 @@ mod tests {
         // Our eq-(17) solver gives a *smaller* bound; record the actual
         // value so the bench can flag the mismatch (see DESIGN.md E5).
         let p = equal_error_split(1.0, 2.0);
-        let n = min_iterations(1.0, p, 53).max(min_iterations(p, 2.0, 53));
+        let n = min_iterations(1.0, p, 53).unwrap().max(min_iterations(p, 2.0, 53).unwrap());
         assert!(n < 15, "expected < 15 by eq (17), got {n}");
         assert!(n >= 9, "sanity: still ≥ 9, got {n}");
     }
@@ -294,7 +331,7 @@ mod tests {
         // E_total is larger on the left of the range (paper §3), so
         // derived segments get *wider* to the right but their bound stays
         // equal; widths must increase.
-        let bounds = derive_segments(5, 53);
+        let bounds = derive_segments(5, 53).unwrap();
         let widths: Vec<f64> = bounds.windows(2).map(|w| w[1] - w[0]).collect();
         for w in widths.windows(2) {
             assert!(w[1] > w[0], "segment widths should increase: {widths:?}");
@@ -303,9 +340,9 @@ mod tests {
 
     #[test]
     fn more_iterations_need_fewer_segments() {
-        let s3 = derive_segments(3, 53).len();
-        let s5 = derive_segments(5, 53).len();
-        let s8 = derive_segments(8, 53).len();
+        let s3 = derive_segments(3, 53).unwrap().len();
+        let s5 = derive_segments(5, 53).unwrap().len();
+        let s8 = derive_segments(8, 53).unwrap().len();
         assert!(s3 > s5 && s5 > s8, "{s3} {s5} {s8}");
     }
 
@@ -327,7 +364,7 @@ mod tests {
     #[test]
     fn solver_hits_target_bound() {
         for n in [3u32, 5, 7] {
-            let b = solve_next_boundary(1.0, n, 53);
+            let b = solve_next_boundary(1.0, n, 53).unwrap();
             let lhs = segment_bound_log2(1.0, b, n);
             assert!(
                 (lhs - (-53.0)).abs() < 1e-6,

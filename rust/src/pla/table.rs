@@ -9,6 +9,8 @@
 //! datapath).
 
 use super::optimal_line;
+use crate::simd::Engine;
+use crate::util::error::Result;
 
 /// Fixed-point piecewise-linear seed table.
 #[derive(Clone, Debug)]
@@ -29,10 +31,30 @@ pub struct SegmentTable {
 impl SegmentTable {
     /// Build from boundary list `[1, b0, …, bk]` (see
     /// [`super::derive_segments`]) at `frac_bits` of fraction.
+    ///
+    /// Panics on an invalid boundary list or width; configuration paths
+    /// that must reject bad input instead of aborting (service start)
+    /// use [`Self::try_build`].
     pub fn build(boundaries: &[f64], frac_bits: u32) -> Self {
-        assert!(boundaries.len() >= 2, "need at least one segment");
-        assert!(frac_bits <= 61, "Q2.F must fit in u64");
-        assert!((boundaries[0] - 1.0).abs() < 1e-12, "range starts at 1.0");
+        Self::try_build(boundaries, frac_bits).expect("segment table")
+    }
+
+    /// Fallible [`Self::build`]: a bad boundary list or datapath width
+    /// is an error the caller can surface (the service rejects the
+    /// config at `DivisionService::start`) rather than a process abort.
+    pub fn try_build(boundaries: &[f64], frac_bits: u32) -> Result<Self> {
+        if boundaries.len() < 2 {
+            crate::bail!("segment table: need at least one segment");
+        }
+        if frac_bits > 61 {
+            crate::bail!("segment table: Q2.{frac_bits} must fit in u64 (frac_bits ≤ 61)");
+        }
+        if (boundaries[0] - 1.0).abs() >= 1e-12 {
+            crate::bail!(
+                "segment table: range starts at 1.0, got {}",
+                boundaries[0]
+            );
+        }
         let scale = (1u128 << frac_bits) as f64;
         let mut edges = Vec::new();
         let mut slopes = Vec::new();
@@ -45,13 +67,13 @@ impl SegmentTable {
             slopes.push((-slope * scale).round() as u64);
             intercepts.push((intercept * scale).round() as u64);
         }
-        Self {
+        Ok(Self {
             frac_bits,
             edges,
             slopes,
             intercepts,
             boundaries: boundaries.to_vec(),
-        }
+        })
     }
 
     pub fn num_segments(&self) -> usize {
@@ -100,13 +122,34 @@ impl SegmentTable {
     }
 
     /// Seed stage over a lane array: `y0_out[i] = seed(xs[i]).0` — the
-    /// staged kernel's SoA entry point ([`crate::kernel`]). The loop
-    /// body is a branch-reduced select plus one multiply and one
-    /// subtract per lane, so it vectorizes over short tiles.
-    pub fn seed_batch(&self, xs: &[u64], y0_out: &mut [u64]) {
+    /// staged kernel's SoA entry point ([`crate::kernel`]), expressed on
+    /// the explicit lane engine ([`crate::simd`]). Per stack-buffered
+    /// chunk: the compare tree runs as an edge-count pass (identical to
+    /// the scalar `select`, see [`Engine::segment_counts`]), the line
+    /// coefficients are gathered per lane, and the truncating multiply
+    /// plus saturating subtract of [`Self::seed`] run as one engine op
+    /// each — bit-identical to the scalar seed, lane by lane.
+    pub fn seed_batch(&self, eng: Engine, xs: &[u64], y0_out: &mut [u64]) {
         debug_assert_eq!(xs.len(), y0_out.len());
-        for (&x, y) in xs.iter().zip(y0_out.iter_mut()) {
-            *y = self.seed(x).0;
+        const W: usize = 32;
+        let mut idx = [0u64; W];
+        let mut slope = [0u64; W];
+        let mut icpt = [0u64; W];
+        let mut prod = [0u64; W];
+        let mut done = 0;
+        while done < xs.len() {
+            let n = (xs.len() - done).min(W);
+            let xc = &xs[done..done + n];
+            eng.segment_counts(xc, &self.edges, &mut idx[..n]);
+            for ((&s, sl), ic) in idx[..n].iter().zip(&mut slope[..n]).zip(&mut icpt[..n]) {
+                *sl = self.slopes[s as usize];
+                *ic = self.intercepts[s as usize];
+            }
+            // y0 = c ⊖ ((s·x) >> F): the same truncating multiply and
+            // saturating subtract as the scalar seed().
+            eng.mul_shr(&slope[..n], xc, self.frac_bits, &mut prod[..n]);
+            eng.sub_sat(&icpt[..n], &prod[..n], &mut y0_out[done..done + n]);
+            done += n;
         }
     }
 
@@ -140,7 +183,7 @@ mod tests {
     }
 
     fn table() -> SegmentTable {
-        SegmentTable::build(&derive_segments(5, 53), F)
+        SegmentTable::build(&derive_segments(5, 53).unwrap(), F)
     }
 
     #[test]
@@ -240,16 +283,29 @@ mod tests {
     }
 
     #[test]
-    fn seed_batch_matches_scalar_seed() {
+    fn seed_batch_matches_scalar_seed_every_engine() {
+        // 257 lanes: not a multiple of the chunk width or the vector
+        // width, so tails are exercised; both engines must equal the
+        // scalar seed() bit for bit.
         let t = table();
         let xs: Vec<u64> = (0..257)
             .map(|i| fx(1.0) + i * ((fx(2.0) - fx(1.0)) / 257))
             .collect();
-        let mut ys = vec![0u64; xs.len()];
-        t.seed_batch(&xs, &mut ys);
-        for (i, &x) in xs.iter().enumerate() {
-            assert_eq!(ys[i], t.seed(x).0, "lane {i}");
+        for eng in crate::simd::engines_available() {
+            let mut ys = vec![0u64; xs.len()];
+            t.seed_batch(eng, &xs, &mut ys);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(ys[i], t.seed(x).0, "{} lane {i}", eng.name());
+            }
         }
+    }
+
+    #[test]
+    fn try_build_rejects_bad_configs_with_errors() {
+        assert!(SegmentTable::try_build(&[1.0], F).is_err());
+        assert!(SegmentTable::try_build(&[1.0, 2.0], 62).is_err());
+        assert!(SegmentTable::try_build(&[1.5, 2.0], F).is_err());
+        assert!(SegmentTable::try_build(&[1.0, 2.0], F).is_ok());
     }
 
     #[test]

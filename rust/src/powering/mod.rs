@@ -15,6 +15,7 @@
 //! can sweep exact-vs-ILM arithmetic without code changes.
 
 use crate::ilm::{ilm_mul, priority_encode};
+use crate::simd::Engine;
 use crate::squaring::ilm_square;
 
 /// Operation counters shared by all backends.
@@ -63,10 +64,22 @@ pub trait Multiplier {
 
     /// Batched fixed-point hot-path products:
     /// `out[i] = (mul_hot(a[i], b[i]) >> frac_bits) as u64` — one stage
-    /// loop of the SoA kernel ([`crate::kernel`]); the monomorphized
-    /// body is free of counters and branches so it autovectorizes.
+    /// loop of the SoA kernel ([`crate::kernel`]), driven by an explicit
+    /// lane engine ([`crate::simd::Engine`]). The default implementation
+    /// is the per-lane scalar hot loop (engines are ignored — a custom
+    /// backend stays correct without vector code); both in-tree backends
+    /// override with engine-routed lane ops that are bit-identical to
+    /// this loop.
     #[inline]
-    fn mul_fixed_hot_batch(&mut self, a: &[u64], b: &[u64], frac_bits: u32, out: &mut [u64]) {
+    fn mul_fixed_hot_batch(
+        &mut self,
+        eng: Engine,
+        a: &[u64],
+        b: &[u64],
+        frac_bits: u32,
+        out: &mut [u64],
+    ) {
+        let _ = eng;
         debug_assert!(a.len() == b.len() && a.len() == out.len());
         for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
             *o = (self.mul_hot(x, y) >> frac_bits) as u64;
@@ -76,7 +89,8 @@ pub trait Multiplier {
     /// Batched fixed-point hot-path squares:
     /// `out[i] = (square_hot(a[i]) >> frac_bits) as u64`.
     #[inline]
-    fn square_fixed_hot_batch(&mut self, a: &[u64], frac_bits: u32, out: &mut [u64]) {
+    fn square_fixed_hot_batch(&mut self, eng: Engine, a: &[u64], frac_bits: u32, out: &mut [u64]) {
+        let _ = eng;
         debug_assert_eq!(a.len(), out.len());
         for (&x, o) in a.iter().zip(out.iter_mut()) {
             *o = (self.square_hot(x) >> frac_bits) as u64;
@@ -111,6 +125,25 @@ impl Multiplier for ExactMul {
     #[inline]
     fn square_hot(&mut self, a: u64) -> u128 {
         a as u128 * a as u128
+    }
+
+    /// Exact products route straight to the lane engine's wide multiply
+    /// — `(a·b) >> f` per lane, identical to the scalar hot loop.
+    #[inline]
+    fn mul_fixed_hot_batch(
+        &mut self,
+        eng: Engine,
+        a: &[u64],
+        b: &[u64],
+        frac_bits: u32,
+        out: &mut [u64],
+    ) {
+        eng.mul_shr(a, b, frac_bits, out);
+    }
+
+    #[inline]
+    fn square_fixed_hot_batch(&mut self, eng: Engine, a: &[u64], frac_bits: u32, out: &mut [u64]) {
+        eng.sqr_shr(a, frac_bits, out);
     }
 
     fn counts(&self) -> OpCounts {
@@ -165,11 +198,28 @@ impl Multiplier for IlmBackend {
         ilm_square(a, self.iterations).square
     }
 
-    /// Route the batched square stage through the squaring unit's own
-    /// lane loop (numerically identical to the default implementation).
+    /// Route the batched multiply stage through the ILM's staged lane
+    /// recursion (the priority-encoder pass runs once per correction
+    /// stage across the tile; numerically identical to per-lane
+    /// `ilm_mul`).
     #[inline]
-    fn square_fixed_hot_batch(&mut self, a: &[u64], frac_bits: u32, out: &mut [u64]) {
-        crate::squaring::ilm_square_fixed_batch(a, frac_bits, self.iterations, out);
+    fn mul_fixed_hot_batch(
+        &mut self,
+        eng: Engine,
+        a: &[u64],
+        b: &[u64],
+        frac_bits: u32,
+        out: &mut [u64],
+    ) {
+        crate::ilm::ilm_mul_fixed_batch(eng, a, b, frac_bits, self.iterations, out);
+    }
+
+    /// Route the batched square stage through the squaring unit's own
+    /// staged lane loop (numerically identical to the default
+    /// implementation).
+    #[inline]
+    fn square_fixed_hot_batch(&mut self, eng: Engine, a: &[u64], frac_bits: u32, out: &mut [u64]) {
+        crate::squaring::ilm_square_fixed_batch(eng, a, frac_bits, self.iterations, out);
     }
 
     fn counts(&self) -> OpCounts {
@@ -464,29 +514,52 @@ mod tests {
     #[test]
     fn batched_hot_ops_match_scalar_hot_ops_both_backends() {
         // The SoA kernel's stage loops must be numerically identical to
-        // the scalar hot path, including the IlmBackend's squaring-unit
-        // override and zero operands (m = 0 lanes).
-        let a: Vec<u64> = vec![0, 1, 3 << (F - 1), (1 << F) - 1, 12345, 1 << F];
-        let b: Vec<u64> = vec![5, 0, 1 << F, 99, (1 << F) + 7, 3];
+        // the scalar hot path on every lane engine, including the
+        // IlmBackend's staged-recursion overrides and zero operands
+        // (m = 0 lanes).
+        let a: Vec<u64> = vec![0, 1, 3 << (F - 1), (1 << F) - 1, 12345, 1 << F, 7, 0, 42];
+        let b: Vec<u64> = vec![5, 0, 1 << F, 99, (1 << F) + 7, 3, 7, 0, (1 << F) - 1];
         let mut out = vec![0u64; a.len()];
-        let mut exact = ExactMul::default();
-        exact.mul_fixed_hot_batch(&a, &b, F, &mut out);
-        for i in 0..a.len() {
-            assert_eq!(out[i], (exact.mul_hot(a[i], b[i]) >> F) as u64, "exact mul {i}");
-        }
-        exact.square_fixed_hot_batch(&a, F, &mut out);
-        for i in 0..a.len() {
-            assert_eq!(out[i], (exact.square_hot(a[i]) >> F) as u64, "exact sq {i}");
-        }
-        for iters in [0u32, 2, 8] {
-            let mut ilm = IlmBackend::new(iters);
-            ilm.mul_fixed_hot_batch(&a, &b, F, &mut out);
+        for eng in crate::simd::engines_available() {
+            let mut exact = ExactMul::default();
+            exact.mul_fixed_hot_batch(eng, &a, &b, F, &mut out);
             for i in 0..a.len() {
-                assert_eq!(out[i], (ilm.mul_hot(a[i], b[i]) >> F) as u64, "ilm{iters} mul {i}");
+                assert_eq!(
+                    out[i],
+                    (exact.mul_hot(a[i], b[i]) >> F) as u64,
+                    "{} exact mul {i}",
+                    eng.name()
+                );
             }
-            ilm.square_fixed_hot_batch(&a, F, &mut out);
+            exact.square_fixed_hot_batch(eng, &a, F, &mut out);
             for i in 0..a.len() {
-                assert_eq!(out[i], (ilm.square_hot(a[i]) >> F) as u64, "ilm{iters} sq {i}");
+                assert_eq!(
+                    out[i],
+                    (exact.square_hot(a[i]) >> F) as u64,
+                    "{} exact sq {i}",
+                    eng.name()
+                );
+            }
+            for iters in [0u32, 2, 8] {
+                let mut ilm = IlmBackend::new(iters);
+                ilm.mul_fixed_hot_batch(eng, &a, &b, F, &mut out);
+                for i in 0..a.len() {
+                    assert_eq!(
+                        out[i],
+                        (ilm.mul_hot(a[i], b[i]) >> F) as u64,
+                        "{} ilm{iters} mul {i}",
+                        eng.name()
+                    );
+                }
+                ilm.square_fixed_hot_batch(eng, &a, F, &mut out);
+                for i in 0..a.len() {
+                    assert_eq!(
+                        out[i],
+                        (ilm.square_hot(a[i]) >> F) as u64,
+                        "{} ilm{iters} sq {i}",
+                        eng.name()
+                    );
+                }
             }
         }
     }

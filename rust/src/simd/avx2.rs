@@ -1,0 +1,223 @@
+//! AVX2 implementations of the lane-engine ops — 4 × u64 lanes per
+//! `__m256i`, bit-identical to [`super::scalar`] by construction.
+//!
+//! The only non-obvious piece is the 64×64→128 multiply: AVX2 has no
+//! wide 64-bit multiply, so [`mul_u64_wide`] builds it from four
+//! `_mm256_mul_epu32` limb products (schoolbook, exact), and the
+//! fixed-point ops recombine `(lo >> f) | (hi << (64 − f))`. Unsigned
+//! 64-bit compares bias both operands by 2^63 and use the signed
+//! compare.
+//!
+//! Every function here requires AVX2: callers reach them only through
+//! [`super::Engine::Avx2`], which `SimdChoice::resolve` constructs
+//! strictly after runtime feature detection. Tails shorter than one
+//! vector fall through to the scalar reference.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn mul_shr(a: &[u64], b: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    if f == 0 || f >= 64 {
+        // Pure-low or pure-high extraction: rare configs, scalar keeps
+        // the shift-combination below branch-free for the 1..=63 case.
+        return super::scalar::mul_shr(a, b, f, out);
+    }
+    let n = a.len();
+    let shr = _mm_cvtsi32_si128(f as i32);
+    let shl = _mm_cvtsi32_si128(64 - f as i32);
+    let m32 = _mm256_set1_epi64x(0xFFFF_FFFF);
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let (lo, hi) = mul_u64_wide(va, vb, m32);
+        let r = _mm256_or_si256(_mm256_srl_epi64(lo, shr), _mm256_sll_epi64(hi, shl));
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::mul_shr(&a[i..], &b[i..], f, &mut out[i..]);
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn sqr_shr(a: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert_eq!(a.len(), out.len());
+    if f == 0 || f >= 64 {
+        return super::scalar::sqr_shr(a, f, out);
+    }
+    let n = a.len();
+    let shr = _mm_cvtsi32_si128(f as i32);
+    let shl = _mm_cvtsi32_si128(64 - f as i32);
+    let m32 = _mm256_set1_epi64x(0xFFFF_FFFF);
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let (lo, hi) = mul_u64_wide(va, va, m32);
+        let r = _mm256_or_si256(_mm256_srl_epi64(lo, shr), _mm256_sll_epi64(hi, shl));
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::sqr_shr(&a[i..], f, &mut out[i..]);
+}
+
+/// Full 128-bit products of four u64 lane pairs as (low, high) 64-bit
+/// halves — schoolbook over 32-bit limbs, exact:
+/// with `a = ah·2^32 + al`, `b = bh·2^32 + bl`,
+/// `t = (al·bl >> 32) + lo32(al·bh) + lo32(ah·bl)` (≤ 3·(2^32−1), no
+/// overflow), `lo = lo32(al·bl) | (t << 32)`,
+/// `hi = ah·bh + hi32(al·bh) + hi32(ah·bl) + (t >> 32)`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_u64_wide(a: __m256i, b: __m256i, m32: __m256i) -> (__m256i, __m256i) {
+    let a_hi = _mm256_srli_epi64(a, 32);
+    let b_hi = _mm256_srli_epi64(b, 32);
+    let ll = _mm256_mul_epu32(a, b); // al·bl
+    let lh = _mm256_mul_epu32(a, b_hi); // al·bh
+    let hl = _mm256_mul_epu32(a_hi, b); // ah·bl
+    let hh = _mm256_mul_epu32(a_hi, b_hi); // ah·bh
+    let t = _mm256_add_epi64(
+        _mm256_srli_epi64(ll, 32),
+        _mm256_add_epi64(_mm256_and_si256(lh, m32), _mm256_and_si256(hl, m32)),
+    );
+    let lo = _mm256_or_si256(_mm256_and_si256(ll, m32), _mm256_slli_epi64(t, 32));
+    let hi = _mm256_add_epi64(
+        hh,
+        _mm256_add_epi64(
+            _mm256_add_epi64(_mm256_srli_epi64(lh, 32), _mm256_srli_epi64(hl, 32)),
+            _mm256_srli_epi64(t, 32),
+        ),
+    );
+    (lo, hi)
+}
+
+/// Unsigned 64-bit `a > b` lane mask (bias-to-signed compare).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn gt_u64(a: __m256i, b: __m256i, sign: __m256i) -> __m256i {
+    _mm256_cmpgt_epi64(_mm256_xor_si256(a, sign), _mm256_xor_si256(b, sign))
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn sub_sat(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len();
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let d = _mm256_sub_epi64(va, vb);
+        // Clamp lanes where b > a to zero.
+        let r = _mm256_andnot_si256(gt_u64(vb, va, sign), d);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::sub_sat(&a[i..], &b[i..], &mut out[i..]);
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn rsub_sat(minuend: u64, v: &mut [u64]) {
+    let n = v.len();
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let vm = _mm256_set1_epi64x(minuend as i64);
+    let mut i = 0;
+    while i + 4 <= n {
+        let vv = _mm256_loadu_si256(v.as_ptr().add(i) as *const __m256i);
+        let d = _mm256_sub_epi64(vm, vv);
+        let r = _mm256_andnot_si256(gt_u64(vv, vm, sign), d);
+        _mm256_storeu_si256(v.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::rsub_sat(minuend, &mut v[i..]);
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn add_wrapping(acc: &mut [u64], x: &[u64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = acc.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let va = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        let vx = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        let r = _mm256_add_epi64(va, vx);
+        _mm256_storeu_si256(acc.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::add_wrapping(&mut acc[i..], &x[i..]);
+}
+
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn fill_add(base: u64, x: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let vb = _mm256_set1_epi64x(base as i64);
+    let mut i = 0;
+    while i + 4 <= n {
+        let vx = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        let r = _mm256_add_epi64(vb, vx);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::fill_add(base, &x[i..], &mut out[i..]);
+}
+
+/// Biased-edge staging capacity: any realistic PLA table has ≤ 64
+/// segments (Table I has 8; even the n=2 derivation stays far below);
+/// larger tables fall back to the scalar path rather than grow stacks.
+const MAX_EDGES: usize = 64;
+
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn segment_counts(x: &[u64], edges: &[u64], idx: &mut [u64]) {
+    debug_assert_eq!(x.len(), idx.len());
+    debug_assert!(!edges.is_empty());
+    if edges.len() > MAX_EDGES {
+        return super::scalar::segment_counts(x, edges, idx);
+    }
+    let n = x.len();
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let ones = _mm256_set1_epi64x(-1);
+    let last = _mm256_set1_epi64x((edges.len() - 1) as i64);
+    // Hoist the loop-invariant broadcast+bias of every edge out of the
+    // per-chunk loop (the seed stage runs this per miss tile).
+    let mut biased = [_mm256_setzero_si256(); MAX_EDGES];
+    for (b, &e) in biased.iter_mut().zip(edges) {
+        *b = _mm256_xor_si256(_mm256_set1_epi64x(e as i64), sign);
+    }
+    let biased = &biased[..edges.len()];
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        let xb = _mm256_xor_si256(xv, sign);
+        let mut cnt = _mm256_setzero_si256();
+        for &eb in biased {
+            // x ≥ e ⇔ !(e > x); the ≥ mask is −1 per true lane, so
+            // subtracting it increments the count.
+            let ge = _mm256_andnot_si256(_mm256_cmpgt_epi64(eb, xb), ones);
+            cnt = _mm256_sub_epi64(cnt, ge);
+        }
+        // Lanes at/above the last edge clamp to the last segment. The
+        // counts are tiny positive integers, so the signed compare is
+        // exact here.
+        let over = _mm256_cmpgt_epi64(cnt, last);
+        let r = _mm256_blendv_epi8(cnt, last, over);
+        _mm256_storeu_si256(idx.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::segment_counts(&x[i..], edges, &mut idx[i..]);
+}

@@ -1,0 +1,494 @@
+//! Explicit SIMD lane engine under the staged kernel.
+//!
+//! The PR-3 kernel gave the hot path its structure-of-arrays layout and
+//! tile loops, but left vectorization to the compiler. This module makes
+//! the lane parallelism explicit: a small portable engine of fixed-width
+//! `u64`-lane slice ops — wide multiply-and-shift, saturating subtract,
+//! wrapping accumulate, the PLA compare tree as a lane count, the ILM
+//! priority-encoder pass — with
+//!
+//! * a **scalar-unrolled fallback** ([`scalar`]) that is the reference
+//!   semantics (plain integer ops, four lanes per loop body), and
+//! * an **AVX2 path** ([`avx2`], `core::arch::x86_64` intrinsics behind
+//!   *runtime* feature detection) that computes the identical bit
+//!   patterns four lanes per vector. `unsafe` is confined to that
+//!   module; everything here and above it is safe code.
+//!
+//! Selection is a three-way [`SimdChoice`] — `Auto` (detect), `Forced`
+//! (error if AVX2 is missing), `Scalar` (pin the fallback) — threaded
+//! from `KernelConfig::simd` / the serve CLI / the `TSDIV_SIMD` env
+//! override down to a resolved [`Engine`] that the kernel's stage loops
+//! dispatch on. Both engines are **bit-identical** by construction
+//! (every op is defined by its scalar semantics; the AVX2 module must
+//! reproduce them exactly) and pinned so by unit tests here plus the
+//! kernel-level property tests.
+
+mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+
+use crate::bail;
+use crate::util::error::Result;
+
+/// How the kernel should pick its lane engine. Serializable service
+/// configuration (rides in `KernelConfig`); resolve to an [`Engine`]
+/// with [`SimdChoice::resolve`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdChoice {
+    /// Use the vector engine when the host supports it, else scalar.
+    #[default]
+    Auto,
+    /// Require the vector engine; configuration error on hosts without
+    /// AVX2 (benchmark rigs use this so a silent scalar fallback cannot
+    /// masquerade as a SIMD measurement).
+    Forced,
+    /// Pin the scalar-unrolled engine (the autovectorization baseline
+    /// the serving benches compare against).
+    Scalar,
+}
+
+impl SimdChoice {
+    /// Short name as accepted by [`SimdChoice::from_name`].
+    pub const fn name(self) -> &'static str {
+        match self {
+            SimdChoice::Auto => "auto",
+            SimdChoice::Forced => "forced",
+            SimdChoice::Scalar => "scalar",
+        }
+    }
+
+    /// Parse a choice name (CLI `--simd`, `TSDIV_SIMD`).
+    pub fn from_name(s: &str) -> Option<SimdChoice> {
+        match s {
+            "auto" => Some(SimdChoice::Auto),
+            "forced" | "force" | "simd" => Some(SimdChoice::Forced),
+            "scalar" | "off" => Some(SimdChoice::Scalar),
+            _ => None,
+        }
+    }
+
+    /// The process-wide default: `TSDIV_SIMD` if set (this is how CI
+    /// runs the whole test suite once per engine), else `Auto`. Parsed
+    /// once; an unrecognized value warns and falls back to `Auto`.
+    pub fn from_env() -> SimdChoice {
+        use std::sync::OnceLock;
+        static ENV_CHOICE: OnceLock<SimdChoice> = OnceLock::new();
+        *ENV_CHOICE.get_or_init(|| match std::env::var("TSDIV_SIMD") {
+            Ok(v) => SimdChoice::from_name(&v).unwrap_or_else(|| {
+                crate::log_warn!("TSDIV_SIMD='{v}' is not auto|forced|scalar — using auto");
+                SimdChoice::Auto
+            }),
+            Err(_) => SimdChoice::Auto,
+        })
+    }
+
+    /// Resolve to a concrete engine. `Forced` on a host without AVX2 is
+    /// a configuration error (surfaced by `KernelConfig::validate` /
+    /// `DivisionService::start`), not a silent downgrade.
+    ///
+    /// An `Auto` choice defers to the `TSDIV_SIMD` process override:
+    /// `scalar` pins the fallback engine (how CI runs the *entire*
+    /// suite — including `KernelConfig::default()` backends — on the
+    /// scalar engine for its second test pass) and `forced` demands the
+    /// vector engine with the same hard-error contract as a `Forced`
+    /// configuration. Explicit `Forced`/`Scalar` configurations ignore
+    /// the env.
+    pub fn resolve(self) -> Result<Engine> {
+        match self {
+            SimdChoice::Scalar => Ok(Engine::Scalar),
+            SimdChoice::Auto => match SimdChoice::from_env() {
+                SimdChoice::Scalar => Ok(Engine::Scalar),
+                SimdChoice::Forced => SimdChoice::Forced.resolve(),
+                SimdChoice::Auto => {
+                    #[cfg(target_arch = "x86_64")]
+                    if std::arch::is_x86_feature_detected!("avx2") {
+                        return Ok(Engine::Avx2(Avx2Token(())));
+                    }
+                    Ok(Engine::Scalar)
+                }
+            },
+            SimdChoice::Forced => {
+                #[cfg(target_arch = "x86_64")]
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    return Ok(Engine::Avx2(Avx2Token(())));
+                }
+                bail!("simd choice 'forced' requires AVX2, which this host does not support")
+            }
+        }
+    }
+
+    /// Resolve, downgrading an unavailable `Forced` to scalar with a
+    /// warning — for env-driven defaults, where failing the whole test
+    /// suite over host capabilities would be worse than the downgrade.
+    pub fn resolve_lenient(self) -> Engine {
+        self.resolve().unwrap_or_else(|e| {
+            crate::log_warn!("{e}; falling back to the scalar lane engine");
+            Engine::Scalar
+        })
+    }
+
+    /// Cheap pre-flight used by config validation.
+    pub fn validate(self) -> Result<()> {
+        self.resolve().map(|_| ())
+    }
+}
+
+/// True when the vector engine can run on this host (AVX2 detected at
+/// runtime). Tests and benches use this to gate `Forced` sweeps.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Every engine this host can run: scalar always, the vector engine
+/// when detected. Test/bench sweeps iterate this.
+pub fn engines_available() -> Vec<Engine> {
+    let mut v = vec![Engine::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        v.push(Engine::Avx2(Avx2Token(())));
+    }
+    v
+}
+
+/// Proof that AVX2 was detected on this host at runtime. The field is
+/// private, so the only mints are [`SimdChoice::resolve`] and
+/// [`engines_available`] — both strictly after
+/// `is_x86_feature_detected!("avx2")` succeeded. This is what makes the
+/// safe [`Engine`] ops sound: safe code outside this module **cannot**
+/// construct `Engine::Avx2` and trick a dispatch arm into executing
+/// AVX2 instructions on a CPU that lacks them.
+#[cfg(target_arch = "x86_64")]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Avx2Token(());
+
+/// A resolved lane engine. Copy-cheap; every op takes `self` by value
+/// and dispatches once per *slice*, so the per-lane loop bodies stay
+/// monomorphic and branch-free.
+///
+/// All ops are defined by their scalar per-lane semantics (documented
+/// per method); the AVX2 implementations reproduce those semantics bit
+/// for bit — the kernel's bit-identity guarantee rests on this, and the
+/// module tests plus the forced-SIMD-vs-forced-scalar property tests
+/// pin it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Portable scalar-unrolled fallback (reference semantics).
+    Scalar,
+    /// 4 × u64 lanes per `__m256i` vector, runtime-detected (the
+    /// [`Avx2Token`] payload is the constructibility proof).
+    #[cfg(target_arch = "x86_64")]
+    Avx2(Avx2Token),
+}
+
+// SAFETY of every `Engine::Avx2` arm below: the variant is only ever
+// constructed by `SimdChoice::resolve` after `is_x86_feature_detected!
+// ("avx2")` succeeded, so the `#[target_feature(enable = "avx2")]`
+// functions are called on a host that supports them.
+impl Engine {
+    /// Short name for tables and `describe()` strings.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Engine::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => "avx2",
+        }
+    }
+
+    /// `out[i] = ((a[i] as u128 * b[i] as u128) >> f) as u64` — the
+    /// truncating fixed-point multiply of the Q2.F datapath (and of the
+    /// PLA seed's slope multiply). `f < 128`; all slices equal length.
+    #[inline]
+    pub fn mul_shr(self, a: &[u64], b: &[u64], f: u32, out: &mut [u64]) {
+        match self {
+            Engine::Scalar => scalar::mul_shr(a, b, f, out),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe { avx2::mul_shr(a, b, f, out) },
+        }
+    }
+
+    /// `out[i] = ((a[i] as u128 * a[i] as u128) >> f) as u64` — the
+    /// squaring-unit port of [`Engine::mul_shr`].
+    #[inline]
+    pub fn sqr_shr(self, a: &[u64], f: u32, out: &mut [u64]) {
+        match self {
+            Engine::Scalar => scalar::sqr_shr(a, f, out),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe { avx2::sqr_shr(a, f, out) },
+        }
+    }
+
+    /// `out[i] = a[i].saturating_sub(b[i])` — the hardware clamp of the
+    /// seed subtract (`y0 = c ⊖ s·x`).
+    #[inline]
+    pub fn sub_sat(self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        match self {
+            Engine::Scalar => scalar::sub_sat(a, b, out),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe { avx2::sub_sat(a, b, out) },
+        }
+    }
+
+    /// In place, `v[i] = minuend.saturating_sub(v[i])` — the
+    /// `m = 1 − x·y0` clamp of the power stage.
+    #[inline]
+    pub fn rsub_sat(self, minuend: u64, v: &mut [u64]) {
+        match self {
+            Engine::Scalar => scalar::rsub_sat(minuend, v),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe { avx2::rsub_sat(minuend, v) },
+        }
+    }
+
+    /// `acc[i] = acc[i].wrapping_add(x[i])` — the Taylor accumulator
+    /// row-add. Wrapping on purpose: the scalar datapath accumulates in
+    /// `u128` and truncates once at the end, and addition commutes with
+    /// truncation mod 2^64, so wrapping lane adds are bit-identical.
+    #[inline]
+    pub fn add_wrapping(self, acc: &mut [u64], x: &[u64]) {
+        match self {
+            Engine::Scalar => scalar::add_wrapping(acc, x),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe { avx2::add_wrapping(acc, x) },
+        }
+    }
+
+    /// `out[i] = base.wrapping_add(x[i])` — accumulator initialization
+    /// (`S = 1 + m` per lane).
+    #[inline]
+    pub fn fill_add(self, base: u64, x: &[u64], out: &mut [u64]) {
+        match self {
+            Engine::Scalar => scalar::fill_add(base, x, out),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe { avx2::fill_add(base, x, out) },
+        }
+    }
+
+    /// The PLA compare tree over a lane tile: `idx[i]` = index of the
+    /// first sorted `edges` entry above `x[i]`, clamped to the last
+    /// segment — computed as the count of edges ≤ `x[i]`, which for a
+    /// sorted edge list equals the scalar `SegmentTable::select` result
+    /// exactly. `edges` must be non-empty.
+    #[inline]
+    pub fn segment_counts(self, x: &[u64], edges: &[u64], idx: &mut [u64]) {
+        match self {
+            Engine::Scalar => scalar::segment_counts(x, edges, idx),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe { avx2::segment_counts(x, edges, idx) },
+        }
+    }
+
+    /// The ILM priority-encoder pass over a lane tile:
+    /// `(k[i], r[i]) = (⌊log2 n[i]⌋, n[i] − 2^k)` with the zero lane
+    /// defined as `(0, 0)` (the unit's control logic short-circuits zero
+    /// operands, so callers test the operand, not `k`). One LZCNT chain
+    /// per lane — there is no AVX2 counterpart worth its shuffle cost,
+    /// so both engines run the same scalar-unrolled loop; the win is
+    /// structural: the ILM correction recursion runs this as one pass
+    /// per stage over the tile instead of per lane over stages.
+    #[inline]
+    pub fn priority_encode_batch(self, n: &[u64], k: &mut [u32], r: &mut [u64]) {
+        scalar::priority_encode_batch(n, k, r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gen(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.next_u64() >> (rng.below(4) * 8)).collect()
+    }
+
+    /// Edge-heavy operand menu: zeros, ones, powers of two, all-ones.
+    const EDGE: [u64; 8] = [
+        0,
+        1,
+        2,
+        (1 << 32) - 1,
+        1 << 32,
+        u64::MAX,
+        0x8000_0000_0000_0000,
+        0x0123_4567_89AB_CDEF,
+    ];
+
+    #[test]
+    fn choice_names_roundtrip_and_env_default() {
+        for c in [SimdChoice::Auto, SimdChoice::Forced, SimdChoice::Scalar] {
+            assert_eq!(SimdChoice::from_name(c.name()), Some(c));
+        }
+        assert_eq!(SimdChoice::from_name("simd"), Some(SimdChoice::Forced));
+        assert_eq!(SimdChoice::from_name("warp"), None);
+        assert_eq!(SimdChoice::default(), SimdChoice::Auto);
+        // from_env never panics and is stable across calls (OnceLock).
+        let first = SimdChoice::from_env();
+        let second = SimdChoice::from_env();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn resolution_matches_host_capabilities() {
+        assert_eq!(SimdChoice::Scalar.resolve().unwrap(), Engine::Scalar);
+        let auto = SimdChoice::Auto.resolve();
+        match SimdChoice::from_env() {
+            // CI's second test pass: the process override pins Auto.
+            SimdChoice::Scalar => {
+                assert_eq!(auto.unwrap(), Engine::Scalar, "TSDIV_SIMD=scalar must pin auto");
+            }
+            // An env override of `forced` carries the hard-error
+            // contract into Auto configs too.
+            SimdChoice::Forced => assert_eq!(auto.is_ok(), simd_available()),
+            SimdChoice::Auto if simd_available() => {
+                assert_ne!(auto.unwrap(), Engine::Scalar, "auto must pick the vector engine");
+            }
+            SimdChoice::Auto => assert_eq!(auto.unwrap(), Engine::Scalar),
+        }
+        if simd_available() {
+            // Forced ignores the env: it always demands the vector engine.
+            assert_ne!(SimdChoice::Forced.resolve().unwrap(), Engine::Scalar);
+            assert_eq!(engines_available().len(), 2);
+        } else {
+            assert!(SimdChoice::Forced.resolve().is_err());
+            assert!(SimdChoice::Forced.validate().is_err());
+            assert_eq!(SimdChoice::Forced.resolve_lenient(), Engine::Scalar);
+            assert_eq!(engines_available(), vec![Engine::Scalar]);
+        }
+        assert_eq!(Engine::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn mul_shr_matches_u128_reference_all_engines() {
+        let mut a = gen(67, 1);
+        let mut b = gen(67, 2);
+        a.extend_from_slice(&EDGE);
+        b.extend_from_slice(&EDGE);
+        // Misaligned pairings of the edge menu too.
+        a.extend_from_slice(&EDGE);
+        b.extend(EDGE.iter().rev());
+        let mut out = vec![0u64; a.len()];
+        for eng in engines_available() {
+            for f in [0u32, 1, 7, 23, 32, 52, 60, 63, 64, 100, 127] {
+                eng.mul_shr(&a, &b, f, &mut out);
+                for i in 0..a.len() {
+                    let want = ((a[i] as u128 * b[i] as u128) >> f) as u64;
+                    assert_eq!(out[i], want, "{} f={f} lane {i}", eng.name());
+                }
+                eng.sqr_shr(&a, f, &mut out);
+                for i in 0..a.len() {
+                    let want = ((a[i] as u128 * a[i] as u128) >> f) as u64;
+                    assert_eq!(out[i], want, "{} sqr f={f} lane {i}", eng.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_and_wrapping_ops_match_reference() {
+        let mut a = gen(61, 3);
+        let mut b = gen(61, 4);
+        a.extend_from_slice(&EDGE);
+        b.extend(EDGE.iter().rev());
+        let n = a.len();
+        for eng in engines_available() {
+            let mut out = vec![0u64; n];
+            eng.sub_sat(&a, &b, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], a[i].saturating_sub(b[i]), "{} sub_sat {i}", eng.name());
+            }
+            for minuend in [0u64, 1, 1 << 60, u64::MAX] {
+                let mut v = b.clone();
+                eng.rsub_sat(minuend, &mut v);
+                for i in 0..n {
+                    assert_eq!(v[i], minuend.saturating_sub(b[i]), "{} rsub {i}", eng.name());
+                }
+            }
+            let mut acc = a.clone();
+            eng.add_wrapping(&mut acc, &b);
+            for i in 0..n {
+                assert_eq!(acc[i], a[i].wrapping_add(b[i]), "{} add {i}", eng.name());
+            }
+            eng.fill_add(u64::MAX - 1, &b, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], (u64::MAX - 1).wrapping_add(b[i]), "{} fill {i}", eng.name());
+            }
+        }
+    }
+
+    #[test]
+    fn segment_counts_equal_linear_select_reference() {
+        // Sorted edges like a real PLA table, lanes spanning below/at/
+        // between/above every edge.
+        let edges: Vec<u64> = vec![100, 250, 251, 900, 4000, 1 << 40, 1 << 60, u64::MAX - 4];
+        let mut xs: Vec<u64> = Vec::new();
+        for &e in &edges {
+            xs.extend_from_slice(&[e.wrapping_sub(1), e, e.wrapping_add(1)]);
+        }
+        xs.extend_from_slice(&[0, 50, u64::MAX]);
+        let select = |x: u64| -> u64 {
+            for (i, &e) in edges.iter().enumerate() {
+                if x < e {
+                    return i as u64;
+                }
+            }
+            edges.len() as u64 - 1
+        };
+        let mut idx = vec![0u64; xs.len()];
+        for eng in engines_available() {
+            eng.segment_counts(&xs, &edges, &mut idx);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(idx[i], select(x), "{} x={x}", eng.name());
+            }
+        }
+        // Single-segment table: every lane is segment 0.
+        for eng in engines_available() {
+            eng.segment_counts(&xs, &[1u64 << 61], &mut idx);
+            assert!(idx.iter().all(|&i| i == 0), "{}", eng.name());
+        }
+    }
+
+    #[test]
+    fn priority_encode_batch_matches_scalar_pe() {
+        let mut xs = gen(53, 9);
+        xs.extend_from_slice(&EDGE);
+        let mut k = vec![0u32; xs.len()];
+        let mut r = vec![0u64; xs.len()];
+        for eng in engines_available() {
+            eng.priority_encode_batch(&xs, &mut k, &mut r);
+            for (i, &x) in xs.iter().enumerate() {
+                if x == 0 {
+                    assert_eq!((k[i], r[i]), (0, 0), "zero lane {i}");
+                } else {
+                    let (kk, rr) = crate::ilm::priority_encode(x);
+                    assert_eq!((k[i], r[i]), (kk, rr), "{} lane {i}", eng.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_and_empty_slices_are_fine() {
+        // Below one vector width, and empty: tails must be handled.
+        for eng in engines_available() {
+            for n in 0..6usize {
+                let a: Vec<u64> = (0..n as u64).map(|i| i * 3 + 1).collect();
+                let b: Vec<u64> = (0..n as u64).map(|i| i + (1 << 40)).collect();
+                let mut out = vec![0u64; n];
+                eng.mul_shr(&a, &b, 30, &mut out);
+                for i in 0..n {
+                    assert_eq!(out[i], ((a[i] as u128 * b[i] as u128) >> 30) as u64);
+                }
+                let mut idx = vec![0u64; n];
+                eng.segment_counts(&a, &[2, 4], &mut idx);
+            }
+        }
+    }
+}

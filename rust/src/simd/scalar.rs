@@ -1,0 +1,129 @@
+//! Scalar-unrolled reference implementations of the lane-engine ops.
+//!
+//! These define the semantics of every [`super::Engine`] op: plain
+//! integer arithmetic, four lanes per loop body so the compiler can
+//! keep the lanes in flight without loop-carried stalls (and so the
+//! structure mirrors the 4-lane AVX2 vectors — each unrolled body is
+//! one vector's worth of work). The [`super::avx2`] module must match
+//! these bit for bit; the module tests sweep both against `u128`
+//! references.
+
+#[inline]
+pub fn mul_shr(a: &[u64], b: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    debug_assert!(f < 128);
+    let mut ai = a.chunks_exact(4);
+    let mut bi = b.chunks_exact(4);
+    let mut oi = out.chunks_exact_mut(4);
+    for ((ca, cb), co) in (&mut ai).zip(&mut bi).zip(&mut oi) {
+        co[0] = ((ca[0] as u128 * cb[0] as u128) >> f) as u64;
+        co[1] = ((ca[1] as u128 * cb[1] as u128) >> f) as u64;
+        co[2] = ((ca[2] as u128 * cb[2] as u128) >> f) as u64;
+        co[3] = ((ca[3] as u128 * cb[3] as u128) >> f) as u64;
+    }
+    for ((&x, &y), o) in ai
+        .remainder()
+        .iter()
+        .zip(bi.remainder())
+        .zip(oi.into_remainder())
+    {
+        *o = ((x as u128 * y as u128) >> f) as u64;
+    }
+}
+
+#[inline]
+pub fn sqr_shr(a: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert_eq!(a.len(), out.len());
+    debug_assert!(f < 128);
+    let mut ai = a.chunks_exact(4);
+    let mut oi = out.chunks_exact_mut(4);
+    for (ca, co) in (&mut ai).zip(&mut oi) {
+        co[0] = ((ca[0] as u128 * ca[0] as u128) >> f) as u64;
+        co[1] = ((ca[1] as u128 * ca[1] as u128) >> f) as u64;
+        co[2] = ((ca[2] as u128 * ca[2] as u128) >> f) as u64;
+        co[3] = ((ca[3] as u128 * ca[3] as u128) >> f) as u64;
+    }
+    for (&x, o) in ai.remainder().iter().zip(oi.into_remainder()) {
+        *o = ((x as u128 * x as u128) >> f) as u64;
+    }
+}
+
+#[inline]
+pub fn sub_sat(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+        *o = x.saturating_sub(y);
+    }
+}
+
+#[inline]
+pub fn rsub_sat(minuend: u64, v: &mut [u64]) {
+    let mut vi = v.chunks_exact_mut(4);
+    for c in &mut vi {
+        c[0] = minuend.saturating_sub(c[0]);
+        c[1] = minuend.saturating_sub(c[1]);
+        c[2] = minuend.saturating_sub(c[2]);
+        c[3] = minuend.saturating_sub(c[3]);
+    }
+    for x in vi.into_remainder() {
+        *x = minuend.saturating_sub(*x);
+    }
+}
+
+#[inline]
+pub fn add_wrapping(acc: &mut [u64], x: &[u64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let mut ai = acc.chunks_exact_mut(4);
+    let mut xi = x.chunks_exact(4);
+    for (ca, cx) in (&mut ai).zip(&mut xi) {
+        ca[0] = ca[0].wrapping_add(cx[0]);
+        ca[1] = ca[1].wrapping_add(cx[1]);
+        ca[2] = ca[2].wrapping_add(cx[2]);
+        ca[3] = ca[3].wrapping_add(cx[3]);
+    }
+    for (a, &v) in ai.into_remainder().iter_mut().zip(xi.remainder()) {
+        *a = a.wrapping_add(v);
+    }
+}
+
+#[inline]
+pub fn fill_add(base: u64, x: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (&v, o) in x.iter().zip(out.iter_mut()) {
+        *o = base.wrapping_add(v);
+    }
+}
+
+#[inline]
+pub fn segment_counts(x: &[u64], edges: &[u64], idx: &mut [u64]) {
+    debug_assert_eq!(x.len(), idx.len());
+    debug_assert!(!edges.is_empty());
+    let last = (edges.len() - 1) as u64;
+    for (&v, o) in x.iter().zip(idx.iter_mut()) {
+        // Count of edges ≤ v: for a sorted edge list this equals the
+        // index of the first edge above v — the compare-tree select —
+        // and the count form is branch-free per edge.
+        let mut c = 0u64;
+        for &e in edges {
+            c += (v >= e) as u64;
+        }
+        *o = c.min(last);
+    }
+}
+
+#[inline]
+pub fn priority_encode_batch(n: &[u64], k: &mut [u32], r: &mut [u64]) {
+    debug_assert!(n.len() == k.len() && n.len() == r.len());
+    for ((&v, kk), rr) in n.iter().zip(k.iter_mut()).zip(r.iter_mut()) {
+        if v == 0 {
+            // Zero lanes are settled; the ILM control logic never feeds
+            // a zero operand to the encoder, callers test the operand.
+            *kk = 0;
+            *rr = 0;
+        } else {
+            let lead = 63 - v.leading_zeros();
+            *kk = lead;
+            *rr = v ^ (1 << lead);
+        }
+    }
+}

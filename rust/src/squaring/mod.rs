@@ -14,6 +14,7 @@
 //! (paper §5).
 
 use crate::ilm::priority_encode;
+use crate::simd::Engine;
 
 /// Outcome of a squaring-unit evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,14 +82,59 @@ pub fn ilm_square_fixed(a: u64, frac_bits: u32, iterations: u32) -> u64 {
 
 /// Lane-array fixed-point squares:
 /// `out[i] = ilm_square_fixed(a[i], frac_bits, iterations)` — the
-/// squaring unit driven across a whole kernel tile at once (the even
-/// powers of the [`crate::kernel`] power stage; one branch-light loop
-/// per stage instead of one unit evaluation per lane).
-#[inline]
-pub fn ilm_square_fixed_batch(a: &[u64], frac_bits: u32, iterations: u32, out: &mut [u64]) {
+/// squaring unit driven across a whole kernel tile at once, restructured
+/// for the explicit lane engine ([`crate::simd`]): instead of iterating
+/// the correction recursion per lane, every correction **stage** runs as
+/// one pass over the tile — first the priority-encoder pass
+/// ([`Engine::priority_encode_batch`]), then the eq-28 assembly — so the
+/// inner loops are branch-light and lane-parallel. Per lane the executed
+/// operation sequence is exactly [`ilm_square`]'s (settled lanes skip
+/// their remaining stages, as the scalar early-out does), so results are
+/// bit-identical; the unit test pins this per engine.
+pub fn ilm_square_fixed_batch(
+    eng: Engine,
+    a: &[u64],
+    frac_bits: u32,
+    iterations: u32,
+    out: &mut [u64],
+) {
     debug_assert_eq!(a.len(), out.len());
-    for (&x, o) in a.iter().zip(out.iter_mut()) {
-        *o = ilm_square_fixed(x, frac_bits, iterations);
+    const W: usize = 16;
+    let mut k = [0u32; W];
+    let mut r = [0u64; W];
+    let mut acc = [0u128; W];
+    let mut done = 0;
+    while done < a.len() {
+        let n = (a.len() - done).min(W);
+        let ac = &a[done..done + n];
+        // Stage 0 — the basic block (eq 28) over the tile; zero lanes
+        // are settled immediately (N² = 0).
+        eng.priority_encode_batch(ac, &mut k[..n], &mut r[..n]);
+        for j in 0..n {
+            acc[j] = if ac[j] == 0 {
+                0
+            } else {
+                (1u128 << (2 * k[j])) + ((r[j] as u128) << (k[j] + 1))
+            };
+        }
+        // Correction stages: r² is again a square, so the same pass
+        // iterates until the budget runs out or every residue is zero.
+        for _stage in 0..iterations {
+            if r[..n].iter().all(|&v| v == 0) {
+                break;
+            }
+            let prev = r;
+            eng.priority_encode_batch(&prev[..n], &mut k[..n], &mut r[..n]);
+            for j in 0..n {
+                if prev[j] != 0 {
+                    acc[j] += (1u128 << (2 * k[j])) + ((r[j] as u128) << (k[j] + 1));
+                }
+            }
+        }
+        for (o, &s) in out[done..done + n].iter_mut().zip(acc[..n].iter()) {
+            *o = (s >> frac_bits) as u64;
+        }
+        done += n;
     }
 }
 
@@ -189,12 +235,28 @@ mod tests {
 
     #[test]
     fn fixed_point_square_batch_matches_scalar() {
-        let xs: Vec<u64> = vec![0, 1, 3 << 15, (1 << 16) - 1, 77777, 1 << 20];
+        // 37 lanes (not a tile multiple), zeros and mixed magnitudes:
+        // the staged recursion must equal the per-lane unit bit for bit
+        // on every engine and at every budget, including lanes that
+        // settle mid-budget while neighbours keep correcting.
+        let mut xs: Vec<u64> =
+            vec![0, 1, 3 << 15, (1 << 16) - 1, 77777, 1 << 20, 0, u32::MAX as u64];
+        let mut rng = crate::util::rng::Rng::new(13);
+        while xs.len() < 37 {
+            xs.push(rng.next_u64() >> rng.below(40));
+        }
         let mut out = vec![0u64; xs.len()];
-        for iters in [0u32, 1, 4, 64] {
-            ilm_square_fixed_batch(&xs, 16, iters, &mut out);
-            for (i, &x) in xs.iter().enumerate() {
-                assert_eq!(out[i], ilm_square_fixed(x, 16, iters), "x={x} iters={iters}");
+        for eng in crate::simd::engines_available() {
+            for iters in [0u32, 1, 4, 64] {
+                ilm_square_fixed_batch(eng, &xs, 16, iters, &mut out);
+                for (i, &x) in xs.iter().enumerate() {
+                    assert_eq!(
+                        out[i],
+                        ilm_square_fixed(x, 16, iters),
+                        "{} x={x} iters={iters}",
+                        eng.name()
+                    );
+                }
             }
         }
     }

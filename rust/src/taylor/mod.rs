@@ -14,6 +14,7 @@
 
 use crate::pla::SegmentTable;
 use crate::powering::{Multiplier, OpCounts, PoweringUnit, PowersScratch};
+use crate::util::error::Result;
 
 /// Configuration of the reciprocal datapath.
 #[derive(Clone, Debug)]
@@ -29,23 +30,41 @@ pub struct TaylorConfig {
 impl TaylorConfig {
     /// The paper's headline configuration: Table-I segments (n = 5,
     /// 53-bit target) at a given datapath width.
+    ///
+    /// Panics only on an invalid datapath width or an unsatisfiable
+    /// derivation; fallible construction paths (service start) use
+    /// [`Self::try_paper_default`].
     pub fn paper_default(frac_bits: u32) -> Self {
-        let bounds = crate::pla::derive_segments(5, 53);
-        Self {
+        Self::try_paper_default(frac_bits).expect("paper Table-I Taylor configuration")
+    }
+
+    /// Fallible [`Self::paper_default`]: segment derivation and table
+    /// build errors propagate instead of aborting — the division
+    /// service builds its workers' datapath through this, so a bad
+    /// configuration is a rejected `DivisionService::start`.
+    pub fn try_paper_default(frac_bits: u32) -> Result<Self> {
+        let bounds = crate::pla::derive_segments(5, 53)?;
+        Ok(Self {
             order: 5,
             frac_bits,
-            table: SegmentTable::build(&bounds, frac_bits),
-        }
+            table: SegmentTable::try_build(&bounds, frac_bits)?,
+        })
     }
 
     /// Arbitrary (order, segments) configuration at `frac_bits`.
+    /// Panicking wrapper over [`Self::try_with_segments`].
     pub fn with_segments(order: u32, pr_max: u32, frac_bits: u32) -> Self {
-        let bounds = crate::pla::derive_segments(order, pr_max);
-        Self {
+        Self::try_with_segments(order, pr_max, frac_bits).expect("Taylor configuration")
+    }
+
+    /// Fallible [`Self::with_segments`].
+    pub fn try_with_segments(order: u32, pr_max: u32, frac_bits: u32) -> Result<Self> {
+        let bounds = crate::pla::derive_segments(order, pr_max)?;
+        Ok(Self {
             order,
             frac_bits,
-            table: SegmentTable::build(&bounds, frac_bits),
-        }
+            table: SegmentTable::try_build(&bounds, frac_bits)?,
+        })
     }
 }
 
@@ -270,6 +289,19 @@ mod tests {
             TaylorConfig::with_segments(order, 53, F),
             ExactMul::default(),
         )
+    }
+
+    #[test]
+    fn try_constructors_propagate_table_errors() {
+        // frac_bits beyond Q2.61 cannot be represented: the fallible
+        // chain reports it; the panicking wrappers are for known-good
+        // literals only.
+        assert!(TaylorConfig::try_paper_default(62).is_err());
+        assert!(TaylorConfig::try_paper_default(60).is_ok());
+        assert!(TaylorConfig::try_with_segments(5, 53, 62).is_err());
+        let cfg = TaylorConfig::try_with_segments(5, 53, 60).unwrap();
+        assert_eq!(cfg.order, 5);
+        assert_eq!(cfg.table.num_segments(), 8);
     }
 
     #[test]

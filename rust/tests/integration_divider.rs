@@ -107,7 +107,7 @@ fn adversarial_segment_edge_operands() {
     // Operands whose significands sit exactly on Table-I segment edges.
     let mut taylor = TaylorDivider::paper_exact();
     let mut gold = LongDivider::new();
-    let bounds = tsdiv::pla::derive_segments(5, 53);
+    let bounds = tsdiv::pla::derive_segments(5, 53).expect("Table-I derivation");
     for &edge in &bounds {
         for delta in [-2i64, -1, 0, 1, 2] {
             let base = (edge.min(1.9999999) as f32).to_bits() as i64;

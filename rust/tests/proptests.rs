@@ -59,7 +59,7 @@ fn prop_powering_unit_powers_match_exact_powi() {
 
 #[test]
 fn prop_seed_error_within_eq17_m_max() {
-    let bounds = derive_segments(5, 53);
+    let bounds = derive_segments(5, 53).unwrap();
     let table = SegmentTable::build(&bounds, 60);
     forall(Config::named("PLA seed m ≤ m_max(segment)").cases(400), |d| {
         let x = d.f64_range(1.0, 1.999_999_9);
@@ -288,9 +288,11 @@ fn prop_kernel_backend_bit_identical_to_scalar_datapath_all_formats() {
                 KernelConfig {
                     tile,
                     ilm_iterations: ilm,
+                    ..KernelConfig::default()
                 },
-            );
-            let mut scalar = ScalarNativeBackend::new(5, ilm);
+            )
+            .unwrap();
+            let mut scalar = ScalarNativeBackend::new(5, ilm).unwrap();
             let qk = kern.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
             let qs = scalar.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
             check_that!(
@@ -301,6 +303,91 @@ fn prop_kernel_backend_bit_identical_to_scalar_datapath_all_formats() {
         }
         Ok(())
     });
+}
+
+/// The lane-engine acceptance invariant: the forced-SIMD kernel equals
+/// the forced-scalar kernel equals the per-lane scalar datapath, bit for
+/// bit, for all formats × rounding modes × tile widths — including
+/// batch lengths that are not tile multiples, special and subnormal
+/// lanes, repeated divisors (reciprocal-cache hits) and both multiplier
+/// backends. On hosts with AVX2 the `Forced` choice exercises the real
+/// vector engine; elsewhere it is skipped (scalar vs scalar would be
+/// vacuous) but the kernel-vs-datapath half still runs.
+#[test]
+fn prop_forced_simd_kernel_bit_identical_to_forced_scalar_and_datapath() {
+    use tsdiv::coordinator::{Backend, KernelBackend, ScalarNativeBackend};
+    use tsdiv::fp::ALL_FORMATS;
+    use tsdiv::harness::special_patterns;
+    use tsdiv::kernel::KernelConfig;
+    use tsdiv::simd::{simd_available, SimdChoice};
+    forall(
+        Config::named("forced-simd kernel == forced-scalar kernel == datapath").cases(30),
+        |d| {
+            let fmt = ALL_FORMATS[d.choose_idx(4)];
+            let rm = Rounding::ALL[d.choose_idx(4)];
+            let tile = [1usize, 3, 8, 13][d.choose_idx(4)];
+            // Deliberately awkward length: rarely a tile multiple.
+            let n = d.range_u64(1, 70) as usize;
+            let specials = special_patterns(fmt);
+            let mut a = Vec::with_capacity(n);
+            let mut b = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut ab = d.u64() & fmt.width_mask();
+                let mut bb = d.u64() & fmt.width_mask();
+                match i % 5 {
+                    0 => ab = specials[d.choose_idx(specials.len())],
+                    1 => bb = specials[d.choose_idx(specials.len())],
+                    2 => {
+                        // Repeated divisor → reciprocal-cache hits on
+                        // both engines.
+                        if let Some(&prev) = b.last() {
+                            bb = prev;
+                        }
+                    }
+                    _ => {}
+                }
+                a.push(ab);
+                b.push(bb);
+            }
+            for ilm in [None, Some(3u32)] {
+                let mut scalar_kern = KernelBackend::new(
+                    5,
+                    KernelConfig {
+                        tile,
+                        ilm_iterations: ilm,
+                        simd: SimdChoice::Scalar,
+                    },
+                )
+                .unwrap();
+                let mut datapath = ScalarNativeBackend::new(5, ilm).unwrap();
+                let qsk = scalar_kern.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
+                let qd = datapath.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
+                check_that!(
+                    qsk == qd,
+                    "forced-scalar kernel != datapath ({}, {rm:?}, tile={tile}, ilm={ilm:?})",
+                    fmt.name()
+                );
+                if simd_available() {
+                    let mut simd_kern = KernelBackend::new(
+                        5,
+                        KernelConfig {
+                            tile,
+                            ilm_iterations: ilm,
+                            simd: SimdChoice::Forced,
+                        },
+                    )
+                    .unwrap();
+                    let qf = simd_kern.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
+                    check_that!(
+                        qf == qsk,
+                        "forced-simd != forced-scalar ({}, {rm:?}, tile={tile}, ilm={ilm:?})",
+                        fmt.name()
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -333,7 +420,7 @@ fn prop_kernel_backend_vs_gold_all_formats_and_roundings() {
             a.push(ab);
             b.push(bb);
         }
-        let mut kern = KernelBackend::new(5, KernelConfig::default());
+        let mut kern = KernelBackend::new(5, KernelConfig::default()).unwrap();
         let mut gold = LongDivider::new();
         let qk = kern.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
         let band = if fmt == F64 { 2 } else { 1 };
