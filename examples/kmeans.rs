@@ -53,6 +53,7 @@ fn main() {
             max_batch: 4096,
             max_wait: Duration::from_micros(300),
             queue_capacity: 1 << 14,
+            ..ServiceConfig::default()
         },
         backend,
     )

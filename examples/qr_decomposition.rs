@@ -51,6 +51,7 @@ fn main() {
             max_batch: 4096,
             max_wait: Duration::from_micros(200),
             queue_capacity: 1 << 12,
+            ..ServiceConfig::default()
         },
         BackendChoice::Native {
             order: 5,

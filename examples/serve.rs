@@ -45,7 +45,8 @@ fn main() {
         .opt("seconds", "3", "load duration")
         .opt("clients", "4", "client threads")
         .opt("request-lanes", "64", "divisions per request")
-        .opt("max-batch", "4096", "coalescing budget (lanes)")
+        .opt("max-batch", "4096", "coalescing budget (f32-equivalent lanes; cost-weighted per format)")
+        .opt("spare-divisor", "4", "budget divisor under spare capacity (1 disables)")
         .opt("workers", "2", "worker threads");
     let args = match cmd.parse(std::env::args().skip(1)) {
         Ok(a) => a,
@@ -92,6 +93,7 @@ fn main() {
                 max_batch: args.parse_or("max-batch", 4096),
                 max_wait: Duration::from_micros(200),
                 queue_capacity: 1 << 14,
+                spare_divisor: args.parse_or("spare-divisor", 4),
             },
             backend,
         )
@@ -160,6 +162,8 @@ fn main() {
     t.row(&["requests/s".into(), sig(requests as f64 / seconds as f64, 4)]);
     t.row(&["backend batches".into(), m.batches.to_string()]);
     t.row(&["mean lanes/batch".into(), sig(m.mean_batch_lanes(), 4)]);
+    t.row(&["cost units dispatched".into(), m.cost_units.to_string()]);
+    t.row(&["mean cost/batch".into(), sig(m.mean_batch_cost(), 4)]);
     t.row(&["service latency p50".into(), format!("{:.3} ms", m.latency_p50 * 1e3)]);
     t.row(&["service latency p99".into(), format!("{:.3} ms", m.latency_p99 * 1e3)]);
     t.row(&["backpressure rejections".into(), busy.to_string()]);

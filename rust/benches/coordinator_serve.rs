@@ -22,7 +22,7 @@ fn run_load_formats(
     lanes: usize,
     formats: &'static [Format],
     duration: Duration,
-) -> (f64, f64, f64, f64) {
+) -> (f64, f64, f64, f64, f64) {
     let svc = std::sync::Arc::new(
         DivisionService::start(
             ServiceConfig {
@@ -30,6 +30,7 @@ fn run_load_formats(
                 max_batch,
                 max_wait: Duration::from_micros(200),
                 queue_capacity: 1 << 14,
+                ..ServiceConfig::default()
             },
             backend,
         )
@@ -75,6 +76,7 @@ fn run_load_formats(
         m.latency_p50 * 1e3,
         m.latency_p99 * 1e3,
         m.mean_batch_lanes(),
+        m.mean_batch_cost(),
     );
     match std::sync::Arc::try_unwrap(svc) {
         Ok(s) => s.shutdown(),
@@ -91,7 +93,7 @@ fn run_load(
     clients: usize,
     lanes: usize,
     duration: Duration,
-) -> (f64, f64, f64, f64) {
+) -> (f64, f64, f64, f64, f64) {
     static F32_ONLY: [Format; 1] = [F32];
     run_load_formats(backend, workers, max_batch, clients, lanes, &F32_ONLY, duration)
 }
@@ -112,7 +114,7 @@ fn main() {
     .aligns(&[Align::Right; 6]);
     for workers in [1usize, 2, 4] {
         for max_batch in [256usize, 1024, 4096] {
-            let (thr, p50, p99, lpb) = run_load(
+            let (thr, p50, p99, lpb, _) = run_load(
                 BackendChoice::Native {
                     order: 5,
                     ilm_iterations: None,
@@ -142,7 +144,7 @@ fn main() {
         )
         .aligns(&[Align::Right; 5]);
         for workers in [1usize, 2] {
-            let (thr, p50, p99, lpb) =
+            let (thr, p50, p99, lpb, _) =
                 run_load(BackendChoice::Pjrt, workers, 4096, 8, 256, dur);
             t.row(&[
                 workers.to_string(),
@@ -222,7 +224,7 @@ fn main() {
             },
         ),
     ] {
-        let (thr, p50, p99, lpb) = run_load(backend, 2, 4096, 8, 256, dur);
+        let (thr, p50, p99, lpb, _) = run_load(backend, 2, 4096, 8, 256, dur);
         pair.push((label, thr));
         t.row(&[
             label.to_string(),
@@ -248,15 +250,23 @@ fn main() {
     // loads per format, then the interleaved mix (which the batcher must
     // keep coalescing by (Format, Rounding) key).
     let mut t = Table::new(
-        "typed requests: throughput by format (2 workers, 8 clients × 256 lanes)",
-        &["traffic", "div/s", "p50 ms", "p99 ms", "lanes/batch"],
+        "typed requests: throughput by format, cost-weighted budgets (2 workers, 8 clients × 256 lanes)",
+        &["traffic", "div/s", "p50 ms", "p99 ms", "lanes/batch", "cost/batch"],
     )
-    .aligns(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
     let native = BackendChoice::Native {
         order: 5,
         ilm_iterations: None,
     };
     let mut mixed_thr = 0.0;
+    let mut mixed_cost_per_batch = 0.0;
     static SINGLE: [[Format; 1]; 4] = [
         [tsdiv::fp::F16],
         [tsdiv::fp::BF16],
@@ -271,9 +281,10 @@ fn main() {
         ("f64", &SINGLE[3][..]),
         ("mixed (all four)", &MIXED[..]),
     ] {
-        let (thr, p50, p99, lpb) = run_load_formats(native, 2, 4096, 8, 256, formats, dur);
+        let (thr, p50, p99, lpb, cpb) = run_load_formats(native, 2, 4096, 8, 256, formats, dur);
         if label.starts_with("mixed") {
             mixed_thr = thr;
+            mixed_cost_per_batch = cpb;
         }
         t.row(&[
             label.to_string(),
@@ -281,6 +292,7 @@ fn main() {
             format!("{p50:.3}"),
             format!("{p99:.3}"),
             format!("{lpb:.1}"),
+            format!("{cpb:.1}"),
         ]);
     }
     t.print();
@@ -303,6 +315,9 @@ fn main() {
     }
     j.set("simd_engine", simd_engine.name().into());
     j.set("mixed_format_div_per_s", mixed_thr.into());
+    // Cost units per emitted batch under the mixed load — how close the
+    // cost-weighted assembler runs to its budget across the format mix.
+    j.set("mixed_format_cost_per_batch", mixed_cost_per_batch.into());
     tsdiv::harness::write_bench_json("coordinator_serve", &j);
 
     // Coordinator overhead: service vs bare loop over IDENTICAL
@@ -330,6 +345,7 @@ fn main() {
                 max_batch: 4096,
                 max_wait: Duration::from_micros(200),
                 queue_capacity: 1 << 14,
+                ..ServiceConfig::default()
             },
             BackendChoice::Native {
                 order: 5,

@@ -15,7 +15,55 @@ use tsdiv::taylor::TaylorConfig;
 use tsdiv::util::json::Json;
 use tsdiv::util::table::{sig, Align, Table};
 
+/// Parse the bench's own CLI (args after `--` in
+/// `cargo bench --bench divider_throughput -- ...`): `--tile` takes a
+/// comma-separated list of kernel tile widths for the sweep that pins
+/// `DEFAULT_TILE` (ROADMAP), defaulting to the full `4,8,16,32` grid so
+/// the CI datapoint always records the per-tile keys.
+fn tile_sweep_widths() -> Vec<usize> {
+    let cmd = tsdiv::util::cli::Command::new(
+        "divider_throughput",
+        "E9 divider throughput bench (tile sweep options)",
+    )
+    .opt(
+        "tile",
+        "4,8,16,32",
+        "comma-separated kernel tile widths to sweep (e.g. --tile 8)",
+    )
+    // Cargo appends `--bench` to every benchmark binary's argv when
+    // invoked via `cargo bench`, harness = false included — accept it
+    // as a no-op so the CI invocation keeps working.
+    .flag("bench", "accepted for cargo-bench compatibility (no-op)");
+    let parsed = match cmd.parse(std::env::args().skip(1)) {
+        Ok(p) => p,
+        Err(help) => {
+            eprintln!("{help}");
+            std::process::exit(2);
+        }
+    };
+    let spec = parsed.get_or("tile", "4,8,16,32").to_string();
+    let mut tiles: Vec<usize> = Vec::new();
+    for part in spec.split(',') {
+        // Every entry must parse: a typo must not silently shrink the
+        // sweep (a missing width would read as a warming-up gate metric
+        // instead of the benchmark the user asked for).
+        match part.trim().parse::<usize>() {
+            Ok(t) if (1..=1usize << 20).contains(&t) => tiles.push(t),
+            _ => {
+                eprintln!("option --tile: '{part}' is not a valid width (want e.g. 4,8,16,32)");
+                std::process::exit(2);
+            }
+        }
+    }
+    if tiles.is_empty() {
+        eprintln!("option --tile: '{spec}' has no widths (want e.g. 4,8,16,32)");
+        std::process::exit(2);
+    }
+    tiles
+}
+
 fn main() {
+    let tiles = tile_sweep_widths();
     println!("\n===== E9: Fig 7 — complete divider vs baselines =====\n");
 
     // Accuracy across workloads (vs exactly-rounded digit recurrence).
@@ -309,11 +357,68 @@ fn main() {
     }
     t.print();
 
+    // Kernel tile-width sweep (ROADMAP: pin DEFAULT_TILE from data):
+    // the same f32 workload through the kernel backend at each width,
+    // on the same pinned engine as the rows above, with bit-identity
+    // asserted across widths. Each width lands in the JSON datapoint as
+    // `kernel_tile{N}_div_per_s_f32`, so the accumulated BENCH_HISTORY
+    // gives the CI-box numbers the default is chosen from.
+    println!();
+    let mut t = Table::new(
+        &format!(
+            "kernel tile sweep (f32, 4096 lanes, engine = {}; default tile = {})",
+            simd_engine.name(),
+            tsdiv::kernel::DEFAULT_TILE
+        ),
+        &["tile", "Mdiv/s", "vs default"],
+    )
+    .aligns(&[Align::Right, Align::Right, Align::Right]);
+    let (ta, tb) = tsdiv::harness::gen_bits_batch(F32, 4096, 8, 33);
+    let mut tile_rows: Vec<(usize, f64)> = Vec::new();
+    let mut tile_ref: Option<Vec<u64>> = None;
+    for &tile in &tiles {
+        let mut kern = KernelBackend::new(
+            5,
+            tsdiv::kernel::KernelConfig {
+                tile,
+                simd: simd_choice,
+                ..tsdiv::kernel::KernelConfig::default()
+            },
+        )
+        .expect("tile-sweep kernel backend");
+        let m = timed_section(&format!("tile {tile}: Kernel × 4096"), || {
+            let q = kern
+                .divide(&ta, &tb, F32, Rounding::NearestEven)
+                .expect("tile-sweep kernel backend");
+            tsdiv::util::black_box(q[0]);
+        });
+        // Tile width must never change a bit.
+        let q = kern.divide(&ta, &tb, F32, Rounding::NearestEven).unwrap();
+        let reference = tile_ref.get_or_insert_with(|| q.clone());
+        assert_eq!(&q, reference, "tile={tile}: results differ across tile widths");
+        tile_rows.push((tile, m.items_per_sec(4096)));
+    }
+    let default_rate = tile_rows
+        .iter()
+        .find(|(t, _)| *t == tsdiv::kernel::DEFAULT_TILE)
+        .map(|&(_, r)| r);
+    for &(tile, rate) in &tile_rows {
+        let rel = match default_rate {
+            Some(d) if d > 0.0 => format!("{:.2}x", rate / d),
+            _ => "n/a".into(),
+        };
+        t.row(&[tile.to_string(), format!("{:.2}", rate / 1e6), rel]);
+    }
+    t.print();
+
     // Record the comparison for the bench trajectory.
     let mut j = Json::obj();
     j.set("bench", "divider_throughput".into());
     j.set("lanes", lanes.into());
     j.set("simd_engine", simd_engine.name().into());
+    for &(tile, rate) in &tile_rows {
+        j.set(&format!("kernel_tile{tile}_div_per_s_f32"), rate.into());
+    }
     for (name, s, av, k) in &fmt_rows {
         j.set(&format!("scalar_div_per_s_{name}"), (*s).into());
         j.set(&format!("kernel_autovec_div_per_s_{name}"), (*av).into());

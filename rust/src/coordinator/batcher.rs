@@ -5,12 +5,22 @@
 //! Heterogeneous traffic (any mix of f16/bf16/f32/f64 at any rounding
 //! mode) is bucketed by [`BatchKey`] so every emitted [`Batch`] carries
 //! one `(Format, Rounding)` pair and can run through a single
-//! `div_bits_batch` call. Each bucket accumulates to the lane budget
-//! independently; lane order within a request is always preserved.
+//! `div_bits_batch` call. Each bucket accumulates **cost units**
+//! independently until the shared budget is met: a lane is charged
+//! [`BatchKey::lane_cost`] (f64 ≈ 2× f16/bf16), so a wide-format bucket
+//! ships with fewer lanes than a half-format bucket of equal backend
+//! work — the budget bounds *work per batch*, not lane count. Lane
+//! order within a request is always preserved.
 
 use std::time::{Duration, Instant};
 
 use super::request::BatchKey;
+use crate::fp::F32;
+
+/// Cost units per binary32 lane — the reference the assembler's budget
+/// is denominated in: a budget of `n` "lanes" means the backend work of
+/// `n` f32 lanes, whatever format actually fills the bucket.
+pub const REF_LANE_COST: usize = F32.lane_cost();
 
 /// A request's lanes plus its index for response routing. Operands are
 /// raw bit patterns of the owning batch's format.
@@ -27,6 +37,10 @@ pub struct Batch {
     pub key: BatchKey,
     pub items: Vec<BatchItem>,
     pub lanes: usize,
+    /// Backend work this batch represents: `lanes × key.lane_cost()` —
+    /// what the assembler metered against its budget, and what the
+    /// service's cost gauge aggregates.
+    pub cost: usize,
     /// When the oldest (first) item entered this batch — the per-key
     /// clock behind [`BatchAssembler::take_expired`]. `None` while
     /// empty.
@@ -39,6 +53,7 @@ impl Batch {
             key,
             items: Vec::new(),
             lanes: 0,
+            cost: 0,
             opened_at: None,
         }
     }
@@ -78,36 +93,56 @@ impl Batch {
     }
 }
 
-/// Accumulates requests into per-`BatchKey` buckets until a lane budget
-/// is met. The key population is tiny (4 formats × 4 rounding modes),
-/// so buckets live in a linearly-scanned `Vec`.
+/// Accumulates requests into per-`BatchKey` buckets until the cost
+/// budget is met. The key population is tiny (4 formats × 4 rounding
+/// modes), so buckets live in a linearly-scanned `Vec`.
 #[derive(Debug)]
 pub struct BatchAssembler {
+    /// Configured budget in f32-equivalent lanes (the service's
+    /// `max_batch` knob).
     max_lanes: usize,
+    /// The same budget in cost units (`max_lanes × REF_LANE_COST`) —
+    /// what `push` actually meters against.
+    max_cost: usize,
     buckets: Vec<Batch>,
-    pending: usize,
+    pending_lanes: usize,
+    pending_cost: usize,
 }
 
 impl BatchAssembler {
+    /// `max_lanes` is denominated in **f32-equivalent lanes**: pure-f32
+    /// traffic flushes at exactly `max_lanes` lanes, f64 buckets at
+    /// ~3/4 of that, f16/bf16 buckets at ~3/2 — equal backend work per
+    /// emitted batch across formats.
     pub fn new(max_lanes: usize) -> Self {
         assert!(max_lanes > 0);
         Self {
             max_lanes,
+            max_cost: max_lanes * REF_LANE_COST,
             buckets: Vec::new(),
-            pending: 0,
+            pending_lanes: 0,
+            pending_cost: 0,
         }
     }
 
-    /// Current lane budget per emitted batch.
+    /// Current budget per emitted batch, in f32-equivalent lanes.
     pub fn max_lanes(&self) -> usize {
         self.max_lanes
     }
 
-    /// Retune the lane budget (adaptive batching). Takes effect for the
-    /// next `push`; an already-accumulated bucket above the new budget
-    /// flushes on its next push.
+    /// Current budget per emitted batch, in cost units
+    /// (`max_lanes() × REF_LANE_COST`).
+    pub fn cost_budget(&self) -> usize {
+        self.max_cost
+    }
+
+    /// Retune the budget (adaptive batching; still denominated in
+    /// f32-equivalent lanes). Takes effect for the next `push`; an
+    /// already-accumulated bucket above the new budget flushes on its
+    /// next push.
     pub fn set_max_lanes(&mut self, max_lanes: usize) {
         self.max_lanes = max_lanes.max(1);
+        self.max_cost = self.max_lanes * REF_LANE_COST;
     }
 
     fn bucket_mut(&mut self, key: BatchKey) -> &mut Batch {
@@ -121,47 +156,55 @@ impl BatchAssembler {
     }
 
     /// Add a request to its key's bucket. Returns that bucket as a
-    /// completed batch when the lane budget is reached (the new item may
-    /// itself trigger the flush). Other keys' buckets are unaffected.
+    /// completed batch when the **cost** budget is reached (the new item
+    /// may itself trigger the flush). Other keys' buckets are
+    /// unaffected. Invariant: an emitted batch never exceeds the budget
+    /// by more than its own final request's cost.
     pub fn push(&mut self, key: BatchKey, item: BatchItem) -> Option<Batch> {
         debug_assert_eq!(item.a.len(), item.b.len());
-        let max_lanes = self.max_lanes;
+        let max_cost = self.max_cost;
         let lanes = item.a.len();
+        let cost = lanes * key.lane_cost();
         let now = Instant::now();
         let bucket = self.bucket_mut(key);
         if bucket.items.is_empty() {
             // First lane of this key's window: start its per-key clock.
             bucket.opened_at = Some(now);
         }
-        let flushed = if lanes >= max_lanes {
+        let flushed = if cost >= max_cost {
             // An oversize single request: emit the bucket with the
             // oversize item appended (order kept) rather than splitting
             // the request.
             bucket.lanes += lanes;
+            bucket.cost += cost;
             bucket.items.push(item);
             Some(std::mem::replace(bucket, Batch::new(key)))
-        } else if bucket.lanes + lanes > max_lanes {
+        } else if bucket.cost + cost > max_cost {
             // Would overflow: ship what accumulated, start fresh (the
             // fresh bucket's clock starts with this item).
             let done = std::mem::replace(bucket, Batch::new(key));
             bucket.lanes = lanes;
+            bucket.cost = cost;
             bucket.items.push(item);
             bucket.opened_at = Some(now);
             Some(done)
         } else {
             bucket.lanes += lanes;
+            bucket.cost += cost;
             bucket.items.push(item);
-            if bucket.lanes == max_lanes {
+            if bucket.cost == max_cost {
                 Some(std::mem::replace(bucket, Batch::new(key)))
             } else {
                 None
             }
         };
-        // Uniform accounting: the new item's lanes enter the pending
-        // pool, whatever just flushed leaves it.
-        self.pending += lanes;
+        // Uniform accounting: the new item's lanes/cost enter the
+        // pending pool, whatever just flushed leaves it.
+        self.pending_lanes += lanes;
+        self.pending_cost += cost;
         if let Some(done) = &flushed {
-            self.pending -= done.lanes;
+            self.pending_lanes -= done.lanes;
+            self.pending_cost -= done.cost;
         }
         flushed
     }
@@ -176,7 +219,8 @@ impl BatchAssembler {
         let mut out = Vec::new();
         for b in self.buckets.iter_mut() {
             if !b.is_empty() && b.age(now) >= max_age {
-                self.pending -= b.lanes;
+                self.pending_lanes -= b.lanes;
+                self.pending_cost -= b.cost;
                 let key = b.key;
                 out.push(std::mem::replace(b, Batch::new(key)));
             }
@@ -186,7 +230,8 @@ impl BatchAssembler {
 
     /// Flush every non-empty bucket (idle-worker flush / shutdown).
     pub fn take_all(&mut self) -> Vec<Batch> {
-        self.pending = 0;
+        self.pending_lanes = 0;
+        self.pending_cost = 0;
         self.buckets
             .iter_mut()
             .filter(|b| !b.is_empty())
@@ -199,14 +244,20 @@ impl BatchAssembler {
 
     /// Total lanes accumulated across all buckets.
     pub fn pending_lanes(&self) -> usize {
-        self.pending
+        self.pending_lanes
+    }
+
+    /// Total cost units accumulated across all buckets (the sum of each
+    /// pending item's `lanes × lane_cost`).
+    pub fn pending_cost(&self) -> usize {
+        self.pending_cost
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fp::{Rounding, F16, F32, F64};
+    use crate::fp::{Rounding, BF16, F16, F32, F64};
 
     fn key32() -> BatchKey {
         BatchKey::new(F32, Rounding::NearestEven)
@@ -223,15 +274,20 @@ mod tests {
     #[test]
     fn accumulates_until_budget() {
         let mut asm = BatchAssembler::new(10);
+        assert_eq!(asm.cost_budget(), 10 * REF_LANE_COST);
         assert!(asm.push(key32(), item(1, 4)).is_none());
         assert!(asm.push(key32(), item(2, 4)).is_none());
         assert_eq!(asm.pending_lanes(), 8);
-        // 8 + 4 > 10 → flush the first two, start fresh with the third.
+        assert_eq!(asm.pending_cost(), 8 * REF_LANE_COST);
+        // 8 + 4 f32 lanes exceed the 10-lane budget in cost units →
+        // flush the first two, start fresh with the third.
         let b = asm.push(key32(), item(3, 4)).unwrap();
         assert_eq!(b.lanes, 8);
+        assert_eq!(b.cost, 8 * REF_LANE_COST);
         assert_eq!(b.items.len(), 2);
         assert_eq!(b.key, key32());
         assert_eq!(asm.pending_lanes(), 4);
+        assert_eq!(asm.pending_cost(), 4 * REF_LANE_COST);
     }
 
     #[test]
@@ -241,6 +297,7 @@ mod tests {
         let b = asm.push(key32(), item(2, 4)).unwrap();
         assert_eq!(b.lanes, 8);
         assert_eq!(asm.pending_lanes(), 0);
+        assert_eq!(asm.pending_cost(), 0);
     }
 
     #[test]
@@ -249,35 +306,67 @@ mod tests {
         assert!(asm.push(key32(), item(1, 3)).is_none());
         let b = asm.push(key32(), item(2, 20)).unwrap();
         assert_eq!(b.lanes, 23);
+        assert_eq!(b.cost, 23 * REF_LANE_COST);
         assert_eq!(b.items.len(), 2);
         assert_eq!(b.items[0].request_id, 1, "order preserved");
         assert_eq!(asm.pending_lanes(), 0);
     }
 
     #[test]
-    fn keys_accumulate_independently() {
+    fn cost_weighted_flush_thresholds_per_format() {
+        // One budget, three formats: the f64 bucket ships with the
+        // fewest lanes, the half bucket with the most — equal backend
+        // work per batch. Budget 12 f32-eq lanes = 36 cost units →
+        // exact fills at 18 f16 lanes (×2), 12 f32 lanes (×3), 9 f64
+        // lanes (×4).
+        for (fmt, fill) in [(F16, 18usize), (BF16, 18), (F32, 12), (F64, 9)] {
+            let key = BatchKey::new(fmt, Rounding::NearestEven);
+            let mut asm = BatchAssembler::new(12);
+            for id in 0..fill as u64 - 1 {
+                assert!(
+                    asm.push(key, item(id, 1)).is_none(),
+                    "{} flushed before its cost fill",
+                    fmt.name()
+                );
+            }
+            let b = asm.push(key, item(99, 1)).unwrap();
+            assert_eq!(b.lanes, fill, "{}", fmt.name());
+            assert_eq!(b.cost, asm.cost_budget(), "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn keys_accumulate_cost_independently() {
+        // Budget 8 f32-eq lanes = 24 cost units. Three keys fill
+        // side by side; only the bucket that crosses ITS cost budget
+        // ships.
         let k64 = BatchKey::new(F64, Rounding::NearestEven);
         let k32z = BatchKey::new(F32, Rounding::TowardZero);
         let mut asm = BatchAssembler::new(8);
-        assert!(asm.push(key32(), item(1, 5)).is_none());
-        assert!(asm.push(k64, item(2, 5)).is_none());
-        assert!(asm.push(k32z, item(3, 5)).is_none());
-        assert_eq!(asm.pending_lanes(), 15);
-        // Filling the f64 bucket flushes ONLY the f64 bucket.
-        let b = asm.push(k64, item(4, 3)).unwrap();
+        assert!(asm.push(key32(), item(1, 5)).is_none()); // 15 cost
+        assert!(asm.push(k64, item(2, 4)).is_none()); // 16 cost
+        assert!(asm.push(k32z, item(3, 5)).is_none()); // 15 cost
+        assert_eq!(asm.pending_lanes(), 14);
+        assert_eq!(asm.pending_cost(), 15 + 16 + 15);
+        // Two more f64 lanes exact-fill that bucket (24 cost) and flush
+        // ONLY it — 6 f64 lanes where the same budget holds 8 f32 lanes.
+        let b = asm.push(k64, item(4, 2)).unwrap();
         assert_eq!(b.key, k64);
-        assert_eq!(b.lanes, 8);
+        assert_eq!(b.lanes, 6);
+        assert_eq!(b.cost, 24);
         assert_eq!(
             b.items.iter().map(|i| i.request_id).collect::<Vec<_>>(),
             vec![2, 4]
         );
         assert_eq!(asm.pending_lanes(), 10);
+        assert_eq!(asm.pending_cost(), 30);
         // The rest drains by key.
         let rest = asm.take_all();
         assert_eq!(rest.len(), 2);
         assert!(rest.iter().any(|b| b.key == key32() && b.lanes == 5));
         assert!(rest.iter().any(|b| b.key == k32z && b.lanes == 5));
         assert_eq!(asm.pending_lanes(), 0);
+        assert_eq!(asm.pending_cost(), 0);
     }
 
     #[test]
@@ -302,6 +391,7 @@ mod tests {
         let bs = asm.take_all();
         assert_eq!(bs.len(), 1);
         assert_eq!(bs[0].lanes, 5);
+        assert_eq!(bs[0].cost, 5 * REF_LANE_COST);
         assert!(asm.take_all().is_empty());
     }
 
@@ -311,7 +401,7 @@ mod tests {
         // window busy. Per-key expiry must ship the bf16 bucket once its
         // own clock runs out — and ONLY that bucket, leaving the fresher
         // f32 lanes to keep coalescing.
-        let kbf16 = BatchKey::new(crate::fp::BF16, Rounding::NearestEven);
+        let kbf16 = BatchKey::new(BF16, Rounding::NearestEven);
         let mut asm = BatchAssembler::new(1 << 20);
         asm.push(kbf16, item(1, 1));
         std::thread::sleep(Duration::from_millis(60));
@@ -325,8 +415,11 @@ mod tests {
         assert_eq!(expired.len(), 1, "only the stale bucket ships");
         assert_eq!(expired[0].key, kbf16);
         assert_eq!(expired[0].lanes, 1);
-        // The f32 bucket stayed behind, still coalescing.
+        assert_eq!(expired[0].cost, BF16.lane_cost());
+        // The f32 bucket stayed behind, still coalescing — and the
+        // expired bucket's cost left the pending gauge.
         assert_eq!(asm.pending_lanes(), 8);
+        assert_eq!(asm.pending_cost(), 8 * REF_LANE_COST);
         let rest = asm.take_all();
         assert_eq!(rest.len(), 1);
         assert_eq!(rest[0].key, key32());
@@ -347,6 +440,7 @@ mod tests {
         assert_eq!(b.len(), 1);
         assert_eq!(b[0].lanes, 2);
         assert_eq!(asm.pending_lanes(), 0);
+        assert_eq!(asm.pending_cost(), 0);
     }
 
     #[test]
@@ -354,12 +448,34 @@ mod tests {
         let mut asm = BatchAssembler::new(100);
         asm.push(key32(), item(1, 30));
         asm.set_max_lanes(16);
-        // 30 already-pending lanes exceed the shrunk budget: the next
-        // push flushes them and starts fresh.
+        // 30 already-pending f32 lanes exceed the shrunk budget: the
+        // next push flushes them and starts fresh.
         let b = asm.push(key32(), item(2, 4)).unwrap();
         assert_eq!(b.lanes, 30);
         assert_eq!(asm.pending_lanes(), 4);
         assert_eq!(asm.max_lanes(), 16);
+        assert_eq!(asm.cost_budget(), 16 * REF_LANE_COST);
+    }
+
+    #[test]
+    fn spare_divisor_retune_applies_on_next_push() {
+        // The service's spare-capacity policy: budget ÷ spare_divisor
+        // while every worker is idle, restored at saturation — exactly
+        // the two set_max_lanes calls below. The shrink must apply on
+        // the very next push (ship the over-budget pending lanes), not
+        // wait for a flush boundary.
+        let max_batch = 64usize;
+        let spare_divisor = 8usize;
+        let mut asm = BatchAssembler::new(max_batch);
+        asm.push(key32(), item(1, 20)); // 60 cost, well under 192
+        asm.set_max_lanes((max_batch / spare_divisor).max(1)); // 8 lanes → 24 cost
+        let b = asm.push(key32(), item(2, 4)).unwrap();
+        assert_eq!(b.lanes, 20, "shrunk budget ships the pending bucket");
+        assert_eq!(asm.pending_lanes(), 4);
+        // Saturation restores the full budget for the next push.
+        asm.set_max_lanes(max_batch);
+        assert_eq!(asm.max_lanes(), 64);
+        assert!(asm.push(key32(), item(3, 30)).is_none(), "full budget holds again");
     }
 
     #[test]

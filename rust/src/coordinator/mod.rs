@@ -57,7 +57,7 @@ pub mod request;
 pub mod service;
 pub mod worker;
 
-pub use batcher::{Batch, BatchAssembler, BatchItem};
+pub use batcher::{Batch, BatchAssembler, BatchItem, REF_LANE_COST};
 pub use request::{BatchKey, DivRequest, DivResponse};
 pub use service::{
     DivTicket, DivisionService, MetricsSnapshot, ServiceConfig, SubmitError, Ticket,
@@ -80,6 +80,7 @@ mod tests {
                 max_batch: 64,
                 max_wait: Duration::from_millis(2),
                 queue_capacity: 128,
+                ..ServiceConfig::default()
             },
             BackendChoice::Native {
                 order: 5,
@@ -116,6 +117,7 @@ mod tests {
                 max_batch: 256,
                 max_wait: Duration::from_millis(5),
                 queue_capacity: 512,
+                ..ServiceConfig::default()
             },
             BackendChoice::Native {
                 order: 5,

@@ -21,6 +21,13 @@ impl BatchKey {
     pub fn new(fmt: Format, rm: Rounding) -> Self {
         Self { fmt, rm }
     }
+
+    /// Cost units one lane of this key charges against the assembler's
+    /// coalescing budget (see [`Format::lane_cost`]; rounding mode does
+    /// not change the per-lane work).
+    pub const fn lane_cost(&self) -> usize {
+        self.fmt.lane_cost()
+    }
 }
 
 impl std::fmt::Display for BatchKey {
@@ -224,5 +231,17 @@ mod tests {
     fn key_display_names() {
         let k = BatchKey::new(F16, Rounding::TowardNegative);
         assert_eq!(k.to_string(), "f16/down");
+    }
+
+    #[test]
+    fn key_cost_follows_format_not_rounding() {
+        for rm in Rounding::ALL {
+            assert_eq!(BatchKey::new(F16, rm).lane_cost(), F16.lane_cost());
+            assert_eq!(BatchKey::new(F64, rm).lane_cost(), F64.lane_cost());
+        }
+        assert_eq!(
+            BatchKey::new(F64, Rounding::NearestEven).lane_cost(),
+            2 * BatchKey::new(BF16, Rounding::NearestEven).lane_cost()
+        );
     }
 }

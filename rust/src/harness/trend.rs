@@ -1,0 +1,375 @@
+//! Robust statistics over the `BENCH_HISTORY.jsonl` trajectory and the
+//! bench **regression gate** behind `tsdiv bench-trend --gate`.
+//!
+//! Single bench runs are noisy (CI boxes doubly so), so the gate judges
+//! the latest run against the **median** of the previous `window` runs
+//! per metric, with the median absolute deviation (MAD) reported as the
+//! noise context. Only higher-is-better throughput metrics are gated —
+//! keys containing `per_s`, the convention every serving bench follows
+//! — and a metric whose history is still shorter than the window is
+//! reported as `n/a` and never fails the gate: a fresh trajectory (or a
+//! freshly added bench row) warms up gracefully instead of blocking CI.
+
+use crate::util::json::Json;
+use crate::util::stats::percentile_of;
+
+/// Median of an unsorted slice (`NaN` on empty input).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    percentile_of(xs, 0.5)
+}
+
+/// Median absolute deviation — the robust spread companion to
+/// [`median`]: `median(|x_i − median(xs)|)`. `NaN` on empty input.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let med = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    median(&devs)
+}
+
+/// Is this record key a gated throughput metric? Every serving bench
+/// writes its higher-is-better rates with `per_s` in the key
+/// (`kernel_div_per_s_f32`, `mixed_format_div_per_s`, …); ratios,
+/// configuration echoes and lane counts are trend-reported but never
+/// gated.
+pub fn is_throughput_metric(key: &str) -> bool {
+    key.contains("per_s")
+}
+
+/// One gated metric's verdict.
+#[derive(Clone, Debug)]
+pub struct MetricGate {
+    pub bench: String,
+    pub metric: String,
+    /// Baseline runs found for this metric (capped at the window; the
+    /// gate only judges when `n == window`).
+    pub n: usize,
+    /// Median of the baseline window (`NaN` while warming up).
+    pub baseline_median: f64,
+    /// MAD of the baseline window (`NaN` while warming up).
+    pub baseline_mad: f64,
+    /// The latest run's value.
+    pub latest: f64,
+    /// `(latest − median) / median` in percent (`NaN` while warming up
+    /// or on a zero/non-finite baseline).
+    pub delta_pct: f64,
+    /// True when the latest value dropped more than the tolerance below
+    /// the baseline median.
+    pub regressed: bool,
+}
+
+impl MetricGate {
+    /// Still accumulating history — reported `n/a`, never failing.
+    pub fn warming_up(&self) -> bool {
+        !self.baseline_median.is_finite()
+    }
+}
+
+/// The gate verdict over a whole history.
+#[derive(Clone, Debug)]
+pub struct GateReport {
+    pub window: usize,
+    pub tolerance_pct: f64,
+    /// One row per `(bench, throughput metric)` of each bench's latest
+    /// record, in first-seen order.
+    pub metrics: Vec<MetricGate>,
+}
+
+impl GateReport {
+    /// The failing rows (empty on a passing or warming-up history).
+    pub fn regressions(&self) -> Vec<&MetricGate> {
+        self.metrics.iter().filter(|m| m.regressed).collect()
+    }
+
+    /// Gate outcome: pass unless at least one metric regressed.
+    pub fn passed(&self) -> bool {
+        self.metrics.iter().all(|m| !m.regressed)
+    }
+
+    /// How many metrics had a full baseline window (i.e. were actually
+    /// judged rather than reported `n/a`).
+    pub fn judged(&self) -> usize {
+        self.metrics.iter().filter(|m| !m.warming_up()).count()
+    }
+}
+
+/// Judge the latest run of every bench in `records` (as returned by
+/// [`super::read_bench_history`]) against the rolling median of the
+/// `window` runs preceding it. A metric regresses when
+/// `latest < median × (1 − tolerance_pct/100)`; metrics with fewer than
+/// `window` prior recordings — including the everything-is-new case of
+/// an empty or short history — are reported with `NaN` baselines and
+/// never regress.
+pub fn gate_bench_history(records: &[Json], window: usize, tolerance_pct: f64) -> GateReport {
+    assert!(window >= 1, "gate window must be ≥ 1 run");
+    assert!(
+        tolerance_pct >= 0.0 && tolerance_pct.is_finite(),
+        "gate tolerance must be a non-negative percentage"
+    );
+    // Group records by bench name, preserving first-seen order (the
+    // same grouping the trend table uses).
+    let mut names: Vec<String> = Vec::new();
+    let mut groups: std::collections::HashMap<String, Vec<&Json>> =
+        std::collections::HashMap::new();
+    for r in records {
+        let name = r
+            .get("bench")
+            .and_then(|j| j.as_str())
+            .unwrap_or("(unnamed)")
+            .to_string();
+        if !groups.contains_key(&name) {
+            names.push(name.clone());
+        }
+        groups.entry(name).or_default().push(r);
+    }
+    let mut metrics = Vec::new();
+    for name in &names {
+        let runs = &groups[name];
+        let (latest, prior) = runs.split_last().expect("groups are non-empty");
+        let Json::Obj(pairs) = *latest else { continue };
+        for (key, val) in pairs {
+            if !is_throughput_metric(key) {
+                continue;
+            }
+            let Some(latest_val) = val.as_f64() else { continue };
+            // Baseline: the most recent `window` prior runs that carry
+            // this metric (older runs predating a freshly added row are
+            // simply skipped, so new rows warm up instead of erroring).
+            let baseline: Vec<f64> = prior
+                .iter()
+                .rev()
+                .filter_map(|r| r.get(key).and_then(|j| j.as_f64()))
+                .take(window)
+                .collect();
+            let n = baseline.len();
+            if n < window {
+                metrics.push(MetricGate {
+                    bench: name.clone(),
+                    metric: key.clone(),
+                    n,
+                    baseline_median: f64::NAN,
+                    baseline_mad: f64::NAN,
+                    latest: latest_val,
+                    delta_pct: f64::NAN,
+                    regressed: false,
+                });
+                continue;
+            }
+            let med = median(&baseline);
+            let spread = mad(&baseline);
+            let (delta_pct, regressed) = if med.is_finite() && med > 0.0 {
+                let delta = (latest_val - med) / med * 100.0;
+                (delta, delta < -tolerance_pct)
+            } else {
+                // Zero or degenerate baseline: nothing meaningful to
+                // gate against.
+                (f64::NAN, false)
+            };
+            metrics.push(MetricGate {
+                bench: name.clone(),
+                metric: key.clone(),
+                n,
+                baseline_median: med,
+                baseline_mad: spread,
+                latest: latest_val,
+                delta_pct,
+                regressed,
+            });
+        }
+    }
+    GateReport {
+        window,
+        tolerance_pct,
+        metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(bench: &str, metric: &str, value: f64) -> Json {
+        let mut j = Json::obj();
+        j.set("bench", Json::Str(bench.to_string()));
+        j.set(metric, Json::Num(value));
+        j
+    }
+
+    #[test]
+    fn median_and_mad_basics() {
+        assert!(median(&[]).is_nan());
+        assert!(mad(&[]).is_nan());
+        assert_eq!(median(&[3.0]), 3.0);
+        assert_eq!(mad(&[3.0]), 0.0);
+        assert_eq!(median(&[1.0, 9.0, 5.0]), 5.0);
+        // devs from median 5: [4, 4, 0] → median 4.
+        assert_eq!(mad(&[1.0, 9.0, 5.0]), 4.0);
+        // An outlier barely moves the median, unlike the mean.
+        assert_eq!(median(&[10.0, 10.0, 10.0, 10.0, 1000.0]), 10.0);
+        assert_eq!(mad(&[10.0, 10.0, 10.0, 10.0, 1000.0]), 0.0);
+    }
+
+    #[test]
+    fn throughput_keys_recognized() {
+        assert!(is_throughput_metric("kernel_div_per_s_f32"));
+        assert!(is_throughput_metric("mixed_format_div_per_s"));
+        assert!(is_throughput_metric("batch_div_per_s"));
+        assert!(!is_throughput_metric("lanes"));
+        assert!(!is_throughput_metric("kernel_over_scalar_f32"));
+        assert!(!is_throughput_metric("simd_over_autovec_f64"));
+        assert!(!is_throughput_metric("workers"));
+    }
+
+    #[test]
+    fn empty_and_short_histories_warm_up_gracefully() {
+        let report = gate_bench_history(&[], 5, 15.0);
+        assert!(report.passed());
+        assert!(report.metrics.is_empty());
+        assert_eq!(report.judged(), 0);
+        // Three runs against a 5-run window: reported, n/a, passing.
+        let records: Vec<Json> = (0..3)
+            .map(|i| record("b", "x_div_per_s", 100.0 + i as f64))
+            .collect();
+        let report = gate_bench_history(&records, 5, 15.0);
+        assert!(report.passed());
+        assert_eq!(report.metrics.len(), 1);
+        assert!(report.metrics[0].warming_up());
+        assert_eq!(report.metrics[0].n, 2, "two prior runs found");
+        assert_eq!(report.judged(), 0);
+    }
+
+    #[test]
+    fn synthetic_regression_fails_and_recovery_passes() {
+        // Five steady runs, then a crash to half throughput.
+        let mut records: Vec<Json> = (0..5)
+            .map(|i| record("divider_throughput", "kernel_div_per_s_f32", 100.0 + i as f64))
+            .collect();
+        records.push(record("divider_throughput", "kernel_div_per_s_f32", 50.0));
+        let report = gate_bench_history(&records, 5, 15.0);
+        assert!(!report.passed());
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "kernel_div_per_s_f32");
+        assert_eq!(regs[0].baseline_median, 102.0);
+        assert!(regs[0].delta_pct < -50.0, "{}", regs[0].delta_pct);
+        assert_eq!(report.judged(), 1);
+        // A small dip inside the tolerance passes…
+        records.pop();
+        records.push(record("divider_throughput", "kernel_div_per_s_f32", 95.0));
+        assert!(gate_bench_history(&records, 5, 15.0).passed());
+        // …and so does an improvement, by any margin.
+        records.pop();
+        records.push(record("divider_throughput", "kernel_div_per_s_f32", 5000.0));
+        assert!(gate_bench_history(&records, 5, 15.0).passed());
+    }
+
+    #[test]
+    fn only_throughput_metrics_gate_and_benches_stay_separate() {
+        let mut records = Vec::new();
+        for i in 0..6 {
+            let mut j = Json::obj();
+            j.set("bench", Json::Str("serve".into()));
+            j.set("kernel_div_per_s", Json::Num(200.0));
+            // A collapsing ratio must NOT trip the gate (not a per_s key).
+            j.set("kernel_over_scalar", Json::Num(10.0 - i as f64));
+            records.push(j);
+        }
+        // A different bench with its own short history: n/a, not judged
+        // against "serve"'s records.
+        records.push(record("other", "other_div_per_s", 1.0));
+        let report = gate_bench_history(&records, 5, 15.0);
+        assert!(report.passed());
+        let other: Vec<_> = report.metrics.iter().filter(|m| m.bench == "other").collect();
+        assert_eq!(other.len(), 1);
+        assert!(other[0].warming_up());
+    }
+
+    #[test]
+    fn freshly_added_metric_warms_up_inside_an_old_bench() {
+        // Five old runs without the new row, then two runs with it: the
+        // new metric has only one prior recording → n/a, while the old
+        // metric is judged normally.
+        let mut records: Vec<Json> = (0..5).map(|_| record("b", "old_div_per_s", 100.0)).collect();
+        for _ in 0..2 {
+            let mut j = record("b", "old_div_per_s", 100.0);
+            j.set("new_div_per_s", Json::Num(7.0));
+            records.push(j);
+        }
+        let report = gate_bench_history(&records, 5, 15.0);
+        assert!(report.passed());
+        let new_row = report
+            .metrics
+            .iter()
+            .find(|m| m.metric == "new_div_per_s")
+            .unwrap();
+        assert!(new_row.warming_up());
+        assert_eq!(new_row.n, 1);
+        let old_row = report
+            .metrics
+            .iter()
+            .find(|m| m.metric == "old_div_per_s")
+            .unwrap();
+        assert!(!old_row.warming_up());
+    }
+
+    #[test]
+    fn zero_baseline_prints_na_instead_of_failing() {
+        let mut records: Vec<Json> = (0..5).map(|_| record("b", "x_per_s", 0.0)).collect();
+        records.push(record("b", "x_per_s", 0.0));
+        let report = gate_bench_history(&records, 5, 15.0);
+        assert!(report.passed());
+        assert!(report.metrics[0].delta_pct.is_nan());
+    }
+
+    #[test]
+    fn window_uses_runs_preceding_the_latest_only() {
+        // Median must come from the 3 runs before the latest, not
+        // include the latest itself: baseline [100, 100, 10] → median
+        // 100; latest 10 → −90 % → regression at window 3.
+        let values = [100.0, 100.0, 10.0, 10.0];
+        let records: Vec<Json> = values
+            .iter()
+            .map(|&v| record("b", "x_per_s", v))
+            .collect();
+        let report = gate_bench_history(&records, 3, 15.0);
+        assert!(!report.passed());
+        assert_eq!(report.metrics[0].baseline_median, 100.0);
+    }
+
+    #[test]
+    fn gate_reads_a_real_temp_bench_history_file() {
+        // End-to-end against the same reader the CLI uses: write a
+        // synthetic regression fixture as a temp BENCH_HISTORY, read it
+        // back, gate it.
+        let path = std::env::temp_dir().join("tsdiv_test_gate_history.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        let mut lines = String::new();
+        for v in [100.0, 101.0, 99.0, 100.0, 102.0, 40.0] {
+            lines.push_str(&format!(
+                "{{\"bench\":\"divider_throughput\",\"kernel_div_per_s_f32\":{v},\"lanes\":4096}}\n"
+            ));
+        }
+        std::fs::write(&path, lines).unwrap();
+        let records = crate::harness::read_bench_history(&path).unwrap();
+        assert_eq!(records.len(), 6);
+        let report = gate_bench_history(&records, 5, 15.0);
+        assert!(!report.passed(), "synthetic regression fixture must fail the gate");
+        assert_eq!(report.regressions().len(), 1);
+        // The same file passes at a window its history cannot fill.
+        let report = gate_bench_history(&records, 50, 15.0);
+        assert!(report.passed());
+        assert_eq!(report.judged(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    #[should_panic(expected = "window")]
+    fn zero_window_rejected() {
+        let _ = gate_bench_history(&[], 0, 15.0);
+    }
+}

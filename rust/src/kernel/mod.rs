@@ -160,6 +160,13 @@ impl LanePlan {
 pub struct KernelScratch {
     /// Plan-stage output (dense SoA lanes).
     pub plan: LanePlan,
+    // The PLA edge table staged for the seed stage's compare pass,
+    // built once per `divide_batch` call (and reused across calls while
+    // the table is unchanged) instead of re-biased inside every
+    // `segment_counts` call — with the default 8-lane tile that setup
+    // rivaled the compare work itself (ROADMAP item e). Pure
+    // re-encoding of the edges: bit-identical on every engine.
+    edge_cache: crate::simd::BiasedEdges,
     // Tile staging: positions (into `plan`) and operands of the lanes
     // whose reciprocal missed the cache this tile.
     miss_pos: Vec<u32>,
@@ -225,6 +232,7 @@ pub fn divide_batch<M: Multiplier>(
 
     let KernelScratch {
         plan,
+        edge_cache,
         miss_pos,
         miss_x,
         y0,
@@ -240,6 +248,13 @@ pub fn divide_batch<M: Multiplier>(
     // the (cfg, backend) pair of THIS call (see the field comment).
     cache_x.fill(0);
     cache_r.fill(0);
+
+    // Stage the PLA edge table once for the whole call (every seed tile
+    // reuses it); a scratch that last served a different Taylor config
+    // rebuilds, otherwise the staging from the previous call stands.
+    if !edge_cache.matches(&cfg.table.edges) {
+        edge_cache.rebuild(&cfg.table.edges);
+    }
 
     // Stage 1 — plan: unpack, classify specials into the output
     // sidechannel, pack real divisions into the dense SoA arrays.
@@ -269,7 +284,7 @@ pub fn divide_batch<M: Multiplier>(
             }
         }
         if !miss_pos.is_empty() {
-            stages::seed(eng, &cfg.table, miss_x, y0);
+            stages::seed(eng, &cfg.table, edge_cache, miss_x, y0);
             stages::power(eng, backend, f, cfg.order, miss_x, y0, m, pow, sum, recip);
             for (k, &pos) in miss_pos.iter().enumerate() {
                 let x = miss_x[k];
@@ -462,6 +477,53 @@ mod tests {
         for tile in [1usize, 4, 8, 37] {
             let got = kernel_divide(&cfg, Some(3), tile, &a, &b, F32, Rounding::TowardZero);
             assert_eq!(got, want, "tile={tile}");
+        }
+    }
+
+    #[test]
+    fn staged_edge_table_multi_tile_call_bit_identical_across_engines() {
+        // ROADMAP item e: one divide_batch call spanning many seed
+        // tiles stages the PLA edge table once and reuses it per tile —
+        // the forced-SIMD engine must equal the forced-scalar engine
+        // bit for bit over that whole call (AVX2 exercised when the
+        // host has it), and both must equal the scalar datapath.
+        let cfg = TaylorConfig::paper_default(60);
+        let mut rng = Rng::new(2026);
+        // 131 lanes at tile 8 → 17 tiles in one call, tail included;
+        // random divisors keep the reciprocal cache missing, so nearly
+        // every tile runs the seed stage against the shared staging.
+        let (a, b) = crate::harness::gen_bits_batch(F32, 131, 8, rng.next_u64());
+        let mut d = TaylorDivider::paper_exact();
+        let want: Vec<u64> = (0..a.len())
+            .map(|i| d.div_bits(a[i], b[i], F32, Rounding::NearestEven))
+            .collect();
+        for eng in crate::simd::engines_available() {
+            let mut be = ExactMul::default();
+            let mut scratch = KernelScratch::new();
+            let mut out = vec![0u64; a.len()];
+            let rm = Rounding::NearestEven;
+            divide_batch(&cfg, &mut be, &mut scratch, 8, eng, &a, &b, F32, rm, &mut out);
+            assert_eq!(out, want, "{} first call", eng.name());
+            // Second call through the SAME scratch: the edge staging
+            // from the first call is reused as-is.
+            let mut out2 = vec![0u64; a.len()];
+            divide_batch(&cfg, &mut be, &mut scratch, 8, eng, &a, &b, F32, rm, &mut out2);
+            assert_eq!(out2, want, "{} staged-edge reuse call", eng.name());
+            // A different segment table through the same scratch forces
+            // a restage — results must match that table's datapath.
+            let cfg1 = TaylorConfig {
+                order: 5,
+                frac_bits: 60,
+                table: crate::pla::SegmentTable::build(&[1.0, 2.0], 60),
+            };
+            assert_ne!(cfg1.table.edges, cfg.table.edges, "fixture needs a second table");
+            let mut d1 = TaylorDivider::new(cfg1.clone(), crate::divider::BackendKind::Exact);
+            let want1: Vec<u64> = (0..a.len())
+                .map(|i| d1.div_bits(a[i], b[i], F32, rm))
+                .collect();
+            let mut out3 = vec![0u64; a.len()];
+            divide_batch(&cfg1, &mut be, &mut scratch, 8, eng, &a, &b, F32, rm, &mut out3);
+            assert_eq!(out3, want1, "{} restaged table", eng.name());
         }
     }
 

@@ -47,12 +47,21 @@ pub fn plan(a: &[u64], b: &[u64], fmt: Format, shift: u32, lanes: &mut LanePlan,
 
 /// Stage 2 — seed: PLA segment lookup (compare tree + one multiply) for
 /// a tile of divisor significands, `y0[i] ≈ 1/x[i]`, on the explicit
-/// lane engine (the compare tree runs as an edge-count pass, see
-/// [`SegmentTable::seed_batch`]).
-pub fn seed(eng: Engine, table: &SegmentTable, x: &[u64], y0: &mut Vec<u64>) {
+/// lane engine. The compare tree runs as an edge-count pass over the
+/// **pre-staged** edge table (`edge_cache`, built once per
+/// `divide_batch` call in [`super::KernelScratch`] from `table`'s
+/// edges), so the AVX2 bias/broadcast setup is not repeated per tile —
+/// see [`SegmentTable::seed_batch_with`].
+pub fn seed(
+    eng: Engine,
+    table: &SegmentTable,
+    edge_cache: &crate::simd::BiasedEdges,
+    x: &[u64],
+    y0: &mut Vec<u64>,
+) {
     y0.clear();
     y0.resize(x.len(), 0);
-    table.seed_batch(eng, x, y0);
+    table.seed_batch_with(eng, edge_cache, x, y0);
 }
 
 /// Stage 3 — power: Taylor powering over a tile.
@@ -188,6 +197,8 @@ mod tests {
             .map(|i| (1u64 << 60) + i * ((1u64 << 60) / 17) + 4321)
             .map(|x| x.min((1u64 << 61) - 1))
             .collect();
+        let mut cache = crate::simd::BiasedEdges::new();
+        cache.rebuild(&cfg.table.edges);
         for eng in crate::simd::engines_available() {
             let mut y0 = Vec::new();
             let mut m = Vec::new();
@@ -195,7 +206,7 @@ mod tests {
             let mut sum = Vec::new();
             let mut recip = Vec::new();
             let mut be = ExactMul::default();
-            seed(eng, &cfg.table, &xs, &mut y0);
+            seed(eng, &cfg.table, &cache, &xs, &mut y0);
             power(eng, &mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
             for (i, &x) in xs.iter().enumerate() {
                 let mut be2 = ExactMul::default();
@@ -220,12 +231,14 @@ mod tests {
         let xs: Vec<u64> = (0..64)
             .map(|i| (1u64 << 60) + i * ((1u64 << 54) + 7))
             .collect();
+        let mut cache = crate::simd::BiasedEdges::new();
+        cache.rebuild(&cfg.table.edges);
         for eng in crate::simd::engines_available() {
             let mut y0 = Vec::new();
             let (mut m, mut pow, mut sum, mut recip) =
                 (Vec::new(), Vec::new(), Vec::new(), Vec::new());
             let mut be = ExactMul::default();
-            seed(eng, &cfg.table, &xs, &mut y0);
+            seed(eng, &cfg.table, &cache, &xs, &mut y0);
             power(eng, &mut be, f, cfg.order, &xs, &y0, &mut m, &mut pow, &mut sum, &mut recip);
             for (i, &x) in xs.iter().enumerate() {
                 let mut be2 = ExactMul::default();

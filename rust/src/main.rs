@@ -61,8 +61,11 @@ fn print_usage() {
          \x20 serve            run the division service under synthetic load\n\
          \x20                  (--backend native|kernel|native-scalar|gold|pjrt;\n\
          \x20                   --tile N, --ilm K and --simd auto|forced|scalar\n\
-         \x20                   configure the kernel backend's lane engine)\n\
-         \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run\n\
+         \x20                   configure the kernel backend's lane engine;\n\
+         \x20                   --spare-divisor N tunes the idle-burst budget shrink)\n\
+         \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run;\n\
+         \x20                  --gate --window K --tolerance PCT exits non-zero when a\n\
+         \x20                  throughput metric drops > PCT percent below the rolling median\n\
          \x20 selftest         quick health check across all layers\n",
         tsdiv::VERSION,
         tsdiv::PAPER
@@ -285,7 +288,16 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         )
         .opt("seconds", "2", "duration")
         .opt("workers", "2", "worker threads")
-        .opt("max-batch", "4096", "coalescing budget");
+        .opt(
+            "max-batch",
+            "4096",
+            "coalescing budget in f32-equivalent lanes (cost-weighted per format)",
+        )
+        .opt(
+            "spare-divisor",
+            "4",
+            "budget divisor while all workers are idle (1 disables the shrink)",
+        );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
         Err(help) => {
@@ -367,16 +379,28 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         eprintln!("the pjrt backend serves f32 at nearest-even only");
         return 2;
     }
-    let svc = DivisionService::start(
-        ServiceConfig {
-            workers: parsed.parse_or("workers", 2),
-            max_batch: parsed.parse_or("max-batch", 4096),
-            max_wait: Duration::from_micros(200),
-            queue_capacity: 1 << 14,
-        },
-        backend,
-    )
-    .expect("service");
+    let spare_divisor: usize = match parsed.parse_required("spare-divisor") {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = ServiceConfig {
+        workers: parsed.parse_or("workers", 2),
+        max_batch: parsed.parse_or("max-batch", 4096),
+        max_wait: Duration::from_micros(200),
+        queue_capacity: 1 << 14,
+        spare_divisor,
+    };
+    // validate() runs inside start() too; calling it here turns a bad
+    // knob (e.g. --spare-divisor 0) into exit code 2 with the message,
+    // not a panic through expect().
+    if let Err(e) = cfg.validate() {
+        eprintln!("{e}");
+        return 2;
+    }
+    let svc = DivisionService::start(cfg, backend).expect("service");
     let seconds: u64 = parsed.parse_or("seconds", 2);
     let deadline = std::time::Instant::now() + Duration::from_secs(seconds);
     let mut lanes = 0u64;
@@ -414,6 +438,17 @@ fn cmd_bench_trend(args: Vec<String>) -> i32 {
         "history",
         "",
         "history file (default: the tracked BENCH_HISTORY.jsonl)",
+    )
+    .flag(
+        "gate",
+        "regression gate: exit non-zero when a throughput metric drops \
+         more than --tolerance percent below the rolling median",
+    )
+    .opt("window", "5", "gate: rolling-median window in runs")
+    .opt(
+        "tolerance",
+        "15",
+        "gate: allowed drop below the rolling median, in percent",
     );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -434,6 +469,31 @@ fn cmd_bench_trend(args: Vec<String>) -> i32 {
             return 1;
         }
     };
+    if parsed.flag("gate") {
+        let window: usize = match parsed.parse_required("window") {
+            Ok(k) if k >= 1 => k,
+            Ok(_) => {
+                eprintln!("option --window: must be ≥ 1 run");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let tolerance: f64 = match parsed.parse_required("tolerance") {
+            Ok(t) if t >= 0.0 => t,
+            Ok(_) => {
+                eprintln!("option --tolerance: must be ≥ 0 percent");
+                return 2;
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        return run_bench_gate(&path, &records, window, tolerance);
+    }
     if records.is_empty() {
         println!(
             "no records in {path} — run a serving bench first \
@@ -502,6 +562,98 @@ fn cmd_bench_trend(args: Vec<String>) -> i32 {
     t.print();
     println!("(each bench run appends one record; deltas compare the last two per bench)");
     0
+}
+
+/// The `bench-trend --gate` body: judge each bench's latest run against
+/// the rolling median (+ MAD context) of the previous `window` runs and
+/// turn the verdict into an exit code. A history shorter than the window
+/// prints `n/a` rows and exits 0 — the gate warms up gracefully while
+/// the trajectory accumulates.
+fn run_bench_gate(
+    path: &str,
+    records: &[tsdiv::util::json::Json],
+    window: usize,
+    tolerance: f64,
+) -> i32 {
+    let report = tsdiv::harness::gate_bench_history(records, window, tolerance);
+    let mut t = Table::new(
+        &format!(
+            "bench regression gate — window {window}, tolerance {tolerance}% \
+             ({} record(s) in {path})",
+            records.len()
+        ),
+        &["bench", "metric", "median(k)", "MAD", "latest", "Δ%", "verdict"],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Left,
+    ]);
+    for m in &report.metrics {
+        let (med, mad_s, delta, verdict) = if m.warming_up() {
+            (
+                "n/a".to_string(),
+                "n/a".to_string(),
+                "n/a".to_string(),
+                format!("n/a (warming up, {}/{window} runs)", m.n),
+            )
+        } else {
+            (
+                sig(m.baseline_median, 4),
+                sig(m.baseline_mad, 3),
+                if m.delta_pct.is_finite() {
+                    format!("{:+.1}", m.delta_pct)
+                } else {
+                    "n/a".to_string()
+                },
+                if m.regressed {
+                    "REGRESSED".to_string()
+                } else {
+                    "ok".to_string()
+                },
+            )
+        };
+        t.row(&[
+            m.bench.clone(),
+            m.metric.clone(),
+            med,
+            mad_s,
+            sig(m.latest, 4),
+            delta,
+            verdict,
+        ]);
+    }
+    t.print();
+    if report.metrics.is_empty() {
+        // The empty-trajectory warm-up case the gate must survive.
+        println!("n/a — no throughput metrics recorded yet; gate passes while history warms up");
+        return 0;
+    }
+    let regressions = report.regressions();
+    if regressions.is_empty() {
+        println!(
+            "gate PASSED: {} metric(s) judged, {} warming up",
+            report.judged(),
+            report.metrics.len() - report.judged()
+        );
+        0
+    } else {
+        for r in &regressions {
+            eprintln!(
+                "gate FAILED: {}/{} at {} vs rolling median {} ({:+.1}% < -{tolerance}%)",
+                r.bench,
+                r.metric,
+                sig(r.latest, 4),
+                sig(r.baseline_median, 4),
+                r.delta_pct
+            );
+        }
+        1
+    }
 }
 
 fn cmd_selftest() -> i32 {

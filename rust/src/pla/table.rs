@@ -130,6 +130,10 @@ impl SegmentTable {
     /// plus saturating subtract of [`Self::seed`] run as one engine op
     /// each — bit-identical to the scalar seed, lane by lane.
     pub fn seed_batch(&self, eng: Engine, xs: &[u64], y0_out: &mut [u64]) {
+        // Allocation-free (the edge staging happens inside each
+        // `segment_counts` call); callers with a reusable
+        // [`crate::simd::BiasedEdges`] use [`Self::seed_batch_with`]
+        // to hoist that staging out of the per-tile loop.
         debug_assert_eq!(xs.len(), y0_out.len());
         const W: usize = 32;
         let mut idx = [0u64; W];
@@ -141,6 +145,46 @@ impl SegmentTable {
             let n = (xs.len() - done).min(W);
             let xc = &xs[done..done + n];
             eng.segment_counts(xc, &self.edges, &mut idx[..n]);
+            for ((&s, sl), ic) in idx[..n].iter().zip(&mut slope[..n]).zip(&mut icpt[..n]) {
+                *sl = self.slopes[s as usize];
+                *ic = self.intercepts[s as usize];
+            }
+            // y0 = c ⊖ ((s·x) >> F): the same truncating multiply and
+            // saturating subtract as the scalar seed().
+            eng.mul_shr(&slope[..n], xc, self.frac_bits, &mut prod[..n]);
+            eng.sub_sat(&icpt[..n], &prod[..n], &mut y0_out[done..done + n]);
+            done += n;
+        }
+    }
+
+    /// [`Self::seed_batch`] with the compare-tree edge staging hoisted
+    /// into a caller-owned [`crate::simd::BiasedEdges`] cache (built
+    /// from **this** table's edges): the kernel builds the cache once
+    /// per `divide_batch` call and reuses it across every seed tile,
+    /// instead of re-staging the edges inside each `segment_counts`
+    /// call. Bit-identical to the uncached path on every engine.
+    pub fn seed_batch_with(
+        &self,
+        eng: Engine,
+        edge_cache: &crate::simd::BiasedEdges,
+        xs: &[u64],
+        y0_out: &mut [u64],
+    ) {
+        debug_assert_eq!(xs.len(), y0_out.len());
+        debug_assert!(
+            edge_cache.matches(&self.edges),
+            "edge cache built from a different segment table"
+        );
+        const W: usize = 32;
+        let mut idx = [0u64; W];
+        let mut slope = [0u64; W];
+        let mut icpt = [0u64; W];
+        let mut prod = [0u64; W];
+        let mut done = 0;
+        while done < xs.len() {
+            let n = (xs.len() - done).min(W);
+            let xc = &xs[done..done + n];
+            eng.segment_counts_cached(xc, edge_cache, &mut idx[..n]);
             for ((&s, sl), ic) in idx[..n].iter().zip(&mut slope[..n]).zip(&mut icpt[..n]) {
                 *sl = self.slopes[s as usize];
                 *ic = self.intercepts[s as usize];
@@ -296,6 +340,39 @@ mod tests {
             t.seed_batch(eng, &xs, &mut ys);
             for (i, &x) in xs.iter().enumerate() {
                 assert_eq!(ys[i], t.seed(x).0, "{} lane {i}", eng.name());
+            }
+        }
+    }
+
+    #[test]
+    fn seed_batch_with_shared_cache_matches_uncached_every_engine() {
+        // One cache, many seed calls (the per-divide_batch shape): the
+        // cached path must equal both the uncached batch path and the
+        // scalar seed(), bit for bit, on every engine.
+        let t = table();
+        let mut cache = crate::simd::BiasedEdges::new();
+        cache.rebuild(&t.edges);
+        let xs: Vec<u64> = (0..143)
+            .map(|i| fx(1.0) + i * ((fx(2.0) - fx(1.0)) / 143) + 17)
+            .map(|x| x.min(fx(2.0) - 1))
+            .collect();
+        for eng in crate::simd::engines_available() {
+            let mut plain = vec![0u64; xs.len()];
+            t.seed_batch(eng, &xs, &mut plain);
+            let mut cached = vec![0u64; xs.len()];
+            // Several tile-sized calls sharing the one cache.
+            for chunk in [8usize, 3, 64] {
+                let mut done = 0;
+                while done < xs.len() {
+                    let n = (xs.len() - done).min(chunk);
+                    let dst = &mut cached[done..done + n];
+                    t.seed_batch_with(eng, &cache, &xs[done..done + n], dst);
+                    done += n;
+                }
+                assert_eq!(cached, plain, "{} chunk={chunk}", eng.name());
+            }
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(cached[i], t.seed(x).0, "{} lane {i}", eng.name());
             }
         }
     }

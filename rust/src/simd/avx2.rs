@@ -175,6 +175,59 @@ pub unsafe fn fill_add(base: u64, x: &[u64], out: &mut [u64]) {
     super::scalar::fill_add(base, &x[i..], &mut out[i..]);
 }
 
+/// The compare loop shared by [`segment_counts`] (edges staged on the
+/// stack per call) and [`segment_counts_prebiased`] (edges staged once
+/// in a [`super::BiasedEdges`] cache): count how many biased edges each
+/// lane is at-or-above, clamped to the last segment.
+///
+/// # Safety
+/// Requires AVX2 (callers are themselves `#[target_feature(avx2)]`).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn count_segments_biased(x: &[u64], edges: &[u64], biased: &[u64], idx: &mut [u64]) {
+    debug_assert_eq!(x.len(), idx.len());
+    debug_assert_eq!(edges.len(), biased.len());
+    debug_assert!(!edges.is_empty());
+    let n = x.len();
+    let sign = _mm256_set1_epi64x(i64::MIN);
+    let ones = _mm256_set1_epi64x(-1);
+    let last = _mm256_set1_epi64x((edges.len() - 1) as i64);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+        let xb = _mm256_xor_si256(xv, sign);
+        let mut cnt = _mm256_setzero_si256();
+        for &eb in biased {
+            // One broadcast from the cached biased word per edge —
+            // x ≥ e ⇔ !(e > x); the ≥ mask is −1 per true lane, so
+            // subtracting it increments the count.
+            let ebv = _mm256_set1_epi64x(eb as i64);
+            let ge = _mm256_andnot_si256(_mm256_cmpgt_epi64(ebv, xb), ones);
+            cnt = _mm256_sub_epi64(cnt, ge);
+        }
+        // Lanes at/above the last edge clamp to the last segment. The
+        // counts are tiny positive integers, so the signed compare is
+        // exact here.
+        let over = _mm256_cmpgt_epi64(cnt, last);
+        let r = _mm256_blendv_epi8(cnt, last, over);
+        _mm256_storeu_si256(idx.as_mut_ptr().add(i) as *mut __m256i, r);
+        i += 4;
+    }
+    super::scalar::segment_counts(&x[i..], edges, &mut idx[i..]);
+}
+
+/// [`segment_counts`] with the sign-bias of every edge precomputed
+/// (`biased[k] = edges[k] ^ 2^63`, staged by [`super::BiasedEdges`]) —
+/// the per-call edge setup drops out entirely, and there is no table
+/// size limit because nothing is staged on the stack.
+///
+/// # Safety
+/// Requires AVX2 (guaranteed by `Engine::Avx2` construction).
+#[target_feature(enable = "avx2")]
+pub unsafe fn segment_counts_prebiased(x: &[u64], edges: &[u64], biased: &[u64], idx: &mut [u64]) {
+    count_segments_biased(x, edges, biased, idx);
+}
+
 /// Biased-edge staging capacity: any realistic PLA table has ≤ 64
 /// segments (Table I has 8; even the n=2 derivation stays far below);
 /// larger tables fall back to the scalar path rather than grow stacks.
@@ -189,35 +242,11 @@ pub unsafe fn segment_counts(x: &[u64], edges: &[u64], idx: &mut [u64]) {
     if edges.len() > MAX_EDGES {
         return super::scalar::segment_counts(x, edges, idx);
     }
-    let n = x.len();
-    let sign = _mm256_set1_epi64x(i64::MIN);
-    let ones = _mm256_set1_epi64x(-1);
-    let last = _mm256_set1_epi64x((edges.len() - 1) as i64);
-    // Hoist the loop-invariant broadcast+bias of every edge out of the
-    // per-chunk loop (the seed stage runs this per miss tile).
-    let mut biased = [_mm256_setzero_si256(); MAX_EDGES];
+    // Stage the biased edges on the stack — the per-call setup the
+    // cached path (`segment_counts_prebiased`) exists to amortize.
+    let mut biased = [0u64; MAX_EDGES];
     for (b, &e) in biased.iter_mut().zip(edges) {
-        *b = _mm256_xor_si256(_mm256_set1_epi64x(e as i64), sign);
+        *b = e ^ (1u64 << 63);
     }
-    let biased = &biased[..edges.len()];
-    let mut i = 0;
-    while i + 4 <= n {
-        let xv = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
-        let xb = _mm256_xor_si256(xv, sign);
-        let mut cnt = _mm256_setzero_si256();
-        for &eb in biased {
-            // x ≥ e ⇔ !(e > x); the ≥ mask is −1 per true lane, so
-            // subtracting it increments the count.
-            let ge = _mm256_andnot_si256(_mm256_cmpgt_epi64(eb, xb), ones);
-            cnt = _mm256_sub_epi64(cnt, ge);
-        }
-        // Lanes at/above the last edge clamp to the last segment. The
-        // counts are tiny positive integers, so the signed compare is
-        // exact here.
-        let over = _mm256_cmpgt_epi64(cnt, last);
-        let r = _mm256_blendv_epi8(cnt, last, over);
-        _mm256_storeu_si256(idx.as_mut_ptr().add(i) as *mut __m256i, r);
-        i += 4;
-    }
-    super::scalar::segment_counts(&x[i..], edges, &mut idx[i..]);
+    count_segments_biased(x, edges, &biased[..edges.len()], idx);
 }

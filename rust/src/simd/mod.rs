@@ -158,6 +158,62 @@ pub fn engines_available() -> Vec<Engine> {
     v
 }
 
+/// A PLA edge table staged for the compare pass, built **once** and
+/// reused across every `segment_counts_cached` call that shares it.
+///
+/// The AVX2 compare trick biases unsigned operands by 2^63 so the
+/// signed `_mm256_cmpgt_epi64` orders them correctly; without a cache
+/// that bias (and the edge broadcast staging around it) re-runs on
+/// every `segment_counts` call — once per 32-lane seed chunk, which for
+/// the default 8-lane kernel tile rivals the compare work itself
+/// (ROADMAP item e). The kernel builds one `BiasedEdges` per
+/// `divide_batch` call in its [`crate::kernel::KernelScratch`] and
+/// threads it through the seed stage instead.
+///
+/// Caching is a pure re-encoding of the edge list: both engines produce
+/// results bit-identical to the uncached [`Engine::segment_counts`].
+#[derive(Clone, Debug, Default)]
+pub struct BiasedEdges {
+    /// The raw sorted edges (scalar engine + vector-tail path).
+    edges: Vec<u64>,
+    /// The same edges biased by 2^63 (`e ^ SIGN`), ready for the AVX2
+    /// signed-compare trick.
+    biased: Vec<u64>,
+}
+
+impl BiasedEdges {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (Re)stage `edges`; reuses the allocations across calls.
+    pub fn rebuild(&mut self, edges: &[u64]) {
+        self.edges.clear();
+        self.edges.extend_from_slice(edges);
+        self.biased.clear();
+        self.biased
+            .extend(edges.iter().map(|&e| e ^ (1u64 << 63)));
+    }
+
+    /// True when this cache was built from exactly `edges` (cheap: the
+    /// PLA tables hold ≤ a handful of segments).
+    pub fn matches(&self, edges: &[u64]) -> bool {
+        self.edges == edges
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    pub fn edges(&self) -> &[u64] {
+        &self.edges
+    }
+
+    pub fn biased(&self) -> &[u64] {
+        &self.biased
+    }
+}
+
 /// Proof that AVX2 was detected on this host at runtime. The field is
 /// private, so the only mints are [`SimdChoice::resolve`] and
 /// [`engines_available`] — both strictly after
@@ -282,6 +338,24 @@ impl Engine {
             Engine::Scalar => scalar::segment_counts(x, edges, idx),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::segment_counts(x, edges, idx) },
+        }
+    }
+
+    /// [`Engine::segment_counts`] with the per-call edge staging hoisted
+    /// into a reusable [`BiasedEdges`] cache: identical results, but the
+    /// bias/broadcast setup of the AVX2 path runs once per cache build
+    /// instead of once per call. The hot seed path
+    /// ([`crate::pla::SegmentTable::seed_batch_with`]) uses this;
+    /// `edges` must be non-empty.
+    #[inline]
+    pub fn segment_counts_cached(self, x: &[u64], edges: &BiasedEdges, idx: &mut [u64]) {
+        debug_assert!(!edges.is_empty());
+        match self {
+            Engine::Scalar => scalar::segment_counts(x, edges.edges(), idx),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => unsafe {
+                avx2::segment_counts_prebiased(x, edges.edges(), edges.biased(), idx)
+            },
         }
     }
 
@@ -453,6 +527,55 @@ mod tests {
             eng.segment_counts(&xs, &[1u64 << 61], &mut idx);
             assert!(idx.iter().all(|&i| i == 0), "{}", eng.name());
         }
+    }
+
+    #[test]
+    fn cached_segment_counts_bit_identical_to_uncached() {
+        // The cache is a pure re-encoding of the edge list: across both
+        // engines, many chunked calls sharing one cache, and tails
+        // shorter than a vector, cached == uncached == linear select.
+        let edges: Vec<u64> = vec![10, 1 << 20, 1 << 40, (1 << 60) + 3, u64::MAX - 1];
+        let mut cache = BiasedEdges::new();
+        assert!(cache.is_empty());
+        cache.rebuild(&edges);
+        assert!(!cache.is_empty());
+        assert!(cache.matches(&edges));
+        assert!(!cache.matches(&edges[..3]));
+        assert_eq!(cache.edges(), &edges[..]);
+        assert_eq!(cache.biased().len(), edges.len());
+        for (e, b) in edges.iter().zip(cache.biased()) {
+            assert_eq!(*b, *e ^ (1u64 << 63), "bias is 2^63");
+        }
+        let mut xs = gen(77, 12);
+        xs.extend_from_slice(&EDGE);
+        for &e in &edges {
+            xs.extend_from_slice(&[e.wrapping_sub(1), e, e.wrapping_add(1)]);
+        }
+        for eng in engines_available() {
+            let mut plain = vec![0u64; xs.len()];
+            eng.segment_counts(&xs, &edges, &mut plain);
+            // One cache, many calls (the per-divide_batch reuse shape):
+            // chunk sizes deliberately off the 4-lane vector width.
+            let mut cached = vec![0u64; xs.len()];
+            for chunk in [5usize, 32, 3, 100] {
+                let mut done = 0;
+                while done < xs.len() {
+                    let n = (xs.len() - done).min(chunk);
+                    eng.segment_counts_cached(
+                        &xs[done..done + n],
+                        &cache,
+                        &mut cached[done..done + n],
+                    );
+                    done += n;
+                }
+                assert_eq!(cached, plain, "{} chunk={chunk}", eng.name());
+            }
+        }
+        // Rebuilding with a different table replaces, not appends.
+        cache.rebuild(&edges[..2]);
+        assert_eq!(cache.edges().len(), 2);
+        assert_eq!(cache.biased().len(), 2);
+        assert!(cache.matches(&edges[..2]));
     }
 
     #[test]

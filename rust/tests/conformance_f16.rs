@@ -1,0 +1,112 @@
+//! Exhaustive binary16 conformance: every one of the 2^16 divisor bit
+//! patterns, against a fixed dividend set that covers every IEEE class,
+//! through the service's `BackendChoice::Kernel` worker vs the
+//! exactly-rounded `Gold` (longdiv) backend — per rounding mode.
+//!
+//! The contract being locked down is the one the property tests sample:
+//! special lanes (resolved by the shared `prepare()` path) are
+//! **bit-identical** to gold, and finite lanes stay inside the Taylor
+//! unit's documented ≤ 2-ulp band. f16 is the one format small enough
+//! to sweep *completely*, so this test closes the sampling gap for the
+//! format the qr workload ships over the wire.
+//!
+//! The full sweep is ~4.5 M divisions per backend and is `#[ignore]`d
+//! by default; CI runs it as its own step:
+//!
+//! ```bash
+//! cargo test --release --test conformance_f16 -- --ignored
+//! ```
+//!
+//! A subsampled smoke sweep (every 251st pattern) runs with the normal
+//! suite so the harness itself cannot bitrot.
+
+use tsdiv::coordinator::{Backend, BackendChoice};
+use tsdiv::divider::{prepare, Prepared};
+use tsdiv::fp::{ulp_diff, unpack, Class, Rounding, F16};
+use tsdiv::harness::special_patterns;
+use tsdiv::kernel::KernelConfig;
+
+/// The fixed dividend set: the full special menu (NaN, ±Inf, ±0,
+/// smallest/largest subnormal, 1.0, max finite) plus finite probes —
+/// negatives, an exact power of two, a non-trivial significand, the
+/// smallest normal on both signs, and a near-overflow value.
+fn dividends() -> Vec<u64> {
+    let mut d: Vec<u64> = special_patterns(F16).to_vec();
+    d.extend([
+        0xBC00, // -1.0
+        0x4000, // 2.0
+        0x3555, // ~0.3333
+        0x4248, // ~3.14
+        0x0400, // smallest positive normal
+        0x8400, // smallest negative normal
+        0x7BFE, // just below +max finite
+        0xB266, // ~-0.2
+    ]);
+    d
+}
+
+/// One full-divisor-range pass: `dividend / every_divisor` through both
+/// backends, checking the conformance contract lane by lane. `stride`
+/// subsamples the divisor space (1 = exhaustive). Returns the largest
+/// finite deviation seen (in ulp).
+fn sweep(stride: u64) -> u64 {
+    let mut kern = BackendChoice::Kernel {
+        order: 5,
+        kernel: KernelConfig::default(),
+    }
+    .build()
+    .expect("kernel backend");
+    let mut gold = BackendChoice::Gold.build().expect("gold backend");
+    let divisors: Vec<u64> = (0u64..=0xFFFF).step_by(stride as usize).collect();
+    let mut max_ulp = 0u64;
+    for rm in Rounding::ALL {
+        for &a in &dividends() {
+            let av = vec![a; divisors.len()];
+            let qk = kern.divide(&av, &divisors, F16, rm).expect("kernel divide");
+            let qg = gold.divide(&av, &divisors, F16, rm).expect("gold divide");
+            for (i, (&k, &g)) in qk.iter().zip(qg.iter()).enumerate() {
+                let b = divisors[i];
+                let special = matches!(prepare(a, b, F16), Prepared::Done(_));
+                match ulp_diff(k, g, F16) {
+                    Some(u) if special => assert_eq!(
+                        k, g,
+                        "special lane {a:#06x}/{b:#06x} ({rm:?}) not bit-identical: \
+                         kernel {k:#06x} vs gold {g:#06x} ({u} ulp)"
+                    ),
+                    Some(u) => {
+                        assert!(
+                            u <= 2,
+                            "finite lane {a:#06x}/{b:#06x} ({rm:?}) outside the ≤2-ulp \
+                             band: kernel {k:#06x} vs gold {g:#06x} ({u} ulp)"
+                        );
+                        max_ulp = max_ulp.max(u);
+                    }
+                    None => assert!(
+                        unpack(k, F16).class == Class::NaN && unpack(g, F16).class == Class::NaN,
+                        "NaN mismatch at {a:#06x}/{b:#06x} ({rm:?}): \
+                         kernel {k:#06x} vs gold {g:#06x}"
+                    ),
+                }
+            }
+        }
+    }
+    max_ulp
+}
+
+/// The exhaustive pass: all 65 536 divisor patterns × every rounding
+/// mode × the fixed dividend set. CI runs this with `-- --ignored`.
+#[test]
+#[ignore = "exhaustive 2^16 divisor sweep (~4.5M divisions/backend); run: cargo test --release --test conformance_f16 -- --ignored"]
+fn conformance_f16_every_divisor_pattern_vs_gold() {
+    let max_ulp = sweep(1);
+    println!("f16 conformance: all 2^16 divisors × 4 modes swept; max finite deviation {max_ulp} ulp");
+}
+
+/// Subsampled smoke pass (every 251st divisor pattern — prime, so the
+/// sample walks the exponent/significand grid) that keeps this harness
+/// compiling and honest inside the regular suite.
+#[test]
+fn conformance_f16_subsampled_smoke() {
+    let max_ulp = sweep(251);
+    assert!(max_ulp <= 2);
+}

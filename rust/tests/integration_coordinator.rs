@@ -19,6 +19,7 @@ fn cfg(workers: usize, max_batch: usize) -> ServiceConfig {
         max_batch,
         max_wait: Duration::from_millis(2),
         queue_capacity: 1024,
+        ..ServiceConfig::default()
     }
 }
 
@@ -68,6 +69,13 @@ fn native_service_under_concurrent_load() {
     assert!(m.failures == 0);
     assert!(m.latency_count == 8 * 50);
     assert!(m.mean_batch_lanes() > 1.0, "no coalescing happened");
+    // Pure-f32 traffic: the dispatched cost gauge is exactly the lane
+    // count at the reference weight.
+    assert_eq!(
+        m.cost_units,
+        m.lanes * tsdiv::coordinator::REF_LANE_COST as u64,
+        "f32 cost accounting"
+    );
 }
 
 /// Every format rides the same service and the same `div_bits_batch`

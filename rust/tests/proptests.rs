@@ -453,6 +453,117 @@ fn prop_kernel_backend_vs_gold_all_formats_and_roundings() {
     });
 }
 
+/// Cost-weighted batch assembly (the adaptive batcher's tentpole
+/// invariants), over random mixed-format push streams:
+///
+/// 1. **No starvation / conservation** — every pushed request appears in
+///    exactly one emitted batch once the assembler drains, with per-key
+///    arrival order preserved;
+/// 2. **Budget bound** — an emitted batch never exceeds the cost budget
+///    by more than its own final request's cost (so one stray oversize
+///    request can stretch a batch, but accumulated traffic cannot);
+/// 3. **Cost totals** — every batch's `cost` equals the sum of its
+///    lanes weighted by its key's `lane_cost`, and the assembler's
+///    pending gauges track exactly what was pushed minus what flushed.
+#[test]
+fn prop_cost_weighted_assembly_never_starves_and_bounds_cost() {
+    use std::collections::HashMap;
+    use tsdiv::coordinator::{Batch, BatchAssembler, BatchItem, BatchKey};
+    use tsdiv::fp::ALL_FORMATS;
+    forall(Config::named("cost-weighted batch assembly").cases(60), |d| {
+        let max_lanes = d.range_u64(1, 48) as usize;
+        let mut asm = BatchAssembler::new(max_lanes);
+        let budget = asm.cost_budget();
+        check_that!(budget == max_lanes * tsdiv::coordinator::REF_LANE_COST);
+        let npush = d.range_u64(1, 120) as usize;
+        let mut pushed: HashMap<u64, (BatchKey, usize)> = HashMap::new();
+        let mut pushed_cost = 0usize;
+        let mut pushed_lanes = 0usize;
+        let mut flushed: Vec<Batch> = Vec::new();
+        let mut flushed_cost = 0usize;
+        let mut flushed_lanes = 0usize;
+        for id in 0..npush as u64 {
+            let key = BatchKey::new(ALL_FORMATS[d.choose_idx(4)], Rounding::ALL[d.choose_idx(4)]);
+            let lanes = d.range_u64(1, 40) as usize;
+            pushed.insert(id, (key, lanes));
+            pushed_cost += lanes * key.lane_cost();
+            pushed_lanes += lanes;
+            let item = BatchItem {
+                request_id: id,
+                a: vec![id; lanes],
+                b: vec![1; lanes],
+            };
+            if let Some(b) = asm.push(key, item) {
+                check_that!(b.key == key, "a push can only flush its own key's bucket");
+                // Invariant 2: over-budget only by the final request.
+                let last_cost =
+                    b.items.last().map_or(0, |it| it.a.len() * b.key.lane_cost());
+                check_that!(
+                    b.cost <= budget || b.cost - last_cost < budget,
+                    "batch cost {} exceeds budget {budget} by more than its last \
+                     request ({last_cost})",
+                    b.cost
+                );
+                flushed_cost += b.cost;
+                flushed_lanes += b.lanes;
+                flushed.push(b);
+            }
+            // Invariant 3: the pending gauges track push − flush exactly.
+            check_that!(asm.pending_cost() == pushed_cost - flushed_cost);
+            check_that!(asm.pending_lanes() == pushed_lanes - flushed_lanes);
+        }
+        for b in asm.take_all() {
+            // Drained remainders were never pushed over the budget.
+            check_that!(b.cost <= budget, "undrained bucket over budget");
+            flushed.push(b);
+        }
+        check_that!(asm.pending_cost() == 0 && asm.pending_lanes() == 0);
+        // Invariants 1 + 3 over the full stream.
+        let mut seen: HashMap<u64, usize> = HashMap::new();
+        let mut last_id_per_key: HashMap<String, u64> = HashMap::new();
+        for b in &flushed {
+            let mut lanes = 0usize;
+            for it in &b.items {
+                *seen.entry(it.request_id).or_insert(0) += 1;
+                let (key, n) = pushed[&it.request_id];
+                check_that!(key == b.key, "request routed into a foreign key's batch");
+                check_that!(it.a.len() == n, "request lanes mutated in flight");
+                lanes += n;
+                // Per-key arrival order: ids grow monotonically across
+                // this key's successive batches (flushed Vec preserves
+                // emission order; within a batch, item order).
+                let e = last_id_per_key.entry(b.key.to_string()).or_insert(0);
+                check_that!(
+                    *e <= it.request_id || *e == 0,
+                    "key {} reordered: {} after {}",
+                    b.key,
+                    it.request_id,
+                    e
+                );
+                *e = it.request_id;
+            }
+            check_that!(b.lanes == lanes, "batch lane count mismatch");
+            check_that!(
+                b.cost == lanes * b.key.lane_cost(),
+                "batch cost {} != lanes {lanes} × lane_cost {}",
+                b.cost,
+                b.key.lane_cost()
+            );
+        }
+        check_that!(seen.len() == npush, "a request starved (never emitted)");
+        check_that!(
+            seen.values().all(|&c| c == 1),
+            "a request was emitted more than once"
+        );
+        // Invariant 3 (mixed-format totals): the cost that flowed
+        // through equals the per-format lane_cost-weighted sum of the
+        // original stream.
+        let total: usize = flushed.iter().map(|b| b.cost).sum();
+        check_that!(total == pushed_cost, "cost total {total} != pushed {pushed_cost}");
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_service_roundtrip_preserves_lane_order() {
     use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
@@ -462,6 +573,7 @@ fn prop_service_roundtrip_preserves_lane_order() {
             max_batch: 97, // deliberately odd to force splits
             max_wait: std::time::Duration::from_micros(200),
             queue_capacity: 256,
+            ..ServiceConfig::default()
         },
         BackendChoice::Native {
             order: 5,
@@ -508,6 +620,7 @@ fn prop_mixed_format_stream_bit_identical_to_longdiv_gold() {
             max_batch: 61, // odd budget → batches split mid-stream
             max_wait: std::time::Duration::from_micros(200),
             queue_capacity: 512,
+            ..ServiceConfig::default()
         },
         BackendChoice::Gold,
     )
