@@ -47,7 +47,8 @@ fn main() {
         .opt("request-lanes", "64", "divisions per request")
         .opt("max-batch", "4096", "coalescing budget (f32-equivalent lanes; cost-weighted per format)")
         .opt("spare-divisor", "4", "budget divisor under spare capacity (1 disables)")
-        .opt("workers", "2", "worker threads");
+        .opt("workers", "2", "worker threads")
+        .opt("shards", "", "submission shards (empty = one per worker)");
     let args = match cmd.parse(std::env::args().skip(1)) {
         Ok(a) => a,
         Err(help) => {
@@ -86,10 +87,18 @@ fn main() {
         std::process::exit(1);
     }
 
+    let shards: Option<usize> = match args.get("shards") {
+        Some("") | None => None,
+        Some(s) => Some(s.parse().unwrap_or_else(|_| {
+            eprintln!("option --shards: cannot parse '{s}'");
+            std::process::exit(1);
+        })),
+    };
     let svc = Arc::new(
         DivisionService::start(
             ServiceConfig {
                 workers: args.parse_or("workers", 2),
+                shards,
                 max_batch: args.parse_or("max-batch", 4096),
                 max_wait: Duration::from_micros(200),
                 queue_capacity: 1 << 14,
@@ -166,6 +175,12 @@ fn main() {
     t.row(&["mean cost/batch".into(), sig(m.mean_batch_cost(), 4)]);
     t.row(&["service latency p50".into(), format!("{:.3} ms", m.latency_p50 * 1e3)]);
     t.row(&["service latency p99".into(), format!("{:.3} ms", m.latency_p99 * 1e3)]);
+    t.row(&["batch latency p50".into(), format!("{:.3} ms", m.batch_latency_p50 * 1e3)]);
+    t.row(&["batch latency p99".into(), format!("{:.3} ms", m.batch_latency_p99 * 1e3)]);
+    t.row(&["shards".into(), m.shards.to_string()]);
+    t.row(&["worker parks / noops".into(), format!("{} / {}", m.parks, m.noops)]);
+    t.row(&["batches stolen (raids)".into(), format!("{} ({})", m.steals, m.steal_operations)]);
+    t.row(&["worker busy time".into(), format!("{:.3} s", m.busy_seconds)]);
     t.row(&["backpressure rejections".into(), busy.to_string()]);
     t.row(&["worker failures".into(), m.failures.to_string()]);
     t.print();

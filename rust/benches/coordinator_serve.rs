@@ -297,6 +297,33 @@ fn main() {
     }
     t.print();
 
+    // Worker-scaling sweep on mixed-format traffic (the ROADMAP's
+    // near-linear-scaling exit criterion): default sharding (one shard
+    // per worker), stealing enabled, saturating closed-loop clients.
+    let mut t = Table::new(
+        "worker scaling: sharded runtime on mixed-format traffic (8 clients × 256 lanes)",
+        &["workers", "shards", "div/s", "scale vs w=1", "p50 ms", "p99 ms", "lanes/batch"],
+    )
+    .aligns(&[Align::Right; 7]);
+    let mut scale_rows: Vec<(usize, f64)> = Vec::new();
+    let mut scale_p99_ms = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let (thr, p50, p99, lpb, _) = run_load_formats(native, workers, 4096, 8, 256, &MIXED, dur);
+        let base = scale_rows.first().map_or(thr, |&(_, t1)| t1);
+        scale_rows.push((workers, thr));
+        scale_p99_ms = p99; // keep the most-parallel run's tail
+        t.row(&[
+            workers.to_string(),
+            workers.to_string(),
+            sig(thr, 4),
+            format!("{:.2}x", thr / base),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+            format!("{lpb:.1}"),
+        ]);
+    }
+    t.print();
+
     // Record the comparison for the bench trajectory.
     let mut j = Json::obj();
     j.set("bench", "coordinator_serve".into());
@@ -318,6 +345,13 @@ fn main() {
     // Cost units per emitted batch under the mixed load — how close the
     // cost-weighted assembler runs to its budget across the format mix.
     j.set("mixed_format_cost_per_batch", mixed_cost_per_batch.into());
+    // Scaling rows: per-worker-count throughput (higher-is-better gate
+    // keys) plus the most-parallel run's p99 tail in microseconds,
+    // which the direction-aware gate judges lower-is-better.
+    for &(workers, thr) in &scale_rows {
+        j.set(&format!("serve_scale_w{workers}_div_per_s"), thr.into());
+    }
+    j.set("serve_p99_latency_us", (scale_p99_ms * 1e3).into());
     tsdiv::harness::write_bench_json("coordinator_serve", &j);
 
     // Coordinator overhead: service vs bare loop over IDENTICAL

@@ -11,6 +11,13 @@
 //! ships with fewer lanes than a half-format bucket of equal backend
 //! work — the budget bounds *work per batch*, not lane count. Lane
 //! order within a request is always preserved.
+//!
+//! Under the sharded runtime each shard owns a private `BatchAssembler`
+//! (no locking here — this module stays single-threaded by
+//! construction). Submissions are routed key-affinely, so one key's
+//! whole coalescing window — its bucket, its cost meter, its
+//! `take_expired` clock — lives on exactly one shard; nothing in this
+//! module needs to know how many shards exist.
 
 use std::time::{Duration, Instant};
 

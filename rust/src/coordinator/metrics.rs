@@ -1,0 +1,520 @@
+//! Service metrics: batched worker counters and lock-free histograms.
+//!
+//! The sharded runtime replaces the old lock-and-increment `Metrics`
+//! struct with a two-tier scheme (tokio's `MetricsBatch` idiom, adapted
+//! to this crate's thread pool):
+//!
+//! * **Hot-path counters stay thread-local.** Each worker accumulates
+//!   its `park/noop/steal/steal_operations/poll` counts, busy duration
+//!   and a batch-latency histogram in a plain [`MetricsBatch`] (no
+//!   atomics at all), and flushes them with `Relaxed` **stores** into
+//!   its shared [`WorkerMetrics`] slot exactly once per park — a parked
+//!   worker has nothing better to do, and a busy worker never pays for
+//!   metric visibility.
+//! * **Submit-path and dispatch counters stay direct.** Request,
+//!   rejection, failure and queue-depth accounting in
+//!   [`ServiceCounters`] must be visible immediately (tests and the
+//!   adaptive flush policy read them mid-flight), so they remain plain
+//!   relaxed atomics touched at most once per request or batch —
+//!   already far off the per-lane hot path.
+//!
+//! Latency distributions use [`AtomicHistogram`]: 64 log₂-spaced
+//! nanosecond buckets recorded with relaxed `fetch_add`, read back as
+//! p50/p99 via geometric bucket midpoints. Quantiles are resolved to
+//! within a factor of √2, which is plenty for a serving dashboard and
+//! costs no locks, no samples, and a fixed 1 KiB per histogram.
+//! [`MetricsSnapshot`] aggregates all three sources so existing callers
+//! keep a single point-in-time view.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Log₂-spaced nanosecond buckets: bucket `i` holds durations in
+/// `[2^i, 2^{i+1})` ns, so 64 buckets span every representable `u64`
+/// duration (~584 years) — no clamping case to reason about.
+const HIST_BUCKETS: usize = 64;
+
+/// A lock-free duration histogram: 64 log₂ nanosecond buckets plus an
+/// exact count and sum, all relaxed atomics. Writers call
+/// [`AtomicHistogram::record`]; readers derive mean (exact) and
+/// quantiles (bucket-resolution) from a snapshot of the buckets.
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a duration in nanoseconds (zero maps with one).
+fn bucket_of(ns: u64) -> usize {
+    (63 - ns.max(1).leading_zeros()) as usize
+}
+
+/// Geometric midpoint of bucket `i` in nanoseconds: `2^i · √2`, the
+/// unbiased representative of a log-spaced bin.
+fn bucket_mid_ns(i: usize) -> f64 {
+    (1u64 << i) as f64 * std::f64::consts::SQRT_2
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one duration (relaxed; safe from any thread).
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean in seconds (0.0 while empty).
+    pub fn mean_seconds(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 * 1e-9
+    }
+
+    /// Quantile `q ∈ (0, 1]` in seconds, resolved to the geometric
+    /// midpoint of the owning bucket (0.0 while empty). Monotone in `q`
+    /// by construction, so `p99 ≥ p50` always holds.
+    pub fn percentile_seconds(&self, q: f64) -> f64 {
+        let snap: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = snap.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &n) in snap.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return bucket_mid_ns(i) * 1e-9;
+            }
+        }
+        bucket_mid_ns(HIST_BUCKETS - 1) * 1e-9
+    }
+}
+
+/// Worker-local histogram deltas, merged into a shared
+/// [`AtomicHistogram`] on flush (plain integers until then).
+#[derive(Default)]
+pub struct HistogramBatch {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_ns: u64,
+}
+
+impl HistogramBatch {
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Add the accumulated deltas into `sink` and reset to empty.
+    pub fn flush_into(&mut self, sink: &AtomicHistogram) {
+        if self.count == 0 {
+            return;
+        }
+        for (local, shared) in self.buckets.iter_mut().zip(sink.buckets.iter()) {
+            if *local > 0 {
+                shared.fetch_add(*local, Ordering::Relaxed);
+                *local = 0;
+            }
+        }
+        sink.count.fetch_add(self.count, Ordering::Relaxed);
+        sink.sum_ns.fetch_add(self.sum_ns, Ordering::Relaxed);
+        self.count = 0;
+        self.sum_ns = 0;
+    }
+}
+
+/// One worker's shared metric slot. The owning worker is the only
+/// writer ([`MetricsBatch::submit`] stores absolute totals), so every
+/// field is a relaxed store/load pair — never a read-modify-write.
+#[derive(Default)]
+pub struct WorkerMetrics {
+    park_count: AtomicU64,
+    noop_count: AtomicU64,
+    steal_count: AtomicU64,
+    steal_operations: AtomicU64,
+    poll_count: AtomicU64,
+    busy_duration_ns: AtomicU64,
+}
+
+impl WorkerMetrics {
+    /// Times this worker parked (waited on the ready-queue condvar).
+    pub fn parks(&self) -> u64 {
+        self.park_count.load(Ordering::Relaxed)
+    }
+
+    /// Parks that followed a wakeup which found no work (condvar churn).
+    pub fn noops(&self) -> u64 {
+        self.noop_count.load(Ordering::Relaxed)
+    }
+
+    /// Ready batches taken from other shards' queues (executed or
+    /// migrated home).
+    pub fn steals(&self) -> u64 {
+        self.steal_count.load(Ordering::Relaxed)
+    }
+
+    /// Steal operations (one per raid on a victim shard, however many
+    /// batches it carried off).
+    pub fn steal_operations(&self) -> u64 {
+        self.steal_operations.load(Ordering::Relaxed)
+    }
+
+    /// Batches this worker executed.
+    pub fn polls(&self) -> u64 {
+        self.poll_count.load(Ordering::Relaxed)
+    }
+
+    /// Total time spent unparked (processing or scanning for work).
+    pub fn busy_duration(&self) -> Duration {
+        Duration::from_nanos(self.busy_duration_ns.load(Ordering::Relaxed))
+    }
+}
+
+/// A worker thread's private metric accumulator: plain integers bumped
+/// on the hot path, flushed to the shared [`WorkerMetrics`] slot (and
+/// the shared batch-latency [`AtomicHistogram`]) once per park.
+pub struct MetricsBatch {
+    park_count: u64,
+    noop_count: u64,
+    steal_count: u64,
+    steal_operations: u64,
+    poll_count: u64,
+    /// `poll_count` at the previous park — equal at the next park means
+    /// the wakeup in between did no work (a no-op park).
+    poll_count_on_last_park: u64,
+    busy_duration_ns: u64,
+    /// When the current unparked (busy) period began.
+    processing_started_at: Instant,
+    batch_latency: HistogramBatch,
+}
+
+impl Default for MetricsBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsBatch {
+    pub fn new() -> Self {
+        Self {
+            park_count: 0,
+            noop_count: 0,
+            steal_count: 0,
+            steal_operations: 0,
+            poll_count: 0,
+            poll_count_on_last_park: 0,
+            busy_duration_ns: 0,
+            processing_started_at: Instant::now(),
+            batch_latency: HistogramBatch::default(),
+        }
+    }
+
+    /// One batch executed.
+    pub fn incr_poll(&mut self) {
+        self.poll_count += 1;
+    }
+
+    /// One raid on a victim shard that carried off `batches` ready
+    /// batches (the first executed, the rest migrated home).
+    pub fn incr_steal(&mut self, batches: u64) {
+        self.steal_count += batches;
+        self.steal_operations += 1;
+    }
+
+    /// Record one batch's end-to-end latency (oldest lane entering its
+    /// assembler bucket → responses sent). Buffered locally; reaches
+    /// the shared histogram on the next flush.
+    pub fn record_batch_latency(&mut self, d: Duration) {
+        self.batch_latency.record(d);
+    }
+
+    fn accumulate_busy(&mut self) {
+        let now = Instant::now();
+        self.busy_duration_ns += now
+            .saturating_duration_since(self.processing_started_at)
+            .as_nanos()
+            .min(u64::MAX as u128) as u64;
+        self.processing_started_at = now;
+    }
+
+    /// Called right before blocking on the ready-queue condvar: close
+    /// the busy period, count the park, and classify it as a no-op when
+    /// nothing was polled since the previous park.
+    pub fn about_to_park(&mut self) {
+        self.accumulate_busy();
+        self.park_count += 1;
+        if self.poll_count == self.poll_count_on_last_park {
+            self.noop_count += 1;
+        }
+        self.poll_count_on_last_park = self.poll_count;
+    }
+
+    /// Called right after the condvar wait returns: reopen the busy
+    /// clock (time spent parked is not busy time).
+    pub fn returned_from_park(&mut self) {
+        self.processing_started_at = Instant::now();
+    }
+
+    /// Close the busy period without counting a park (worker exit).
+    pub fn finish(&mut self) {
+        self.accumulate_busy();
+    }
+
+    /// Flush to the shared slots: absolute `Relaxed` stores for the
+    /// counters (this batch is the only writer of `worker`), additive
+    /// merge for the latency histogram.
+    pub fn submit(&mut self, worker: &WorkerMetrics, batch_latency: &AtomicHistogram) {
+        worker.park_count.store(self.park_count, Ordering::Relaxed);
+        worker.noop_count.store(self.noop_count, Ordering::Relaxed);
+        worker.steal_count.store(self.steal_count, Ordering::Relaxed);
+        worker
+            .steal_operations
+            .store(self.steal_operations, Ordering::Relaxed);
+        worker.poll_count.store(self.poll_count, Ordering::Relaxed);
+        worker
+            .busy_duration_ns
+            .store(self.busy_duration_ns, Ordering::Relaxed);
+        self.batch_latency.flush_into(batch_latency);
+    }
+}
+
+/// Submit-path and dispatch counters: direct relaxed atomics, shared by
+/// every shard and worker. These are read mid-flight — by tests, by the
+/// adaptive flush policy (`queue_depth`, `idle_workers`) and by error
+/// paths — so they are deliberately **not** batched.
+#[derive(Default)]
+pub struct ServiceCounters {
+    pub(crate) requests: AtomicU64,
+    pub(crate) lanes: AtomicU64,
+    pub(crate) cost_units: AtomicU64,
+    pub(crate) batches: AtomicU64,
+    pub(crate) failures: AtomicU64,
+    pub(crate) rejected: AtomicU64,
+    pub(crate) queue_depth: AtomicUsize,
+    pub(crate) idle_workers: AtomicUsize,
+}
+
+/// A point-in-time metrics snapshot, aggregated across every shard and
+/// worker. The pre-shard fields keep their names and meanings so
+/// existing callers compile and read unchanged.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub lanes: u64,
+    /// Cost units dispatched to workers (Σ batch `lanes × lane_cost`):
+    /// the format-weighted work gauge behind the cost-metered batcher.
+    pub cost_units: u64,
+    pub batches: u64,
+    pub failures: u64,
+    pub rejected: u64,
+    /// Submissions accepted but not yet drained by a shard batcher
+    /// (summed over shards).
+    pub queue_depth: usize,
+    /// Workers currently parked waiting for a ready batch
+    /// (adaptive-flush signal).
+    pub workers_idle: usize,
+    /// End-to-end latency stats over completed `wait()`s (seconds).
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+    pub latency_mean: f64,
+    pub latency_count: u64,
+    /// Shards the service was started with.
+    pub shards: usize,
+    /// Worker threads the service was started with.
+    pub workers: usize,
+    /// Σ worker parks (condvar waits).
+    pub parks: u64,
+    /// Σ parks that followed a wakeup which found no work.
+    pub noops: u64,
+    /// Σ ready batches stolen from non-home shards.
+    pub steals: u64,
+    /// Σ steal raids (one per victim visit, ≥ 1 batch each).
+    pub steal_operations: u64,
+    /// Σ batches executed by workers (flushed once per park, so this
+    /// may trail `batches` while workers are running flat out).
+    pub polls: u64,
+    /// Σ worker busy time in seconds (unparked wall-clock).
+    pub busy_seconds: f64,
+    /// Batch latency (oldest lane queued → responses sent), seconds.
+    pub batch_latency_p50: f64,
+    pub batch_latency_p99: f64,
+    pub batch_latency_count: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean lanes per backend batch (coalescing effectiveness).
+    pub fn mean_batch_lanes(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.lanes as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean cost units per backend batch — how close emitted batches run
+    /// to the cost budget, independent of the format mix.
+    pub fn mean_batch_cost(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.cost_units as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_indexing_spans_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone_and_bracketed() {
+        let h = AtomicHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_seconds(0.5), 0.0);
+        assert_eq!(h.mean_seconds(), 0.0);
+        for _ in 0..10 {
+            h.record(Duration::from_nanos(1_000));
+        }
+        h.record(Duration::from_micros(1_000)); // one 1 ms outlier
+        assert_eq!(h.count(), 11);
+        let p50 = h.percentile_seconds(0.5);
+        let p99 = h.percentile_seconds(0.99);
+        // p50 sits in the 1 µs bucket (within √2 of 1e-6), p99 in the
+        // 1 ms bucket; monotone by construction.
+        assert!(p50 > 0.25e-6 && p50 < 4e-6, "p50 = {p50}");
+        assert!(p99 > 0.25e-3 && p99 < 4e-3, "p99 = {p99}");
+        assert!(p99 >= p50);
+        // Mean is exact: (10·1µs + 1ms) / 11 ≈ 91.8 µs.
+        let mean = h.mean_seconds();
+        assert!((mean - 91.8e-6).abs() < 1e-6, "mean = {mean}");
+    }
+
+    #[test]
+    fn histogram_batch_flushes_additively_and_resets() {
+        let shared = AtomicHistogram::new();
+        let mut local = HistogramBatch::default();
+        local.record(Duration::from_nanos(100));
+        local.record(Duration::from_nanos(200));
+        assert_eq!(local.count(), 2);
+        local.flush_into(&shared);
+        assert_eq!(local.count(), 0);
+        assert_eq!(shared.count(), 2);
+        // A second flush with nothing buffered is a no-op.
+        local.flush_into(&shared);
+        assert_eq!(shared.count(), 2);
+        local.record(Duration::from_nanos(400));
+        local.flush_into(&shared);
+        assert_eq!(shared.count(), 3);
+    }
+
+    #[test]
+    fn metrics_batch_park_noop_and_steal_accounting() {
+        let wm = WorkerMetrics::default();
+        let hist = AtomicHistogram::new();
+        let mut mb = MetricsBatch::new();
+        // First park with no polls: a no-op park.
+        mb.about_to_park();
+        mb.submit(&wm, &hist);
+        assert_eq!(wm.parks(), 1);
+        assert_eq!(wm.noops(), 1);
+        mb.returned_from_park();
+        // Work happens: poll + steal of 3 batches, then a real park.
+        mb.incr_poll();
+        mb.incr_steal(3);
+        mb.record_batch_latency(Duration::from_micros(5));
+        mb.about_to_park();
+        mb.submit(&wm, &hist);
+        assert_eq!(wm.parks(), 2);
+        assert_eq!(wm.noops(), 1, "a park after work is not a no-op");
+        assert_eq!(wm.polls(), 1);
+        assert_eq!(wm.steals(), 3);
+        assert_eq!(wm.steal_operations(), 1);
+        assert_eq!(hist.count(), 1, "batch latency flushed on park");
+        // Wake, find nothing, park again: no-op count grows.
+        mb.returned_from_park();
+        mb.about_to_park();
+        mb.submit(&wm, &hist);
+        assert_eq!(wm.noops(), 2);
+        // Stores are absolute, not additive: totals, not deltas.
+        assert_eq!(wm.parks(), 3);
+        mb.finish();
+        mb.submit(&wm, &hist);
+        assert!(wm.busy_duration() >= Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_means_guard_division_by_zero() {
+        let snap = MetricsSnapshot {
+            requests: 0,
+            lanes: 0,
+            cost_units: 0,
+            batches: 0,
+            failures: 0,
+            rejected: 0,
+            queue_depth: 0,
+            workers_idle: 0,
+            latency_p50: 0.0,
+            latency_p99: 0.0,
+            latency_mean: 0.0,
+            latency_count: 0,
+            shards: 1,
+            workers: 1,
+            parks: 0,
+            noops: 0,
+            steals: 0,
+            steal_operations: 0,
+            polls: 0,
+            busy_seconds: 0.0,
+            batch_latency_p50: 0.0,
+            batch_latency_p99: 0.0,
+            batch_latency_count: 0,
+        };
+        assert_eq!(snap.mean_batch_lanes(), 0.0);
+        assert_eq!(snap.mean_batch_cost(), 0.0);
+    }
+}

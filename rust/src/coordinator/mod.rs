@@ -1,37 +1,55 @@
-//! The division service: a batched request coordinator in plain threads
-//! (no async runtime is vendored — see DESIGN.md §1).
+//! The division service: a sharded, work-stealing batch coordinator in
+//! plain threads (no async runtime is vendored — see DESIGN.md §1).
 //!
-//! Architecture (vLLM-router-like, scaled to an arithmetic service):
+//! Architecture (sharded runtime, PR 6):
 //!
 //! ```text
-//!  clients ──submit_request(DivRequest{fmt,rm,a,b})──► bounded queue
-//!     │ typed constructors:                                │ (backpressure: Busy)
-//!     │ from_f32/from_f64/                            batcher thread
-//!     │ from_f16_bits/from_bf16_bits                       │ bucket by (Format, Rounding),
-//!     │ (legacy submit(Vec<f32>,..)                        │ coalesce ≤ max_batch per key,
-//!     │  = deprecated wrapper)                             │ adaptive flush: ship on full
-//!     │                                                    │ bucket / idle worker / per-key
-//!     │                                                    │ max_wait (each bucket's own clock)
-//!     │                                     work queue ──► worker pool
-//!     │                                       homogeneous  │ Backend::divide(bits, fmt, rm)
-//!     │                                       batches      │
-//!     │        ┌─ staged SoA kernel (crate::kernel) ─┐     │ backends:
-//!     │        │ plan ─► seed ─► power ─► mul_round  │     │  Kernel  = the staged kernel, tiles
-//!     │        │ unpack,  PLA     Taylor    final ·, │     │            of KernelConfig::tile lanes,
-//!     │        │ specials seg     powers    round    │     │            lane engine per
-//!     │        │ aside    lookup  (odd/even) pack    │     │            KernelConfig::simd
-//!     │        ├─ 8-lane tiles, 8-way recip cache ───┤     │  Native  = same kernel + divisor
-//!     │        │ stage loops on the crate::simd lane │     │            grouping permutation
-//!     │        │ engine: SimdChoice auto|forced|     │     │  NativeScalar = per-lane div_bits
-//!     │        │ scalar → AVX2 or scalar-unrolled    │     │  Gold    = longdiv (exactly rounded)
-//!     │        └─────────────────────────────────────┘     │  Pjrt    = AOT artifact (f32/nearest)
-//!     └──◄── DivTicket::wait() → DivResponse{fmt,rm,bits} ─┘
+//!  clients ──submit_request(DivRequest{fmt,rm,a,b})──┐
+//!     │ typed constructors:                          │ shard_for(BatchKey):
+//!     │ from_f32/from_f64/                           │ Fibonacci hash of
+//!     │ from_f16_bits/from_bf16_bits                 │ (format × rounding) —
+//!     │ (legacy submit(Vec<f32>,..)                  │ key-affine, so a bucket's
+//!     │  = deprecated wrapper)                       │ lanes always coalesce on ONE
+//!     │                                              │ shard; oversize requests
+//!     │                                              │ (≥ full batch budget) spread
+//!     │                                              │ by request id instead
+//!     │               ┌──────────────┬───────────────┴┬──────────────┐
+//!     │               ▼              ▼                ▼              │
+//!     │        shard 0        shard 1          shard N-1             │
+//!     │        bounded queue  bounded queue    bounded queue         │
+//!     │        (Busy when full: queue_capacity / shards each)        │
+//!     │        batcher thread batcher thread   batcher thread        │
+//!     │          │ local BatchAssembler per shard: bucket by         │
+//!     │          │ (Format, Rounding), cost-unit budgets, adaptive   │
+//!     │          │ flush (full bucket / idle worker / per-key        │
+//!     │          │ max_wait), spare-capacity budget shrink           │
+//!     │          ▼              ▼                ▼                   │
+//!     │        ready deque   ready deque      ready deque            │
+//!     │        └──────────────┴───(one mutex + condvar)──┘           │
+//!     │                         ▲          ▲                         │
+//!     │                 worker pool (home shard = id % shards):      │
+//!     │                 1. pop home deque                            │
+//!     │                 2. else STEAL: raid the busiest other deque, │
+//!     │                    take half (exec first, migrate rest home) │
+//!     │                 3. else park (flush MetricsBatch → relaxed   │
+//!     │                    stores into WorkerMetrics, once per park) │
+//!     │                 Backend::divide(bits, fmt, rm) per batch     │
+//!     │        ┌─ staged SoA kernel (crate::kernel) ─┐               │
+//!     │        │ plan ─► seed ─► power ─► mul_round  │  backends:    │
+//!     │        │ unpack,  PLA     Taylor    final ·, │  Kernel/Native│
+//!     │        │ specials seg     powers    round    │  /NativeScalar│
+//!     │        │ aside    lookup  (odd/even) pack    │  /Gold/Pjrt   │
+//!     │        └─ 8-lane tiles, crate::simd engine ──┘               │
+//!     └──◄── DivTicket::wait() → DivResponse{fmt,rm,bits} ◄──────────┘
 //! ```
 //!
-//! Heterogeneous traffic — any interleaving of binary16/bfloat16/
-//! binary32/binary64 requests under any rounding mode — rides the same
-//! `div_bits_batch` lanes: the batcher never mixes keys inside a batch,
-//! so each backend call is monomorphic over one `(Format, Rounding)`.
+//! Batches travel **whole** — each carries its positionally-aligned
+//! responders — so the no-cross-wired/no-hung-waiter invariant survives
+//! any interleaving of steals and shutdown. Heterogeneous traffic (any
+//! mix of binary16/bfloat16/binary32/binary64 under any rounding mode)
+//! rides the same `div_bits_batch` lanes: no shard ever mixes keys
+//! inside a batch, so each backend call is monomorphic over one
+//! `(Format, Rounding)`.
 //!
 //! The `Kernel`, `Native` and `NativeScalar` backends are the **same
 //! datapath** at three loop shapes: `Kernel` drives the staged
@@ -48,20 +66,23 @@
 //!   testable without threads;
 //! * [`worker`] — the backend trait and its Native/Gold/PJRT
 //!   implementations;
-//! * [`service`] — the running system: threads, channels, metrics,
-//!   shutdown, fault containment (a panicking backend fails the batch,
-//!   not the service).
+//! * [`metrics`] — batched worker counters ([`MetricsBatch`] flushed
+//!   once per park), lock-free latency histograms, and the aggregate
+//!   [`MetricsSnapshot`];
+//! * [`service`] — the running system: shards, steal loop, shutdown,
+//!   fault containment (a panicking backend fails the batch, not the
+//!   service).
 
 pub mod batcher;
+pub mod metrics;
 pub mod request;
 pub mod service;
 pub mod worker;
 
 pub use batcher::{Batch, BatchAssembler, BatchItem, REF_LANE_COST};
+pub use metrics::{AtomicHistogram, MetricsBatch, MetricsSnapshot, WorkerMetrics};
 pub use request::{BatchKey, DivRequest, DivResponse};
-pub use service::{
-    DivTicket, DivisionService, MetricsSnapshot, ServiceConfig, SubmitError, Ticket,
-};
+pub use service::{DivTicket, DivisionService, ServiceConfig, SubmitError, Ticket};
 pub use worker::{
     Backend, BackendChoice, GoldBackend, KernelBackend, NativeBackend, ScalarNativeBackend,
 };

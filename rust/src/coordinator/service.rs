@@ -1,26 +1,72 @@
-//! The running division service: batcher thread + worker pool + metrics.
+//! The running division service: sharded batchers + a work-stealing
+//! worker pool + batched metrics.
+//!
+//! ## Sharding
+//!
+//! Submissions hash on their [`BatchKey`] (format × rounding) to one of
+//! `shards` independent shards ([`ServiceConfig::shards`], default one
+//! per worker). Each shard owns a bounded submission queue, a batcher
+//! thread with its own [`BatchAssembler`] (cost-unit budgets and
+//! per-key `take_expired` clocks intact), and a ready-batch deque. The
+//! hash is key-affine — every lane of one `(Format, Rounding)` bucket
+//! lands on the same shard, so sharding never splits a coalescing
+//! window. The one exception is the submitter-spread tiebreak: a
+//! request so large it can only ship alone (its cost meets the full
+//! batch budget) gains nothing from key affinity, so it spreads across
+//! shards by request id instead of hot-spotting its key's shard.
+//!
+//! ## Work stealing
+//!
+//! Workers pop ready batches from their home shard (`wid % shards`)
+//! first. A worker whose home deque is empty raids the busiest other
+//! shard before parking: it takes half of that deque (rounded up),
+//! executes the first stolen batch and migrates the rest to its home
+//! deque. Batches travel whole — each carries its positionally-aligned
+//! responders — so the PR-4 invariant (no cross-wired or hung waiters)
+//! holds under any interleaving of steals. The ready deques share one
+//! mutex + condvar: handoff is per *batch* (hundreds-to-thousands of
+//! lanes), so a single uncontended lock costs far less than the work it
+//! hands over, and it makes steal-vs-shutdown races impossible by
+//! construction (the old design serialized on a `Mutex<Receiver>` at
+//! exactly the same point).
+//!
+//! ## Metrics
+//!
+//! Worker counters are batched ([`super::metrics`]): accumulated in a
+//! thread-local [`MetricsBatch`] and flushed with relaxed stores once
+//! per park. Submit-path and dispatch counters ([`ServiceCounters`])
+//! stay direct relaxed atomics — they feed the adaptive flush policy
+//! and mid-flight assertions. [`DivisionService::metrics`] aggregates
+//! both plus the latency histograms into one [`MetricsSnapshot`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::{Batch, BatchAssembler, BatchItem};
+use super::batcher::{Batch, BatchAssembler, BatchItem, REF_LANE_COST};
+use super::metrics::{AtomicHistogram, MetricsBatch, MetricsSnapshot, ServiceCounters, WorkerMetrics};
 use super::request::{BatchKey, DivRequest, DivResponse};
 use super::worker::BackendChoice;
 use crate::bail;
 use crate::fp::{Format, Rounding};
 use crate::util::error::Result;
-use crate::util::stats::Summary;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Worker threads (each with its own backend instance).
     pub workers: usize,
+    /// Shards: independent {submission queue + batcher + ready deque}
+    /// units that submissions hash onto by `BatchKey`. `None` (the
+    /// default) resolves to one shard per worker, overridable via the
+    /// `TSDIV_SHARDS` env var (clamped to `[1, workers]`); an explicit
+    /// `Some(n)` is validated strictly (`0 < n ≤ workers`) and ignores
+    /// the env var.
+    pub shards: Option<usize>,
     /// Coalescing budget per backend batch, in **f32-equivalent lanes**:
     /// the assembler meters cost units (`Format::lane_cost`, f64 ≈ 2×
     /// f16/bf16), so pure-f32 traffic batches exactly `max_batch` lanes
@@ -28,7 +74,8 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Max time a request waits for co-batching before flush.
     pub max_wait: Duration,
-    /// Bounded submission queue (backpressure beyond this depth).
+    /// Bounded submission capacity (backpressure beyond this depth),
+    /// split evenly across shards.
     pub queue_capacity: usize,
     /// Spare-capacity budget divisor: while every worker is idle and the
     /// queue is shallow, the coalescing budget drops to
@@ -42,6 +89,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         Self {
             workers: 2,
+            shards: None,
             max_batch: 1024,
             max_wait: Duration::from_millis(1),
             queue_capacity: 4096,
@@ -57,6 +105,18 @@ impl ServiceConfig {
         if self.workers == 0 {
             bail!("service config: workers must be > 0");
         }
+        if let Some(s) = self.shards {
+            if s == 0 {
+                bail!("service config: shards must be > 0 (or None for one per worker)");
+            }
+            if s > self.workers {
+                bail!(
+                    "service config: shards ({s}) must not exceed workers ({}) — \
+                     a shard with no home worker only ever drains by theft",
+                    self.workers
+                );
+            }
+        }
         if self.max_batch == 0 {
             bail!("service config: max_batch must be > 0 lanes");
         }
@@ -70,6 +130,25 @@ impl ServiceConfig {
             );
         }
         Ok(())
+    }
+
+    /// The shard count [`DivisionService::start`] will run with:
+    /// explicit `Some(n)` verbatim; otherwise the `TSDIV_SHARDS` env
+    /// override clamped to `[1, workers]`; otherwise one per worker.
+    pub fn resolved_shards(&self) -> usize {
+        if let Some(s) = self.shards {
+            return s;
+        }
+        if let Ok(v) = std::env::var("TSDIV_SHARDS") {
+            match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => return n.min(self.workers.max(1)),
+                _ => crate::log_warn!(
+                    "TSDIV_SHARDS='{v}' ignored (want a positive integer); \
+                     defaulting to one shard per worker"
+                ),
+            }
+        }
+        self.workers
     }
 }
 
@@ -103,7 +182,7 @@ pub struct DivTicket {
     rm: Rounding,
     request_id: u64,
     submitted: Instant,
-    latency_sink: Arc<Mutex<Summary>>,
+    latency_sink: Arc<AtomicHistogram>,
 }
 
 impl DivTicket {
@@ -126,10 +205,7 @@ impl DivTicket {
             .rx
             .recv()
             .map_err(|_| "worker dropped the response channel".to_string())??;
-        let dt = self.submitted.elapsed().as_secs_f64();
-        if let Ok(mut s) = self.latency_sink.lock() {
-            s.push(dt);
-        }
+        self.latency_sink.record(self.submitted.elapsed());
         Ok(DivResponse {
             fmt: self.fmt,
             rm: self.rm,
@@ -137,7 +213,10 @@ impl DivTicket {
         })
     }
 
-    /// Non-blocking poll.
+    /// Non-blocking poll. A dropped responder resolves to an explicit
+    /// error (matching [`DivTicket::wait`]) rather than reading as
+    /// still-pending forever — polling loops must terminate through
+    /// shutdown.
     pub fn try_wait(&self) -> Option<Result<DivResponse, String>> {
         match self.rx.try_recv() {
             Ok(Ok(bits)) => Some(Ok(DivResponse {
@@ -146,7 +225,10 @@ impl DivTicket {
                 bits,
             })),
             Ok(Err(e)) => Some(Err(e)),
-            Err(_) => None,
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err("worker dropped the response channel".to_string()))
+            }
         }
     }
 }
@@ -179,234 +261,365 @@ struct Submission {
     responder: Sender<Result<Vec<u64>, String>>,
 }
 
-/// Counters shared across threads.
-#[derive(Default)]
-struct Metrics {
-    requests: AtomicU64,
-    lanes: AtomicU64,
-    cost_units: AtomicU64,
-    batches: AtomicU64,
-    failures: AtomicU64,
-    rejected: AtomicU64,
-    queue_depth: AtomicUsize,
-    idle_workers: AtomicUsize,
-}
-
-/// A point-in-time metrics snapshot.
-#[derive(Clone, Debug)]
-pub struct MetricsSnapshot {
-    pub requests: u64,
-    pub lanes: u64,
-    /// Cost units dispatched to workers (Σ batch `lanes × lane_cost`):
-    /// the format-weighted work gauge behind the cost-metered batcher.
-    pub cost_units: u64,
-    pub batches: u64,
-    pub failures: u64,
-    pub rejected: u64,
-    pub queue_depth: usize,
-    /// Workers currently waiting for a batch (adaptive-flush signal).
-    pub workers_idle: usize,
-    /// End-to-end latency stats over completed `wait()`s (seconds).
-    pub latency_p50: f64,
-    pub latency_p99: f64,
-    pub latency_mean: f64,
-    pub latency_count: u64,
-}
-
-impl MetricsSnapshot {
-    /// Mean lanes per backend batch (coalescing effectiveness).
-    pub fn mean_batch_lanes(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.lanes as f64 / self.batches as f64
-        }
-    }
-
-    /// Mean cost units per backend batch — how close emitted batches run
-    /// to the cost budget, independent of the format mix.
-    pub fn mean_batch_cost(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.cost_units as f64 / self.batches as f64
-        }
-    }
-}
-
-/// The running service.
-pub struct DivisionService {
-    tx: Option<SyncSender<Submission>>,
-    next_id: AtomicU64,
-    metrics: Arc<Metrics>,
-    latency: Arc<Mutex<Summary>>,
-    batcher: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
-}
-
 /// One job for the worker pool: the batch plus one responder **slot per
 /// item**, positionally aligned with `batch.items`. The alignment is
 /// load-bearing: a missing responder must leave a `None` hole, never
 /// shorten the list — a shorter list zipped against the items would
 /// cross-wire every later item's reply onto the wrong waiter (and hang
-/// the tail waiters forever in release builds).
+/// the tail waiters forever in release builds). Jobs travel whole when
+/// stolen, so the alignment survives any steal interleaving.
 type Responders = Vec<Option<Sender<Result<Vec<u64>, String>>>>;
 type WorkItem = (Batch, Responders);
 
-impl DivisionService {
-    /// Start the batcher thread and `cfg.workers` worker threads.
-    pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> Result<Self> {
-        cfg.validate()?;
-        backend.validate()?;
-        let (tx, rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
-        let (work_tx, work_rx) = mpsc::channel::<WorkItem>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
-        let metrics = Arc::new(Metrics::default());
-        let latency = Arc::new(Mutex::new(Summary::keeping_samples()));
+/// Stable small index of a batch key: 4 formats × 4 rounding modes.
+fn key_slot(key: BatchKey) -> u64 {
+    let f = match (key.fmt.exp_bits, key.fmt.frac_bits) {
+        (5, 10) => 0u64,  // f16
+        (8, 7) => 1,      // bf16
+        (8, 23) => 2,     // f32
+        _ => 3,           // f64 (and any future wide format)
+    };
+    let r = match key.rm {
+        Rounding::NearestEven => 0u64,
+        Rounding::TowardZero => 1,
+        Rounding::TowardPositive => 2,
+        Rounding::TowardNegative => 3,
+    };
+    f * 4 + r
+}
 
-        // Batcher thread: coalesce submissions into per-(Format,Rounding)
-        // batches, with an adaptive flush policy (§Perf):
-        //
-        // * a bucket reaching the lane budget ships immediately;
-        // * every bucket carries its own clock: once its **oldest** lane
-        //   has waited `max_wait`, that bucket ships alone (per-key
-        //   max_wait) — a rare-(Format,Rounding) lane no longer rides a
-        //   window kept open by busier keys, and fresh buckets keep
-        //   coalescing instead of being force-flushed alongside it;
-        // * when the queue runs dry, pending work ships only if a worker
-        //   is idle to take it (otherwise flushing buys no latency — the
-        //   buckets stay open, each bounded by its own max_wait, so
-        //   deeper batches form while every worker is busy);
-        // * the lane budget itself adapts to load: spare capacity (all
-        //   workers idle, shallow queue) quarters the budget so bursts
-        //   split across idle workers instead of serializing into one.
-        let m = Arc::clone(&metrics);
-        let max_wait = cfg.max_wait;
-        let max_batch = cfg.max_batch;
-        let spare_divisor = cfg.spare_divisor;
-        let worker_count = cfg.workers;
-        let batcher = std::thread::Builder::new()
-            .name("tsdiv-batcher".into())
-            .spawn(move || {
-                let mut asm = BatchAssembler::new(max_batch);
-                let mut responders: HashMap<u64, Sender<Result<Vec<u64>, String>>> =
-                    HashMap::new();
-                let dispatch = |batch: Batch,
-                                responders: &mut HashMap<u64, Sender<Result<Vec<u64>, String>>>| {
-                    // One positional slot per item (see [`Responders`]).
-                    // A lost responder — a routing bug, not a load
-                    // condition — is counted as a failure and logged; its
-                    // waiter's channel sender is gone, so that `wait()`
-                    // returns an explicit channel-closed error instead of
-                    // hanging, and every other item still routes to the
-                    // waiter that submitted it.
-                    let rs: Responders = batch
-                        .items
-                        .iter()
-                        .map(|it| responders.remove(&it.request_id))
-                        .collect();
-                    let lost = rs.iter().filter(|r| r.is_none()).count();
-                    if lost > 0 {
-                        // One count per affected batch, matching the
-                        // backend-error/panic paths' unit (the log line
-                        // carries the per-item count).
-                        m.failures.fetch_add(1, Ordering::Relaxed);
-                        crate::log_error!(
-                            "batcher: {lost} responder(s) missing for a batch of {} item(s); \
-                             affected waiters receive a closed-channel error",
-                            batch.items.len()
-                        );
-                    }
-                    m.batches.fetch_add(1, Ordering::Relaxed);
-                    m.cost_units.fetch_add(batch.cost as u64, Ordering::Relaxed);
-                    let _ = work_tx.send((batch, rs));
-                };
-                let flush = |asm: &mut BatchAssembler,
-                             responders: &mut HashMap<u64, Sender<Result<Vec<u64>, String>>>| {
-                    for batch in asm.take_all() {
-                        dispatch(batch, responders);
-                    }
-                };
-                // Retune the cost budget from load: spare capacity (all
-                // workers idle, shallow queue) divides the budget by the
-                // configured `spare_divisor` so bursts split across idle
-                // workers; saturation restores the full budget. Called
-                // at window start AND on every drain pass — sustained
-                // load must not pin a budget picked during an idle
-                // burst-start. The budget stays denominated in
-                // f32-equivalent lanes; the assembler meters it in cost
-                // units per format.
-                let retune = |asm: &mut BatchAssembler| {
-                    let spare_capacity = m.idle_workers.load(Ordering::Relaxed) >= worker_count
-                        && m.queue_depth.load(Ordering::Relaxed) <= worker_count;
-                    asm.set_max_lanes(if spare_capacity {
-                        (max_batch / spare_divisor).max(1)
-                    } else {
-                        max_batch
-                    });
-                };
-                'outer: loop {
-                    // Block for the first submission of a batch window.
-                    let sub = match rx.recv_timeout(Duration::from_millis(100)) {
-                        Ok(s) => s,
-                        Err(RecvTimeoutError::Timeout) => continue,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    };
-                    retune(&mut asm);
-                    m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+/// Shard routing: a Fibonacci hash of the key slot keeps each
+/// `(Format, Rounding)` bucket's lanes on one shard (coalescing windows
+/// never split), with `spread` folded in only for oversize requests
+/// that ship alone anyway (`spread = 0` preserves pure key affinity).
+fn shard_for(key: BatchKey, spread: u64, shards: usize) -> usize {
+    const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+    let h = (key_slot(key) + 1).wrapping_mul(GOLDEN)
+        ^ spread.wrapping_mul(GOLDEN).rotate_left(32);
+    ((h >> 32) as usize) % shards.max(1)
+}
+
+/// The ready-batch exchange between shard batchers and workers: one
+/// deque per shard behind a single mutex + condvar. `open_shards`
+/// counts live batcher threads — workers exit once it hits zero *and*
+/// every deque is drained, so shutdown never strands a dispatched
+/// batch.
+struct RunQueues {
+    state: Mutex<RunState>,
+    cv: Condvar,
+}
+
+struct RunState {
+    ready: Vec<VecDeque<WorkItem>>,
+    open_shards: usize,
+}
+
+impl RunQueues {
+    fn new(shards: usize) -> Self {
+        Self {
+            state: Mutex::new(RunState {
+                ready: (0..shards).map(|_| VecDeque::new()).collect(),
+                open_shards: shards,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, shard: usize, job: WorkItem) {
+        let mut st = self.state.lock().unwrap();
+        st.ready[shard].push_back(job);
+        drop(st);
+        self.cv.notify_one();
+    }
+
+    fn shard_closed(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.open_shards -= 1;
+        let done = st.open_shards == 0;
+        drop(st);
+        if done {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Worker job acquisition: home deque first, then steal half of the
+    /// busiest other deque, else park. Returns `None` when every shard
+    /// has closed and every deque is drained. Parking flushes the
+    /// worker's metrics batch and maintains the global idle gauge.
+    fn next_job(
+        &self,
+        home: usize,
+        mb: &mut MetricsBatch,
+        wm: &WorkerMetrics,
+        batch_latency: &AtomicHistogram,
+        counters: &ServiceCounters,
+    ) -> Option<WorkItem> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.ready[home].pop_front() {
+                return Some(job);
+            }
+            // Steal from the busiest non-home shard: take half of its
+            // deque (rounded up), execute the front batch, migrate the
+            // rest home so this worker (or a woken peer) keeps draining
+            // without revisiting the victim.
+            let victim = (0..st.ready.len())
+                .filter(|&s| s != home && !st.ready[s].is_empty())
+                .max_by_key(|&s| st.ready[s].len());
+            if let Some(v) = victim {
+                let take = st.ready[v].len().div_ceil(2);
+                let job = st.ready[v].pop_front().expect("victim checked non-empty");
+                for _ in 1..take {
+                    let migrated = st.ready[v].pop_front().expect("take ≤ victim len");
+                    st.ready[home].push_back(migrated);
+                }
+                mb.incr_steal(take as u64);
+                if take > 1 {
+                    // Migrated batches are ready work a parked peer can
+                    // start on while this worker runs the first one.
+                    self.cv.notify_one();
+                }
+                return Some(job);
+            }
+            if st.open_shards == 0 {
+                return None;
+            }
+            // Nothing anywhere: park. Flush the metrics batch first — a
+            // parked worker has nothing better to do, and this is the
+            // only point counters cross from thread-local to shared.
+            mb.about_to_park();
+            mb.submit(wm, batch_latency);
+            counters.idle_workers.fetch_add(1, Ordering::Relaxed);
+            st = self.cv.wait(st).unwrap();
+            counters.idle_workers.fetch_sub(1, Ordering::Relaxed);
+            mb.returned_from_park();
+        }
+    }
+}
+
+/// Decrements `open_shards` when the shard batcher exits — via `Drop`,
+/// so a panicking batcher still releases the workers instead of
+/// wedging shutdown.
+struct ShardCloseGuard(Arc<RunQueues>);
+
+impl Drop for ShardCloseGuard {
+    fn drop(&mut self) {
+        self.0.shard_closed();
+    }
+}
+
+/// The running service.
+pub struct DivisionService {
+    /// Per-shard submission senders; `None` once closed. Behind an
+    /// `RwLock` so [`DivisionService::close`] can disconnect the shards
+    /// from `&self` while submitters race it (they observe `Closed`).
+    shard_txs: RwLock<Option<Vec<SyncSender<Submission>>>>,
+    shards: usize,
+    worker_count: usize,
+    /// Cost at or above which a request ships alone (the assembler's
+    /// full budget) and therefore spreads across shards by request id.
+    oversize_cost: usize,
+    next_id: AtomicU64,
+    counters: Arc<ServiceCounters>,
+    request_latency: Arc<AtomicHistogram>,
+    batch_latency: Arc<AtomicHistogram>,
+    worker_metrics: Vec<Arc<WorkerMetrics>>,
+    shard_threads: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// One shard's batcher loop: coalesce this shard's submissions into
+/// per-(Format, Rounding) batches with the adaptive flush policy
+/// (§Perf):
+///
+/// * a bucket reaching the lane budget ships immediately;
+/// * every bucket carries its own clock: once its **oldest** lane has
+///   waited `max_wait`, that bucket ships alone (per-key max_wait) — a
+///   rare-(Format,Rounding) lane no longer rides a window kept open by
+///   busier keys, and fresh buckets keep coalescing instead of being
+///   force-flushed alongside it;
+/// * when this shard's queue runs dry, pending work ships only if a
+///   worker is idle to take it (otherwise flushing buys no latency —
+///   the buckets stay open, each bounded by its own max_wait, so deeper
+///   batches form while every worker is busy);
+/// * the lane budget itself adapts to load: spare capacity (all workers
+///   idle, shallow queue) divides the budget so bursts split across
+///   idle workers instead of serializing into one.
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    shard_id: usize,
+    rx: Receiver<Submission>,
+    rt: Arc<RunQueues>,
+    counters: Arc<ServiceCounters>,
+    max_wait: Duration,
+    max_batch: usize,
+    spare_divisor: usize,
+    worker_count: usize,
+) {
+    let _close = ShardCloseGuard(Arc::clone(&rt));
+    let mut asm = BatchAssembler::new(max_batch);
+    let mut responders: HashMap<u64, Sender<Result<Vec<u64>, String>>> = HashMap::new();
+    let dispatch = |batch: Batch,
+                    responders: &mut HashMap<u64, Sender<Result<Vec<u64>, String>>>| {
+        // One positional slot per item (see [`Responders`]). A lost
+        // responder — a routing bug, not a load condition — is counted
+        // as a failure and logged; its waiter's channel sender is gone,
+        // so that `wait()` returns an explicit channel-closed error
+        // instead of hanging, and every other item still routes to the
+        // waiter that submitted it.
+        let rs: Responders = batch
+            .items
+            .iter()
+            .map(|it| responders.remove(&it.request_id))
+            .collect();
+        let lost = rs.iter().filter(|r| r.is_none()).count();
+        if lost > 0 {
+            // One count per affected batch, matching the
+            // backend-error/panic paths' unit (the log line carries the
+            // per-item count).
+            counters.failures.fetch_add(1, Ordering::Relaxed);
+            crate::log_error!(
+                "shard {shard_id}: {lost} responder(s) missing for a batch of {} item(s); \
+                 affected waiters receive a closed-channel error",
+                batch.items.len()
+            );
+        }
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters
+            .cost_units
+            .fetch_add(batch.cost as u64, Ordering::Relaxed);
+        rt.push(shard_id, (batch, rs));
+    };
+    let flush = |asm: &mut BatchAssembler,
+                 responders: &mut HashMap<u64, Sender<Result<Vec<u64>, String>>>| {
+        for batch in asm.take_all() {
+            dispatch(batch, responders);
+        }
+    };
+    // Retune the cost budget from load: spare capacity (all workers
+    // idle, shallow queue) divides the budget by the configured
+    // `spare_divisor` so bursts split across idle workers; saturation
+    // restores the full budget. Called at window start AND on every
+    // drain pass — sustained load must not pin a budget picked during
+    // an idle burst-start. The budget stays denominated in
+    // f32-equivalent lanes; the assembler meters it in cost units per
+    // format. The gauges are global (all shards see the same pool of
+    // workers), so every shard retunes from the same load signal.
+    let retune = |asm: &mut BatchAssembler| {
+        let spare_capacity = counters.idle_workers.load(Ordering::Relaxed) >= worker_count
+            && counters.queue_depth.load(Ordering::Relaxed) <= worker_count;
+        asm.set_max_lanes(if spare_capacity {
+            (max_batch / spare_divisor).max(1)
+        } else {
+            max_batch
+        });
+    };
+    'outer: loop {
+        // Block for the first submission of a batch window.
+        let sub = match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(s) => s,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        retune(&mut asm);
+        counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        responders.insert(sub.item.request_id, sub.responder);
+        if let Some(batch) = asm.push(sub.key, sub.item) {
+            dispatch(batch, &mut responders);
+        }
+        // Drain this shard's queue while work is pending. Each bucket's
+        // own clock (started at its first lane) bounds its latency:
+        // take_expired ships exactly the buckets whose oldest lane
+        // waited max_wait.
+        loop {
+            match rx.try_recv() {
+                Ok(sub) => {
+                    counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
                     responders.insert(sub.item.request_id, sub.responder);
                     if let Some(batch) = asm.push(sub.key, sub.item) {
                         dispatch(batch, &mut responders);
                     }
-                    // Drain the queue while work is pending. Each
-                    // bucket's own clock (started at its first lane)
-                    // bounds its latency: take_expired ships exactly
-                    // the buckets whose oldest lane waited max_wait.
-                    loop {
-                        match rx.try_recv() {
-                            Ok(sub) => {
-                                m.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                                responders.insert(sub.item.request_id, sub.responder);
-                                if let Some(batch) = asm.push(sub.key, sub.item) {
-                                    dispatch(batch, &mut responders);
-                                }
-                            }
-                            Err(std::sync::mpsc::TryRecvError::Empty) => {
-                                if asm.pending_lanes() == 0 {
-                                    break;
-                                }
-                                // Queue dry. Ship everything if a worker
-                                // can start on it right now; otherwise
-                                // hold the buckets open so more lanes
-                                // coalesce while all workers are busy —
-                                // per-key expiry below still bounds
-                                // every bucket's wait.
-                                if m.idle_workers.load(Ordering::Relaxed) > 0 {
-                                    flush(&mut asm, &mut responders);
-                                    break;
-                                }
-                                std::thread::sleep(Duration::from_micros(10));
-                            }
-                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                                flush(&mut asm, &mut responders);
-                                break 'outer;
-                            }
-                        }
-                        retune(&mut asm);
-                        for batch in asm.take_expired(max_wait) {
-                            dispatch(batch, &mut responders);
-                        }
-                    }
                 }
-                // Shutdown: drain any pending work.
-                flush(&mut asm, &mut responders);
-            })?;
+                Err(mpsc::TryRecvError::Empty) => {
+                    if asm.pending_lanes() == 0 {
+                        break;
+                    }
+                    // Queue dry. Ship everything if a worker can start
+                    // on it right now; otherwise hold the buckets open
+                    // so more lanes coalesce while all workers are busy
+                    // — per-key expiry below still bounds every
+                    // bucket's wait.
+                    if counters.idle_workers.load(Ordering::Relaxed) > 0 {
+                        flush(&mut asm, &mut responders);
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(10));
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    flush(&mut asm, &mut responders);
+                    break 'outer;
+                }
+            }
+            retune(&mut asm);
+            for batch in asm.take_expired(max_wait) {
+                dispatch(batch, &mut responders);
+            }
+        }
+    }
+    // Shutdown: drain any pending work.
+    flush(&mut asm, &mut responders);
+}
 
-        // Worker pool.
-        let mut workers = Vec::new();
+impl DivisionService {
+    /// Start `shards` batcher threads and `cfg.workers` worker threads.
+    pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> Result<Self> {
+        cfg.validate()?;
+        backend.validate()?;
+        let shards = cfg.resolved_shards();
+        let counters = Arc::new(ServiceCounters::default());
+        let request_latency = Arc::new(AtomicHistogram::new());
+        let batch_latency = Arc::new(AtomicHistogram::new());
+        let runtime = Arc::new(RunQueues::new(shards));
+
+        // Shard batcher threads, each owning its bounded queue slice.
+        let per_shard_cap = cfg.queue_capacity.div_ceil(shards).max(1);
+        let mut shard_txs = Vec::with_capacity(shards);
+        let mut shard_threads = Vec::with_capacity(shards);
+        for shard_id in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<Submission>(per_shard_cap);
+            shard_txs.push(tx);
+            let rt = Arc::clone(&runtime);
+            let c = Arc::clone(&counters);
+            let (max_wait, max_batch) = (cfg.max_wait, cfg.max_batch);
+            let (spare_divisor, worker_count) = (cfg.spare_divisor, cfg.workers);
+            shard_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tsdiv-shard-{shard_id}"))
+                    .spawn(move || {
+                        run_shard(
+                            shard_id,
+                            rx,
+                            rt,
+                            c,
+                            max_wait,
+                            max_batch,
+                            spare_divisor,
+                            worker_count,
+                        )
+                    })?,
+            );
+        }
+
+        // Worker pool: home shard by id, stealing from the rest.
+        let mut workers = Vec::with_capacity(cfg.workers);
+        let mut worker_metrics = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
-            let work_rx = Arc::clone(&work_rx);
-            let m = Arc::clone(&metrics);
+            let rt = Arc::clone(&runtime);
+            let c = Arc::clone(&counters);
+            let bl = Arc::clone(&batch_latency);
+            let wm = Arc::new(WorkerMetrics::default());
+            worker_metrics.push(Arc::clone(&wm));
+            let home = wid % shards;
             let choice = backend;
             workers.push(
                 std::thread::Builder::new()
@@ -419,20 +632,11 @@ impl DivisionService {
                                 return;
                             }
                         };
-                        loop {
-                            // Waiting for the job queue (including the
-                            // receiver lock) counts as idle: the batcher
-                            // flushes eagerly while anyone is ready.
-                            m.idle_workers.fetch_add(1, Ordering::Relaxed);
-                            let job = {
-                                let guard = work_rx.lock().unwrap();
-                                guard.recv()
-                            };
-                            m.idle_workers.fetch_sub(1, Ordering::Relaxed);
-                            let (batch, responders) = match job {
-                                Ok(j) => j,
-                                Err(_) => break, // batcher gone
-                            };
+                        let mut mb = MetricsBatch::new();
+                        while let Some((batch, responders)) =
+                            rt.next_job(home, &mut mb, &wm, &bl, &c)
+                        {
+                            mb.incr_poll();
                             let (a, b) = batch.flatten();
                             let key = batch.key;
                             let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -442,8 +646,8 @@ impl DivisionService {
                                 Ok(Ok(flat)) => {
                                     // Positional zip: responders is one
                                     // slot per item by construction, so
-                                    // lanes can never shift onto another
-                                    // item's waiter.
+                                    // lanes can never shift onto
+                                    // another item's waiter.
                                     for ((_, lanes), r) in
                                         batch.split(&flat).into_iter().zip(responders)
                                     {
@@ -453,47 +657,69 @@ impl DivisionService {
                                     }
                                 }
                                 Ok(Err(e)) => {
-                                    m.failures.fetch_add(1, Ordering::Relaxed);
+                                    c.failures.fetch_add(1, Ordering::Relaxed);
                                     for r in responders.into_iter().flatten() {
                                         let _ = r.send(Err(format!("backend error: {e}")));
                                     }
                                 }
                                 Err(_) => {
-                                    m.failures.fetch_add(1, Ordering::Relaxed);
+                                    c.failures.fetch_add(1, Ordering::Relaxed);
                                     for r in responders.into_iter().flatten() {
-                                        let _ =
-                                            r.send(Err("backend panicked on batch".to_string()));
+                                        let _ = r
+                                            .send(Err("backend panicked on batch".to_string()));
                                     }
                                 }
                             }
+                            // Oldest lane queued → responses sent: the
+                            // batch-latency sample (buffered; flushed
+                            // on the next park).
+                            mb.record_batch_latency(batch.age(Instant::now()));
                         }
+                        mb.finish();
+                        mb.submit(&wm, &bl);
                     })?,
             );
         }
 
         Ok(Self {
-            tx: Some(tx),
+            shard_txs: RwLock::new(Some(shard_txs)),
+            shards,
+            worker_count: cfg.workers,
+            oversize_cost: cfg.max_batch * REF_LANE_COST,
             next_id: AtomicU64::new(0),
-            metrics,
-            latency,
-            batcher: Some(batcher),
+            counters,
+            request_latency,
+            batch_latency,
+            worker_metrics,
+            shard_threads,
             workers,
         })
     }
 
     /// Submit a typed request. Non-blocking; `Busy` under backpressure.
     /// Requests of any `(Format, Rounding)` mix coalesce into
-    /// homogeneous backend batches keyed by that pair.
+    /// homogeneous backend batches keyed by that pair, on the shard
+    /// their key hashes to.
     pub fn submit_request(&self, req: DivRequest) -> Result<DivTicket, SubmitError> {
         if let Err(defect) = req.validate() {
             return Err(SubmitError::BadRequest(defect));
         }
         let lanes = req.lanes() as u64;
         let (fmt, rm) = (req.fmt, req.rm);
+        let key = req.key();
         let request_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Submitter-spread tiebreak: a request that meets the full
+        // batch budget on its own ships alone whatever shard it lands
+        // on, so spread those by id instead of hot-spotting the key's
+        // home shard.
+        let spread = if req.lanes() * key.lane_cost() >= self.oversize_cost {
+            request_id
+        } else {
+            0
+        };
         let (rtx, rrx) = mpsc::channel();
         let sub = Submission {
-            key: req.key(),
+            key,
             item: BatchItem {
                 request_id,
                 a: req.a,
@@ -501,33 +727,35 @@ impl DivisionService {
             },
             responder: rtx,
         };
-        let tx = self.tx.as_ref().ok_or(SubmitError::Closed)?;
-        // Count the submission BEFORE it becomes visible to the batcher:
+        let guard = self.shard_txs.read().map_err(|_| SubmitError::Closed)?;
+        let txs = guard.as_ref().ok_or(SubmitError::Closed)?;
+        let shard = shard_for(key, spread, txs.len());
+        // Count the submission BEFORE it becomes visible to the shard:
         // incrementing after a successful try_send races the batcher's
         // decrement and can wrap the gauge below zero (the adaptive
         // flush policy reads it). Over-counting an in-flight rejected
         // submission for a moment is harmless; undo on failure.
-        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        match tx.try_send(sub) {
+        self.counters.queue_depth.fetch_add(1, Ordering::Relaxed);
+        match txs[shard].try_send(sub) {
             Ok(()) => {
-                self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-                self.metrics.lanes.fetch_add(lanes, Ordering::Relaxed);
+                self.counters.requests.fetch_add(1, Ordering::Relaxed);
+                self.counters.lanes.fetch_add(lanes, Ordering::Relaxed);
                 Ok(DivTicket {
                     rx: rrx,
                     fmt,
                     rm,
                     request_id,
                     submitted: Instant::now(),
-                    latency_sink: Arc::clone(&self.latency),
+                    latency_sink: Arc::clone(&self.request_latency),
                 })
             }
             Err(TrySendError::Full(_)) => {
-                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Busy)
             }
             Err(TrySendError::Disconnected(_)) => {
-                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                self.counters.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 Err(SubmitError::Closed)
             }
         }
@@ -553,46 +781,74 @@ impl DivisionService {
             .ok_or_else(|| "response was not binary32".to_string())
     }
 
-    pub fn metrics(&self) -> MetricsSnapshot {
-        let lat = self.latency.lock().unwrap();
-        let count = lat.count();
-        MetricsSnapshot {
-            requests: self.metrics.requests.load(Ordering::Relaxed),
-            lanes: self.metrics.lanes.load(Ordering::Relaxed),
-            cost_units: self.metrics.cost_units.load(Ordering::Relaxed),
-            batches: self.metrics.batches.load(Ordering::Relaxed),
-            failures: self.metrics.failures.load(Ordering::Relaxed),
-            rejected: self.metrics.rejected.load(Ordering::Relaxed),
-            queue_depth: self.metrics.queue_depth.load(Ordering::Relaxed),
-            workers_idle: self.metrics.idle_workers.load(Ordering::Relaxed),
-            latency_p50: if count > 0 { lat.percentile(0.5) } else { 0.0 },
-            latency_p99: if count > 0 { lat.percentile(0.99) } else { 0.0 },
-            latency_mean: if count > 0 { lat.mean() } else { 0.0 },
-            latency_count: count,
+    /// Close the submission intake from `&self`: every subsequent
+    /// submit observes `Closed`, already-accepted work still drains and
+    /// responds. Idempotent; `shutdown`/`Drop` call it before joining.
+    pub fn close(&self) {
+        if let Ok(mut txs) = self.shard_txs.write() {
+            *txs = None; // disconnect → shard batchers drain and exit
         }
     }
 
-    /// Graceful shutdown: close the queue, join all threads.
-    pub fn shutdown(mut self) {
-        self.tx = None; // disconnect → batcher drains and exits
-        if let Some(b) = self.batcher.take() {
-            let _ = b.join();
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let latency_count = self.request_latency.count();
+        let (mut parks, mut noops, mut steals) = (0u64, 0u64, 0u64);
+        let (mut steal_operations, mut polls, mut busy_ns) = (0u64, 0u64, 0u64);
+        for wm in &self.worker_metrics {
+            parks += wm.parks();
+            noops += wm.noops();
+            steals += wm.steals();
+            steal_operations += wm.steal_operations();
+            polls += wm.polls();
+            busy_ns += wm.busy_duration().as_nanos().min(u64::MAX as u128) as u64;
+        }
+        MetricsSnapshot {
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            lanes: self.counters.lanes.load(Ordering::Relaxed),
+            cost_units: self.counters.cost_units.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            failures: self.counters.failures.load(Ordering::Relaxed),
+            rejected: self.counters.rejected.load(Ordering::Relaxed),
+            queue_depth: self.counters.queue_depth.load(Ordering::Relaxed),
+            workers_idle: self.counters.idle_workers.load(Ordering::Relaxed),
+            latency_p50: self.request_latency.percentile_seconds(0.5),
+            latency_p99: self.request_latency.percentile_seconds(0.99),
+            latency_mean: self.request_latency.mean_seconds(),
+            latency_count,
+            shards: self.shards,
+            workers: self.worker_count,
+            parks,
+            noops,
+            steals,
+            steal_operations,
+            polls,
+            busy_seconds: busy_ns as f64 * 1e-9,
+            batch_latency_p50: self.batch_latency.percentile_seconds(0.5),
+            batch_latency_p99: self.batch_latency.percentile_seconds(0.99),
+            batch_latency_count: self.batch_latency.count(),
+        }
+    }
+
+    fn join_all(&mut self) {
+        self.close();
+        for s in self.shard_threads.drain(..) {
+            let _ = s.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+
+    /// Graceful shutdown: close the intake, join every shard batcher
+    /// and worker (all accepted work resolves first).
+    pub fn shutdown(mut self) {
+        self.join_all();
     }
 }
 
 impl Drop for DivisionService {
     fn drop(&mut self) {
-        self.tx = None;
-        if let Some(b) = self.batcher.take() {
-            let _ = b.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.join_all();
     }
 }
 
@@ -641,6 +897,15 @@ mod tests {
                 spare_divisor: 0,
                 ..Default::default()
             },
+            ServiceConfig {
+                shards: Some(0),
+                ..Default::default()
+            },
+            ServiceConfig {
+                workers: 2,
+                shards: Some(3),
+                ..Default::default()
+            },
         ] {
             let r = DivisionService::start(
                 cfg.clone(),
@@ -655,6 +920,102 @@ mod tests {
             };
             assert!(e.to_string().contains("service config"), "{e}");
         }
+    }
+
+    #[test]
+    fn shard_hashing_is_key_affine_and_spreads_oversize() {
+        use crate::fp::{ALL_FORMATS, BF16};
+        // Same key, same shard — always (spread = 0 for in-budget work).
+        for fmt in ALL_FORMATS {
+            for rm in Rounding::ALL {
+                let key = BatchKey::new(fmt, rm);
+                let s = shard_for(key, 0, 4);
+                assert_eq!(s, shard_for(key, 0, 4), "routing must be deterministic");
+                assert!(s < 4);
+            }
+        }
+        // The 16 keys must not all collapse onto one shard of 4.
+        let shards: std::collections::HashSet<usize> = ALL_FORMATS
+            .into_iter()
+            .flat_map(|fmt| {
+                Rounding::ALL
+                    .into_iter()
+                    .map(move |rm| shard_for(BatchKey::new(fmt, rm), 0, 4))
+            })
+            .collect();
+        assert!(shards.len() >= 2, "keys all hashed to one shard: {shards:?}");
+        // Oversize spread: one hot key fans out across shards by id.
+        let key = BatchKey::new(BF16, Rounding::NearestEven);
+        let spread: std::collections::HashSet<usize> =
+            (0..32u64).map(|id| shard_for(key, id, 4)).collect();
+        assert!(spread.len() >= 2, "oversize requests must spread: {spread:?}");
+        // Single shard: everything routes to 0.
+        assert_eq!(shard_for(key, 7, 1), 0);
+    }
+
+    #[test]
+    fn explicit_shard_count_is_honored_and_reported() {
+        let s = DivisionService::start(
+            ServiceConfig {
+                workers: 4,
+                shards: Some(2),
+                max_batch: 64,
+                queue_capacity: 256,
+                ..ServiceConfig::default()
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let out = s
+            .divide_request_blocking(f32_req(&[9.0, 6.0], &[3.0, 2.0]))
+            .unwrap();
+        assert_eq!(out.to_f32().unwrap(), vec![3.0, 3.0]);
+        let m = s.metrics();
+        assert_eq!(m.shards, 2);
+        assert_eq!(m.workers, 4);
+        s.shutdown();
+    }
+
+    #[test]
+    fn close_rejects_new_work_but_resolves_accepted_tickets() {
+        let s = svc(2, 64, 64);
+        let t = s.submit_request(f32_req(&[8.0; 8], &[2.0; 8])).unwrap();
+        s.close();
+        assert!(matches!(
+            s.submit_request(f32_req(&[1.0], &[1.0])),
+            Err(SubmitError::Closed)
+        ));
+        // The accepted ticket still resolves (drain-on-close).
+        assert_eq!(t.wait().unwrap().to_f32().unwrap(), vec![4.0; 8]);
+        s.shutdown();
+    }
+
+    #[test]
+    fn worker_metrics_flush_on_park() {
+        let s = svc(2, 64, 64);
+        for _ in 0..4 {
+            let t = s.submit_request(f32_req(&[9.0; 4], &[3.0; 4])).unwrap();
+            assert_eq!(t.wait().unwrap().to_f32().unwrap(), vec![3.0; 4]);
+        }
+        // Flushes land once the workers park after the drain.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let m = s.metrics();
+            if m.polls > 0 && m.parks > 0 && m.batch_latency_count > 0 {
+                assert!(m.batch_latency_p99 >= m.batch_latency_p50);
+                assert!(m.busy_seconds > 0.0);
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "worker metrics never flushed: {m:?}"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        s.shutdown();
     }
 
     #[test]
@@ -853,6 +1214,7 @@ mod tests {
         let s = DivisionService::start(
             ServiceConfig {
                 workers: 1,
+                shards: None,
                 max_batch: 64,
                 max_wait: Duration::from_millis(1),
                 queue_capacity: 64,

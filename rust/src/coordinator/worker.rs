@@ -26,7 +26,11 @@
 //!
 //! Backends are created *inside* each worker thread by a factory (PJRT
 //! handles are not `Send`), so [`BackendChoice`] is the serializable
-//! configuration and [`Backend`] the per-thread instance.
+//! configuration and [`Backend`] the per-thread instance. Under the
+//! sharded runtime each worker still owns exactly one backend for its
+//! whole life: work stealing moves *batches* between shards' ready
+//! deques, never backends between threads, so a stolen batch simply
+//! runs on the thief's own backend instance.
 
 use crate::divider::longdiv::LongDivider;
 use crate::divider::{BackendKind, Divider, TaylorDivider};

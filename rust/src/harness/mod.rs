@@ -5,7 +5,10 @@
 
 pub mod trend;
 
-pub use trend::{gate_bench_history, is_throughput_metric, mad, median, GateReport, MetricGate};
+pub use trend::{
+    gate_bench_history, is_latency_metric, is_throughput_metric, mad, median, metric_direction,
+    GateReport, MetricDirection, MetricGate,
+};
 
 use crate::util::rng::Rng;
 use crate::util::table::{sig, Align, Table};

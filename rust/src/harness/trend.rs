@@ -4,11 +4,17 @@
 //! Single bench runs are noisy (CI boxes doubly so), so the gate judges
 //! the latest run against the **median** of the previous `window` runs
 //! per metric, with the median absolute deviation (MAD) reported as the
-//! noise context. Only higher-is-better throughput metrics are gated —
-//! keys containing `per_s`, the convention every serving bench follows
-//! — and a metric whose history is still shorter than the window is
-//! reported as `n/a` and never fails the gate: a fresh trajectory (or a
-//! freshly added bench row) warms up gracefully instead of blocking CI.
+//! noise context. The gate is **direction-aware**: throughput keys
+//! (containing `per_s`, the convention every serving bench follows)
+//! gate higher-is-better, while latency keys (containing `p99`,
+//! `latency` or `wait`) gate lower-is-better — a latency key wins when
+//! both conventions appear in one name, so `p99_wait_per_s`-style keys
+//! can never silently pass on a latency blow-up. Keys matching neither
+//! convention (ratios, configuration echoes, lane counts) are
+//! trend-reported but never gated. A metric whose history is still
+//! shorter than the window is reported as `n/a` and never fails the
+//! gate: a fresh trajectory (or a freshly added bench row) warms up
+//! gracefully instead of blocking CI.
 
 use crate::util::json::Json;
 use crate::util::stats::percentile_of;
@@ -41,6 +47,36 @@ pub fn is_throughput_metric(key: &str) -> bool {
     key.contains("per_s")
 }
 
+/// Is this record key a latency-style metric (lower is better)? The
+/// serving benches write tail-latency keys with `p99`, `latency` or
+/// `wait` in the name (`serve_p99_latency_us`, …).
+pub fn is_latency_metric(key: &str) -> bool {
+    key.contains("p99") || key.contains("latency") || key.contains("wait")
+}
+
+/// Which way a gated metric is allowed to move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricDirection {
+    /// Throughput-style: regresses when it *drops* past the tolerance.
+    HigherIsBetter,
+    /// Latency-style: regresses when it *rises* past the tolerance.
+    LowerIsBetter,
+}
+
+/// Gate direction for a record key, `None` when the key is not gated.
+/// Latency naming takes precedence: a key carrying both conventions
+/// (e.g. a `…wait…per_s` hybrid) gates lower-is-better, because
+/// treating a latency as a throughput silently inverts the check.
+pub fn metric_direction(key: &str) -> Option<MetricDirection> {
+    if is_latency_metric(key) {
+        Some(MetricDirection::LowerIsBetter)
+    } else if is_throughput_metric(key) {
+        Some(MetricDirection::HigherIsBetter)
+    } else {
+        None
+    }
+}
+
 /// One gated metric's verdict.
 #[derive(Clone, Debug)]
 pub struct MetricGate {
@@ -58,8 +94,11 @@ pub struct MetricGate {
     /// `(latest − median) / median` in percent (`NaN` while warming up
     /// or on a zero/non-finite baseline).
     pub delta_pct: f64,
-    /// True when the latest value dropped more than the tolerance below
-    /// the baseline median.
+    /// Which way this metric is allowed to move (from its key name).
+    pub direction: MetricDirection,
+    /// True when the latest value moved more than the tolerance in the
+    /// bad direction: dropped below the baseline median for
+    /// higher-is-better metrics, rose above it for lower-is-better.
     pub regressed: bool,
 }
 
@@ -100,11 +139,12 @@ impl GateReport {
 
 /// Judge the latest run of every bench in `records` (as returned by
 /// [`super::read_bench_history`]) against the rolling median of the
-/// `window` runs preceding it. A metric regresses when
-/// `latest < median × (1 − tolerance_pct/100)`; metrics with fewer than
-/// `window` prior recordings — including the everything-is-new case of
-/// an empty or short history — are reported with `NaN` baselines and
-/// never regress.
+/// `window` runs preceding it. A higher-is-better metric regresses when
+/// `latest < median × (1 − tolerance_pct/100)`; a lower-is-better
+/// metric when `latest > median × (1 + tolerance_pct/100)` (see
+/// [`metric_direction`]). Metrics with fewer than `window` prior
+/// recordings — including the everything-is-new case of an empty or
+/// short history — are reported with `NaN` baselines and never regress.
 pub fn gate_bench_history(records: &[Json], window: usize, tolerance_pct: f64) -> GateReport {
     assert!(window >= 1, "gate window must be ≥ 1 run");
     assert!(
@@ -133,9 +173,9 @@ pub fn gate_bench_history(records: &[Json], window: usize, tolerance_pct: f64) -
         let (latest, prior) = runs.split_last().expect("groups are non-empty");
         let Json::Obj(pairs) = *latest else { continue };
         for (key, val) in pairs {
-            if !is_throughput_metric(key) {
+            let Some(direction) = metric_direction(key) else {
                 continue;
-            }
+            };
             let Some(latest_val) = val.as_f64() else { continue };
             // Baseline: the most recent `window` prior runs that carry
             // this metric (older runs predating a freshly added row are
@@ -156,6 +196,7 @@ pub fn gate_bench_history(records: &[Json], window: usize, tolerance_pct: f64) -
                     baseline_mad: f64::NAN,
                     latest: latest_val,
                     delta_pct: f64::NAN,
+                    direction,
                     regressed: false,
                 });
                 continue;
@@ -164,7 +205,11 @@ pub fn gate_bench_history(records: &[Json], window: usize, tolerance_pct: f64) -
             let spread = mad(&baseline);
             let (delta_pct, regressed) = if med.is_finite() && med > 0.0 {
                 let delta = (latest_val - med) / med * 100.0;
-                (delta, delta < -tolerance_pct)
+                let bad = match direction {
+                    MetricDirection::HigherIsBetter => delta < -tolerance_pct,
+                    MetricDirection::LowerIsBetter => delta > tolerance_pct,
+                };
+                (delta, bad)
             } else {
                 // Zero or degenerate baseline: nothing meaningful to
                 // gate against.
@@ -178,6 +223,7 @@ pub fn gate_bench_history(records: &[Json], window: usize, tolerance_pct: f64) -
                 baseline_mad: spread,
                 latest: latest_val,
                 delta_pct,
+                direction,
                 regressed,
             });
         }
@@ -223,6 +269,53 @@ mod tests {
         assert!(!is_throughput_metric("kernel_over_scalar_f32"));
         assert!(!is_throughput_metric("simd_over_autovec_f64"));
         assert!(!is_throughput_metric("workers"));
+    }
+
+    #[test]
+    fn latency_keys_recognized_and_take_precedence() {
+        assert!(is_latency_metric("serve_p99_latency_us"));
+        assert!(is_latency_metric("batch_wait_ms"));
+        assert!(!is_latency_metric("kernel_div_per_s_f32"));
+        assert_eq!(
+            metric_direction("serve_scale_w4_div_per_s"),
+            Some(MetricDirection::HigherIsBetter)
+        );
+        assert_eq!(
+            metric_direction("serve_p99_latency_us"),
+            Some(MetricDirection::LowerIsBetter)
+        );
+        // Both conventions in one key: latency wins — a hybrid name must
+        // never gate a rising latency as an "improving throughput".
+        assert_eq!(
+            metric_direction("x_wait_per_s"),
+            Some(MetricDirection::LowerIsBetter)
+        );
+        assert_eq!(metric_direction("lanes"), None);
+        assert_eq!(metric_direction("kernel_over_scalar"), None);
+    }
+
+    #[test]
+    fn latency_rise_fails_and_fall_passes() {
+        // Five steady p99 runs, then a 3× blow-up: lower-is-better must
+        // fail on the RISE.
+        let mut records: Vec<Json> = (0..5)
+            .map(|i| record("serve", "serve_p99_latency_us", 100.0 + i as f64))
+            .collect();
+        records.push(record("serve", "serve_p99_latency_us", 300.0));
+        let report = gate_bench_history(&records, 5, 15.0);
+        assert!(!report.passed());
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].direction, MetricDirection::LowerIsBetter);
+        assert!(regs[0].delta_pct > 100.0, "{}", regs[0].delta_pct);
+        // A latency IMPROVEMENT (any size drop) passes…
+        records.pop();
+        records.push(record("serve", "serve_p99_latency_us", 1.0));
+        assert!(gate_bench_history(&records, 5, 15.0).passed());
+        // …and so does a rise inside the tolerance.
+        records.pop();
+        records.push(record("serve", "serve_p99_latency_us", 110.0));
+        assert!(gate_bench_history(&records, 5, 15.0).passed());
     }
 
     #[test]

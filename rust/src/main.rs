@@ -60,12 +60,14 @@ fn print_usage() {
          \x20 accuracy         divider-vs-gold accuracy report (add --samples N)\n\
          \x20 serve            run the division service under synthetic load\n\
          \x20                  (--backend native|kernel|native-scalar|gold|pjrt;\n\
+         \x20                   --workers N and --shards N size the sharded runtime;\n\
          \x20                   --tile N, --ilm K and --simd auto|forced|scalar\n\
          \x20                   configure the kernel backend's lane engine;\n\
          \x20                   --spare-divisor N tunes the idle-burst budget shrink)\n\
          \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run;\n\
          \x20                  --gate --window K --tolerance PCT exits non-zero when a\n\
-         \x20                  throughput metric drops > PCT percent below the rolling median\n\
+         \x20                  per_s metric drops (or a p99/latency/wait metric rises)\n\
+         \x20                  > PCT percent past the rolling median\n\
          \x20 selftest         quick health check across all layers\n",
         tsdiv::VERSION,
         tsdiv::PAPER
@@ -289,6 +291,11 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         .opt("seconds", "2", "duration")
         .opt("workers", "2", "worker threads")
         .opt(
+            "shards",
+            "",
+            "submission shards, each with its own batcher (empty = one per worker)",
+        )
+        .opt(
             "max-batch",
             "4096",
             "coalescing budget in f32-equivalent lanes (cost-weighted per format)",
@@ -386,8 +393,19 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    let shards: Option<usize> = match parsed.get("shards") {
+        Some("") | None => None,
+        Some(s) => match s.parse() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!("option --shards: cannot parse '{s}'");
+                return 2;
+            }
+        },
+    };
     let cfg = ServiceConfig {
         workers: parsed.parse_or("workers", 2),
+        shards,
         max_batch: parsed.parse_or("max-batch", 4096),
         max_wait: Duration::from_micros(200),
         queue_capacity: 1 << 14,
@@ -416,11 +434,14 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     }
     let m = svc.metrics();
     println!(
-        "served {lanes} divisions in {seconds}s ({} div/s, {} rm={}), {} batches, p50 {:.3} ms, p99 {:.3} ms",
+        "served {lanes} divisions in {seconds}s ({} div/s, {} rm={}), {} batches over {} shard(s), \
+         {} stolen, p50 {:.3} ms, p99 {:.3} ms",
         sig(lanes as f64 / seconds as f64, 4),
         parsed.get_or("format", "f32"),
         rm.name(),
         m.batches,
+        m.shards,
+        m.steals,
         m.latency_p50 * 1e3,
         m.latency_p99 * 1e3
     );
@@ -441,14 +462,15 @@ fn cmd_bench_trend(args: Vec<String>) -> i32 {
     )
     .flag(
         "gate",
-        "regression gate: exit non-zero when a throughput metric drops \
-         more than --tolerance percent below the rolling median",
+        "regression gate: exit non-zero when a throughput (per_s) metric \
+         drops, or a latency (p99/latency/wait) metric rises, more than \
+         --tolerance percent past the rolling median",
     )
     .opt("window", "5", "gate: rolling-median window in runs")
     .opt(
         "tolerance",
         "15",
-        "gate: allowed drop below the rolling median, in percent",
+        "gate: allowed move in the bad direction vs the rolling median, in percent",
     );
     let parsed = match cmd.parse(args) {
         Ok(p) => p,
@@ -566,15 +588,18 @@ fn cmd_bench_trend(args: Vec<String>) -> i32 {
 
 /// The `bench-trend --gate` body: judge each bench's latest run against
 /// the rolling median (+ MAD context) of the previous `window` runs and
-/// turn the verdict into an exit code. A history shorter than the window
-/// prints `n/a` rows and exits 0 — the gate warms up gracefully while
-/// the trajectory accumulates.
+/// turn the verdict into an exit code. Direction-aware: throughput
+/// (`per_s`) keys fail on a drop, latency (`p99`/`latency`/`wait`) keys
+/// fail on a rise. A history shorter than the window prints `n/a` rows
+/// and exits 0 — the gate warms up gracefully while the trajectory
+/// accumulates.
 fn run_bench_gate(
     path: &str,
     records: &[tsdiv::util::json::Json],
     window: usize,
     tolerance: f64,
 ) -> i32 {
+    use tsdiv::harness::MetricDirection;
     let report = tsdiv::harness::gate_bench_history(records, window, tolerance);
     let mut t = Table::new(
         &format!(
@@ -582,9 +607,10 @@ fn run_bench_gate(
              ({} record(s) in {path})",
             records.len()
         ),
-        &["bench", "metric", "median(k)", "MAD", "latest", "Δ%", "verdict"],
+        &["bench", "metric", "dir", "median(k)", "MAD", "latest", "Δ%", "verdict"],
     )
     .aligns(&[
+        Align::Left,
         Align::Left,
         Align::Left,
         Align::Right,
@@ -594,6 +620,10 @@ fn run_bench_gate(
         Align::Left,
     ]);
     for m in &report.metrics {
+        let dir = match m.direction {
+            MetricDirection::HigherIsBetter => "hi",
+            MetricDirection::LowerIsBetter => "lo",
+        };
         let (med, mad_s, delta, verdict) = if m.warming_up() {
             (
                 "n/a".to_string(),
@@ -620,6 +650,7 @@ fn run_bench_gate(
         t.row(&[
             m.bench.clone(),
             m.metric.clone(),
+            dir.to_string(),
             med,
             mad_s,
             sig(m.latest, 4),
@@ -630,7 +661,7 @@ fn run_bench_gate(
     t.print();
     if report.metrics.is_empty() {
         // The empty-trajectory warm-up case the gate must survive.
-        println!("n/a — no throughput metrics recorded yet; gate passes while history warms up");
+        println!("n/a — no gated metrics recorded yet; gate passes while history warms up");
         return 0;
     }
     let regressions = report.regressions();
@@ -643,13 +674,16 @@ fn run_bench_gate(
         0
     } else {
         for r in &regressions {
+            let bound = match r.direction {
+                MetricDirection::HigherIsBetter => format!("{:+.1}% < -{tolerance}%", r.delta_pct),
+                MetricDirection::LowerIsBetter => format!("{:+.1}% > +{tolerance}%", r.delta_pct),
+            };
             eprintln!(
-                "gate FAILED: {}/{} at {} vs rolling median {} ({:+.1}% < -{tolerance}%)",
+                "gate FAILED: {}/{} at {} vs rolling median {} ({bound})",
                 r.bench,
                 r.metric,
                 sig(r.latest, 4),
                 sig(r.baseline_median, 4),
-                r.delta_pct
             );
         }
         1

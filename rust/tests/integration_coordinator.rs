@@ -224,6 +224,195 @@ fn ilm_backend_service_accuracy_band() {
     svc.shutdown();
 }
 
+/// Sharding must be a pure routing decision: the same mixed
+/// format/rounding traffic through shards=1 and shards=4 produces
+/// bit-identical response sets (the datapath is deterministic, so any
+/// divergence is a routing or coalescing bug).
+#[test]
+fn sharded_service_equivalent_to_single_shard() {
+    let run = |shards: usize| -> Vec<Vec<u64>> {
+        let svc = DivisionService::start(
+            ServiceConfig {
+                workers: 4,
+                shards: Some(shards),
+                max_batch: 128,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 1024,
+                ..ServiceConfig::default()
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let mut tickets = Vec::new();
+        for (fi, fmt) in ALL_FORMATS.into_iter().enumerate() {
+            for (ri, rm) in Rounding::ALL.into_iter().enumerate() {
+                for rep in 0..4u64 {
+                    let seed = ((fi as u64) << 6) | ((ri as u64) << 3) | rep;
+                    let (a, b) = gen_bits_batch(fmt, 33, 8, seed);
+                    let t = loop {
+                        match svc.submit_request(DivRequest::new(fmt, rm, a.clone(), b.clone())) {
+                            Ok(t) => break t,
+                            Err(SubmitError::Busy) => std::thread::yield_now(),
+                            Err(e) => panic!("{e}"),
+                        }
+                    };
+                    tickets.push(t);
+                }
+            }
+        }
+        let out: Vec<Vec<u64>> = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().bits)
+            .collect();
+        assert_eq!(svc.metrics().failures, 0);
+        svc.shutdown();
+        out
+    };
+    assert_eq!(
+        run(1),
+        run(4),
+        "shards=4 must be bit-identical to shards=1"
+    );
+}
+
+/// Many submitter threads race a mid-flight `close()`: every ticket
+/// must resolve exactly once — a correct quotient or an explicit error,
+/// never a hang — at shards=1 and shards=4 alike.
+#[test]
+fn shutdown_mid_flight_resolves_every_ticket_exactly_once() {
+    for shards in [1usize, 4] {
+        let svc = DivisionService::start(
+            ServiceConfig {
+                workers: 4,
+                shards: Some(shards),
+                max_batch: 256,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 1024,
+                ..ServiceConfig::default()
+            },
+            BackendChoice::Native {
+                order: 5,
+                ilm_iterations: None,
+            },
+        )
+        .unwrap();
+        let tickets = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for tid in 0..8u32 {
+                let svc = &svc;
+                let tickets = &tickets;
+                scope.spawn(move || {
+                    for i in 0..200u32 {
+                        let x = (tid * 1000 + i) as f32;
+                        // x / 4.0 is exact in f32: a resolved ticket is
+                        // checkable without a gold model.
+                        match svc.submit_request(DivRequest::from_f32(&[x; 4], &[4.0; 4])) {
+                            Ok(t) => tickets.lock().unwrap().push((x, t)),
+                            Err(SubmitError::Busy) => std::thread::yield_now(),
+                            Err(SubmitError::Closed) => break,
+                            Err(e) => panic!("{e}"),
+                        }
+                    }
+                });
+            }
+            // Pull the rug while submitters are mid-loop.
+            std::thread::sleep(Duration::from_millis(2));
+            svc.close();
+        });
+        let tickets = tickets.into_inner().unwrap();
+        assert!(!tickets.is_empty(), "no ticket was ever accepted");
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        for (x, t) in tickets {
+            // try_wait-poll instead of wait(): a hang here must fail the
+            // test via the deadline, not wedge the suite.
+            let resolved = loop {
+                if let Some(r) = t.try_wait() {
+                    break r;
+                }
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "ticket for {x} never resolved (shards={shards})"
+                );
+                std::thread::sleep(Duration::from_micros(50));
+            };
+            // An accepted ticket either completes correctly or reports
+            // an explicit failure — both are "resolved exactly once".
+            if let Ok(resp) = resolved {
+                assert_eq!(resp.to_f32().unwrap(), vec![x / 4.0; 4], "shards={shards}");
+            }
+        }
+        svc.shutdown();
+    }
+}
+
+/// Single-key traffic lands on one shard by key affinity, so with 4
+/// shards the other 3 home workers can only help by stealing — and
+/// every stolen batch must still deliver each response to the waiter
+/// that submitted it.
+#[test]
+fn stealing_keeps_responses_wired_to_their_tickets() {
+    let svc = DivisionService::start(
+        ServiceConfig {
+            workers: 4,
+            shards: Some(4),
+            // Small budget so a burst of 64-lane requests emits many
+            // ready batches on the hot shard's deque (64 × 3 < 256 × 3:
+            // below the oversize threshold, so the spread tiebreak never
+            // kicks in and the key stays on one shard).
+            max_batch: 256,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 4096,
+            ..ServiceConfig::default()
+        },
+        BackendChoice::Native {
+            order: 5,
+            ilm_iterations: None,
+        },
+    )
+    .unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    let mut round = 0u64;
+    loop {
+        round += 1;
+        let tickets: Vec<_> = (0..64u64)
+            .map(|i| {
+                let x = (round * 64 + i) as f32;
+                let t = loop {
+                    match svc.submit_request(DivRequest::from_f32(&[x; 64], &[2.0; 64])) {
+                        Ok(t) => break t,
+                        Err(SubmitError::Busy) => std::thread::yield_now(),
+                        Err(e) => panic!("{e}"),
+                    }
+                };
+                (x, t)
+            })
+            .collect();
+        for (x, t) in tickets {
+            assert_eq!(
+                t.wait().unwrap().to_f32().unwrap(),
+                vec![x / 2.0; 64],
+                "round {round}: a stolen batch cross-wired its responses"
+            );
+        }
+        // Steal counters flush when a worker parks; after each drained
+        // round the pool goes idle, so flushed totals are visible here.
+        if svc.metrics().steals > 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline && round < 500,
+            "no steal ever observed: metrics = {:?}",
+            svc.metrics()
+        );
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    assert_eq!(svc.metrics().failures, 0);
+    svc.shutdown();
+}
+
 #[test]
 fn throughput_scales_with_workers() {
     // Not a strict benchmark — just require that 4 workers are no slower
