@@ -374,6 +374,15 @@ pub struct MetricsSnapshot {
     pub batch_latency_p50: f64,
     pub batch_latency_p99: f64,
     pub batch_latency_count: u64,
+    /// Batches the adaptive router sent to the Taylor kernel datapath
+    /// (zero unless serving `BackendChoice::Auto`).
+    pub router_kernel_batches: u64,
+    /// Batches the adaptive router sent to the Goldschmidt datapath.
+    pub router_goldschmidt_batches: u64,
+    /// Fraction of measured (Format, Rounding, batch-size) buckets
+    /// where the Taylor kernel currently scores fastest; the
+    /// Goldschmidt win-rate is its complement over measured buckets.
+    pub router_kernel_win_rate: f64,
 }
 
 impl MetricsSnapshot {
@@ -513,6 +522,9 @@ mod tests {
             batch_latency_p50: 0.0,
             batch_latency_p99: 0.0,
             batch_latency_count: 0,
+            router_kernel_batches: 0,
+            router_goldschmidt_batches: 0,
+            router_kernel_win_rate: 0.0,
         };
         assert_eq!(snap.mean_batch_lanes(), 0.0);
         assert_eq!(snap.mean_batch_cost(), 0.0);

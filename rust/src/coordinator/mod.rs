@@ -8,8 +8,8 @@
 //!     │ typed constructors:                          │ shard_for(BatchKey):
 //!     │ from_f32/from_f64/                           │ Fibonacci hash of
 //!     │ from_f16_bits/from_bf16_bits                 │ (format × rounding) —
-//!     │ (legacy submit(Vec<f32>,..)                  │ key-affine, so a bucket's
-//!     │  = deprecated wrapper)                       │ lanes always coalesce on ONE
+//!     │                                              │ key-affine, so a bucket's
+//!     │                                              │ lanes always coalesce on ONE
 //!     │                                              │ shard; oversize requests
 //!     │                                              │ (≥ full batch budget) spread
 //!     │                                              │ by request id instead
@@ -34,11 +34,19 @@
 //!     │                 3. else park (flush MetricsBatch → relaxed   │
 //!     │                    stores into WorkerMetrics, once per park) │
 //!     │                 Backend::divide(bits, fmt, rm) per batch     │
+//!     │   ┌─ BackendRouter (crate::router, Auto only) ────────────┐  │
+//!     │   │ pick(fmt, rm, lanes): per-bucket per-lane-seconds     │  │
+//!     │   │ table (history-seeded / static prior, epsilon-greedy) │  │
+//!     │   │   ├─► Taylor kernel      ─┐ observe(measured          │  │
+//!     │   │   └─► Goldschmidt kernel ─┘         batch latency)    │  │
+//!     │   └───────────────────────────────────────────────────────┘  │
 //!     │        ┌─ staged SoA kernel (crate::kernel) ─┐               │
 //!     │        │ plan ─► seed ─► power ─► mul_round  │  backends:    │
 //!     │        │ unpack,  PLA     Taylor    final ·, │  Kernel/Native│
 //!     │        │ specials seg     powers    round    │  /NativeScalar│
-//!     │        │ aside    lookup  (odd/even) pack    │  /Gold/Pjrt   │
+//!     │        │ aside    lookup  (odd/even) pack    │  /Goldschmidt │
+//!     │        │ (Goldschmidt path: plan ─► seed ─►  │  /Auto        │
+//!     │        │  iterate ─► round, same scratch)    │  /Gold/Pjrt   │
 //!     │        └─ 8-lane tiles, crate::simd engine ──┘               │
 //!     └──◄── DivTicket::wait() → DivResponse{fmt,rm,bits} ◄──────────┘
 //! ```
@@ -59,13 +67,20 @@
 //! `NativeScalar` is the pre-batching per-lane loop kept as the serving
 //! benches' baseline. All three are bit-identical by property test;
 //! `Gold` is the exactly-rounded reference they are measured against.
+//! `Goldschmidt` is a genuinely different datapath (multiplicative
+//! iteration instead of a Taylor polynomial) over the same staged
+//! scratch and lane engine, and `Auto` routes every batch to whichever
+//! of the two kernel datapaths currently scores fastest for its
+//! (Format, Rounding, batch-size) bucket — bit-identical per batch to
+//! the fixed backend it picks, since routing never changes what a
+//! datapath computes.
 //!
 //! * [`request`] — the typed request/response surface ([`DivRequest`],
 //!   [`DivResponse`], [`BatchKey`]);
 //! * [`batcher`] — pure batch-assembly logic (per-key coalesce/split),
 //!   testable without threads;
-//! * [`worker`] — the backend trait and its Native/Gold/PJRT
-//!   implementations;
+//! * [`worker`] — the backend trait and its Kernel/Goldschmidt/Native/
+//!   Gold/PJRT implementations, plus the router-driven [`RoutedBackend`];
 //! * [`metrics`] — batched worker counters ([`MetricsBatch`] flushed
 //!   once per park), lock-free latency histograms, and the aggregate
 //!   [`MetricsSnapshot`];
@@ -82,9 +97,10 @@ pub mod worker;
 pub use batcher::{Batch, BatchAssembler, BatchItem, REF_LANE_COST};
 pub use metrics::{AtomicHistogram, MetricsBatch, MetricsSnapshot, WorkerMetrics};
 pub use request::{BatchKey, DivRequest, DivResponse};
-pub use service::{DivTicket, DivisionService, ServiceConfig, SubmitError, Ticket};
+pub use service::{DivTicket, DivisionService, ServiceConfig, SubmitError};
 pub use worker::{
-    Backend, BackendChoice, GoldBackend, KernelBackend, NativeBackend, ScalarNativeBackend,
+    Backend, BackendChoice, GoldBackend, GoldschmidtBackend, KernelBackend, NativeBackend,
+    RoutedBackend, ScalarNativeBackend,
 };
 
 #[cfg(test)]

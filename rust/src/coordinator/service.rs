@@ -50,9 +50,10 @@ use std::time::{Duration, Instant};
 use super::batcher::{Batch, BatchAssembler, BatchItem, REF_LANE_COST};
 use super::metrics::{AtomicHistogram, MetricsBatch, MetricsSnapshot, ServiceCounters, WorkerMetrics};
 use super::request::{BatchKey, DivRequest, DivResponse};
-use super::worker::BackendChoice;
+use super::worker::{Backend, BackendChoice, RoutedBackend, ROUTER_SEED};
 use crate::bail;
 use crate::fp::{Format, Rounding};
+use crate::router::{BackendRouter, Candidate};
 use crate::util::error::Result;
 
 /// Service configuration.
@@ -233,28 +234,6 @@ impl DivTicket {
     }
 }
 
-/// Legacy f32 response handle (see [`DivisionService::submit`]).
-pub struct Ticket(DivTicket);
-
-impl Ticket {
-    /// Block until the quotient lanes arrive.
-    pub fn wait(self) -> Result<Vec<f32>, String> {
-        let resp = self.0.wait()?;
-        resp.to_f32()
-            .ok_or_else(|| "response was not binary32".to_string())
-    }
-
-    /// Non-blocking poll.
-    pub fn try_wait(&self) -> Option<Result<Vec<f32>, String>> {
-        self.0.try_wait().map(|r| {
-            r.and_then(|resp| {
-                resp.to_f32()
-                    .ok_or_else(|| "response was not binary32".to_string())
-            })
-        })
-    }
-}
-
 struct Submission {
     key: BatchKey,
     item: BatchItem,
@@ -424,8 +403,39 @@ pub struct DivisionService {
     request_latency: Arc<AtomicHistogram>,
     batch_latency: Arc<AtomicHistogram>,
     worker_metrics: Vec<Arc<WorkerMetrics>>,
+    /// Present when serving `BackendChoice::Auto`: the routing table
+    /// shared by every worker's [`RoutedBackend`], held here so
+    /// [`DivisionService::metrics`] can report per-backend dispatch
+    /// counts and win-rate.
+    router: Option<Arc<BackendRouter>>,
     shard_threads: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+}
+
+/// `TSDIV_ROUTER=auto` upgrades the *default* backend (`Native` without
+/// an ILM override) to the routed `Auto` backend — the same
+/// env-tunes-the-default contract as `TSDIV_SHARDS`. Explicitly pinned
+/// backends (kernel, goldschmidt, gold, …, `Native` with an ILM
+/// multiplier configured, and `Auto` itself) are never touched, so
+/// tests and benches that pin a datapath stay pinned under a CI-wide
+/// env.
+fn resolve_router_env(choice: BackendChoice) -> BackendChoice {
+    if let BackendChoice::Native {
+        ilm_iterations: None,
+        ..
+    } = choice
+    {
+        if let Ok(v) = std::env::var("TSDIV_ROUTER") {
+            match v.trim() {
+                "auto" => return BackendChoice::Auto,
+                "" => {}
+                other => crate::log_warn!(
+                    "TSDIV_ROUTER='{other}' ignored (only 'auto' is recognized)"
+                ),
+            }
+        }
+    }
+    choice
 }
 
 /// One shard's batcher loop: coalesce this shard's submissions into
@@ -574,7 +584,24 @@ impl DivisionService {
     /// Start `shards` batcher threads and `cfg.workers` worker threads.
     pub fn start(cfg: ServiceConfig, backend: BackendChoice) -> Result<Self> {
         cfg.validate()?;
+        let backend = resolve_router_env(backend);
         backend.validate()?;
+        // One routing table for the whole pool: every worker's routed
+        // backend feeds the same per-bucket scores, seeded from rolling
+        // bench-history medians when the file exists (a fresh checkout
+        // starts from the static cost model instead).
+        let router: Option<Arc<BackendRouter>> = match backend {
+            BackendChoice::Auto => {
+                let r = Arc::new(BackendRouter::new(ROUTER_SEED));
+                if let Ok(records) =
+                    crate::harness::read_bench_history(&crate::harness::bench_history_path())
+                {
+                    r.seed_from_history(&records);
+                }
+                Some(r)
+            }
+            _ => None,
+        };
         let shards = cfg.resolved_shards();
         let counters = Arc::new(ServiceCounters::default());
         let request_latency = Arc::new(AtomicHistogram::new());
@@ -621,11 +648,20 @@ impl DivisionService {
             worker_metrics.push(Arc::clone(&wm));
             let home = wid % shards;
             let choice = backend;
+            let shared_router = router.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("tsdiv-worker-{wid}"))
                     .spawn(move || {
-                        let mut backend = match choice.build() {
+                        // `Auto` workers share the service's router
+                        // (one table, history-seeded) instead of the
+                        // private one a standalone `build()` creates.
+                        let built: Result<Box<dyn Backend>> = match &shared_router {
+                            Some(r) => RoutedBackend::new(Arc::clone(r))
+                                .map(|b| Box::new(b) as Box<dyn Backend>),
+                            None => choice.build(),
+                        };
+                        let mut backend = match built {
                             Ok(b) => b,
                             Err(e) => {
                                 crate::log_error!("worker {wid}: backend init failed: {e}");
@@ -691,6 +727,7 @@ impl DivisionService {
             request_latency,
             batch_latency,
             worker_metrics,
+            router,
             shard_threads,
             workers,
         })
@@ -767,20 +804,6 @@ impl DivisionService {
         t.wait()
     }
 
-    /// Submit an f32 request at round-to-nearest-even.
-    #[deprecated(note = "use submit_request(DivRequest::from_f32(..))")]
-    pub fn submit(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Ticket, SubmitError> {
-        Ok(Ticket(self.submit_request(DivRequest::from_f32(&a, &b))?))
-    }
-
-    /// Submit f32 lanes and wait.
-    #[deprecated(note = "use divide_request_blocking(DivRequest::from_f32(..))")]
-    pub fn divide_blocking(&self, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
-        self.divide_request_blocking(DivRequest::from_f32(&a, &b))?
-            .to_f32()
-            .ok_or_else(|| "response was not binary32".to_string())
-    }
-
     /// Close the submission intake from `&self`: every subsequent
     /// submit observes `Closed`, already-accepted work still drains and
     /// responds. Idempotent; `shutdown`/`Drop` call it before joining.
@@ -826,6 +849,18 @@ impl DivisionService {
             batch_latency_p50: self.batch_latency.percentile_seconds(0.5),
             batch_latency_p99: self.batch_latency.percentile_seconds(0.99),
             batch_latency_count: self.batch_latency.count(),
+            router_kernel_batches: self
+                .router
+                .as_ref()
+                .map_or(0, |r| r.dispatches(Candidate::Kernel)),
+            router_goldschmidt_batches: self
+                .router
+                .as_ref()
+                .map_or(0, |r| r.dispatches(Candidate::Goldschmidt)),
+            router_kernel_win_rate: self
+                .router
+                .as_ref()
+                .map_or(0.0, |r| r.win_rate(Candidate::Kernel)),
         }
     }
 
@@ -1169,19 +1204,39 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_f32_wrappers_still_work() {
-        let s = svc(1, 64, 64);
-        let t = s.submit(vec![9.0; 4], vec![3.0; 4]).unwrap();
-        assert_eq!(t.wait().unwrap(), vec![3.0; 4]);
+    fn auto_backend_serves_and_reports_router_metrics() {
+        let s = DivisionService::start(
+            ServiceConfig {
+                workers: 2,
+                max_batch: 64,
+                queue_capacity: 256,
+                ..ServiceConfig::default()
+            },
+            BackendChoice::Auto,
+        )
+        .unwrap();
+        for i in 1..=16u32 {
+            let resp = s
+                .divide_request_blocking(f32_req(&[i as f32; 8], &[2.0; 8]))
+                .unwrap();
+            assert_eq!(resp.to_f32().unwrap(), vec![i as f32 / 2.0; 8]);
+        }
+        let m = s.metrics();
+        // Every dispatched batch is attributed to exactly one datapath.
         assert_eq!(
-            s.divide_blocking(vec![8.0], vec![2.0]).unwrap(),
-            vec![4.0]
+            m.router_kernel_batches + m.router_goldschmidt_batches,
+            m.batches,
+            "{m:?}"
         );
-        assert!(matches!(
-            s.submit(vec![1.0], vec![]),
-            Err(SubmitError::BadRequest(_))
-        ));
+        assert!(m.batches >= 1);
+        assert!((0.0..=1.0).contains(&m.router_kernel_win_rate));
+        s.shutdown();
+        // Fixed backends report zeroed router metrics.
+        let s = svc(1, 64, 64);
+        s.divide_request_blocking(f32_req(&[8.0], &[2.0])).unwrap();
+        let m = s.metrics();
+        assert_eq!(m.router_kernel_batches + m.router_goldschmidt_batches, 0);
+        assert_eq!(m.router_kernel_win_rate, 0.0);
         s.shutdown();
     }
 

@@ -20,6 +20,15 @@
 //!   ([`crate::divider::longdiv::LongDivider`]); slow, but the service's
 //!   routing and format threading can be property-tested bit-for-bit
 //!   against per-lane gold results;
+//! * [`GoldschmidtBackend`] — the second first-class kernel datapath:
+//!   the batched Goldschmidt iterate pipeline
+//!   ([`crate::kernel::GoldschmidtKernel`]) over the same staged SoA
+//!   scratch and lane engine as the Taylor kernel;
+//! * [`RoutedBackend`] — owns one Taylor kernel and one Goldschmidt
+//!   backend plus a [`crate::router::BackendRouter`] handle, and asks
+//!   the router which datapath should run each batch (the
+//!   `BackendChoice::Auto` path), feeding measured batch latencies
+//!   back so the routing table tracks the live machine;
 //! * [`PjrtBackend`] — the AOT-compiled JAX/Pallas artifact executed via
 //!   PJRT ([`crate::runtime::DivideEngine`], `pjrt` feature); serves
 //!   binary32 at round-to-nearest only.
@@ -32,10 +41,14 @@
 //! deques, never backends between threads, so a stolen batch simply
 //! runs on the thief's own backend instance.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::divider::longdiv::LongDivider;
 use crate::divider::{BackendKind, Divider, TaylorDivider};
 use crate::fp::{Format, Rounding, F32};
-use crate::kernel::KernelConfig;
+use crate::kernel::{GoldschmidtKernel, KernelConfig, KernelScratch};
+use crate::router::{BackendRouter, Candidate};
 use crate::taylor::TaylorConfig;
 use crate::util::error::Result;
 
@@ -45,15 +58,6 @@ pub trait Backend {
     fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>>;
 
     fn describe(&self) -> String;
-
-    /// Legacy f32 entry point, kept as a wrapper over [`Backend::divide`].
-    #[deprecated(note = "use divide() with bit-pattern lanes + Format + Rounding")]
-    fn divide_batch(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        let ab: Vec<u64> = a.iter().map(|&x| x.to_bits() as u64).collect();
-        let bb: Vec<u64> = b.iter().map(|&x| x.to_bits() as u64).collect();
-        let q = self.divide(&ab, &bb, F32, Rounding::NearestEven)?;
-        Ok(q.iter().map(|&x| f32::from_bits(x as u32)).collect())
-    }
 }
 
 /// Serializable backend configuration.
@@ -75,6 +79,17 @@ pub enum BackendChoice {
     /// permutation): lane-parallel plan → seed → power → mul_round
     /// tiles, configured by [`KernelConfig`].
     Kernel { order: u32, kernel: KernelConfig },
+    /// The batched Goldschmidt iterate datapath over the same staged
+    /// SoA scratch and lane engine as `Kernel`
+    /// ([`crate::kernel::GoldschmidtKernel`]); `iterations` refinement
+    /// rounds (the paper-matched default is 3).
+    Goldschmidt { iterations: u32, kernel: KernelConfig },
+    /// Adaptive per-bucket routing between the Taylor kernel and the
+    /// Goldschmidt datapath ([`crate::router::BackendRouter`]): each
+    /// batch runs on whichever datapath currently scores fastest for
+    /// its (Format, Rounding, batch-size) bucket, with epsilon-greedy
+    /// exploration keeping both datapaths measured.
+    Auto,
     /// Exactly-rounded digit recurrence (the gold reference) as a
     /// service backend — for routing/bit-identity tests.
     Gold,
@@ -86,9 +101,10 @@ pub enum BackendChoice {
 impl BackendChoice {
     /// Reject configurations that could only fail later inside a worker
     /// thread; called by `DivisionService::start` alongside
-    /// `ServiceConfig::validate`. Covers the kernel tile/SIMD choice and
-    /// the Taylor order (beyond [`crate::taylor::MAX_FAST_ORDER`] the
-    /// hot path would assert inside the worker).
+    /// `ServiceConfig::validate`. Every rejection names the offending
+    /// field — `order`, `tile`, `iterations`, or `simd` — so a bad
+    /// `serve` invocation says what to change, not just that the config
+    /// was rejected.
     pub fn validate(&self) -> Result<()> {
         match self {
             BackendChoice::Native { order, .. } | BackendChoice::NativeScalar { order, .. } => {
@@ -104,6 +120,17 @@ impl BackendChoice {
             BackendChoice::Kernel { order, kernel } => {
                 kernel.validate()?;
                 validate_order(*order)
+            }
+            BackendChoice::Goldschmidt { iterations, kernel } => {
+                kernel.validate()?;
+                validate_goldschmidt_iterations(*iterations)
+            }
+            BackendChoice::Auto => {
+                // The routed backend builds both datapaths with the
+                // default kernel config; pre-flight the same engine
+                // resolution so `TSDIV_SIMD=forced` on a host without
+                // AVX2 rejects the start instead of killing workers.
+                KernelConfig::default().validate()
             }
             BackendChoice::Gold => Ok(()),
             BackendChoice::Pjrt => {
@@ -139,10 +166,39 @@ impl BackendChoice {
             BackendChoice::Kernel { order, kernel } => {
                 Ok(Box::new(KernelBackend::new(order, kernel)?))
             }
+            BackendChoice::Goldschmidt { iterations, kernel } => {
+                Ok(Box::new(GoldschmidtBackend::new(iterations, kernel)?))
+            }
+            // A standalone build gets a private router seeded from the
+            // static cost model; the service instead constructs the
+            // routed backend with one shared, history-seeded router so
+            // every worker feeds the same table.
+            BackendChoice::Auto => Ok(Box::new(RoutedBackend::new(Arc::new(
+                BackendRouter::new(ROUTER_SEED),
+            ))?)),
             BackendChoice::Gold => Ok(Box::new(GoldBackend::new())),
             BackendChoice::Pjrt => Ok(Box::new(PjrtBackend::load_default()?)),
         }
     }
+}
+
+/// Fixed RNG seed for routers the crate constructs itself (standalone
+/// `Auto` builds and the service's shared router): exploration order is
+/// reproducible run to run.
+pub const ROUTER_SEED: u64 = 0x7510_0d17_5eed;
+
+/// Goldschmidt refinement-round bound shared by
+/// [`BackendChoice::validate`] (cheap pre-flight, no table build) and
+/// [`GoldschmidtBackend::new`] (authoritative, via
+/// [`GoldschmidtKernel::validate`]).
+fn validate_goldschmidt_iterations(iterations: u32) -> Result<()> {
+    if iterations == 0 || iterations > crate::kernel::goldschmidt::MAX_GOLDSCHMIDT_ITERATIONS {
+        crate::bail!(
+            "backend config: goldschmidt iterations must be 1..={}, got {iterations}",
+            crate::kernel::goldschmidt::MAX_GOLDSCHMIDT_ITERATIONS
+        );
+    }
+    Ok(())
 }
 
 /// The single authoritative Taylor-order bound for every native-family
@@ -328,6 +384,107 @@ impl Backend for KernelBackend {
             self.cfg.tile,
             self.divider.batch_engine().name(),
             self.divider.name()
+        )
+    }
+}
+
+/// The batched Goldschmidt iterate datapath as a service backend: each
+/// assembled batch runs one [`GoldschmidtKernel::divide_batch`]
+/// pipeline (plan → seed → iterate → round) over the same
+/// [`KernelScratch`] SoA buffers and lane engine the Taylor kernel
+/// uses. The `ilm_iterations` knob of [`KernelConfig`] is ignored —
+/// Goldschmidt refinement multiplies are exact wide products (its
+/// hardware-reduction knob is the kernel's `trunc_bits`, pinned to 0
+/// for the bit-exact service path).
+pub struct GoldschmidtBackend {
+    kernel: GoldschmidtKernel,
+    scratch: KernelScratch,
+    eng: crate::simd::Engine,
+    cfg: KernelConfig,
+}
+
+impl GoldschmidtBackend {
+    pub fn new(iterations: u32, cfg: KernelConfig) -> Result<Self> {
+        cfg.validate()?;
+        validate_goldschmidt_iterations(iterations)?;
+        Ok(Self {
+            kernel: GoldschmidtKernel::paper_default(iterations)?,
+            scratch: KernelScratch::new(),
+            // Explicit config choice, same contract as KernelBackend:
+            // a pinned `Scalar` stays scalar under TSDIV_SIMD=forced.
+            eng: cfg.simd.resolve()?,
+            cfg,
+        })
+    }
+
+    /// The kernel configuration this backend was built with.
+    pub fn config(&self) -> KernelConfig {
+        self.cfg
+    }
+}
+
+impl Backend for GoldschmidtBackend {
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+        let mut out = vec![0u64; a.len()];
+        self.kernel
+            .divide_batch(&mut self.scratch, self.cfg.tile, self.eng, a, b, fmt, rm, &mut out);
+        Ok(out)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "goldschmidt[k={}, tile={}, simd={}]",
+            self.kernel.iterations,
+            self.cfg.tile,
+            self.eng.name()
+        )
+    }
+}
+
+/// Adaptive dispatch between the two kernel datapaths
+/// (`BackendChoice::Auto`): every batch asks the shared
+/// [`BackendRouter`] which datapath currently scores fastest for its
+/// (Format, Rounding, batch-size) bucket, runs it, and reports the
+/// measured wall latency back. Both inner backends are built with the
+/// default kernel config, so any response is bit-identical to what the
+/// corresponding fixed `BackendChoice::Kernel`/`Goldschmidt` service
+/// would have produced — routing changes *when* a datapath runs, never
+/// what it computes.
+pub struct RoutedBackend {
+    router: Arc<BackendRouter>,
+    kernel: KernelBackend,
+    goldschmidt: GoldschmidtBackend,
+}
+
+impl RoutedBackend {
+    /// Routed backend over a shared router handle (the service passes
+    /// one history-seeded router to every worker).
+    pub fn new(router: Arc<BackendRouter>) -> Result<Self> {
+        Ok(Self {
+            router,
+            kernel: KernelBackend::new(5, KernelConfig::default())?,
+            goldschmidt: GoldschmidtBackend::new(3, KernelConfig::default())?,
+        })
+    }
+}
+
+impl Backend for RoutedBackend {
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+        let pick = self.router.pick(fmt, rm, a.len());
+        let start = Instant::now();
+        let out = match pick {
+            Candidate::Kernel => self.kernel.divide(a, b, fmt, rm),
+            Candidate::Goldschmidt => self.goldschmidt.divide(a, b, fmt, rm),
+        }?;
+        self.router.observe(fmt, rm, a.len(), pick, start.elapsed());
+        Ok(out)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "auto[{} | {}]",
+            self.kernel.describe(),
+            self.goldschmidt.describe()
         )
     }
 }
@@ -658,10 +815,140 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_divide_batch_wrapper_still_works() {
-        let mut be = NativeBackend::new(5, None).unwrap();
-        let out = be.divide_batch(&[6.0, 1.0], &[2.0, 4.0]).unwrap();
-        assert_eq!(out, vec![3.0, 0.25]);
+    fn goldschmidt_backend_divides_and_describes() {
+        let mut be = GoldschmidtBackend::new(3, KernelConfig::default()).unwrap();
+        let out = be
+            .divide(
+                &bits32(&[6.0, 1.0, -8.0]),
+                &bits32(&[2.0, 4.0, 2.0]),
+                F32,
+                Rounding::NearestEven,
+            )
+            .unwrap();
+        assert_eq!(out, bits32(&[3.0, 0.25, -4.0]));
+        assert!(be.describe().starts_with("goldschmidt[k=3"));
+        assert_eq!(be.config().tile, 8);
+    }
+
+    #[test]
+    fn goldschmidt_choice_builds_and_matches_direct_backend() {
+        let choice = BackendChoice::Goldschmidt {
+            iterations: 3,
+            kernel: KernelConfig::default(),
+        };
+        assert!(choice.validate().is_ok());
+        let mut via_choice = choice.build().unwrap();
+        let mut direct = GoldschmidtBackend::new(3, KernelConfig::default()).unwrap();
+        let a = bits32(&[6.0, -1.5, f32::NAN, 0.0, f32::INFINITY, 1.0e-40, 355.0, -0.0, 9.0]);
+        let b = bits32(&[2.0, 3.0, 2.0, 3.0, 2.0, 3.0, 113.0, 2.0, 3.0]);
+        for rm in Rounding::ALL {
+            assert_eq!(
+                via_choice.divide(&a, &b, F32, rm).unwrap(),
+                direct.divide(&a, &b, F32, rm).unwrap(),
+                "{rm:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_names_the_failing_field_per_arm() {
+        // order
+        let err = BackendChoice::Native {
+            order: crate::taylor::MAX_FAST_ORDER + 1,
+            ilm_iterations: None,
+        }
+        .validate()
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("order"), "{err}");
+        // tile
+        let err = BackendChoice::Kernel {
+            order: 5,
+            kernel: KernelConfig {
+                tile: 0,
+                ilm_iterations: None,
+                ..KernelConfig::default()
+            },
+        }
+        .validate()
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("tile"), "{err}");
+        // goldschmidt iterations (both ends of the range)
+        for iterations in [0, crate::kernel::goldschmidt::MAX_GOLDSCHMIDT_ITERATIONS + 1] {
+            let err = BackendChoice::Goldschmidt {
+                iterations,
+                kernel: KernelConfig::default(),
+            }
+            .validate()
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("iterations"), "{err}");
+            assert!(
+                BackendChoice::Goldschmidt {
+                    iterations,
+                    kernel: KernelConfig::default(),
+                }
+                .build()
+                .is_err()
+            );
+        }
+        // simd (only diagnosable on hosts where `forced` cannot resolve)
+        if !crate::simd::simd_available() {
+            let err = BackendChoice::Goldschmidt {
+                iterations: 3,
+                kernel: KernelConfig {
+                    simd: crate::simd::SimdChoice::Forced,
+                    ..KernelConfig::default()
+                },
+            }
+            .validate()
+            .unwrap_err()
+            .to_string();
+            assert!(err.contains("simd"), "{err}");
+        }
+    }
+
+    #[test]
+    fn auto_choice_validates_and_builds_a_routed_backend() {
+        let choice = BackendChoice::Auto;
+        assert!(choice.validate().is_ok());
+        let mut be = choice.build().unwrap();
+        assert!(be.describe().starts_with("auto["), "{}", be.describe());
+        let a = bits32(&[6.0, 1.0, -8.0, f32::NAN]);
+        let b = bits32(&[2.0, 4.0, 2.0, 2.0]);
+        // Whatever the router picks, the response must equal one of the
+        // two fixed datapaths' outputs (here they agree exactly).
+        let out = be.divide(&a, &b, F32, Rounding::NearestEven).unwrap();
+        let mut kern = KernelBackend::new(5, KernelConfig::default()).unwrap();
+        assert_eq!(out, kern.divide(&a, &b, F32, Rounding::NearestEven).unwrap());
+    }
+
+    #[test]
+    fn routed_backend_responses_always_match_a_fixed_datapath() {
+        use crate::harness::gen_bits_batch;
+        let router = Arc::new(BackendRouter::new(42));
+        let mut routed = RoutedBackend::new(router.clone()).unwrap();
+        let mut kern = KernelBackend::new(5, KernelConfig::default()).unwrap();
+        let mut gold = GoldschmidtBackend::new(3, KernelConfig::default()).unwrap();
+        for (rep, &fmt) in [F16, BF16, F32, F64].iter().enumerate() {
+            for rm in Rounding::ALL {
+                let (a, b) = gen_bits_batch(fmt, 57, 8, 0xA5A5 + rep as u64);
+                let out = routed.divide(&a, &b, fmt, rm).unwrap();
+                let qk = kern.divide(&a, &b, fmt, rm).unwrap();
+                let qg = gold.divide(&a, &b, fmt, rm).unwrap();
+                assert!(
+                    out == qk || out == qg,
+                    "routed response matches neither datapath ({}/{:?})",
+                    fmt.name(),
+                    rm
+                );
+            }
+        }
+        // Both datapaths got exercised... or at least every dispatch is
+        // accounted for by the two counters.
+        let total = router.dispatches(crate::router::Candidate::Kernel)
+            + router.dispatches(crate::router::Candidate::Goldschmidt);
+        assert_eq!(total, 4 * Rounding::ALL.len() as u64);
     }
 }

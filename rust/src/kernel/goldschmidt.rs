@@ -1,0 +1,439 @@
+//! Batched Goldschmidt iteration datapath over the staged SoA pipeline.
+//!
+//! The second first-class kernel datapath: where the Taylor kernel
+//! approximates `1/b` once (seed → power → one final multiply),
+//! Goldschmidt refines numerator and denominator together —
+//! `N_{k+1} = N_k·F_k`, `D_{k+1} = D_k·F_k` with `F_k = 2 − D_k` —
+//! converging quadratically from the same PLA seed. The per-lane
+//! reference is [`crate::divider::goldschmidt::GoldschmidtDivider`];
+//! this module runs the identical arithmetic one *stage* at a time over
+//! dense SoA lanes, reusing the Taylor kernel's plan stage, its
+//! [`KernelScratch`] buffers, and the [`crate::simd::Engine`]
+//! wide-multiply ops, so both datapaths share one staged machinery:
+//!
+//! ```text
+//!   a[], b[] ──► plan ──► seed ──► iterate ──► round ──► out[]
+//!               │ (shared │ PLA     │ k × {F = 2−D,  │ round_pack,
+//!               │  with    │ lookup  │      N ←N·F≫f, │ sticky set
+//!               │  Taylor  │ → y0    │      D ←D·F≫f} │ (inexact by
+//!               │  kernel) │         │ per tile       │  construction)
+//! ```
+//!
+//! The iterate stage optionally models the hardware-reduction trick of
+//! truncated-multiplier Goldschmidt dividers (arxiv 1909.10154): with
+//! `trunc_bits = t > 0` every intermediate product keeps only its top
+//! `f − t` fraction bits (the low `t` bits of the Q2.F word are
+//! zeroed), emulating a reduced-width multiplier array. Each truncation
+//! loses `< 2^(t−f)` of relative precision, so a `k`-iteration divide
+//! stays within `(2k + 2)·2^(t−f)` relative of the full-width quotient
+//! — under 1 result ulp while `t ≤ f − fmt.frac_bits − log2(2k+2) − 1`.
+//! At the default `t = 0` the datapath is **bit-identical** to the
+//! scalar `GoldschmidtDivider`, pinned by the tests below.
+
+use super::{stages, KernelScratch};
+use crate::bail;
+use crate::fp::{round_pack, Format, Rounding};
+use crate::pla::SegmentTable;
+use crate::simd::Engine;
+use crate::util::error::Result;
+
+/// Most correction iterations a config may request: convergence is
+/// quadratic, so anything past ~6 only re-truncates; 32 bounds the
+/// damage of a typo'd knob without constraining real use.
+pub const MAX_GOLDSCHMIDT_ITERATIONS: u32 = 32;
+
+/// The batched Goldschmidt datapath: seed table + iteration count +
+/// optional reduced-width intermediate products, run over the staged
+/// SoA pipeline of [`super`].
+#[derive(Clone, Debug)]
+pub struct GoldschmidtKernel {
+    /// Correction iterations `k` (3 reaches 53-bit precision from the
+    /// paper's 8-segment seed).
+    pub iterations: u32,
+    /// Low fraction bits zeroed from every intermediate product
+    /// (truncated-multiplier emulation; 0 = full width, bit-identical
+    /// to the scalar divider).
+    pub trunc_bits: u32,
+    /// Q2.F datapath fraction bits (matches `table.frac_bits`).
+    pub frac_bits: u32,
+    /// PLA reciprocal seed table (shared derivation with the Taylor
+    /// datapath).
+    pub table: SegmentTable,
+}
+
+impl GoldschmidtKernel {
+    /// Same seed and datapath width as the scalar
+    /// `GoldschmidtDivider::paper_default()`: Table-I segments, Q2.60,
+    /// full-width multiplies.
+    pub fn paper_default(iterations: u32) -> Result<Self> {
+        let bounds = crate::pla::derive_segments(5, 53)?;
+        let kernel = Self {
+            iterations,
+            trunc_bits: 0,
+            frac_bits: 60,
+            table: SegmentTable::build(&bounds, 60),
+        };
+        kernel.validate()?;
+        Ok(kernel)
+    }
+
+    /// Reject configurations that could only fail (or silently produce
+    /// garbage) inside a worker thread. Field-specific messages — the
+    /// service surfaces these verbatim at start().
+    pub fn validate(&self) -> Result<()> {
+        if self.iterations == 0 || self.iterations > MAX_GOLDSCHMIDT_ITERATIONS {
+            bail!(
+                "goldschmidt config: iterations must be 1..={MAX_GOLDSCHMIDT_ITERATIONS}, got {}",
+                self.iterations
+            );
+        }
+        if self.trunc_bits > self.frac_bits / 2 {
+            bail!(
+                "goldschmidt config: trunc_bits of {} exceeds half the Q2.{} datapath",
+                self.trunc_bits,
+                self.frac_bits
+            );
+        }
+        if self.table.frac_bits != self.frac_bits {
+            bail!(
+                "goldschmidt config: seed table is Q2.{}, datapath is Q2.{}",
+                self.table.frac_bits,
+                self.frac_bits
+            );
+        }
+        Ok(())
+    }
+
+    /// Run the staged Goldschmidt pipeline over one batch:
+    /// `out[i] = a[i] / b[i]`, all slices the same length, bit patterns
+    /// of `fmt`, rounded under `rm`. Specials resolve in the shared plan
+    /// stage (bit-identical to every other datapath); dense lanes run
+    /// the iterate stage tile by tile on the lane engine `eng`.
+    ///
+    /// With `trunc_bits == 0` this is bit-identical to calling the
+    /// scalar `GoldschmidtDivider::div_bits` per lane with the same
+    /// `iterations` and table.
+    #[allow(clippy::too_many_arguments)]
+    pub fn divide_batch(
+        &self,
+        scratch: &mut KernelScratch,
+        tile: usize,
+        eng: Engine,
+        a: &[u64],
+        b: &[u64],
+        fmt: Format,
+        rm: Rounding,
+        out: &mut [u64],
+    ) {
+        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        assert_eq!(a.len(), out.len(), "output length mismatch");
+        assert!(
+            self.frac_bits >= fmt.frac_bits,
+            "datapath narrower than format significand"
+        );
+        assert!(tile >= 1, "kernel tile must be ≥ 1 lane");
+        let f = self.frac_bits;
+        let shift = f - fmt.frac_bits;
+        let two = 2u64 << f;
+        // keep-mask of the truncated-multiplier mode; all-ones (a no-op
+        // AND) at full width.
+        let keep = if self.trunc_bits == 0 {
+            u64::MAX
+        } else {
+            !((1u64 << self.trunc_bits) - 1)
+        };
+
+        let KernelScratch {
+            plan,
+            edge_cache,
+            miss_x,
+            y0,
+            m,
+            pow,
+            sum,
+            recip,
+            ..
+        } = scratch;
+
+        // Stage the PLA edge table once per call (see KernelScratch).
+        if !edge_cache.matches(&self.table.edges) {
+            edge_cache.rebuild(&self.table.edges);
+        }
+
+        // Stage 1 — plan: shared with the Taylor kernel. Specials go to
+        // the output sidechannel; dense lanes carry sig_a raw and
+        // x = sig_b << shift (Q2.F).
+        stages::plan(a, b, fmt, shift, plan, out);
+        let n = plan.lanes();
+
+        // Stages 2–3 — seed + iterate, tile by tile. Unlike the Taylor
+        // kernel there is no divisor-reciprocal cache: each lane's
+        // refinement couples numerator and denominator, so nothing
+        // divisor-only is reusable across lanes.
+        let mut t0 = 0;
+        while t0 < n {
+            let t1 = (t0 + tile).min(n);
+            let x = &plan.x[t0..t1];
+            let k = x.len();
+            // y0 ≈ 1/x per lane from the PLA seed (identical lookup to
+            // the scalar divider's `table.seed`).
+            stages::seed(eng, &self.table, edge_cache, x, y0);
+            // The dividend significand mapped into Q2.F: a_q = sig_a
+            // << shift (the scalar path's `a`). Staged into `miss_x`,
+            // unused by this pipeline's other stages.
+            miss_x.clear();
+            miss_x.extend(plan.sig_a[t0..t1].iter().map(|&s| s << shift));
+            // N0 = (a_q·y0) ≫ f into `recip`; D0 = (x·y0) ≫ f into
+            // `sum` (buffer reuse — the names belong to the Taylor
+            // stages, the roles here are N and D).
+            recip.clear();
+            recip.resize(k, 0);
+            sum.clear();
+            sum.resize(k, 0);
+            eng.mul_shr(miss_x, y0, f, recip);
+            eng.mul_shr(x, y0, f, sum);
+            m.clear();
+            m.resize(k, 0);
+            pow.clear();
+            pow.resize(k, 0);
+            for _ in 0..self.iterations {
+                // F = 2 − D, saturating exactly like the scalar path.
+                m.copy_from_slice(sum);
+                eng.rsub_sat(two, m);
+                // N ← (N·F) ≫ f, D ← (D·F) ≫ f (independent multiplies
+                // — the pipelinability argument of the algorithm).
+                eng.mul_shr(recip, m, f, pow);
+                std::mem::swap(recip, pow);
+                eng.mul_shr(sum, m, f, pow);
+                std::mem::swap(sum, pow);
+                if keep != u64::MAX {
+                    // Truncated-multiplier emulation: drop the low
+                    // trunc_bits of both intermediate products.
+                    for v in recip.iter_mut() {
+                        *v &= keep;
+                    }
+                    for v in sum.iter_mut() {
+                        *v &= keep;
+                    }
+                }
+            }
+            // Stage 4 — round: N is the quotient in (0.5, 2) Q2.F.
+            // Sticky is SET (the iteration truncates continuously), the
+            // scalar divider's exact rounding call.
+            for (j, &q) in recip.iter().enumerate() {
+                let lane = t0 + j;
+                out[plan.idx[lane] as usize] =
+                    round_pack(plan.sign[lane], plan.exp[lane], q as u128, f, true, fmt, rm).0;
+            }
+            t0 = t1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::divider::goldschmidt::GoldschmidtDivider;
+    use crate::divider::Divider;
+    use crate::fp::{ulp_diff, ALL_FORMATS, F32};
+    use crate::harness::{gen_bits_batch, special_patterns};
+
+    fn batch_divide(
+        kernel: &GoldschmidtKernel,
+        tile: usize,
+        eng: Engine,
+        a: &[u64],
+        b: &[u64],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Vec<u64> {
+        let mut scratch = KernelScratch::new();
+        let mut out = vec![0u64; a.len()];
+        kernel.divide_batch(&mut scratch, tile, eng, a, b, fmt, rm, &mut out);
+        out
+    }
+
+    /// Random lanes with specials sprinkled in, like the kernel suite.
+    fn operands(fmt: Format, n: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+        let (mut a, mut b) = gen_bits_batch(fmt, n, 8, seed);
+        for (i, &s) in special_patterns(fmt).iter().enumerate() {
+            if i * 2 + 1 < n {
+                a[i * 2] = s;
+                b[i * 2 + 1] = s;
+            }
+        }
+        (a, b)
+    }
+
+    #[test]
+    fn bit_identical_to_scalar_goldschmidt_all_formats_and_roundings() {
+        let kernel = GoldschmidtKernel::paper_default(3).unwrap();
+        for (fi, fmt) in ALL_FORMATS.into_iter().enumerate() {
+            for rm in Rounding::ALL {
+                let (a, b) = operands(fmt, 67, (fi as u64) << 4 | 5);
+                let mut scalar = GoldschmidtDivider::paper_default();
+                let want: Vec<u64> = (0..a.len())
+                    .map(|i| scalar.div_bits(a[i], b[i], fmt, rm))
+                    .collect();
+                for tile in [1usize, 3, 8, 67, 200] {
+                    for eng in crate::simd::engines_available() {
+                        let got = batch_divide(&kernel, tile, eng, &a, &b, fmt, rm);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} {rm:?} tile={tile} {}",
+                            fmt.name(),
+                            eng.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn iteration_count_rides_through_to_the_scalar_oracle() {
+        // Any iteration count, not just the paper default, stays
+        // bit-identical — the iterate stage is the same loop.
+        let bounds = crate::pla::derive_segments(5, 53).unwrap();
+        for k in [1u32, 2, 4] {
+            let kernel = GoldschmidtKernel {
+                iterations: k,
+                trunc_bits: 0,
+                frac_bits: 60,
+                table: SegmentTable::build(&bounds, 60),
+            };
+            let mut scalar = GoldschmidtDivider::new(k, 60, SegmentTable::build(&bounds, 60));
+            let (a, b) = operands(F32, 41, 7 + k as u64);
+            let want: Vec<u64> = (0..a.len())
+                .map(|i| scalar.div_bits(a[i], b[i], F32, Rounding::NearestEven))
+                .collect();
+            let got = batch_divide(&kernel, 8, Engine::Scalar, &a, &b, F32, Rounding::NearestEven);
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn truncated_multiplier_mode_stays_inside_documented_band() {
+        // t = 16 at f = 60 against f32 (frac 23): the bound in the
+        // module docs gives (2·3+2)·2^(16−60) = 2^(−41) relative —
+        // far under half an ulp (2^(−24)), so results stay within 1 ulp
+        // of the full-width datapath, and most lanes are identical.
+        let full = GoldschmidtKernel::paper_default(3).unwrap();
+        let trunc = GoldschmidtKernel {
+            trunc_bits: 16,
+            ..full.clone()
+        };
+        trunc.validate().unwrap();
+        let (a, b) = operands(F32, 97, 99);
+        for rm in Rounding::ALL {
+            let qf = batch_divide(&full, 8, Engine::Scalar, &a, &b, F32, rm);
+            let qt = batch_divide(&trunc, 8, Engine::Scalar, &a, &b, F32, rm);
+            for i in 0..a.len() {
+                match ulp_diff(qt[i], qf[i], F32) {
+                    Some(u) => assert!(u <= 1, "lane {i} ({rm:?}): {u} ulp from full width"),
+                    None => assert_eq!(qt[i], qf[i], "lane {i} ({rm:?}): NaN class changed"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn specials_resolved_bit_identical_to_prepare() {
+        // Special lanes never reach the iterate stage; they resolve in
+        // the shared plan stage exactly as every other datapath does.
+        let kernel = GoldschmidtKernel::paper_default(3).unwrap();
+        let a: Vec<u64> = [f32::NAN, 1.0, 0.0, f32::INFINITY, -1.0, 0.0]
+            .iter()
+            .map(|x| x.to_bits() as u64)
+            .collect();
+        let b: Vec<u64> = [1.0f32, 0.0, 0.0, 2.0, f32::INFINITY, 5.0]
+            .iter()
+            .map(|x| x.to_bits() as u64)
+            .collect();
+        let got = batch_divide(&kernel, 8, Engine::Scalar, &a, &b, F32, Rounding::NearestEven);
+        let mut scalar = GoldschmidtDivider::paper_default();
+        for i in 0..a.len() {
+            assert_eq!(
+                got[i],
+                scalar.div_bits(a[i], b[i], F32, Rounding::NearestEven),
+                "lane {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_fields_by_name() {
+        let good = GoldschmidtKernel::paper_default(3).unwrap();
+        assert!(good.validate().is_ok());
+        let e = GoldschmidtKernel {
+            iterations: 0,
+            ..good.clone()
+        }
+        .validate()
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("iterations"), "{e}");
+        let e = GoldschmidtKernel {
+            iterations: MAX_GOLDSCHMIDT_ITERATIONS + 1,
+            ..good.clone()
+        }
+        .validate()
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("iterations"), "{e}");
+        let e = GoldschmidtKernel {
+            trunc_bits: 31,
+            ..good.clone()
+        }
+        .validate()
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("trunc_bits"), "{e}");
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls_and_datapaths_bit_exact() {
+        // One scratch serving a Taylor divide_batch and then a
+        // Goldschmidt divide_batch (and back) must not leak state.
+        use crate::powering::ExactMul;
+        use crate::taylor::TaylorConfig;
+        let cfg = TaylorConfig::paper_default(60);
+        let kernel = GoldschmidtKernel::paper_default(3).unwrap();
+        let (a, b) = gen_bits_batch(F32, 29, 7, 1234);
+        let rm = Rounding::NearestEven;
+        let want_gs = batch_divide(&kernel, 8, Engine::Scalar, &a, &b, F32, rm);
+        let mut scratch = KernelScratch::new();
+        let mut be = ExactMul::default();
+        let mut out_taylor = vec![0u64; a.len()];
+        super::super::divide_batch(
+            &cfg,
+            &mut be,
+            &mut scratch,
+            8,
+            Engine::Scalar,
+            &a,
+            &b,
+            F32,
+            rm,
+            &mut out_taylor,
+        );
+        let mut out_gs = vec![0u64; a.len()];
+        kernel.divide_batch(&mut scratch, 8, Engine::Scalar, &a, &b, F32, rm, &mut out_gs);
+        assert_eq!(out_gs, want_gs, "goldschmidt after taylor through one scratch");
+        let mut out_taylor2 = vec![0u64; a.len()];
+        super::super::divide_batch(
+            &cfg,
+            &mut be,
+            &mut scratch,
+            8,
+            Engine::Scalar,
+            &a,
+            &b,
+            F32,
+            rm,
+            &mut out_taylor2,
+        );
+        assert_eq!(out_taylor2, out_taylor, "taylor after goldschmidt through one scratch");
+    }
+}

@@ -31,6 +31,11 @@
 //! * and, transitively, `BackendChoice::Native`, whose divisor-grouping
 //!   wrapper feeds the same `div_bits_batch`.
 //!
+//! A second datapath shares the machinery: [`goldschmidt::GoldschmidtKernel`]
+//! (`BackendChoice::Goldschmidt`) reuses the plan stage, this scratch,
+//! and the lane engine, swapping the seed→power→mul_round middle for a
+//! Goldschmidt iterate stage.
+//!
 //! Numerics are **bit-identical** to the scalar `div_bits` path
 //! ([`crate::taylor::reciprocal_fast`] + `round_pack`): every per-lane
 //! operation and its order are preserved, only the loop nesting changes
@@ -38,7 +43,10 @@
 //! test pins this across all formats, rounding modes, specials and
 //! subnormals.
 
+pub mod goldschmidt;
 pub mod stages;
+
+pub use goldschmidt::GoldschmidtKernel;
 
 use crate::bail;
 use crate::fp::{Format, Rounding};
@@ -111,7 +119,7 @@ impl KernelConfig {
         if self.tile > 1 << 20 {
             bail!("kernel config: tile of {} lanes exceeds any batch", self.tile);
         }
-        self.simd.validate().context("kernel config")
+        self.simd.validate().context("kernel config: simd")
     }
 }
 

@@ -24,6 +24,9 @@
 //! * [`hw`] — gate-level cost model reproducing the hardware claims
 //!   (Fig 4 vs Fig 5, "< 50 % hardware");
 //! * [`analysis`] — ULP/relative-error sweeps used by the benches;
+//! * [`router`] — the adaptive backend router (per-(Format, Rounding,
+//!   batch-size) scoring cells seeded from bench history or a static
+//!   cost model, refined online; drives `BackendChoice::Auto`);
 //! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts;
 //! * [`coordinator`] — the typed multi-format division service
 //!   (DivRequest/DivResponse, per-(Format, Rounding) dynamic batcher,
@@ -43,6 +46,7 @@ pub mod ilm;
 pub mod kernel;
 pub mod pla;
 pub mod powering;
+pub mod router;
 pub mod runtime;
 pub mod simd;
 pub mod squaring;

@@ -59,10 +59,14 @@ fn print_usage() {
          \x20 hw               hardware cost model (Fig 4 vs Fig 5, system)\n\
          \x20 accuracy         divider-vs-gold accuracy report (add --samples N)\n\
          \x20 serve            run the division service under synthetic load\n\
-         \x20                  (--backend native|kernel|native-scalar|gold|pjrt;\n\
+         \x20                  (--backend native|kernel|goldschmidt|auto|\n\
+         \x20                   native-scalar|gold|pjrt — 'auto' routes each batch\n\
+         \x20                   to the fastest kernel datapath per (format,\n\
+         \x20                   rounding, batch-size) bucket; TSDIV_ROUTER=auto\n\
+         \x20                   upgrades the default backend the same way;\n\
          \x20                   --workers N and --shards N size the sharded runtime;\n\
          \x20                   --tile N, --ilm K and --simd auto|forced|scalar\n\
-         \x20                   configure the kernel backend's lane engine;\n\
+         \x20                   configure the kernel backends' lane engine;\n\
          \x20                   --spare-divisor N tunes the idle-burst budget shrink)\n\
          \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run;\n\
          \x20                  --gate --window K --tolerance PCT exits non-zero when a\n\
@@ -265,7 +269,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         .opt_choice(
             "backend",
             "native",
-            &["native", "kernel", "native-scalar", "gold", "pjrt"],
+            &["native", "kernel", "goldschmidt", "auto", "native-scalar", "gold", "pjrt"],
             "worker backend",
         )
         .opt("tile", "8", "kernel backend: lanes per SoA pipeline tile")
@@ -320,7 +324,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             }
             BackendChoice::Pjrt
         }
-        "kernel" => {
+        which @ ("kernel" | "goldschmidt") => {
             let ilm_iterations = match parsed.get("ilm") {
                 Some("") | None => None,
                 Some(s) => match s.parse() {
@@ -349,8 +353,22 @@ fn cmd_serve(args: Vec<String>) -> i32 {
                 eprintln!("{e}");
                 return 2;
             }
-            BackendChoice::Kernel { order: 5, kernel }
+            if which == "goldschmidt" {
+                // Goldschmidt refinement multiplies are exact wide
+                // products; the --ilm budget has nothing to act on.
+                if ilm_iterations.is_some() {
+                    eprintln!("--ilm only applies to --backend kernel (Taylor/ILM datapath)");
+                    return 2;
+                }
+                BackendChoice::Goldschmidt {
+                    iterations: 3,
+                    kernel,
+                }
+            } else {
+                BackendChoice::Kernel { order: 5, kernel }
+            }
         }
+        "auto" => BackendChoice::Auto,
         "native-scalar" => BackendChoice::NativeScalar {
             order: 5,
             ilm_iterations: None,
@@ -362,12 +380,17 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         },
     };
     // A pinned engine must never be silently ignored: only the kernel
-    // backend takes --simd (the others resolve the lane engine as
+    // datapaths take --simd (the others resolve the lane engine as
     // 'auto', overridable process-wide via TSDIV_SIMD).
     let simd_flag = parsed.get_or("simd", "auto");
-    if simd_flag != "auto" && !matches!(backend, BackendChoice::Kernel { .. }) {
+    if simd_flag != "auto"
+        && !matches!(
+            backend,
+            BackendChoice::Kernel { .. } | BackendChoice::Goldschmidt { .. }
+        )
+    {
         eprintln!(
-            "--simd {simd_flag} only applies to --backend kernel; \
+            "--simd {simd_flag} only applies to --backend kernel|goldschmidt; \
              other backends resolve the lane engine as 'auto' \
              (set TSDIV_SIMD to override process-wide)"
         );

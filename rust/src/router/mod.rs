@@ -1,0 +1,602 @@
+//! Adaptive backend router: picks a kernel datapath per traffic bucket.
+//!
+//! The service has two first-class fast paths — the Taylor/ILM staged
+//! kernel and the Goldschmidt iterate datapath — and which one wins
+//! depends on the traffic: format width changes the per-lane multiply
+//! cost, rounding mode is free but keys the batch buckets, and batch
+//! size moves the fixed per-batch overhead around. [`BackendRouter`]
+//! keeps one scoring cell per `(Format, Rounding, batch-size bucket)`
+//! and answers "which datapath should run this batch?".
+//!
+//! Scores are **per-lane seconds** (lower is better), blended from
+//! three sources in priority order:
+//!
+//! 1. **Bench history.** [`BackendRouter::seed_from_history`] takes the
+//!    rolling `BENCH_HISTORY.jsonl` records (as read by
+//!    [`crate::harness::read_bench_history`]) and seeds each cell from
+//!    the per-key medians of the `coordinator_serve` throughput rows
+//!    (`kernel_div_per_s`, `goldschmidt_div_per_s_{fmt}`), inverting
+//!    div/s into seconds/lane.
+//! 2. **Static cost model.** With no history, cells start from a
+//!    multiply-count prior: the order-5 Taylor pipeline spends ~7 wide
+//!    multiplies per lane (squarings + powering + final round), the
+//!    3-iteration Goldschmidt datapath ~8 (seed products plus two per
+//!    refinement), scaled by [`crate::fp::Format::lane_cost`].
+//! 3. **Online measurement.** Every routed batch reports its wall
+//!    latency back via [`BackendRouter::observe`]; the cell keeps an
+//!    EWMA of per-lane seconds so the table tracks the machine it is
+//!    actually running on, not the machine that wrote the history.
+//!
+//! Selection is epsilon-greedy with two safeguards so a cold or
+//! temporarily-losing datapath keeps getting sampled: any candidate
+//! with fewer than [`COLD_FLOOR`] observed batches in a cell is picked
+//! first (deterministically, lowest candidate index on ties), and the
+//! exploration rate never drops below [`EXPLORATION_FLOOR`] even if a
+//! caller asks for pure exploitation. Randomness comes from the
+//! in-tree [`crate::util::rng::Rng`], so a seeded router is fully
+//! deterministic — the router unit tests and the service identity
+//! tests rely on that.
+//!
+//! The router lives below the coordinator: it depends only on `fp`,
+//! `util`, and `harness`, and the coordinator's `RoutedBackend` wraps
+//! it around concrete backends. `BackendChoice::Auto` (and
+//! `tsdiv serve --backend auto`, or `TSDIV_ROUTER=auto` upgrading the
+//! default) is the user-facing switch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::fp::{Format, Rounding, F32};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Datapaths the router arbitrates between. Indices are dense so the
+/// table and the dispatch counters can be plain arrays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Candidate {
+    /// The Taylor-series staged kernel (`BackendChoice::Kernel`).
+    Kernel = 0,
+    /// The Goldschmidt iterate datapath (`BackendChoice::Goldschmidt`).
+    Goldschmidt = 1,
+}
+
+/// Number of datapaths under arbitration.
+pub const NUM_CANDIDATES: usize = 2;
+
+impl Candidate {
+    /// All candidates, in index order.
+    pub const fn all() -> [Candidate; NUM_CANDIDATES] {
+        [Candidate::Kernel, Candidate::Goldschmidt]
+    }
+
+    /// Stable short name (metrics keys, logs).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Candidate::Kernel => "kernel",
+            Candidate::Goldschmidt => "goldschmidt",
+        }
+    }
+
+    const fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Below this many observed batches in a cell, a candidate is "cold"
+/// and gets picked unconditionally so the table has real data before
+/// epsilon-greedy takes over.
+pub const COLD_FLOOR: u64 = 3;
+
+/// The exploration rate never drops below this, so a datapath that
+/// loses early keeps getting re-sampled as conditions change.
+pub const EXPLORATION_FLOOR: f64 = 0.05;
+
+/// Default epsilon for epsilon-greedy selection.
+const DEFAULT_EPSILON: f64 = 0.1;
+
+/// EWMA smoothing for online per-lane latency updates.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Batch sizes are bucketed by log2, clamped to this many buckets
+/// (lane counts of 2^16 and beyond share the top bucket).
+const NUM_BUCKETS: usize = 17;
+
+const NUM_FORMATS: usize = 4;
+const NUM_ROUNDINGS: usize = 4;
+const NUM_CELLS: usize = NUM_FORMATS * NUM_ROUNDINGS * NUM_BUCKETS;
+
+/// Rough wide-multiply count per lane for the static prior.
+const KERNEL_MULS: f64 = 7.0;
+const GOLDSCHMIDT_MULS: f64 = 8.0;
+/// Pseudo-seconds one wide multiply costs in the static prior. The
+/// absolute scale is irrelevant (only the ratio between candidates
+/// matters until real observations arrive); it is chosen to be in the
+/// same ballpark as measured per-lane times so history-seeded and
+/// prior-seeded cells are comparable.
+const MUL_COST_S: f64 = 2e-9;
+
+#[derive(Clone, Copy, Debug)]
+struct CandStat {
+    /// EWMA of per-lane seconds (lower is better).
+    per_lane: f64,
+    /// Observed batches folded into the EWMA (history seeding leaves
+    /// this at zero so cold-start exploration still runs).
+    samples: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Cell {
+    stats: [CandStat; NUM_CANDIDATES],
+}
+
+struct RouterState {
+    rng: Rng,
+    cells: Vec<Cell>,
+}
+
+/// Per-bucket adaptive scoring table. See the module docs for the
+/// seeding and selection policy.
+pub struct BackendRouter {
+    state: Mutex<RouterState>,
+    dispatches: [AtomicU64; NUM_CANDIDATES],
+    epsilon: f64,
+}
+
+fn format_idx(fmt: Format) -> usize {
+    match (fmt.exp_bits, fmt.frac_bits) {
+        (5, 10) => 0, // f16
+        (8, 7) => 1,  // bf16
+        (8, 23) => 2, // f32
+        _ => 3,       // f64 and custom layouts
+    }
+}
+
+fn rounding_idx(rm: Rounding) -> usize {
+    match rm {
+        Rounding::NearestEven => 0,
+        Rounding::TowardZero => 1,
+        Rounding::TowardPositive => 2,
+        Rounding::TowardNegative => 3,
+    }
+}
+
+fn bucket_idx(lanes: usize) -> usize {
+    let log2 = usize::BITS - lanes.max(1).leading_zeros() - 1;
+    (log2 as usize).min(NUM_BUCKETS - 1)
+}
+
+fn cell_idx(fmt: Format, rm: Rounding, lanes: usize) -> usize {
+    (format_idx(fmt) * NUM_ROUNDINGS + rounding_idx(rm)) * NUM_BUCKETS + bucket_idx(lanes)
+}
+
+/// Static-prior per-lane seconds for `c` on `fmt` (see module docs).
+fn prior_per_lane(c: Candidate, fmt: Format) -> f64 {
+    let muls = match c {
+        Candidate::Kernel => KERNEL_MULS,
+        Candidate::Goldschmidt => GOLDSCHMIDT_MULS,
+    };
+    muls * MUL_COST_S * fmt.lane_cost() as f64 / F32.lane_cost() as f64
+}
+
+impl BackendRouter {
+    /// Router with the default exploration rate, priors from the
+    /// static cost model, and a fixed RNG seed (callers wanting
+    /// varied exploration order pass their own seed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_epsilon(seed, DEFAULT_EPSILON)
+    }
+
+    /// Router with an explicit exploration rate. Clamped to
+    /// [`EXPLORATION_FLOOR`] from below so no configuration can starve
+    /// a candidate forever.
+    pub fn with_epsilon(seed: u64, epsilon: f64) -> Self {
+        let cells = crate::fp::ALL_FORMATS
+            .iter()
+            .flat_map(|&fmt| {
+                (0..NUM_ROUNDINGS * NUM_BUCKETS).map(move |_| Cell {
+                    stats: [
+                        CandStat {
+                            per_lane: prior_per_lane(Candidate::Kernel, fmt),
+                            samples: 0,
+                        },
+                        CandStat {
+                            per_lane: prior_per_lane(Candidate::Goldschmidt, fmt),
+                            samples: 0,
+                        },
+                    ],
+                })
+            })
+            .collect();
+        BackendRouter {
+            state: Mutex::new(RouterState {
+                rng: Rng::new(seed),
+                cells,
+            }),
+            dispatches: [AtomicU64::new(0), AtomicU64::new(0)],
+            epsilon: epsilon.max(EXPLORATION_FLOOR),
+        }
+    }
+
+    /// Overwrite the static priors from rolling bench-history records
+    /// (the parsed lines of `BENCH_HISTORY.jsonl`). Only
+    /// `coordinator_serve` rows contribute; per-key medians of the
+    /// positive finite throughput values are inverted into per-lane
+    /// seconds. The Taylor kernel publishes one f32 throughput key
+    /// (`kernel_div_per_s`), so other formats are scaled by the
+    /// [`Format::lane_cost`] ratio; Goldschmidt publishes per-format
+    /// keys. Seeded cells keep `samples == 0`, so cold-start
+    /// exploration still measures the live machine.
+    pub fn seed_from_history(&self, records: &[Json]) {
+        let serve: Vec<&Json> = records
+            .iter()
+            .filter(|r| r.get("bench").and_then(|b| b.as_str()) == Some("coordinator_serve"))
+            .collect();
+        if serve.is_empty() {
+            return;
+        }
+        let key_median = |key: &str| -> Option<f64> {
+            let vals: Vec<f64> = serve
+                .iter()
+                .filter_map(|r| r.get(key).and_then(|v| v.as_f64()))
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .collect();
+            if vals.is_empty() {
+                None
+            } else {
+                Some(crate::harness::median(&vals))
+            }
+        };
+        let kernel_f32 = key_median("kernel_div_per_s");
+        let mut state = self.state.lock().unwrap();
+        for &fmt in crate::fp::ALL_FORMATS.iter() {
+            let kernel = kernel_f32
+                .map(|per_s| F32.lane_cost() as f64 / (per_s * fmt.lane_cost() as f64));
+            let gold = key_median(&format!("goldschmidt_div_per_s_{}", fmt.name()))
+                .map(|per_s| 1.0 / per_s);
+            let fi = format_idx(fmt);
+            for cell in state.cells[fi * NUM_ROUNDINGS * NUM_BUCKETS..]
+                .iter_mut()
+                .take(NUM_ROUNDINGS * NUM_BUCKETS)
+            {
+                if let Some(s) = kernel {
+                    cell.stats[Candidate::Kernel.idx()].per_lane = s;
+                }
+                if let Some(s) = gold {
+                    cell.stats[Candidate::Goldschmidt.idx()].per_lane = s;
+                }
+            }
+        }
+    }
+
+    /// Pick the datapath for one batch. Cold candidates (fewer than
+    /// [`COLD_FLOOR`] samples in this cell) are drained first in
+    /// index order; after that, epsilon-greedy over the per-lane EWMA.
+    pub fn pick(&self, fmt: Format, rm: Rounding, lanes: usize) -> Candidate {
+        let mut state = self.state.lock().unwrap();
+        let explore = state.rng.f64() < self.epsilon;
+        let cell = &state.cells[cell_idx(fmt, rm, lanes)];
+        let coldest = Candidate::all()
+            .into_iter()
+            .min_by_key(|c| cell.stats[c.idx()].samples)
+            .unwrap();
+        let choice = if cell.stats[coldest.idx()].samples < COLD_FLOOR {
+            coldest
+        } else if explore {
+            // Uniform over candidates; `below` keeps determinism tied
+            // to the seeded RNG stream.
+            let mut rng_pick = Candidate::Kernel;
+            let n = state.rng.below(NUM_CANDIDATES as u64) as usize;
+            for c in Candidate::all() {
+                if c.idx() == n {
+                    rng_pick = c;
+                }
+            }
+            rng_pick
+        } else {
+            Candidate::all()
+                .into_iter()
+                .min_by(|a, b| {
+                    cell.stats[a.idx()]
+                        .per_lane
+                        .total_cmp(&cell.stats[b.idx()].per_lane)
+                })
+                .unwrap()
+        };
+        drop(state);
+        self.dispatches[choice.idx()].fetch_add(1, Ordering::Relaxed);
+        choice
+    }
+
+    /// Fold one measured batch back into the table.
+    pub fn observe(&self, fmt: Format, rm: Rounding, lanes: usize, c: Candidate, elapsed: Duration) {
+        if lanes == 0 {
+            return;
+        }
+        let per_lane = elapsed.as_secs_f64() / lanes as f64;
+        if !per_lane.is_finite() {
+            return;
+        }
+        let mut state = self.state.lock().unwrap();
+        let stat = &mut state.cells[cell_idx(fmt, rm, lanes)].stats[c.idx()];
+        if stat.samples == 0 {
+            stat.per_lane = per_lane;
+        } else {
+            stat.per_lane += EWMA_ALPHA * (per_lane - stat.per_lane);
+        }
+        stat.samples += 1;
+    }
+
+    /// Total batches routed to `c` since construction.
+    pub fn dispatches(&self, c: Candidate) -> u64 {
+        self.dispatches[c.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Fraction of cells with at least one observed sample where `c`
+    /// currently holds the best (lowest) per-lane score. `0.0` when
+    /// nothing has been observed yet.
+    pub fn win_rate(&self, c: Candidate) -> f64 {
+        let state = self.state.lock().unwrap();
+        let mut measured = 0usize;
+        let mut wins = 0usize;
+        for cell in state.cells.iter() {
+            if cell.stats.iter().all(|s| s.samples == 0) {
+                continue;
+            }
+            measured += 1;
+            let best = Candidate::all()
+                .into_iter()
+                .min_by(|a, b| {
+                    cell.stats[a.idx()]
+                        .per_lane
+                        .total_cmp(&cell.stats[b.idx()].per_lane)
+                })
+                .unwrap();
+            if best == c {
+                wins += 1;
+            }
+        }
+        if measured == 0 {
+            0.0
+        } else {
+            wins as f64 / measured as f64
+        }
+    }
+}
+
+impl std::fmt::Debug for BackendRouter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BackendRouter")
+            .field("epsilon", &self.epsilon)
+            .field("kernel_dispatches", &self.dispatches(Candidate::Kernel))
+            .field(
+                "goldschmidt_dispatches",
+                &self.dispatches(Candidate::Goldschmidt),
+            )
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{F16, F64};
+    use crate::util::json::Json;
+
+    fn warm(router: &BackendRouter, fmt: Format, rm: Rounding, lanes: usize) {
+        // Drain the cold floor for both candidates with neutral equal
+        // timings so epsilon-greedy is in charge afterwards.
+        for _ in 0..COLD_FLOOR {
+            for c in Candidate::all() {
+                router.observe(fmt, rm, lanes, c, Duration::from_micros(10));
+            }
+        }
+    }
+
+    #[test]
+    fn cold_start_drains_both_candidates_before_scoring() {
+        let router = BackendRouter::new(7);
+        let mut counts = [0u64; NUM_CANDIDATES];
+        for _ in 0..(2 * COLD_FLOOR) {
+            let c = router.pick(F32, Rounding::NearestEven, 64);
+            counts[c.idx()] += 1;
+            // Report wildly lopsided timings: Goldschmidt 100x slower.
+            let us = if c == Candidate::Kernel { 1 } else { 100 };
+            router.observe(F32, Rounding::NearestEven, 64, c, Duration::from_micros(us));
+        }
+        // Despite Goldschmidt losing every observation, the cold floor
+        // forces an even split of the first 2*COLD_FLOOR picks.
+        assert_eq!(counts[Candidate::Kernel.idx()], COLD_FLOOR);
+        assert_eq!(counts[Candidate::Goldschmidt.idx()], COLD_FLOOR);
+    }
+
+    #[test]
+    fn static_prior_prefers_kernel_when_no_history() {
+        // Fewer modelled multiplies -> kernel scores lower in every
+        // warm cell that has only neutral observations layered on the
+        // prior... but the prior itself is what we check here: a
+        // freshly constructed router ranks kernel ahead of goldschmidt
+        // in its table for every format.
+        for &fmt in crate::fp::ALL_FORMATS.iter() {
+            assert!(
+                prior_per_lane(Candidate::Kernel, fmt)
+                    < prior_per_lane(Candidate::Goldschmidt, fmt),
+                "static prior must favour the kernel for {}",
+                fmt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn observations_flip_the_greedy_choice() {
+        let router = BackendRouter::with_epsilon(11, EXPLORATION_FLOOR);
+        warm(&router, F32, Rounding::TowardZero, 256);
+        // Now make Goldschmidt decisively faster in this cell.
+        for _ in 0..20 {
+            router.observe(
+                F32,
+                Rounding::TowardZero,
+                256,
+                Candidate::Goldschmidt,
+                Duration::from_micros(1),
+            );
+            router.observe(
+                F32,
+                Rounding::TowardZero,
+                256,
+                Candidate::Kernel,
+                Duration::from_micros(50),
+            );
+        }
+        let mut gold = 0;
+        let total = 200;
+        for _ in 0..total {
+            if router.pick(F32, Rounding::TowardZero, 256) == Candidate::Goldschmidt {
+                gold += 1;
+            }
+        }
+        // Greedy picks goldschmidt except for the epsilon exploration
+        // slice (~5% at the floor, split between both candidates).
+        assert!(gold > total * 8 / 10, "goldschmidt won {gold}/{total}");
+    }
+
+    #[test]
+    fn epsilon_exploration_floor_keeps_sampling_the_loser() {
+        // Even with epsilon "disabled" (0.0 clamps up to the floor),
+        // the losing candidate must still be picked occasionally.
+        let router = BackendRouter::with_epsilon(23, 0.0);
+        warm(&router, F64, Rounding::NearestEven, 1024);
+        for _ in 0..20 {
+            router.observe(
+                F64,
+                Rounding::NearestEven,
+                1024,
+                Candidate::Kernel,
+                Duration::from_micros(1),
+            );
+            router.observe(
+                F64,
+                Rounding::NearestEven,
+                1024,
+                Candidate::Goldschmidt,
+                Duration::from_micros(50),
+            );
+        }
+        let mut loser_picks = 0;
+        for _ in 0..2000 {
+            if router.pick(F64, Rounding::NearestEven, 1024) == Candidate::Goldschmidt {
+                loser_picks += 1;
+            }
+        }
+        assert!(
+            loser_picks > 0,
+            "exploration floor must keep sampling the cold/losing backend"
+        );
+        // But it stays a minority: exploration, not thrashing.
+        assert!(loser_picks < 400, "loser picked {loser_picks}/2000");
+    }
+
+    #[test]
+    fn seeded_rng_makes_pick_sequences_deterministic() {
+        let run = || {
+            let router = BackendRouter::new(99);
+            warm(&router, F16, Rounding::TowardPositive, 32);
+            (0..64)
+                .map(|_| router.pick(F16, Rounding::TowardPositive, 32).idx())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn history_seeding_prefers_the_measured_winner() {
+        let mut rec = Json::obj();
+        rec.set("bench", "coordinator_serve".into());
+        // Goldschmidt measured 4x the kernel's throughput on f32.
+        rec.set("kernel_div_per_s", Json::Num(1.0e8));
+        rec.set("goldschmidt_div_per_s_f32", Json::Num(4.0e8));
+        let router = BackendRouter::with_epsilon(5, EXPLORATION_FLOOR);
+        router.seed_from_history(&[rec]);
+        // Cold floor still applies (samples stay 0 after seeding), so
+        // warm the cell with *equal* observations... except observe()
+        // overwrites the seed on the first sample. To check the seeded
+        // table directly, inspect win_rate after a single neutral
+        // observation pair would destroy the seed — so instead verify
+        // via the greedy path: drain the cold floor by picks alone
+        // without observations (samples stay 0, cold rule keeps
+        // alternating), then confirm the seeded ordering via win_rate
+        // over a hand-marked cell.
+        let state = router.state.lock().unwrap();
+        let cell = &state.cells[cell_idx(F32, Rounding::NearestEven, 64)];
+        assert!(
+            cell.stats[Candidate::Goldschmidt.idx()].per_lane
+                < cell.stats[Candidate::Kernel.idx()].per_lane,
+            "history seeding must rank the measured winner first"
+        );
+        // Formats without their own kernel key scale from the f32 row.
+        let f64_cell = &state.cells[cell_idx(F64, Rounding::NearestEven, 64)];
+        assert!(
+            f64_cell.stats[Candidate::Kernel.idx()].per_lane
+                > cell.stats[Candidate::Kernel.idx()].per_lane,
+            "wider formats must be priced slower from the same f32 row"
+        );
+    }
+
+    #[test]
+    fn non_serve_records_are_ignored_and_fallback_is_the_prior() {
+        let mut rec = Json::obj();
+        rec.set("bench", "kernel_formats".into());
+        rec.set("kernel_div_per_s", Json::Num(1.0));
+        let router = BackendRouter::new(3);
+        router.seed_from_history(&[rec]);
+        let state = router.state.lock().unwrap();
+        let cell = &state.cells[cell_idx(F32, Rounding::NearestEven, 8)];
+        assert_eq!(
+            cell.stats[Candidate::Kernel.idx()].per_lane,
+            prior_per_lane(Candidate::Kernel, F32),
+            "non-serve records must not disturb the static prior"
+        );
+    }
+
+    #[test]
+    fn win_rate_and_dispatch_counters_track_observations() {
+        let router = BackendRouter::new(1);
+        assert_eq!(router.win_rate(Candidate::Kernel), 0.0);
+        assert_eq!(router.dispatches(Candidate::Kernel), 0);
+        router.observe(
+            F32,
+            Rounding::NearestEven,
+            128,
+            Candidate::Kernel,
+            Duration::from_micros(1),
+        );
+        router.observe(
+            F32,
+            Rounding::NearestEven,
+            128,
+            Candidate::Goldschmidt,
+            Duration::from_micros(9),
+        );
+        assert_eq!(router.win_rate(Candidate::Kernel), 1.0);
+        assert_eq!(router.win_rate(Candidate::Goldschmidt), 0.0);
+        let c = router.pick(F32, Rounding::NearestEven, 128);
+        assert_eq!(router.dispatches(c), 1);
+    }
+
+    #[test]
+    fn buckets_split_batch_sizes_by_log2() {
+        assert_eq!(bucket_idx(1), 0);
+        assert_eq!(bucket_idx(2), 1);
+        assert_eq!(bucket_idx(3), 1);
+        assert_eq!(bucket_idx(4), 2);
+        assert_eq!(bucket_idx(1 << 16), NUM_BUCKETS - 1);
+        assert_eq!(bucket_idx(usize::MAX), NUM_BUCKETS - 1);
+        // Distinct buckets are distinct cells for the same key.
+        assert_ne!(
+            cell_idx(F32, Rounding::NearestEven, 2),
+            cell_idx(F32, Rounding::NearestEven, 4)
+        );
+        // And zero lanes does not panic.
+        assert_eq!(bucket_idx(0), 0);
+    }
+}

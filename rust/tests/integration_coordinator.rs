@@ -5,11 +5,13 @@
 use std::time::Duration;
 
 use tsdiv::coordinator::{
-    BackendChoice, DivRequest, DivisionService, ServiceConfig, SubmitError,
+    Backend, BackendChoice, DivRequest, DivisionService, GoldschmidtBackend, KernelBackend,
+    ServiceConfig, SubmitError,
 };
 use tsdiv::divider::{longdiv::LongDivider, Divider};
 use tsdiv::fp::{unpack, Class, Rounding, ALL_FORMATS};
 use tsdiv::harness::{gen_bits_batch, special_patterns};
+use tsdiv::kernel::KernelConfig;
 use tsdiv::runtime::artifacts_available;
 use tsdiv::util::rng::Rng;
 
@@ -240,9 +242,14 @@ fn sharded_service_equivalent_to_single_shard() {
                 queue_capacity: 1024,
                 ..ServiceConfig::default()
             },
-            BackendChoice::Native {
+            // Pinned Kernel, not the Native default: this test's whole
+            // claim is that shard count never changes bits, so the
+            // backend must be identical across both runs even when CI
+            // exports TSDIV_ROUTER=auto (which upgrades only the Native
+            // default, and whose per-batch picks are timing-dependent).
+            BackendChoice::Kernel {
                 order: 5,
-                ilm_iterations: None,
+                kernel: KernelConfig::default(),
             },
         )
         .unwrap();
@@ -276,6 +283,63 @@ fn sharded_service_equivalent_to_single_shard() {
         run(4),
         "shards=4 must be bit-identical to shards=1"
     );
+}
+
+/// The router's identity contract (shards-style): `Auto` may hand any
+/// batch to either datapath, but the response content must be
+/// **bit-identical to one of the fixed backends it routes between** —
+/// routing decides *who* computes, never *what* is computed. Every
+/// request here is small enough (33 lanes < max_batch) to travel as one
+/// whole batch, so each response is exactly one datapath's output.
+#[test]
+fn auto_router_responses_bit_identical_to_a_fixed_backend() {
+    let svc = DivisionService::start(
+        ServiceConfig {
+            workers: 4,
+            max_batch: 128,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 1024,
+            ..ServiceConfig::default()
+        },
+        BackendChoice::Auto,
+    )
+    .unwrap();
+    // The two fixed datapaths `Auto` routes between, at the router's
+    // own configurations (see `RoutedBackend::new`).
+    let mut kern = KernelBackend::new(5, KernelConfig::default()).unwrap();
+    let mut gs = GoldschmidtBackend::new(3, KernelConfig::default()).unwrap();
+    let mut checked = 0usize;
+    for (fi, fmt) in ALL_FORMATS.into_iter().enumerate() {
+        for (ri, rm) in Rounding::ALL.into_iter().enumerate() {
+            for rep in 0..3u64 {
+                let seed = 0xA0 | ((fi as u64) << 6) | ((ri as u64) << 3) | rep;
+                let (a, b) = gen_bits_batch(fmt, 33, 8, seed);
+                let resp = svc
+                    .divide_request_blocking(DivRequest::new(fmt, rm, a.clone(), b.clone()))
+                    .unwrap();
+                let qk = kern.divide(&a, &b, fmt, rm).unwrap();
+                let qg = gs.divide(&a, &b, fmt, rm).unwrap();
+                assert!(
+                    resp.bits == qk || resp.bits == qg,
+                    "{}/{rm:?} rep {rep}: routed response matches neither \
+                     the Taylor kernel nor the Goldschmidt datapath",
+                    fmt.name()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert_eq!(checked, 48);
+    let m = svc.metrics();
+    // Every batch was dispatched through the router, and the counters
+    // saw all of them.
+    assert_eq!(
+        m.router_kernel_batches + m.router_goldschmidt_batches,
+        m.batches,
+        "router dispatch counters must cover every batch"
+    );
+    assert_eq!(m.failures, 0);
+    svc.shutdown();
 }
 
 /// Many submitter threads race a mid-flight `close()`: every ticket

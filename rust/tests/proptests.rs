@@ -453,6 +453,96 @@ fn prop_kernel_backend_vs_gold_all_formats_and_roundings() {
     });
 }
 
+#[test]
+fn prop_goldschmidt_backend_vs_kernel_and_gold_all_formats() {
+    // Three-way differential over the two first-class datapaths and the
+    // exactly-rounded reference, across formats × rounding modes ×
+    // tile widths:
+    //
+    // * the batched Goldschmidt backend is **bit-identical per lane**
+    //   to the scalar `GoldschmidtDivider` oracle (same iterate
+    //   arithmetic, any tiling);
+    // * specials (resolved by the shared prepare() path) are
+    //   bit-identical to gold on BOTH datapaths;
+    // * finite lanes stay inside each datapath's documented band vs
+    //   gold (≤ 1 ulp in the ≤ 24-bit formats, ≤ 2 ulp at f64) — the
+    //   router may hand a batch to either datapath, so both bands must
+    //   hold on the same operands.
+    use tsdiv::coordinator::{Backend, GoldschmidtBackend, KernelBackend};
+    use tsdiv::divider::goldschmidt::GoldschmidtDivider;
+    use tsdiv::fp::{ulp_diff, ALL_FORMATS};
+    use tsdiv::harness::special_patterns;
+    use tsdiv::kernel::KernelConfig;
+    forall(
+        Config::named("goldschmidt vs kernel vs gold (longdiv)").cases(24),
+        |d| {
+            let fmt = ALL_FORMATS[d.choose_idx(4)];
+            let rm = Rounding::ALL[d.choose_idx(4)];
+            let tile = [1usize, 3, 8, 13][d.choose_idx(4)];
+            let n = d.range_u64(1, 60) as usize;
+            let specials = special_patterns(fmt);
+            let mut a = Vec::with_capacity(n);
+            let mut b = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut ab = d.u64() & fmt.width_mask();
+                let mut bb = d.u64() & fmt.width_mask();
+                match i % 4 {
+                    0 => ab = specials[d.choose_idx(specials.len())],
+                    1 => bb = specials[d.choose_idx(specials.len())],
+                    _ => {}
+                }
+                a.push(ab);
+                b.push(bb);
+            }
+            let cfg = KernelConfig {
+                tile,
+                ..KernelConfig::default()
+            };
+            let mut gs = GoldschmidtBackend::new(3, cfg).map_err(|e| e.to_string())?;
+            let mut kern = KernelBackend::new(5, cfg).map_err(|e| e.to_string())?;
+            let mut oracle = GoldschmidtDivider::paper_default();
+            let mut gold = LongDivider::new();
+            let qg = gs.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
+            let qk = kern.divide(&a, &b, fmt, rm).map_err(|e| e.to_string())?;
+            let band = if fmt == F64 { 2 } else { 1 };
+            for i in 0..n {
+                check_that!(
+                    qg[i] == oracle.div_bits(a[i], b[i], fmt, rm),
+                    "lane {i}: batched goldschmidt differs from the scalar oracle \
+                     ({}/{rm:?}, tile {tile})",
+                    fmt.name()
+                );
+                let g = gold.div_bits(a[i], b[i], fmt, rm);
+                let special = matches!(
+                    tsdiv::divider::prepare(a[i], b[i], fmt),
+                    tsdiv::divider::Prepared::Done(_)
+                );
+                for (label, q) in [("goldschmidt", qg[i]), ("kernel", qk[i])] {
+                    match ulp_diff(q, g, fmt) {
+                        Some(u) if special => check_that!(
+                            u == 0,
+                            "{label} special lane {i} not bit-identical to gold ({}/{rm:?})",
+                            fmt.name()
+                        ),
+                        Some(u) => check_that!(
+                            u <= band,
+                            "{label} lane {i}: {u} ulp from gold ({}/{rm:?})",
+                            fmt.name()
+                        ),
+                        None => check_that!(
+                            unpack(q, fmt).class == Class::NaN
+                                && unpack(g, fmt).class == Class::NaN,
+                            "{label} NaN mismatch at lane {i} ({}/{rm:?})",
+                            fmt.name()
+                        ),
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Cost-weighted batch assembly (the adaptive batcher's tentpole
 /// invariants), over random mixed-format push streams:
 ///
