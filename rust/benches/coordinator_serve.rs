@@ -168,9 +168,9 @@ fn main() {
     // loops), the kernel behind divisor grouping (Native), and the
     // per-lane scalar loop (NativeScalar).
     // Force the vector engine when available so the simd row can never
-    // silently measure the scalar fallback; without AVX2 the row pins
-    // (and labels) the scalar engine and the simd/autovec ratio is not
-    // recorded.
+    // silently measure the scalar fallback; on a host without a vector
+    // engine the row pins (and labels) the scalar engine and the
+    // simd/autovec ratio is not recorded.
     let simd_on = tsdiv::simd::simd_available();
     let kernel_simd = if simd_on {
         tsdiv::simd::SimdChoice::Forced
@@ -243,7 +243,7 @@ fn main() {
     if simd_on {
         println!("kernel simd/autovec  throughput:   {simd_over_autovec:.2}x\n");
     } else {
-        println!("kernel simd/autovec  throughput:   n/a (no AVX2 on this host)\n");
+        println!("kernel simd/autovec  throughput:   n/a (no vector engine on this host)\n");
     }
 
     // Multi-format traffic through the typed request API: homogeneous

@@ -238,17 +238,21 @@ fn main() {
     // datapaths: the NativeScalar baseline (per-lane div_bits loop), the
     // kernel on the pinned scalar lane engine ("autovec" — the stage
     // loops as the compiler vectorizes them), and the kernel on the
-    // auto-resolved engine (explicit SIMD where the host has AVX2) —
+    // auto-resolved engine (explicit SIMD where the host has a vector
+    // engine — AVX-512, AVX2 or NEON, widest detected) —
     // the Simd-vs-Autovec-vs-NativeScalar comparison the lane engine is
     // about. All three are asserted bit-identical on the benchmarked
     // operands.
     println!();
     use tsdiv::coordinator::{Backend, KernelBackend, ScalarNativeBackend};
     use tsdiv::simd::{simd_available, SimdChoice};
-    // Force the vector engine when the host has it — a silent scalar
+    // Force the vector engine when the host has one — a silent scalar
     // fallback must never masquerade as a SIMD measurement; hosts
-    // without AVX2 measure (and label) the scalar engine instead, and
-    // the simd-vs-autovec ratio is only recorded when SIMD really ran.
+    // without a vector engine measure (and label) the scalar engine
+    // instead, and the simd-vs-autovec ratio is only recorded when SIMD
+    // really ran. The resolved engine name rides in the datapoint as
+    // `simd_engine`, so the history records which ISA each CI box
+    // actually measured.
     let simd_on = simd_available();
     let simd_choice = if simd_on {
         SimdChoice::Forced
@@ -278,9 +282,9 @@ fn main() {
         Align::Right,
         Align::Right,
     ]);
-    // simd column: None on hosts without AVX2 — there the "simd"
-    // backend would be the autovec backend again, so re-timing it would
-    // only produce scalar-vs-scalar noise under a SIMD label.
+    // simd column: None on hosts without a vector engine — there the
+    // "simd" backend would be the autovec backend again, so re-timing
+    // it would only produce scalar-vs-scalar noise under a SIMD label.
     let mut fmt_rows: Vec<(String, f64, f64, Option<f64>)> = Vec::new();
     for fmt in tsdiv::fp::ALL_FORMATS {
         let (fa, fb) = tsdiv::harness::gen_bits_batch(fmt, 4096, 8, 21);
@@ -411,6 +415,60 @@ fn main() {
     }
     t.print();
 
+    // ILM priority-encoder pass, per detected engine: one
+    // `priority_encode_batch` call over a 4096-lane operand array per
+    // timed iteration — the pass the ILM correction recursion runs once
+    // per stage, vectorized via `vplzcntq` on AVX-512 and the `vclzq`
+    // half-select on NEON (AVX2 shares the scalar chain). Zero lanes
+    // are salted in like settled ILM lanes. Each engine's rate lands in
+    // the datapoint as `pe_batch_per_s_{engine}` — per_s keys, so the
+    // direction-aware trend gate guards every engine this box detects —
+    // and every engine is asserted bit-identical to scalar on the
+    // benchmarked operands.
+    println!();
+    let mut t = Table::new(
+        "ILM priority-encoder pass (4096 lanes) by engine",
+        &["engine", "Mlanes/s", "vs scalar"],
+    )
+    .aligns(&[Align::Left, Align::Right, Align::Right]);
+    let pe_ops: Vec<u64> = {
+        let mut rng = tsdiv::util::rng::Rng::new(77);
+        (0..4096usize)
+            .map(|i| {
+                if i % 7 == 0 {
+                    0
+                } else {
+                    rng.next_u64() >> (rng.below(8) * 8)
+                }
+            })
+            .collect()
+    };
+    let mut k_ref = vec![0u32; pe_ops.len()];
+    let mut r_ref = vec![0u64; pe_ops.len()];
+    tsdiv::simd::Engine::Scalar.priority_encode_batch(&pe_ops, &mut k_ref, &mut r_ref);
+    let mut pe_rows: Vec<(&'static str, f64)> = Vec::new();
+    for eng in tsdiv::simd::engines_available() {
+        let mut k = vec![0u32; pe_ops.len()];
+        let mut r = vec![0u64; pe_ops.len()];
+        let m = timed_section(&format!("pe batch [{}] × 4096", eng.name()), || {
+            eng.priority_encode_batch(&pe_ops, &mut k, &mut r);
+            tsdiv::util::black_box(r[0]);
+        });
+        assert_eq!(k, k_ref, "{}: pe k differs from scalar", eng.name());
+        assert_eq!(r, r_ref, "{}: pe r differs from scalar", eng.name());
+        pe_rows.push((eng.name(), m.items_per_sec(4096)));
+    }
+    let scalar_pe_rate = pe_rows[0].1;
+    for &(name, rate) in &pe_rows {
+        let rel = if scalar_pe_rate > 0.0 {
+            format!("{:.2}x", rate / scalar_pe_rate)
+        } else {
+            "n/a".into()
+        };
+        t.row(&[name.to_string(), format!("{:.2}", rate / 1e6), rel]);
+    }
+    t.print();
+
     // Record the comparison for the bench trajectory.
     let mut j = Json::obj();
     j.set("bench", "divider_throughput".into());
@@ -419,18 +477,28 @@ fn main() {
     for &(tile, rate) in &tile_rows {
         j.set(&format!("kernel_tile{tile}_div_per_s_f32"), rate.into());
     }
+    for &(name, rate) in &pe_rows {
+        j.set(&format!("pe_batch_per_s_{name}"), rate.into());
+    }
     for (name, s, av, k) in &fmt_rows {
         j.set(&format!("scalar_div_per_s_{name}"), (*s).into());
         j.set(&format!("kernel_autovec_div_per_s_{name}"), (*av).into());
-        // Without AVX2 the kernel's production engine IS the autovec
-        // configuration; the simd-vs-autovec ratio is only recorded
-        // when the vector engine actually ran — a scalar-vs-scalar
-        // ~1.0 would read as "no SIMD win".
+        // Without a vector engine the kernel's production engine IS the
+        // autovec configuration; the simd-vs-autovec ratio is only
+        // recorded when a vector engine actually ran — a
+        // scalar-vs-scalar ~1.0 would read as "no SIMD win".
         let keff = k.unwrap_or(*av);
         j.set(&format!("kernel_div_per_s_{name}"), keff.into());
         j.set(&format!("kernel_over_scalar_{name}"), (keff / s).into());
         if let Some(k) = k {
             j.set(&format!("simd_over_autovec_{name}"), (k / av).into());
+            // AVX-512 boxes additionally record the wide engine under
+            // its own per-format key, so the 512-bit rows build their
+            // own gated trajectory (on AVX2-only boxes these keys are
+            // simply absent and the trend gate prints n/a).
+            if simd_engine.name() == "avx512" {
+                j.set(&format!("kernel_simd512_div_per_s_{name}"), (*k).into());
+            }
         }
     }
     let mut arr = Vec::new();

@@ -110,10 +110,10 @@ impl BackendChoice {
             BackendChoice::Native { order, .. } | BackendChoice::NativeScalar { order, .. } => {
                 // These backends resolve their lane engine as `Auto`,
                 // which honors the TSDIV_SIMD process override —
-                // pre-flight it here so `forced` on a host without AVX2
-                // rejects the service start instead of killing every
-                // worker at build time (waiters would hang on a service
-                // with zero workers).
+                // pre-flight it here so `forced` on a host without a
+                // vector engine rejects the service start instead of
+                // killing every worker at build time (waiters would
+                // hang on a service with zero workers).
                 crate::simd::SimdChoice::Auto.validate()?;
                 validate_order(*order)
             }
@@ -128,8 +128,9 @@ impl BackendChoice {
             BackendChoice::Auto => {
                 // The routed backend builds both datapaths with the
                 // default kernel config; pre-flight the same engine
-                // resolution so `TSDIV_SIMD=forced` on a host without
-                // AVX2 rejects the start instead of killing workers.
+                // resolution so `TSDIV_SIMD=forced` on a host without a
+                // vector engine rejects the start instead of killing
+                // workers.
                 KernelConfig::default().validate()
             }
             BackendChoice::Gold => Ok(()),
@@ -225,9 +226,9 @@ fn validate_order(order: u32) -> Result<()> {
 /// explicit `KernelConfig::simd` (which ignores the env), the
 /// Native/NativeScalar backends pass `Auto`, which honors the
 /// process-wide `TSDIV_SIMD` override with its hard-error contract —
-/// `forced` on a host without AVX2 fails construction (and, via
-/// `BackendChoice::validate`, the service start) instead of silently
-/// measuring the scalar engine.
+/// `forced` on a host without a vector engine fails construction (and,
+/// via `BackendChoice::validate`, the service start) instead of
+/// silently measuring the scalar engine.
 fn native_divider(
     order: u32,
     ilm_iterations: Option<u32>,
@@ -906,6 +907,14 @@ mod tests {
             .unwrap_err()
             .to_string();
             assert!(err.contains("simd"), "{err}");
+            // The rejection must name what this architecture is
+            // actually missing (AVX-512/AVX2 on x86_64, NEON on
+            // aarch64) — not hard-code any single extension.
+            assert!(
+                err.contains(crate::simd::forced_requirement()),
+                "error '{err}' must quote '{}'",
+                crate::simd::forced_requirement()
+            );
         }
     }
 

@@ -140,8 +140,11 @@ pub fn ilm_mul_fixed(a: u64, b: u64, frac_bits: u32, iterations: u32) -> u64 {
 /// odd-power stage of the [`crate::kernel`] pipeline, restructured for
 /// the explicit lane engine ([`crate::simd`]). Each correction **stage**
 /// runs over the whole tile: the priority-encoder inner loop is one
-/// [`Engine::priority_encode_batch`] pass per operand array
-/// (branch-light, lane-parallel), followed by the eq-24 assembly. Per
+/// [`Engine::priority_encode_batch`] pass per operand array —
+/// branch-light, lane-parallel, and genuinely vectorized on the
+/// engines with a vector leading-one detector (`vplzcntq` on AVX-512,
+/// the `vclzq` half-select on NEON) — followed by the eq-24 assembly.
+/// Per
 /// lane the executed operation sequence is exactly [`ilm_mul`]'s —
 /// settled lanes (a residue hit zero) skip their remaining stages like
 /// the scalar early-out — so results are bit-identical per lane; the

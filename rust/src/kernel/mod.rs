@@ -7,8 +7,9 @@
 //! software model executed that pipeline one lane at a time inside
 //! `TaylorDivider::div_bits_batch`; here each stage instead runs over
 //! whole lane arrays in fixed-width tiles, and the stage loops execute
-//! on an **explicit lane engine** ([`crate::simd`]: AVX2 when selected,
-//! a scalar-unrolled fallback otherwise — `KernelConfig::simd` picks),
+//! on an **explicit lane engine** ([`crate::simd`]: AVX-512, AVX2 or
+//! NEON when selected — widest detected wins — and a scalar-unrolled
+//! fallback otherwise; `KernelConfig::simd` picks),
 //! so the lane parallelism is guaranteed, not an autovectorization hope:
 //!
 //! ```text
@@ -110,8 +111,10 @@ impl Default for KernelConfig {
 impl KernelConfig {
     /// Reject configurations that could only fail later inside a worker
     /// thread (mirrors `ServiceConfig::validate`). A `Forced` SIMD
-    /// choice on a host without AVX2 is rejected here, so a misdeployed
-    /// service fails its start call instead of its first batch.
+    /// choice on a host without a vector engine is rejected here (the
+    /// error names the missing features for this architecture), so a
+    /// misdeployed service fails its start call instead of its first
+    /// batch.
     pub fn validate(&self) -> Result<()> {
         if self.tile == 0 {
             bail!("kernel config: tile must be ≥ 1 lane");
@@ -493,8 +496,9 @@ mod tests {
         // ROADMAP item e: one divide_batch call spanning many seed
         // tiles stages the PLA edge table once and reuses it per tile —
         // the forced-SIMD engine must equal the forced-scalar engine
-        // bit for bit over that whole call (AVX2 exercised when the
-        // host has it), and both must equal the scalar datapath.
+        // bit for bit over that whole call (the widest vector engine
+        // exercised when the host has one), and both must equal the
+        // scalar datapath.
         let cfg = TaylorConfig::paper_default(60);
         let mut rng = Rng::new(2026);
         // 131 lanes at tile 8 → 17 tiles in one call, tail included;

@@ -5,8 +5,8 @@
 //! the whole point of the kernel layout (see the module docs of
 //! [`super`]). The seed and power stages additionally run on an explicit
 //! lane engine ([`crate::simd::Engine`]): the per-op lane loops are
-//! vector ops (AVX2 when selected, scalar-unrolled otherwise) instead of
-//! autovectorization hopes. The per-lane arithmetic is copied
+//! vector ops (AVX-512/AVX2/NEON when selected, scalar-unrolled
+//! otherwise) instead of autovectorization hopes. The per-lane arithmetic is copied
 //! operation-for-operation from the scalar datapath
 //! ([`crate::taylor::reciprocal_fast`] and `TaylorDivider::div_bits`),
 //! so results are bit-identical; only the loop nesting differs.
@@ -50,8 +50,9 @@ pub fn plan(a: &[u64], b: &[u64], fmt: Format, shift: u32, lanes: &mut LanePlan,
 /// lane engine. The compare tree runs as an edge-count pass over the
 /// **pre-staged** edge table (`edge_cache`, built once per
 /// `divide_batch` call in [`super::KernelScratch`] from `table`'s
-/// edges), so the AVX2 bias/broadcast setup is not repeated per tile —
-/// see [`SegmentTable::seed_batch_with`].
+/// edges), so the AVX2 bias/broadcast setup is not repeated per tile
+/// (AVX-512 and NEON compare unsigned lanes natively and read the
+/// cache's raw edges) — see [`SegmentTable::seed_batch_with`].
 pub fn seed(
     eng: Engine,
     table: &SegmentTable,

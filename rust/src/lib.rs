@@ -19,8 +19,9 @@
 //!   (plan → seed → power → mul_round in fixed-width lane tiles) shared
 //!   by the batch API and the service backends;
 //! * [`simd`] — the explicit lane engine under the kernel's stage loops
-//!   (`SimdChoice`: auto/forced/scalar; scalar-unrolled fallback + AVX2
-//!   behind runtime detection, bit-identical by construction);
+//!   (`SimdChoice`: auto/forced/scalar; scalar-unrolled fallback plus
+//!   AVX2, AVX-512 and NEON backends behind runtime detection — widest
+//!   wins — all bit-identical by construction);
 //! * [`hw`] — gate-level cost model reproducing the hardware claims
 //!   (Fig 4 vs Fig 5, "< 50 % hardware");
 //! * [`analysis`] — ULP/relative-error sweeps used by the benches;

@@ -753,8 +753,9 @@ fn cmd_selftest() -> i32 {
             .collect();
         let mut scalar_eng = TaylorDivider::paper_exact();
         let mut auto_eng = TaylorDivider::paper_exact();
-        // A rejected engine selection (TSDIV_SIMD=forced without AVX2)
-        // fails this check; a health check never aborts the report.
+        // A rejected engine selection (TSDIV_SIMD=forced on a host
+        // without a vector engine) fails this check; a health check
+        // never aborts the report.
         match (
             scalar_eng.set_batch_simd(SimdChoice::Scalar),
             auto_eng.set_batch_simd(SimdChoice::Auto),

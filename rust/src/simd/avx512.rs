@@ -1,0 +1,255 @@
+//! AVX-512 implementations of the lane-engine ops — 8 × u64 lanes per
+//! `__m512i`, bit-identical to [`super::scalar`] by construction.
+//!
+//! Relative to [`super::avx2`] this module gains three things. The
+//! vectors are twice as wide. The unsigned-compare bias trick
+//! disappears: AVX-512F has native unsigned 64-bit compares
+//! (`_mm512_cmple_epu64_mask` and friends) that produce `__mmask8`
+//! predicates, so [`segment_counts`] reads the *raw* sorted edges and
+//! the cached entry point needs no prebias staging at all. And AVX-512CD
+//! brings `vplzcntq` (`_mm512_lzcnt_epi64`), which finally makes the ILM
+//! priority-encoder pass vectorizable: [`priority_encode_batch`]
+//! computes `⌊log2 n⌋ = 63 − lzcnt(n)` for eight lanes at once, with the
+//! zero lanes masked to `(0, 0)` via the nonzero predicate.
+//!
+//! The 64×64→128 multiply is the same schoolbook over `_mm512_mul_epu32`
+//! limb products as the AVX2 module — AVX-512F also lacks a wide 64-bit
+//! multiply (`vpmullq` is AVX-512DQ and only returns the low half).
+//!
+//! Every function here requires AVX-512F+CD: callers reach them only
+//! through [`super::Engine::Avx512`], which `SimdChoice::resolve`
+//! constructs strictly after runtime feature detection of `avx512f`,
+//! `avx512cd` *and* `avx2` (the narrowed-store tail uses a 256-bit
+//! store; every AVX-512 CPU has AVX2, but the detector checks anyway so
+//! the token proves everything this module emits). Tails shorter than
+//! one vector fall through to the scalar reference.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+/// # Safety
+/// Requires AVX-512F (guaranteed by `Engine::Avx512` construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn mul_shr(a: &[u64], b: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    if f == 0 || f >= 64 {
+        // Pure-low or pure-high extraction: rare configs, scalar keeps
+        // the shift-combination below branch-free for the 1..=63 case.
+        return super::scalar::mul_shr(a, b, f, out);
+    }
+    let n = a.len();
+    let shr = _mm_cvtsi32_si128(f as i32);
+    let shl = _mm_cvtsi32_si128(64 - f as i32);
+    let m32 = _mm512_set1_epi64(0xFFFF_FFFF);
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm512_loadu_epi64(a.as_ptr().add(i) as *const i64);
+        let vb = _mm512_loadu_epi64(b.as_ptr().add(i) as *const i64);
+        let (lo, hi) = mul_u64_wide(va, vb, m32);
+        let r = _mm512_or_si512(_mm512_srl_epi64(lo, shr), _mm512_sll_epi64(hi, shl));
+        _mm512_storeu_epi64(out.as_mut_ptr().add(i) as *mut i64, r);
+        i += 8;
+    }
+    super::scalar::mul_shr(&a[i..], &b[i..], f, &mut out[i..]);
+}
+
+/// # Safety
+/// Requires AVX-512F (guaranteed by `Engine::Avx512` construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn sqr_shr(a: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert_eq!(a.len(), out.len());
+    if f == 0 || f >= 64 {
+        return super::scalar::sqr_shr(a, f, out);
+    }
+    let n = a.len();
+    let shr = _mm_cvtsi32_si128(f as i32);
+    let shl = _mm_cvtsi32_si128(64 - f as i32);
+    let m32 = _mm512_set1_epi64(0xFFFF_FFFF);
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm512_loadu_epi64(a.as_ptr().add(i) as *const i64);
+        let (lo, hi) = mul_u64_wide(va, va, m32);
+        let r = _mm512_or_si512(_mm512_srl_epi64(lo, shr), _mm512_sll_epi64(hi, shl));
+        _mm512_storeu_epi64(out.as_mut_ptr().add(i) as *mut i64, r);
+        i += 8;
+    }
+    super::scalar::sqr_shr(&a[i..], f, &mut out[i..]);
+}
+
+/// Full 128-bit products of eight u64 lane pairs as (low, high) 64-bit
+/// halves — the same exact schoolbook over 32-bit limbs as the AVX2
+/// module: with `a = ah·2^32 + al`, `b = bh·2^32 + bl`,
+/// `t = (al·bl >> 32) + lo32(al·bh) + lo32(ah·bl)` (≤ 3·(2^32−1), no
+/// overflow), `lo = lo32(al·bl) | (t << 32)`,
+/// `hi = ah·bh + hi32(al·bh) + hi32(ah·bl) + (t >> 32)`.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn mul_u64_wide(a: __m512i, b: __m512i, m32: __m512i) -> (__m512i, __m512i) {
+    let a_hi = _mm512_srli_epi64::<32>(a);
+    let b_hi = _mm512_srli_epi64::<32>(b);
+    let ll = _mm512_mul_epu32(a, b); // al·bl
+    let lh = _mm512_mul_epu32(a, b_hi); // al·bh
+    let hl = _mm512_mul_epu32(a_hi, b); // ah·bl
+    let hh = _mm512_mul_epu32(a_hi, b_hi); // ah·bh
+    let t = _mm512_add_epi64(
+        _mm512_srli_epi64::<32>(ll),
+        _mm512_add_epi64(_mm512_and_si512(lh, m32), _mm512_and_si512(hl, m32)),
+    );
+    let lo = _mm512_or_si512(_mm512_and_si512(ll, m32), _mm512_slli_epi64::<32>(t));
+    let hi = _mm512_add_epi64(
+        hh,
+        _mm512_add_epi64(
+            _mm512_add_epi64(_mm512_srli_epi64::<32>(lh), _mm512_srli_epi64::<32>(hl)),
+            _mm512_srli_epi64::<32>(t),
+        ),
+    );
+    (lo, hi)
+}
+
+/// # Safety
+/// Requires AVX-512F (guaranteed by `Engine::Avx512` construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn sub_sat(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm512_loadu_epi64(a.as_ptr().add(i) as *const i64);
+        let vb = _mm512_loadu_epi64(b.as_ptr().add(i) as *const i64);
+        // Native unsigned ≥: compute a − b only on the lanes where it
+        // cannot underflow, zero the rest — saturation in one masked op.
+        let ok = _mm512_cmpge_epu64_mask(va, vb);
+        let r = _mm512_maskz_sub_epi64(ok, va, vb);
+        _mm512_storeu_epi64(out.as_mut_ptr().add(i) as *mut i64, r);
+        i += 8;
+    }
+    super::scalar::sub_sat(&a[i..], &b[i..], &mut out[i..]);
+}
+
+/// # Safety
+/// Requires AVX-512F (guaranteed by `Engine::Avx512` construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn rsub_sat(minuend: u64, v: &mut [u64]) {
+    let n = v.len();
+    let vm = _mm512_set1_epi64(minuend as i64);
+    let mut i = 0;
+    while i + 8 <= n {
+        let vv = _mm512_loadu_epi64(v.as_ptr().add(i) as *const i64);
+        let ok = _mm512_cmpge_epu64_mask(vm, vv);
+        let r = _mm512_maskz_sub_epi64(ok, vm, vv);
+        _mm512_storeu_epi64(v.as_mut_ptr().add(i) as *mut i64, r);
+        i += 8;
+    }
+    super::scalar::rsub_sat(minuend, &mut v[i..]);
+}
+
+/// # Safety
+/// Requires AVX-512F (guaranteed by `Engine::Avx512` construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn add_wrapping(acc: &mut [u64], x: &[u64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = acc.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let va = _mm512_loadu_epi64(acc.as_ptr().add(i) as *const i64);
+        let vx = _mm512_loadu_epi64(x.as_ptr().add(i) as *const i64);
+        let r = _mm512_add_epi64(va, vx);
+        _mm512_storeu_epi64(acc.as_mut_ptr().add(i) as *mut i64, r);
+        i += 8;
+    }
+    super::scalar::add_wrapping(&mut acc[i..], &x[i..]);
+}
+
+/// # Safety
+/// Requires AVX-512F (guaranteed by `Engine::Avx512` construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn fill_add(base: u64, x: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let vb = _mm512_set1_epi64(base as i64);
+    let mut i = 0;
+    while i + 8 <= n {
+        let vx = _mm512_loadu_epi64(x.as_ptr().add(i) as *const i64);
+        let r = _mm512_add_epi64(vb, vx);
+        _mm512_storeu_epi64(out.as_mut_ptr().add(i) as *mut i64, r);
+        i += 8;
+    }
+    super::scalar::fill_add(base, &x[i..], &mut out[i..]);
+}
+
+/// PLA compare tree: count how many sorted edges each lane is at or
+/// above, clamped to the last segment. Unlike the AVX2 path there is no
+/// bias staging and no stack-capacity limit — `_mm512_cmple_epu64_mask`
+/// compares unsigned 64-bit lanes natively, so the loop reads the raw
+/// edge list directly. This is also why [`super::BiasedEdges`] carries
+/// no AVX-512-specific staging: the cached entry point dispatches here
+/// with the cache's raw `edges()` and is bit-identical to the uncached
+/// call by construction.
+///
+/// # Safety
+/// Requires AVX-512F (guaranteed by `Engine::Avx512` construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn segment_counts(x: &[u64], edges: &[u64], idx: &mut [u64]) {
+    debug_assert_eq!(x.len(), idx.len());
+    debug_assert!(!edges.is_empty());
+    let n = x.len();
+    let one = _mm512_set1_epi64(1);
+    let last = _mm512_set1_epi64((edges.len() - 1) as i64);
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = _mm512_loadu_epi64(x.as_ptr().add(i) as *const i64);
+        let mut cnt = _mm512_setzero_si512();
+        for &e in edges {
+            // e ≤ x per lane, as a predicate mask; masked add counts it.
+            let ge = _mm512_cmple_epu64_mask(_mm512_set1_epi64(e as i64), xv);
+            cnt = _mm512_mask_add_epi64(cnt, ge, cnt, one);
+        }
+        // Lanes at/above the last edge clamp to the last segment.
+        let r = _mm512_min_epu64(cnt, last);
+        _mm512_storeu_epi64(idx.as_mut_ptr().add(i) as *mut i64, r);
+        i += 8;
+    }
+    super::scalar::segment_counts(&x[i..], edges, &mut idx[i..]);
+}
+
+/// The vectorized ILM priority-encoder pass:
+/// `(k[i], r[i]) = (⌊log2 n[i]⌋, n[i] − 2^k)`, zero lanes pinned to
+/// `(0, 0)` — bit-identical to [`super::scalar::priority_encode_batch`].
+///
+/// `vplzcntq` (AVX-512CD) gives `⌊log2 n⌋ = 63 − lzcnt(n)` for eight
+/// lanes per instruction; zero lanes (where `lzcnt` returns 64 and the
+/// subtract would wrap) are excluded via the `vptestmq` nonzero
+/// predicate, so `k` and `r` land as zeros there without a branch.
+/// `r = n ^ (1 << k)` clears the leading bit via `vpsllvq`. The `k`
+/// outputs narrow to `u32` through `vpmovqd`.
+///
+/// # Safety
+/// Requires AVX-512F + AVX-512CD (guaranteed by `Engine::Avx512`
+/// construction).
+#[target_feature(enable = "avx512f,avx512cd,avx2")]
+pub unsafe fn priority_encode_batch(n: &[u64], k: &mut [u32], r: &mut [u64]) {
+    debug_assert!(n.len() == k.len() && n.len() == r.len());
+    let len = n.len();
+    let c63 = _mm512_set1_epi64(63);
+    let one = _mm512_set1_epi64(1);
+    let mut i = 0;
+    while i + 8 <= len {
+        let v = _mm512_loadu_epi64(n.as_ptr().add(i) as *const i64);
+        let nz = _mm512_test_epi64_mask(v, v);
+        let lz = _mm512_lzcnt_epi64(v);
+        // k = 63 − lzcnt on nonzero lanes, 0 on zero lanes.
+        let kk = _mm512_maskz_sub_epi64(nz, c63, lz);
+        // r = v ^ 2^k on nonzero lanes (2^k is the leading bit, so the
+        // xor is the subtract), 0 on zero lanes.
+        let top = _mm512_sllv_epi64(one, kk);
+        let rr = _mm512_maskz_xor_epi64(nz, v, top);
+        _mm512_storeu_epi64(r.as_mut_ptr().add(i) as *mut i64, rr);
+        _mm256_storeu_si256(
+            k.as_mut_ptr().add(i) as *mut __m256i,
+            _mm512_cvtepi64_epi32(kk),
+        );
+        i += 8;
+    }
+    super::scalar::priority_encode_batch(&n[i..], &mut k[i..], &mut r[i..]);
+}

@@ -5,28 +5,37 @@
 //! the lane parallelism explicit: a small portable engine of fixed-width
 //! `u64`-lane slice ops — wide multiply-and-shift, saturating subtract,
 //! wrapping accumulate, the PLA compare tree as a lane count, the ILM
-//! priority-encoder pass — with
+//! priority-encoder pass — with one reference implementation and a
+//! per-ISA vector backend roster:
 //!
-//! * a **scalar-unrolled fallback** ([`scalar`]) that is the reference
-//!   semantics (plain integer ops, four lanes per loop body), and
-//! * an **AVX2 path** ([`avx2`], `core::arch::x86_64` intrinsics behind
-//!   *runtime* feature detection) that computes the identical bit
-//!   patterns four lanes per vector. `unsafe` is confined to that
-//!   module; everything here and above it is safe code.
+//! | engine   | module     | lanes | detection                | notes |
+//! |----------|------------|-------|--------------------------|-------|
+//! | `scalar` | [`scalar`] | 4/body| always                   | reference semantics; plain integer ops, unrolled |
+//! | `avx2`   | [`avx2`]   | 4     | `avx2`                   | biased signed compares; scalar PE (no `vplzcntq`) |
+//! | `avx512` | [`avx512`] | 8     | `avx512f`+`avx512cd`     | native unsigned compares; vector PE via `vplzcntq` |
+//! | `neon`   | [`neon`]   | 2     | aarch64 `neon`           | native `uqsub`; vector PE via `vclzq` half-select |
 //!
-//! Selection is a three-way [`SimdChoice`] — `Auto` (detect), `Forced`
-//! (error if AVX2 is missing), `Scalar` (pin the fallback) — threaded
-//! from `KernelConfig::simd` / the serve CLI / the `TSDIV_SIMD` env
-//! override down to a resolved [`Engine`] that the kernel's stage loops
-//! dispatch on. Both engines are **bit-identical** by construction
-//! (every op is defined by its scalar semantics; the AVX2 module must
-//! reproduce them exactly) and pinned so by unit tests here plus the
-//! kernel-level property tests.
+//! `unsafe` is confined to the vector modules (all behind *runtime*
+//! feature detection); everything here and above it is safe code.
+//!
+//! Selection is a three-way [`SimdChoice`] — `Auto` (detect, widest
+//! wins), `Forced` (error if the host has no vector engine), `Scalar`
+//! (pin the fallback) — threaded from `KernelConfig::simd` / the serve
+//! CLI / the `TSDIV_SIMD` env override down to a resolved [`Engine`]
+//! that the kernel's stage loops dispatch on. All engines are
+//! **bit-identical** by construction (every op is defined by its scalar
+//! semantics; each vector module must reproduce them exactly) and
+//! pinned so by unit tests here plus the kernel-level property tests,
+//! which sweep [`engines_available`].
 
 mod scalar;
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+#[cfg(target_arch = "aarch64")]
+mod neon;
 
 use crate::bail;
 use crate::util::error::Result;
@@ -36,12 +45,13 @@ use crate::util::error::Result;
 /// with [`SimdChoice::resolve`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SimdChoice {
-    /// Use the vector engine when the host supports it, else scalar.
+    /// Use the widest vector engine the host supports, else scalar.
     #[default]
     Auto,
-    /// Require the vector engine; configuration error on hosts without
-    /// AVX2 (benchmark rigs use this so a silent scalar fallback cannot
-    /// masquerade as a SIMD measurement).
+    /// Require a vector engine; configuration error on hosts without
+    /// one (benchmark rigs use this so a silent scalar fallback cannot
+    /// masquerade as a SIMD measurement). The error names the features
+    /// this architecture is missing — see [`forced_requirement`].
     Forced,
     /// Pin the scalar-unrolled engine (the autovectorization baseline
     /// the serving benches compare against).
@@ -83,14 +93,16 @@ impl SimdChoice {
         })
     }
 
-    /// Resolve to a concrete engine. `Forced` on a host without AVX2 is
-    /// a configuration error (surfaced by `KernelConfig::validate` /
-    /// `DivisionService::start`), not a silent downgrade.
+    /// Resolve to a concrete engine. `Forced` on a host without a
+    /// vector engine is a configuration error (surfaced by
+    /// `KernelConfig::validate` / `DivisionService::start`), not a
+    /// silent downgrade; the error names the per-architecture features
+    /// that were missing ([`forced_requirement`]).
     ///
     /// An `Auto` choice defers to the `TSDIV_SIMD` process override:
     /// `scalar` pins the fallback engine (how CI runs the *entire*
     /// suite — including `KernelConfig::default()` backends — on the
-    /// scalar engine for its second test pass) and `forced` demands the
+    /// scalar engine for its second test pass) and `forced` demands a
     /// vector engine with the same hard-error contract as a `Forced`
     /// configuration. Explicit `Forced`/`Scalar` configurations ignore
     /// the env.
@@ -100,21 +112,15 @@ impl SimdChoice {
             SimdChoice::Auto => match SimdChoice::from_env() {
                 SimdChoice::Scalar => Ok(Engine::Scalar),
                 SimdChoice::Forced => SimdChoice::Forced.resolve(),
-                SimdChoice::Auto => {
-                    #[cfg(target_arch = "x86_64")]
-                    if std::arch::is_x86_feature_detected!("avx2") {
-                        return Ok(Engine::Avx2(Avx2Token(())));
-                    }
-                    Ok(Engine::Scalar)
-                }
+                SimdChoice::Auto => Ok(best_vector_engine().unwrap_or(Engine::Scalar)),
             },
-            SimdChoice::Forced => {
-                #[cfg(target_arch = "x86_64")]
-                if std::arch::is_x86_feature_detected!("avx2") {
-                    return Ok(Engine::Avx2(Avx2Token(())));
-                }
-                bail!("simd choice 'forced' requires AVX2, which this host does not support")
-            }
+            SimdChoice::Forced => match best_vector_engine() {
+                Some(eng) => Ok(eng),
+                None => bail!(
+                    "simd choice 'forced' requires {}, which this host does not support",
+                    forced_requirement()
+                ),
+            },
         }
     }
 
@@ -134,26 +140,80 @@ impl SimdChoice {
     }
 }
 
-/// True when the vector engine can run on this host (AVX2 detected at
-/// runtime). Tests and benches use this to gate `Forced` sweeps.
-pub fn simd_available() -> bool {
-    #[cfg(target_arch = "x86_64")]
-    {
-        std::arch::is_x86_feature_detected!("avx2")
-    }
-    #[cfg(not(target_arch = "x86_64"))]
-    {
-        false
+/// The feature set a `Forced` choice demands **on this architecture** —
+/// what its resolution error reports as missing. Config-validation
+/// errors (`KernelConfig::validate`, `BackendChoice::validate`) quote
+/// this, so the message tracks the engine roster instead of
+/// hard-coding any one ISA extension.
+pub const fn forced_requirement() -> &'static str {
+    if cfg!(target_arch = "x86_64") {
+        "AVX-512 (F+CD) or AVX2"
+    } else if cfg!(target_arch = "aarch64") {
+        "NEON"
+    } else {
+        "a vector engine (none exists for this architecture)"
     }
 }
 
-/// Every engine this host can run: scalar always, the vector engine
-/// when detected. Test/bench sweeps iterate this.
+/// AVX-512 as this crate uses it: foundation ops + `vplzcntq` for the
+/// vector priority encoder, plus AVX2 for the narrowed 256-bit stores
+/// (every AVX-512 CPU has it; detected anyway so the token proves every
+/// instruction the module emits).
+#[cfg(target_arch = "x86_64")]
+fn avx512_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512cd")
+        && std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// The widest vector engine this host supports, if any — the engine
+/// `Auto` picks and `Forced` demands. Preference order on x86_64 is
+/// AVX-512 over AVX2 (8 lanes over 4, and the only x86 engine with a
+/// vector priority encoder); aarch64 has the one NEON engine.
+fn best_vector_engine() -> Option<Engine> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512_detected() {
+            return Some(Engine::Avx512(Avx512Token(())));
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Some(Engine::Avx2(Avx2Token(())));
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(Engine::Neon(NeonToken(())));
+        }
+    }
+    None
+}
+
+/// True when a vector engine can run on this host (detected at
+/// runtime). Tests and benches use this to gate `Forced` sweeps.
+pub fn simd_available() -> bool {
+    best_vector_engine().is_some()
+}
+
+/// Every engine this host can run: scalar always, then each detected
+/// vector engine from narrowest to widest (so [`best_vector_engine`]
+/// is always the last entry when any exists). Test/bench sweeps
+/// iterate this; on an AVX-512 host it covers scalar, AVX2 *and*
+/// AVX-512 in one pass.
 pub fn engines_available() -> Vec<Engine> {
     let mut v = vec![Engine::Scalar];
     #[cfg(target_arch = "x86_64")]
-    if std::arch::is_x86_feature_detected!("avx2") {
-        v.push(Engine::Avx2(Avx2Token(())));
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Engine::Avx2(Avx2Token(())));
+        }
+        if avx512_detected() {
+            v.push(Engine::Avx512(Avx512Token(())));
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        v.push(Engine::Neon(NeonToken(())));
     }
     v
 }
@@ -170,11 +230,18 @@ pub fn engines_available() -> Vec<Engine> {
 /// `divide_batch` call in its [`crate::kernel::KernelScratch`] and
 /// threads it through the seed stage instead.
 ///
-/// Caching is a pure re-encoding of the edge list: both engines produce
-/// results bit-identical to the uncached [`Engine::segment_counts`].
+/// AVX-512 and NEON have native unsigned 64-bit compares, so their
+/// cached dispatch reads the raw [`BiasedEdges::edges`] slice — for
+/// them the cache is just the stable home of the edge list, with no
+/// per-ISA staging to amortize.
+///
+/// Caching is a pure re-encoding of the edge list: every engine
+/// produces results bit-identical to the uncached
+/// [`Engine::segment_counts`].
 #[derive(Clone, Debug, Default)]
 pub struct BiasedEdges {
-    /// The raw sorted edges (scalar engine + vector-tail path).
+    /// The raw sorted edges (scalar/AVX-512/NEON engines + vector-tail
+    /// path).
     edges: Vec<u64>,
     /// The same edges biased by 2^63 (`e ^ SIGN`), ready for the AVX2
     /// signed-compare trick.
@@ -225,15 +292,31 @@ impl BiasedEdges {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Avx2Token(());
 
+/// Proof that AVX-512F+CD (and AVX2) were detected on this host at
+/// runtime — the [`Avx2Token`] pattern for the 512-bit engine; minted
+/// only after [`avx512_detected`] succeeded.
+#[cfg(target_arch = "x86_64")]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Avx512Token(());
+
+/// Proof that NEON was detected on this host at runtime — the
+/// [`Avx2Token`] pattern for aarch64. NEON is baseline on the Linux
+/// aarch64 targets, but minting the token through detection keeps the
+/// soundness argument uniform: no safe code can conjure a vector
+/// engine variant.
+#[cfg(target_arch = "aarch64")]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NeonToken(());
+
 /// A resolved lane engine. Copy-cheap; every op takes `self` by value
 /// and dispatches once per *slice*, so the per-lane loop bodies stay
 /// monomorphic and branch-free.
 ///
 /// All ops are defined by their scalar per-lane semantics (documented
-/// per method); the AVX2 implementations reproduce those semantics bit
-/// for bit — the kernel's bit-identity guarantee rests on this, and the
-/// module tests plus the forced-SIMD-vs-forced-scalar property tests
-/// pin it.
+/// per method); the vector implementations reproduce those semantics
+/// bit for bit — the kernel's bit-identity guarantee rests on this, and
+/// the module tests plus the forced-SIMD-vs-forced-scalar property
+/// tests pin it for every engine [`engines_available`] reports.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
     /// Portable scalar-unrolled fallback (reference semantics).
@@ -242,19 +325,35 @@ pub enum Engine {
     /// [`Avx2Token`] payload is the constructibility proof).
     #[cfg(target_arch = "x86_64")]
     Avx2(Avx2Token),
+    /// 8 × u64 lanes per `__m512i` vector, runtime-detected
+    /// (`avx512f` + `avx512cd`); the only x86 engine with a vector
+    /// priority encoder (`vplzcntq`).
+    #[cfg(target_arch = "x86_64")]
+    Avx512(Avx512Token),
+    /// 2 × u64 lanes per `uint64x2_t` vector on aarch64; native
+    /// saturating subtract and unsigned compares, priority encoder via
+    /// a `vclzq` half-select tree.
+    #[cfg(target_arch = "aarch64")]
+    Neon(NeonToken),
 }
 
-// SAFETY of every `Engine::Avx2` arm below: the variant is only ever
-// constructed by `SimdChoice::resolve` after `is_x86_feature_detected!
-// ("avx2")` succeeded, so the `#[target_feature(enable = "avx2")]`
-// functions are called on a host that supports them.
+// SAFETY of every vector arm below: the variants are only ever
+// constructed by `SimdChoice::resolve` / `engines_available` after
+// their runtime feature detection succeeded (avx2; avx512f+avx512cd+
+// avx2; neon), so the `#[target_feature]` functions are called on a
+// host that supports them.
 impl Engine {
-    /// Short name for tables and `describe()` strings.
+    /// Short name for tables, `describe()` strings and per-engine bench
+    /// keys (`pe_batch_per_s_{name}`).
     pub const fn name(self) -> &'static str {
         match self {
             Engine::Scalar => "scalar",
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => "avx2",
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => "avx512",
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => "neon",
         }
     }
 
@@ -267,6 +366,10 @@ impl Engine {
             Engine::Scalar => scalar::mul_shr(a, b, f, out),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::mul_shr(a, b, f, out) },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::mul_shr(a, b, f, out) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::mul_shr(a, b, f, out) },
         }
     }
 
@@ -278,6 +381,10 @@ impl Engine {
             Engine::Scalar => scalar::sqr_shr(a, f, out),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::sqr_shr(a, f, out) },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::sqr_shr(a, f, out) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::sqr_shr(a, f, out) },
         }
     }
 
@@ -289,6 +396,10 @@ impl Engine {
             Engine::Scalar => scalar::sub_sat(a, b, out),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::sub_sat(a, b, out) },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::sub_sat(a, b, out) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::sub_sat(a, b, out) },
         }
     }
 
@@ -300,6 +411,10 @@ impl Engine {
             Engine::Scalar => scalar::rsub_sat(minuend, v),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::rsub_sat(minuend, v) },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::rsub_sat(minuend, v) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::rsub_sat(minuend, v) },
         }
     }
 
@@ -313,6 +428,10 @@ impl Engine {
             Engine::Scalar => scalar::add_wrapping(acc, x),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::add_wrapping(acc, x) },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::add_wrapping(acc, x) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::add_wrapping(acc, x) },
         }
     }
 
@@ -324,6 +443,10 @@ impl Engine {
             Engine::Scalar => scalar::fill_add(base, x, out),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::fill_add(base, x, out) },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::fill_add(base, x, out) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::fill_add(base, x, out) },
         }
     }
 
@@ -338,13 +461,19 @@ impl Engine {
             Engine::Scalar => scalar::segment_counts(x, edges, idx),
             #[cfg(target_arch = "x86_64")]
             Engine::Avx2(_) => unsafe { avx2::segment_counts(x, edges, idx) },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::segment_counts(x, edges, idx) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::segment_counts(x, edges, idx) },
         }
     }
 
     /// [`Engine::segment_counts`] with the per-call edge staging hoisted
     /// into a reusable [`BiasedEdges`] cache: identical results, but the
     /// bias/broadcast setup of the AVX2 path runs once per cache build
-    /// instead of once per call. The hot seed path
+    /// instead of once per call. AVX-512 and NEON compare unsigned lanes
+    /// natively, so their arms read the cache's raw edge slice — same
+    /// entry point, nothing to prestage. The hot seed path
     /// ([`crate::pla::SegmentTable::seed_batch_with`]) uses this;
     /// `edges` must be non-empty.
     #[inline]
@@ -356,20 +485,39 @@ impl Engine {
             Engine::Avx2(_) => unsafe {
                 avx2::segment_counts_prebiased(x, edges.edges(), edges.biased(), idx)
             },
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::segment_counts(x, edges.edges(), idx) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::segment_counts(x, edges.edges(), idx) },
         }
     }
 
     /// The ILM priority-encoder pass over a lane tile:
     /// `(k[i], r[i]) = (⌊log2 n[i]⌋, n[i] − 2^k)` with the zero lane
     /// defined as `(0, 0)` (the unit's control logic short-circuits zero
-    /// operands, so callers test the operand, not `k`). One LZCNT chain
-    /// per lane — there is no AVX2 counterpart worth its shuffle cost,
-    /// so both engines run the same scalar-unrolled loop; the win is
-    /// structural: the ILM correction recursion runs this as one pass
-    /// per stage over the tile instead of per lane over stages.
+    /// operands, so callers test the operand, not `k`).
+    ///
+    /// This pass dispatches per engine like every other op. AVX-512CD's
+    /// `vplzcntq` runs the LZCNT chain eight lanes per instruction and
+    /// NEON emulates a 64-bit clz with a `vclzq` half-select, so both
+    /// run genuinely vectorized PE ([`avx512::priority_encode_batch`],
+    /// [`neon::priority_encode_batch`]). AVX2 has no 64-bit lzcnt (and
+    /// no emulation that beats per-lane `LZCNT` without losing bit
+    /// exactness), so its arm shares the scalar-unrolled loop. Across
+    /// all engines the structural win stands: the ILM correction
+    /// recursion runs this as one pass per stage over the tile instead
+    /// of per lane over stages.
     #[inline]
     pub fn priority_encode_batch(self, n: &[u64], k: &mut [u32], r: &mut [u64]) {
-        scalar::priority_encode_batch(n, k, r);
+        match self {
+            Engine::Scalar => scalar::priority_encode_batch(n, k, r),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx2(_) => scalar::priority_encode_batch(n, k, r),
+            #[cfg(target_arch = "x86_64")]
+            Engine::Avx512(_) => unsafe { avx512::priority_encode_batch(n, k, r) },
+            #[cfg(target_arch = "aarch64")]
+            Engine::Neon(_) => unsafe { neon::priority_encode_batch(n, k, r) },
+        }
     }
 }
 
@@ -383,15 +531,25 @@ mod tests {
         (0..n).map(|_| rng.next_u64() >> (rng.below(4) * 8)).collect()
     }
 
-    /// Edge-heavy operand menu: zeros, ones, powers of two, all-ones.
-    const EDGE: [u64; 8] = [
+    /// Edge-heavy operand menu: zeros, ones, powers of two and their
+    /// neighbors on both sides of the 32-bit limb split, all-ones, the
+    /// sign bit (the AVX2 bias pivot), and mixed-limb patterns.
+    const EDGE: [u64; 16] = [
         0,
         1,
         2,
+        3,
         (1 << 32) - 1,
         1 << 32,
+        (1 << 32) + 1,
         u64::MAX,
+        u64::MAX - 1,
         0x8000_0000_0000_0000,
+        0x8000_0000_0000_0001,
+        0x7FFF_FFFF_FFFF_FFFF,
+        0xFFFF_FFFF_0000_0000,
+        (1 << 52) | (1 << 31),
+        0x5555_5555_5555_5555,
         0x0123_4567_89AB_CDEF,
     ];
 
@@ -422,21 +580,56 @@ mod tests {
             // contract into Auto configs too.
             SimdChoice::Forced => assert_eq!(auto.is_ok(), simd_available()),
             SimdChoice::Auto if simd_available() => {
-                assert_ne!(auto.unwrap(), Engine::Scalar, "auto must pick the vector engine");
+                assert_ne!(auto.unwrap(), Engine::Scalar, "auto must pick a vector engine");
             }
             SimdChoice::Auto => assert_eq!(auto.unwrap(), Engine::Scalar),
         }
+        let engines = engines_available();
+        assert_eq!(engines[0], Engine::Scalar, "scalar is always first");
         if simd_available() {
-            // Forced ignores the env: it always demands the vector engine.
-            assert_ne!(SimdChoice::Forced.resolve().unwrap(), Engine::Scalar);
-            assert_eq!(engines_available().len(), 2);
+            // Forced ignores the env: it always demands a vector
+            // engine — specifically the widest detected one, which the
+            // sweep list ends with.
+            let forced = SimdChoice::Forced.resolve().unwrap();
+            assert_ne!(forced, Engine::Scalar);
+            assert!(engines.len() >= 2, "vector host must sweep ≥ 2 engines");
+            assert_eq!(*engines.last().unwrap(), forced, "sweep ends at the widest engine");
         } else {
             assert!(SimdChoice::Forced.resolve().is_err());
             assert!(SimdChoice::Forced.validate().is_err());
             assert_eq!(SimdChoice::Forced.resolve_lenient(), Engine::Scalar);
-            assert_eq!(engines_available(), vec![Engine::Scalar]);
+            assert_eq!(engines, vec![Engine::Scalar]);
+        }
+        // Engine names key per-engine bench rows; they must be unique.
+        for (i, a) in engines.iter().enumerate() {
+            for b in &engines[i + 1..] {
+                assert_ne!(a.name(), b.name(), "duplicate engine name");
+            }
         }
         assert_eq!(Engine::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn forced_requirement_names_this_architectures_features() {
+        // The Forced error must name what *this* architecture is
+        // missing — one assertion arm per ISA roster entry, so the
+        // string cannot silently regress to a single hard-coded
+        // extension again.
+        let req = forced_requirement();
+        if cfg!(target_arch = "x86_64") {
+            assert!(req.contains("AVX-512"), "x86_64 arm must name AVX-512: {req}");
+            assert!(req.contains("AVX2"), "x86_64 arm must name AVX2: {req}");
+        } else if cfg!(target_arch = "aarch64") {
+            assert!(req.contains("NEON"), "aarch64 arm must name NEON: {req}");
+        } else {
+            assert!(req.contains("vector engine"), "fallback arm: {req}");
+        }
+        // And the resolution error actually quotes it (only observable
+        // on hosts where Forced fails).
+        if !simd_available() {
+            let err = SimdChoice::Forced.resolve().unwrap_err().to_string();
+            assert!(err.contains(req), "error '{err}' must quote '{req}'");
+        }
     }
 
     #[test]
@@ -531,7 +724,7 @@ mod tests {
 
     #[test]
     fn cached_segment_counts_bit_identical_to_uncached() {
-        // The cache is a pure re-encoding of the edge list: across both
+        // The cache is a pure re-encoding of the edge list: across all
         // engines, many chunked calls sharing one cache, and tails
         // shorter than a vector, cached == uncached == linear select.
         let edges: Vec<u64> = vec![10, 1 << 20, 1 << 40, (1 << 60) + 3, u64::MAX - 1];
@@ -555,7 +748,7 @@ mod tests {
             let mut plain = vec![0u64; xs.len()];
             eng.segment_counts(&xs, &edges, &mut plain);
             // One cache, many calls (the per-divide_batch reuse shape):
-            // chunk sizes deliberately off the 4-lane vector width.
+            // chunk sizes deliberately off the 2/4/8-lane vector widths.
             let mut cached = vec![0u64; xs.len()];
             for chunk in [5usize, 32, 3, 100] {
                 let mut done = 0;
@@ -582,17 +775,35 @@ mod tests {
     fn priority_encode_batch_matches_scalar_pe() {
         let mut xs = gen(53, 9);
         xs.extend_from_slice(&EDGE);
-        let mut k = vec![0u32; xs.len()];
-        let mut r = vec![0u64; xs.len()];
-        for eng in engines_available() {
-            eng.priority_encode_batch(&xs, &mut k, &mut r);
+        // Interleave zero lanes through the vector bodies: settled ILM
+        // lanes appear mid-tile exactly like this, and the vector PEs
+        // pin them to (0, 0) with masks rather than branches.
+        for (i, v) in gen(24, 10).into_iter().enumerate() {
+            xs.push(if i % 3 == 0 { 0 } else { v });
+        }
+        let check = |eng: Engine, xs: &[u64], k: &[u32], r: &[u64]| {
             for (i, &x) in xs.iter().enumerate() {
                 if x == 0 {
-                    assert_eq!((k[i], r[i]), (0, 0), "zero lane {i}");
+                    assert_eq!((k[i], r[i]), (0, 0), "{} zero lane {i}", eng.name());
                 } else {
                     let (kk, rr) = crate::ilm::priority_encode(x);
                     assert_eq!((k[i], r[i]), (kk, rr), "{} lane {i}", eng.name());
                 }
+            }
+        };
+        let mut k = vec![0u32; xs.len()];
+        let mut r = vec![0u64; xs.len()];
+        for eng in engines_available() {
+            eng.priority_encode_batch(&xs, &mut k, &mut r);
+            check(eng, &xs, &k, &r);
+            // Non-tile-multiple lengths: every prefix exercises a
+            // different vector-body/scalar-tail split for the 2-, 4-
+            // and 8-lane widths.
+            for n in 0..xs.len().min(19) {
+                let mut kn = vec![0u32; n];
+                let mut rn = vec![0u64; n];
+                eng.priority_encode_batch(&xs[..n], &mut kn, &mut rn);
+                check(eng, &xs[..n], &kn, &rn);
             }
         }
     }
@@ -611,6 +822,9 @@ mod tests {
                 }
                 let mut idx = vec![0u64; n];
                 eng.segment_counts(&a, &[2, 4], &mut idx);
+                let mut k = vec![0u32; n];
+                let mut r = vec![0u64; n];
+                eng.priority_encode_batch(&a, &mut k, &mut r);
             }
         }
     }

@@ -1,0 +1,262 @@
+//! NEON implementations of the lane-engine ops — 2 × u64 lanes per
+//! `uint64x2_t`, bit-identical to [`super::scalar`] by construction.
+//! This carries the whole kernel hot path (seed compare tree, Q2.F
+//! multiplies, saturating clamps, the ILM priority encoder) to aarch64.
+//!
+//! ISA notes relative to the x86 modules:
+//!
+//! * **Saturating subtract is native** (`vqsubq_u64` / `uqsub`) — the
+//!   seed and power-stage clamps need no compare-and-blend at all.
+//! * **Unsigned 64-bit compares are native** (`vcgeq_u64`), so like
+//!   AVX-512 (and unlike AVX2) the segment count reads raw edges with
+//!   no sign-bias staging.
+//! * **No wide 64-bit multiply**: [`mul_u64_wide`] is the same exact
+//!   schoolbook as the x86 modules, from four `vmull_u32` 32×32→64
+//!   limb products.
+//! * **No 64-bit clz**: `vclzq` stops at 32-bit lanes, so
+//!   [`priority_encode_batch`] emulates it — `vclzq_u32` over both
+//!   halves, then selects `clz(hi)` or `32 + clz(lo)` on the
+//!   `hi == 0` mask. The ROADMAP asked for this shuffle tree to be
+//!   measured against the scalar chain: with only two lanes per vector
+//!   the win is modest, but the select tree is branch-free where the
+//!   scalar chain is a per-lane `if v == 0` (the zero-lane pin), and it
+//!   keeps the operands in vector registers between the PE pass and the
+//!   surrounding ILM vector ops — `pe_batch_per_s_neon` in
+//!   `BENCH_HISTORY.jsonl` is the trend gate on that choice. The scalar
+//!   chain remains the tail/reference path.
+//!
+//! Every function here requires NEON: callers reach them only through
+//! [`super::Engine::Neon`], which `SimdChoice::resolve` constructs
+//! strictly after `is_aarch64_feature_detected!("neon")` succeeded
+//! (NEON is baseline on aarch64-unknown-linux-gnu, but the token keeps
+//! the proof obligation uniform across engines). Tails shorter than one
+//! vector fall through to the scalar reference.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::*;
+
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn mul_shr(a: &[u64], b: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    if f == 0 || f >= 64 {
+        // Pure-low or pure-high extraction: rare configs, scalar keeps
+        // the shift-combination below branch-free for the 1..=63 case.
+        return super::scalar::mul_shr(a, b, f, out);
+    }
+    let n = a.len();
+    // USHL with a negative count shifts right: one vector op does the
+    // (lo >> f) | (hi << (64 − f)) recombination's variable shifts.
+    let shr = vdupq_n_s64(-(f as i64));
+    let shl = vdupq_n_s64((64 - f) as i64);
+    let mut i = 0;
+    while i + 2 <= n {
+        let va = vld1q_u64(a.as_ptr().add(i));
+        let vb = vld1q_u64(b.as_ptr().add(i));
+        let (lo, hi) = mul_u64_wide(va, vb);
+        let r = vorrq_u64(vshlq_u64(lo, shr), vshlq_u64(hi, shl));
+        vst1q_u64(out.as_mut_ptr().add(i), r);
+        i += 2;
+    }
+    super::scalar::mul_shr(&a[i..], &b[i..], f, &mut out[i..]);
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn sqr_shr(a: &[u64], f: u32, out: &mut [u64]) {
+    debug_assert_eq!(a.len(), out.len());
+    if f == 0 || f >= 64 {
+        return super::scalar::sqr_shr(a, f, out);
+    }
+    let n = a.len();
+    let shr = vdupq_n_s64(-(f as i64));
+    let shl = vdupq_n_s64((64 - f) as i64);
+    let mut i = 0;
+    while i + 2 <= n {
+        let va = vld1q_u64(a.as_ptr().add(i));
+        let (lo, hi) = mul_u64_wide(va, va);
+        let r = vorrq_u64(vshlq_u64(lo, shr), vshlq_u64(hi, shl));
+        vst1q_u64(out.as_mut_ptr().add(i), r);
+        i += 2;
+    }
+    super::scalar::sqr_shr(&a[i..], f, &mut out[i..]);
+}
+
+/// Full 128-bit products of two u64 lane pairs as (low, high) 64-bit
+/// halves — the same exact schoolbook over 32-bit limbs as the x86
+/// modules, with the limbs extracted by narrowing moves:
+/// `al = vmovn(a)`, `ah = vshrn(a, 32)`, four `vmull_u32` products,
+/// then `t = (al·bl >> 32) + lo32(al·bh) + lo32(ah·bl)` (≤ 3·(2^32−1),
+/// no overflow), `lo = lo32(al·bl) | (t << 32)`,
+/// `hi = ah·bh + hi32(al·bh) + hi32(ah·bl) + (t >> 32)`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mul_u64_wide(a: uint64x2_t, b: uint64x2_t) -> (uint64x2_t, uint64x2_t) {
+    let m32 = vdupq_n_u64(0xFFFF_FFFF);
+    let al = vmovn_u64(a);
+    let ah = vshrn_n_u64::<32>(a);
+    let bl = vmovn_u64(b);
+    let bh = vshrn_n_u64::<32>(b);
+    let ll = vmull_u32(al, bl); // al·bl
+    let lh = vmull_u32(al, bh); // al·bh
+    let hl = vmull_u32(ah, bl); // ah·bl
+    let hh = vmull_u32(ah, bh); // ah·bh
+    let t = vaddq_u64(
+        vshrq_n_u64::<32>(ll),
+        vaddq_u64(vandq_u64(lh, m32), vandq_u64(hl, m32)),
+    );
+    let lo = vorrq_u64(vandq_u64(ll, m32), vshlq_n_u64::<32>(t));
+    let hi = vaddq_u64(
+        hh,
+        vaddq_u64(
+            vaddq_u64(vshrq_n_u64::<32>(lh), vshrq_n_u64::<32>(hl)),
+            vshrq_n_u64::<32>(t),
+        ),
+    );
+    (lo, hi)
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn sub_sat(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len();
+    let mut i = 0;
+    while i + 2 <= n {
+        let va = vld1q_u64(a.as_ptr().add(i));
+        let vb = vld1q_u64(b.as_ptr().add(i));
+        // UQSUB: saturating unsigned subtract is a single instruction.
+        vst1q_u64(out.as_mut_ptr().add(i), vqsubq_u64(va, vb));
+        i += 2;
+    }
+    super::scalar::sub_sat(&a[i..], &b[i..], &mut out[i..]);
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn rsub_sat(minuend: u64, v: &mut [u64]) {
+    let n = v.len();
+    let vm = vdupq_n_u64(minuend);
+    let mut i = 0;
+    while i + 2 <= n {
+        let vv = vld1q_u64(v.as_ptr().add(i));
+        vst1q_u64(v.as_mut_ptr().add(i), vqsubq_u64(vm, vv));
+        i += 2;
+    }
+    super::scalar::rsub_sat(minuend, &mut v[i..]);
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn add_wrapping(acc: &mut [u64], x: &[u64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let n = acc.len();
+    let mut i = 0;
+    while i + 2 <= n {
+        let va = vld1q_u64(acc.as_ptr().add(i));
+        let vx = vld1q_u64(x.as_ptr().add(i));
+        vst1q_u64(acc.as_mut_ptr().add(i), vaddq_u64(va, vx));
+        i += 2;
+    }
+    super::scalar::add_wrapping(&mut acc[i..], &x[i..]);
+}
+
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn fill_add(base: u64, x: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(x.len(), out.len());
+    let n = x.len();
+    let vb = vdupq_n_u64(base);
+    let mut i = 0;
+    while i + 2 <= n {
+        let vx = vld1q_u64(x.as_ptr().add(i));
+        vst1q_u64(out.as_mut_ptr().add(i), vaddq_u64(vb, vx));
+        i += 2;
+    }
+    super::scalar::fill_add(base, &x[i..], &mut out[i..]);
+}
+
+/// PLA compare tree: count how many sorted edges each lane is at or
+/// above, clamped to the last segment. `vcgeq_u64` compares unsigned
+/// 64-bit lanes natively, so — as on AVX-512 — the loop reads the raw
+/// edge list and [`super::BiasedEdges`] contributes nothing beyond the
+/// cached edge slice. The ≥ mask is all-ones (−1) per true lane, so
+/// subtracting it increments the count; NEON has no 64-bit unsigned
+/// min, so the final clamp is a compare-and-select.
+///
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn segment_counts(x: &[u64], edges: &[u64], idx: &mut [u64]) {
+    debug_assert_eq!(x.len(), idx.len());
+    debug_assert!(!edges.is_empty());
+    let n = x.len();
+    let last = vdupq_n_u64((edges.len() - 1) as u64);
+    let mut i = 0;
+    while i + 2 <= n {
+        let xv = vld1q_u64(x.as_ptr().add(i));
+        let mut cnt = vdupq_n_u64(0);
+        for &e in edges {
+            let ge = vcgeq_u64(xv, vdupq_n_u64(e));
+            cnt = vsubq_u64(cnt, ge);
+        }
+        let over = vcgtq_u64(cnt, last);
+        let r = vbslq_u64(over, last, cnt);
+        vst1q_u64(idx.as_mut_ptr().add(i), r);
+        i += 2;
+    }
+    super::scalar::segment_counts(&x[i..], edges, &mut idx[i..]);
+}
+
+/// The vectorized ILM priority-encoder pass:
+/// `(k[i], r[i]) = (⌊log2 n[i]⌋, n[i] − 2^k)`, zero lanes pinned to
+/// `(0, 0)` — bit-identical to [`super::scalar::priority_encode_batch`].
+///
+/// NEON's `vclzq` tops out at 32-bit lanes, so the 64-bit leading-zero
+/// count is a select tree over the halves:
+/// `clz64 = hi == 0 ? 32 + clz32(lo) : clz32(hi)` — one `vclzq_u32`
+/// covers both halves of both lanes at once, then a shift/mask splits
+/// them back out and `vbslq` picks per the `hi == 0` mask. Zero lanes
+/// (where the select yields 64 and `63 − clz` would wrap) are cleared
+/// with `vbicq` against the `v == 0` mask, matching the scalar pin.
+/// `r = v ^ (1 << k)` uses `USHL`'s per-lane variable shift.
+///
+/// # Safety
+/// Requires NEON (guaranteed by `Engine::Neon` construction).
+#[target_feature(enable = "neon")]
+pub unsafe fn priority_encode_batch(n: &[u64], k: &mut [u32], r: &mut [u64]) {
+    debug_assert!(n.len() == k.len() && n.len() == r.len());
+    let len = n.len();
+    let m32 = vdupq_n_u64(0xFFFF_FFFF);
+    let c32 = vdupq_n_u64(32);
+    let c63 = vdupq_n_u64(63);
+    let one = vdupq_n_u64(1);
+    let mut i = 0;
+    while i + 2 <= len {
+        let v = vld1q_u64(n.as_ptr().add(i));
+        // clz of every 32-bit half, still in 64-bit lane positions.
+        let cz = vreinterpretq_u64_u32(vclzq_u32(vreinterpretq_u32_u64(v)));
+        let clz_hi = vshrq_n_u64::<32>(cz);
+        let clz_lo = vandq_u64(cz, m32);
+        let hi_zero = vceqzq_u64(vshrq_n_u64::<32>(v));
+        let clz64 = vbslq_u64(hi_zero, vaddq_u64(clz_lo, c32), clz_hi);
+        let zero = vceqzq_u64(v);
+        // k = 63 − clz64; wraps on zero lanes, cleared by the mask.
+        let kk = vbicq_u64(vsubq_u64(c63, clz64), zero);
+        let top = vshlq_u64(one, vreinterpretq_s64_u64(kk));
+        // Nonzero lanes: v ^ 2^k clears the leading bit; zero lanes
+        // would see v ^ 1 = 1, cleared by the same mask.
+        let rr = vbicq_u64(veorq_u64(v, top), zero);
+        vst1q_u64(r.as_mut_ptr().add(i), rr);
+        vst1_u32(k.as_mut_ptr().add(i), vmovn_u64(kk));
+        i += 2;
+    }
+    super::scalar::priority_encode_batch(&n[i..], &mut k[i..], &mut r[i..]);
+}

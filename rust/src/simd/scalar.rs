@@ -3,10 +3,10 @@
 //! These define the semantics of every [`super::Engine`] op: plain
 //! integer arithmetic, four lanes per loop body so the compiler can
 //! keep the lanes in flight without loop-carried stalls (and so the
-//! structure mirrors the 4-lane AVX2 vectors — each unrolled body is
-//! one vector's worth of work). The [`super::avx2`] module must match
-//! these bit for bit; the module tests sweep both against `u128`
-//! references.
+//! structure mirrors an AVX2 vector / half an AVX-512 vector — each
+//! unrolled body is one vector's worth of work). Every vector module
+//! (`avx2`, `avx512`, `neon`) must match these bit for bit; the module
+//! tests sweep all detected engines against `u128` references.
 
 #[inline]
 pub fn mul_shr(a: &[u64], b: &[u64], f: u32, out: &mut [u64]) {

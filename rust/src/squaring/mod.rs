@@ -86,8 +86,9 @@ pub fn ilm_square_fixed(a: u64, frac_bits: u32, iterations: u32) -> u64 {
 /// for the explicit lane engine ([`crate::simd`]): instead of iterating
 /// the correction recursion per lane, every correction **stage** runs as
 /// one pass over the tile — first the priority-encoder pass
-/// ([`Engine::priority_encode_batch`]), then the eq-28 assembly — so the
-/// inner loops are branch-light and lane-parallel. Per lane the executed
+/// ([`Engine::priority_encode_batch`], vectorized on AVX-512/NEON),
+/// then the eq-28 assembly — so the inner loops are branch-light and
+/// lane-parallel. Per lane the executed
 /// operation sequence is exactly [`ilm_square`]'s (settled lanes skip
 /// their remaining stages, as the scalar early-out does), so results are
 /// bit-identical; the unit test pins this per engine.

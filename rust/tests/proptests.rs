@@ -310,16 +310,22 @@ fn prop_kernel_backend_bit_identical_to_scalar_datapath_all_formats() {
 /// bit, for all formats × rounding modes × tile widths — including
 /// batch lengths that are not tile multiples, special and subnormal
 /// lanes, repeated divisors (reciprocal-cache hits) and both multiplier
-/// backends. On hosts with AVX2 the `Forced` choice exercises the real
-/// vector engine; elsewhere it is skipped (scalar vs scalar would be
-/// vacuous) but the kernel-vs-datapath half still runs.
+/// backends. On hosts with a vector engine the `Forced` choice
+/// exercises the widest one; elsewhere that half is skipped (scalar vs
+/// scalar would be vacuous) but the kernel-vs-datapath half still runs.
+/// A final sweep drives `kernel::divide_batch` with **every** detected
+/// engine — on an AVX-512 host that pins scalar, AVX2 *and* AVX-512
+/// (and on aarch64, NEON) against the same forced-scalar kernel
+/// result, vectorized ILM priority encoder included.
 #[test]
 fn prop_forced_simd_kernel_bit_identical_to_forced_scalar_and_datapath() {
     use tsdiv::coordinator::{Backend, KernelBackend, ScalarNativeBackend};
     use tsdiv::fp::ALL_FORMATS;
     use tsdiv::harness::special_patterns;
-    use tsdiv::kernel::KernelConfig;
-    use tsdiv::simd::{simd_available, SimdChoice};
+    use tsdiv::kernel::{divide_batch, KernelConfig, KernelScratch};
+    use tsdiv::powering::{ExactMul, IlmBackend};
+    use tsdiv::simd::{engines_available, simd_available, SimdChoice};
+    use tsdiv::taylor::TaylorConfig;
     forall(
         Config::named("forced-simd kernel == forced-scalar kernel == datapath").cases(30),
         |d| {
@@ -381,6 +387,40 @@ fn prop_forced_simd_kernel_bit_identical_to_forced_scalar_and_datapath() {
                     check_that!(
                         qf == qsk,
                         "forced-simd != forced-scalar ({}, {rm:?}, tile={tile}, ilm={ilm:?})",
+                        fmt.name()
+                    );
+                }
+                // Every *detected* engine — not just the widest one
+                // `Forced` resolves to — must match the forced-scalar
+                // kernel bit for bit. Driving `kernel::divide_batch`
+                // directly pins the intermediate engines too (AVX2 on
+                // an AVX-512 host) and runs the vectorized ILM
+                // priority-encoder pass under every vector width.
+                let cfg = TaylorConfig {
+                    order: 5,
+                    ..TaylorConfig::paper_default(60)
+                };
+                for eng in engines_available() {
+                    let mut out = vec![0u64; n];
+                    let mut scratch = KernelScratch::new();
+                    match ilm {
+                        None => {
+                            let mut be = ExactMul::default();
+                            divide_batch(
+                                &cfg, &mut be, &mut scratch, tile, eng, &a, &b, fmt, rm, &mut out,
+                            );
+                        }
+                        Some(iterations) => {
+                            let mut be = IlmBackend::new(iterations);
+                            divide_batch(
+                                &cfg, &mut be, &mut scratch, tile, eng, &a, &b, fmt, rm, &mut out,
+                            );
+                        }
+                    }
+                    check_that!(
+                        out == qsk,
+                        "engine {} != forced-scalar kernel ({}, {rm:?}, tile={tile}, ilm={ilm:?})",
+                        eng.name(),
                         fmt.name()
                     );
                 }
