@@ -2,13 +2,14 @@
 //!
 //! The paper's introduction motivates hardware FP division with exactly
 //! this workload ("K-Means Clustering and QR Decomposition"). Here the
-//! centroid-update divisions (sum / count) run through the
-//! **coordinator service** — batched, on the PJRT AOT artifact when
-//! `artifacts/` is built, otherwise on the native staged-kernel datapath
-//! as **bfloat16 requests** (centroids tolerate bf16's 8-bit
-//! significand easily, and ML-shaped traffic is exactly where bf16
-//! division shows up) — proving all layers, and the multi-format path,
-//! compose end to end.
+//! centroid updates (sum / count) run through the **coordinator
+//! service** — batched, on the PJRT AOT artifact when `artifacts/` is
+//! built (f32 divisions), otherwise on the staged-kernel datapath as
+//! **bfloat16 fused scale-by-reciprocal requests**: one divisor per
+//! centroid is inverted once and broadcast across its DIM sum lanes
+//! (centroids tolerate bf16's 8-bit significand easily, and ML-shaped
+//! traffic is exactly where bf16 shows up) — proving all layers, the
+//! multi-format path, and the typed op axis compose end to end.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example kmeans
@@ -17,7 +18,7 @@
 use std::time::{Duration, Instant};
 
 use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
-use tsdiv::fp::{decode_f32, encode_f32, BF16};
+use tsdiv::fp::{decode_f32, encode_f32, Rounding, BF16};
 use tsdiv::runtime::artifacts_available;
 use tsdiv::util::rng::Rng;
 use tsdiv::util::table::{sig, Align, Table};
@@ -28,21 +29,22 @@ const POINTS: usize = 20_000;
 const MAX_ITERS: usize = 25;
 
 fn main() {
-    // The PJRT artifact serves f32/nearest only; the native path takes
-    // the centroid divisions as bf16 requests to exercise the typed
-    // multi-format pipeline end to end.
+    // The PJRT artifact serves f32/nearest divisions only; the local
+    // path takes the centroid updates as bf16 scale-by-recip requests
+    // through the kernel backend (the only local family that serves
+    // the fused op) to exercise the typed op + format axes end to end.
     let (backend, use_bf16) = if artifacts_available() {
         println!("backend: PJRT (AOT JAX/Pallas artifact — L1+L2+L3 composed), f32 requests");
         (BackendChoice::Pjrt, false)
     } else {
         println!(
-            "backend: native staged-kernel datapath, bf16 centroid divisions \
-             (run `make artifacts` for PJRT)"
+            "backend: staged-kernel datapath, bf16 scale-by-recip centroid \
+             updates (run `make artifacts` for PJRT)"
         );
         (
-            BackendChoice::Native {
+            BackendChoice::Kernel {
                 order: 5,
-                ilm_iterations: None,
+                kernel: tsdiv::kernel::KernelConfig::default(),
             },
             true,
         )
@@ -122,30 +124,35 @@ fn main() {
             }
         }
         let mut num = Vec::with_capacity(K * DIM);
-        let mut den = Vec::with_capacity(K * DIM);
         for ci in 0..K {
             for j in 0..DIM {
                 num.push(sums[ci][j] as f32);
-                den.push(counts[ci].max(1) as f32);
             }
         }
         divisions_served += num.len() as u64;
-        // bf16 path: pack the f32 sums/counts into bfloat16 lanes, divide
-        // in bf16, decode the quotients back (exact — every bf16 value is
-        // an f32). Centroids only steer the assignment step, so bf16's
-        // ~3 significant decimal digits cost nothing against blob spacing.
+        // bf16 path: one fused scale-by-reciprocal request — K divisor
+        // rows (the counts, inverted once each) broadcast across their
+        // DIM sum lanes. Quotients decode back exactly (every bf16
+        // value is an f32); centroids only steer the assignment step,
+        // so bf16's ~3 significant decimal digits cost nothing against
+        // blob spacing.
         let q: Vec<f32> = if use_bf16 {
-            let nb: Vec<u16> = num.iter().map(|&x| encode_f32(x, BF16) as u16).collect();
-            let db: Vec<u16> = den.iter().map(|&x| encode_f32(x, BF16) as u16).collect();
+            let lanes: Vec<u64> = num.iter().map(|&x| encode_f32(x, BF16)).collect();
+            let divisors: Vec<u64> = counts
+                .iter()
+                .map(|&c| encode_f32(c.max(1) as f32, BF16))
+                .collect();
+            let req = DivRequest::scale_by_recip(BF16, Rounding::NearestEven, lanes, divisors);
             let resp = svc
-                .divide_request_blocking(DivRequest::from_bf16_bits(&nb, &db))
-                .expect("bf16 centroid division batch");
+                .divide_request_blocking(req)
+                .expect("bf16 centroid scale-by-recip batch");
             resp.to_u16_bits()
                 .expect("bfloat16 response")
                 .iter()
                 .map(|&b| decode_f32(b as u64, BF16))
                 .collect()
         } else {
+            let den: Vec<f32> = (0..K * DIM).map(|i| counts[i / DIM].max(1) as f32).collect();
             svc.divide_request_blocking(DivRequest::from_f32(&num, &den))
                 .expect("centroid division batch")
                 .to_f32()
@@ -190,7 +197,11 @@ fn main() {
         .aligns(&[Align::Left, Align::Right]);
     t.row(&["points × dims".into(), format!("{POINTS} × {DIM}")]);
     t.row(&["clusters".into(), K.to_string()]);
-    let fmt_label = if use_bf16 { "bf16 (typed requests)" } else { "f32" };
+    let fmt_label = if use_bf16 {
+        "bf16 (scale-by-recip requests)"
+    } else {
+        "f32"
+    };
     t.row(&["division format".into(), fmt_label.into()]);
     t.row(&["iterations run".into(), inertia_log.len().to_string()]);
     t.row(&["final inertia".into(), sig(*inertia_log.last().unwrap(), 6)]);

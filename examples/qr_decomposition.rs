@@ -2,14 +2,18 @@
 //! executed by the paper's division unit (the second workload the
 //! paper's introduction motivates).
 //!
-//! MGS needs divisions in the normalization step `q_k = v_k / r_kk` and
-//! in back-substitution when the factors are used to solve `Ax = b`.
-//! The normalization divisions go through the **coordinator service as
-//! binary16 requests** (one batched `DivRequest` of N lanes per column
-//! — the mixed-precision serving path end to end); back-substitution
-//! runs on [`tsdiv::divider::TaylorDivider`] directly. The example
-//! verifies ‖QR − A‖, orthogonality of Q, and the solve residual at
-//! tolerances that account for f16's 11-bit significand.
+//! MGS normalizes each column as `q_k = v_k / r_kk` with
+//! `r_kk = ‖v_k‖`, and back-substitution divides by the diagonal of R
+//! when the factors solve `Ax = b`. The normalization goes through the
+//! **coordinator service as binary16 fused-op requests**: an `Rsqrt`
+//! request serves `1/√(norm²)` (r_kk is reconstructed client-side as
+//! `norm² · rsqrt(norm²)`), then one `ScaleByRecip` row of N lanes
+//! scales the column by `1/r_kk` — the divisor is inverted once and
+//! broadcast, exactly the QR shape the fused op exists for.
+//! Back-substitution runs on [`tsdiv::divider::TaylorDivider`]
+//! directly. The example verifies ‖QR − A‖, orthogonality of Q, and
+//! the solve residual at tolerances that account for f16's 11-bit
+//! significand.
 //!
 //! ```bash
 //! cargo run --release --example qr_decomposition
@@ -19,7 +23,7 @@ use std::time::Duration;
 
 use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
 use tsdiv::divider::{Divider, TaylorDivider};
-use tsdiv::fp::{decode_f32, encode_f32, F16};
+use tsdiv::fp::{decode_f32, encode_f32, Rounding, F16};
 use tsdiv::util::rng::Rng;
 use tsdiv::util::table::{sig, Align, Table};
 
@@ -44,7 +48,10 @@ impl Mat {
 
 fn main() {
     let mut div = TaylorDivider::paper_exact();
-    // The division service handling the f16 normalization batches.
+    // The service handling the f16 rsqrt + scale-by-recip batches: the
+    // Goldschmidt datapath serves every typed op (the native backend is
+    // division-only), so QR exercises the second kernel family while
+    // kmeans exercises the Taylor one.
     let svc = DivisionService::start(
         ServiceConfig {
             workers: 2,
@@ -53,9 +60,10 @@ fn main() {
             queue_capacity: 1 << 12,
             ..ServiceConfig::default()
         },
-        BackendChoice::Native {
-            order: 5,
-            ilm_iterations: None,
+        BackendChoice::Goldschmidt {
+            iterations: 3,
+            kernel: tsdiv::kernel::KernelConfig::default(),
+            trunc_bits: 0,
         },
     )
     .expect("service start");
@@ -83,18 +91,35 @@ fn main() {
         for i in 0..N {
             norm2 += v.at(i, k) * v.at(i, k);
         }
-        let rkk = norm2.sqrt();
+        // r_kk = ‖v_k‖ = norm² · rsqrt(norm²): the square root itself
+        // is served as a typed f16 Rsqrt request and the norm is
+        // reconstructed client-side with one f32 multiply.
+        let rsq = svc
+            .divide_request_blocking(DivRequest::rsqrt(
+                F16,
+                Rounding::NearestEven,
+                vec![encode_f32(norm2, F16)],
+            ))
+            .expect("f16 rsqrt request")
+            .to_u16_bits()
+            .expect("binary16 response");
+        let inv_norm = decode_f32(rsq[0] as u64, F16);
+        let rkk = norm2 * inv_norm;
         r.set(k, k, rkk);
-        // q_k = v_k / r_kk — one batched f16 DivRequest of N lanes
-        // through the service (the typed multi-format path). The f16
-        // quotients decode exactly back into f32.
-        let num: Vec<u16> = (0..N)
-            .map(|i| encode_f32(v.at(i, k), F16) as u16)
-            .collect();
-        let den: Vec<u16> = vec![encode_f32(rkk, F16) as u16; N];
+        divisions += 1;
+        // q_k = v_k · (1/r_kk) — one fused scale-by-recip row of N
+        // lanes: the divisor is inverted once and broadcast across the
+        // column. The f16 quotients decode exactly back into f32.
+        let lanes: Vec<u64> = (0..N).map(|i| encode_f32(v.at(i, k), F16)).collect();
+        let divisors = vec![encode_f32(rkk, F16)];
         let quot = svc
-            .divide_request_blocking(DivRequest::from_f16_bits(&num, &den))
-            .expect("f16 normalization batch")
+            .divide_request_blocking(DivRequest::scale_by_recip(
+                F16,
+                Rounding::NearestEven,
+                lanes,
+                divisors,
+            ))
+            .expect("f16 scale-by-recip normalization")
             .to_u16_bits()
             .expect("binary16 response");
         for i in 0..N {
@@ -177,24 +202,29 @@ fn main() {
         .aligns(&[Align::Left, Align::Right]);
     t.row(&["matrix".into(), format!("{N} × {N}")]);
     t.row(&["divider (back-substitution)".into(), div.name()]);
-    t.row(&["normalization format".into(), "f16 (typed service requests)".into()]);
-    t.row(&["unit divisions performed".into(), divisions.to_string()]);
+    t.row(&[
+        "normalization ops".into(),
+        "f16 rsqrt + scale-by-recip".into(),
+    ]);
+    t.row(&["unit ops performed".into(), divisions.to_string()]);
     t.row(&["service batches".into(), m.batches.to_string()]);
     t.row(&["‖QR − A‖_max".into(), sig(qr_err as f64, 3)]);
     t.row(&["‖QᵀQ − I‖_max".into(), sig(ortho_err as f64, 3)]);
     t.row(&["solve ‖x − x*‖_max".into(), sig(solve_err as f64, 3)]);
     t.print();
 
-    // Tolerances scale with f16's 2^-11 quotient granularity: Q entries
-    // carry ~5e-4 relative error, so reconstruction/orthogonality land
-    // around N·ε ≈ 1e-2 and the back-substituted solve a step above.
+    // Tolerances scale with f16's 2^-11 granularity: the fused
+    // normalization chain (rsqrt, reciprocal, broadcast multiply) puts
+    // ~3 half-precision roundings on each Q entry (~1.5e-3 relative),
+    // so reconstruction/orthogonality land around N·ε ≈ 1e-2 and the
+    // back-substituted solve a step above.
     assert!(qr_err < 5e-2, "QR reconstruction too loose: {qr_err}");
     assert!(ortho_err < 5e-2, "Q not orthogonal: {ortho_err}");
     assert!(solve_err < 2.5e-1, "solve failed: {solve_err}");
     assert_eq!(m.failures, 0);
     svc.shutdown();
     println!(
-        "\nOK — QR with f16 normalization through the service is numerically sound \
-         at half-precision tolerances."
+        "\nOK — QR with f16 rsqrt + scale-by-recip normalization through the service \
+         is numerically sound at half-precision tolerances."
     );
 }

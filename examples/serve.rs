@@ -3,7 +3,7 @@
 //!
 //! Requests go through the typed API (`DivRequest` bit-pattern lanes +
 //! format + rounding); `--format mixed` interleaves all four formats to
-//! exercise per-`(Format, Rounding)` batch keying.
+//! exercise per-`(Op, Format, Rounding)` batch keying.
 //!
 //! ```bash
 //! cargo run --release --example serve -- --backend native --seconds 3

@@ -5,7 +5,7 @@
 use std::time::{Duration, Instant};
 
 use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig, SubmitError};
-use tsdiv::fp::{Format, ALL_FORMATS, F32};
+use tsdiv::fp::{Format, Op, Rounding, ALL_FORMATS, F32};
 use tsdiv::harness::gen_bits_batch;
 use tsdiv::runtime::artifacts_available;
 use tsdiv::util::json::Json;
@@ -81,6 +81,88 @@ fn run_load_formats(
     match std::sync::Arc::try_unwrap(svc) {
         Ok(s) => s.shutdown(),
         Err(_) => {}
+    }
+    out
+}
+
+/// Divisor rows per scale-by-recip request: 256 lanes split into 8
+/// rows of 32, so every request straddles pipeline tiles and the
+/// broadcast path is actually exercised.
+const SCALE_ROWS: usize = 8;
+
+/// Closed-loop per-op load on f32/nearest traffic: `clients` threads
+/// each keep one typed request of `lanes` lanes in flight. Returns
+/// (lanes/s, p50 ms, p99 ms).
+fn run_load_op(
+    backend: BackendChoice,
+    op: Op,
+    clients: usize,
+    lanes: usize,
+    duration: Duration,
+) -> (f64, f64, f64) {
+    let svc = std::sync::Arc::new(
+        DivisionService::start(
+            ServiceConfig {
+                workers: 2,
+                max_batch: 4096,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 1 << 14,
+                ..ServiceConfig::default()
+            },
+            backend,
+        )
+        .expect("service"),
+    );
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for cid in 0..clients {
+        let svc = std::sync::Arc::clone(&svc);
+        let stop = std::sync::Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut lanes_done = 0u64;
+            let mut req_no = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let (a, b) = gen_bits_batch(F32, lanes, 8, cid as u64 * 1000 + req_no);
+                req_no += 1;
+                let req = match op {
+                    Op::Div => DivRequest::new(F32, Rounding::NearestEven, a, b),
+                    Op::Recip => DivRequest::recip(F32, Rounding::NearestEven, a),
+                    Op::Rsqrt => {
+                        // rsqrt of a negative is NaN fill, not refinement.
+                        let mut xs = a;
+                        for x in xs.iter_mut() {
+                            *x &= !F32.sign_mask();
+                        }
+                        DivRequest::rsqrt(F32, Rounding::NearestEven, xs)
+                    }
+                    Op::ScaleByRecip => DivRequest::scale_by_recip(
+                        F32,
+                        Rounding::NearestEven,
+                        a,
+                        b[..SCALE_ROWS].to_vec(),
+                    ),
+                };
+                match svc.submit_request(req) {
+                    Ok(t) => {
+                        t.wait().expect("typed op");
+                        lanes_done += lanes as u64;
+                    }
+                    Err(SubmitError::Busy) => std::thread::yield_now(),
+                    Err(e) => panic!("{e}"),
+                }
+            }
+            lanes_done
+        }));
+    }
+    let t0 = Instant::now();
+    std::thread::sleep(duration);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    let out = (total as f64 / dt, m.latency_p50 * 1e3, m.latency_p99 * 1e3);
+    if let Ok(s) = std::sync::Arc::try_unwrap(svc) {
+        s.shutdown()
     }
     out
 }
@@ -248,7 +330,7 @@ fn main() {
 
     // Multi-format traffic through the typed request API: homogeneous
     // loads per format, then the interleaved mix (which the batcher must
-    // keep coalescing by (Format, Rounding) key).
+    // keep coalescing by (Op, Format, Rounding) key).
     let mut t = Table::new(
         "typed requests: throughput by format, cost-weighted budgets (2 workers, 8 clients × 256 lanes)",
         &["traffic", "div/s", "p50 ms", "p99 ms", "lanes/batch", "cost/batch"],
@@ -305,6 +387,7 @@ fn main() {
     let goldschmidt = BackendChoice::Goldschmidt {
         iterations: 3,
         kernel: tsdiv::kernel::KernelConfig::default(),
+        trunc_bits: 0,
     };
     let mut t = Table::new(
         "goldschmidt datapath + adaptive router (2 workers, 8 clients × 256 lanes)",
@@ -338,6 +421,46 @@ fn main() {
         format!("{auto_p99:.3}"),
         format!("{auto_lpb:.1}"),
     ]);
+    t.print();
+
+    // Typed fused ops through both kernel datapaths on f32/nearest
+    // traffic. recip/rsqrt lanes/s are the router's per-op history
+    // seeds ({op}_div_per_s_{backend}); scale-by-recip is additionally
+    // reported in rows/s — each row is one reciprocal inverted once
+    // and broadcast across its 32 lanes.
+    let kernel = BackendChoice::Kernel {
+        order: 5,
+        kernel: tsdiv::kernel::KernelConfig::default(),
+    };
+    let mut t = Table::new(
+        "typed fused ops: kernel vs goldschmidt (2 workers, 8 clients × 256 lanes, f32)",
+        &["op", "backend", "lanes/s", "p50 ms", "p99 ms"],
+    )
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let mut op_thr: Vec<(Op, &str, f64)> = Vec::new();
+    for &(op, backend_label, backend) in &[
+        (Op::Recip, "kernel", kernel),
+        (Op::Recip, "goldschmidt", goldschmidt),
+        (Op::Rsqrt, "kernel", kernel),
+        (Op::Rsqrt, "goldschmidt", goldschmidt),
+        (Op::ScaleByRecip, "kernel", kernel),
+    ] {
+        let (thr, p50, p99) = run_load_op(backend, op, 8, 256, dur);
+        op_thr.push((op, backend_label, thr));
+        t.row(&[
+            op.name().to_string(),
+            backend_label.to_string(),
+            sig(thr, 4),
+            format!("{p50:.3}"),
+            format!("{p99:.3}"),
+        ]);
+    }
     t.print();
 
     // Worker-scaling sweep on mixed-format traffic (the ROADMAP's
@@ -401,6 +524,29 @@ fn main() {
         j.set(&format!("goldschmidt_div_per_s_{fmt_name}"), thr.into());
     }
     j.set("router_auto_div_per_s", auto_thr.into());
+    // Per-op rows: recip/rsqrt lanes/s per backend (these exact keys
+    // seed the router's per-op cells on later runs) and the fused
+    // scale-by-recip in rows/s (one reciprocal broadcast per row). All
+    // carry the per_s suffix, so the direction-aware gate judges them
+    // higher-is-better — and prints n/a against history predating the
+    // op axis instead of failing.
+    for &(op, backend_label, thr) in &op_thr {
+        match op {
+            Op::Recip | Op::Rsqrt => {
+                j.set(
+                    &format!("{}_div_per_s_{}", op.name(), backend_label),
+                    thr.into(),
+                );
+            }
+            Op::ScaleByRecip => {
+                j.set(
+                    "scale_recip_rows_per_s",
+                    (thr * SCALE_ROWS as f64 / 256.0).into(),
+                );
+            }
+            Op::Div => {}
+        }
+    }
     tsdiv::harness::write_bench_json("coordinator_serve", &j);
 
     // Coordinator overhead: service vs bare loop over IDENTICAL

@@ -2,10 +2,10 @@
 //! homogeneous backend batches and split results back, independent of
 //! threading.
 //!
-//! Heterogeneous traffic (any mix of f16/bf16/f32/f64 at any rounding
-//! mode) is bucketed by [`BatchKey`] so every emitted [`Batch`] carries
-//! one `(Format, Rounding)` pair and can run through a single
-//! `div_bits_batch` call. Each bucket accumulates **cost units**
+//! Heterogeneous traffic (any mix of ops and of f16/bf16/f32/f64 at any
+//! rounding mode) is bucketed by [`BatchKey`] so every emitted [`Batch`]
+//! carries one `(Op, Format, Rounding)` triple and can run through a
+//! single backend call. Each bucket accumulates **cost units**
 //! independently until the shared budget is met: a lane is charged
 //! [`BatchKey::lane_cost`] (f64 ≈ 2× f16/bf16), so a wide-format bucket
 //! ships with fewer lanes than a half-format bucket of equal backend
@@ -22,7 +22,7 @@
 use std::time::{Duration, Instant};
 
 use super::request::BatchKey;
-use crate::fp::F32;
+use crate::fp::{Op, F32};
 
 /// Cost units per binary32 lane — the reference the assembler's budget
 /// is denominated in: a budget of `n` "lanes" means the backend work of
@@ -30,7 +30,11 @@ use crate::fp::F32;
 pub const REF_LANE_COST: usize = F32.lane_cost();
 
 /// A request's lanes plus its index for response routing. Operands are
-/// raw bit patterns of the owning batch's format.
+/// raw bit patterns of the owning batch's format, in the batch key's
+/// op shape: matched `a`/`b` for `Div`, `b` empty for the unary ops,
+/// `b` one-divisor-per-row for `ScaleByRecip` (rows are `a.len() /
+/// b.len()` lanes each — equal length within one item, free to differ
+/// between coalesced items).
 #[derive(Clone, Debug)]
 pub struct BatchItem {
     pub request_id: u64,
@@ -75,15 +79,24 @@ impl Batch {
         self.items.is_empty()
     }
 
-    /// Flatten all items into contiguous operand vectors.
-    pub fn flatten(&self) -> (Vec<u64>, Vec<u64>) {
+    /// Flatten all items into contiguous operand vectors, plus the
+    /// per-row lane counts the `ScaleByRecip` backends consume (aligned
+    /// with the flattened `b`: `rows[r]` lanes of `a` divide by `b[r]`).
+    /// `rows` is empty for every other op; coalesced `ScaleByRecip`
+    /// items keep their own row lengths.
+    pub fn flatten(&self) -> (Vec<u64>, Vec<u64>, Vec<u32>) {
         let mut a = Vec::with_capacity(self.lanes);
-        let mut b = Vec::with_capacity(self.lanes);
+        let mut b = Vec::new();
+        let mut rows = Vec::new();
         for it in &self.items {
             a.extend_from_slice(&it.a);
             b.extend_from_slice(&it.b);
+            if self.key.op == Op::ScaleByRecip {
+                let row_len = (it.a.len() / it.b.len()) as u32;
+                rows.resize(rows.len() + it.b.len(), row_len);
+            }
         }
-        (a, b)
+        (a, b, rows)
     }
 
     /// Split a flat result back into per-request chunks
@@ -168,7 +181,13 @@ impl BatchAssembler {
     /// unaffected. Invariant: an emitted batch never exceeds the budget
     /// by more than its own final request's cost.
     pub fn push(&mut self, key: BatchKey, item: BatchItem) -> Option<Batch> {
-        debug_assert_eq!(item.a.len(), item.b.len());
+        match key.op {
+            Op::Div => debug_assert_eq!(item.a.len(), item.b.len()),
+            Op::Recip | Op::Rsqrt => debug_assert!(item.b.is_empty()),
+            Op::ScaleByRecip => {
+                debug_assert!(!item.b.is_empty() && item.a.len() % item.b.len() == 0)
+            }
+        }
         let max_cost = self.max_cost;
         let lanes = item.a.len();
         let cost = lanes * key.lane_cost();
@@ -217,7 +236,7 @@ impl BatchAssembler {
     }
 
     /// Flush only the buckets whose **oldest lane** has waited at least
-    /// `max_age` — the per-key `max_wait`: a rare `(Format, Rounding)`
+    /// `max_age` — the per-key `max_wait`: a rare `(Op, Format, Rounding)`
     /// bucket ships when *its* clock expires instead of riding the whole
     /// coalescing window opened by busier keys, and fresh buckets keep
     /// coalescing instead of being force-flushed alongside it.
@@ -492,15 +511,88 @@ mod tests {
             batch.items.push(item(id, n));
             batch.lanes += n;
         }
-        let (a, b) = batch.flatten();
+        let (a, b, rows) = batch.flatten();
         assert_eq!(a.len(), 9);
         assert_eq!(b.len(), 9);
+        assert!(rows.is_empty(), "rows only travel for scale-recip");
         // Identity "result": split must route lanes back by request.
         let parts = batch.split(&a);
         assert_eq!(parts.len(), 3);
         assert_eq!(parts[0], (10, vec![10u64; 3]));
         assert_eq!(parts[1], (11, vec![11u64; 1]));
         assert_eq!(parts[2], (12, vec![12u64; 5]));
+    }
+
+    #[test]
+    fn ops_never_coalesce_across_keys() {
+        // Same format and rounding, four different ops: four buckets.
+        let mut asm = BatchAssembler::new(100);
+        asm.push(key32(), item(1, 4));
+        asm.push(
+            BatchKey::for_op(Op::Recip, F32, Rounding::NearestEven),
+            BatchItem {
+                request_id: 2,
+                a: vec![2; 4],
+                b: vec![],
+            },
+        );
+        asm.push(
+            BatchKey::for_op(Op::Rsqrt, F32, Rounding::NearestEven),
+            BatchItem {
+                request_id: 3,
+                a: vec![3; 4],
+                b: vec![],
+            },
+        );
+        asm.push(
+            BatchKey::for_op(Op::ScaleByRecip, F32, Rounding::NearestEven),
+            BatchItem {
+                request_id: 4,
+                a: vec![4; 4],
+                b: vec![9, 9],
+            },
+        );
+        let batches = asm.take_all();
+        assert_eq!(batches.len(), 4);
+        for b in &batches {
+            assert_eq!(b.items.len(), 1, "ops must not mix in one batch");
+        }
+    }
+
+    #[test]
+    fn scale_recip_items_flatten_with_their_own_row_lengths() {
+        // Two coalesced scale-recip requests with different row shapes:
+        // 6 lanes over 2 rows (3 each), then 4 lanes over 4 rows (1
+        // each). The flattened rows vector interleaves nothing — it
+        // follows item order, one entry per divisor.
+        let key = BatchKey::for_op(Op::ScaleByRecip, F32, Rounding::NearestEven);
+        let mut asm = BatchAssembler::new(100);
+        asm.push(
+            key,
+            BatchItem {
+                request_id: 1,
+                a: (0..6).collect(),
+                b: vec![100, 101],
+            },
+        );
+        asm.push(
+            key,
+            BatchItem {
+                request_id: 2,
+                a: (6..10).collect(),
+                b: vec![102, 103, 104, 105],
+            },
+        );
+        let batches = asm.take_all();
+        assert_eq!(batches.len(), 1);
+        let (a, b, rows) = batches[0].flatten();
+        assert_eq!(a, (0..10).collect::<Vec<u64>>());
+        assert_eq!(b, vec![100, 101, 102, 103, 104, 105]);
+        assert_eq!(rows, vec![3, 3, 1, 1, 1, 1]);
+        // split() routes by a-lanes, independent of row shape.
+        let parts = batches[0].split(&a);
+        assert_eq!(parts[0], (1, (0..6).collect::<Vec<u64>>()));
+        assert_eq!(parts[1], (2, (6..10).collect::<Vec<u64>>()));
     }
 
     #[test]

@@ -4,11 +4,11 @@
 //! Architecture (sharded runtime, PR 6):
 //!
 //! ```text
-//!  clients ──submit_request(DivRequest{fmt,rm,a,b})──┐
+//! clients ─submit_request(DivRequest{op,fmt,rm,a,b})─┐
 //!     │ typed constructors:                          │ shard_for(BatchKey):
-//!     │ from_f32/from_f64/                           │ Fibonacci hash of
-//!     │ from_f16_bits/from_bf16_bits                 │ (format × rounding) —
-//!     │                                              │ key-affine, so a bucket's
+//!     │ new/from_* (Div), recip, rsqrt,              │ Fibonacci hash of
+//!     │ scale_by_recip (one divisor/row)             │ (op × format × rounding)
+//!     │                                              │ — key-affine, so a bucket's
 //!     │                                              │ lanes always coalesce on ONE
 //!     │                                              │ shard; oversize requests
 //!     │                                              │ (≥ full batch budget) spread
@@ -20,7 +20,7 @@
 //!     │        (Busy when full: queue_capacity / shards each)        │
 //!     │        batcher thread batcher thread   batcher thread        │
 //!     │          │ local BatchAssembler per shard: bucket by         │
-//!     │          │ (Format, Rounding), cost-unit budgets, adaptive   │
+//!     │          │ (Op, Format, Rounding), cost budgets, adaptive    │
 //!     │          │ flush (full bucket / idle worker / per-key        │
 //!     │          │ max_wait), spare-capacity budget shrink           │
 //!     │          ▼              ▼                ▼                   │
@@ -33,9 +33,9 @@
 //!     │                    take half (exec first, migrate rest home) │
 //!     │                 3. else park (flush MetricsBatch → relaxed   │
 //!     │                    stores into WorkerMetrics, once per park) │
-//!     │                 Backend::divide(bits, fmt, rm) per batch     │
+//!     │                 Backend::compute(op, …, fmt, rm) per batch   │
 //!     │   ┌─ BackendRouter (crate::router, Auto only) ────────────┐  │
-//!     │   │ pick(fmt, rm, lanes): per-bucket per-lane-seconds     │  │
+//!     │   │ pick(op, fmt, rm, lanes): per-bucket per-lane-seconds │  │
 //!     │   │ table (history-seeded / static prior, epsilon-greedy) │  │
 //!     │   │   ├─► Taylor kernel      ─┐ observe(measured          │  │
 //!     │   │   └─► Goldschmidt kernel ─┘         batch latency)    │  │
@@ -47,6 +47,8 @@
 //!     │        │ aside    lookup  (odd/even) pack    │  /Goldschmidt │
 //!     │        │ (Goldschmidt path: plan ─► seed ─►  │  /Auto        │
 //!     │        │  iterate ─► round, same scratch)    │  /Gold/Pjrt   │
+//!     │        │ (op tails: Recip drops ·a, Rsqrt    │               │
+//!     │        │  Newton, ScaleByRecip broadcasts)   │               │
 //!     │        └─ 8-lane tiles, crate::simd engine ──┘               │
 //!     └──◄── DivTicket::wait() → DivResponse{fmt,rm,bits} ◄──────────┘
 //! ```
@@ -54,10 +56,11 @@
 //! Batches travel **whole** — each carries its positionally-aligned
 //! responders — so the no-cross-wired/no-hung-waiter invariant survives
 //! any interleaving of steals and shutdown. Heterogeneous traffic (any
-//! mix of binary16/bfloat16/binary32/binary64 under any rounding mode)
-//! rides the same `div_bits_batch` lanes: no shard ever mixes keys
+//! mix of the four typed ops — `Div`, `Recip`, `Rsqrt`,
+//! `ScaleByRecip` — over binary16/bfloat16/binary32/binary64 under any
+//! rounding mode) rides the same batch lanes: no shard ever mixes keys
 //! inside a batch, so each backend call is monomorphic over one
-//! `(Format, Rounding)`.
+//! `(Op, Format, Rounding)`.
 //!
 //! The `Kernel`, `Native` and `NativeScalar` backends are the **same
 //! datapath** at three loop shapes: `Kernel` drives the staged
@@ -71,9 +74,12 @@
 //! iteration instead of a Taylor polynomial) over the same staged
 //! scratch and lane engine, and `Auto` routes every batch to whichever
 //! of the two kernel datapaths currently scores fastest for its
-//! (Format, Rounding, batch-size) bucket — bit-identical per batch to
-//! the fixed backend it picks, since routing never changes what a
-//! datapath computes.
+//! (Op, Format, Rounding, batch-size) bucket — bit-identical per batch
+//! to the fixed backend it picks, since routing never changes what a
+//! datapath computes. The `Kernel`, `Goldschmidt`, `Auto` and `Gold`
+//! backends serve every typed op; `Native`, `NativeScalar` and `Pjrt`
+//! are division-only and reject other ops with a typed error, failing
+//! the batch rather than the service.
 //!
 //! * [`request`] — the typed request/response surface ([`DivRequest`],
 //!   [`DivResponse`], [`BatchKey`]);

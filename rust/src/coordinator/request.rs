@@ -3,95 +3,179 @@
 //! The datapath is format-parametric by construction (every bit pattern
 //! travels in the low bits of a `u64`, see [`crate::fp::format`]), so the
 //! service speaks the same language: a [`DivRequest`] carries raw
-//! bit-pattern lanes plus the [`Format`] that interprets them and the
-//! [`Rounding`] attribute to apply. Convenience constructors cover the
-//! four interchange formats; [`DivResponse`] converts back.
+//! bit-pattern lanes plus the [`Op`] to apply, the [`Format`] that
+//! interprets the lanes and the [`Rounding`] attribute. Convenience
+//! constructors cover the four interchange formats and the four ops;
+//! [`DivResponse`] converts back.
+//!
+//! Operand shape is per-op: `Div` carries matched `a`/`b` lanes; the
+//! unary ops (`Recip`, `Rsqrt`) carry only `a` — no dummy divisor
+//! vector travels with them; `ScaleByRecip` carries `a` as
+//! `b.len()` equal-length concatenated rows (`a.len() % b.len() == 0`)
+//! with `b[r]` the divisor of row `r`.
 
+pub use crate::fp::Op;
 use crate::fp::{Format, Rounding, BF16, F16, F32, F64};
 
 /// The batching key: requests coalesce only with requests of the same
-/// format and rounding mode, so every backend batch is homogeneous.
+/// operation, format and rounding mode, so every backend batch is
+/// homogeneous.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BatchKey {
+    pub op: Op,
     pub fmt: Format,
     pub rm: Rounding,
 }
 
 impl BatchKey {
+    /// Division key — the overwhelmingly common case keeps the short
+    /// constructor; other ops use [`BatchKey::for_op`].
     pub fn new(fmt: Format, rm: Rounding) -> Self {
-        Self { fmt, rm }
+        Self::for_op(Op::Div, fmt, rm)
+    }
+
+    pub fn for_op(op: Op, fmt: Format, rm: Rounding) -> Self {
+        Self { op, fmt, rm }
     }
 
     /// Cost units one lane of this key charges against the assembler's
-    /// coalescing budget (see [`Format::lane_cost`]; rounding mode does
-    /// not change the per-lane work).
+    /// coalescing budget, per op around the format baseline
+    /// ([`Format::lane_cost`]; rounding mode does not change the
+    /// per-lane work): `Recip` skips the final multiply and
+    /// `ScaleByRecip` amortizes the reciprocal across a row (one
+    /// cheaper), `Rsqrt` appends the Newton tail (one dearer).
     pub const fn lane_cost(&self) -> usize {
-        self.fmt.lane_cost()
+        let c = self.fmt.lane_cost();
+        match self.op {
+            Op::Div => c,
+            Op::Recip | Op::ScaleByRecip => {
+                if c > 1 {
+                    c - 1
+                } else {
+                    1
+                }
+            }
+            Op::Rsqrt => c + 1,
+        }
     }
 }
 
 impl std::fmt::Display for BatchKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}/{}", self.fmt.name(), self.rm.name())
+        // Div keys keep their historical "f32/nearest" spelling (logs,
+        // bench keys); other ops prefix their name.
+        if self.op == Op::Div {
+            write!(f, "{}/{}", self.fmt.name(), self.rm.name())
+        } else {
+            write!(f, "{}:{}/{}", self.op.name(), self.fmt.name(), self.rm.name())
+        }
     }
 }
 
-/// One division request: `out[i] = a[i] / b[i]` over `fmt` bit patterns
-/// under rounding mode `rm`.
+/// One service request: an [`Op`] over `fmt` bit patterns under
+/// rounding mode `rm`. Historically division-only (hence the name);
+/// operand shape is per-op — see the module docs.
 #[derive(Clone, Debug)]
 pub struct DivRequest {
+    pub op: Op,
     pub fmt: Format,
     pub rm: Rounding,
-    /// Dividend bit patterns (low `fmt.width()` bits of each `u64`).
+    /// Input bit patterns (low `fmt.width()` bits of each `u64`):
+    /// dividends for `Div`, the operand for `Recip`/`Rsqrt`,
+    /// concatenated equal-length rows for `ScaleByRecip`.
     pub a: Vec<u64>,
-    /// Divisor bit patterns, same length as `a`.
+    /// Divisor bit patterns: same length as `a` for `Div`, one per row
+    /// for `ScaleByRecip`, **empty** for the unary ops.
     pub b: Vec<u64>,
 }
 
 impl DivRequest {
-    /// Raw constructor over bit patterns of an arbitrary format.
+    /// Raw division constructor over bit patterns of an arbitrary
+    /// format.
     pub fn new(fmt: Format, rm: Rounding, a: Vec<u64>, b: Vec<u64>) -> Self {
-        Self { fmt, rm, a, b }
+        Self {
+            op: Op::Div,
+            fmt,
+            rm,
+            a,
+            b,
+        }
+    }
+
+    /// Reciprocal request: `out[i] = 1/x[i]`. No divisor vector.
+    pub fn recip(fmt: Format, rm: Rounding, x: Vec<u64>) -> Self {
+        Self {
+            op: Op::Recip,
+            fmt,
+            rm,
+            a: x,
+            b: Vec::new(),
+        }
+    }
+
+    /// Reciprocal square root request: `out[i] = 1/sqrt(x[i])`.
+    pub fn rsqrt(fmt: Format, rm: Rounding, x: Vec<u64>) -> Self {
+        Self {
+            op: Op::Rsqrt,
+            fmt,
+            rm,
+            a: x,
+            b: Vec::new(),
+        }
+    }
+
+    /// Fused scale-by-reciprocal: `lanes` is `divisors.len()`
+    /// equal-length concatenated rows; every lane of row `r` is divided
+    /// by `divisors[r]` (one reciprocal per row on the batched
+    /// datapaths).
+    pub fn scale_by_recip(fmt: Format, rm: Rounding, lanes: Vec<u64>, divisors: Vec<u64>) -> Self {
+        Self {
+            op: Op::ScaleByRecip,
+            fmt,
+            rm,
+            a: lanes,
+            b: divisors,
+        }
     }
 
     /// binary32 lanes at round-to-nearest-even.
     pub fn from_f32(a: &[f32], b: &[f32]) -> Self {
-        Self {
-            fmt: F32,
-            rm: Rounding::NearestEven,
-            a: a.iter().map(|&x| x.to_bits() as u64).collect(),
-            b: b.iter().map(|&x| x.to_bits() as u64).collect(),
-        }
+        Self::new(
+            F32,
+            Rounding::NearestEven,
+            a.iter().map(|&x| x.to_bits() as u64).collect(),
+            b.iter().map(|&x| x.to_bits() as u64).collect(),
+        )
     }
 
     /// binary64 lanes at round-to-nearest-even.
     pub fn from_f64(a: &[f64], b: &[f64]) -> Self {
-        Self {
-            fmt: F64,
-            rm: Rounding::NearestEven,
-            a: a.iter().map(|&x| x.to_bits()).collect(),
-            b: b.iter().map(|&x| x.to_bits()).collect(),
-        }
+        Self::new(
+            F64,
+            Rounding::NearestEven,
+            a.iter().map(|&x| x.to_bits()).collect(),
+            b.iter().map(|&x| x.to_bits()).collect(),
+        )
     }
 
     /// binary16 lanes given as raw `u16` bit patterns.
     pub fn from_f16_bits(a: &[u16], b: &[u16]) -> Self {
-        Self {
-            fmt: F16,
-            rm: Rounding::NearestEven,
-            a: a.iter().map(|&x| x as u64).collect(),
-            b: b.iter().map(|&x| x as u64).collect(),
-        }
+        Self::new(
+            F16,
+            Rounding::NearestEven,
+            a.iter().map(|&x| x as u64).collect(),
+            b.iter().map(|&x| x as u64).collect(),
+        )
     }
 
     /// bfloat16 lanes given as raw `u16` bit patterns.
     pub fn from_bf16_bits(a: &[u16], b: &[u16]) -> Self {
-        Self {
-            fmt: BF16,
-            rm: Rounding::NearestEven,
-            a: a.iter().map(|&x| x as u64).collect(),
-            b: b.iter().map(|&x| x as u64).collect(),
-        }
+        Self::new(
+            BF16,
+            Rounding::NearestEven,
+            a.iter().map(|&x| x as u64).collect(),
+            b.iter().map(|&x| x as u64).collect(),
+        )
     }
 
     /// Override the rounding mode (builder style).
@@ -100,23 +184,51 @@ impl DivRequest {
         self
     }
 
+    /// Output lanes this request produces (always `a.len()` — every op
+    /// maps input lanes one-to-one to quotient lanes).
     pub fn lanes(&self) -> usize {
         self.a.len()
     }
 
     pub fn key(&self) -> BatchKey {
-        BatchKey::new(self.fmt, self.rm)
+        BatchKey::for_op(self.op, self.fmt, self.rm)
     }
 
-    /// Structural validation: matched non-empty lanes whose bit patterns
-    /// fit the format's storage width. Returns a human-readable defect.
+    /// Structural validation: non-empty lanes in the op's shape, bit
+    /// patterns inside the format's storage width. Returns a
+    /// human-readable defect.
     pub fn validate(&self) -> Result<(), String> {
-        if self.a.len() != self.b.len() {
-            return Err(format!(
-                "operand length mismatch: {} vs {}",
-                self.a.len(),
-                self.b.len()
-            ));
+        match self.op {
+            Op::Div => {
+                if self.a.len() != self.b.len() {
+                    return Err(format!(
+                        "operand length mismatch: {} vs {}",
+                        self.a.len(),
+                        self.b.len()
+                    ));
+                }
+            }
+            Op::Recip | Op::Rsqrt => {
+                if !self.b.is_empty() {
+                    return Err(format!(
+                        "{} is unary: divisor vector must be empty, got {} lanes",
+                        self.op.name(),
+                        self.b.len()
+                    ));
+                }
+            }
+            Op::ScaleByRecip => {
+                if self.b.is_empty() {
+                    return Err("scale-recip needs at least one divisor row".into());
+                }
+                if self.a.len() % self.b.len() != 0 {
+                    return Err(format!(
+                        "scale-recip rows must be equal length: {} lanes over {} rows",
+                        self.a.len(),
+                        self.b.len()
+                    ));
+                }
+            }
         }
         if self.a.is_empty() {
             return Err("empty request".into());
@@ -231,6 +343,71 @@ mod tests {
     fn key_display_names() {
         let k = BatchKey::new(F16, Rounding::TowardNegative);
         assert_eq!(k.to_string(), "f16/down");
+        // Div keys keep the historical spelling; other ops prefix.
+        assert_eq!(
+            BatchKey::for_op(Op::Recip, F32, Rounding::NearestEven).to_string(),
+            "recip:f32/nearest"
+        );
+        assert_eq!(
+            BatchKey::for_op(Op::Rsqrt, F64, Rounding::TowardZero).to_string(),
+            "rsqrt:f64/zero"
+        );
+        assert_eq!(
+            BatchKey::for_op(Op::ScaleByRecip, BF16, Rounding::TowardPositive).to_string(),
+            "scale-recip:bf16/up"
+        );
+    }
+
+    #[test]
+    fn per_op_shapes_validate() {
+        // Unary ops: no divisor vector travels, and none is tolerated.
+        let r = DivRequest::recip(F32, Rounding::NearestEven, vec![0x4000_0000]);
+        assert_eq!(r.op, Op::Recip);
+        assert!(r.b.is_empty());
+        assert!(r.validate().is_ok());
+        assert_eq!(r.key(), BatchKey::for_op(Op::Recip, F32, Rounding::NearestEven));
+        let mut bad = DivRequest::rsqrt(F32, Rounding::NearestEven, vec![0x4000_0000]);
+        bad.b = vec![0x3F80_0000];
+        assert!(bad.validate().unwrap_err().contains("unary"));
+        // Unary lengths are free: no a/b equality requirement at all.
+        let r = DivRequest::rsqrt(F16, Rounding::TowardZero, vec![0x3C00, 0x4000, 0x4400]);
+        assert!(r.validate().is_ok());
+
+        // ScaleByRecip: equal-length rows, one divisor per row.
+        let r = DivRequest::scale_by_recip(
+            F32,
+            Rounding::NearestEven,
+            vec![1, 2, 3, 4, 5, 6],
+            vec![7, 8],
+        );
+        assert!(r.validate().is_ok());
+        assert_eq!(r.lanes(), 6);
+        let r = DivRequest::scale_by_recip(F32, Rounding::NearestEven, vec![1, 2, 3], vec![7, 8]);
+        assert!(r.validate().unwrap_err().contains("equal length"));
+        let r = DivRequest::scale_by_recip(F32, Rounding::NearestEven, vec![1, 2, 3], vec![]);
+        assert!(r.validate().is_err());
+        // Width masking applies to the divisor rows too.
+        let r = DivRequest::scale_by_recip(
+            F16,
+            Rounding::NearestEven,
+            vec![0x3C00, 0x4000],
+            vec![0x1_0000],
+        );
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn per_op_lane_costs_bracket_division() {
+        for fmt in [F16, BF16, F32, F64] {
+            let div = BatchKey::new(fmt, Rounding::NearestEven).lane_cost();
+            let recip = BatchKey::for_op(Op::Recip, fmt, Rounding::NearestEven).lane_cost();
+            let rsqrt = BatchKey::for_op(Op::Rsqrt, fmt, Rounding::NearestEven).lane_cost();
+            let scale =
+                BatchKey::for_op(Op::ScaleByRecip, fmt, Rounding::NearestEven).lane_cost();
+            assert!(recip <= div && scale <= div && rsqrt > div, "{}", fmt.name());
+            assert!(recip >= 1 && scale >= 1);
+            assert_eq!(recip, scale);
+        }
     }
 
     #[test]

@@ -3,14 +3,14 @@
 //!
 //! ## Sharding
 //!
-//! Submissions hash on their [`BatchKey`] (format × rounding) to one of
+//! Submissions hash on their [`BatchKey`] (op × format × rounding) to one of
 //! `shards` independent shards ([`ServiceConfig::shards`], default one
 //! per worker). Each shard owns a bounded submission queue, a batcher
 //! thread with its own [`BatchAssembler`] (cost-unit budgets and
 //! per-key `take_expired` clocks intact), and a ready-batch deque. The
-//! hash is key-affine — every lane of one `(Format, Rounding)` bucket
-//! lands on the same shard, so sharding never splits a coalescing
-//! window. The one exception is the submitter-spread tiebreak: a
+//! hash is key-affine — every lane of one `(Op, Format, Rounding)`
+//! bucket lands on the same shard, so sharding never splits a
+//! coalescing window. The one exception is the submitter-spread tiebreak: a
 //! request so large it can only ship alone (its cost meets the full
 //! batch budget) gains nothing from key affinity, so it spreads across
 //! shards by request id instead of hot-spotting its key's shard.
@@ -160,8 +160,8 @@ pub enum SubmitError {
     Busy,
     /// Service is shutting down.
     Closed,
-    /// Operand vectors disagree in length, are empty, or carry bits
-    /// outside the format's storage width.
+    /// Operand vectors don't match the op's shape contract, are empty,
+    /// or carry bits outside the format's storage width.
     BadRequest(String),
 }
 
@@ -250,7 +250,8 @@ struct Submission {
 type Responders = Vec<Option<Sender<Result<Vec<u64>, String>>>>;
 type WorkItem = (Batch, Responders);
 
-/// Stable small index of a batch key: 4 formats × 4 rounding modes.
+/// Stable small index of a batch key: 4 ops × 4 formats × 4 rounding
+/// modes.
 fn key_slot(key: BatchKey) -> u64 {
     let f = match (key.fmt.exp_bits, key.fmt.frac_bits) {
         (5, 10) => 0u64,  // f16
@@ -264,12 +265,12 @@ fn key_slot(key: BatchKey) -> u64 {
         Rounding::TowardPositive => 2,
         Rounding::TowardNegative => 3,
     };
-    f * 4 + r
+    key.op.idx() as u64 * 16 + f * 4 + r
 }
 
 /// Shard routing: a Fibonacci hash of the key slot keeps each
-/// `(Format, Rounding)` bucket's lanes on one shard (coalescing windows
-/// never split), with `spread` folded in only for oversize requests
+/// `(Op, Format, Rounding)` bucket's lanes on one shard (coalescing
+/// windows never split), with `spread` folded in only for oversize requests
 /// that ship alone anyway (`spread = 0` preserves pure key affinity).
 fn shard_for(key: BatchKey, spread: u64, shards: usize) -> usize {
     const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
@@ -439,13 +440,13 @@ fn resolve_router_env(choice: BackendChoice) -> BackendChoice {
 }
 
 /// One shard's batcher loop: coalesce this shard's submissions into
-/// per-(Format, Rounding) batches with the adaptive flush policy
+/// per-(Op, Format, Rounding) batches with the adaptive flush policy
 /// (§Perf):
 ///
 /// * a bucket reaching the lane budget ships immediately;
 /// * every bucket carries its own clock: once its **oldest** lane has
 ///   waited `max_wait`, that bucket ships alone (per-key max_wait) — a
-///   rare-(Format,Rounding) lane no longer rides a window kept open by
+///   rare-(Op,Format,Rounding) lane no longer rides a window kept open by
 ///   busier keys, and fresh buckets keep coalescing instead of being
 ///   force-flushed alongside it;
 /// * when this shard's queue runs dry, pending work ships only if a
@@ -673,10 +674,10 @@ impl DivisionService {
                             rt.next_job(home, &mut mb, &wm, &bl, &c)
                         {
                             mb.incr_poll();
-                            let (a, b) = batch.flatten();
+                            let (a, b, rows) = batch.flatten();
                             let key = batch.key;
                             let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                                backend.divide(&a, &b, key.fmt, key.rm)
+                                backend.compute(key.op, &a, &b, &rows, key.fmt, key.rm)
                             }));
                             match result {
                                 Ok(Ok(flat)) => {
@@ -734,8 +735,8 @@ impl DivisionService {
     }
 
     /// Submit a typed request. Non-blocking; `Busy` under backpressure.
-    /// Requests of any `(Format, Rounding)` mix coalesce into
-    /// homogeneous backend batches keyed by that pair, on the shard
+    /// Requests of any `(Op, Format, Rounding)` mix coalesce into
+    /// homogeneous backend batches keyed by that triple, on the shard
     /// their key hashes to.
     pub fn submit_request(&self, req: DivRequest) -> Result<DivTicket, SubmitError> {
         if let Err(defect) = req.validate() {
@@ -1313,6 +1314,100 @@ mod tests {
             }
         }
         assert_eq!(s.metrics().failures, 0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn per_op_requests_serve_end_to_end_in_lane_order() {
+        use crate::fp::Op;
+        let bits = |xs: &[f32]| -> Vec<u64> { xs.iter().map(|&x| x.to_bits() as u64).collect() };
+        let s = DivisionService::start(
+            ServiceConfig {
+                workers: 2,
+                max_batch: 64,
+                queue_capacity: 256,
+                ..ServiceConfig::default()
+            },
+            BackendChoice::Kernel {
+                order: 5,
+                kernel: crate::kernel::KernelConfig::default(),
+            },
+        )
+        .unwrap();
+        // Unary ops carry no divisor vector at all.
+        let r = s
+            .divide_request_blocking(DivRequest::recip(
+                F32,
+                Rounding::NearestEven,
+                bits(&[4.0, 0.5, -8.0]),
+            ))
+            .unwrap();
+        assert_eq!(r.to_f32().unwrap(), vec![0.25, 2.0, -0.125]);
+        let r = s
+            .divide_request_blocking(DivRequest::rsqrt(
+                F32,
+                Rounding::NearestEven,
+                bits(&[4.0, 0.25, 1.0]),
+            ))
+            .unwrap();
+        assert_eq!(r.to_f32().unwrap(), vec![0.5, 2.0, 1.0]);
+        // ScaleByRecip with rows of 5 lanes: not a multiple of the
+        // kernel's 8-lane tile, so the second row straddles a tile
+        // boundary — results must still come back in lane order.
+        let lanes: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let r = s
+            .divide_request_blocking(DivRequest::scale_by_recip(
+                F32,
+                Rounding::NearestEven,
+                bits(&lanes),
+                bits(&[2.0, 4.0]),
+            ))
+            .unwrap();
+        let want: Vec<f32> = lanes
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| if i < 5 { x / 2.0 } else { x / 4.0 })
+            .collect();
+        assert_eq!(r.to_f32().unwrap(), want);
+        // Shape violations reject at submit time, before any queueing.
+        assert!(matches!(
+            s.submit_request(DivRequest {
+                op: Op::Recip,
+                fmt: F32,
+                rm: Rounding::NearestEven,
+                a: bits(&[1.0]),
+                b: bits(&[2.0]),
+            }),
+            Err(SubmitError::BadRequest(_))
+        ));
+        assert!(matches!(
+            s.submit_request(DivRequest::scale_by_recip(
+                F32,
+                Rounding::NearestEven,
+                bits(&[1.0, 2.0, 3.0]),
+                bits(&[2.0, 4.0]),
+            )),
+            Err(SubmitError::BadRequest(_))
+        ));
+        s.shutdown();
+    }
+
+    #[test]
+    fn division_only_backend_surfaces_op_rejection_to_the_waiter() {
+        let s = svc(1, 64, 64); // Native backend: div only
+        let err = s
+            .divide_request_blocking(DivRequest::recip(
+                F32,
+                Rounding::NearestEven,
+                vec![2.0f32.to_bits() as u64],
+            ))
+            .unwrap_err();
+        assert!(err.contains("div only"), "{err}");
+        // Division keeps working on the same service afterwards.
+        let out = s
+            .divide_request_blocking(f32_req(&[9.0], &[3.0]))
+            .unwrap();
+        assert_eq!(out.to_f32().unwrap(), vec![3.0]);
         s.shutdown();
     }
 }

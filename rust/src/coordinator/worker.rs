@@ -2,7 +2,10 @@
 //!
 //! A [`Backend`] consumes one flattened, format-homogeneous batch of
 //! bit-pattern lanes (see [`super::batcher::Batch`]) plus its
-//! `(Format, Rounding)` key. Implementations:
+//! `(Op, Format, Rounding)` key. The kernel-family backends
+//! (`Kernel`, `Goldschmidt`, `Auto`) and the gold reference serve all
+//! four operations; the legacy native loops and the PJRT artifact are
+//! division-only and reject other ops by name. Implementations:
 //!
 //! * [`KernelBackend`] — the staged SoA kernel ([`crate::kernel`])
 //!   driven directly: plan → seed → power → mul_round over lane tiles,
@@ -46,18 +49,47 @@ use std::time::Instant;
 
 use crate::divider::longdiv::LongDivider;
 use crate::divider::{BackendKind, Divider, TaylorDivider};
-use crate::fp::{Format, Rounding, F32};
+use crate::fp::{Format, Op, Rounding, F32};
 use crate::kernel::{GoldschmidtKernel, KernelConfig, KernelScratch};
 use crate::router::{BackendRouter, Candidate};
 use crate::taylor::TaylorConfig;
 use crate::util::error::Result;
 
-/// What a worker does with one flattened batch: divide `fmt` bit-pattern
-/// lanes under rounding mode `rm`.
+/// What a worker does with one flattened batch: apply `op` to `fmt`
+/// bit-pattern lanes under rounding mode `rm`. Operand shape follows
+/// [`super::batcher::Batch::flatten`]: `Div` gets matched `a`/`b` and
+/// empty `rows`; `Recip`/`Rsqrt` get only `a`; `ScaleByRecip` gets one
+/// divisor per row in `b` with `rows[r]` lanes of `a` each. The result
+/// always has `a.len()` lanes, in lane order.
 pub trait Backend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>>;
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>>;
+
+    /// Division shorthand — the historical entry point, and still the
+    /// hot path's common case.
+    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+        self.compute(Op::Div, a, b, &[], fmt, rm)
+    }
 
     fn describe(&self) -> String;
+}
+
+/// Uniform rejection for the division-only backends (`Native`,
+/// `NativeScalar`, `Pjrt`): name the backend and the op so a misrouted
+/// request says what to reconfigure.
+fn reject_non_div(backend: &str, op: Op) -> crate::util::error::Error {
+    crate::err!(
+        "{backend} backend serves div only (got {}); use the kernel, goldschmidt, \
+         auto or gold backend for other ops",
+        op.name()
+    )
 }
 
 /// Serializable backend configuration.
@@ -82,8 +114,14 @@ pub enum BackendChoice {
     /// The batched Goldschmidt iterate datapath over the same staged
     /// SoA scratch and lane engine as `Kernel`
     /// ([`crate::kernel::GoldschmidtKernel`]); `iterations` refinement
-    /// rounds (the paper-matched default is 3).
-    Goldschmidt { iterations: u32, kernel: KernelConfig },
+    /// rounds (the paper-matched default is 3) and `trunc_bits` low
+    /// product bits dropped per refinement multiply (the paper's
+    /// hardware-reduction knob; 0 = bit-exact wide products).
+    Goldschmidt {
+        iterations: u32,
+        kernel: KernelConfig,
+        trunc_bits: u32,
+    },
     /// Adaptive per-bucket routing between the Taylor kernel and the
     /// Goldschmidt datapath ([`crate::router::BackendRouter`]): each
     /// batch runs on whichever datapath currently scores fastest for
@@ -121,9 +159,14 @@ impl BackendChoice {
                 kernel.validate()?;
                 validate_order(*order)
             }
-            BackendChoice::Goldschmidt { iterations, kernel } => {
+            BackendChoice::Goldschmidt {
+                iterations,
+                kernel,
+                trunc_bits,
+            } => {
                 kernel.validate()?;
-                validate_goldschmidt_iterations(*iterations)
+                validate_goldschmidt_iterations(*iterations)?;
+                validate_goldschmidt_trunc_bits(*trunc_bits)
             }
             BackendChoice::Auto => {
                 // The routed backend builds both datapaths with the
@@ -167,9 +210,13 @@ impl BackendChoice {
             BackendChoice::Kernel { order, kernel } => {
                 Ok(Box::new(KernelBackend::new(order, kernel)?))
             }
-            BackendChoice::Goldschmidt { iterations, kernel } => {
-                Ok(Box::new(GoldschmidtBackend::new(iterations, kernel)?))
-            }
+            BackendChoice::Goldschmidt {
+                iterations,
+                kernel,
+                trunc_bits,
+            } => Ok(Box::new(GoldschmidtBackend::with_trunc(
+                iterations, trunc_bits, kernel,
+            )?)),
             // A standalone build gets a private router seeded from the
             // static cost model; the service instead constructs the
             // routed backend with one shared, history-seeded router so
@@ -197,6 +244,25 @@ fn validate_goldschmidt_iterations(iterations: u32) -> Result<()> {
         crate::bail!(
             "backend config: goldschmidt iterations must be 1..={}, got {iterations}",
             crate::kernel::goldschmidt::MAX_GOLDSCHMIDT_ITERATIONS
+        );
+    }
+    Ok(())
+}
+
+/// Goldschmidt truncation bound shared by [`BackendChoice::validate`]
+/// (cheap pre-flight) and [`GoldschmidtBackend::with_trunc`]
+/// (authoritative, via [`GoldschmidtKernel::validate`] after the table
+/// build): the paper's Q2.60 grid tolerates dropping at most half the
+/// fraction bits per refinement product before the iterate diverges.
+fn validate_goldschmidt_trunc_bits(trunc_bits: u32) -> Result<()> {
+    // frac_bits/2 for the paper-default Q2.60 kernel every service
+    // backend builds; GoldschmidtKernel::validate re-checks against the
+    // actual frac_bits.
+    const MAX_TRUNC_BITS: u32 = 30;
+    if trunc_bits > MAX_TRUNC_BITS {
+        crate::bail!(
+            "backend config: goldschmidt trunc_bits must be 0..={MAX_TRUNC_BITS} \
+             (half the Q2.60 fraction), got {trunc_bits}"
         );
     }
     Ok(())
@@ -301,7 +367,18 @@ fn probably_has_repeats(b: &[u64]) -> bool {
 }
 
 impl Backend for NativeBackend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        _rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>> {
+        if op != Op::Div {
+            return Err(reject_non_div("native", op));
+        }
         let n = a.len();
         // Group lanes by divisor bit pattern before dispatch so equal
         // divisors land adjacent and the divider's reciprocal cache hits
@@ -373,9 +450,17 @@ impl KernelBackend {
 }
 
 impl Backend for KernelBackend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>> {
         let mut out = vec![0u64; a.len()];
-        self.divider.div_bits_batch(a, b, fmt, rm, &mut out);
+        self.divider.compute_bits_batch(op, a, b, rows, fmt, rm, &mut out);
         Ok(out)
     }
 
@@ -405,11 +490,24 @@ pub struct GoldschmidtBackend {
 }
 
 impl GoldschmidtBackend {
+    /// Bit-exact refinement products (`trunc_bits = 0`), the service
+    /// default.
     pub fn new(iterations: u32, cfg: KernelConfig) -> Result<Self> {
+        Self::with_trunc(iterations, 0, cfg)
+    }
+
+    /// Goldschmidt datapath with `trunc_bits` low bits dropped per
+    /// refinement multiply — the paper's truncated-multiplier study.
+    /// `GoldschmidtKernel::validate` is the authoritative bound check
+    /// (against the built table's actual fraction width).
+    pub fn with_trunc(iterations: u32, trunc_bits: u32, cfg: KernelConfig) -> Result<Self> {
         cfg.validate()?;
         validate_goldschmidt_iterations(iterations)?;
+        let mut kernel = GoldschmidtKernel::paper_default(iterations)?;
+        kernel.trunc_bits = trunc_bits;
+        kernel.validate()?;
         Ok(Self {
-            kernel: GoldschmidtKernel::paper_default(iterations)?,
+            kernel,
             scratch: KernelScratch::new(),
             // Explicit config choice, same contract as KernelBackend:
             // a pinned `Scalar` stays scalar under TSDIV_SIMD=forced.
@@ -425,19 +523,38 @@ impl GoldschmidtBackend {
 }
 
 impl Backend for GoldschmidtBackend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>> {
         let mut out = vec![0u64; a.len()];
-        self.kernel
-            .divide_batch(&mut self.scratch, self.cfg.tile, self.eng, a, b, fmt, rm, &mut out);
+        self.kernel.compute_batch(
+            &mut self.scratch,
+            self.cfg.tile,
+            self.eng,
+            op,
+            a,
+            b,
+            rows,
+            fmt,
+            rm,
+            &mut out,
+        );
         Ok(out)
     }
 
     fn describe(&self) -> String {
         format!(
-            "goldschmidt[k={}, tile={}, simd={}]",
+            "goldschmidt[k={}, tile={}, simd={}, trunc={}]",
             self.kernel.iterations,
             self.cfg.tile,
-            self.eng.name()
+            self.eng.name(),
+            self.kernel.trunc_bits
         )
     }
 }
@@ -470,14 +587,22 @@ impl RoutedBackend {
 }
 
 impl Backend for RoutedBackend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
-        let pick = self.router.pick(fmt, rm, a.len());
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>> {
+        let pick = self.router.pick(op, fmt, rm, a.len());
         let start = Instant::now();
         let out = match pick {
-            Candidate::Kernel => self.kernel.divide(a, b, fmt, rm),
-            Candidate::Goldschmidt => self.goldschmidt.divide(a, b, fmt, rm),
+            Candidate::Kernel => self.kernel.compute(op, a, b, rows, fmt, rm),
+            Candidate::Goldschmidt => self.goldschmidt.compute(op, a, b, rows, fmt, rm),
         }?;
-        self.router.observe(fmt, rm, a.len(), pick, start.elapsed());
+        self.router.observe(op, fmt, rm, a.len(), pick, start.elapsed());
         Ok(out)
     }
 
@@ -504,7 +629,18 @@ impl ScalarNativeBackend {
 }
 
 impl Backend for ScalarNativeBackend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        _rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>> {
+        if op != Op::Div {
+            return Err(reject_non_div("native-scalar", op));
+        }
         Ok(a.iter()
             .zip(b)
             .map(|(&x, &y)| self.divider.div_bits(x, y, fmt, rm))
@@ -536,9 +672,41 @@ impl Default for GoldBackend {
 }
 
 impl Backend for GoldBackend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>> {
         let mut out = vec![0u64; a.len()];
-        self.divider.div_bits_batch(a, b, fmt, rm, &mut out);
+        match op {
+            Op::Div => self.divider.div_bits_batch(a, b, fmt, rm, &mut out),
+            Op::Recip => {
+                for (o, &x) in out.iter_mut().zip(a) {
+                    *o = self.divider.recip_bits(x, fmt, rm);
+                }
+            }
+            Op::Rsqrt => {
+                for (o, &x) in out.iter_mut().zip(a) {
+                    *o = self.divider.rsqrt_bits(x, fmt, rm);
+                }
+            }
+            Op::ScaleByRecip => {
+                // One exactly-rounded division per lane against the
+                // row's shared divisor — the reference semantics the
+                // fused kernels' single-reciprocal tails approximate.
+                let mut lane = 0usize;
+                for (r, &len) in rows.iter().enumerate() {
+                    for _ in 0..len {
+                        out[lane] = self.divider.div_bits(a[lane], b[r], fmt, rm);
+                        lane += 1;
+                    }
+                }
+            }
+        }
         Ok(out)
     }
 
@@ -561,7 +729,18 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
-    fn divide(&mut self, a: &[u64], b: &[u64], fmt: Format, rm: Rounding) -> Result<Vec<u64>> {
+    fn compute(
+        &mut self,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        _rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Result<Vec<u64>> {
+        if op != Op::Div {
+            return Err(reject_non_div("pjrt", op));
+        }
         if fmt != F32 || rm != Rounding::NearestEven {
             crate::bail!(
                 "pjrt backend serves f32/nearest only (got {}/{})",
@@ -836,6 +1015,7 @@ mod tests {
         let choice = BackendChoice::Goldschmidt {
             iterations: 3,
             kernel: KernelConfig::default(),
+            trunc_bits: 0,
         };
         assert!(choice.validate().is_ok());
         let mut via_choice = choice.build().unwrap();
@@ -880,6 +1060,7 @@ mod tests {
             let err = BackendChoice::Goldschmidt {
                 iterations,
                 kernel: KernelConfig::default(),
+                trunc_bits: 0,
             }
             .validate()
             .unwrap_err()
@@ -889,11 +1070,21 @@ mod tests {
                 BackendChoice::Goldschmidt {
                     iterations,
                     kernel: KernelConfig::default(),
+                    trunc_bits: 0,
                 }
                 .build()
                 .is_err()
             );
         }
+        // trunc_bits (beyond half the Q2.60 fraction)
+        let over_trunc = BackendChoice::Goldschmidt {
+            iterations: 3,
+            kernel: KernelConfig::default(),
+            trunc_bits: 31,
+        };
+        let err = over_trunc.validate().unwrap_err().to_string();
+        assert!(err.contains("trunc_bits"), "{err}");
+        assert!(over_trunc.build().is_err());
         // simd (only diagnosable on hosts where `forced` cannot resolve)
         if !crate::simd::simd_available() {
             let err = BackendChoice::Goldschmidt {
@@ -902,6 +1093,7 @@ mod tests {
                     simd: crate::simd::SimdChoice::Forced,
                     ..KernelConfig::default()
                 },
+                trunc_bits: 0,
             }
             .validate()
             .unwrap_err()
@@ -959,5 +1151,90 @@ mod tests {
         let total = router.dispatches(crate::router::Candidate::Kernel)
             + router.dispatches(crate::router::Candidate::Goldschmidt);
         assert_eq!(total, 4 * Rounding::ALL.len() as u64);
+    }
+
+    #[test]
+    fn division_only_backends_reject_other_ops_by_name() {
+        let xs = bits32(&[2.0, 4.0]);
+        let mut native = NativeBackend::new(5, None).unwrap();
+        let mut scalar = ScalarNativeBackend::new(5, None).unwrap();
+        for op in [Op::Recip, Op::Rsqrt, Op::ScaleByRecip] {
+            for be in [&mut native as &mut dyn Backend, &mut scalar] {
+                let err = be
+                    .compute(op, &xs, &[], &[], F32, Rounding::NearestEven)
+                    .unwrap_err()
+                    .to_string();
+                assert!(err.contains("div only"), "{err}");
+                assert!(err.contains(op.name()), "{err}");
+            }
+        }
+        // The division shorthand still works through the same trait.
+        let q = native
+            .divide(&bits32(&[6.0]), &bits32(&[2.0]), F32, Rounding::NearestEven)
+            .unwrap();
+        assert_eq!(q, bits32(&[3.0]));
+    }
+
+    #[test]
+    fn kernel_and_goldschmidt_recip_matches_divide_by_one() {
+        // Recip is the Div datapath with the dividend pinned to 1.0 —
+        // on both kernels that must be bit-identical, not just close.
+        let xs = bits32(&[3.0, -7.0, 0.1, f32::NAN, 0.0, f32::INFINITY, 1.0e-40, 113.0]);
+        let ones = bits32(&[1.0; 8]);
+        let mut kern = KernelBackend::new(5, KernelConfig::default()).unwrap();
+        let mut gsch = GoldschmidtBackend::new(3, KernelConfig::default()).unwrap();
+        for rm in Rounding::ALL {
+            for be in [&mut kern as &mut dyn Backend, &mut gsch] {
+                let recip = be.compute(Op::Recip, &xs, &[], &[], F32, rm).unwrap();
+                let div = be.divide(&ones, &xs, F32, rm).unwrap();
+                assert_eq!(recip, div, "{} {rm:?}", be.describe());
+            }
+        }
+    }
+
+    #[test]
+    fn gold_backend_serves_every_op() {
+        let mut gold = GoldBackend::new();
+        let xs = bits32(&[4.0, 2.0, -9.0, 0.25]);
+        let recip = gold
+            .compute(Op::Recip, &xs, &[], &[], F32, Rounding::NearestEven)
+            .unwrap();
+        assert_eq!(recip, bits32(&[0.25, 0.5, -1.0 / 9.0, 4.0]));
+        let rsqrt = gold
+            .compute(Op::Rsqrt, &bits32(&[4.0, 0.25]), &[], &[], F32, Rounding::NearestEven)
+            .unwrap();
+        assert_eq!(rsqrt, bits32(&[0.5, 2.0]));
+        // ScaleByRecip: rows of unequal length, each against its own
+        // divisor, results in lane order.
+        let a = bits32(&[6.0, 9.0, 12.0, 5.0, 8.0]);
+        let b = bits32(&[3.0, 0.5]);
+        let out = gold
+            .compute(Op::ScaleByRecip, &a, &b, &[3, 2], F32, Rounding::NearestEven)
+            .unwrap();
+        assert_eq!(out, bits32(&[2.0, 3.0, 4.0, 10.0, 16.0]));
+    }
+
+    #[test]
+    fn goldschmidt_trunc_backend_builds_and_stays_within_a_ulp() {
+        let mut trunc = GoldschmidtBackend::with_trunc(3, 8, KernelConfig::default()).unwrap();
+        assert!(trunc.describe().contains("trunc=8"), "{}", trunc.describe());
+        let mut exact = GoldschmidtBackend::new(3, KernelConfig::default()).unwrap();
+        let a = bits32(&[6.0, -1.5, f32::NAN, 0.0, f32::INFINITY, 1.0e-40, 355.0, -0.0, 9.0]);
+        let b = bits32(&[2.0, 3.0, 2.0, 3.0, 2.0, 3.0, 113.0, 2.0, 3.0]);
+        for rm in Rounding::ALL {
+            let qt = trunc.divide(&a, &b, F32, rm).unwrap();
+            let qe = exact.divide(&a, &b, F32, rm).unwrap();
+            for (j, (&t, &e)) in qt.iter().zip(&qe).enumerate() {
+                match crate::fp::ulp_diff(t, e, F32) {
+                    // Dropping 8 of 60 fraction bits per refinement
+                    // product perturbs the Q2.60 iterate far below
+                    // binary32 rounding granularity.
+                    Some(u) => assert!(u <= 1, "lane {j} {rm:?}: {u} ulp"),
+                    None => assert_eq!(t, e, "lane {j} {rm:?}"),
+                }
+            }
+        }
+        // Beyond the kernel's own bound the authoritative check fires.
+        assert!(GoldschmidtBackend::with_trunc(3, 31, KernelConfig::default()).is_err());
     }
 }

@@ -6,9 +6,16 @@
 //! remainder, so [`crate::fp::round_pack`] produces the correctly rounded
 //! result in every rounding mode. Every accuracy table in the benches is
 //! measured against this unit.
+//!
+//! Beyond division the unit carries exactly-rounded scalar references
+//! for the service's other ops: [`LongDivider::recip_bits`] (`1/x`, the
+//! division with a literal one dividend) and [`LongDivider::rsqrt_bits`]
+//! (`1/sqrt(x)` via an exact integer square root with remainder-driven
+//! sticky). The fused scale-by-reciprocal op needs no new reference —
+//! its per-lane semantics *are* `div_bits(a[i], b[row])`.
 
 use super::{prepare, Divider, Prepared};
-use crate::fp::{round_pack, Format, Rounding};
+use crate::fp::{round_pack, unpack, Class, Format, Rounding};
 
 /// Digit-recurrence divider (restoring; 1 bit/cycle latency model).
 #[derive(Debug, Default, Clone)]
@@ -26,6 +33,78 @@ impl LongDivider {
     /// quotient bits (hidden + frac + guard + round margin).
     pub const fn cycles_per_div(fmt: Format) -> u64 {
         (fmt.frac_bits + 3) as u64
+    }
+
+    /// Exactly-rounded reciprocal reference: `1 / x`. Division with the
+    /// format's literal one as dividend — specials fall out of the
+    /// shared [`prepare`] table (NaN → NaN, ±0 → ±Inf, ±Inf → ±0).
+    pub fn recip_bits(&mut self, x_bits: u64, fmt: Format, rm: Rounding) -> u64 {
+        self.div_bits(fmt.one(), x_bits, fmt, rm)
+    }
+
+    /// Exactly-rounded reciprocal square root reference: `1 / sqrt(x)`.
+    ///
+    /// Specials follow IEEE `rSqrt`: NaN → NaN, negative non-zero
+    /// (including −Inf) → NaN, ±0 → ±Inf, +Inf → +0. The finite
+    /// positive path folds the exponent parity into the significand
+    /// (`v = s'·2^(2k)`, `s' ∈ [1,4)`), computes `q = ⌊2^P / S⌋` with an
+    /// exact remainder and `W = ⌊sqrt(q)⌋ = ⌊y·2^G⌋` (the nested-floor
+    /// identity makes the composition exact), and rounds `W` with a
+    /// remainder-driven sticky — correctly rounded in every mode.
+    pub fn rsqrt_bits(&mut self, x_bits: u64, fmt: Format, rm: Rounding) -> u64 {
+        let u = unpack(x_bits, fmt);
+        match u.class {
+            Class::NaN => return fmt.nan(),
+            Class::Zero => return fmt.inf(u.sign),
+            _ if u.sign => return fmt.nan(),
+            Class::Inf => return fmt.zero(false),
+            Class::Normal | Class::Subnormal => {}
+        }
+        self.cycles += Self::cycles_per_div(fmt);
+        // Fold the exponent parity: x = (sig/2^frac)·2^exp = s'·2^(2k)
+        // with s' ∈ [1,4) — even exp keeps S = sig, odd exp doubles it.
+        let (s, k) = if u.exp.rem_euclid(2) == 0 {
+            (u.sig as u128, u.exp / 2)
+        } else {
+            ((u.sig as u128) << 1, (u.exp - 1) / 2)
+        };
+        // Result 1/sqrt(x) = y·2^(−k), y = sqrt(2^frac / S) ∈ (1/2, 1].
+        // W = ⌊y·2^G⌋ = ⌊sqrt(2^P / S)⌋ with P = 2G + frac: G = frac + 2
+        // gives hidden + frac + guard bits before the sticky.
+        let g = fmt.frac_bits + 2;
+        let p = 2 * g + fmt.frac_bits;
+        let (q, rem) = if p <= 127 {
+            let num = 1u128 << p;
+            (num / s, num % s)
+        } else {
+            // f64: P = 160 exceeds u128 — stage the division as
+            // 2^P / S = (t1·2^60 + r1·2^60 / S) with P1 = P − 60 ≤ 127.
+            let p1 = p - 60;
+            let t1 = (1u128 << p1) / s;
+            let r1 = (1u128 << p1) % s;
+            ((t1 << 60) + (r1 << 60) / s, (r1 << 60) % s)
+        };
+        let w = isqrt_u128(q);
+        // Exact iff both the division and the square root were: any
+        // remainder below W's last kept bit ORs into sticky.
+        let sticky = rem != 0 || w * w != q;
+        round_pack(false, -k, w, g, sticky, fmt, rm).0
+    }
+}
+
+/// `⌊sqrt(n)⌋` over `u128` (monotone-descending integer Newton).
+fn isqrt_u128(n: u128) -> u128 {
+    if n < 2 {
+        return n;
+    }
+    // Start above the root: x0 = 2^(⌊log2 n⌋/2 + 1) ⇒ x0² > n.
+    let mut x = 1u128 << ((127 - n.leading_zeros()) / 2 + 1);
+    loop {
+        let y = (x + n / x) >> 1;
+        if y >= x {
+            return x;
+        }
+        x = y;
     }
 }
 
@@ -172,6 +251,129 @@ mod tests {
             d.cycles,
             LongDivider::cycles_per_div(F32) + LongDivider::cycles_per_div(F64)
         );
+    }
+
+    #[test]
+    fn isqrt_is_exact_floor_sqrt() {
+        let mut r = Rng::new(41);
+        for &n in &[0u128, 1, 2, 3, 4, 8, 9, 15, 16, 17, u64::MAX as u128] {
+            let s = isqrt_u128(n);
+            assert!(s * s <= n, "{n}");
+            assert!((s + 1) * (s + 1) > n, "{n}");
+        }
+        for _ in 0..20_000 {
+            let n = ((r.next_u64() as u128) << 64 | r.next_u64() as u128) >> (r.below(120) as u32);
+            let s = isqrt_u128(n);
+            assert!(s * s <= n, "{n}");
+            // (s+1)² may overflow u128 for 128-bit n — overflow means
+            // it certainly exceeds n.
+            let above = s
+                .checked_add(1)
+                .and_then(|s1| s1.checked_mul(s1))
+                .map_or(true, |sq| sq > n);
+            assert!(above, "{n}");
+        }
+    }
+
+    #[test]
+    fn recip_matches_hardware_f32_randomized() {
+        let mut d = LongDivider::new();
+        let mut r = Rng::new(43);
+        for _ in 0..30_000 {
+            let x = f32::from_bits(r.next_u32());
+            let ours =
+                f32::from_bits(d.recip_bits(x.to_bits() as u64, F32, Rounding::NearestEven) as u32);
+            let hw = 1.0 / x;
+            if hw.is_nan() {
+                assert!(ours.is_nan(), "1/{x:?}");
+            } else {
+                assert_eq!(ours.to_bits(), hw.to_bits(), "1/{x:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rsqrt_specials_table() {
+        use crate::fp::{ALL_FORMATS, BF16, F16};
+        let mut d = LongDivider::new();
+        for fmt in ALL_FORMATS {
+            let rm = Rounding::NearestEven;
+            assert_eq!(d.rsqrt_bits(fmt.nan(), fmt, rm), fmt.nan(), "{}", fmt.name());
+            assert_eq!(d.rsqrt_bits(fmt.zero(false), fmt, rm), fmt.inf(false));
+            assert_eq!(d.rsqrt_bits(fmt.zero(true), fmt, rm), fmt.inf(true));
+            assert_eq!(d.rsqrt_bits(fmt.inf(false), fmt, rm), fmt.zero(false));
+            assert_eq!(d.rsqrt_bits(fmt.inf(true), fmt, rm), fmt.nan());
+            // Any negative non-zero value, finite or not → NaN.
+            let neg = fmt.assemble(true, fmt.bias() as u64, 1);
+            assert_eq!(d.rsqrt_bits(neg, fmt, rm), fmt.nan());
+            // Exact powers of four are exact in every mode.
+            for rm in Rounding::ALL {
+                assert_eq!(d.rsqrt_bits(fmt.one(), fmt, rm), fmt.one(), "{rm:?}");
+                let four = fmt.assemble(false, fmt.bias() as u64 + 2, 0);
+                let half = fmt.assemble(false, fmt.bias() as u64 - 1, 0);
+                assert_eq!(d.rsqrt_bits(four, fmt, rm), half, "{rm:?}");
+            }
+        }
+        // Known constants: 1/sqrt(2) and sqrt(2) in f32.
+        let q = d.rsqrt_bits(2.0f32.to_bits() as u64, F32, Rounding::NearestEven);
+        assert_eq!(q as u32, 0x3F35_04F3);
+        let q = d.rsqrt_bits(0.5f32.to_bits() as u64, F32, Rounding::NearestEven);
+        assert_eq!(q as u32, 0x3FB5_04F3);
+        // Odd-exponent parity fold in the narrow formats: rsqrt(0.25)=2.
+        for fmt in [F16, BF16] {
+            let quarter = fmt.assemble(false, fmt.bias() as u64 - 2, 0);
+            let two = fmt.assemble(false, fmt.bias() as u64 + 1, 0);
+            assert_eq!(d.rsqrt_bits(quarter, fmt, Rounding::NearestEven), two);
+        }
+    }
+
+    #[test]
+    fn rsqrt_matches_f64_reference_f32_randomized() {
+        // An f64-computed 1/sqrt(x) carries ≲2^−52 relative error — far
+        // below the f32 half-ulp (2^−25) — so away from rounding-tie
+        // proximity the references agree bit for bit; allow the 1-ulp
+        // slack only for the directed modes where the f64 double
+        // rounding can sit on the boundary.
+        let mut d = LongDivider::new();
+        let mut r = Rng::new(44);
+        let mut checked = 0;
+        while checked < 30_000 {
+            let x = f32::from_bits(r.next_u32() & 0x7FFF_FFFF);
+            if !x.is_finite() || x == 0.0 {
+                continue;
+            }
+            checked += 1;
+            let want = (1.0 / (x as f64).sqrt()) as f32;
+            let ours =
+                f32::from_bits(d.rsqrt_bits(x.to_bits() as u64, F32, Rounding::NearestEven) as u32);
+            let ulps = crate::fp::ulp_diff_f32(ours, want).unwrap();
+            assert!(ulps <= 1, "rsqrt({x:?}) = {ours:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn rsqrt_directed_modes_bracket_the_exact_value() {
+        let mut d = LongDivider::new();
+        let mut r = Rng::new(45);
+        for _ in 0..5_000 {
+            let x = f64::from_bits(
+                (r.next_u64() & !F64.sign_mask()) % f64::MAX.to_bits() | 1,
+            );
+            let exact = 1.0 / x.sqrt(); // ≲1 ulp off; brackets still hold with slack
+            let up = f64::from_bits(d.rsqrt_bits(x.to_bits(), F64, Rounding::TowardPositive));
+            let dn = f64::from_bits(d.rsqrt_bits(x.to_bits(), F64, Rounding::TowardNegative));
+            let tz = f64::from_bits(d.rsqrt_bits(x.to_bits(), F64, Rounding::TowardZero));
+            let ne = f64::from_bits(d.rsqrt_bits(x.to_bits(), F64, Rounding::NearestEven));
+            assert!(dn <= up, "rsqrt({x:e})");
+            assert!(tz <= up && dn <= tz, "rsqrt({x:e})");
+            assert!(ne == up || ne == dn, "nearest must be one of the brackets");
+            // `exact` itself carries two f64 roundings (sqrt then
+            // divide): allow the binade-boundary worst case.
+            assert!(
+                crate::fp::ulp_diff_f64(ne, exact).unwrap() <= 2,
+                "rsqrt({x:e}) = {ne:e} vs {exact:e}"
+            );
+        }
     }
 
     #[test]

@@ -219,6 +219,58 @@ impl TaylorDivider {
     pub fn backend_kind(&self) -> BackendKind {
         self.kind
     }
+
+    /// Op-generic staged batch path: the same kernel pipeline as
+    /// [`Divider::div_bits_batch`] with the op-specific tail selected
+    /// after the shared plan→seed→power core
+    /// ([`crate::kernel::compute_batch`]). Operand shapes per
+    /// [`crate::fp::Op`]: `Div` wants matched `a`/`b` and empty `rows`;
+    /// the unary ops want `b` and `rows` empty; `ScaleByRecip` wants
+    /// one divisor per row with `rows[r]` lanes each.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compute_bits_batch(
+        &mut self,
+        op: crate::fp::Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+        out: &mut [u64],
+    ) {
+        let tile = self.batch_tile;
+        let eng = self.batch_engine;
+        match &mut self.backend {
+            BackendImpl::Exact(m) => kernel::compute_batch(
+                &self.cfg,
+                m,
+                &mut self.batch_scratch,
+                tile,
+                eng,
+                op,
+                a,
+                b,
+                rows,
+                fmt,
+                rm,
+                out,
+            ),
+            BackendImpl::Ilm(m) => kernel::compute_batch(
+                &self.cfg,
+                m,
+                &mut self.batch_scratch,
+                tile,
+                eng,
+                op,
+                a,
+                b,
+                rows,
+                fmt,
+                rm,
+                out,
+            ),
+        }
+    }
 }
 
 impl Divider for TaylorDivider {

@@ -109,6 +109,11 @@ impl Format {
         self.assemble(sign, 0, 0)
     }
 
+    /// Positive one (the implicit dividend of the reciprocal ops).
+    pub const fn one(&self) -> u64 {
+        self.assemble(false, self.bias() as u64, 0)
+    }
+
     /// Largest finite magnitude with the given sign.
     pub const fn max_finite(&self, sign: bool) -> u64 {
         self.assemble(sign, self.exp_max() - 1, self.frac_mask())
@@ -271,6 +276,14 @@ mod tests {
             frac_bits: 9,
         };
         assert_eq!(custom.lane_cost(), F64.lane_cost());
+    }
+
+    #[test]
+    fn one_patterns_match_std() {
+        assert_eq!(F32.one(), 1.0f32.to_bits() as u64);
+        assert_eq!(F64.one(), 1.0f64.to_bits());
+        assert_eq!(F16.one(), 0x3C00);
+        assert_eq!(BF16.one(), 0x3F80);
     }
 
     #[test]

@@ -14,10 +14,12 @@
 //! All bit patterns travel as `u64` independent of format width.
 
 pub mod format;
+pub mod op;
 pub mod ops;
 pub mod round;
 
 pub use format::{unpack, Class, Format, Unpacked, ALL_FORMATS, BF16, F16, F32, F64};
+pub use op::Op;
 pub use ops::{
     decode_f32, encode_f32, next_down, next_up, ordered_key, rel_err, soft_mul, ulp_diff,
     ulp_diff_f32, ulp_diff_f64,

@@ -1,0 +1,104 @@
+//! The typed operation dimension of the batch service.
+//!
+//! Everything the Taylor/ILM machinery computes goes through the same
+//! reciprocal core (seed → simultaneous odd/even powers → sum), so the
+//! service exposes the nearby operations as first-class variants instead
+//! of special-casing `a/b`:
+//!
+//! * [`Op::Div`] — `a / b`, the paper's operation: reciprocal core plus
+//!   one final multiply by the dividend significand;
+//! * [`Op::Recip`] — `1 / a`, the core with the final multiply skipped;
+//! * [`Op::Rsqrt`] — `1 / sqrt(a)`, the same seed/tiles plus a short
+//!   Newton–Raphson tail on the lane engine;
+//! * [`Op::ScaleByRecip`] — `a[i] / b[row]`, one reciprocal amortized
+//!   across a whole row of lanes (the QR/Givens normalization pattern).
+//!
+//! The enum lives in `fp` (not `coordinator`) so the router — which
+//! depends only on `fp`/`util`/`harness` — can key its scoring cells on
+//! the op axis; `coordinator::request` re-exports it as part of the
+//! service API.
+
+/// Operation requested on a batch of lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Elementwise division `a[i] / b[i]` (two operand vectors of equal
+    /// length).
+    Div,
+    /// Elementwise reciprocal `1 / a[i]` (one operand vector).
+    Recip,
+    /// Elementwise reciprocal square root `1 / sqrt(a[i])` (one operand
+    /// vector).
+    Rsqrt,
+    /// Fused scale-by-reciprocal: `a` holds rows of lanes, `b` one
+    /// divisor per row, and every lane of row `r` is divided by `b[r]`.
+    /// One reciprocal is computed per row and broadcast-multiplied
+    /// across the row's lanes.
+    ScaleByRecip,
+}
+
+impl Op {
+    /// All operations, in stable index order (test/bench sweeps and the
+    /// router's cell table).
+    pub const ALL: [Op; 4] = [Op::Div, Op::Recip, Op::Rsqrt, Op::ScaleByRecip];
+
+    /// Stable dense index (router cell tables, service key slots).
+    pub const fn idx(self) -> usize {
+        match self {
+            Op::Div => 0,
+            Op::Recip => 1,
+            Op::Rsqrt => 2,
+            Op::ScaleByRecip => 3,
+        }
+    }
+
+    /// Short name as accepted by [`Op::from_name`] (CLI `--op`).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Op::Div => "div",
+            Op::Recip => "recip",
+            Op::Rsqrt => "rsqrt",
+            Op::ScaleByRecip => "scale-recip",
+        }
+    }
+
+    /// Parse an operation name (CLI and service surfaces).
+    pub fn from_name(s: &str) -> Option<Op> {
+        match s {
+            "div" | "divide" => Some(Op::Div),
+            "recip" | "reciprocal" => Some(Op::Recip),
+            "rsqrt" | "reciprocal-sqrt" => Some(Op::Rsqrt),
+            "scale-recip" | "scale-by-recip" | "scale_by_recip" => Some(Op::ScaleByRecip),
+            _ => None,
+        }
+    }
+
+    /// True for the one-operand ops (`Recip`, `Rsqrt`) whose requests
+    /// carry no `b` lanes at all.
+    pub const fn is_unary(self) -> bool {
+        matches!(self, Op::Recip | Op::Rsqrt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_and_indices_are_dense() {
+        for (i, op) in Op::ALL.iter().enumerate() {
+            assert_eq!(op.idx(), i);
+            assert_eq!(Op::from_name(op.name()), Some(*op));
+        }
+        assert_eq!(Op::from_name("divide"), Some(Op::Div));
+        assert_eq!(Op::from_name("scale_by_recip"), Some(Op::ScaleByRecip));
+        assert_eq!(Op::from_name("sqrt"), None);
+    }
+
+    #[test]
+    fn unary_ops_are_exactly_recip_and_rsqrt() {
+        assert!(!Op::Div.is_unary());
+        assert!(Op::Recip.is_unary());
+        assert!(Op::Rsqrt.is_unary());
+        assert!(!Op::ScaleByRecip.is_unary());
+    }
+}

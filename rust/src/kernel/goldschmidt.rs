@@ -32,7 +32,7 @@
 
 use super::{stages, KernelScratch};
 use crate::bail;
-use crate::fp::{round_pack, Format, Rounding};
+use crate::fp::{round_pack, Format, Op, Rounding};
 use crate::pla::SegmentTable;
 use crate::simd::Engine;
 use crate::util::error::Result;
@@ -125,7 +125,67 @@ impl GoldschmidtKernel {
         rm: Rounding,
         out: &mut [u64],
     ) {
-        assert_eq!(a.len(), b.len(), "operand length mismatch");
+        self.compute_batch(scratch, tile, eng, Op::Div, a, b, &[], fmt, rm, out)
+    }
+
+    /// Run the staged Goldschmidt pipeline for any [`Op`], mirroring
+    /// [`super::compute_batch`]'s operand contract per op:
+    ///
+    /// * `Div` — `out[i] = a[i]/b[i]`; `rows` empty. The N/D chain as
+    ///   documented on [`Self::divide_batch`].
+    /// * `Recip` — `out[i] = 1/a[i]`; `b` and `rows` empty. The plan
+    ///   stage substitutes a literal `1.0` dividend, which makes
+    ///   `a_q = 1 << f` and hence `N₀ = y₀` exactly — the chain is
+    ///   **bit-identical** to `Div(1.0, a[i])`.
+    /// * `Rsqrt` — `out[i] = 1/sqrt(a[i])`; `b` and `rows` empty. The
+    ///   chain runs dividend-free (`N` converges to `1/x`), then the
+    ///   shared Newton tail ([`stages::rsqrt_newton`]) and parity-fixup
+    ///   rounding ([`stages::rsqrt_round`]) finish — the same tail the
+    ///   Taylor datapath uses, so both land in the same ulp band of the
+    ///   exact reference.
+    /// * `ScaleByRecip` — `a` is `rows.len()` concatenated rows of
+    ///   `rows[r]` lanes each, `b[r]` the row's divisor: one reciprocal
+    ///   per *distinct* divisor run (planned lanes of a row share their
+    ///   `x`, and the iterate stage dedupes consecutive equal values),
+    ///   broadcast-multiplied across the row by [`stages::mul_round`]
+    ///   with sticky set. Not bit-identical to `Div` on expanded
+    ///   divisors — the reciprocal is truncated to Q2.F before the
+    ///   final multiply — but inside the same documented band.
+    ///
+    /// `trunc_bits` applies to the iterate stage of every op; the
+    /// Newton tail always runs full width.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compute_batch(
+        &self,
+        scratch: &mut KernelScratch,
+        tile: usize,
+        eng: Engine,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+        out: &mut [u64],
+    ) {
+        match op {
+            Op::Div => {
+                assert_eq!(a.len(), b.len(), "operand length mismatch");
+                assert!(rows.is_empty(), "rows is a ScaleByRecip-only input");
+            }
+            Op::Recip | Op::Rsqrt => {
+                assert!(b.is_empty(), "unary ops take no divisor operand");
+                assert!(rows.is_empty(), "rows is a ScaleByRecip-only input");
+            }
+            Op::ScaleByRecip => {
+                assert_eq!(b.len(), rows.len(), "one divisor per row");
+                assert_eq!(
+                    rows.iter().map(|&r| r as usize).sum::<usize>(),
+                    a.len(),
+                    "row lane counts must cover the dividend lanes"
+                );
+            }
+        }
         assert_eq!(a.len(), out.len(), "output length mismatch");
         assert!(
             self.frac_bits >= fmt.frac_bits,
@@ -146,12 +206,16 @@ impl GoldschmidtKernel {
         let KernelScratch {
             plan,
             edge_cache,
+            miss_pos,
             miss_x,
             y0,
             m,
             pow,
             sum,
             recip,
+            nr_z,
+            nr_t,
+            nr_u,
             ..
         } = scratch;
 
@@ -162,70 +226,174 @@ impl GoldschmidtKernel {
 
         // Stage 1 — plan: shared with the Taylor kernel. Specials go to
         // the output sidechannel; dense lanes carry sig_a raw and
-        // x = sig_b << shift (Q2.F).
-        stages::plan(a, b, fmt, shift, plan, out);
+        // x = sig_b << shift (Q2.F) — for Rsqrt, the parity flag and
+        // the *input* significand (see `stages::plan_rsqrt`).
+        match op {
+            Op::Div => stages::plan(a, b, fmt, shift, plan, out),
+            Op::Recip => stages::plan_recip(a, fmt, shift, plan, out),
+            Op::Rsqrt => stages::plan_rsqrt(a, fmt, shift, plan, out),
+            Op::ScaleByRecip => stages::plan_scale(a, b, rows, fmt, shift, plan, out),
+        }
         let n = plan.lanes();
 
-        // Stages 2–3 — seed + iterate, tile by tile. Unlike the Taylor
-        // kernel there is no divisor-reciprocal cache: each lane's
-        // refinement couples numerator and denominator, so nothing
-        // divisor-only is reusable across lanes.
-        let mut t0 = 0;
-        while t0 < n {
-            let t1 = (t0 + tile).min(n);
-            let x = &plan.x[t0..t1];
-            let k = x.len();
-            // y0 ≈ 1/x per lane from the PLA seed (identical lookup to
-            // the scalar divider's `table.seed`).
-            stages::seed(eng, &self.table, edge_cache, x, y0);
-            // The dividend significand mapped into Q2.F: a_q = sig_a
-            // << shift (the scalar path's `a`). Staged into `miss_x`,
-            // unused by this pipeline's other stages.
-            miss_x.clear();
-            miss_x.extend(plan.sig_a[t0..t1].iter().map(|&s| s << shift));
-            // N0 = (a_q·y0) ≫ f into `recip`; D0 = (x·y0) ≫ f into
-            // `sum` (buffer reuse — the names belong to the Taylor
-            // stages, the roles here are N and D).
-            recip.clear();
-            recip.resize(k, 0);
-            sum.clear();
-            sum.resize(k, 0);
-            eng.mul_shr(miss_x, y0, f, recip);
-            eng.mul_shr(x, y0, f, sum);
-            m.clear();
-            m.resize(k, 0);
-            pow.clear();
-            pow.resize(k, 0);
-            for _ in 0..self.iterations {
-                // F = 2 − D, saturating exactly like the scalar path.
-                m.copy_from_slice(sum);
-                eng.rsub_sat(two, m);
-                // N ← (N·F) ≫ f, D ← (D·F) ≫ f (independent multiplies
-                // — the pipelinability argument of the algorithm).
-                eng.mul_shr(recip, m, f, pow);
-                std::mem::swap(recip, pow);
-                eng.mul_shr(sum, m, f, pow);
-                std::mem::swap(sum, pow);
-                if keep != u64::MAX {
-                    // Truncated-multiplier emulation: drop the low
-                    // trunc_bits of both intermediate products.
-                    for v in recip.iter_mut() {
-                        *v &= keep;
+        match op {
+            Op::Div | Op::Recip => {
+                // Stages 2–3 — seed + iterate, tile by tile. Unlike the
+                // Taylor kernel there is no divisor-reciprocal cache:
+                // each lane's refinement couples numerator and
+                // denominator, so nothing divisor-only is reusable
+                // across lanes.
+                let mut t0 = 0;
+                while t0 < n {
+                    let t1 = (t0 + tile).min(n);
+                    let x = &plan.x[t0..t1];
+                    let k = x.len();
+                    // y0 ≈ 1/x per lane from the PLA seed (identical
+                    // lookup to the scalar divider's `table.seed`).
+                    stages::seed(eng, &self.table, edge_cache, x, y0);
+                    // The dividend significand mapped into Q2.F: a_q =
+                    // sig_a << shift (the scalar path's `a`; `1 << f`
+                    // for Recip). Staged into `miss_x`, unused by this
+                    // pipeline's other stages.
+                    miss_x.clear();
+                    miss_x.extend(plan.sig_a[t0..t1].iter().map(|&s| s << shift));
+                    // N0 = (a_q·y0) ≫ f into `recip`; D0 = (x·y0) ≫ f
+                    // into `sum` (buffer reuse — the names belong to
+                    // the Taylor stages, the roles here are N and D).
+                    recip.clear();
+                    recip.resize(k, 0);
+                    sum.clear();
+                    sum.resize(k, 0);
+                    eng.mul_shr(miss_x, y0, f, recip);
+                    eng.mul_shr(x, y0, f, sum);
+                    m.clear();
+                    m.resize(k, 0);
+                    pow.clear();
+                    pow.resize(k, 0);
+                    iterate(eng, self.iterations, two, f, keep, recip, sum, m, pow);
+                    // Stage 4 — round: N is the quotient in (0.5, 2)
+                    // Q2.F. Sticky is SET (the iteration truncates
+                    // continuously), the scalar divider's exact
+                    // rounding call.
+                    for (j, &q) in recip.iter().enumerate() {
+                        let lane = t0 + j;
+                        out[plan.idx[lane] as usize] =
+                            round_pack(plan.sign[lane], plan.exp[lane], q as u128, f, true, fmt, rm)
+                                .0;
                     }
-                    for v in sum.iter_mut() {
-                        *v &= keep;
-                    }
+                    t0 = t1;
                 }
             }
-            // Stage 4 — round: N is the quotient in (0.5, 2) Q2.F.
-            // Sticky is SET (the iteration truncates continuously), the
-            // scalar divider's exact rounding call.
-            for (j, &q) in recip.iter().enumerate() {
-                let lane = t0 + j;
-                out[plan.idx[lane] as usize] =
-                    round_pack(plan.sign[lane], plan.exp[lane], q as u128, f, true, fmt, rm).0;
+            Op::Rsqrt | Op::ScaleByRecip => {
+                // Dividend-free reciprocal chain: a_q = 1 << f, so
+                // N0 = ((1 << f)·y0) ≫ f = y0 exactly and no N0
+                // multiply is spent; N converges to 1/x. Consecutive
+                // lanes with equal x (a ScaleByRecip row, possibly
+                // split across tiles) collapse to one chain lane —
+                // the "one reciprocal per row" of the fused op.
+                plan.recip.clear();
+                plan.recip.resize(n, 0);
+                let mut t0 = 0;
+                while t0 < n {
+                    let t1 = (t0 + tile).min(n);
+                    let x = &plan.x[t0..t1];
+                    // Run-length dedupe into miss_pos (run start, tile-
+                    // relative) / miss_x (the run's divisor value).
+                    miss_pos.clear();
+                    miss_x.clear();
+                    for (j, &xi) in x.iter().enumerate() {
+                        if miss_x.last() != Some(&xi) {
+                            miss_pos.push(j as u32);
+                            miss_x.push(xi);
+                        }
+                    }
+                    let k = miss_x.len();
+                    stages::seed(eng, &self.table, edge_cache, miss_x, y0);
+                    recip.clear();
+                    recip.extend_from_slice(y0);
+                    sum.clear();
+                    sum.resize(k, 0);
+                    eng.mul_shr(miss_x, y0, f, sum);
+                    m.clear();
+                    m.resize(k, 0);
+                    pow.clear();
+                    pow.resize(k, 0);
+                    iterate(eng, self.iterations, two, f, keep, recip, sum, m, pow);
+                    // Broadcast each run's reciprocal across its lanes.
+                    for (ri, &p) in miss_pos.iter().enumerate() {
+                        let start = p as usize;
+                        let end = miss_pos
+                            .get(ri + 1)
+                            .map_or(x.len(), |&q| q as usize);
+                        for slot in &mut plan.recip[t0 + start..t0 + end] {
+                            *slot = recip[ri];
+                        }
+                    }
+                    t0 = t1;
+                }
+                if op == Op::Rsqrt {
+                    // Shared Newton tail over the same tiles, full
+                    // width (truncation only models the iterate-stage
+                    // multiplier array).
+                    let mut t0 = 0;
+                    while t0 < n {
+                        let t1 = (t0 + tile).min(n);
+                        stages::rsqrt_newton(
+                            eng,
+                            f,
+                            &plan.x[t0..t1],
+                            &plan.recip[t0..t1],
+                            nr_z,
+                            nr_t,
+                            nr_u,
+                        );
+                        plan.recip[t0..t1].copy_from_slice(nr_z);
+                        t0 = t1;
+                    }
+                    stages::rsqrt_round(plan, fmt, rm, f, out);
+                } else {
+                    // Fused tail: q = sig_a·recip, sticky set — the
+                    // datapath's continuous-truncation contract.
+                    stages::mul_round(plan, fmt, rm, f, true, out);
+                }
             }
-            t0 = t1;
+        }
+    }
+}
+
+/// The Goldschmidt refinement loop: k × { F = 2 − D (saturating, as the
+/// scalar path); N ← (N·F) ≫ f; D ← (D·F) ≫ f — independent multiplies,
+/// the pipelinability argument of the algorithm }, with the optional
+/// truncated-multiplier keep-mask applied to both products. `n`/`d` are
+/// N and D in Q2.F; `m`/`pow` are same-length scratch.
+#[allow(clippy::too_many_arguments)]
+fn iterate(
+    eng: Engine,
+    iterations: u32,
+    two: u64,
+    f: u32,
+    keep: u64,
+    n: &mut Vec<u64>,
+    d: &mut Vec<u64>,
+    m: &mut Vec<u64>,
+    pow: &mut Vec<u64>,
+) {
+    for _ in 0..iterations {
+        m.copy_from_slice(d);
+        eng.rsub_sat(two, m);
+        eng.mul_shr(n, m, f, pow);
+        std::mem::swap(n, pow);
+        eng.mul_shr(d, m, f, pow);
+        std::mem::swap(d, pow);
+        if keep != u64::MAX {
+            // Truncated-multiplier emulation: drop the low trunc_bits
+            // of both intermediate products.
+            for v in n.iter_mut() {
+                *v &= keep;
+            }
+            for v in d.iter_mut() {
+                *v &= keep;
+            }
         }
     }
 }
@@ -250,6 +418,24 @@ mod tests {
         let mut scratch = KernelScratch::new();
         let mut out = vec![0u64; a.len()];
         kernel.divide_batch(&mut scratch, tile, eng, a, b, fmt, rm, &mut out);
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn batch_compute(
+        kernel: &GoldschmidtKernel,
+        tile: usize,
+        eng: Engine,
+        op: Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Vec<u64> {
+        let mut scratch = KernelScratch::new();
+        let mut out = vec![0u64; a.len()];
+        kernel.compute_batch(&mut scratch, tile, eng, op, a, b, rows, fmt, rm, &mut out);
         out
     }
 
@@ -285,6 +471,140 @@ mod tests {
                             fmt.name(),
                             eng.name()
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recip_is_bit_identical_to_div_by_one_every_engine() {
+        // The plan stage substitutes a literal 1.0 dividend, making
+        // a_q = 1 << f and the chain exactly Div(1.0, x) — including
+        // specials (1/NaN, 1/0, 1/Inf) through the shared prepare table.
+        let kernel = GoldschmidtKernel::paper_default(3).unwrap();
+        for (fi, fmt) in ALL_FORMATS.into_iter().enumerate() {
+            for rm in Rounding::ALL {
+                let (mut xs, _) = gen_bits_batch(fmt, 53, 8, 0xA1 + fi as u64);
+                for (i, &s) in special_patterns(fmt).iter().enumerate() {
+                    xs[i] = s;
+                }
+                let ones = vec![fmt.one(); xs.len()];
+                let want = batch_divide(&kernel, 7, Engine::Scalar, &ones, &xs, fmt, rm);
+                for eng in crate::simd::engines_available() {
+                    let got = batch_compute(&kernel, 7, eng, Op::Recip, &xs, &[], &[], fmt, rm);
+                    assert_eq!(got, want, "{} {rm:?} {}", fmt.name(), eng.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_by_recip_preserves_lane_order_and_stays_in_band_of_gold() {
+        // Ragged rows (not tile multiples), a NaN divisor row and a
+        // signed-zero divisor row in the middle: every lane must land at
+        // its own index with the row's divisor applied. Finite lanes sit
+        // in the documented band of the exactly-rounded reference; the
+        // fused tail truncates the reciprocal before the broadcast
+        // multiply, so it is a band, not bit-identity.
+        use crate::divider::longdiv::LongDivider;
+        let kernel = GoldschmidtKernel::paper_default(3).unwrap();
+        let rows: Vec<u32> = vec![1, 5, 13, 2, 31, 1, 7];
+        let lanes: usize = rows.iter().map(|&r| r as usize).sum();
+        for (fi, fmt) in ALL_FORMATS.into_iter().enumerate() {
+            let band = if fmt.frac_bits > 23 { 2 } else { 1 };
+            for rm in Rounding::ALL {
+                let (a, _) = gen_bits_batch(fmt, lanes, 6, 0xB2 + fi as u64);
+                let (mut b, _) = gen_bits_batch(fmt, rows.len(), 6, 0xC3 + fi as u64);
+                b[3] = fmt.nan();
+                b[5] = fmt.zero(true);
+                let mut gold = LongDivider::new();
+                let mut want = Vec::with_capacity(lanes);
+                let mut i = 0;
+                for (r, &len) in rows.iter().enumerate() {
+                    for _ in 0..len {
+                        want.push(gold.div_bits(a[i], b[r], fmt, rm));
+                        i += 1;
+                    }
+                }
+                for tile in [1usize, 4, 8] {
+                    for eng in crate::simd::engines_available() {
+                        let got = batch_compute(
+                            &kernel,
+                            tile,
+                            eng,
+                            Op::ScaleByRecip,
+                            &a,
+                            &b,
+                            &rows,
+                            fmt,
+                            rm,
+                        );
+                        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                            match ulp_diff(g, w, fmt) {
+                                Some(u) => assert!(
+                                    u <= band,
+                                    "lane {i} {} {rm:?} tile={tile} {}: {u} ulp from gold",
+                                    fmt.name(),
+                                    eng.name()
+                                ),
+                                None => assert_eq!(
+                                    g,
+                                    w,
+                                    "lane {i} {} {rm:?} tile={tile} {}: NaN class",
+                                    fmt.name(),
+                                    eng.name()
+                                ),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rsqrt_specials_bit_identical_and_finite_in_band_vs_gold() {
+        // Specials resolve in plan_rsqrt exactly as LongDivider's table
+        // (rsqrt(±0) = ±Inf, rsqrt(neg) = NaN, rsqrt(Inf) = 0); finite
+        // positive lanes run chain → Newton → parity rounding and stay
+        // inside the same band as the Taylor rsqrt tail.
+        use crate::divider::longdiv::LongDivider;
+        let kernel = GoldschmidtKernel::paper_default(3).unwrap();
+        for (fi, fmt) in ALL_FORMATS.into_iter().enumerate() {
+            let band = if fmt.frac_bits > 23 { 2 } else { 1 };
+            for rm in Rounding::ALL {
+                let (mut xs, _) = gen_bits_batch(fmt, 80, 8, 0xD4 + fi as u64);
+                for x in xs.iter_mut() {
+                    *x &= !fmt.sign_mask(); // rsqrt wants positive lanes
+                }
+                for (i, &s) in special_patterns(fmt).iter().enumerate() {
+                    xs[i] = s;
+                }
+                xs[10] = fmt.assemble(true, fmt.bias() as u64, 1); // negative → NaN
+                let mut gold = LongDivider::new();
+                let want: Vec<u64> = xs.iter().map(|&x| gold.rsqrt_bits(x, fmt, rm)).collect();
+                for tile in [1usize, 8, 67] {
+                    for eng in crate::simd::engines_available() {
+                        let got =
+                            batch_compute(&kernel, tile, eng, Op::Rsqrt, &xs, &[], &[], fmt, rm);
+                        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                            match ulp_diff(g, w, fmt) {
+                                Some(u) => assert!(
+                                    u <= band,
+                                    "lane {i} {} {rm:?} tile={tile} {}: {u} ulp from gold",
+                                    fmt.name(),
+                                    eng.name()
+                                ),
+                                None => assert_eq!(
+                                    g,
+                                    w,
+                                    "lane {i} {} {rm:?} tile={tile} {}: NaN class",
+                                    fmt.name(),
+                                    eng.name()
+                                ),
+                            }
+                        }
                     }
                 }
             }

@@ -50,7 +50,7 @@ pub mod stages;
 pub use goldschmidt::GoldschmidtKernel;
 
 use crate::bail;
-use crate::fp::{Format, Rounding};
+use crate::fp::{Format, Op, Rounding};
 use crate::powering::Multiplier;
 use crate::simd::{Engine, SimdChoice};
 use crate::taylor::TaylorConfig;
@@ -190,6 +190,11 @@ pub struct KernelScratch {
     pow: Vec<u64>,
     sum: Vec<u64>,
     recip: Vec<u64>,
+    // Newton staging of the rsqrt tail (z, z², 3 − x·z² per tile) —
+    // untouched by the other ops.
+    nr_z: Vec<u64>,
+    nr_t: Vec<u64>,
+    nr_u: Vec<u64>,
     // The divisor-reciprocal cache. x ≥ 1.0 in Q2.F, so the zero reset
     // keys can never collide with a real divisor. Reset at the start of
     // every `divide_batch` call: the reciprocal depends on the Taylor
@@ -206,28 +211,67 @@ impl KernelScratch {
     }
 }
 
-/// Run the staged pipeline over one batch: `out[i] = a[i] / b[i]`, all
-/// slices the same length, bit patterns of `fmt`, rounded under `rm`,
-/// with the seed/power stage loops driven by the lane engine `eng`.
+/// Run the staged pipeline over one batch of the given operation, bit
+/// patterns of `fmt`, rounded under `rm`, with the stage loops driven by
+/// the lane engine `eng`.
 ///
-/// Bit-identical to calling `TaylorDivider::div_bits` per lane with the
-/// same `cfg` and multiplier backend — for **every** engine (the engines
-/// are bit-identical to each other by construction; property tests pin
-/// forced-SIMD against forced-scalar against the scalar datapath).
+/// Operand shapes per op:
+/// * [`Op::Div`] — `a`/`b`/`out` the same length, `rows` empty;
+/// * [`Op::Recip`] / [`Op::Rsqrt`] — one operand: `b` and `rows` empty,
+///   `a`/`out` the same length;
+/// * [`Op::ScaleByRecip`] — `a`/`out` hold the concatenated rows, `b`
+///   one divisor per row, `rows[r]` the lane count of row `r`.
+///
+/// Every op shares the plan → seed → power core (the reciprocal of the
+/// planned `x`, behind the divisor-reciprocal cache) and diverges only
+/// in the plan unpack and the tail:
+/// * `Div` — final multiply `sig_a · recip` ([`stages::mul_round`]);
+/// * `Recip` — the reciprocal rounds directly ([`stages::recip_round`]),
+///   bit-identical to `Div(1.0, x)`;
+/// * `Rsqrt` — Newton tail over the same tiles/engine
+///   ([`stages::rsqrt_newton`] + [`stages::rsqrt_round`]);
+/// * `ScaleByRecip` — per-lane `Div(a[i], b[row])` with the row's
+///   reciprocal amortized by the cache, bit-identical to `Div` against
+///   the expanded divisor vector.
+///
+/// For `Div` this is bit-identical to calling `TaylorDivider::div_bits`
+/// per lane with the same `cfg` and multiplier backend — for **every**
+/// engine (the engines are bit-identical to each other by construction;
+/// property tests pin forced-SIMD against forced-scalar against the
+/// scalar datapath).
 #[allow(clippy::too_many_arguments)]
-pub fn divide_batch<M: Multiplier>(
+pub fn compute_batch<M: Multiplier>(
     cfg: &TaylorConfig,
     backend: &mut M,
     scratch: &mut KernelScratch,
     tile: usize,
     eng: Engine,
+    op: Op,
     a: &[u64],
     b: &[u64],
+    rows: &[u32],
     fmt: Format,
     rm: Rounding,
     out: &mut [u64],
 ) {
-    assert_eq!(a.len(), b.len(), "operand length mismatch");
+    match op {
+        Op::Div => {
+            assert_eq!(a.len(), b.len(), "operand length mismatch");
+            assert!(rows.is_empty(), "rows are a ScaleByRecip shape");
+        }
+        Op::Recip | Op::Rsqrt => {
+            assert!(b.is_empty(), "one-operand op carries no divisor lanes");
+            assert!(rows.is_empty(), "rows are a ScaleByRecip shape");
+        }
+        Op::ScaleByRecip => {
+            assert_eq!(b.len(), rows.len(), "one divisor per row");
+            assert_eq!(
+                rows.iter().map(|&n| n as usize).sum::<usize>(),
+                a.len(),
+                "row lengths must cover the lane vector"
+            );
+        }
+    }
     assert_eq!(a.len(), out.len(), "output length mismatch");
     assert!(
         cfg.frac_bits >= fmt.frac_bits,
@@ -251,6 +295,9 @@ pub fn divide_batch<M: Multiplier>(
         pow,
         sum,
         recip,
+        nr_z,
+        nr_t,
+        nr_u,
         cache_x,
         cache_r,
     } = scratch;
@@ -267,21 +314,29 @@ pub fn divide_batch<M: Multiplier>(
         edge_cache.rebuild(&cfg.table.edges);
     }
 
-    // Stage 1 — plan: unpack, classify specials into the output
-    // sidechannel, pack real divisions into the dense SoA arrays.
-    stages::plan(a, b, fmt, shift, plan, out);
+    // Stage 1 — plan: unpack per op, classify specials into the output
+    // sidechannel, pack real lanes into the dense SoA arrays.
+    match op {
+        Op::Div => stages::plan(a, b, fmt, shift, plan, out),
+        Op::Recip => stages::plan_recip(a, fmt, shift, plan, out),
+        Op::Rsqrt => stages::plan_rsqrt(a, fmt, shift, plan, out),
+        Op::ScaleByRecip => stages::plan_scale(a, b, rows, fmt, shift, plan, out),
+    }
     let n = plan.lanes();
     plan.recip.resize(n, 0);
 
-    // Stages 2–3 — seed + power, tile by tile over the dense lanes.
+    // Stages 2–3 — seed + power, tile by tile over the dense lanes: the
+    // shared reciprocal core of every op.
     let mut t0 = 0;
     while t0 < n {
         let t1 = (t0 + tile).min(n);
         // Cache probe: lanes whose divisor reciprocal is already known
-        // skip straight to mul_round; misses are compacted so the
+        // skip straight to the tail; misses are compacted so the
         // compute stages run dense. Duplicate divisors within one tile
         // compute more than once — bit-identical (pure function), and a
-        // tile is at most `tile` lanes wide.
+        // tile is at most `tile` lanes wide. ScaleByRecip rows arrive
+        // as contiguous runs of one divisor, so this probe is what
+        // amortizes their reciprocal across the row.
         miss_pos.clear();
         miss_x.clear();
         for j in t0..t1 {
@@ -308,9 +363,57 @@ pub fn divide_batch<M: Multiplier>(
         t0 = t1;
     }
 
-    // Stage 4 — mul_round: final multiply + rounding-aware pack, with
-    // results scattered back to their original batch positions.
-    stages::mul_round(plan, fmt, rm, f, out);
+    // Rsqrt interlude: Newton-refine the reciprocal into 1/sqrt(x) over
+    // the same tiles and engine, in place in `plan.recip`.
+    if op == Op::Rsqrt {
+        let mut t0 = 0;
+        while t0 < n {
+            let t1 = (t0 + tile).min(n);
+            stages::rsqrt_newton(eng, f, &plan.x[t0..t1], &plan.recip[t0..t1], nr_z, nr_t, nr_u);
+            plan.recip[t0..t1].copy_from_slice(nr_z);
+            t0 = t1;
+        }
+    }
+
+    // Stage 4 — the op tail: round and scatter back to each lane's
+    // original batch position.
+    match op {
+        Op::Div | Op::ScaleByRecip => stages::mul_round(plan, fmt, rm, f, false, out),
+        Op::Recip => stages::recip_round(plan, fmt, rm, f, out),
+        Op::Rsqrt => stages::rsqrt_round(plan, fmt, rm, f, out),
+    }
+}
+
+/// Run the staged pipeline over one division batch: `out[i] = a[i] /
+/// b[i]`, all slices the same length — [`compute_batch`] pinned to
+/// [`Op::Div`] (the shape every pre-op-enum caller used).
+#[allow(clippy::too_many_arguments)]
+pub fn divide_batch<M: Multiplier>(
+    cfg: &TaylorConfig,
+    backend: &mut M,
+    scratch: &mut KernelScratch,
+    tile: usize,
+    eng: Engine,
+    a: &[u64],
+    b: &[u64],
+    fmt: Format,
+    rm: Rounding,
+    out: &mut [u64],
+) {
+    compute_batch(
+        cfg,
+        backend,
+        scratch,
+        tile,
+        eng,
+        Op::Div,
+        a,
+        b,
+        &[],
+        fmt,
+        rm,
+        out,
+    );
 }
 
 #[cfg(test)]
@@ -581,6 +684,163 @@ mod tests {
                 .collect();
             let got = kernel_divide(&cfg, None, 2, &a, &b, F32, Rounding::NearestEven);
             assert_eq!(got, want, "order={order}");
+        }
+    }
+
+    fn kernel_compute_on(
+        cfg: &TaylorConfig,
+        tile: usize,
+        eng: Engine,
+        op: crate::fp::Op,
+        a: &[u64],
+        b: &[u64],
+        rows: &[u32],
+        fmt: Format,
+        rm: Rounding,
+    ) -> Vec<u64> {
+        let mut out = vec![0u64; a.len()];
+        let mut scratch = KernelScratch::new();
+        let mut be = ExactMul::default();
+        compute_batch(cfg, &mut be, &mut scratch, tile, eng, op, a, b, rows, fmt, rm, &mut out);
+        out
+    }
+
+    #[test]
+    fn recip_bit_identical_to_div_by_one_every_engine() {
+        // Recip skips the final multiply; the tail must still equal
+        // Div(1.0, x) bit for bit — the multiply only shifts zeros in.
+        let cfg = TaylorConfig::paper_default(60);
+        let mut rng = Rng::new(90210);
+        for fmt in ALL_FORMATS {
+            let (x, _) = crate::harness::gen_bits_batch(fmt, 67, 9, rng.next_u64());
+            let ones = vec![fmt.one(); x.len()];
+            for rm in Rounding::ALL {
+                let want =
+                    kernel_divide_on(&cfg, None, 7, Engine::Scalar, &ones, &x, fmt, rm);
+                for eng in crate::simd::engines_available() {
+                    let got = kernel_compute_on(
+                        &cfg,
+                        7,
+                        eng,
+                        crate::fp::Op::Recip,
+                        &x,
+                        &[],
+                        &[],
+                        fmt,
+                        rm,
+                    );
+                    assert_eq!(got, want, "{} {} {rm:?}", eng.name(), fmt.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scale_by_recip_bit_identical_to_div_with_expanded_divisors() {
+        // Mixed row lengths (deliberately not tile multiples) with
+        // special divisors and lanes sprinkled in: per-lane results must
+        // equal Div against the broadcast-expanded divisor vector, and
+        // lane order must survive rows spanning tile boundaries.
+        let cfg = TaylorConfig::paper_default(60);
+        let mut rng = Rng::new(515);
+        for fmt in ALL_FORMATS {
+            let rows: Vec<u32> = vec![1, 5, 13, 2, 31, 1, 7];
+            let lanes: usize = rows.iter().map(|&n| n as usize).sum();
+            let (a, mut b_rows) = crate::harness::gen_bits_batch(fmt, lanes, 7, rng.next_u64());
+            b_rows.truncate(rows.len());
+            b_rows[3] = fmt.nan();
+            b_rows[5] = fmt.zero(true);
+            let b_expanded: Vec<u64> = rows
+                .iter()
+                .zip(&b_rows)
+                .flat_map(|(&n, &bb)| std::iter::repeat(bb).take(n as usize))
+                .collect();
+            for tile in [1usize, 4, 8] {
+                let want = kernel_divide_on(
+                    &cfg,
+                    None,
+                    tile,
+                    Engine::Scalar,
+                    &a,
+                    &b_expanded,
+                    fmt,
+                    Rounding::NearestEven,
+                );
+                for eng in crate::simd::engines_available() {
+                    let got = kernel_compute_on(
+                        &cfg,
+                        tile,
+                        eng,
+                        crate::fp::Op::ScaleByRecip,
+                        &a,
+                        &b_rows,
+                        &rows,
+                        fmt,
+                        Rounding::NearestEven,
+                    );
+                    assert_eq!(got, want, "{} {} tile={tile}", eng.name(), fmt.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rsqrt_specials_bit_identical_and_finite_in_band_vs_gold() {
+        use crate::divider::longdiv::LongDivider;
+        use crate::fp::ulp_diff;
+        let cfg = TaylorConfig::paper_default(60);
+        let mut rng = Rng::new(7171);
+        let mut gold = LongDivider::new();
+        for fmt in ALL_FORMATS {
+            // Specials plus positive finite operands (normals and
+            // subnormals, odd and even exponents).
+            let mut x: Vec<u64> = vec![
+                fmt.nan(),
+                fmt.zero(false),
+                fmt.zero(true),
+                fmt.inf(false),
+                fmt.inf(true),
+                fmt.assemble(true, fmt.bias() as u64, 3),
+                fmt.assemble(false, 0, 1), // smallest subnormal
+                fmt.one(),
+            ];
+            for _ in 0..120 {
+                let e = 1 + rng.below(fmt.exp_max() - 2);
+                x.push(fmt.assemble(false, e, rng.next_u64() & fmt.frac_mask()));
+            }
+            for rm in Rounding::ALL {
+                let want: Vec<u64> = x.iter().map(|&xb| gold.rsqrt_bits(xb, fmt, rm)).collect();
+                for eng in crate::simd::engines_available() {
+                    let got = kernel_compute_on(
+                        &cfg,
+                        8,
+                        eng,
+                        crate::fp::Op::Rsqrt,
+                        &x,
+                        &[],
+                        &[],
+                        fmt,
+                        rm,
+                    );
+                    let band = if fmt.frac_bits > 23 { 2 } else { 1 };
+                    for i in 0..x.len() {
+                        match ulp_diff(got[i], want[i], fmt) {
+                            None => assert_eq!(
+                                got[i], want[i],
+                                "{} {} {rm:?} special lane {i}",
+                                eng.name(),
+                                fmt.name()
+                            ),
+                            Some(ulps) => assert!(
+                                ulps <= band,
+                                "{} {} {rm:?} lane {i}: {ulps} ulps",
+                                eng.name(),
+                                fmt.name()
+                            ),
+                        }
+                    }
+                }
+            }
         }
     }
 

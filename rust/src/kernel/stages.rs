@@ -13,10 +13,16 @@
 
 use super::LanePlan;
 use crate::divider::{prepare, Prepared};
-use crate::fp::{round_pack, Format, Rounding};
+use crate::fp::{round_pack, unpack, Class, Format, Rounding};
 use crate::pla::SegmentTable;
 use crate::powering::Multiplier;
 use crate::simd::Engine;
+
+/// `⌊2^64 / sqrt(2)⌋` — shifted down to the datapath width for the
+/// odd-exponent fixup of the rsqrt tail (the nested-floor identity makes
+/// the shift of this constant equal the directly computed
+/// `⌊2^f / sqrt(2)⌋`).
+const INV_SQRT2_Q64: u64 = 0xB504_F333_F9DE_6484;
 
 /// Stage 1 — plan: unpack both operands per `fmt`, resolve the IEEE
 /// special cases (NaN/Inf/zero rules) straight into `out` (the
@@ -41,6 +47,115 @@ pub fn plan(a: &[u64], b: &[u64], fmt: Format, shift: u32, lanes: &mut LanePlan,
                 // Map the divisor significand into the Q2.F datapath.
                 lanes.x.push(sig_b << shift);
             }
+        }
+    }
+}
+
+/// Stage 1 (Recip variant) — plan `1 / a[i]`: exactly the division plan
+/// with the format's literal one as every lane's dividend, so the
+/// special table (NaN → NaN, ±0 → ±Inf, ±Inf → ±0) and the packed
+/// `sign`/`exp`/`sig_a`/`x` lanes are — by construction — those of
+/// `Div(1.0, a[i])`. The downstream tail can then skip the final
+/// multiply: `sig_a` is a power of two, so the product stage would only
+/// shift zeros in.
+pub fn plan_recip(a: &[u64], fmt: Format, shift: u32, lanes: &mut LanePlan, out: &mut [u64]) {
+    lanes.clear();
+    let one = fmt.one();
+    for (i, (&ab, q)) in a.iter().zip(out.iter_mut()).enumerate() {
+        match prepare(one, ab, fmt) {
+            Prepared::Done(bits) => *q = bits,
+            Prepared::Divide {
+                sign,
+                exp,
+                sig_a,
+                sig_b,
+            } => {
+                lanes.idx.push(i as u32);
+                lanes.sign.push(sign);
+                lanes.exp.push(exp);
+                lanes.sig_a.push(sig_a);
+                lanes.x.push(sig_b << shift);
+            }
+        }
+    }
+}
+
+/// Stage 1 (Rsqrt variant) — plan `1 / sqrt(a[i])`: IEEE `rSqrt`
+/// specials (NaN → NaN, negative non-zero including −Inf → NaN,
+/// ±0 → ±Inf, +Inf → +0) resolve into the sidechannel; finite positive
+/// lanes pack with the divisor significand `s ∈ [1, 2)` in `x`, the
+/// half-exponent in `exp`, and — reusing the otherwise-unused dividend
+/// slot — the **exponent parity** in `sig_a` (0 = even, 1 = odd): odd
+/// exponents fold as `1/sqrt(s·2^(2k+1)) = (1/sqrt(s))·(1/sqrt(2))·2^−k`
+/// and the tail multiplies the parity lanes by `1/sqrt(2)` during
+/// rounding.
+pub fn plan_rsqrt(a: &[u64], fmt: Format, shift: u32, lanes: &mut LanePlan, out: &mut [u64]) {
+    lanes.clear();
+    for (i, (&ab, q)) in a.iter().zip(out.iter_mut()).enumerate() {
+        let u = unpack(ab, fmt);
+        match u.class {
+            Class::NaN => *q = fmt.nan(),
+            Class::Zero => *q = fmt.inf(u.sign),
+            _ if u.sign => *q = fmt.nan(),
+            Class::Inf => *q = fmt.zero(false),
+            Class::Normal | Class::Subnormal => {
+                let parity = u.exp.rem_euclid(2);
+                // exp = 2k + parity ⇒ result exponent −k, exactly.
+                let k = (u.exp - parity) / 2;
+                lanes.idx.push(i as u32);
+                lanes.sign.push(false);
+                lanes.exp.push(-k);
+                lanes.sig_a.push(parity as u64);
+                lanes.x.push(u.sig << shift);
+            }
+        }
+    }
+}
+
+/// Stage 1 (ScaleByRecip variant) — plan `a[lane] / b[row]`: `a` holds
+/// the concatenated rows, `b` one divisor per row, and `rows[r]` the
+/// lane count of row `r` (aligned with `b`). Per-lane semantics are
+/// exactly division with a broadcast divisor — every special resolves
+/// through the same [`prepare`] table — so the packed lanes are those
+/// `Div` would produce from the expanded divisor vector, and the fused
+/// op's saving comes from the divisor-reciprocal cache seeing each
+/// row's `x` in one contiguous run.
+pub fn plan_scale(
+    a: &[u64],
+    b: &[u64],
+    rows: &[u32],
+    fmt: Format,
+    shift: u32,
+    lanes: &mut LanePlan,
+    out: &mut [u64],
+) {
+    debug_assert_eq!(b.len(), rows.len(), "one divisor per row");
+    debug_assert_eq!(
+        rows.iter().map(|&n| n as usize).sum::<usize>(),
+        a.len(),
+        "row lengths must cover the lane vector"
+    );
+    lanes.clear();
+    let mut i = 0usize;
+    for (&bb, &row_len) in b.iter().zip(rows) {
+        for _ in 0..row_len {
+            let ab = a[i];
+            match prepare(ab, bb, fmt) {
+                Prepared::Done(bits) => out[i] = bits,
+                Prepared::Divide {
+                    sign,
+                    exp,
+                    sig_a,
+                    sig_b,
+                } => {
+                    lanes.idx.push(i as u32);
+                    lanes.sign.push(sign);
+                    lanes.exp.push(exp);
+                    lanes.sig_a.push(sig_a);
+                    lanes.x.push(sig_b << shift);
+                }
+            }
+            i += 1;
         }
     }
 }
@@ -149,15 +264,108 @@ pub fn power<M: Multiplier>(
 /// Stage 4 — mul_round: the quotient significand `sig_a · recip`
 /// (fraction width `fmt.frac_bits + f`, value in (0.5, 2]) rounded and
 /// packed under `rm`, scattered back to each lane's original batch
-/// position. The reciprocal is itself inexact below ~2^-53, so sticky
-/// stays clear — matching the paper's inherently approximate unit (and
-/// the scalar path, bit for bit).
-pub fn mul_round(lanes: &LanePlan, fmt: Format, rm: Rounding, f: u32, out: &mut [u64]) {
+/// position. The Taylor datapath passes `sticky = false` — the
+/// reciprocal is itself inexact below ~2^-53, so sticky stays clear,
+/// matching the paper's inherently approximate unit (and the scalar
+/// path, bit for bit); the Goldschmidt fused tail passes `sticky =
+/// true`, its continuous-truncation rounding contract.
+pub fn mul_round(
+    lanes: &LanePlan,
+    fmt: Format,
+    rm: Rounding,
+    f: u32,
+    sticky: bool,
+    out: &mut [u64],
+) {
     let q_frac = fmt.frac_bits + f;
     for j in 0..lanes.lanes() {
         let q = lanes.sig_a[j] as u128 * lanes.recip[j] as u128;
         out[lanes.idx[j] as usize] =
-            round_pack(lanes.sign[j], lanes.exp[j], q, q_frac, false, fmt, rm).0;
+            round_pack(lanes.sign[j], lanes.exp[j], q, q_frac, sticky, fmt, rm).0;
+    }
+}
+
+/// Stage 4 (Recip tail) — round the reciprocal itself: no final
+/// multiply. Feeding `recip` straight to `round_pack` at width `f` is
+/// **bit-identical** to `mul_round` with a power-of-two `sig_a`
+/// (`Div(1.0, x)`): multiplying by `2^frac_bits` while widening
+/// `q_frac_bits` by the same amount only shifts zeros through the
+/// normalizer — a property test pins the identity on every datapath.
+pub fn recip_round(lanes: &LanePlan, fmt: Format, rm: Rounding, f: u32, out: &mut [u64]) {
+    for j in 0..lanes.lanes() {
+        out[lanes.idx[j] as usize] = round_pack(
+            lanes.sign[j],
+            lanes.exp[j],
+            lanes.recip[j] as u128,
+            f,
+            false,
+            fmt,
+            rm,
+        )
+        .0;
+    }
+}
+
+/// Rsqrt tail — Newton–Raphson `z ← z·(3 − x·z²)/2` over a tile, on the
+/// lane engine.
+///
+/// `x` is the planned significand (Q2.F, `[1, 2)`) and `r ≈ 1/x` the
+/// reciprocal the shared seed→power core already produced; the seed
+/// `z₀ = (1 + r)/2` starts within 6 % of `1/sqrt(x)`, so four quadratic
+/// steps land at the fixed-point truncation floor (≲2^−(F−3), far below
+/// every format's half-ulp). The iteration's fixed point is `1/sqrt(x)`
+/// independent of `r`'s Taylor error — `r` only sets the starting
+/// distance. The halving folds into the final multiply's shift (`F+1`).
+/// Results land in `z`; `t`/`u` are scratch.
+pub fn rsqrt_newton(
+    eng: Engine,
+    f: u32,
+    x: &[u64],
+    r: &[u64],
+    z: &mut Vec<u64>,
+    t: &mut Vec<u64>,
+    u: &mut Vec<u64>,
+) {
+    let k = x.len();
+    debug_assert_eq!(r.len(), k);
+    let one = 1u64 << f;
+    let three = 3u64 << f;
+    z.clear();
+    z.resize(k, 0);
+    t.clear();
+    t.resize(k, 0);
+    u.clear();
+    u.resize(k, 0);
+    // Engine-independent seed (plain scalar adds — no rounding freedom).
+    for (zi, &ri) in z.iter_mut().zip(r) {
+        *zi = (one + ri) >> 1;
+    }
+    for _ in 0..4 {
+        eng.sqr_shr(z, f, t); // t = z²
+        eng.mul_shr(x, t, f, u); // u = x·z²
+        eng.rsub_sat(three, u); // u = 3 − x·z² (clamped, as hardware)
+        eng.mul_shr(z, u, f + 1, t); // t = z·u/2
+        std::mem::swap(z, t);
+    }
+}
+
+/// Stage 4 (Rsqrt tail rounding) — scatter `z ≈ 1/sqrt(s)` back through
+/// the odd-exponent fixup: parity lanes (see [`plan_rsqrt`]) multiply by
+/// `⌊2^f/sqrt(2)⌋` (fraction width doubles to `2f`), even lanes shift by
+/// `f` so both take the same `round_pack` width. Sticky is forced — the
+/// Newton value is approximate at ~2^−(F−3), so directed modes must
+/// never claim exactness (same contract as the Goldschmidt datapath).
+pub fn rsqrt_round(lanes: &LanePlan, fmt: Format, rm: Rounding, f: u32, out: &mut [u64]) {
+    let inv_sqrt2 = (INV_SQRT2_Q64 >> (64 - f)) as u128;
+    for j in 0..lanes.lanes() {
+        let z = lanes.recip[j] as u128;
+        let q = if lanes.sig_a[j] == 1 {
+            z * inv_sqrt2
+        } else {
+            z << f
+        };
+        out[lanes.idx[j] as usize] =
+            round_pack(lanes.sign[j], lanes.exp[j], q, 2 * f, true, fmt, rm).0;
     }
 }
 

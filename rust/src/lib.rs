@@ -25,13 +25,13 @@
 //! * [`hw`] — gate-level cost model reproducing the hardware claims
 //!   (Fig 4 vs Fig 5, "< 50 % hardware");
 //! * [`analysis`] — ULP/relative-error sweeps used by the benches;
-//! * [`router`] — the adaptive backend router (per-(Format, Rounding,
-//!   batch-size) scoring cells seeded from bench history or a static
-//!   cost model, refined online; drives `BackendChoice::Auto`);
+//! * [`router`] — the adaptive backend router (per-(Op, Format,
+//!   Rounding, batch-size) scoring cells seeded from bench history or
+//!   a static cost model, refined online; drives `BackendChoice::Auto`);
 //! * [`runtime`] — PJRT loader for the JAX/Pallas AOT artifacts;
-//! * [`coordinator`] — the typed multi-format division service
-//!   (DivRequest/DivResponse, per-(Format, Rounding) dynamic batcher,
-//!   worker pool, metrics);
+//! * [`coordinator`] — the typed multi-format, multi-op division
+//!   service (DivRequest/DivResponse with typed `fp::Op` constructors,
+//!   per-(Op, Format, Rounding) dynamic batcher, worker pool, metrics);
 //! * [`harness`] — workload generators and the bench runner;
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, stats, property
 //!   testing, tables, errors) — the image vendors no general-purpose

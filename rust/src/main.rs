@@ -67,6 +67,10 @@ fn print_usage() {
          \x20                   --workers N and --shards N size the sharded runtime;\n\
          \x20                   --tile N, --ilm K and --simd auto|forced|scalar\n\
          \x20                   configure the kernel backends' lane engine;\n\
+         \x20                   --op div|recip|rsqrt|scale-recip picks the operation\n\
+         \x20                   each request carries (non-div needs a kernel-family\n\
+         \x20                   or gold backend); --trunc-bits N drops N low product\n\
+         \x20                   bits per goldschmidt refinement multiply;\n\
          \x20                   --spare-divisor N tunes the idle-burst budget shrink)\n\
          \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run;\n\
          \x20                  --gate --window K --tolerance PCT exits non-zero when a\n\
@@ -264,8 +268,14 @@ fn cmd_accuracy(args: Vec<String>) -> i32 {
 fn cmd_serve(args: Vec<String>) -> i32 {
     use std::time::Duration;
     use tsdiv::coordinator::{BackendChoice, DivRequest, DivisionService, ServiceConfig};
-    use tsdiv::fp::{Format, Rounding};
+    use tsdiv::fp::{Format, Op, Rounding};
     let cmd = Command::new("serve", "run the division service under load")
+        .opt_choice(
+            "op",
+            "div",
+            &["div", "recip", "rsqrt", "scale-recip"],
+            "operation each request carries",
+        )
         .opt_choice(
             "backend",
             "native",
@@ -274,6 +284,11 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         )
         .opt("tile", "8", "kernel backend: lanes per SoA pipeline tile")
         .opt("ilm", "", "kernel backend: ILM correction budget (empty = exact)")
+        .opt(
+            "trunc-bits",
+            "0",
+            "goldschmidt backend: low product bits dropped per refinement multiply",
+        )
         .opt_choice(
             "simd",
             "auto",
@@ -313,6 +328,13 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         Ok(p) => p,
         Err(help) => {
             eprintln!("{help}");
+            return 2;
+        }
+    };
+    let trunc_bits: u32 = match parsed.parse_required("trunc-bits") {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
         }
     };
@@ -363,6 +385,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
                 BackendChoice::Goldschmidt {
                     iterations: 3,
                     kernel,
+                    trunc_bits,
                 }
             } else {
                 BackendChoice::Kernel { order: 5, kernel }
@@ -393,6 +416,36 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             "--simd {simd_flag} only applies to --backend kernel|goldschmidt; \
              other backends resolve the lane engine as 'auto' \
              (set TSDIV_SIMD to override process-wide)"
+        );
+        return 2;
+    }
+    // Only the Goldschmidt datapath has refinement multiplies to
+    // truncate; a nonzero budget anywhere else would be silently lost.
+    if trunc_bits != 0 && !matches!(backend, BackendChoice::Goldschmidt { .. }) {
+        eprintln!(
+            "--trunc-bits only applies to --backend goldschmidt \
+             (truncated refinement multiplies)"
+        );
+        return 2;
+    }
+    // Surface a bad --trunc-bits bound (or any other backend knob) as
+    // exit code 2 with the message, not a panic through expect().
+    if let Err(e) = backend.validate() {
+        eprintln!("{e}");
+        return 2;
+    }
+    let op = Op::from_name(parsed.get_or("op", "div"))
+        .expect("opt_choice guarantees a valid op name");
+    if op != Op::Div
+        && matches!(
+            backend,
+            BackendChoice::Native { .. } | BackendChoice::NativeScalar { .. } | BackendChoice::Pjrt
+        )
+    {
+        eprintln!(
+            "--op {} needs --backend kernel|goldschmidt|auto|gold \
+             (the native and pjrt backends serve div only)",
+            op.name()
         );
         return 2;
     }
@@ -450,15 +503,31 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         let fmt = formats[req_no % formats.len()];
         req_no += 1;
         let (a, b) = tsdiv::harness::gen_bits_batch(fmt, 256, 8, req_no as u64);
-        let req = DivRequest::new(fmt, rm, a, b);
+        let req = match op {
+            Op::Div => DivRequest::new(fmt, rm, a, b),
+            Op::Recip => DivRequest::recip(fmt, rm, a),
+            Op::Rsqrt => {
+                // rsqrt of a negative is NaN; clear the sign so the
+                // load measures the refinement path, not NaN fill.
+                let mut xs = a;
+                for x in xs.iter_mut() {
+                    *x &= !fmt.sign_mask();
+                }
+                DivRequest::rsqrt(fmt, rm, xs)
+            }
+            // 8 rows of 32 lanes each: the batch straddles pipeline
+            // tiles, so the broadcast path is actually exercised.
+            Op::ScaleByRecip => DivRequest::scale_by_recip(fmt, rm, a, b[..8].to_vec()),
+        };
         if svc.divide_request_blocking(req).is_ok() {
             lanes += 256;
         }
     }
     let m = svc.metrics();
     println!(
-        "served {lanes} divisions in {seconds}s ({} div/s, {} rm={}), {} batches over {} shard(s), \
+        "served {lanes} {} lanes in {seconds}s ({} lanes/s, {} rm={}), {} batches over {} shard(s), \
          {} stolen, p50 {:.3} ms, p99 {:.3} ms",
+        op.name(),
         sig(lanes as f64 / seconds as f64, 4),
         parsed.get_or("format", "f32"),
         rm.name(),

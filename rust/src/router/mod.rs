@@ -4,9 +4,13 @@
 //! kernel and the Goldschmidt iterate datapath — and which one wins
 //! depends on the traffic: format width changes the per-lane multiply
 //! cost, rounding mode is free but keys the batch buckets, and batch
-//! size moves the fixed per-batch overhead around. [`BackendRouter`]
-//! keeps one scoring cell per `(Format, Rounding, batch-size bucket)`
-//! and answers "which datapath should run this batch?".
+//! size moves the fixed per-batch overhead around. The operation is a
+//! fourth bucket axis: reciprocal skips the final multiply, rsqrt adds
+//! a Newton refinement, and scale-by-reciprocal amortizes one
+//! reciprocal across a whole row, so the datapaths' relative cost
+//! shifts per op. [`BackendRouter`] keeps one scoring cell per
+//! `(Op, Format, Rounding, batch-size bucket)` and answers "which
+//! datapath should run this batch?".
 //!
 //! Scores are **per-lane seconds** (lower is better), blended from
 //! three sources in priority order:
@@ -14,14 +18,20 @@
 //! 1. **Bench history.** [`BackendRouter::seed_from_history`] takes the
 //!    rolling `BENCH_HISTORY.jsonl` records (as read by
 //!    [`crate::harness::read_bench_history`]) and seeds each cell from
-//!    the per-key medians of the `coordinator_serve` throughput rows
-//!    (`kernel_div_per_s`, `goldschmidt_div_per_s_{fmt}`), inverting
-//!    div/s into seconds/lane.
+//!    the per-key medians of the `coordinator_serve` throughput rows:
+//!    `kernel_div_per_s` / `goldschmidt_div_per_s_{fmt}` for division,
+//!    `recip_div_per_s_{kernel,goldschmidt}` and
+//!    `rsqrt_div_per_s_{kernel,goldschmidt}` for the unary ops,
+//!    inverting per-second throughput into seconds/lane.
+//!    Scale-by-reciprocal publishes rows/s (not lanes/s), so its cells
+//!    keep the static prior until live observations arrive.
 //! 2. **Static cost model.** With no history, cells start from a
-//!    multiply-count prior: the order-5 Taylor pipeline spends ~7 wide
-//!    multiplies per lane (squarings + powering + final round), the
-//!    3-iteration Goldschmidt datapath ~8 (seed products plus two per
-//!    refinement), scaled by [`crate::fp::Format::lane_cost`].
+//!    per-op multiply-count prior (see `per_lane_muls`): ~7 wide
+//!    multiplies per division lane on the order-5 Taylor pipeline vs
+//!    ~8 on 3-iteration Goldschmidt, one fewer each for reciprocal,
+//!    ~12 more each for rsqrt's Newton tail, and ~2-3 amortized for
+//!    scale-by-reciprocal, scaled by
+//!    [`crate::fp::Format::lane_cost`].
 //! 3. **Online measurement.** Every routed batch reports its wall
 //!    latency back via [`BackendRouter::observe`]; the cell keeps an
 //!    EWMA of per-lane seconds so the table tracks the machine it is
@@ -47,7 +57,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::fp::{Format, Rounding, F32};
+use crate::fp::{Format, Op, Rounding, F32};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -102,13 +112,31 @@ const EWMA_ALPHA: f64 = 0.2;
 /// (lane counts of 2^16 and beyond share the top bucket).
 const NUM_BUCKETS: usize = 17;
 
+const NUM_OPS: usize = 4;
 const NUM_FORMATS: usize = 4;
 const NUM_ROUNDINGS: usize = 4;
-const NUM_CELLS: usize = NUM_FORMATS * NUM_ROUNDINGS * NUM_BUCKETS;
+const NUM_CELLS: usize = NUM_OPS * NUM_FORMATS * NUM_ROUNDINGS * NUM_BUCKETS;
 
-/// Rough wide-multiply count per lane for the static prior.
-const KERNEL_MULS: f64 = 7.0;
-const GOLDSCHMIDT_MULS: f64 = 8.0;
+/// Rough wide-multiply count per lane for the static prior, per op:
+/// division's order-5 Taylor pipeline spends ~7 wide multiplies per
+/// lane vs ~8 for 3-iteration Goldschmidt; reciprocal drops the final
+/// dividend multiply on both; rsqrt appends the shared Newton tail
+/// (~3 multiplies × 4 sweeps); scale-by-reciprocal amortizes the whole
+/// reciprocal chain across a row, leaving roughly the final multiply
+/// per lane (Goldschmidt's dedupe pass costs it one more).
+fn per_lane_muls(c: Candidate, op: Op) -> f64 {
+    match (c, op) {
+        (Candidate::Kernel, Op::Div) => 7.0,
+        (Candidate::Goldschmidt, Op::Div) => 8.0,
+        (Candidate::Kernel, Op::Recip) => 6.0,
+        (Candidate::Goldschmidt, Op::Recip) => 7.0,
+        (Candidate::Kernel, Op::Rsqrt) => 19.0,
+        (Candidate::Goldschmidt, Op::Rsqrt) => 20.0,
+        (Candidate::Kernel, Op::ScaleByRecip) => 2.0,
+        (Candidate::Goldschmidt, Op::ScaleByRecip) => 3.0,
+    }
+}
+
 /// Pseudo-seconds one wide multiply costs in the static prior. The
 /// absolute scale is irrelevant (only the ratio between candidates
 /// matters until real observations arrive); it is chosen to be in the
@@ -166,17 +194,15 @@ fn bucket_idx(lanes: usize) -> usize {
     (log2 as usize).min(NUM_BUCKETS - 1)
 }
 
-fn cell_idx(fmt: Format, rm: Rounding, lanes: usize) -> usize {
-    (format_idx(fmt) * NUM_ROUNDINGS + rounding_idx(rm)) * NUM_BUCKETS + bucket_idx(lanes)
+fn cell_idx(op: Op, fmt: Format, rm: Rounding, lanes: usize) -> usize {
+    ((op.idx() * NUM_FORMATS + format_idx(fmt)) * NUM_ROUNDINGS + rounding_idx(rm)) * NUM_BUCKETS
+        + bucket_idx(lanes)
 }
 
-/// Static-prior per-lane seconds for `c` on `fmt` (see module docs).
-fn prior_per_lane(c: Candidate, fmt: Format) -> f64 {
-    let muls = match c {
-        Candidate::Kernel => KERNEL_MULS,
-        Candidate::Goldschmidt => GOLDSCHMIDT_MULS,
-    };
-    muls * MUL_COST_S * fmt.lane_cost() as f64 / F32.lane_cost() as f64
+/// Static-prior per-lane seconds for `c` running `op` on `fmt` (see
+/// module docs).
+fn prior_per_lane(c: Candidate, op: Op, fmt: Format) -> f64 {
+    per_lane_muls(c, op) * MUL_COST_S * fmt.lane_cost() as f64 / F32.lane_cost() as f64
 }
 
 impl BackendRouter {
@@ -191,23 +217,26 @@ impl BackendRouter {
     /// [`EXPLORATION_FLOOR`] from below so no configuration can starve
     /// a candidate forever.
     pub fn with_epsilon(seed: u64, epsilon: f64) -> Self {
-        let cells = crate::fp::ALL_FORMATS
+        let cells: Vec<Cell> = Op::ALL
             .iter()
-            .flat_map(|&fmt| {
-                (0..NUM_ROUNDINGS * NUM_BUCKETS).map(move |_| Cell {
-                    stats: [
-                        CandStat {
-                            per_lane: prior_per_lane(Candidate::Kernel, fmt),
-                            samples: 0,
-                        },
-                        CandStat {
-                            per_lane: prior_per_lane(Candidate::Goldschmidt, fmt),
-                            samples: 0,
-                        },
-                    ],
+            .flat_map(|&op| {
+                crate::fp::ALL_FORMATS.iter().flat_map(move |&fmt| {
+                    (0..NUM_ROUNDINGS * NUM_BUCKETS).map(move |_| Cell {
+                        stats: [
+                            CandStat {
+                                per_lane: prior_per_lane(Candidate::Kernel, op, fmt),
+                                samples: 0,
+                            },
+                            CandStat {
+                                per_lane: prior_per_lane(Candidate::Goldschmidt, op, fmt),
+                                samples: 0,
+                            },
+                        ],
+                    })
                 })
             })
             .collect();
+        debug_assert_eq!(cells.len(), NUM_CELLS);
         BackendRouter {
             state: Mutex::new(RouterState {
                 rng: Rng::new(seed),
@@ -222,11 +251,16 @@ impl BackendRouter {
     /// (the parsed lines of `BENCH_HISTORY.jsonl`). Only
     /// `coordinator_serve` rows contribute; per-key medians of the
     /// positive finite throughput values are inverted into per-lane
-    /// seconds. The Taylor kernel publishes one f32 throughput key
-    /// (`kernel_div_per_s`), so other formats are scaled by the
-    /// [`Format::lane_cost`] ratio; Goldschmidt publishes per-format
-    /// keys. Seeded cells keep `samples == 0`, so cold-start
-    /// exploration still measures the live machine.
+    /// seconds. Division: the Taylor kernel publishes one f32
+    /// throughput key (`kernel_div_per_s`), so other formats are
+    /// scaled by the [`Format::lane_cost`] ratio; Goldschmidt
+    /// publishes per-format keys. Recip and rsqrt publish one
+    /// f32-traffic key per candidate
+    /// (`{recip,rsqrt}_div_per_s_{kernel,goldschmidt}`), scaled the
+    /// same way; scale-by-reciprocal publishes rows/s and is not
+    /// seedable, so its cells keep the static prior. Seeded cells
+    /// keep `samples == 0`, so cold-start exploration still measures
+    /// the live machine.
     pub fn seed_from_history(&self, records: &[Json]) {
         let serve: Vec<&Json> = records
             .iter()
@@ -247,23 +281,41 @@ impl BackendRouter {
                 Some(crate::harness::median(&vals))
             }
         };
-        let kernel_f32 = key_median("kernel_div_per_s");
+        // f32-traffic medians, rescaled per format below.
+        let kernel_div_f32 = key_median("kernel_div_per_s");
+        let unary_f32 = |op: Op, c: Candidate| -> Option<f64> {
+            key_median(&format!("{}_div_per_s_{}", op.name(), c.name()))
+        };
         let mut state = self.state.lock().unwrap();
-        for &fmt in crate::fp::ALL_FORMATS.iter() {
-            let kernel = kernel_f32
-                .map(|per_s| F32.lane_cost() as f64 / (per_s * fmt.lane_cost() as f64));
-            let gold = key_median(&format!("goldschmidt_div_per_s_{}", fmt.name()))
-                .map(|per_s| 1.0 / per_s);
-            let fi = format_idx(fmt);
-            for cell in state.cells[fi * NUM_ROUNDINGS * NUM_BUCKETS..]
-                .iter_mut()
-                .take(NUM_ROUNDINGS * NUM_BUCKETS)
-            {
-                if let Some(s) = kernel {
-                    cell.stats[Candidate::Kernel.idx()].per_lane = s;
-                }
-                if let Some(s) = gold {
-                    cell.stats[Candidate::Goldschmidt.idx()].per_lane = s;
+        for &op in Op::ALL.iter() {
+            for &fmt in crate::fp::ALL_FORMATS.iter() {
+                let rescale =
+                    |per_s: f64| F32.lane_cost() as f64 / (per_s * fmt.lane_cost() as f64);
+                let (kernel, gold) = match op {
+                    Op::Div => (
+                        kernel_div_f32.map(rescale),
+                        key_median(&format!("goldschmidt_div_per_s_{}", fmt.name()))
+                            .map(|per_s| 1.0 / per_s),
+                    ),
+                    Op::Recip | Op::Rsqrt => (
+                        unary_f32(op, Candidate::Kernel).map(rescale),
+                        unary_f32(op, Candidate::Goldschmidt).map(rescale),
+                    ),
+                    // Rows/s, not lanes/s — keep the static prior.
+                    Op::ScaleByRecip => (None, None),
+                };
+                let base =
+                    (op.idx() * NUM_FORMATS + format_idx(fmt)) * NUM_ROUNDINGS * NUM_BUCKETS;
+                for cell in state.cells[base..]
+                    .iter_mut()
+                    .take(NUM_ROUNDINGS * NUM_BUCKETS)
+                {
+                    if let Some(s) = kernel {
+                        cell.stats[Candidate::Kernel.idx()].per_lane = s;
+                    }
+                    if let Some(s) = gold {
+                        cell.stats[Candidate::Goldschmidt.idx()].per_lane = s;
+                    }
                 }
             }
         }
@@ -272,10 +324,10 @@ impl BackendRouter {
     /// Pick the datapath for one batch. Cold candidates (fewer than
     /// [`COLD_FLOOR`] samples in this cell) are drained first in
     /// index order; after that, epsilon-greedy over the per-lane EWMA.
-    pub fn pick(&self, fmt: Format, rm: Rounding, lanes: usize) -> Candidate {
+    pub fn pick(&self, op: Op, fmt: Format, rm: Rounding, lanes: usize) -> Candidate {
         let mut state = self.state.lock().unwrap();
         let explore = state.rng.f64() < self.epsilon;
-        let cell = &state.cells[cell_idx(fmt, rm, lanes)];
+        let cell = &state.cells[cell_idx(op, fmt, rm, lanes)];
         let coldest = Candidate::all()
             .into_iter()
             .min_by_key(|c| cell.stats[c.idx()].samples)
@@ -309,7 +361,16 @@ impl BackendRouter {
     }
 
     /// Fold one measured batch back into the table.
-    pub fn observe(&self, fmt: Format, rm: Rounding, lanes: usize, c: Candidate, elapsed: Duration) {
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe(
+        &self,
+        op: Op,
+        fmt: Format,
+        rm: Rounding,
+        lanes: usize,
+        c: Candidate,
+        elapsed: Duration,
+    ) {
         if lanes == 0 {
             return;
         }
@@ -318,7 +379,7 @@ impl BackendRouter {
             return;
         }
         let mut state = self.state.lock().unwrap();
-        let stat = &mut state.cells[cell_idx(fmt, rm, lanes)].stats[c.idx()];
+        let stat = &mut state.cells[cell_idx(op, fmt, rm, lanes)].stats[c.idx()];
         if stat.samples == 0 {
             stat.per_lane = per_lane;
         } else {
@@ -388,7 +449,7 @@ mod tests {
         // timings so epsilon-greedy is in charge afterwards.
         for _ in 0..COLD_FLOOR {
             for c in Candidate::all() {
-                router.observe(fmt, rm, lanes, c, Duration::from_micros(10));
+                router.observe(Op::Div, fmt, rm, lanes, c, Duration::from_micros(10));
             }
         }
     }
@@ -398,11 +459,11 @@ mod tests {
         let router = BackendRouter::new(7);
         let mut counts = [0u64; NUM_CANDIDATES];
         for _ in 0..(2 * COLD_FLOOR) {
-            let c = router.pick(F32, Rounding::NearestEven, 64);
+            let c = router.pick(Op::Div, F32, Rounding::NearestEven, 64);
             counts[c.idx()] += 1;
             // Report wildly lopsided timings: Goldschmidt 100x slower.
             let us = if c == Candidate::Kernel { 1 } else { 100 };
-            router.observe(F32, Rounding::NearestEven, 64, c, Duration::from_micros(us));
+            router.observe(Op::Div, F32, Rounding::NearestEven, 64, c, Duration::from_micros(us));
         }
         // Despite Goldschmidt losing every observation, the cold floor
         // forces an even split of the first 2*COLD_FLOOR picks.
@@ -418,12 +479,25 @@ mod tests {
         // freshly constructed router ranks kernel ahead of goldschmidt
         // in its table for every format.
         for &fmt in crate::fp::ALL_FORMATS.iter() {
-            assert!(
-                prior_per_lane(Candidate::Kernel, fmt)
-                    < prior_per_lane(Candidate::Goldschmidt, fmt),
-                "static prior must favour the kernel for {}",
-                fmt.name()
-            );
+            for &op in Op::ALL.iter() {
+                assert!(
+                    prior_per_lane(Candidate::Kernel, op, fmt)
+                        < prior_per_lane(Candidate::Goldschmidt, op, fmt),
+                    "static prior must favour the kernel for {}/{}",
+                    op.name(),
+                    fmt.name()
+                );
+            }
+            // And the per-op ordering reflects the tails: amortized
+            // scale-by-recip is cheapest, the Newton rsqrt dearest.
+            for c in Candidate::all() {
+                assert!(
+                    prior_per_lane(c, Op::ScaleByRecip, fmt)
+                        < prior_per_lane(c, Op::Recip, fmt)
+                );
+                assert!(prior_per_lane(c, Op::Recip, fmt) < prior_per_lane(c, Op::Div, fmt));
+                assert!(prior_per_lane(c, Op::Div, fmt) < prior_per_lane(c, Op::Rsqrt, fmt));
+            }
         }
     }
 
@@ -434,6 +508,7 @@ mod tests {
         // Now make Goldschmidt decisively faster in this cell.
         for _ in 0..20 {
             router.observe(
+                Op::Div,
                 F32,
                 Rounding::TowardZero,
                 256,
@@ -441,6 +516,7 @@ mod tests {
                 Duration::from_micros(1),
             );
             router.observe(
+                Op::Div,
                 F32,
                 Rounding::TowardZero,
                 256,
@@ -451,7 +527,7 @@ mod tests {
         let mut gold = 0;
         let total = 200;
         for _ in 0..total {
-            if router.pick(F32, Rounding::TowardZero, 256) == Candidate::Goldschmidt {
+            if router.pick(Op::Div, F32, Rounding::TowardZero, 256) == Candidate::Goldschmidt {
                 gold += 1;
             }
         }
@@ -468,6 +544,7 @@ mod tests {
         warm(&router, F64, Rounding::NearestEven, 1024);
         for _ in 0..20 {
             router.observe(
+                Op::Div,
                 F64,
                 Rounding::NearestEven,
                 1024,
@@ -475,6 +552,7 @@ mod tests {
                 Duration::from_micros(1),
             );
             router.observe(
+                Op::Div,
                 F64,
                 Rounding::NearestEven,
                 1024,
@@ -484,7 +562,7 @@ mod tests {
         }
         let mut loser_picks = 0;
         for _ in 0..2000 {
-            if router.pick(F64, Rounding::NearestEven, 1024) == Candidate::Goldschmidt {
+            if router.pick(Op::Div, F64, Rounding::NearestEven, 1024) == Candidate::Goldschmidt {
                 loser_picks += 1;
             }
         }
@@ -502,7 +580,7 @@ mod tests {
             let router = BackendRouter::new(99);
             warm(&router, F16, Rounding::TowardPositive, 32);
             (0..64)
-                .map(|_| router.pick(F16, Rounding::TowardPositive, 32).idx())
+                .map(|_| router.pick(Op::Div, F16, Rounding::TowardPositive, 32).idx())
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
@@ -527,19 +605,120 @@ mod tests {
         // alternating), then confirm the seeded ordering via win_rate
         // over a hand-marked cell.
         let state = router.state.lock().unwrap();
-        let cell = &state.cells[cell_idx(F32, Rounding::NearestEven, 64)];
+        let cell = &state.cells[cell_idx(Op::Div, F32, Rounding::NearestEven, 64)];
         assert!(
             cell.stats[Candidate::Goldschmidt.idx()].per_lane
                 < cell.stats[Candidate::Kernel.idx()].per_lane,
             "history seeding must rank the measured winner first"
         );
         // Formats without their own kernel key scale from the f32 row.
-        let f64_cell = &state.cells[cell_idx(F64, Rounding::NearestEven, 64)];
+        let f64_cell = &state.cells[cell_idx(Op::Div, F64, Rounding::NearestEven, 64)];
         assert!(
             f64_cell.stats[Candidate::Kernel.idx()].per_lane
                 > cell.stats[Candidate::Kernel.idx()].per_lane,
             "wider formats must be priced slower from the same f32 row"
         );
+        // Division history never bleeds into other ops' cells.
+        let recip_cell = &state.cells[cell_idx(Op::Recip, F32, Rounding::NearestEven, 64)];
+        assert_eq!(
+            recip_cell.stats[Candidate::Kernel.idx()].per_lane,
+            prior_per_lane(Candidate::Kernel, Op::Recip, F32),
+        );
+    }
+
+    #[test]
+    fn per_op_history_keys_seed_their_own_cells_only() {
+        let mut rec = Json::obj();
+        rec.set("bench", "coordinator_serve".into());
+        // Kernel wins recip, goldschmidt wins rsqrt — decisively.
+        rec.set("recip_div_per_s_kernel", Json::Num(8.0e8));
+        rec.set("recip_div_per_s_goldschmidt", Json::Num(1.0e8));
+        rec.set("rsqrt_div_per_s_kernel", Json::Num(1.0e8));
+        rec.set("rsqrt_div_per_s_goldschmidt", Json::Num(8.0e8));
+        let router = BackendRouter::new(17);
+        router.seed_from_history(&[rec]);
+        let state = router.state.lock().unwrap();
+        let recip = &state.cells[cell_idx(Op::Recip, F32, Rounding::NearestEven, 64)];
+        assert!(
+            recip.stats[Candidate::Kernel.idx()].per_lane
+                < recip.stats[Candidate::Goldschmidt.idx()].per_lane
+        );
+        let rsqrt = &state.cells[cell_idx(Op::Rsqrt, F32, Rounding::NearestEven, 64)];
+        assert!(
+            rsqrt.stats[Candidate::Goldschmidt.idx()].per_lane
+                < rsqrt.stats[Candidate::Kernel.idx()].per_lane
+        );
+        // Wider formats reprice the same f32-traffic key by lane cost.
+        let recip64 = &state.cells[cell_idx(Op::Recip, F64, Rounding::NearestEven, 64)];
+        assert!(
+            recip64.stats[Candidate::Kernel.idx()].per_lane
+                > recip.stats[Candidate::Kernel.idx()].per_lane
+        );
+        // Scale-by-recip is not seedable: static prior stays.
+        let scale = &state.cells[cell_idx(Op::ScaleByRecip, F32, Rounding::NearestEven, 64)];
+        assert_eq!(
+            scale.stats[Candidate::Kernel.idx()].per_lane,
+            prior_per_lane(Candidate::Kernel, Op::ScaleByRecip, F32),
+        );
+        // And division cells keep the prior (no div keys in the record).
+        let div = &state.cells[cell_idx(Op::Div, F32, Rounding::NearestEven, 64)];
+        assert_eq!(
+            div.stats[Candidate::Kernel.idx()].per_lane,
+            prior_per_lane(Candidate::Kernel, Op::Div, F32),
+        );
+    }
+
+    #[test]
+    fn ops_score_in_independent_cells() {
+        let router = BackendRouter::with_epsilon(31, EXPLORATION_FLOOR);
+        // Same (fmt, rm, lanes), different ops: flip rsqrt toward
+        // goldschmidt while div keeps favouring the kernel.
+        for _ in 0..COLD_FLOOR + 20 {
+            router.observe(
+                Op::Rsqrt,
+                F32,
+                Rounding::NearestEven,
+                64,
+                Candidate::Goldschmidt,
+                Duration::from_micros(1),
+            );
+            router.observe(
+                Op::Rsqrt,
+                F32,
+                Rounding::NearestEven,
+                64,
+                Candidate::Kernel,
+                Duration::from_micros(50),
+            );
+            router.observe(
+                Op::Div,
+                F32,
+                Rounding::NearestEven,
+                64,
+                Candidate::Kernel,
+                Duration::from_micros(1),
+            );
+            router.observe(
+                Op::Div,
+                F32,
+                Rounding::NearestEven,
+                64,
+                Candidate::Goldschmidt,
+                Duration::from_micros(50),
+            );
+        }
+        let (mut rsqrt_gold, mut div_kernel) = (0, 0);
+        let total = 200;
+        for _ in 0..total {
+            if router.pick(Op::Rsqrt, F32, Rounding::NearestEven, 64) == Candidate::Goldschmidt {
+                rsqrt_gold += 1;
+            }
+            if router.pick(Op::Div, F32, Rounding::NearestEven, 64) == Candidate::Kernel {
+                div_kernel += 1;
+            }
+        }
+        assert!(rsqrt_gold > total * 8 / 10, "rsqrt→goldschmidt {rsqrt_gold}/{total}");
+        assert!(div_kernel > total * 8 / 10, "div→kernel {div_kernel}/{total}");
     }
 
     #[test]
@@ -550,10 +729,10 @@ mod tests {
         let router = BackendRouter::new(3);
         router.seed_from_history(&[rec]);
         let state = router.state.lock().unwrap();
-        let cell = &state.cells[cell_idx(F32, Rounding::NearestEven, 8)];
+        let cell = &state.cells[cell_idx(Op::Div, F32, Rounding::NearestEven, 8)];
         assert_eq!(
             cell.stats[Candidate::Kernel.idx()].per_lane,
-            prior_per_lane(Candidate::Kernel, F32),
+            prior_per_lane(Candidate::Kernel, Op::Div, F32),
             "non-serve records must not disturb the static prior"
         );
     }
@@ -564,6 +743,7 @@ mod tests {
         assert_eq!(router.win_rate(Candidate::Kernel), 0.0);
         assert_eq!(router.dispatches(Candidate::Kernel), 0);
         router.observe(
+            Op::Div,
             F32,
             Rounding::NearestEven,
             128,
@@ -571,6 +751,7 @@ mod tests {
             Duration::from_micros(1),
         );
         router.observe(
+            Op::Div,
             F32,
             Rounding::NearestEven,
             128,
@@ -579,7 +760,7 @@ mod tests {
         );
         assert_eq!(router.win_rate(Candidate::Kernel), 1.0);
         assert_eq!(router.win_rate(Candidate::Goldschmidt), 0.0);
-        let c = router.pick(F32, Rounding::NearestEven, 128);
+        let c = router.pick(Op::Div, F32, Rounding::NearestEven, 128);
         assert_eq!(router.dispatches(c), 1);
     }
 
@@ -593,9 +774,17 @@ mod tests {
         assert_eq!(bucket_idx(usize::MAX), NUM_BUCKETS - 1);
         // Distinct buckets are distinct cells for the same key.
         assert_ne!(
-            cell_idx(F32, Rounding::NearestEven, 2),
-            cell_idx(F32, Rounding::NearestEven, 4)
+            cell_idx(Op::Div, F32, Rounding::NearestEven, 2),
+            cell_idx(Op::Div, F32, Rounding::NearestEven, 4)
         );
+        // Distinct ops are distinct cells for the same traffic shape,
+        // and every cell index stays inside the table.
+        let mut seen = std::collections::HashSet::new();
+        for &op in Op::ALL.iter() {
+            let i = cell_idx(op, F32, Rounding::NearestEven, 64);
+            assert!(i < NUM_CELLS);
+            assert!(seen.insert(i), "op cells must not collide");
+        }
         // And zero lanes does not panic.
         assert_eq!(bucket_idx(0), 0);
     }

@@ -583,6 +583,220 @@ fn prop_goldschmidt_backend_vs_kernel_and_gold_all_formats() {
     );
 }
 
+/// Random operand triple in the shape `op` expects: unary ops carry
+/// only `a`; `ScaleByRecip` carries ragged rows (rarely tile
+/// multiples) with one divisor each; `Div` carries matched `a`/`b`.
+/// Specials and subnormals are mixed into every position.
+fn gen_op_operands(
+    d: &mut tsdiv::util::check::Draw,
+    op: tsdiv::fp::Op,
+    fmt: tsdiv::fp::Format,
+) -> (Vec<u64>, Vec<u64>, Vec<u32>) {
+    use tsdiv::fp::Op;
+    use tsdiv::harness::special_patterns;
+    let specials = special_patterns(fmt);
+    let mut pick = |d: &mut tsdiv::util::check::Draw, special: bool| {
+        if special {
+            specials[d.choose_idx(specials.len())]
+        } else {
+            d.u64() & fmt.width_mask()
+        }
+    };
+    match op {
+        Op::ScaleByRecip => {
+            let nrows = d.range_u64(1, 7) as usize;
+            let mut rows = Vec::with_capacity(nrows);
+            let mut b = Vec::with_capacity(nrows);
+            let mut lanes = 0usize;
+            for r in 0..nrows {
+                let len = d.range_u64(1, 17) as u32;
+                rows.push(len);
+                lanes += len as usize;
+                b.push(pick(d, r % 3 == 0));
+            }
+            let a = (0..lanes).map(|i| pick(d, i % 5 == 0)).collect();
+            (a, b, rows)
+        }
+        Op::Div => {
+            let n = d.range_u64(1, 60) as usize;
+            let a = (0..n).map(|i| pick(d, i % 5 == 0)).collect();
+            let b = (0..n).map(|i| pick(d, i % 5 == 1)).collect();
+            (a, b, Vec::new())
+        }
+        Op::Recip | Op::Rsqrt => {
+            let n = d.range_u64(1, 60) as usize;
+            let a = (0..n).map(|i| pick(d, i % 4 == 0)).collect();
+            (a, Vec::new(), Vec::new())
+        }
+    }
+}
+
+/// Per-op differential over both first-class datapaths and the
+/// exactly-rounded longdiv references, across formats × rounding modes
+/// × tile widths — the typed-op analogue of the Div three-way test
+/// above:
+///
+/// * `Recip` is **bit-identical** to `Div(1.0, x)` on both datapaths;
+/// * the Taylor kernel's `ScaleByRecip` is **bit-identical** to `Div`
+///   against the row-expanded divisor vector (same final multiply,
+///   reciprocal amortized by the divisor cache); the Goldschmidt tail
+///   truncates the reciprocal before the broadcast multiply, so there
+///   it is a band, not an identity;
+/// * special lanes (NaN/∞/zero inputs; negative rsqrt operands) are
+///   bit-identical to gold on both datapaths;
+/// * finite lanes stay inside the documented band of the
+///   exactly-rounded reference (≤ 1 ulp in the ≤ 24-bit formats, ≤ 2
+///   ulp at f64).
+#[test]
+fn prop_per_op_kernel_and_goldschmidt_vs_gold_all_formats() {
+    use tsdiv::coordinator::{Backend, GoldschmidtBackend, KernelBackend};
+    use tsdiv::fp::{ulp_diff, Op, ALL_FORMATS};
+    use tsdiv::kernel::KernelConfig;
+    forall(Config::named("typed ops vs gold (longdiv)").cases(24), |d| {
+        let fmt = ALL_FORMATS[d.choose_idx(4)];
+        let rm = Rounding::ALL[d.choose_idx(4)];
+        let tile = [1usize, 3, 8, 13][d.choose_idx(4)];
+        let op = [Op::Recip, Op::Rsqrt, Op::ScaleByRecip][d.choose_idx(3)];
+        let (a, b, rows) = gen_op_operands(d, op, fmt);
+        let cfg = KernelConfig {
+            tile,
+            ..KernelConfig::default()
+        };
+        let mut kern = KernelBackend::new(5, cfg).map_err(|e| e.to_string())?;
+        let mut gs = GoldschmidtBackend::new(3, cfg).map_err(|e| e.to_string())?;
+        let mut gold = LongDivider::new();
+        let qk = kern
+            .compute(op, &a, &b, &rows, fmt, rm)
+            .map_err(|e| e.to_string())?;
+        let qg = gs
+            .compute(op, &a, &b, &rows, fmt, rm)
+            .map_err(|e| e.to_string())?;
+        check_that!(qk.len() == a.len() && qg.len() == a.len());
+        if op == Op::Recip {
+            // Recip ≡ Div(1.0, x), bit for bit, on both datapaths.
+            let ones = vec![fmt.one(); a.len()];
+            let dk = kern.divide(&ones, &a, fmt, rm).map_err(|e| e.to_string())?;
+            let dg = gs.divide(&ones, &a, fmt, rm).map_err(|e| e.to_string())?;
+            check_that!(qk == dk, "kernel recip != div(1,x) ({}/{rm:?})", fmt.name());
+            check_that!(
+                qg == dg,
+                "goldschmidt recip != div(1,x) ({}/{rm:?})",
+                fmt.name()
+            );
+        }
+        if op == Op::ScaleByRecip {
+            // Taylor fused tail == Div on the row-expanded divisors.
+            let mut expanded = Vec::with_capacity(a.len());
+            for (&len, &div) in rows.iter().zip(&b) {
+                expanded.resize(expanded.len() + len as usize, div);
+            }
+            let dk = kern
+                .divide(&a, &expanded, fmt, rm)
+                .map_err(|e| e.to_string())?;
+            check_that!(
+                qk == dk,
+                "kernel scale-by-recip != div on expanded divisors ({}/{rm:?}, tile {tile})",
+                fmt.name()
+            );
+        }
+        let band = if fmt == F64 { 2 } else { 1 };
+        let is_special_class =
+            |bits: u64| matches!(unpack(bits, fmt).class, Class::NaN | Class::Inf | Class::Zero);
+        let mut row = 0usize;
+        let mut row_rem = rows.first().copied().unwrap_or(0);
+        for i in 0..a.len() {
+            let (g, special) = match op {
+                Op::Recip => (gold.recip_bits(a[i], fmt, rm), is_special_class(a[i])),
+                Op::Rsqrt => {
+                    let u = unpack(a[i], fmt);
+                    (
+                        gold.rsqrt_bits(a[i], fmt, rm),
+                        u.sign || is_special_class(a[i]),
+                    )
+                }
+                Op::ScaleByRecip => {
+                    while row_rem == 0 {
+                        row += 1;
+                        row_rem = rows[row];
+                    }
+                    row_rem -= 1;
+                    (
+                        gold.div_bits(a[i], b[row], fmt, rm),
+                        is_special_class(a[i]) || is_special_class(b[row]),
+                    )
+                }
+                Op::Div => unreachable!("Div is covered by the three-way test above"),
+            };
+            for (label, q) in [("kernel", qk[i]), ("goldschmidt", qg[i])] {
+                match ulp_diff(q, g, fmt) {
+                    Some(u) if special => check_that!(
+                        u == 0,
+                        "{label} {op:?} special lane {i} not bit-identical to gold ({}/{rm:?})",
+                        fmt.name()
+                    ),
+                    Some(u) => check_that!(
+                        u <= band,
+                        "{label} {op:?} lane {i}: {u} ulp from gold ({}/{rm:?}, tile {tile})",
+                        fmt.name()
+                    ),
+                    None => check_that!(
+                        unpack(q, fmt).class == Class::NaN && unpack(g, fmt).class == Class::NaN,
+                        "{label} {op:?} NaN mismatch at lane {i} ({}/{rm:?})",
+                        fmt.name()
+                    ),
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Nonzero `trunc_bits` through the served Goldschmidt backend: a
+/// `t`-bit truncation on the paper's Q2.60 grid perturbs the
+/// `k`-iteration chain by `(2k + 2)·2^(t−60)` relative, which stays
+/// under one result ulp while `t ≤ 60 − frac_bits − log2(2k+2) − 1`
+/// (module doc in `kernel/goldschmidt.rs`). Picking the largest such
+/// `t` per format (8 for the ≤ 24-bit formats, 4 at f64), the
+/// truncated backend rounds to within 1 ulp of the exact-width one
+/// (and resolves specials identically) for every op, format and
+/// rounding mode.
+#[test]
+fn prop_truncated_goldschmidt_within_one_ulp_of_exact_all_ops() {
+    use tsdiv::coordinator::{Backend, GoldschmidtBackend};
+    use tsdiv::fp::{ulp_diff, Op, ALL_FORMATS};
+    use tsdiv::kernel::KernelConfig;
+    forall(Config::named("trunc-bits goldschmidt vs exact").cases(24), |d| {
+        let fmt = ALL_FORMATS[d.choose_idx(4)];
+        let rm = Rounding::ALL[d.choose_idx(4)];
+        let op = [Op::Div, Op::Recip, Op::Rsqrt, Op::ScaleByRecip][d.choose_idx(4)];
+        let (a, b, rows) = gen_op_operands(d, op, fmt);
+        let trunc_bits = if fmt.frac_bits > 23 { 4 } else { 8 };
+        let mut tr = GoldschmidtBackend::with_trunc(3, trunc_bits, KernelConfig::default())
+            .map_err(|e| e.to_string())?;
+        let mut ex = GoldschmidtBackend::new(3, KernelConfig::default())
+            .map_err(|e| e.to_string())?;
+        let qt = tr
+            .compute(op, &a, &b, &rows, fmt, rm)
+            .map_err(|e| e.to_string())?;
+        let qe = ex
+            .compute(op, &a, &b, &rows, fmt, rm)
+            .map_err(|e| e.to_string())?;
+        for i in 0..qt.len() {
+            match ulp_diff(qt[i], qe[i], fmt) {
+                Some(u) => check_that!(
+                    u <= 1,
+                    "{op:?} lane {i}: {u} ulp between trunc={trunc_bits} and exact ({}/{rm:?})",
+                    fmt.name()
+                ),
+                // NaN lanes resolve in the plan stage, before the
+                // truncated iterate — identical bits.
+                None => check_that!(qt[i] == qe[i], "{op:?} NaN lane {i} ({}/{rm:?})", fmt.name()),
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Cost-weighted batch assembly (the adaptive batcher's tentpole
 /// invariants), over random mixed-format push streams:
 ///
