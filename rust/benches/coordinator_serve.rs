@@ -424,10 +424,11 @@ fn main() {
     t.print();
 
     // Typed fused ops through both kernel datapaths on f32/nearest
-    // traffic. recip/rsqrt lanes/s are the router's per-op history
-    // seeds ({op}_div_per_s_{backend}); scale-by-recip is additionally
-    // reported in rows/s — each row is one reciprocal inverted once
-    // and broadcast across its 32 lanes.
+    // traffic. Every (op, backend) lanes/s row is a router per-op
+    // history seed ({op.key_name()}_div_per_s_{backend} — underscore
+    // spelling, so scale-by-recip emits scale_recip_*); scale-by-recip
+    // is additionally reported in rows/s — each row is one reciprocal
+    // inverted once and broadcast across its 32 lanes.
     let kernel = BackendChoice::Kernel {
         order: 5,
         kernel: tsdiv::kernel::KernelConfig::default(),
@@ -450,6 +451,7 @@ fn main() {
         (Op::Rsqrt, "kernel", kernel),
         (Op::Rsqrt, "goldschmidt", goldschmidt),
         (Op::ScaleByRecip, "kernel", kernel),
+        (Op::ScaleByRecip, "goldschmidt", goldschmidt),
     ] {
         let (thr, p50, p99) = run_load_op(backend, op, 8, 256, dur);
         op_thr.push((op, backend_label, thr));
@@ -524,27 +526,25 @@ fn main() {
         j.set(&format!("goldschmidt_div_per_s_{fmt_name}"), thr.into());
     }
     j.set("router_auto_div_per_s", auto_thr.into());
-    // Per-op rows: recip/rsqrt lanes/s per backend (these exact keys
-    // seed the router's per-op cells on later runs) and the fused
-    // scale-by-recip in rows/s (one reciprocal broadcast per row). All
-    // carry the per_s suffix, so the direction-aware gate judges them
-    // higher-is-better — and prints n/a against history predating the
-    // op axis instead of failing.
+    // Per-op rows: every (op, backend) pair emits a lanes/s key spelled
+    // with `Op::key_name()` — the exact keys `seed_from_history` looks
+    // up, so the bench and the router cannot drift apart (the old
+    // hyphen/underscore split left scale-recip cells permanently
+    // unseeded). The fused scale-by-recip additionally reports rows/s
+    // from the kernel row (one reciprocal broadcast per row), kept for
+    // gate continuity. All carry the per_s suffix, so the
+    // direction-aware gate judges them higher-is-better — and prints
+    // n/a against history predating the op axis instead of failing.
     for &(op, backend_label, thr) in &op_thr {
-        match op {
-            Op::Recip | Op::Rsqrt => {
-                j.set(
-                    &format!("{}_div_per_s_{}", op.name(), backend_label),
-                    thr.into(),
-                );
-            }
-            Op::ScaleByRecip => {
-                j.set(
-                    "scale_recip_rows_per_s",
-                    (thr * SCALE_ROWS as f64 / 256.0).into(),
-                );
-            }
-            Op::Div => {}
+        j.set(
+            &format!("{}_div_per_s_{}", op.key_name(), backend_label),
+            thr.into(),
+        );
+        if op == Op::ScaleByRecip && backend_label == "kernel" {
+            j.set(
+                "scale_recip_rows_per_s",
+                (thr * SCALE_ROWS as f64 / 256.0).into(),
+            );
         }
     }
     tsdiv::harness::write_bench_json("coordinator_serve", &j);

@@ -32,14 +32,20 @@ pub const REF_LANE_COST: usize = F32.lane_cost();
 /// A request's lanes plus its index for response routing. Operands are
 /// raw bit patterns of the owning batch's format, in the batch key's
 /// op shape: matched `a`/`b` for `Div`, `b` empty for the unary ops,
-/// `b` one-divisor-per-row for `ScaleByRecip` (rows are `a.len() /
-/// b.len()` lanes each — equal length within one item, free to differ
-/// between coalesced items).
+/// `b` one-divisor-per-row for `ScaleByRecip`. A `ScaleByRecip` item's
+/// row lengths are either uniform (`rows` empty — rows are
+/// `a.len() / b.len()` lanes each) or explicitly ragged (`rows[r]`
+/// lanes for divisor `b[r]`, summing to `a.len()`); either way they
+/// are free to differ between coalesced items.
 #[derive(Clone, Debug)]
 pub struct BatchItem {
     pub request_id: u64,
     pub a: Vec<u64>,
     pub b: Vec<u64>,
+    /// Per-row lane counts for ragged `ScaleByRecip` items; empty for
+    /// uniform rows and for every other op (mirrors
+    /// `DivRequest::rows`).
+    pub rows: Vec<u32>,
 }
 
 /// A coalesced, format-homogeneous batch ready for a backend.
@@ -83,7 +89,9 @@ impl Batch {
     /// per-row lane counts the `ScaleByRecip` backends consume (aligned
     /// with the flattened `b`: `rows[r]` lanes of `a` divide by `b[r]`).
     /// `rows` is empty for every other op; coalesced `ScaleByRecip`
-    /// items keep their own row lengths.
+    /// items keep their own row shapes — an item with an explicit
+    /// (ragged) row vector contributes it verbatim, a uniform item
+    /// contributes `b.len()` copies of its derived equal row length.
     pub fn flatten(&self) -> (Vec<u64>, Vec<u64>, Vec<u32>) {
         let mut a = Vec::with_capacity(self.lanes);
         let mut b = Vec::new();
@@ -92,8 +100,12 @@ impl Batch {
             a.extend_from_slice(&it.a);
             b.extend_from_slice(&it.b);
             if self.key.op == Op::ScaleByRecip {
-                let row_len = (it.a.len() / it.b.len()) as u32;
-                rows.resize(rows.len() + it.b.len(), row_len);
+                if it.rows.is_empty() {
+                    let row_len = (it.a.len() / it.b.len()) as u32;
+                    rows.resize(rows.len() + it.b.len(), row_len);
+                } else {
+                    rows.extend_from_slice(&it.rows);
+                }
             }
         }
         (a, b, rows)
@@ -184,8 +196,15 @@ impl BatchAssembler {
         match key.op {
             Op::Div => debug_assert_eq!(item.a.len(), item.b.len()),
             Op::Recip | Op::Rsqrt => debug_assert!(item.b.is_empty()),
-            Op::ScaleByRecip => {
+            Op::ScaleByRecip if item.rows.is_empty() => {
                 debug_assert!(!item.b.is_empty() && item.a.len() % item.b.len() == 0)
+            }
+            Op::ScaleByRecip => {
+                debug_assert_eq!(item.rows.len(), item.b.len());
+                debug_assert_eq!(
+                    item.rows.iter().map(|&n| n as usize).sum::<usize>(),
+                    item.a.len()
+                );
             }
         }
         let max_cost = self.max_cost;
@@ -294,6 +313,7 @@ mod tests {
             request_id: id,
             a: vec![id; n],
             b: vec![1; n],
+            rows: vec![],
         }
     }
 
@@ -534,6 +554,7 @@ mod tests {
                 request_id: 2,
                 a: vec![2; 4],
                 b: vec![],
+                rows: vec![],
             },
         );
         asm.push(
@@ -542,6 +563,7 @@ mod tests {
                 request_id: 3,
                 a: vec![3; 4],
                 b: vec![],
+                rows: vec![],
             },
         );
         asm.push(
@@ -550,6 +572,7 @@ mod tests {
                 request_id: 4,
                 a: vec![4; 4],
                 b: vec![9, 9],
+                rows: vec![],
             },
         );
         let batches = asm.take_all();
@@ -573,6 +596,7 @@ mod tests {
                 request_id: 1,
                 a: (0..6).collect(),
                 b: vec![100, 101],
+                rows: vec![],
             },
         );
         asm.push(
@@ -581,6 +605,7 @@ mod tests {
                 request_id: 2,
                 a: (6..10).collect(),
                 b: vec![102, 103, 104, 105],
+                rows: vec![],
             },
         );
         let batches = asm.take_all();
@@ -593,6 +618,46 @@ mod tests {
         let parts = batches[0].split(&a);
         assert_eq!(parts[0], (1, (0..6).collect::<Vec<u64>>()));
         assert_eq!(parts[1], (2, (6..10).collect::<Vec<u64>>()));
+    }
+
+    #[test]
+    fn ragged_scale_recip_items_flatten_their_explicit_row_vectors() {
+        // A ragged item (explicit rows 4+1+2) coalesced with a uniform
+        // one (3 lanes over 1 row): flatten must emit the explicit
+        // vector verbatim, then the derived uniform length — the old
+        // single-`row_len` derivation would have mispriced the ragged
+        // item as 7/3 lanes per row.
+        let key = BatchKey::for_op(Op::ScaleByRecip, F32, Rounding::NearestEven);
+        let mut asm = BatchAssembler::new(100);
+        asm.push(
+            key,
+            BatchItem {
+                request_id: 1,
+                a: (0..7).collect(),
+                b: vec![100, 101, 102],
+                rows: vec![4, 1, 2],
+            },
+        );
+        asm.push(
+            key,
+            BatchItem {
+                request_id: 2,
+                a: (7..10).collect(),
+                b: vec![103],
+                rows: vec![],
+            },
+        );
+        let batches = asm.take_all();
+        assert_eq!(batches.len(), 1);
+        let (a, b, rows) = batches[0].flatten();
+        assert_eq!(a, (0..10).collect::<Vec<u64>>());
+        assert_eq!(b, vec![100, 101, 102, 103]);
+        assert_eq!(rows, vec![4, 1, 2, 3]);
+        assert_eq!(rows.iter().map(|&n| n as usize).sum::<usize>(), a.len());
+        // split() still routes whole items back by lane count.
+        let parts = batches[0].split(&a);
+        assert_eq!(parts[0], (1, (0..7).collect::<Vec<u64>>()));
+        assert_eq!(parts[1], (2, (7..10).collect::<Vec<u64>>()));
     }
 
     #[test]

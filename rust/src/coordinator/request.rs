@@ -10,9 +10,12 @@
 //!
 //! Operand shape is per-op: `Div` carries matched `a`/`b` lanes; the
 //! unary ops (`Recip`, `Rsqrt`) carry only `a` — no dummy divisor
-//! vector travels with them; `ScaleByRecip` carries `a` as
-//! `b.len()` equal-length concatenated rows (`a.len() % b.len() == 0`)
-//! with `b[r]` the divisor of row `r`.
+//! vector travels with them; `ScaleByRecip` carries `a` as `b.len()`
+//! concatenated rows with `b[r]` the divisor of row `r`. Rows are
+//! equal-length by default (`a.len() % b.len() == 0`, constructor
+//! [`DivRequest::scale_by_recip`]) or explicitly ragged — one length
+//! per row via [`DivRequest::scale_by_recip_ragged`], which both
+//! batched kernels honor natively.
 
 pub use crate::fp::Op;
 use crate::fp::{Format, Rounding, BF16, F16, F32, F64};
@@ -87,6 +90,11 @@ pub struct DivRequest {
     /// Divisor bit patterns: same length as `a` for `Div`, one per row
     /// for `ScaleByRecip`, **empty** for the unary ops.
     pub b: Vec<u64>,
+    /// Per-row lane counts for ragged `ScaleByRecip` requests: one
+    /// entry per divisor row, summing to `a.len()`. **Empty** means
+    /// equal-length rows derived as `a.len() / b.len()` (and empty is
+    /// the only valid state for every other op).
+    pub rows: Vec<u32>,
 }
 
 impl DivRequest {
@@ -99,6 +107,7 @@ impl DivRequest {
             rm,
             a,
             b,
+            rows: Vec::new(),
         }
     }
 
@@ -110,6 +119,7 @@ impl DivRequest {
             rm,
             a: x,
             b: Vec::new(),
+            rows: Vec::new(),
         }
     }
 
@@ -121,6 +131,7 @@ impl DivRequest {
             rm,
             a: x,
             b: Vec::new(),
+            rows: Vec::new(),
         }
     }
 
@@ -135,6 +146,30 @@ impl DivRequest {
             rm,
             a: lanes,
             b: divisors,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Ragged scale-by-reciprocal: `rows[r]` lanes of `lanes` belong to
+    /// divisor `divisors[r]`, in order — row lengths need not match
+    /// (the QR/Givens pattern where trailing columns shrink). Validation
+    /// requires one positive length per divisor, summing to
+    /// `lanes.len()`; both batched kernels consume the per-row lengths
+    /// natively, so ragged requests cost nothing over uniform ones.
+    pub fn scale_by_recip_ragged(
+        fmt: Format,
+        rm: Rounding,
+        lanes: Vec<u64>,
+        divisors: Vec<u64>,
+        rows: Vec<u32>,
+    ) -> Self {
+        Self {
+            op: Op::ScaleByRecip,
+            fmt,
+            rm,
+            a: lanes,
+            b: divisors,
+            rows,
         }
     }
 
@@ -221,14 +256,45 @@ impl DivRequest {
                 if self.b.is_empty() {
                     return Err("scale-recip needs at least one divisor row".into());
                 }
-                if self.a.len() % self.b.len() != 0 {
-                    return Err(format!(
-                        "scale-recip rows must be equal length: {} lanes over {} rows",
-                        self.a.len(),
-                        self.b.len()
-                    ));
+                if self.rows.is_empty() {
+                    // Uniform shape: lanes split evenly across rows.
+                    if self.a.len() % self.b.len() != 0 {
+                        return Err(format!(
+                            "scale-recip rows must be equal length: {} lanes over {} rows \
+                             (use scale_by_recip_ragged for per-row lengths)",
+                            self.a.len(),
+                            self.b.len()
+                        ));
+                    }
+                } else {
+                    // Ragged shape: one positive length per divisor,
+                    // covering the lane vector exactly.
+                    if self.rows.len() != self.b.len() {
+                        return Err(format!(
+                            "scale-recip row-length vector must match divisors: \
+                             {} lengths for {} rows",
+                            self.rows.len(),
+                            self.b.len()
+                        ));
+                    }
+                    if let Some(r) = self.rows.iter().position(|&n| n == 0) {
+                        return Err(format!("scale-recip row {r} is empty"));
+                    }
+                    let total: usize = self.rows.iter().map(|&n| n as usize).sum();
+                    if total != self.a.len() {
+                        return Err(format!(
+                            "scale-recip row lengths sum to {total}, but {} lanes were given",
+                            self.a.len()
+                        ));
+                    }
                 }
             }
+        }
+        if self.op != Op::ScaleByRecip && !self.rows.is_empty() {
+            return Err(format!(
+                "{} carries no row-length vector (rows is scale-recip only)",
+                self.op.name()
+            ));
         }
         if self.a.is_empty() {
             return Err("empty request".into());
@@ -393,6 +459,71 @@ mod tests {
             vec![0x3C00, 0x4000],
             vec![0x1_0000],
         );
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn ragged_scale_recip_shapes_validate() {
+        // 3 + 1 + 2 lanes across three divisor rows.
+        let r = DivRequest::scale_by_recip_ragged(
+            F32,
+            Rounding::NearestEven,
+            vec![1, 2, 3, 4, 5, 6],
+            vec![7, 8, 9],
+            vec![3, 1, 2],
+        );
+        assert!(r.validate().is_ok(), "{:?}", r.validate());
+        assert_eq!(r.lanes(), 6);
+        assert_eq!(r.key(), BatchKey::for_op(Op::ScaleByRecip, F32, Rounding::NearestEven));
+
+        // Row-length vector must match the divisor count...
+        let r = DivRequest::scale_by_recip_ragged(
+            F32,
+            Rounding::NearestEven,
+            vec![1, 2, 3],
+            vec![7, 8],
+            vec![3],
+        );
+        assert!(r.validate().unwrap_err().contains("match divisors"));
+        // ...cover the lanes exactly...
+        let r = DivRequest::scale_by_recip_ragged(
+            F32,
+            Rounding::NearestEven,
+            vec![1, 2, 3],
+            vec![7, 8],
+            vec![1, 1],
+        );
+        assert!(r.validate().unwrap_err().contains("sum to 2"));
+        // ...and contain no empty row.
+        let r = DivRequest::scale_by_recip_ragged(
+            F32,
+            Rounding::NearestEven,
+            vec![1, 2, 3],
+            vec![7, 8],
+            vec![3, 0],
+        );
+        assert!(r.validate().unwrap_err().contains("row 1 is empty"));
+
+        // A lane/divisor shape the uniform constructor rejects is
+        // exactly what the ragged one is for.
+        let uniform =
+            DivRequest::scale_by_recip(F32, Rounding::NearestEven, vec![1, 2, 3], vec![7, 8]);
+        assert!(uniform.validate().unwrap_err().contains("equal length"));
+        let ragged = DivRequest::scale_by_recip_ragged(
+            F32,
+            Rounding::NearestEven,
+            vec![1, 2, 3],
+            vec![7, 8],
+            vec![2, 1],
+        );
+        assert!(ragged.validate().is_ok());
+
+        // rows is scale-recip-only: any other op must travel without it.
+        let mut r = DivRequest::recip(F32, Rounding::NearestEven, vec![0x4000_0000]);
+        r.rows = vec![1];
+        assert!(r.validate().unwrap_err().contains("scale-recip only"));
+        let mut r = DivRequest::from_f32(&[1.0], &[2.0]);
+        r.rows = vec![1];
         assert!(r.validate().is_err());
     }
 

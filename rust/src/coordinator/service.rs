@@ -762,6 +762,7 @@ impl DivisionService {
                 request_id,
                 a: req.a,
                 b: req.b,
+                rows: req.rows,
             },
             responder: rtx,
         };
@@ -1377,6 +1378,7 @@ mod tests {
                 rm: Rounding::NearestEven,
                 a: bits(&[1.0]),
                 b: bits(&[2.0]),
+                rows: vec![],
             }),
             Err(SubmitError::BadRequest(_))
         ));
@@ -1386,6 +1388,60 @@ mod tests {
                 Rounding::NearestEven,
                 bits(&[1.0, 2.0, 3.0]),
                 bits(&[2.0, 4.0]),
+            )),
+            Err(SubmitError::BadRequest(_))
+        ));
+        s.shutdown();
+    }
+
+    #[test]
+    fn ragged_scale_recip_serves_end_to_end_in_lane_order() {
+        // Named regression for the equal-length-rows restriction: a
+        // ragged row shape (4 + 1 + 5 lanes over three divisors) must
+        // serve through the batched kernel and come back in lane order.
+        let bits = |xs: &[f32]| -> Vec<u64> { xs.iter().map(|&x| x.to_bits() as u64).collect() };
+        let s = DivisionService::start(
+            ServiceConfig {
+                workers: 2,
+                max_batch: 64,
+                queue_capacity: 256,
+                ..ServiceConfig::default()
+            },
+            BackendChoice::Kernel {
+                order: 5,
+                kernel: crate::kernel::KernelConfig::default(),
+            },
+        )
+        .unwrap();
+        let lanes: Vec<f32> = (1..=10).map(|i| i as f32).collect();
+        let rows = [4u32, 1, 5];
+        let divisors = [2.0f32, 8.0, 4.0];
+        let r = s
+            .divide_request_blocking(DivRequest::scale_by_recip_ragged(
+                F32,
+                Rounding::NearestEven,
+                bits(&lanes),
+                bits(&divisors),
+                rows.to_vec(),
+            ))
+            .unwrap();
+        let mut want = Vec::new();
+        let mut lane = 0;
+        for (row, &n) in rows.iter().enumerate() {
+            for _ in 0..n {
+                want.push(lanes[lane] / divisors[row]);
+                lane += 1;
+            }
+        }
+        assert_eq!(r.to_f32().unwrap(), want);
+        // A malformed ragged shape rejects at submit, before queueing.
+        assert!(matches!(
+            s.submit_request(DivRequest::scale_by_recip_ragged(
+                F32,
+                Rounding::NearestEven,
+                bits(&lanes),
+                bits(&divisors),
+                vec![4, 1, 4],
             )),
             Err(SubmitError::BadRequest(_))
         ));

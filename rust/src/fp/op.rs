@@ -61,6 +61,19 @@ impl Op {
         }
     }
 
+    /// Underscore-safe key spelling for bench-history JSON keys (which
+    /// never contain hyphens): identical to [`Op::name`] except
+    /// `ScaleByRecip`, whose CLI name is `scale-recip` but whose history
+    /// rows are `scale_recip_*`. The router's history seeding and the
+    /// serving bench must agree on this spelling, so both go through
+    /// this accessor.
+    pub const fn key_name(self) -> &'static str {
+        match self {
+            Op::ScaleByRecip => "scale_recip",
+            _ => self.name(),
+        }
+    }
+
     /// Parse an operation name (CLI and service surfaces).
     pub fn from_name(s: &str) -> Option<Op> {
         match s {
@@ -92,6 +105,21 @@ mod tests {
         assert_eq!(Op::from_name("divide"), Some(Op::Div));
         assert_eq!(Op::from_name("scale_by_recip"), Some(Op::ScaleByRecip));
         assert_eq!(Op::from_name("sqrt"), None);
+    }
+
+    #[test]
+    fn key_names_are_underscore_safe() {
+        for op in Op::ALL {
+            assert!(
+                !op.key_name().contains('-'),
+                "{:?}: history keys must not contain hyphens",
+                op
+            );
+        }
+        assert_eq!(Op::Div.key_name(), "div");
+        assert_eq!(Op::Recip.key_name(), "recip");
+        assert_eq!(Op::Rsqrt.key_name(), "rsqrt");
+        assert_eq!(Op::ScaleByRecip.key_name(), "scale_recip");
     }
 
     #[test]

@@ -8,6 +8,9 @@
 
 use super::format::Format;
 
+#[cfg(any(test, feature = "mutation"))]
+use crate::verify::mutation::{self, Mutant};
+
 /// IEEE-754 rounding-direction attributes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Rounding {
@@ -55,6 +58,11 @@ impl Rounding {
     /// `lsb_odd` is the parity of the kept LSB (for ties-to-even).
     #[inline]
     fn round_up(self, sign: bool, guard: bool, sticky: bool, lsb_odd: bool) -> bool {
+        // Mutation smoke: nearest-even loses its tie-parity term.
+        #[cfg(any(test, feature = "mutation"))]
+        if matches!(self, Rounding::NearestEven) && mutation::is_active(Mutant::TieDropsParity) {
+            return guard && sticky;
+        }
         match self {
             Rounding::NearestEven => guard && (sticky || lsb_odd),
             Rounding::TowardZero => false,
@@ -104,6 +112,11 @@ pub fn round_pack(
     } else {
         ((sig as u64) << (-shift) as u32, false, sticky_in)
     };
+    // Mutation smoke: the classic guard-bit-only defect.
+    #[cfg(any(test, feature = "mutation"))]
+    if mutation::is_active(Mutant::DropSticky) {
+        sticky = false;
+    }
     debug_assert!(kept >> fmt.frac_bits == 1, "normalization failed");
 
     // Gradual underflow: if exp < emin, shift right further into a
@@ -149,7 +162,12 @@ pub fn round_pack(
     let mut sig_rounded = kept;
     if rm.round_up(sign, guard, sticky, lsb_odd) {
         sig_rounded += 1;
-        if sig_rounded >> (fmt.frac_bits + 1) == 1 {
+        // Mutation smoke: skip the post-round renormalize.
+        #[cfg(any(test, feature = "mutation"))]
+        let renormalize = !mutation::is_active(Mutant::SkipCarryRenorm);
+        #[cfg(not(any(test, feature = "mutation")))]
+        let renormalize = true;
+        if renormalize && sig_rounded >> (fmt.frac_bits + 1) == 1 {
             // Carry out of the significand: renormalize.
             sig_rounded >>= 1;
             exp += 1;
@@ -157,7 +175,17 @@ pub fn round_pack(
     }
     let inexact = guard || sticky;
 
-    if exp > fmt.emax() {
+    // Mutation smoke: overflow comparison off by one.
+    #[cfg(any(test, feature = "mutation"))]
+    let overflow = if mutation::is_active(Mutant::OverflowBoundaryOffByOne) {
+        exp >= fmt.emax()
+    } else {
+        exp > fmt.emax()
+    };
+    #[cfg(not(any(test, feature = "mutation")))]
+    let overflow = exp > fmt.emax();
+
+    if overflow {
         // Overflow: Inf or max-finite depending on direction.
         let bits = match rm {
             Rounding::NearestEven => fmt.inf(sign),

@@ -33,6 +33,9 @@
 //!   service (DivRequest/DivResponse with typed `fp::Op` constructors,
 //!   per-(Op, Format, Rounding) dynamic batcher, worker pool, metrics);
 //! * [`harness`] — workload generators and the bench runner;
+//! * [`verify`] — production-scale verification: sharded exhaustive
+//!   f32 conformance sweeps, the differential fuzzer behind
+//!   `tsdiv fuzz`, and the in-tree mutation smoke harness;
 //! * [`util`] — in-tree substrates (PRNG, JSON, CLI, stats, property
 //!   testing, tables, errors) — the image vendors no general-purpose
 //!   crates.
@@ -53,6 +56,7 @@ pub mod simd;
 pub mod squaring;
 pub mod taylor;
 pub mod util;
+pub mod verify;
 
 /// Crate version string (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -9,6 +9,8 @@
 //! * `hw`        — hardware cost tables, Fig 4 vs 5 (E6);
 //! * `accuracy`    — divider accuracy report vs gold (E9);
 //! * `serve`       — run the batched division service under load (E10);
+//! * `fuzz`        — differential fuzzing of the kernel and Goldschmidt
+//!   datapaths against gold, with seed-replayable reproducer lines;
 //! * `bench-trend` — per-bench deltas vs the previous run, from the
 //!   accumulated `BENCH_HISTORY.jsonl` trajectory;
 //! * `selftest`    — quick end-to-end health check of all layers.
@@ -33,6 +35,7 @@ fn main() {
         "hw" => cmd_hw(args),
         "accuracy" => cmd_accuracy(args),
         "serve" => cmd_serve(args),
+        "fuzz" => cmd_fuzz(args),
         "bench-trend" => cmd_bench_trend(args),
         "selftest" => cmd_selftest(),
         "--help" | "-h" | "help" => {
@@ -72,6 +75,10 @@ fn print_usage() {
          \x20                   or gold backend); --trunc-bits N drops N low product\n\
          \x20                   bits per goldschmidt refinement multiply;\n\
          \x20                   --spare-divisor N tunes the idle-burst budget shrink)\n\
+         \x20 fuzz             differential fuzz of the kernel/goldschmidt datapaths\n\
+         \x20                  vs gold (--cases N --seed S; the seed replays the exact\n\
+         \x20                  case stream, and any mismatch prints one reproducer\n\
+         \x20                  line ending in its replay command)\n\
          \x20 bench-trend      per-bench deltas vs the previous BENCH_HISTORY.jsonl run;\n\
          \x20                  --gate --window K --tolerance PCT exits non-zero when a\n\
          \x20                  per_s metric drops (or a p99/latency/wait metric rises)\n\
@@ -778,6 +785,57 @@ fn run_bench_gate(
                 sig(r.baseline_median, 4),
             );
         }
+        1
+    }
+}
+
+/// `--seed` accepts decimal or `0x`-prefixed hex (reproducer lines
+/// print the hex form).
+fn parse_seed(s: &str) -> Option<u64> {
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    }
+}
+
+fn cmd_fuzz(args: Vec<String>) -> i32 {
+    use tsdiv::verify::fuzz::{run_fuzz, FuzzConfig};
+    let cmd = Command::new("fuzz", "differential fuzz of the division datapaths vs gold")
+        .opt("cases", "2000", "random cases to generate and cross-check")
+        .opt("seed", "1", "master seed (decimal or 0x-hex); replays the exact case stream");
+    let parsed = match cmd.parse(args) {
+        Ok(p) => p,
+        Err(help) => {
+            eprintln!("{help}");
+            return 2;
+        }
+    };
+    let cases: u64 = parsed.parse_or("cases", 2000);
+    let seed = match parse_seed(parsed.get_or("seed", "1")) {
+        Some(s) => s,
+        None => {
+            eprintln!("--seed must be a u64 (decimal or 0x-hex)");
+            return 2;
+        }
+    };
+    println!(
+        "fuzz: seed={seed:#x} cases={cases} \
+         (replay: tsdiv fuzz --seed {seed:#x} --cases {cases})"
+    );
+    let out = run_fuzz(&FuzzConfig { cases, seed });
+    for line in &out.failures {
+        println!("{line}");
+    }
+    println!(
+        "fuzz: {} cases, {} lanes/datapath, digest={:#018x}, {} mismatch(es)",
+        out.cases,
+        out.lanes,
+        out.digest,
+        out.failures.len()
+    );
+    if out.failures.is_empty() {
+        0
+    } else {
         1
     }
 }

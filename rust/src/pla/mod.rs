@@ -190,8 +190,15 @@ pub fn equal_error_split(a: f64, b: f64) -> f64 {
 /// right edge is ≥ x). Mirrors the hardware compare tree.
 pub fn segment_index(bounds: &[f64], x: f64) -> usize {
     debug_assert!(bounds.len() >= 2);
+    // Mutation smoke: flip the left-closed boundary to right-closed.
+    #[cfg(any(test, feature = "mutation"))]
+    let right_closed = crate::verify::mutation::is_active(
+        crate::verify::mutation::Mutant::SegmentBoundaryOffByOne,
+    );
+    #[cfg(not(any(test, feature = "mutation")))]
+    let right_closed = false;
     for (i, w) in bounds.windows(2).enumerate() {
-        if x < w[1] {
+        if x < w[1] || (right_closed && x <= w[1]) {
             return i;
         }
     }

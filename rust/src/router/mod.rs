@@ -20,11 +20,10 @@
 //!    [`crate::harness::read_bench_history`]) and seeds each cell from
 //!    the per-key medians of the `coordinator_serve` throughput rows:
 //!    `kernel_div_per_s` / `goldschmidt_div_per_s_{fmt}` for division,
-//!    `recip_div_per_s_{kernel,goldschmidt}` and
-//!    `rsqrt_div_per_s_{kernel,goldschmidt}` for the unary ops,
-//!    inverting per-second throughput into seconds/lane.
-//!    Scale-by-reciprocal publishes rows/s (not lanes/s), so its cells
-//!    keep the static prior until live observations arrive.
+//!    and `{recip,rsqrt,scale_recip}_div_per_s_{kernel,goldschmidt}`
+//!    for the fused ops (keys spelled via [`Op::key_name`], matching
+//!    the bench emission exactly), inverting per-second throughput
+//!    into seconds/lane.
 //! 2. **Static cost model.** With no history, cells start from a
 //!    per-op multiply-count prior (see `per_lane_muls`): ~7 wide
 //!    multiplies per division lane on the order-5 Taylor pipeline vs
@@ -254,13 +253,13 @@ impl BackendRouter {
     /// seconds. Division: the Taylor kernel publishes one f32
     /// throughput key (`kernel_div_per_s`), so other formats are
     /// scaled by the [`Format::lane_cost`] ratio; Goldschmidt
-    /// publishes per-format keys. Recip and rsqrt publish one
-    /// f32-traffic key per candidate
-    /// (`{recip,rsqrt}_div_per_s_{kernel,goldschmidt}`), scaled the
-    /// same way; scale-by-reciprocal publishes rows/s and is not
-    /// seedable, so its cells keep the static prior. Seeded cells
-    /// keep `samples == 0`, so cold-start exploration still measures
-    /// the live machine.
+    /// publishes per-format keys. The fused ops publish one
+    /// f32-traffic lanes/s key per candidate
+    /// (`{recip,rsqrt,scale_recip}_div_per_s_{kernel,goldschmidt}` —
+    /// the spelling is [`Op::key_name`], underscore-safe so the bench
+    /// JSON and this lookup can never drift apart again), scaled the
+    /// same way. Seeded cells keep `samples == 0`, so cold-start
+    /// exploration still measures the live machine.
     pub fn seed_from_history(&self, records: &[Json]) {
         let serve: Vec<&Json> = records
             .iter()
@@ -281,10 +280,12 @@ impl BackendRouter {
                 Some(crate::harness::median(&vals))
             }
         };
-        // f32-traffic medians, rescaled per format below.
+        // f32-traffic medians, rescaled per format below. Keys are
+        // spelled with `key_name()` (underscore-safe) — `name()` would
+        // produce `scale-recip_…`, which no bench ever emits.
         let kernel_div_f32 = key_median("kernel_div_per_s");
-        let unary_f32 = |op: Op, c: Candidate| -> Option<f64> {
-            key_median(&format!("{}_div_per_s_{}", op.name(), c.name()))
+        let fused_f32 = |op: Op, c: Candidate| -> Option<f64> {
+            key_median(&format!("{}_div_per_s_{}", op.key_name(), c.name()))
         };
         let mut state = self.state.lock().unwrap();
         for &op in Op::ALL.iter() {
@@ -297,12 +298,10 @@ impl BackendRouter {
                         key_median(&format!("goldschmidt_div_per_s_{}", fmt.name()))
                             .map(|per_s| 1.0 / per_s),
                     ),
-                    Op::Recip | Op::Rsqrt => (
-                        unary_f32(op, Candidate::Kernel).map(rescale),
-                        unary_f32(op, Candidate::Goldschmidt).map(rescale),
+                    Op::Recip | Op::Rsqrt | Op::ScaleByRecip => (
+                        fused_f32(op, Candidate::Kernel).map(rescale),
+                        fused_f32(op, Candidate::Goldschmidt).map(rescale),
                     ),
-                    // Rows/s, not lanes/s — keep the static prior.
-                    Op::ScaleByRecip => (None, None),
                 };
                 let base =
                     (op.idx() * NUM_FORMATS + format_idx(fmt)) * NUM_ROUNDINGS * NUM_BUCKETS;
@@ -630,11 +629,14 @@ mod tests {
     fn per_op_history_keys_seed_their_own_cells_only() {
         let mut rec = Json::obj();
         rec.set("bench", "coordinator_serve".into());
-        // Kernel wins recip, goldschmidt wins rsqrt — decisively.
+        // Kernel wins recip and scale-recip, goldschmidt wins rsqrt —
+        // decisively.
         rec.set("recip_div_per_s_kernel", Json::Num(8.0e8));
         rec.set("recip_div_per_s_goldschmidt", Json::Num(1.0e8));
         rec.set("rsqrt_div_per_s_kernel", Json::Num(1.0e8));
         rec.set("rsqrt_div_per_s_goldschmidt", Json::Num(8.0e8));
+        rec.set("scale_recip_div_per_s_kernel", Json::Num(9.0e8));
+        rec.set("scale_recip_div_per_s_goldschmidt", Json::Num(1.0e8));
         let router = BackendRouter::new(17);
         router.seed_from_history(&[rec]);
         let state = router.state.lock().unwrap();
@@ -654,11 +656,19 @@ mod tests {
             recip64.stats[Candidate::Kernel.idx()].per_lane
                 > recip.stats[Candidate::Kernel.idx()].per_lane
         );
-        // Scale-by-recip is not seedable: static prior stays.
+        // Scale-by-recip seeds from its underscore-spelled keys (the
+        // hyphenated `Op::name()` spelling would silently miss them —
+        // the regression this test pins).
         let scale = &state.cells[cell_idx(Op::ScaleByRecip, F32, Rounding::NearestEven, 64)];
-        assert_eq!(
+        assert!(
+            scale.stats[Candidate::Kernel.idx()].per_lane
+                < scale.stats[Candidate::Goldschmidt.idx()].per_lane,
+            "scale-recip history must seed its cells"
+        );
+        assert_ne!(
             scale.stats[Candidate::Kernel.idx()].per_lane,
             prior_per_lane(Candidate::Kernel, Op::ScaleByRecip, F32),
+            "seeded scale-recip cells must leave the static prior"
         );
         // And division cells keep the prior (no div keys in the record).
         let div = &state.cells[cell_idx(Op::Div, F32, Rounding::NearestEven, 64)];
@@ -666,6 +676,54 @@ mod tests {
             div.stats[Candidate::Kernel.idx()].per_lane,
             prior_per_lane(Candidate::Kernel, Op::Div, F32),
         );
+    }
+
+    #[test]
+    fn every_op_seeds_both_candidates_from_history() {
+        // One record carrying a history key for every (op, candidate)
+        // pair: after seeding, no cell of any op may still sit on its
+        // static prior, and the seeded values must match the inverted
+        // medians exactly.
+        let mut rec = Json::obj();
+        rec.set("bench", "coordinator_serve".into());
+        rec.set("kernel_div_per_s", Json::Num(2.0e8));
+        rec.set("goldschmidt_div_per_s_f32", Json::Num(1.0e8));
+        for op in [Op::Recip, Op::Rsqrt, Op::ScaleByRecip] {
+            for c in Candidate::all() {
+                let per_s = 1.0e8 * (1 + op.idx() + c.idx()) as f64;
+                rec.set(
+                    &format!("{}_div_per_s_{}", op.key_name(), c.name()),
+                    Json::Num(per_s),
+                );
+            }
+        }
+        let router = BackendRouter::new(41);
+        router.seed_from_history(&[rec]);
+        let state = router.state.lock().unwrap();
+        for &op in Op::ALL.iter() {
+            let cell = &state.cells[cell_idx(op, F32, Rounding::NearestEven, 64)];
+            for c in Candidate::all() {
+                let seeded = cell.stats[c.idx()].per_lane;
+                assert_ne!(
+                    seeded,
+                    prior_per_lane(c, op, F32),
+                    "{}/{} cell still on the static prior after seeding",
+                    op.name(),
+                    c.name()
+                );
+                let expect = match (op, c) {
+                    (Op::Div, Candidate::Kernel) => 1.0 / 2.0e8,
+                    (Op::Div, Candidate::Goldschmidt) => 1.0 / 1.0e8,
+                    _ => 1.0 / (1.0e8 * (1 + op.idx() + c.idx()) as f64),
+                };
+                assert!(
+                    (seeded - expect).abs() < expect * 1e-12,
+                    "{}/{}: seeded {seeded:e} vs expected {expect:e}",
+                    op.name(),
+                    c.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Sharded exhaustive-divisor binary32 conformance sweeps.
+//!
+//! f16 is small enough to sweep in one `#[ignore]`d test
+//! (`tests/conformance_f16.rs`); f32 is not — its divisor space alone
+//! is 2^23 mantissas × the interesting exponent binades, and a naive
+//! full cross against the dividend menu and all rounding modes is tens
+//! of billions of lanes. This module makes the f32 sweep *shardable*
+//! instead: the mantissa space is partitioned into deterministic,
+//! disjoint slices keyed by `(slice_index, slice_count)` — slice `s`
+//! owns every mantissa ≡ `s (mod count)` — so any machine can sweep any
+//! slice independently and a rotating CI pass covers the whole space
+//! over successive runs with no coordination and no repetition.
+//!
+//! Two entry points:
+//!
+//! * [`sweep_f32_slice`] — the **complete cross** (7 exponent binades ×
+//!   4 rounding modes × the 17-dividend menu) over one mantissa slice.
+//!   At the CI default of 1024 slices this is ~3.9 M lanes per backend
+//!   per slice.
+//! * [`sweep_f32_full`] — every one of the 2^23 mantissas exactly once,
+//!   with the (exponent, rounding) pair rotating with period 28 so all
+//!   combinations appear throughout the space: ~143 M lanes per
+//!   backend, about a minute in release. Run from the `#[ignore]`d
+//!   test in `tests/conformance_f32.rs`.
+//!
+//! Every lane goes through the Taylor [`BackendChoice::Kernel`] *and*
+//! the [`BackendChoice::Goldschmidt`] datapath, each checked against
+//! the exactly-rounded `Gold` long divider: special lanes (resolved by
+//! the shared `prepare()` path) must be bit-identical, finite lanes
+//! must stay inside the documented ≤ 2-ulp band, and NaN lanes must be
+//! NaN on both sides. Divisor sign alternates with mantissa parity so
+//! both sign datapaths are exercised at every binade without doubling
+//! the sweep.
+
+use crate::coordinator::{Backend, BackendChoice};
+use crate::divider::{prepare, Prepared};
+use crate::fp::{ulp_diff, unpack, Class, Rounding, F32};
+use crate::harness::special_patterns;
+use crate::kernel::KernelConfig;
+
+/// Size of the f32 mantissa space being sharded.
+pub const F32_MANTISSAS: u64 = 1 << 23;
+
+/// Divisor exponent binades swept per slice (biased): the subnormal
+/// binade, the smallest normal, the two binades around 1.0, the binade
+/// above, the top finite binade and the Inf/NaN binade.
+pub const DIVISOR_EXPONENTS: [u64; 7] = [0, 1, 126, 127, 128, 254, 255];
+
+/// Divisor block size fed to the backends per call: big enough to
+/// amortize dispatch, small enough to keep peak memory trivial.
+const BLOCK: usize = 1 << 15;
+
+/// The mantissas owned by `slice` out of `count` shards: every `m` in
+/// `0..2^23` with `m ≡ slice (mod count)`, ascending. Slices are
+/// disjoint by congruence and jointly cover the space exactly once.
+pub fn slice_mantissas(slice: u64, count: u64) -> impl Iterator<Item = u64> {
+    assert!(count > 0, "slice count must be positive");
+    (slice % count..F32_MANTISSAS).step_by(count as usize)
+}
+
+/// The fixed dividend menu: the full special-pattern set (NaN, ±Inf,
+/// ±0, smallest/largest subnormal, 1.0, max finite) plus finite probes
+/// mirroring the f16 sweep — negatives, an exact power of two,
+/// non-trivial significands, the smallest normal on both signs and a
+/// near-overflow value.
+pub fn f32_dividends() -> Vec<u64> {
+    let mut d: Vec<u64> = special_patterns(F32).to_vec();
+    d.extend([
+        0xBF80_0000, // -1.0
+        0x4000_0000, // 2.0
+        0x3EAA_AAAB, // ~0.3333
+        0x4049_0FDB, // ~3.1416
+        0x0080_0000, // smallest positive normal
+        0x8080_0000, // smallest negative normal
+        0x7F7F_FFFE, // just below +max finite
+        0xBE4C_CCCD, // ~-0.2
+    ]);
+    d
+}
+
+/// What one sweep covered and the worst finite deviation it observed
+/// per datapath. `PartialEq` so determinism is testable: sweeping the
+/// same `(slice, count)` twice must yield identical reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SliceReport {
+    /// Distinct divisor bit patterns swept.
+    pub divisors: u64,
+    /// Lanes checked through *each* of the three backends.
+    pub lanes_per_backend: u64,
+    /// Worst finite kernel-vs-gold deviation, in ulp.
+    pub max_ulp_kernel: u64,
+    /// Worst finite goldschmidt-vs-gold deviation, in ulp.
+    pub max_ulp_goldschmidt: u64,
+}
+
+/// The three datapaths under test plus the running report.
+struct Sweeper {
+    kern: Box<dyn Backend>,
+    gs: Box<dyn Backend>,
+    gold: Box<dyn Backend>,
+    dividends: Vec<u64>,
+    report: SliceReport,
+}
+
+/// Check one backend's block against gold, panicking with a replayable
+/// lane identification on any contract violation. Returns the largest
+/// finite deviation in the block.
+fn check_lanes(
+    label: &str,
+    got: &[u64],
+    gold: &[u64],
+    a: u64,
+    divisors: &[u64],
+    rm: Rounding,
+) -> u64 {
+    let mut max_ulp = 0u64;
+    for (i, (&k, &g)) in got.iter().zip(gold.iter()).enumerate() {
+        let b = divisors[i];
+        let special = matches!(prepare(a, b, F32), Prepared::Done(_));
+        match ulp_diff(k, g, F32) {
+            Some(u) if special => assert_eq!(
+                k, g,
+                "special lane {a:#010x}/{b:#010x} ({rm:?}) not bit-identical: \
+                 {label} {k:#010x} vs gold {g:#010x} ({u} ulp)"
+            ),
+            Some(u) => {
+                assert!(
+                    u <= 2,
+                    "finite lane {a:#010x}/{b:#010x} ({rm:?}) outside the ≤2-ulp \
+                     band: {label} {k:#010x} vs gold {g:#010x} ({u} ulp)"
+                );
+                max_ulp = max_ulp.max(u);
+            }
+            None => assert!(
+                unpack(k, F32).class == Class::NaN && unpack(g, F32).class == Class::NaN,
+                "NaN mismatch at {a:#010x}/{b:#010x} ({rm:?}): \
+                 {label} {k:#010x} vs gold {g:#010x}"
+            ),
+        }
+    }
+    max_ulp
+}
+
+impl Sweeper {
+    fn new() -> Self {
+        let kern = BackendChoice::Kernel {
+            order: 5,
+            kernel: KernelConfig::default(),
+        }
+        .build()
+        .expect("kernel backend");
+        let gs = BackendChoice::Goldschmidt {
+            iterations: 3,
+            kernel: KernelConfig::default(),
+            trunc_bits: 0,
+        }
+        .build()
+        .expect("goldschmidt backend");
+        let gold = BackendChoice::Gold.build().expect("gold backend");
+        Sweeper {
+            kern,
+            gs,
+            gold,
+            dividends: f32_dividends(),
+            report: SliceReport::default(),
+        }
+    }
+
+    /// Run every dividend against `divisors` under `rm` through all
+    /// three backends and fold the contract checks into the report.
+    fn check_block(&mut self, rm: Rounding, divisors: &[u64]) {
+        for &a in &self.dividends {
+            let av = vec![a; divisors.len()];
+            let qg = self.gold.divide(&av, divisors, F32, rm).expect("gold divide");
+            let qk = self.kern.divide(&av, divisors, F32, rm).expect("kernel divide");
+            let qs = self.gs.divide(&av, divisors, F32, rm).expect("goldschmidt divide");
+            let uk = check_lanes("kernel", &qk, &qg, a, divisors, rm);
+            let us = check_lanes("goldschmidt", &qs, &qg, a, divisors, rm);
+            self.report.max_ulp_kernel = self.report.max_ulp_kernel.max(uk);
+            self.report.max_ulp_goldschmidt = self.report.max_ulp_goldschmidt.max(us);
+        }
+        self.report.lanes_per_backend += (divisors.len() * self.dividends.len()) as u64;
+    }
+}
+
+/// Assemble divisor bit patterns for a block of mantissas at one
+/// exponent binade; sign alternates with mantissa parity.
+fn divisor_block(mantissas: &[u64], exp: u64) -> Vec<u64> {
+    mantissas.iter().map(|&m| F32.assemble(m & 1 == 1, exp, m)).collect()
+}
+
+/// The complete cross — every [`DIVISOR_EXPONENTS`] binade × every
+/// rounding mode × the full dividend menu — over the mantissas of one
+/// deterministic slice. Panics on any conformance violation; returns
+/// the coverage/deviation report otherwise.
+pub fn sweep_f32_slice(slice: u64, count: u64) -> SliceReport {
+    let mut sweeper = Sweeper::new();
+    let mantissas: Vec<u64> = slice_mantissas(slice, count).collect();
+    for &exp in &DIVISOR_EXPONENTS {
+        for chunk in mantissas.chunks(BLOCK) {
+            let divisors = divisor_block(chunk, exp);
+            sweeper.report.divisors += divisors.len() as u64;
+            for rm in Rounding::ALL {
+                sweeper.check_block(rm, &divisors);
+            }
+        }
+    }
+    sweeper.report
+}
+
+/// Every one of the 2^23 mantissas exactly once, with the (exponent,
+/// rounding) pair rotating with period 28 = 7 binades × 4 modes:
+/// sub-slice `p` of 28 sweeps its mantissas at `DIVISOR_EXPONENTS[p %
+/// 7]` under `Rounding::ALL[p / 7]`. Each combination therefore lands
+/// on a different residue class of the mantissa space, and the union
+/// covers it with no repetition (~143 M lanes per backend).
+pub fn sweep_f32_full() -> SliceReport {
+    let mut sweeper = Sweeper::new();
+    for p in 0..28u64 {
+        let exp = DIVISOR_EXPONENTS[(p % 7) as usize];
+        let rm = Rounding::ALL[(p / 7) as usize];
+        let mut mantissas = slice_mantissas(p, 28);
+        loop {
+            let chunk: Vec<u64> = mantissas.by_ref().take(BLOCK).collect();
+            if chunk.is_empty() {
+                break;
+            }
+            let divisors = divisor_block(&chunk, exp);
+            sweeper.report.divisors += divisors.len() as u64;
+            sweeper.check_block(rm, &divisors);
+        }
+    }
+    sweeper.report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Expected slice length by the partition formula.
+    fn slice_len(slice: u64, count: u64) -> u64 {
+        (F32_MANTISSAS - slice % count).div_ceil(count)
+    }
+
+    #[test]
+    fn slices_partition_the_mantissa_space() {
+        // Lengths follow the formula and sum to the whole space.
+        let count = 1024u64;
+        let mut total = 0u64;
+        for s in 0..count {
+            total += slice_len(s, count);
+        }
+        assert_eq!(total, F32_MANTISSAS);
+        // Spot-check the iterator against the formula at a coarse count.
+        let count = 1 << 20;
+        for s in [0u64, 1, 12_345, count - 1, count + 3] {
+            let got: Vec<u64> = slice_mantissas(s, count).collect();
+            assert_eq!(got.len() as u64, slice_len(s, count), "slice {s}");
+            assert!(got.iter().all(|&m| m % count == s % count));
+            assert!(got.windows(2).all(|w| w[1] == w[0] + count));
+            assert!(got.iter().all(|&m| m < F32_MANTISSAS));
+        }
+        // Out-of-range indices wrap: slice `count + 3` IS slice 3.
+        let a: Vec<u64> = slice_mantissas(3, count).collect();
+        let b: Vec<u64> = slice_mantissas(count + 3, count).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn distinct_slices_are_disjoint() {
+        let count = 1 << 20;
+        let a: Vec<u64> = slice_mantissas(0, count).collect();
+        let b: Vec<u64> = slice_mantissas(1, count).collect();
+        assert!(a.iter().all(|m| !b.contains(m)));
+    }
+
+    #[test]
+    fn dividend_menu_covers_every_class_and_both_signs() {
+        let menu = f32_dividends();
+        let mut classes = [false; 5];
+        let mut signs = [false; 2];
+        for &d in &menu {
+            let u = unpack(d, F32);
+            let i = match u.class {
+                Class::NaN => 0,
+                Class::Inf => 1,
+                Class::Zero => 2,
+                Class::Subnormal => 3,
+                Class::Normal => 4,
+            };
+            classes[i] = true;
+            if u.class == Class::Normal {
+                signs[usize::from(u.sign)] = true;
+            }
+        }
+        assert!(classes.iter().all(|&c| c), "menu misses an IEEE class");
+        assert!(signs.iter().all(|&s| s), "menu misses a normal sign");
+        assert_eq!(menu.len(), 17);
+    }
+
+    #[test]
+    fn tiny_slice_sweep_is_deterministic_and_counts_lanes() {
+        // 4 mantissas per slice at count = 2^21: cheap enough for the
+        // debug-mode suite, yet it drives the full cross machinery.
+        let count = 1 << 21;
+        let r1 = sweep_f32_slice(5, count);
+        let r2 = sweep_f32_slice(5, count);
+        assert_eq!(r1, r2, "same (slice, count) must reproduce bit-identically");
+        assert_eq!(r1.divisors, 4 * DIVISOR_EXPONENTS.len() as u64);
+        let dividends = f32_dividends().len() as u64;
+        assert_eq!(r1.lanes_per_backend, r1.divisors * 4 * dividends);
+        assert!(r1.max_ulp_kernel <= 2 && r1.max_ulp_goldschmidt <= 2);
+    }
+}

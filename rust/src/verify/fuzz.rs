@@ -1,0 +1,478 @@
+//! Differential fuzzing across the three datapaths.
+//!
+//! The property suite samples fixed configurations; the fuzzer samples
+//! the *configuration space itself*: every case draws a random
+//! `(op, format, rounding, tile, lane engine, trunc_bits)` tuple plus
+//! an adversarial operand pattern, runs the same lanes through the
+//! Taylor kernel, the Goldschmidt kernel and the exactly-rounded gold
+//! reference, and checks the documented conformance contract lane by
+//! lane (specials bit-identical, finite lanes inside the per-datapath
+//! ulp band, NaN lanes NaN on both sides).
+//!
+//! Reproducibility is the core invariant: the case stream is a pure
+//! function of the master seed (case `k` is generated from the `k`-th
+//! output of a `SplitMix64` stream over it), so any failure is
+//! replayable from the two numbers the report line prints. On a
+//! mismatch the driver first shrinks to the single faulting lane
+//! (re-verifying that the shrunk case still fails) and then emits one
+//! self-contained reproducer line with the full configuration, operand
+//! bits and a copy-paste `tsdiv fuzz` replay command.
+//!
+//! Driven by `tsdiv fuzz --cases N --seed S` and, with a small budget,
+//! by the unit suite below.
+
+use crate::coordinator::{Backend, BackendChoice};
+use crate::divider::{prepare, Prepared};
+use crate::fp::{ulp_diff, unpack, Class, Format, Op, Rounding, ALL_FORMATS, F64};
+use crate::harness::special_patterns;
+use crate::kernel::KernelConfig;
+use crate::simd::SimdChoice;
+use crate::util::rng::{Rng, SplitMix64};
+
+/// Adversarial operand patterns the generator draws from.
+pub const PATTERNS: [&str; 5] = [
+    "uniform",
+    "limb-boundary",
+    "subnormal-cluster",
+    "repeated-divisor",
+    "specials-heavy",
+];
+
+/// Lane-tile widths the generator draws from (deliberately including
+/// widths that leave ragged tail tiles at common batch sizes).
+const TILES: [usize; 8] = [1, 2, 3, 4, 8, 13, 16, 32];
+
+/// Fuzzing budget and master seed.
+#[derive(Clone, Copy, Debug)]
+pub struct FuzzConfig {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+/// One generated differential case: a full datapath configuration plus
+/// operand vectors in the op's shape.
+#[derive(Clone, Debug)]
+pub struct FuzzCase {
+    pub index: u64,
+    pub op: Op,
+    pub fmt: Format,
+    pub rm: Rounding,
+    pub tile: usize,
+    pub simd: SimdChoice,
+    pub trunc_bits: u32,
+    pub pattern: &'static str,
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    /// Per-row lane counts (`ScaleByRecip` only — always ragged here,
+    /// so the fuzzer continuously exercises the ragged-row datapath).
+    pub rows: Vec<u32>,
+}
+
+/// First lane where a datapath broke the conformance contract.
+#[derive(Clone, Debug)]
+pub struct CaseFailure {
+    pub backend: &'static str,
+    pub lane: usize,
+    pub got: u64,
+    pub gold: u64,
+    pub detail: String,
+}
+
+/// What a fuzzing run covered: `failures` holds one fully formatted
+/// reproducer line per diverging case (empty = conformant), `digest`
+/// folds every generated operand bit so replay determinism is a single
+/// integer comparison.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FuzzOutcome {
+    pub cases: u64,
+    /// Input lanes checked through *each* datapath.
+    pub lanes: u64,
+    pub digest: u64,
+    pub failures: Vec<String>,
+}
+
+/// One operand bit pattern under `pattern`'s distribution.
+fn gen_operand(rng: &mut Rng, fmt: Format, pattern: &str) -> u64 {
+    match pattern {
+        "limb-boundary" => {
+            // Significands at limb edges: empty, one ulp in from each
+            // end, all ones, and the half-width bit — near 1.0 where
+            // seed-segment boundaries live.
+            let fracs = [
+                0u64,
+                1,
+                fmt.frac_mask(),
+                fmt.frac_mask() - 1,
+                1u64 << (fmt.frac_bits / 2),
+            ];
+            let frac = *rng.choose(&fracs);
+            let e = (fmt.bias() + rng.range_i64(-2, 2) as i32) as u64;
+            fmt.assemble(rng.bool(0.5), e, frac)
+        }
+        "subnormal-cluster" => fmt.assemble(rng.bool(0.5), 0, 1 + rng.below(15)),
+        "specials-heavy" if rng.bool(0.5) => *rng.choose(&special_patterns(fmt)),
+        _ => rng.next_u64() & fmt.width_mask(),
+    }
+}
+
+fn gen_vec(rng: &mut Rng, fmt: Format, pattern: &str, n: usize) -> Vec<u64> {
+    (0..n).map(|_| gen_operand(rng, fmt, pattern)).collect()
+}
+
+/// Generate case `index` from its stream seed. Pure: the same
+/// `(case_seed, index)` always yields the same case.
+pub fn gen_case_from(case_seed: u64, index: u64) -> FuzzCase {
+    let mut rng = Rng::new(case_seed);
+    let op = *rng.choose(&Op::ALL);
+    let fmt = *rng.choose(&ALL_FORMATS);
+    let rm = *rng.choose(&Rounding::ALL);
+    let tile = *rng.choose(&TILES);
+    // Forced SIMD errors on hosts without a vector engine, so the
+    // generator stays on the two choices that build everywhere.
+    let simd = if rng.bool(0.5) { SimdChoice::Auto } else { SimdChoice::Scalar };
+    let trunc_bits = if rng.bool(0.5) {
+        0
+    } else {
+        let max = if fmt.frac_bits > 23 { 4 } else { 8 };
+        rng.range_u64(1, max) as u32
+    };
+    let pattern = *rng.choose(&PATTERNS);
+    let n = 1 + rng.below(96) as usize;
+    let a = gen_vec(&mut rng, fmt, pattern, n);
+    let (b, rows) = match op {
+        Op::Div => {
+            let b = if pattern == "repeated-divisor" {
+                vec![gen_operand(&mut rng, fmt, "uniform"); n]
+            } else {
+                gen_vec(&mut rng, fmt, pattern, n)
+            };
+            (b, Vec::new())
+        }
+        Op::Recip | Op::Rsqrt => (Vec::new(), Vec::new()),
+        Op::ScaleByRecip => {
+            // Always ragged: random positive row lengths summing to n.
+            let nrows = 1 + rng.below(n as u64) as usize;
+            let mut rows = vec![1u32; nrows];
+            for _ in 0..n - nrows {
+                rows[rng.below(nrows as u64) as usize] += 1;
+            }
+            let b = if pattern == "repeated-divisor" {
+                vec![gen_operand(&mut rng, fmt, "uniform"); nrows]
+            } else {
+                gen_vec(&mut rng, fmt, pattern, nrows)
+            };
+            (b, rows)
+        }
+    };
+    FuzzCase {
+        index,
+        op,
+        fmt,
+        rm,
+        tile,
+        simd,
+        trunc_bits,
+        pattern,
+        a,
+        b,
+        rows,
+    }
+}
+
+/// Row index of each lane (`ScaleByRecip`); empty for the other ops.
+fn lane_rows(case: &FuzzCase) -> Vec<usize> {
+    let mut map = Vec::with_capacity(case.a.len());
+    for (r, &len) in case.rows.iter().enumerate() {
+        for _ in 0..len {
+            map.push(r);
+        }
+    }
+    map
+}
+
+/// Is this lane resolved by the shared special-case path (and therefore
+/// required to be bit-identical to gold)? Mirrors the per-op detection
+/// the property suite uses.
+fn lane_is_special(case: &FuzzCase, lane: usize, row_of: &[usize]) -> bool {
+    let fmt = case.fmt;
+    let special =
+        |bits: u64| matches!(unpack(bits, fmt).class, Class::NaN | Class::Inf | Class::Zero);
+    match case.op {
+        Op::Div => matches!(prepare(case.a[lane], case.b[lane], fmt), Prepared::Done(_)),
+        Op::Recip => special(case.a[lane]),
+        Op::Rsqrt => unpack(case.a[lane], fmt).sign || special(case.a[lane]),
+        Op::ScaleByRecip => special(case.a[lane]) || special(case.b[row_of[lane]]),
+    }
+}
+
+/// First contract violation of `got` vs `gold` under the `band`-ulp
+/// finite-lane allowance.
+fn divergence(
+    case: &FuzzCase,
+    backend: &'static str,
+    band: u64,
+    got: &[u64],
+    gold: &[u64],
+) -> Option<CaseFailure> {
+    let fmt = case.fmt;
+    let row_of = lane_rows(case);
+    for (lane, (&k, &g)) in got.iter().zip(gold.iter()).enumerate() {
+        let special = lane_is_special(case, lane, &row_of);
+        let detail = match ulp_diff(k, g, fmt) {
+            Some(0) => continue,
+            Some(u) if special => {
+                format!("special lane differs by {u} ulp (must be bit-identical)")
+            }
+            Some(u) if u > band => format!("{u} ulp exceeds the ≤{band}-ulp band"),
+            Some(_) => continue,
+            None => {
+                if unpack(k, fmt).class == Class::NaN && unpack(g, fmt).class == Class::NaN {
+                    continue;
+                }
+                "NaN class mismatch".to_string()
+            }
+        };
+        return Some(CaseFailure {
+            backend,
+            lane,
+            got: k,
+            gold: g,
+            detail,
+        });
+    }
+    None
+}
+
+/// Run the case through all three datapaths and return the first
+/// contract violation, if any.
+pub fn check_case(case: &FuzzCase) -> Option<CaseFailure> {
+    let cfg = KernelConfig {
+        tile: case.tile,
+        ilm_iterations: None,
+        simd: case.simd,
+    };
+    let mut kern = BackendChoice::Kernel {
+        order: 5,
+        kernel: cfg,
+    }
+    .build()
+    .expect("kernel backend");
+    let mut gs = BackendChoice::Goldschmidt {
+        iterations: 3,
+        kernel: cfg,
+        trunc_bits: case.trunc_bits,
+    }
+    .build()
+    .expect("goldschmidt backend");
+    let mut gold = BackendChoice::Gold.build().expect("gold backend");
+    let qg = gold
+        .compute(case.op, &case.a, &case.b, &case.rows, case.fmt, case.rm)
+        .expect("gold compute");
+    let qk = kern
+        .compute(case.op, &case.a, &case.b, &case.rows, case.fmt, case.rm)
+        .expect("kernel compute");
+    let qs = gs
+        .compute(case.op, &case.a, &case.b, &case.rows, case.fmt, case.rm)
+        .expect("goldschmidt compute");
+    // Documented bands: ≤1 ulp vs gold for ≤24-bit formats, ≤2 for f64;
+    // truncated Goldschmidt multiplies add at most one more ulp.
+    let band = if case.fmt == F64 { 2 } else { 1 };
+    divergence(case, "kernel", band, &qk, &qg).or_else(|| {
+        let gs_band = band + u64::from(case.trunc_bits > 0);
+        divergence(case, "goldschmidt", gs_band, &qs, &qg)
+    })
+}
+
+/// Reduce a faulting case to its single faulting lane (keeping the
+/// lane's own row divisor for `ScaleByRecip`).
+pub fn shrink_case(case: &FuzzCase, lane: usize) -> FuzzCase {
+    let mut small = case.clone();
+    small.a = vec![case.a[lane]];
+    match case.op {
+        Op::Div => small.b = vec![case.b[lane]],
+        Op::Recip | Op::Rsqrt => small.b = Vec::new(),
+        Op::ScaleByRecip => {
+            small.b = vec![case.b[lane_rows(case)[lane]]];
+            small.rows = vec![1];
+        }
+    }
+    small
+}
+
+fn simd_name(simd: SimdChoice) -> &'static str {
+    match simd {
+        SimdChoice::Auto => "auto",
+        SimdChoice::Forced => "forced",
+        SimdChoice::Scalar => "scalar",
+    }
+}
+
+fn hex_list(xs: &[u64]) -> String {
+    xs.iter().map(|x| format!("{x:#x}")).collect::<Vec<_>>().join(",")
+}
+
+/// One self-contained reproducer line for a diverging case.
+pub fn format_failure(master_seed: u64, case: &FuzzCase, f: &CaseFailure, shrunk: bool) -> String {
+    let scope = if shrunk { "shrunk to 1 lane" } else { "unshrunk" };
+    format!(
+        "fuzz mismatch: case={} op={} fmt={} rm={} tile={} simd={} trunc={} pattern={} \
+         backend={} lane={} got={:#x} gold={:#x} ({}) a=[{}] b=[{}] rows={:?} ({scope}) \
+         [replay: tsdiv fuzz --seed {master_seed:#x} --cases {}]",
+        case.index,
+        case.op.name(),
+        case.fmt.name(),
+        case.rm.name(),
+        case.tile,
+        simd_name(case.simd),
+        case.trunc_bits,
+        case.pattern,
+        f.backend,
+        f.lane,
+        f.got,
+        f.gold,
+        f.detail,
+        hex_list(&case.a),
+        hex_list(&case.b),
+        case.rows,
+        case.index + 1,
+    )
+}
+
+fn mix(acc: u64, x: u64) -> u64 {
+    SplitMix64::new(acc ^ x).next_u64()
+}
+
+/// Fold a case's seed and every operand bit into the running digest.
+fn fold_digest(mut acc: u64, case_seed: u64, case: &FuzzCase) -> u64 {
+    acc = mix(acc, case_seed);
+    for &x in case.a.iter().chain(case.b.iter()) {
+        acc = mix(acc, x);
+    }
+    for &r in &case.rows {
+        acc = mix(acc, r as u64);
+    }
+    acc
+}
+
+/// Run the full differential budget. Pure in `cfg`: the same config
+/// reproduces the same case stream, digest and failure lines.
+pub fn run_fuzz(cfg: &FuzzConfig) -> FuzzOutcome {
+    let mut stream = SplitMix64::new(cfg.seed);
+    let mut out = FuzzOutcome {
+        cases: cfg.cases,
+        lanes: 0,
+        digest: 0,
+        failures: Vec::new(),
+    };
+    for index in 0..cfg.cases {
+        let case_seed = stream.next_u64();
+        let case = gen_case_from(case_seed, index);
+        out.digest = fold_digest(out.digest, case_seed, &case);
+        out.lanes += case.a.len() as u64;
+        if let Some(first) = check_case(&case) {
+            let small = shrink_case(&case, first.lane);
+            let line = match check_case(&small) {
+                Some(sf) => format_failure(cfg.seed, &small, &sf, true),
+                None => format_failure(cfg.seed, &case, &first, false),
+            };
+            out.failures.push(line);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_identically() {
+        let cfg = FuzzConfig { cases: 16, seed: 0xDEAD_BEEF };
+        let a = run_fuzz(&cfg);
+        let b = run_fuzz(&cfg);
+        assert_eq!(a, b, "a seed must replay to the identical run");
+        let c = run_fuzz(&FuzzConfig { cases: 16, seed: 0xDEAD_BEF0 });
+        assert_ne!(a.digest, c.digest, "different seeds must diverge");
+    }
+
+    #[test]
+    fn generated_cases_have_valid_shapes() {
+        let mut stream = SplitMix64::new(99);
+        let mut ops_seen = [false; 4];
+        for index in 0..64 {
+            let case = gen_case_from(stream.next_u64(), index);
+            ops_seen[case.op.idx()] = true;
+            assert!((1..=96).contains(&case.a.len()));
+            assert!(TILES.contains(&case.tile));
+            assert!(PATTERNS.contains(&case.pattern));
+            let max_trunc = if case.fmt.frac_bits > 23 { 4 } else { 8 };
+            assert!(case.trunc_bits <= max_trunc);
+            let mask = case.fmt.width_mask();
+            assert!(case.a.iter().chain(case.b.iter()).all(|&x| x & !mask == 0));
+            match case.op {
+                Op::Div => {
+                    assert_eq!(case.a.len(), case.b.len());
+                    assert!(case.rows.is_empty());
+                }
+                Op::Recip | Op::Rsqrt => {
+                    assert!(case.b.is_empty() && case.rows.is_empty());
+                }
+                Op::ScaleByRecip => {
+                    assert_eq!(case.rows.len(), case.b.len());
+                    assert!(case.rows.iter().all(|&r| r > 0));
+                    let total: usize = case.rows.iter().map(|&r| r as usize).sum();
+                    assert_eq!(total, case.a.len());
+                }
+            }
+        }
+        assert!(ops_seen.iter().all(|&s| s), "64 cases should draw every op");
+    }
+
+    #[test]
+    fn small_budget_finds_no_divergence() {
+        // The in-suite smoke: a small budget through the real checker
+        // must come back clean on conformant datapaths.
+        let out = run_fuzz(&FuzzConfig { cases: 24, seed: 7 });
+        assert!(out.failures.is_empty(), "{:#?}", out.failures);
+        assert_eq!(out.cases, 24);
+        assert!(out.lanes >= 24);
+    }
+
+    #[test]
+    fn shrink_keeps_the_ragged_lane_row_pairing() {
+        let mut case = gen_case_from(1, 0);
+        case.op = Op::ScaleByRecip;
+        case.a = (0..9u64).map(|i| 0x100 + i).collect();
+        case.b = vec![0xA, 0xB, 0xC];
+        case.rows = vec![2, 3, 4];
+        // Lane 5 lives in row 2 (lanes 0-1 → row 0, 2-4 → row 1).
+        let small = shrink_case(&case, 5);
+        assert_eq!(small.a, vec![0x105]);
+        assert_eq!(small.b, vec![0xC]);
+        assert_eq!(small.rows, vec![1]);
+        // Div shrinks keep the paired divisor.
+        case.op = Op::Div;
+        case.b = (0..9u64).map(|i| 0x200 + i).collect();
+        case.rows = Vec::new();
+        let small = shrink_case(&case, 4);
+        assert_eq!((small.a.clone(), small.b.clone()), (vec![0x104], vec![0x204]));
+        assert!(small.rows.is_empty());
+    }
+
+    #[test]
+    fn failure_lines_carry_the_replay_command() {
+        let case = gen_case_from(42, 6);
+        let f = CaseFailure {
+            backend: "kernel",
+            lane: 0,
+            got: 1,
+            gold: 2,
+            detail: "synthetic".into(),
+        };
+        let line = format_failure(0x2A, &case, &f, true);
+        assert!(line.contains("replay: tsdiv fuzz --seed 0x2a --cases 7"));
+        assert!(line.contains("backend=kernel"));
+        assert!(line.contains("(synthetic)"));
+        assert!(!line.contains('\n'), "reproducer must be a single line");
+    }
+}

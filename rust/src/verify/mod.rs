@@ -1,0 +1,26 @@
+//! Production-scale verification: the machinery that checks the
+//! datapaths *at scale* rather than at sampled points.
+//!
+//! Three legs, one contract (specials bit-identical to gold, finite
+//! lanes inside the documented ulp band, NaN lanes NaN on both sides):
+//!
+//! * [`conformance`] — sharded exhaustive-divisor binary32 sweeps: the
+//!   2^23-mantissa divisor space partitioned into deterministic slices
+//!   keyed by `(slice_index, slice_count)`, so CI can rotate through
+//!   the space one slice per run and any failure names a replayable
+//!   slice. Driven by `tests/conformance_f32.rs`.
+//! * [`fuzz`] — differential fuzzing over the *configuration* space:
+//!   random `(op, format, rounding, tile, simd, trunc_bits)` tuples
+//!   plus adversarial operand patterns through all three datapaths,
+//!   with seed-replayable single-line reproducers. Driven by
+//!   `tsdiv fuzz`.
+//! * [`mutation`] — an in-tree mutation smoke harness: hand-picked
+//!   defects compiled into the rounding/seeding layers behind cfg'd
+//!   injection points, with a check battery that must kill every one.
+//!
+//! The sweeps and the fuzzer verify the datapaths; the mutation smoke
+//! verifies the verifiers.
+
+pub mod conformance;
+pub mod fuzz;
+pub mod mutation;

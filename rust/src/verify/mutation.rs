@@ -1,0 +1,260 @@
+//! In-tree mutation smoke harness over the rounding and seeding layers.
+//!
+//! A small table of hand-picked mutants — an operator flip, off-by-one
+//! boundaries, a dropped sticky chain, a skipped renormalize — is
+//! compiled into the datapath behind `cfg(any(test, feature =
+//! "mutation"))` injection points (in [`crate::fp::round`] and
+//! [`crate::pla`]). Activating a mutant flips exactly one decision on
+//! the current thread; the harness then replays a battery of contract
+//! checks distilled from the unit suites of those modules and asserts
+//! every mutant is **killed** (at least one check fails). This guards
+//! the guards: a rounding suite that silently stopped observing the
+//! sticky chain or the carry-out renormalize would let a mutant
+//! survive, and the smoke test turns that survival into a failure with
+//! the mutant's name in it.
+//!
+//! The active-mutant cell is thread-local, so the parallel test runner
+//! cannot leak a mutant into an unrelated test, and the injection
+//! points compile to nothing in normal release builds (the `mutation`
+//! cargo feature carries them into a release binary for out-of-tree
+//! tooling).
+
+use std::cell::Cell;
+
+use crate::fp::{round_pack, Rounding, F16, F32};
+
+/// One hand-picked defect, injectable at a named datapath decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mutant {
+    /// `fp::round`: discard the sticky bit after normalization — the
+    /// classic "guard bit only" rounding defect.
+    DropSticky,
+    /// `fp::round`: the nearest-even tie decision loses its LSB-parity
+    /// term (`guard && (sticky || lsb_odd)` → `guard && sticky`), so
+    /// true ties never round up.
+    TieDropsParity,
+    /// `fp::round`: overflow comparison off by one (`exp > emax` →
+    /// `exp >= emax`), turning the entire top finite binade into Inf.
+    OverflowBoundaryOffByOne,
+    /// `fp::round`: skip the renormalize after a rounding carry-out,
+    /// leaving an all-ones significand rounded into the wrong binade.
+    SkipCarryRenorm,
+    /// `pla::segment_index`: the left-closed boundary compare flipped
+    /// to right-closed (`x < edge` → `x <= edge`), seeding boundary
+    /// operands from the segment below the one that owns them.
+    SegmentBoundaryOffByOne,
+}
+
+impl Mutant {
+    /// Every mutant in the table, in stable order.
+    pub const ALL: [Mutant; 5] = [
+        Mutant::DropSticky,
+        Mutant::TieDropsParity,
+        Mutant::OverflowBoundaryOffByOne,
+        Mutant::SkipCarryRenorm,
+        Mutant::SegmentBoundaryOffByOne,
+    ];
+
+    /// Short stable name (smoke-report lines).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Mutant::DropSticky => "drop-sticky",
+            Mutant::TieDropsParity => "tie-drops-parity",
+            Mutant::OverflowBoundaryOffByOne => "overflow-boundary-off-by-one",
+            Mutant::SkipCarryRenorm => "skip-carry-renorm",
+            Mutant::SegmentBoundaryOffByOne => "segment-boundary-off-by-one",
+        }
+    }
+}
+
+thread_local! {
+    static ACTIVE: Cell<Option<Mutant>> = const { Cell::new(None) };
+}
+
+/// Is `m` the active mutant on this thread? Queried by the injection
+/// points; `false` everywhere outside a [`with_mutant`] scope.
+pub fn is_active(m: Mutant) -> bool {
+    ACTIVE.with(|a| a.get() == Some(m))
+}
+
+/// The active mutant on this thread, if any (diagnostics).
+pub fn active() -> Option<Mutant> {
+    ACTIVE.with(|a| a.get())
+}
+
+/// Run `f` with mutant `m` active on this thread, restoring the
+/// previous state afterwards (panic-safe via an RAII guard, so an
+/// asserting check cannot leak a live mutant into later tests).
+pub fn with_mutant<T>(m: Mutant, f: impl FnOnce() -> T) -> T {
+    struct Restore(Option<Mutant>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            ACTIVE.with(|a| a.set(self.0));
+        }
+    }
+    let _restore = Restore(ACTIVE.with(|a| a.replace(Some(m))));
+    f()
+}
+
+/// One contract check replayed under each mutant; `run` returns `true`
+/// when the datapath behaves correctly. Each is distilled from a named
+/// behavior the unit suites of `fp::round` / `pla` already pin, so a
+/// kill is attributable to an independently-tested contract.
+#[derive(Clone, Copy)]
+pub struct KillCheck {
+    pub name: &'static str,
+    pub run: fn() -> bool,
+}
+
+fn check_exact_pack() -> bool {
+    // 1.0 presented at q = 60: packs exactly, inexact clear.
+    let (bits, inexact) = round_pack(false, 0, 1 << 60, 60, false, F32, Rounding::NearestEven);
+    bits as u32 == 1.0f32.to_bits() && !inexact
+}
+
+fn check_sticky_tie() -> bool {
+    // 1 + 2^-24 + 2^-40: just above the halfway point, so the sticky
+    // bit must push nearest-even up to 1 + 2^-23.
+    let q = 40u32;
+    let sig = (1u128 << q) + (1u128 << (q - 24)) + 1;
+    let (bits, _) = round_pack(false, 0, sig, q, false, F32, Rounding::NearestEven);
+    bits as u32 == (1.0f32 + 2f32.powi(-23)).to_bits()
+}
+
+fn check_tie_parity() -> bool {
+    // 1 + 3·2^-24: a true tie (guard set, sticky clear) with an odd
+    // kept LSB — parity must round it up to the even 1 + 2^-22.
+    let q = 40u32;
+    let sig = (1u128 << q) + 3 * (1u128 << (q - 24));
+    let (bits, _) = round_pack(false, 0, sig, q, false, F32, Rounding::NearestEven);
+    bits as u32 == (1.0f32 + 2.0 * 2f32.powi(-23)).to_bits()
+}
+
+fn check_top_binade() -> bool {
+    // 2^15 sits at f16's emax and is finite (max finite is 65504);
+    // only exponents *above* emax overflow to Inf.
+    let (bits, _) = round_pack(false, 15, 1 << 30, 30, false, F16, Rounding::NearestEven);
+    bits == F16.assemble(false, (15 + F16.bias()) as u64, 0)
+}
+
+fn check_carry_renorm() -> bool {
+    // 25 ones at q = 24 ≈ 2·(1 − 2^-25): the rounding carry must
+    // propagate out of the significand and bump the result to 2.0.
+    let sig = (1u128 << 25) - 1;
+    let (bits, _) = round_pack(false, 0, sig, 24, false, F32, Rounding::NearestEven);
+    bits as u32 == 2.0f32.to_bits()
+}
+
+fn check_segment_edges() -> bool {
+    // A boundary operand belongs to the segment it *opens*: 1.25 is in
+    // segment 1 of [1.0, 1.25, 1.5, 2.0], and lookups clamp at the top.
+    let bounds = [1.0, 1.25, 1.5, 2.0];
+    crate::pla::segment_index(&bounds, 1.25) == 1
+        && crate::pla::segment_index(&bounds, 1.0) == 0
+        && crate::pla::segment_index(&bounds, 2.5) == 2
+}
+
+/// The full check battery, in attribution order.
+pub fn kill_checks() -> [KillCheck; 6] {
+    [
+        KillCheck { name: "exact value packs exactly", run: check_exact_pack },
+        KillCheck { name: "sticky breaks a near-tie upward", run: check_sticky_tie },
+        KillCheck { name: "true tie rounds to even by parity", run: check_tie_parity },
+        KillCheck { name: "top finite binade stays finite", run: check_top_binade },
+        KillCheck { name: "rounding carry-out renormalizes", run: check_carry_renorm },
+        KillCheck { name: "segment boundaries are left-closed", run: check_segment_edges },
+    ]
+}
+
+/// Outcome of one mutant's smoke run.
+#[derive(Clone, Copy, Debug)]
+pub struct MutantVerdict {
+    pub mutant: Mutant,
+    /// The first check the mutant failed (`None` = the mutant survived
+    /// the whole battery, which the smoke test treats as a bug).
+    pub killed_by: Option<&'static str>,
+}
+
+impl MutantVerdict {
+    pub fn killed(&self) -> bool {
+        self.killed_by.is_some()
+    }
+}
+
+/// Activate each mutant in turn and replay the battery; a mutant is
+/// killed when at least one check fails under it.
+pub fn run_mutation_smoke() -> Vec<MutantVerdict> {
+    Mutant::ALL
+        .iter()
+        .map(|&mutant| {
+            let killed_by = with_mutant(mutant, || {
+                kill_checks().iter().find(|c| !(c.run)()).map(|c| c.name)
+            });
+            MutantVerdict { mutant, killed_by }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_battery_is_green() {
+        assert_eq!(active(), None, "a previous test leaked an active mutant");
+        for c in kill_checks() {
+            assert!((c.run)(), "baseline check '{}' failed with no mutant active", c.name);
+        }
+    }
+
+    #[test]
+    fn every_mutant_is_killed() {
+        for v in run_mutation_smoke() {
+            assert!(
+                v.killed(),
+                "mutant '{}' survived the battery — a rounding/seeding \
+                 contract has lost its witness",
+                v.mutant.name()
+            );
+            println!("mutant '{}' killed by '{}'", v.mutant.name(), v.killed_by.unwrap());
+        }
+    }
+
+    #[test]
+    fn mutant_state_is_scoped_and_thread_local() {
+        let observed = with_mutant(Mutant::DropSticky, || {
+            let here = is_active(Mutant::DropSticky);
+            // A fresh thread must not see this thread's mutant.
+            let elsewhere = std::thread::spawn(active).join().unwrap();
+            (here, elsewhere)
+        });
+        assert_eq!(observed, (true, None));
+        assert_eq!(active(), None, "scope exit must clear the mutant");
+        // Nested scopes restore the outer mutant, not None.
+        with_mutant(Mutant::TieDropsParity, || {
+            with_mutant(Mutant::DropSticky, || {
+                assert!(is_active(Mutant::DropSticky));
+                assert!(!is_active(Mutant::TieDropsParity));
+            });
+            assert!(is_active(Mutant::TieDropsParity));
+        });
+    }
+
+    #[test]
+    fn scope_clears_on_panic() {
+        let caught = std::panic::catch_unwind(|| {
+            with_mutant(Mutant::SkipCarryRenorm, || panic!("boom"));
+        });
+        assert!(caught.is_err());
+        assert_eq!(active(), None, "panic must not leak the mutant");
+    }
+
+    #[test]
+    fn names_are_unique_and_stable() {
+        let names: Vec<&str> = Mutant::ALL.iter().map(|m| m.name()).collect();
+        let mut deduped = names.clone();
+        deduped.sort_unstable();
+        deduped.dedup();
+        assert_eq!(deduped.len(), Mutant::ALL.len(), "duplicate mutant names in {names:?}");
+    }
+}

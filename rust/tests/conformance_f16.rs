@@ -19,10 +19,15 @@
 //!
 //! A subsampled smoke sweep (every 251st pattern) runs with the normal
 //! suite so the harness itself cannot bitrot.
+//!
+//! The unary ops get the same treatment: `Recip` and `Rsqrt` sweep all
+//! 2^16 *operand* patterns per rounding mode through the kernel and
+//! Goldschmidt datapaths vs gold, with the per-op special rules
+//! (`Recip`: NaN/Inf/zero operands; `Rsqrt`: those plus any negative).
 
 use tsdiv::coordinator::{Backend, BackendChoice};
 use tsdiv::divider::{prepare, Prepared};
-use tsdiv::fp::{ulp_diff, unpack, Class, Rounding, F16};
+use tsdiv::fp::{ulp_diff, unpack, Class, Op, Rounding, F16};
 use tsdiv::harness::special_patterns;
 use tsdiv::kernel::KernelConfig;
 
@@ -109,4 +114,87 @@ fn conformance_f16_every_divisor_pattern_vs_gold() {
 fn conformance_f16_subsampled_smoke() {
     let max_ulp = sweep(251);
     assert!(max_ulp <= 2);
+}
+
+/// One unary-op pass over the f16 operand space at `stride`, through
+/// the kernel *and* Goldschmidt datapaths vs gold, per rounding mode.
+/// Returns the largest finite deviation seen (in ulp).
+fn sweep_unary(op: Op, stride: u64) -> u64 {
+    let mut kern = BackendChoice::Kernel {
+        order: 5,
+        kernel: KernelConfig::default(),
+    }
+    .build()
+    .expect("kernel backend");
+    let mut gs = BackendChoice::Goldschmidt {
+        iterations: 3,
+        kernel: KernelConfig::default(),
+        trunc_bits: 0,
+    }
+    .build()
+    .expect("goldschmidt backend");
+    let mut gold = BackendChoice::Gold.build().expect("gold backend");
+    let xs: Vec<u64> = (0u64..=0xFFFF).step_by(stride as usize).collect();
+    let mut max_ulp = 0u64;
+    for rm in Rounding::ALL {
+        let qg = gold.compute(op, &xs, &[], &[], F16, rm).expect("gold compute");
+        for (label, be) in [("kernel", &mut kern), ("goldschmidt", &mut gs)] {
+            let q = be.compute(op, &xs, &[], &[], F16, rm).expect("unary compute");
+            for (i, (&k, &g)) in q.iter().zip(qg.iter()).enumerate() {
+                let x = xs[i];
+                let u = unpack(x, F16);
+                let special_class = matches!(u.class, Class::NaN | Class::Inf | Class::Zero);
+                let special = match op {
+                    Op::Rsqrt => u.sign || special_class,
+                    _ => special_class,
+                };
+                match ulp_diff(k, g, F16) {
+                    Some(du) if special => assert_eq!(
+                        k, g,
+                        "special {op:?} lane {x:#06x} ({rm:?}) not bit-identical: \
+                         {label} {k:#06x} vs gold {g:#06x} ({du} ulp)"
+                    ),
+                    Some(du) => {
+                        assert!(
+                            du <= 2,
+                            "finite {op:?} lane {x:#06x} ({rm:?}) outside the ≤2-ulp \
+                             band: {label} {k:#06x} vs gold {g:#06x} ({du} ulp)"
+                        );
+                        max_ulp = max_ulp.max(du);
+                    }
+                    None => assert!(
+                        unpack(k, F16).class == Class::NaN && unpack(g, F16).class == Class::NaN,
+                        "NaN mismatch at {op:?} {x:#06x} ({rm:?}): \
+                         {label} {k:#06x} vs gold {g:#06x}"
+                    ),
+                }
+            }
+        }
+    }
+    max_ulp
+}
+
+/// Exhaustive reciprocal: all 2^16 operand patterns × every rounding
+/// mode, both kernel datapaths vs gold. CI runs this with `-- --ignored`.
+#[test]
+#[ignore = "exhaustive 2^16 recip sweep; run: cargo test --release --test conformance_f16 -- --ignored"]
+fn conformance_f16_recip_every_pattern_vs_gold() {
+    let max_ulp = sweep_unary(Op::Recip, 1);
+    println!("f16 recip conformance: all 2^16 operands × 4 modes swept; max {max_ulp} ulp");
+}
+
+/// Exhaustive reciprocal square root, same shape as the recip sweep.
+#[test]
+#[ignore = "exhaustive 2^16 rsqrt sweep; run: cargo test --release --test conformance_f16 -- --ignored"]
+fn conformance_f16_rsqrt_every_pattern_vs_gold() {
+    let max_ulp = sweep_unary(Op::Rsqrt, 1);
+    println!("f16 rsqrt conformance: all 2^16 operands × 4 modes swept; max {max_ulp} ulp");
+}
+
+/// Subsampled unary smoke (both ops, every 251st pattern) inside the
+/// regular suite.
+#[test]
+fn conformance_f16_unary_subsampled_smoke() {
+    assert!(sweep_unary(Op::Recip, 251) <= 2);
+    assert!(sweep_unary(Op::Rsqrt, 251) <= 2);
 }

@@ -1,0 +1,81 @@
+//! Sharded exhaustive-divisor binary32 conformance (the f32 face of
+//! `conformance_f16.rs`, via [`tsdiv::verify::conformance`]).
+//!
+//! f32's divisor space is too large for one exhaustive cross, so the
+//! 2^23-mantissa space is partitioned into deterministic slices keyed
+//! by `(slice_index, slice_count)`: slice `s` owns every mantissa
+//! ≡ `s (mod count)`. CI sweeps one rotating slice per pass (the run
+//! number picks the slice, so successive runs walk the whole space);
+//! the printed `TSDIV_F32_SLICE=… TSDIV_F32_SLICE_COUNT=…` pair replays
+//! any pass locally, bit for bit. The `#[ignore]`d full test covers
+//! every mantissa exactly once with the (exponent binade, rounding
+//! mode) pair rotating with period 28.
+//!
+//! Each lane runs through the Taylor kernel *and* the Goldschmidt
+//! kernel against the exactly-rounded gold reference: specials
+//! bit-identical, finite lanes within ≤ 2 ulp, NaN lanes NaN on both
+//! sides. A subsampled smoke slice keeps the harness honest inside the
+//! regular suite.
+
+use tsdiv::verify::conformance::{
+    sweep_f32_full, sweep_f32_slice, DIVISOR_EXPONENTS, F32_MANTISSAS,
+};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The rotating CI slice: `TSDIV_F32_SLICE` (any integer — reduced mod
+/// the count, so a CI run number works directly) selects the slice out
+/// of `TSDIV_F32_SLICE_COUNT` (default 1024 ⇒ 8192 mantissas, ~3.9 M
+/// lanes per backend per pass).
+#[test]
+#[ignore = "one full-cross f32 slice (~3.9M lanes/backend at the default count); run: \
+            TSDIV_F32_SLICE=0 cargo test --release --test conformance_f32 -- --ignored ci_slice"]
+fn conformance_f32_ci_slice() {
+    let count = env_u64("TSDIV_F32_SLICE_COUNT", 1024).max(1);
+    let raw = env_u64("TSDIV_F32_SLICE", 0);
+    let slice = raw % count;
+    println!(
+        "f32 conformance slice {slice}/{count} (raw index {raw}); replay: \
+         TSDIV_F32_SLICE={slice} TSDIV_F32_SLICE_COUNT={count} \
+         cargo test --release --test conformance_f32 -- --ignored ci_slice --nocapture"
+    );
+    let r = sweep_f32_slice(slice, count);
+    println!(
+        "swept {} divisors / {} lanes per backend; max finite deviation: \
+         kernel {} ulp, goldschmidt {} ulp",
+        r.divisors, r.lanes_per_backend, r.max_ulp_kernel, r.max_ulp_goldschmidt
+    );
+    assert!(r.max_ulp_kernel <= 2 && r.max_ulp_goldschmidt <= 2);
+}
+
+/// Every f32 mantissa exactly once (exponent binade and rounding mode
+/// rotating with period 28): ~143 M lanes per backend, about a minute
+/// in release.
+#[test]
+#[ignore = "full 2^23-mantissa f32 sweep (~143M lanes/backend); run: \
+            cargo test --release --test conformance_f32 -- --ignored"]
+fn conformance_f32_full_rotation_vs_gold() {
+    let r = sweep_f32_full();
+    assert_eq!(r.divisors, F32_MANTISSAS, "each mantissa must be swept exactly once");
+    println!(
+        "f32 full rotation: {} divisors / {} lanes per backend; max finite deviation: \
+         kernel {} ulp, goldschmidt {} ulp",
+        r.divisors, r.lanes_per_backend, r.max_ulp_kernel, r.max_ulp_goldschmidt
+    );
+}
+
+/// Subsampled smoke slice (64 mantissas) inside the regular suite, so
+/// the sharding harness itself cannot bitrot.
+#[test]
+fn conformance_f32_slice_smoke() {
+    let count = 1 << 17;
+    let r = sweep_f32_slice(17, count);
+    assert_eq!(r.divisors, (F32_MANTISSAS / count) * DIVISOR_EXPONENTS.len() as u64);
+    assert!(r.lanes_per_backend > r.divisors);
+    assert!(r.max_ulp_kernel <= 2 && r.max_ulp_goldschmidt <= 2);
+}

@@ -836,6 +836,7 @@ fn prop_cost_weighted_assembly_never_starves_and_bounds_cost() {
                 request_id: id,
                 a: vec![id; lanes],
                 b: vec![1; lanes],
+                rows: vec![],
             };
             if let Some(b) = asm.push(key, item) {
                 check_that!(b.key == key, "a push can only flush its own key's bucket");
